@@ -1,0 +1,16 @@
+//! The §3.3 compressor study (Tables 1–4, Figs. 5–7): fZ-light vs SZx on
+//! all four synthetic application datasets. Thin driver over the bench
+//! harness.
+//!
+//! ```sh
+//! cargo run --release --example compressor_study
+//! ```
+
+fn main() -> zccl::Result<()> {
+    let out = std::path::Path::new("results");
+    for id in ["table1", "table3", "table4", "fig5", "fig7"] {
+        zccl::coordinator::harness::run(id, out)?;
+    }
+    println!("full sweep: `zccl bench all`");
+    Ok(())
+}

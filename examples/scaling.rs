@@ -1,0 +1,62 @@
+//! Node-count scaling (Fig. 13) on the calibrated virtual-time simulator,
+//! plus a real-transport cross-check at small rank counts.
+//!
+//! ```sh
+//! cargo run --release --example scaling
+//! ```
+
+use zccl::collectives::Algo;
+use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::data::fields::FieldKind;
+use zccl::sim::calibrate::sample_ratio;
+use zccl::sim::collectives::{sim_allreduce, SimParams};
+use zccl::sim::CostModel;
+
+fn main() -> zccl::Result<()> {
+    let cm = CostModel::paper_broadwell();
+    let ratio = sample_ratio(
+        CompressorKind::FzLight,
+        FieldKind::Rtm,
+        ErrorBound::Rel(1e-4),
+        1 << 18,
+        17,
+    );
+    println!("Allreduce of 678 MB (full RTM dataset), fZ-light ratio {ratio:.1}\n");
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "nodes", "MPI s", "ZCCL-1T s", "ZCCL-MT s", "speedup 1T", "speedup MT"
+    );
+    for n in [2usize, 4, 8, 16, 32, 64, 128] {
+        let base = SimParams {
+            n,
+            bytes: 678e6,
+            algo: Algo::Plain,
+            kind: CompressorKind::FzLight,
+            multithread: false,
+            ratio,
+        };
+        let mpi = sim_allreduce(&base, &cm);
+        let st = sim_allreduce(&SimParams { algo: Algo::Zccl, ..base }, &cm);
+        let mt = sim_allreduce(
+            &SimParams { algo: Algo::Zccl, multithread: true, ..base },
+            &cm,
+        );
+        println!(
+            "{:>6} {:>10.3} {:>10.3} {:>10.3} {:>12.2} {:>12.2}",
+            n,
+            mpi.makespan_s,
+            st.makespan_s,
+            mt.makespan_s,
+            mpi.makespan_s / st.makespan_s,
+            mpi.makespan_s / mt.makespan_s
+        );
+    }
+    println!(
+        "\ncost model: effective link {:.1} GB/s, fZ-light {:.1}/{:.1} GB/s ST/MT \
+         (paper Tables 1-2); see `zccl bench crosscheck` for sim-vs-real validation",
+        cm.link_bps / 1e9,
+        cm.fzlight.comp_st / 1e9,
+        cm.fzlight.comp_mt / 1e9
+    );
+    Ok(())
+}

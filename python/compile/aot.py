@@ -1,0 +1,151 @@
+"""AOT compilation: lower the L2 model + L1 kernel to HLO **text** and
+emit a manifest the Rust runtime consumes.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs in --out-dir:
+  - <artifact>.hlo.txt         one per artifact
+  - params.bin                 initial transformer parameters (f32 LE)
+  - manifest.json              artifact signatures + parameter table
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import lorenzo
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(arrays) -> list[dict]:
+    out = []
+    for a in arrays:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def lower_artifact(name, fn, example_args, out_dir):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *example_args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": _sig(example_args),
+        "outputs": _sig(outs),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(model.PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grad-eb", type=float, default=1e-4,
+                    help="error bound baked into grad_step_zccl")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = model.PRESETS[args.preset]
+    params = model.init_params(cfg, args.seed)
+    names = model.param_order(cfg)
+    example = model.example_inputs(cfg, params)
+
+    artifacts = []
+
+    # 1. Plain training gradient step (DDP uses this; ZCCL compresses on
+    #    the wire inside the Rust collective).
+    artifacts.append(
+        lower_artifact("grad_step", model.make_grad_step(cfg), example, args.out_dir)
+    )
+
+    # 2. In-graph compressed-gradient variant: the Pallas kernel
+    #    quantize-dequantizes every gradient inside the lowered HLO.
+    artifacts.append(
+        lower_artifact(
+            "grad_step_zccl",
+            model.make_grad_step(cfg, compress_eb=args.grad_eb),
+            example,
+            args.out_dir,
+        )
+    )
+
+    # 3. The standalone L1 kernel (quantize + code-length analysis),
+    #    exercised directly from the Rust runtime tests.
+    n = 16 * lorenzo.TILE
+    artifacts.append(
+        lower_artifact(
+            "lorenzo_quant",
+            lambda x: lorenzo.lorenzo_quant(x, 1e-3),
+            [jnp.zeros((n,), jnp.float32)],
+            args.out_dir,
+        )
+    )
+
+    # 4. Forward-only loss (evaluation in the DDP driver).
+    def eval_loss(*a):
+        flat = a[: len(names)]
+        x, y = a[len(names)], a[len(names) + 1]
+        return (model.loss_fn(cfg, dict(zip(names, flat)), x, y),)
+
+    artifacts.append(lower_artifact("eval_loss", eval_loss, example, args.out_dir))
+
+    # Parameter table + initial values.
+    table = []
+    offset = 0
+    with open(os.path.join(args.out_dir, "params.bin"), "wb") as f:
+        for name in names:
+            a = np.asarray(params[name], dtype=np.float32)
+            b = a.tobytes()  # C-order, little-endian on this platform
+            f.write(b)
+            table.append(
+                {"name": name, "shape": list(a.shape), "offset": offset, "bytes": len(b)}
+            )
+            offset += len(b)
+
+    manifest = {
+        "version": 1,
+        "preset": args.preset,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+        },
+        "grad_eb": args.grad_eb,
+        "artifacts": artifacts,
+        "params": table,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(artifacts)} artifacts + params.bin ({offset} bytes) to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

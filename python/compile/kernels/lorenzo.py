@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernel: fused error-bounded quantization + 1-D Lorenzo
+prediction + per-block code-length analysis — the compute hot-spot of the
+fZ-light compressor (paper §3.3), re-thought for a tiled accelerator.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the original fZ-light
+maps thread-blocks onto CPU cores. Here the *thread-block* becomes the
+Pallas grid tile: each grid step streams one TILE of the input from HBM
+into VMEM (BlockSpec), does the elementwise quantization on the VPU, the
+Lorenzo delta with an in-tile shift, and a 32-wide reduction for the
+per-block code length. No MXU is involved — the kernel is memory-bound,
+so the schedule (double-buffered HBM->VMEM streaming) is the whole game.
+VMEM footprint per grid step: TILE·4 B (x) + TILE·4 B (q) + TILE/32·4 B
+(bits) ≈ 33 KB at TILE=4096 — far below the ~16 MiB budget, leaving room
+for the compiler to double-buffer.
+
+The kernel returns
+  - ``xhat``: the dequantized reconstruction (``2eb * round(x / 2eb)``),
+    i.e. exactly the values a receiver obtains after fZ-light decompression
+    (|x - xhat| <= eb), and
+  - ``bits``: per-32-value-block code lengths, from which the compressed
+    size of the fZ-light frame is estimated WITHOUT running the encoder —
+    the L2 model uses this to predict communication volume.
+
+Pallas MUST run with interpret=True in this environment: real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Values per grid tile (the "thread-block").
+TILE = 4096
+# Values per code-length block (matches the Rust encoder's BLOCK).
+BLOCK = 32
+
+
+def _kernel(x_ref, xhat_ref, bits_ref, *, twoeb: float):
+    x = x_ref[...]
+    # NB: divide, don't multiply by the reciprocal — the contract is
+    # q = round(x / 2eb) and the two differ at .5 rounding boundaries.
+    q = jnp.round(x / twoeb)
+    xhat_ref[...] = (q * twoeb).astype(jnp.float32)
+    # 1-D Lorenzo within the tile; the first lane predicts from 0 (the
+    # tile-leading value acts as the outlier, mirroring the chunked frame).
+    prev = jnp.concatenate([jnp.zeros((1,), q.dtype), q[:-1]])
+    mag = jnp.abs(q - prev)
+    blocks = mag.reshape(TILE // BLOCK, BLOCK)
+    maxmag = blocks.max(axis=1)
+    # bits(m) = ceil(log2(m + 1)); exact for the magnitudes float32 can
+    # hold at the error bounds we use.
+    bits = jnp.ceil(jnp.log2(maxmag + 1.0))
+    bits_ref[...] = bits.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("eb",))
+def lorenzo_quant(x: jax.Array, eb: float) -> tuple[jax.Array, jax.Array]:
+    """Quantize-dequantize ``x`` under absolute error bound ``eb`` and
+    estimate per-block fZ-light code lengths.
+
+    ``x`` must be 1-D with length a multiple of TILE (pad with zeros).
+    Returns ``(xhat, bits)`` with shapes ``(n,)`` and ``(n // BLOCK,)``.
+    """
+    if x.ndim != 1 or x.shape[0] % TILE != 0:
+        raise ValueError(f"x must be 1-D with length % {TILE} == 0, got {x.shape}")
+    n = x.shape[0]
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        functools.partial(_kernel, twoeb=2.0 * float(eb)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE // BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n // BLOCK,), jnp.int32),
+        ],
+        interpret=True,  # CPU-PJRT execution; see module docstring
+    )(x)
+
+
+def estimated_frame_bytes(bits: jax.Array) -> jax.Array:
+    """Estimated fZ-light payload size from per-block code lengths.
+
+    Mirrors the Rust encoder's layout: 1 code-length byte per block;
+    non-constant blocks add 4 sign bytes + BLOCK·L/8 magnitude bytes.
+    """
+    nonconst = (bits > 0).astype(jnp.int32)
+    per_block = 1 + nonconst * (BLOCK // 8 + (BLOCK * bits) // 8)
+    return jnp.sum(per_block)
+
+
+def quantize_tree(tree, eb: float):
+    """Apply the quantize-dequantize operator leaf-wise to a pytree (used
+    by the compressed-gradient train step). Leaves are padded to TILE,
+    processed by the Pallas kernel, and cropped back."""
+    def one(leaf):
+        flat = leaf.reshape(-1)
+        pad = (-flat.shape[0]) % TILE
+        padded = jnp.pad(flat, (0, pad))
+        xhat, _ = lorenzo_quant(padded, eb)
+        return xhat[: flat.shape[0]].reshape(leaf.shape)
+
+    return jax.tree_util.tree_map(one, tree)

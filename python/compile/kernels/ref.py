@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Pallas kernel — the build-time correctness
+signal. Intentionally written independently (no shared helpers with
+lorenzo.py) so a bug must appear twice to slip through."""
+
+import jax.numpy as jnp
+
+TILE = 4096
+BLOCK = 32
+
+
+def lorenzo_quant_ref(x, eb):
+    """Reference quantize-dequantize + per-block code length.
+
+    Same contract as :func:`compile.kernels.lorenzo.lorenzo_quant`.
+    """
+    assert x.ndim == 1 and x.shape[0] % TILE == 0
+    twoeb = 2.0 * float(eb)
+    q = jnp.round(x / twoeb)
+    xhat = (q * twoeb).astype(jnp.float32)
+
+    # Per-tile Lorenzo: the first element of each TILE predicts from zero.
+    tiles = q.reshape(-1, TILE)
+    prev = jnp.concatenate([jnp.zeros((tiles.shape[0], 1), q.dtype), tiles[:, :-1]], axis=1)
+    mag = jnp.abs(tiles - prev).reshape(-1, BLOCK)
+    maxmag = mag.max(axis=1)
+    bits = jnp.ceil(jnp.log2(maxmag + 1.0)).astype(jnp.int32)
+    return xhat, bits
+
+
+def estimated_frame_bytes_ref(bits):
+    nonconst = (bits > 0).astype(jnp.int32)
+    return jnp.sum(1 + nonconst * (BLOCK // 8 + (BLOCK * bits) // 8))

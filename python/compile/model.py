@@ -1,0 +1,185 @@
+"""Layer-2 JAX model: a small GPT-style transformer and its training step.
+
+The end-to-end driver (examples/ddp_train.rs) runs data-parallel training
+where each Rust worker executes the AOT-compiled ``grad_step`` through the
+PJRT runtime and gradients are averaged with the ZCCL Z-Allreduce. The
+``grad_step_zccl`` variant additionally routes every gradient through the
+Layer-1 Pallas quantize-dequantize kernel *inside the lowered graph* — the
+in-graph counterpart of what the Rust collective's compression does on the
+wire, used by the gradient-compression ablation.
+
+Parameters travel as a flat list of arrays in the deterministic order of
+``param_order(cfg)``; aot.py records names/shapes/offsets in the manifest
+so the Rust side is fully generic.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lorenzo import quantize_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Transformer hyper-parameters (defaults sized for a 1-core CPU box;
+    scale up via --preset)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    seq: int = 64
+    batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "tiny": Config(vocab=64, d_model=32, n_heads=2, n_layers=1, seq=16, batch=4),
+    "small": Config(),
+    "medium": Config(vocab=512, d_model=256, n_heads=8, n_layers=4, seq=128, batch=8),
+}
+
+
+def param_order(cfg: Config) -> list[str]:
+    """Deterministic parameter name order for the flat calling convention."""
+    names = ["embed", "pos"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1.g",
+            f"l{i}.ln1.b",
+            f"l{i}.attn.wqkv",
+            f"l{i}.attn.bqkv",
+            f"l{i}.attn.wo",
+            f"l{i}.attn.bo",
+            f"l{i}.ln2.g",
+            f"l{i}.ln2.b",
+            f"l{i}.mlp.w1",
+            f"l{i}.mlp.b1",
+            f"l{i}.mlp.w2",
+            f"l{i}.mlp.b2",
+        ]
+    names += ["lnf.g", "lnf.b", "head"]
+    return names
+
+
+def init_params(cfg: Config, seed: int = 0) -> dict[str, jax.Array]:
+    """Initialise parameters (scaled-normal init)."""
+    key = jax.random.PRNGKey(seed)
+    d, h = cfg.d_model, 4 * cfg.d_model
+    shapes = {
+        "embed": (cfg.vocab, d),
+        "pos": (cfg.seq, d),
+        "lnf.g": (d,),
+        "lnf.b": (d,),
+        "head": (d, cfg.vocab),
+    }
+    for i in range(cfg.n_layers):
+        shapes |= {
+            f"l{i}.ln1.g": (d,),
+            f"l{i}.ln1.b": (d,),
+            f"l{i}.attn.wqkv": (d, 3 * d),
+            f"l{i}.attn.bqkv": (3 * d,),
+            f"l{i}.attn.wo": (d, d),
+            f"l{i}.attn.bo": (d,),
+            f"l{i}.ln2.g": (d,),
+            f"l{i}.ln2.b": (d,),
+            f"l{i}.mlp.w1": (d, h),
+            f"l{i}.mlp.b1": (h,),
+            f"l{i}.mlp.w2": (h, d),
+            f"l{i}.mlp.b2": (d,),
+        }
+    params = {}
+    for name in param_order(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith((".g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".b", ".bo", ".bqkv", ".b1", ".b2")) or name.endswith(".ln1.b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            scale = 0.02 if name in ("embed", "pos") else 1.0 / jnp.sqrt(shape[0])
+            params[name] = (scale * jax.random.normal(sub, shape)).astype(jnp.float32)
+    return params
+
+
+def _layernorm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _attention(cfg: Config, x, wqkv, bqkv, wo, bo):
+    B, T, D = x.shape
+    qkv = x @ wqkv + bqkv  # (B,T,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    def heads(t):
+        return t.reshape(B, T, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(cfg.d_head).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ wo + bo
+
+
+def forward(cfg: Config, params: dict, tokens: jax.Array) -> jax.Array:
+    """Logits for token ids ``(B, T)`` -> ``(B, T, vocab)``."""
+    x = params["embed"][tokens] + params["pos"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        p = lambda s: params[f"l{i}.{s}"]
+        x = x + _attention(
+            cfg, _layernorm(x, p("ln1.g"), p("ln1.b")),
+            p("attn.wqkv"), p("attn.bqkv"), p("attn.wo"), p("attn.bo"),
+        )
+        h = _layernorm(x, p("ln2.g"), p("ln2.b"))
+        h = jax.nn.gelu(h @ p("mlp.w1") + p("mlp.b1"))
+        x = x + h @ p("mlp.w2") + p("mlp.b2")
+    x = _layernorm(x, params["lnf.g"], params["lnf.b"])
+    return x @ params["head"]
+
+
+def loss_fn(cfg: Config, params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -picked.mean()
+
+
+def make_grad_step(cfg: Config, compress_eb: float | None = None):
+    """Build the flat-signature ``(params..., x, y) -> (loss, grads...)``
+    function. With ``compress_eb`` set, every gradient is passed through
+    the Pallas quantize-dequantize kernel inside the graph."""
+    names = param_order(cfg)
+
+    def fn(*args):
+        flat_params = args[: len(names)]
+        x, y = args[len(names)], args[len(names) + 1]
+        params = dict(zip(names, flat_params))
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y))(params)
+        if compress_eb is not None:
+            grads = quantize_tree(grads, compress_eb)
+        return (loss, *[grads[n] for n in names])
+
+    return fn
+
+
+def example_inputs(cfg: Config, params: dict) -> list[jax.Array]:
+    """Example (shape-defining) arguments for lowering grad_step."""
+    names = param_order(cfg)
+    x = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    y = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    return [params[n] for n in names] + [x, y]
+
+
+@functools.lru_cache(maxsize=None)
+def cached_config(preset: str) -> Config:
+    return PRESETS[preset]

@@ -1,0 +1,126 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: hypothesis
+sweeps shapes, seeds and error bounds; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lorenzo import (
+    BLOCK,
+    TILE,
+    estimated_frame_bytes,
+    lorenzo_quant,
+    quantize_tree,
+)
+from compile.kernels.ref import estimated_frame_bytes_ref, lorenzo_quant_ref
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def field(n, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0.0, 1.0, n, dtype=np.float64)
+    x = np.zeros(n)
+    for k in range(6):
+        f = rng.uniform(0.5, 200.0)
+        x += rng.uniform(0.1, 1.0) * np.sin(2 * np.pi * f * t + rng.uniform(0, 6.28))
+    return jnp.asarray(scale * x, jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+    eb=st.sampled_from([1e-1, 1e-2, 1e-3, 1e-4]),
+    scale=st.sampled_from([1e-2, 1.0, 100.0]),
+)
+def test_kernel_matches_ref(tiles, seed, eb, scale):
+    # NOTE on ties: inside jax.jit XLA rewrites x/const into x*(1/const),
+    # so values landing exactly on a .5 quantization boundary may round to
+    # the neighbouring level vs the eager oracle. Both reconstructions are
+    # legal (|x - xhat| <= eb); we therefore demand bit-exact agreement
+    # away from ties, quantum-bounded disagreement at ties, and a tiny tie
+    # fraction.
+    x = field(tiles * TILE, seed, scale)
+    got_xhat, got_bits = lorenzo_quant(x, eb)
+    want_xhat, want_bits = lorenzo_quant_ref(x, eb)
+    eb_abs = eb  # absolute bound as passed
+    diff = np.abs(np.asarray(got_xhat, np.float64) - np.asarray(want_xhat, np.float64))
+    # One quantization quantum plus the f32 rounding of q * 2eb itself.
+    quantum = 2 * eb_abs + 4 * np.finfo(np.float32).eps * np.abs(np.asarray(x)).max()
+    assert diff.max() <= quantum, f"disagreement beyond one quantum: {diff.max()}"
+    tie_frac = (diff > 0).mean()
+    # The reciprocal rewrite flips rounding when frac(x/2eb) lies within
+    # ~q*eps of .5, so the expected flip fraction grows with the
+    # quantization magnitude q_max.
+    q_max = float(np.abs(np.asarray(x)).max()) / (2 * eb_abs)
+    allowed = max(0.005, 8 * np.finfo(np.float32).eps * q_max)
+    assert tie_frac <= allowed, f"too many ties: {tie_frac} > {allowed}"
+    # Code lengths must agree wherever the block contained no tie.
+    tie_blocks = (diff.reshape(-1, BLOCK) > 0).any(axis=1)
+    clean = ~tie_blocks
+    # A tie in block k changes that block's delta AND the next block's
+    # leading delta; exclude direct successors of tie blocks too.
+    clean[1:] &= ~tie_blocks[:-1]
+    np.testing.assert_array_equal(
+        np.asarray(got_bits)[clean], np.asarray(want_bits)[clean]
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31),
+    eb=st.sampled_from([1e-2, 1e-3, 1e-4]),
+)
+def test_error_bound_holds(seed, eb):
+    x = field(2 * TILE, seed)
+    xhat, _ = lorenzo_quant(x, eb)
+    err = np.abs(np.asarray(xhat, np.float64) - np.asarray(x, np.float64))
+    # f32 rounding of q*2eb adds up to a few ulps of |x| on top of eb.
+    tol = eb * (1 + 1e-5) + 4 * np.finfo(np.float32).eps * np.abs(np.asarray(x)).max()
+    assert err.max() <= tol, f"{err.max()} > {tol}"
+
+
+def test_bits_zero_for_constant_input():
+    x = jnp.full((TILE,), 3.25, jnp.float32)
+    xhat, bits = lorenzo_quant(x, 1e-3)
+    # All deltas zero except the leading outlier block.
+    assert int(bits[0]) > 0 or float(x[0]) == 0.0
+    assert np.all(np.asarray(bits[1:]) == 0)
+    np.testing.assert_allclose(xhat, x, atol=1e-3 * 1.001)
+
+
+def test_estimated_bytes_matches_ref_and_is_conservative():
+    x = field(4 * TILE, 9)
+    _, bits = lorenzo_quant(x, 1e-3)
+    est = int(estimated_frame_bytes(bits))
+    ref = int(estimated_frame_bytes_ref(bits))
+    assert est == ref
+    # Sanity: between the all-constant floor and raw size.
+    nblocks = x.shape[0] // BLOCK
+    assert nblocks <= est <= x.shape[0] * 4
+
+
+def test_quantize_tree_shapes_and_bound():
+    tree = {
+        "a": field(100, 1).reshape(10, 10),
+        "b": field(TILE + 17, 2),
+    }
+    out = quantize_tree(tree, 1e-3)
+    assert out["a"].shape == (10, 10)
+    assert out["b"].shape == (TILE + 17,)
+    for k in tree:
+        err = np.abs(np.asarray(out[k]) - np.asarray(tree[k]))
+        assert err.max() <= 1e-3 * 1.001 + 1e-7
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        lorenzo_quant(jnp.zeros((TILE + 1,), jnp.float32), 1e-3)
+    with pytest.raises(ValueError):
+        lorenzo_quant(jnp.zeros((2, TILE), jnp.float32), 1e-3)

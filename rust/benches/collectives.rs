@@ -1,0 +1,99 @@
+//! `cargo bench --bench collectives` — real in-process collective wall
+//! times across modes (the small-scale counterpart of Figs. 10–15; the
+//! cluster-scale series come from `zccl bench fig*`).
+
+use zccl::collectives::{
+    allgather, allreduce, bcast, reduce_scatter, run_ranks, scatter, Mode, ReduceOp,
+};
+use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::coordinator::Metrics;
+use zccl::data::fields::{Field, FieldKind};
+use zccl::util::bench::Table;
+
+fn modes() -> Vec<(&'static str, Mode)> {
+    let eb = ErrorBound::Rel(1e-4);
+    vec![
+        ("plain", Mode::plain()),
+        ("cprp2p", Mode::cprp2p(CompressorKind::FzLight, eb)),
+        ("ccoll", Mode::ccoll(eb)),
+        ("zccl", Mode::zccl(CompressorKind::FzLight, eb)),
+    ]
+}
+
+fn bench<F>(label: &str, t: &mut Table, reps: usize, f: F)
+where
+    F: Fn(Mode) -> f64,
+{
+    for (mode_name, mode) in modes() {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            best = best.min(f(mode));
+        }
+        t.row(vec![label.into(), mode_name.into(), format!("{best:.4}")]);
+    }
+}
+
+fn main() {
+    let n = 4;
+    let values = 1 << 20; // 4 MiB per rank
+    let mut t = Table::new(&["collective", "mode", "best s"]);
+
+    bench("allreduce", &mut t, 3, |mode| {
+        let out = run_ranks(n, move |c| {
+            let f = Field::generate(FieldKind::Rtm, values, 3 + c.rank() as u64);
+            let mut m = Metrics::default();
+            let t0 = std::time::Instant::now();
+            allreduce(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
+            t0.elapsed().as_secs_f64()
+        });
+        out.into_iter().fold(0.0, f64::max)
+    });
+
+    bench("allgather", &mut t, 3, |mode| {
+        let out = run_ranks(n, move |c| {
+            let f = Field::generate(FieldKind::Rtm, values / n, 3 + c.rank() as u64);
+            let mut m = Metrics::default();
+            let t0 = std::time::Instant::now();
+            allgather(c, &f.values, &mode, &mut m).unwrap();
+            t0.elapsed().as_secs_f64()
+        });
+        out.into_iter().fold(0.0, f64::max)
+    });
+
+    bench("reduce_scatter", &mut t, 3, |mode| {
+        let out = run_ranks(n, move |c| {
+            let f = Field::generate(FieldKind::Rtm, values, 3 + c.rank() as u64);
+            let mut m = Metrics::default();
+            let t0 = std::time::Instant::now();
+            reduce_scatter(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
+            t0.elapsed().as_secs_f64()
+        });
+        out.into_iter().fold(0.0, f64::max)
+    });
+
+    bench("bcast", &mut t, 3, |mode| {
+        let out = run_ranks(n, move |c| {
+            let data =
+                (c.rank() == 0).then(|| Field::generate(FieldKind::Rtm, values, 3).values);
+            let mut m = Metrics::default();
+            let t0 = std::time::Instant::now();
+            bcast(c, data.as_deref(), 0, &mode, &mut m).unwrap();
+            t0.elapsed().as_secs_f64()
+        });
+        out.into_iter().fold(0.0, f64::max)
+    });
+
+    bench("scatter", &mut t, 3, |mode| {
+        let out = run_ranks(n, move |c| {
+            let data =
+                (c.rank() == 0).then(|| Field::generate(FieldKind::Rtm, values, 3).values);
+            let mut m = Metrics::default();
+            let t0 = std::time::Instant::now();
+            scatter(c, data.as_deref(), 0, &mode, &mut m).unwrap();
+            t0.elapsed().as_secs_f64()
+        });
+        out.into_iter().fold(0.0, f64::max)
+    });
+
+    println!("{}", t.render());
+}

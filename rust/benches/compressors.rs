@@ -1,0 +1,48 @@
+//! `cargo bench --bench compressors` — codec micro-benchmarks (the
+//! Tables 1–3 measurement core, custom harness; this environment has no
+//! criterion).
+
+use zccl::compress::{self, Compressor, CompressorKind, ErrorBound, MtCompressor};
+use zccl::data::fields::{Field, FieldKind};
+use zccl::util::bench::{measure_for, Table};
+
+fn main() {
+    let n = 1 << 21; // 8 MiB of f32
+    let budget = 0.15;
+    let mut t = Table::new(&[
+        "codec", "threads", "dataset", "rel", "comp GB/s", "decomp GB/s", "ratio",
+    ]);
+    for kind in CompressorKind::ALL {
+        for fk in [FieldKind::Rtm, FieldKind::Nyx] {
+            let f = Field::generate(fk, n, 42);
+            let bytes = f.values.len() * 4;
+            for rel in [1e-2, 1e-4] {
+                for mt in [false, true] {
+                    // The ZFP baselines have no chunk-parallel mode.
+                    if mt && !matches!(kind, CompressorKind::FzLight | CompressorKind::Szx) {
+                        continue;
+                    }
+                    let codec: Box<dyn Compressor> = if mt {
+                        Box::new(MtCompressor::new(kind))
+                    } else {
+                        compress::build(kind)
+                    };
+                    let eb = ErrorBound::Rel(rel);
+                    let frame = codec.compress(&f.values, eb).expect("compress");
+                    let c = measure_for(budget, || codec.compress(&f.values, eb).unwrap());
+                    let d = measure_for(budget, || codec.decompress(&frame.bytes).unwrap());
+                    t.row(vec![
+                        kind.name().into(),
+                        if mt { "multi".into() } else { "1".into() },
+                        fk.name().into(),
+                        format!("{rel:.0e}"),
+                        format!("{:.3}", c.gbps(bytes)),
+                        format!("{:.3}", d.gbps(bytes)),
+                        format!("{:.1}", frame.stats.ratio()),
+                    ]);
+                }
+            }
+        }
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,38 @@
+//! `cargo bench --bench pipeline` — PIPE-fZ-light overhead: chunked
+//! compression with a progress hook vs the monolithic codec, across chunk
+//! sizes (the §3.5.2 design knob; paper fixes 5120 values).
+
+use zccl::compress::{Compressor, ErrorBound, FzLight, PipeFzLight};
+use zccl::data::fields::{Field, FieldKind};
+use zccl::util::bench::{measure_for, Table};
+
+fn main() {
+    let f = Field::generate(FieldKind::Rtm, 1 << 21, 9);
+    let bytes = f.values.len() * 4;
+    let eb = ErrorBound::Rel(1e-4);
+    let mut t = Table::new(&["codec", "chunk", "comp GB/s", "hook calls/iter"]);
+
+    let mono = FzLight::default();
+    let m = measure_for(0.2, || mono.compress(&f.values, eb).unwrap());
+    t.row(vec![
+        "fzlight (mono)".into(),
+        "5120".into(),
+        format!("{:.3}", m.gbps(bytes)),
+        "0".into(),
+    ]);
+
+    for chunk in [1280usize, 2560, 5120, 10240, 40960] {
+        let pipe = PipeFzLight::with_chunk(chunk);
+        let mut calls = 0u64;
+        let m = measure_for(0.2, || {
+            pipe.compress_with_progress(&f.values, eb, &mut |_| calls += 1).unwrap()
+        });
+        t.row(vec![
+            "PIPE-fzlight".into(),
+            format!("{chunk}"),
+            format!("{:.3}", m.gbps(bytes)),
+            format!("{}", calls / m.iters as u64),
+        ]);
+    }
+    println!("{}", t.render());
+}

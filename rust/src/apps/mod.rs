@@ -1,0 +1,8 @@
+//! Application layer: the paper's real-world use case (image stacking,
+//! §4.6) and a data-parallel trainer that drives the AOT-compiled
+//! transformer through ZCCL collectives (the dist-train end-to-end
+//! validation; DESIGN.md §6).
+
+pub mod ddp;
+pub mod image_stacking;
+pub mod visualize;

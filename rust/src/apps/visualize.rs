@@ -1,0 +1,55 @@
+//! PGM image dumps for the visual-quality figures (Fig. 8: SZx stripe
+//! artifacts vs fZ-light; Fig. 16: stacked-image comparison).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::Result;
+
+/// Write a grayscale PGM (P5), min-max normalised.
+pub fn write_pgm(path: impl AsRef<Path>, values: &[f32], rows: usize, cols: usize) -> Result<()> {
+    assert_eq!(values.len(), rows * cols, "dims mismatch");
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let range = if hi > lo { hi - lo } else { 1.0 };
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P5\n{cols} {rows}\n255\n")?;
+    let mut buf = Vec::with_capacity(values.len());
+    for &v in values {
+        buf.push((((v - lo) / range) * 255.0).clamp(0.0, 255.0) as u8);
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Absolute-difference image (for artifact visualisation), scaled by
+/// `gain` before normalisation so subtle artifacts are visible.
+pub fn diff_image(a: &[f32], b: &[f32], gain: f32) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() * gain).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_roundtrip_header() {
+        let dir = std::env::temp_dir().join(format!("zccl-pgm-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.pgm");
+        write_pgm(&p, &[0.0, 0.5, 1.0, 0.25], 2, 2).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(data.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(data.len(), b"P5\n2 2\n255\n".len() + 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn diff_scales() {
+        let d = diff_image(&[1.0, 2.0], &[1.5, 2.0], 2.0);
+        assert_eq!(d, vec![1.0, 0.0]);
+    }
+}

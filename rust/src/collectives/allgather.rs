@@ -1,0 +1,389 @@
+//! Ring allgather — the paper's showcase for the **collective data
+//! movement framework** (§3.1.1, Fig. 2, evaluated in Fig. 10).
+//!
+//! - `Plain`: the textbook N−1-round ring.
+//! - `Cprp2p`: the received chunk is decompressed every round and
+//!   re-compressed before being forwarded — `(N−1)·T_chunk` compression
+//!   cost and `(N−1)×` worst-case error accumulation. This is the
+//!   baseline the paper criticises.
+//! - `CColl`/`Zccl`: each rank compresses its own chunk exactly **once**
+//!   before the intensive communication, all ranks exchange the 4-byte
+//!   compressed sizes, the ring then forwards *compressed* chunks (ZCCL
+//!   additionally segments them into a fixed pipeline size so the
+//!   communication is balanced despite unequal compressed sizes), and
+//!   decompression happens exactly once after the last round.
+//!
+//! The internal entry point [`allgather_chunks`] takes a chunk-ownership
+//! `shift` so the allgather stage of the ring allreduce (where rank `r`
+//! owns chunk `(r+1) mod n` after reduce-scatter) reuses the same code.
+
+use super::{
+    bytes_to_f32s, exchange_sizes, f32s_to_bytes, recv_segmented, send_segmented, Algo,
+    Communicator, Mode, SEG_TAG_SPAN,
+};
+use crate::coordinator::{Metrics, Phase};
+use crate::topology::{ring, ring_recv_chunk, ring_send_chunk};
+use crate::{Error, Result};
+
+/// Gather every rank's `my_chunk` onto every rank, concatenated in rank
+/// order. Chunk lengths may differ across ranks.
+pub fn allgather(
+    comm: &mut Communicator,
+    my_chunk: &[f32],
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    allgather_chunks(comm, my_chunk, 0, mode, m)
+}
+
+/// Ring allgather where rank `r` contributes the chunk with logical index
+/// `(r + shift) mod n`; the output is concatenated in logical chunk order.
+pub(crate) fn allgather_chunks(
+    comm: &mut Communicator,
+    my_chunk: &[f32],
+    shift: usize,
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    if n == 1 {
+        return Ok(my_chunk.to_vec());
+    }
+    let base = comm.fresh_tags((n as u64 + 2) * SEG_TAG_SPAN);
+    let counts_tag = base;
+    let sizes_tag = base + n as u64;
+    let round_tag = |t: usize| base + (t as u64 + 1) * SEG_TAG_SPAN;
+    let me = comm.rank();
+
+    // Everyone learns every chunk's value count (cheap 4-byte ring).
+    let t0 = std::time::Instant::now();
+    let by_rank = exchange_sizes(comm, my_chunk.len() as u32, counts_tag)?;
+    m.add(Phase::Other, t0.elapsed().as_secs_f64());
+    let mut counts = vec![0u32; n];
+    for (r, c) in by_rank.iter().enumerate() {
+        counts[(r + shift) % n] = *c;
+    }
+    m.raw_bytes += counts.iter().map(|&c| c as u64 * 4).sum::<u64>();
+    let vrank = me + shift; // virtual rank for the ring chunk schedule
+
+    match mode.algo {
+        Algo::Plain => allgather_plain(comm, my_chunk, vrank, &counts, round_tag, m),
+        Algo::Cprp2p => allgather_cprp2p(comm, my_chunk, vrank, &counts, mode, round_tag, m),
+        Algo::CColl | Algo::Zccl => {
+            allgather_zccl(comm, my_chunk, vrank, &counts, mode, sizes_tag, round_tag, m)
+        }
+    }
+}
+
+fn allgather_plain(
+    comm: &mut Communicator,
+    my_chunk: &[f32],
+    vrank: usize,
+    counts: &[u32],
+    round_tag: impl Fn(usize) -> u64,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let nb = ring(me, n);
+    let mut chunks: Vec<Option<Vec<u8>>> = vec![None; n];
+    chunks[vrank % n] = Some(f32s_to_bytes(my_chunk));
+    for t in 0..n - 1 {
+        let s = ring_send_chunk(vrank, t, n);
+        let r = ring_recv_chunk(vrank, t, n);
+        let tag = round_tag(t);
+        let send_buf = chunks[s].as_ref().expect("ring schedule owns sent chunk").clone();
+        let t0 = std::time::Instant::now();
+        m.bytes_sent += send_segmented(comm.t, nb.next, tag, &send_buf, usize::MAX)?;
+        let got = recv_segmented(comm.t, nb.prev, tag, counts[r] as usize * 4, usize::MAX)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += got.len() as u64;
+        chunks[r] = Some(got);
+    }
+    let t0 = std::time::Instant::now();
+    let mut out = Vec::with_capacity(counts.iter().map(|&c| c as usize).sum());
+    for c in chunks {
+        out.extend(bytes_to_f32s(&c.expect("all chunks gathered"))?);
+    }
+    m.add(Phase::Other, t0.elapsed().as_secs_f64());
+    Ok(out)
+}
+
+fn allgather_cprp2p(
+    comm: &mut Communicator,
+    my_chunk: &[f32],
+    vrank: usize,
+    counts: &[u32],
+    mode: &Mode,
+    round_tag: impl Fn(usize) -> u64,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let nb = ring(me, n);
+    let codec = mode.codec();
+    // CPRP2P keeps chunks DECOMPRESSED between rounds, so every forward
+    // re-compresses (and every hop re-lossy-fies) the data.
+    let mut chunks: Vec<Option<Vec<f32>>> = vec![None; n];
+    chunks[vrank % n] = Some(my_chunk.to_vec());
+    for t in 0..n - 1 {
+        let s = ring_send_chunk(vrank, t, n);
+        let r = ring_recv_chunk(vrank, t, n);
+        let tag = round_tag(t);
+        let send_plain = chunks[s].as_ref().expect("schedule").clone();
+        let compressed = m.time(Phase::Compress, || codec.compress(&send_plain, mode.eb))?;
+        // The receiver cannot know the compressed size in advance: CPRP2P
+        // sends the frame as one message (this is exactly the unbalanced
+        // communication §3.1.1 calls out).
+        let t0 = std::time::Instant::now();
+        comm.t.send(nb.next, tag, &compressed.bytes)?;
+        m.bytes_sent += compressed.bytes.len() as u64;
+        let got = comm.t.recv(nb.prev, tag)?;
+        m.bytes_recv += got.len() as u64;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        let dec = m.time(Phase::Decompress, || crate::compress::decompress(&got))?;
+        if dec.len() != counts[r] as usize {
+            return Err(Error::corrupt("cprp2p chunk count mismatch"));
+        }
+        chunks[r] = Some(dec);
+    }
+    let mut out = Vec::with_capacity(counts.iter().map(|&c| c as usize).sum());
+    for c in chunks {
+        out.extend(c.expect("all chunks gathered"));
+    }
+    Ok(out)
+}
+
+fn allgather_zccl(
+    comm: &mut Communicator,
+    my_chunk: &[f32],
+    vrank: usize,
+    counts: &[u32],
+    mode: &Mode,
+    sizes_tag: u64,
+    round_tag: impl Fn(usize) -> u64,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let nb = ring(me, n);
+    let codec = mode.codec();
+
+    // (1) Compress the local chunk exactly once.
+    let mine = m.time(Phase::Compress, || codec.compress(my_chunk, mode.eb))?;
+
+    // (2) Synchronise compressed sizes (4 bytes per rank) so every rank
+    //     can run a *balanced*, fixed-pipeline communication schedule.
+    let t0 = std::time::Instant::now();
+    let by_rank = exchange_sizes(comm, mine.bytes.len() as u32, sizes_tag)?;
+    m.add(Phase::Other, t0.elapsed().as_secs_f64());
+    let mut sizes = vec![0u32; n];
+    for (r, s) in by_rank.iter().enumerate() {
+        sizes[(r + vrank - me) % n] = *s;
+    }
+
+    // (3) N-1 ring rounds forwarding COMPRESSED chunks in fixed segments.
+    let mut chunks: Vec<Option<Vec<u8>>> = vec![None; n];
+    chunks[vrank % n] = Some(mine.bytes);
+    let seg = if mode.algo == Algo::Zccl { mode.pipeline_bytes } else { usize::MAX };
+    for t in 0..n - 1 {
+        let s = ring_send_chunk(vrank, t, n);
+        let r = ring_recv_chunk(vrank, t, n);
+        let tag = round_tag(t);
+        let send_buf = chunks[s].as_ref().expect("schedule").clone();
+        let t0 = std::time::Instant::now();
+        m.bytes_sent += send_segmented(comm.t, nb.next, tag, &send_buf, seg)?;
+        let got = recv_segmented(comm.t, nb.prev, tag, sizes[r] as usize, seg)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += got.len() as u64;
+        chunks[r] = Some(got);
+    }
+
+    // (4) Decompress everything exactly once, after the last round
+    //     (including our own frame, so every rank returns identical data —
+    //     MPI allgather semantics).
+    let mut out = Vec::with_capacity(counts.iter().map(|&c| c as usize).sum());
+    for (r, c) in chunks.into_iter().enumerate() {
+        let frame = c.expect("all chunks gathered");
+        let dec = m.time(Phase::Decompress, || crate::compress::decompress(&frame))?;
+        if dec.len() != counts[r] as usize {
+            return Err(Error::corrupt(format!(
+                "zccl chunk {r}: {} values, expected {}",
+                dec.len(),
+                counts[r]
+            )));
+        }
+        out.extend(dec);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_ranks;
+    use crate::compress::{CompressorKind, ErrorBound};
+    use crate::data::fields::{Field, FieldKind};
+
+    fn rank_chunk(rank: usize, len: usize) -> Vec<f32> {
+        Field::generate(FieldKind::Cesm, len, 100 + rank as u64).values
+    }
+
+    fn expected(n: usize, len: usize) -> Vec<f32> {
+        (0..n).flat_map(|r| rank_chunk(r, len)).collect()
+    }
+
+    #[test]
+    fn plain_exact() {
+        for n in [2usize, 3, 5, 8] {
+            let out = run_ranks(n, move |c| {
+                let mine = rank_chunk(c.rank(), 1000);
+                let mut m = Metrics::default();
+                allgather(c, &mine, &Mode::plain(), &mut m).unwrap()
+            });
+            let want = expected(n, 1000);
+            for o in out {
+                assert_eq!(o, want);
+            }
+        }
+    }
+
+    #[test]
+    fn plain_unequal_chunks() {
+        let n = 4;
+        let out = run_ranks(n, move |c| {
+            let mine = rank_chunk(c.rank(), 100 + c.rank() * 37);
+            let mut m = Metrics::default();
+            allgather(c, &mine, &Mode::plain(), &mut m).unwrap()
+        });
+        let want: Vec<f32> = (0..n).flat_map(|r| rank_chunk(r, 100 + r * 37)).collect();
+        for o in out {
+            assert_eq!(o, want);
+        }
+    }
+
+    #[test]
+    fn shifted_ownership() {
+        // Rank r holds the chunk with logical index (r+1) mod n — the
+        // allreduce allgather stage's layout.
+        let n = 5;
+        let out = run_ranks(n, move |c| {
+            let idx = (c.rank() + 1) % n;
+            let mine = rank_chunk(idx, 64);
+            let mut m = Metrics::default();
+            allgather_chunks(c, &mine, 1, &Mode::plain(), &mut m).unwrap()
+        });
+        let want = expected(n, 64);
+        for o in out {
+            assert_eq!(o, want);
+        }
+    }
+
+    #[test]
+    fn zccl_bounded_single_compression() {
+        let n = 6;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let mine = rank_chunk(c.rank(), 2048);
+            let mut m = Metrics::default();
+            let r = allgather(
+                c,
+                &mine,
+                &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap();
+            (r, m)
+        });
+        let want = expected(n, 2048);
+        for (o, _) in &out {
+            assert_eq!(o.len(), want.len());
+            // ZCCL data-movement guarantee: each datum compressed ONCE, so
+            // error <= eb (not (N-1)·eb).
+            for (a, b) in o.iter().zip(&want) {
+                assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6, "|{a}-{b}| > {eb}");
+            }
+        }
+        // All ranks produce identical output (MPI semantics).
+        for (o, _) in &out[1..] {
+            assert_eq!(o, &out[0].0);
+        }
+    }
+
+    #[test]
+    fn ccoll_uses_szx_and_is_bounded() {
+        let n = 4;
+        let eb = 1e-2f64;
+        let out = run_ranks(n, move |c| {
+            let mine = rank_chunk(c.rank(), 1500);
+            let mut m = Metrics::default();
+            allgather(c, &mine, &Mode::ccoll(ErrorBound::Abs(eb)), &mut m).unwrap()
+        });
+        let want = expected(n, 1500);
+        for o in out {
+            for (a, b) in o.iter().zip(&want) {
+                assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn cprp2p_error_can_accumulate_but_stays_n_eb() {
+        let n = 5;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let mine = rank_chunk(c.rank(), 1024);
+            let mut m = Metrics::default();
+            allgather(
+                c,
+                &mine,
+                &Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap()
+        });
+        let want = expected(n, 1024);
+        for o in out {
+            for (a, b) in o.iter().zip(&want) {
+                // Worst case (N-1)·eb per §3.1.1.
+                assert!((a - b).abs() as f64 <= (n as f64 - 1.0) * eb * 1.001 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn zccl_compresses_once_cprp2p_many_times() {
+        // The framework's core claim, observable through the metrics: the
+        // ZCCL compression phase is ~1 chunk's worth, CPRP2P's is ~(N-1)×.
+        let n = 6;
+        let modes: Vec<(&str, Mode)> = vec![
+            ("zccl", Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3))),
+            ("cprp2p", Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(1e-3))),
+        ];
+        let mut compress_time = std::collections::HashMap::new();
+        for (name, mode) in modes {
+            let out = run_ranks(n, move |c| {
+                let mine = rank_chunk(c.rank(), 1 << 15);
+                let mut m = Metrics::default();
+                allgather(c, &mine, &mode, &mut m).unwrap();
+                m.compress_s
+            });
+            compress_time.insert(name, out.iter().sum::<f64>() / n as f64);
+        }
+        assert!(
+            compress_time["cprp2p"] > 2.0 * compress_time["zccl"],
+            "cprp2p {:.6}s should dwarf zccl {:.6}s",
+            compress_time["cprp2p"],
+            compress_time["zccl"]
+        );
+    }
+
+    #[test]
+    fn single_rank_identity() {
+        let out = run_ranks(1, |c| {
+            let mut m = Metrics::default();
+            allgather(c, &[1.0, 2.0], &Mode::plain(), &mut m).unwrap()
+        });
+        assert_eq!(out[0], vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! All-to-all ("allscatter", §2.1.1): rank `r` sends its `j`-th chunk to
+//! rank `j` and receives rank `j`'s `r`-th chunk, via the standard
+//! pairwise-exchange schedule (`n-1` rounds, peer `(r ± t) mod n`).
+//!
+//! Data movement framework applies directly: every chunk crosses exactly
+//! one link, so each is compressed once and decompressed once; ZCCL adds
+//! the size pre-exchange so receives post exact buffers (balanced), while
+//! CPRP2P sends opaque frames of unknown size.
+
+use super::{bytes_to_f32s, chunk_ranges, exchange_sizes, f32s_to_bytes, Algo, Communicator, Mode};
+use crate::coordinator::{Metrics, Phase};
+use crate::{Error, Result};
+
+/// Exchange chunks: `input` is split into `n` chunks (chunk `j` goes to
+/// rank `j`); the result concatenates the chunk received from every rank
+/// in rank order.
+pub fn alltoall(
+    comm: &mut Communicator,
+    input: &[f32],
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    if n == 1 {
+        return Ok(input.to_vec());
+    }
+    let base = comm.fresh_tags(2 * n as u64);
+    let sizes_tag = base + n as u64;
+    let ranges = chunk_ranges(input.len(), n);
+    m.raw_bytes += (input.len() * 4) as u64;
+
+    // Compress (or serialise) each outgoing chunk exactly once.
+    let codec = mode.compresses().then(|| mode.codec());
+    let mut outgoing: Vec<Vec<u8>> = Vec::with_capacity(n);
+    for r in ranges.iter() {
+        let chunk = &input[r.clone()];
+        outgoing.push(match &codec {
+            Some(c) => m.time(Phase::Compress, || c.compress(chunk, mode.eb))?.bytes,
+            None => f32s_to_bytes(chunk),
+        });
+    }
+
+    // ZCCL balances with a size pre-exchange (4 bytes/rank; here we ship
+    // each peer the size of ITS chunk during the pairwise rounds' tag-0
+    // message, so reuse exchange_sizes for the total only).
+    if mode.algo == Algo::Zccl {
+        let t0 = std::time::Instant::now();
+        let _ = exchange_sizes(comm, outgoing[me].len() as u32, sizes_tag)?;
+        m.add(Phase::Other, t0.elapsed().as_secs_f64());
+    }
+
+    let mut incoming: Vec<Option<Vec<u8>>> = vec![None; n];
+    incoming[me] = Some(outgoing[me].clone());
+    for t in 1..n {
+        let to = (me + t) % n;
+        let from = (me + n - t) % n;
+        let t0 = std::time::Instant::now();
+        comm.t.send(to, base + t as u64, &outgoing[to])?;
+        m.bytes_sent += outgoing[to].len() as u64;
+        let got = comm.t.recv(from, base + t as u64)?;
+        m.bytes_recv += got.len() as u64;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        incoming[from] = Some(got);
+    }
+
+    // Decode in rank order. Every rank's input may have a different
+    // length, so sizes come from the frames themselves (compressed) or
+    // the byte count (plain).
+    let mut out = Vec::new();
+    for (r, buf) in incoming.into_iter().enumerate() {
+        let buf = buf.ok_or_else(|| Error::corrupt(format!("missing chunk from {r}")))?;
+        match &codec {
+            Some(_) => {
+                out.extend(m.time(Phase::Decompress, || crate::compress::decompress(&buf))?)
+            }
+            None => out.extend(bytes_to_f32s(&buf)?),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_ranks;
+    use crate::compress::{CompressorKind, ErrorBound};
+    use crate::data::fields::{Field, FieldKind};
+
+    fn rank_input(rank: usize, len: usize) -> Vec<f32> {
+        Field::generate(FieldKind::Cesm, len, 2000 + rank as u64).values
+    }
+
+    /// Expected output at `rank`: chunk `rank` of every peer's input.
+    fn expected(rank: usize, n: usize, len: usize) -> Vec<f32> {
+        let ranges = chunk_ranges(len, n);
+        (0..n)
+            .flat_map(|src| rank_input(src, len)[ranges[rank].clone()].to_vec())
+            .collect()
+    }
+
+    #[test]
+    fn plain_exact() {
+        for n in [2usize, 3, 5, 8] {
+            let len = 1000;
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                alltoall(c, &rank_input(c.rank(), len), &Mode::plain(), &mut m).unwrap()
+            });
+            for (rank, o) in out.into_iter().enumerate() {
+                assert_eq!(o, expected(rank, n, len), "n={n} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn zccl_bounded() {
+        let (n, len) = (5, 4000);
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let mut m = Metrics::default();
+            alltoall(
+                c,
+                &rank_input(c.rank(), len),
+                &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap()
+        });
+        for (rank, o) in out.into_iter().enumerate() {
+            let want = expected(rank, n, len);
+            assert_eq!(o.len(), want.len());
+            for (a, b) in o.iter().zip(&want) {
+                assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank() {
+        let out = run_ranks(1, |c| {
+            let mut m = Metrics::default();
+            alltoall(c, &[1.0, 2.0, 3.0], &Mode::plain(), &mut m).unwrap()
+        });
+        assert_eq!(out[0], vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,235 @@
+//! Binomial-tree broadcast — "Z-Bcast" (§3.1.1 Fig. 3, evaluated Fig. 14).
+//!
+//! - `Plain`: MPICH's binomial tree, raw payloads.
+//! - `Cprp2p`: every hop decompresses on receive and re-compresses on
+//!   forward: `log2(N)·(T_comp + T_decom)` cost and `log2(N)×` worst-case
+//!   error accumulation.
+//! - `CColl`/`Zccl`: the root compresses **once**; interior ranks forward
+//!   the compressed frame verbatim; every rank decompresses once. Cost
+//!   collapses to `T_comp + T_decom` and the error to a single `ê`.
+
+use super::{bytes_to_f32s, f32s_to_bytes, Algo, Communicator, Mode};
+use crate::coordinator::{Metrics, Phase};
+use crate::topology::binomial_bcast;
+use crate::{Error, Result};
+
+/// Broadcast `data` (significant at `root` only) to every rank.
+pub fn bcast(
+    comm: &mut Communicator,
+    data: Option<&[f32]>,
+    root: usize,
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    if root >= n {
+        return Err(Error::invalid(format!("root {root} out of {n}")));
+    }
+    if me == root && data.is_none() {
+        return Err(Error::invalid("root must supply data"));
+    }
+    if n == 1 {
+        return Ok(data.unwrap().to_vec());
+    }
+    let base = comm.fresh_tags(crate::topology::tree_rounds(n) as u64 + 1);
+    let (recv_step, send_steps) = binomial_bcast(me, root, n);
+
+    match mode.algo {
+        Algo::Plain => {
+            let mut buf: Vec<u8> = if me == root {
+                let d = data.unwrap();
+                m.raw_bytes += (d.len() * 4) as u64;
+                f32s_to_bytes(d)
+            } else {
+                let step = recv_step.expect("non-root receives");
+                let t0 = std::time::Instant::now();
+                let got = comm.t.recv(step.peer, base + step.round as u64)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_recv += got.len() as u64;
+                got
+            };
+            for s in send_steps {
+                let t0 = std::time::Instant::now();
+                comm.t.send(s.peer, base + s.round as u64, &buf)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_sent += buf.len() as u64;
+            }
+            let out = bytes_to_f32s(&buf)?;
+            buf.clear();
+            Ok(out)
+        }
+        Algo::Cprp2p => {
+            let codec = mode.codec();
+            // Every rank holds DECOMPRESSED data between hops.
+            let plain: Vec<f32> = if me == root {
+                let d = data.unwrap();
+                m.raw_bytes += (d.len() * 4) as u64;
+                d.to_vec()
+            } else {
+                let step = recv_step.expect("non-root receives");
+                let t0 = std::time::Instant::now();
+                let got = comm.t.recv(step.peer, base + step.round as u64)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_recv += got.len() as u64;
+                m.time(Phase::Decompress, || crate::compress::decompress(&got))?
+            };
+            for s in send_steps {
+                // Re-compress for every forward: the CPRP2P pathology.
+                let frame = m.time(Phase::Compress, || codec.compress(&plain, mode.eb))?;
+                let t0 = std::time::Instant::now();
+                comm.t.send(s.peer, base + s.round as u64, &frame.bytes)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_sent += frame.bytes.len() as u64;
+            }
+            Ok(plain)
+        }
+        Algo::CColl | Algo::Zccl => {
+            let codec = mode.codec();
+            // Root compresses once; the frame travels the tree verbatim.
+            let frame: Vec<u8> = if me == root {
+                let d = data.unwrap();
+                m.raw_bytes += (d.len() * 4) as u64;
+                m.time(Phase::Compress, || codec.compress(d, mode.eb))?.bytes
+            } else {
+                let step = recv_step.expect("non-root receives");
+                let t0 = std::time::Instant::now();
+                let got = comm.t.recv(step.peer, base + step.round as u64)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_recv += got.len() as u64;
+                got
+            };
+            for s in send_steps {
+                let t0 = std::time::Instant::now();
+                comm.t.send(s.peer, base + s.round as u64, &frame)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_sent += frame.len() as u64;
+            }
+            // Decompress exactly once, after forwarding (so children are
+            // not delayed behind our decompression).
+            m.time(Phase::Decompress, || crate::compress::decompress(&frame))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_ranks;
+    use crate::compress::{CompressorKind, ErrorBound};
+    use crate::data::fields::{Field, FieldKind};
+
+    fn payload(len: usize) -> Vec<f32> {
+        Field::generate(FieldKind::Rtm, len, 321).values
+    }
+
+    #[test]
+    fn plain_exact_all_roots_and_sizes() {
+        for n in [2usize, 3, 5, 8, 9] {
+            for root in [0, n - 1, n / 2] {
+                let out = run_ranks(n, move |c| {
+                    let data = (c.rank() == root).then(|| payload(1234));
+                    let mut m = Metrics::default();
+                    bcast(c, data.as_deref(), root, &Mode::plain(), &mut m).unwrap()
+                });
+                let want = payload(1234);
+                for o in out {
+                    assert_eq!(o, want, "n={n} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zccl_single_eb_error() {
+        let n = 8;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let data = (c.rank() == 0).then(|| payload(10_000));
+            let mut m = Metrics::default();
+            let r = bcast(
+                c,
+                data.as_deref(),
+                0,
+                &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap();
+            (r, m)
+        });
+        let want = payload(10_000);
+        for (o, _) in &out {
+            for (a, b) in o.iter().zip(&want) {
+                // ZCCL bcast: exactly one compression regardless of depth.
+                assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6);
+            }
+        }
+        // All ranks identical (they decompress the same frame).
+        for (o, _) in &out[1..] {
+            assert_eq!(o, &out[0].0);
+        }
+        // Only the root compresses.
+        for (rank, (_, m)) in out.iter().enumerate() {
+            if rank == 0 {
+                assert!(m.compress_s > 0.0);
+            } else {
+                assert_eq!(m.compress_s, 0.0, "rank {rank} must not compress");
+            }
+        }
+    }
+
+    #[test]
+    fn cprp2p_error_grows_with_depth_bound() {
+        let n = 8; // depth log2(8) = 3
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let data = (c.rank() == 0).then(|| payload(4096));
+            let mut m = Metrics::default();
+            bcast(
+                c,
+                data.as_deref(),
+                0,
+                &Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap()
+        });
+        let want = payload(4096);
+        for o in out {
+            for (a, b) in o.iter().zip(&want) {
+                assert!((a - b).abs() as f64 <= 3.0 * eb * 1.01 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn nonroot_without_data_ok_root_without_data_err() {
+        let out = run_ranks(2, |c| {
+            let mut m = Metrics::default();
+            if c.rank() == 0 {
+                bcast(c, Some(&[1.0, 2.0]), 0, &Mode::plain(), &mut m).unwrap()
+            } else {
+                bcast(c, None, 0, &Mode::plain(), &mut m).unwrap()
+            }
+        });
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn nonzero_root_compressed() {
+        let n = 5;
+        let eb = 1e-2f64;
+        let root = 3;
+        let out = run_ranks(n, move |c| {
+            let data = (c.rank() == root).then(|| payload(2000));
+            let mut m = Metrics::default();
+            bcast(c, data.as_deref(), root, &Mode::ccoll(ErrorBound::Abs(eb)), &mut m).unwrap()
+        });
+        let want = payload(2000);
+        for o in out {
+            for (a, b) in o.iter().zip(&want) {
+                assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Binomial-tree gather (inverse of scatter): chunks flow *up* the tree
+//! to the root.
+//!
+//! - `Plain`: raw records.
+//! - `Cprp2p`: every hop compresses its whole accumulated block and the
+//!   parent decompresses — repeated work + error accumulation.
+//! - `CColl`/`Zccl`: each rank compresses its own chunk **once** at the
+//!   leaf step; interior ranks forward frames verbatim; only the root
+//!   decompresses (once per rank).
+//!
+//! Record format: `u32 count`, then per record `u32 rank, u32 bytes,
+//! payload`.
+
+use super::{bytes_to_f32s, f32s_to_bytes, Algo, Communicator, Mode};
+use crate::compress::bits::le;
+use crate::coordinator::{Metrics, Phase};
+use crate::topology::{binomial_bcast, tree_rounds};
+use crate::{Error, Result};
+
+/// Gather each rank's `my_chunk` to `root`, which returns the chunks
+/// concatenated in rank order (other ranks return `None`). Chunk lengths
+/// may differ.
+pub fn gather(
+    comm: &mut Communicator,
+    my_chunk: &[f32],
+    root: usize,
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Option<Vec<f32>>> {
+    let n = comm.size();
+    let me = comm.rank();
+    if root >= n {
+        return Err(Error::invalid(format!("root {root} out of {n}")));
+    }
+    if n == 1 {
+        return Ok(Some(my_chunk.to_vec()));
+    }
+    let base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    // Gather runs the bcast tree in reverse: receive from "children"
+    // (largest round first = deepest subtree last... order does not matter
+    // for correctness; we use reverse round order so the longest chain
+    // drains first), then send to the "parent".
+    let (parent_step, child_steps) = binomial_bcast(me, root, n);
+
+    m.raw_bytes += (my_chunk.len() * 4) as u64;
+    // Records this rank will forward: own chunk first.
+    let mut records: Vec<(u32, Vec<u8>)> = Vec::new();
+    let own_payload = match mode.algo {
+        Algo::Plain => f32s_to_bytes(my_chunk),
+        Algo::Cprp2p => f32s_to_bytes(my_chunk), // compressed per hop below
+        Algo::CColl | Algo::Zccl => {
+            m.time(Phase::Compress, || mode.codec().compress(my_chunk, mode.eb))?.bytes
+        }
+    };
+    records.push((me as u32, own_payload));
+
+    // Receive children's bundles (reverse round order).
+    for s in child_steps.iter().rev() {
+        let t0 = std::time::Instant::now();
+        let msg = comm.t.recv(s.peer, base + s.round as u64)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += msg.len() as u64;
+        let child_records = if mode.algo == Algo::Cprp2p {
+            // The child compressed each record's values for the hop;
+            // decompress them back to raw bytes.
+            let recs = parse_records(&msg)?;
+            let mut out = Vec::with_capacity(recs.len());
+            for (rank, payload) in recs {
+                let vals = m.time(Phase::Decompress, || crate::compress::decompress(&payload))?;
+                out.push((rank, f32s_to_bytes(&vals)));
+            }
+            out
+        } else {
+            parse_records(&msg)?
+        };
+        records.extend(child_records);
+    }
+
+    if me == root {
+        // Assemble in rank order; decompress once per rank for Z modes.
+        records.sort_by_key(|(r, _)| *r);
+        let mut out = Vec::new();
+        for (_, payload) in records {
+            match mode.algo {
+                Algo::Plain | Algo::Cprp2p => out.extend(bytes_to_f32s(&payload)?),
+                Algo::CColl | Algo::Zccl => out.extend(
+                    m.time(Phase::Decompress, || crate::compress::decompress(&payload))?,
+                ),
+            }
+        }
+        return Ok(Some(out));
+    }
+
+    // Forward everything to the parent.
+    let step = parent_step.expect("non-root has a parent");
+    let wire = if mode.algo == Algo::Cprp2p {
+        // Compress each record's values for this hop (CPRP2P re-compresses
+        // at every level of the tree).
+        let mut hop = Vec::with_capacity(records.len());
+        for (rank, payload) in &records {
+            let vals = bytes_to_f32s(payload)?;
+            let frame = m.time(Phase::Compress, || mode.codec().compress(&vals, mode.eb))?;
+            hop.push((*rank, frame.bytes));
+        }
+        encode_records(&hop)
+    } else {
+        encode_records(&records)
+    };
+    let t0 = std::time::Instant::now();
+    comm.t.send(step.peer, base + step.round as u64, &wire)?;
+    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+    m.bytes_sent += wire.len() as u64;
+    Ok(None)
+}
+
+fn encode_records(records: &[(u32, Vec<u8>)]) -> Vec<u8> {
+    let body: usize = records.iter().map(|(_, p)| p.len()).sum();
+    let mut out = Vec::with_capacity(4 + records.len() * 8 + body);
+    le::put_u32(&mut out, records.len() as u32);
+    for (rank, p) in records {
+        le::put_u32(&mut out, *rank);
+        le::put_u32(&mut out, p.len() as u32);
+    }
+    for (_, p) in records {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+fn parse_records(msg: &[u8]) -> Result<Vec<(u32, Vec<u8>)>> {
+    let mut pos = 0usize;
+    let count = le::get_u32(msg, &mut pos)? as usize;
+    let mut heads = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rank = le::get_u32(msg, &mut pos)?;
+        let len = le::get_u32(msg, &mut pos)? as usize;
+        heads.push((rank, len));
+    }
+    let mut out = Vec::with_capacity(count);
+    for (rank, len) in heads {
+        let end = pos + len;
+        if end > msg.len() {
+            return Err(Error::corrupt("gather record past end"));
+        }
+        out.push((rank, msg[pos..end].to_vec()));
+        pos = end;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_ranks;
+    use crate::compress::{CompressorKind, ErrorBound};
+    use crate::data::fields::{Field, FieldKind};
+
+    fn rank_chunk(rank: usize, len: usize) -> Vec<f32> {
+        Field::generate(FieldKind::Hurricane, len, 40 + rank as u64).values
+    }
+
+    #[test]
+    fn plain_exact() {
+        for n in [2usize, 3, 6, 9] {
+            for root in [0usize, n - 1] {
+                let out = run_ranks(n, move |c| {
+                    let mine = rank_chunk(c.rank(), 200 + c.rank() * 13);
+                    let mut m = Metrics::default();
+                    gather(c, &mine, root, &Mode::plain(), &mut m).unwrap()
+                });
+                let want: Vec<f32> =
+                    (0..n).flat_map(|r| rank_chunk(r, 200 + r * 13)).collect();
+                for (rank, o) in out.into_iter().enumerate() {
+                    if rank == root {
+                        assert_eq!(o.unwrap(), want, "n={n} root={root}");
+                    } else {
+                        assert!(o.is_none());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zccl_bounded_and_leaf_compress_only() {
+        let n = 8;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let mine = rank_chunk(c.rank(), 2048);
+            let mut m = Metrics::default();
+            let r = gather(
+                c,
+                &mine,
+                0,
+                &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap();
+            (r, m)
+        });
+        let want: Vec<f32> = (0..n).flat_map(|r| rank_chunk(r, 2048)).collect();
+        let root_out = out[0].0.as_ref().unwrap();
+        for (a, b) in root_out.iter().zip(&want) {
+            assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6);
+        }
+        // Every rank compresses exactly its own chunk (compress_s > 0
+        // everywhere), but only root decompresses.
+        for (rank, (_, m)) in out.iter().enumerate() {
+            assert!(m.compress_s > 0.0, "rank {rank} compresses its chunk");
+            if rank != 0 {
+                assert_eq!(m.decompress_s, 0.0, "rank {rank} must not decompress");
+            }
+        }
+    }
+
+    #[test]
+    fn cprp2p_bounded_by_depth() {
+        let n = 8;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let mine = rank_chunk(c.rank(), 1024);
+            let mut m = Metrics::default();
+            gather(
+                c,
+                &mine,
+                0,
+                &Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap()
+        });
+        let want: Vec<f32> = (0..n).flat_map(|r| rank_chunk(r, 1024)).collect();
+        let root_out = out[0].as_ref().unwrap();
+        for (a, b) in root_out.iter().zip(&want) {
+            assert!((a - b).abs() as f64 <= 3.0 * eb * 1.01 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! Compression-accelerated collective operations — the paper's core
+//! contribution.
+//!
+//! Every collective is implemented in four modes (Table 6):
+//!
+//! | mode       | data movement (§3.1.1)            | computation (§3.1.2)              |
+//! |------------|-----------------------------------|-----------------------------------|
+//! | `Plain`    | no compression (original MPI)     | no compression                    |
+//! | `Cprp2p`   | compress before EVERY send, decompress after EVERY recv (Zhou et al.) |
+//! | `CColl`    | compress-once framework, SZx      | compressed RS, no overlap (IPDPS'24 C-Coll) |
+//! | `Zccl`     | compress-once + balanced pipeline | PIPE-fZ-light overlap (§3.5.2)    |
+//!
+//! The collectives are synchronous SPMD functions over a [`Communicator`]:
+//! all ranks of the communicator must call the same operation in the same
+//! order (MPI semantics). Timing is attributed per phase through
+//! [`crate::coordinator::Metrics`].
+
+pub mod allgather;
+pub mod allreduce;
+pub mod alltoall;
+pub mod bcast;
+pub mod gather;
+pub mod reduce;
+pub mod reduce_scatter;
+pub mod scatter;
+
+pub use allgather::allgather;
+pub use allreduce::allreduce;
+pub use alltoall::alltoall;
+pub use bcast::bcast;
+pub use gather::gather;
+pub use reduce::reduce;
+pub use reduce_scatter::reduce_scatter;
+pub use scatter::scatter;
+
+use crate::compress::{CompressorKind, ErrorBound};
+use crate::transport::memchan::MemFabric;
+use crate::transport::Transport;
+use crate::Result;
+
+/// The reduction operators the paper analyses (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Elementwise sum (Theorem 1).
+    Sum,
+    /// Elementwise mean (Corollary 2): sum followed by a `1/n` scale.
+    Avg,
+    /// Elementwise maximum (Theorem 2).
+    Max,
+    /// Elementwise minimum (Theorem 2).
+    Min,
+}
+
+impl ReduceOp {
+    /// Fold `src` into `acc` elementwise.
+    #[inline]
+    pub fn fold(self, acc: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(acc.len(), src.len());
+        match self {
+            ReduceOp::Sum | ReduceOp::Avg => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a += s;
+                }
+            }
+            ReduceOp::Max => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a = a.max(*s);
+                }
+            }
+            ReduceOp::Min => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a = a.min(*s);
+                }
+            }
+        }
+    }
+
+    /// Final scaling (only `Avg` rescales by the communicator size).
+    #[inline]
+    pub fn finish(self, acc: &mut [f32], n: usize) {
+        if self == ReduceOp::Avg {
+            let inv = 1.0 / n as f32;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+        }
+    }
+}
+
+/// Which collective framework to run (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Original MPI — no compression.
+    Plain,
+    /// Compression-enabled point-to-point (compress/decompress every hop).
+    Cprp2p,
+    /// The IPDPS'24 C-Coll baseline (SZx, compress-once, no overlap).
+    CColl,
+    /// This paper: compress-once + balanced pipeline + PIPE overlap.
+    Zccl,
+}
+
+/// Full mode description for a collective call.
+#[derive(Debug, Clone, Copy)]
+pub struct Mode {
+    /// Framework.
+    pub algo: Algo,
+    /// Codec for the compressed modes.
+    pub kind: CompressorKind,
+    /// Error bound (fixed-accuracy).
+    pub eb: ErrorBound,
+    /// Use the rayon multi-thread codec wrappers.
+    pub multithread: bool,
+    /// PIPE-fZ-light chunk size in values (paper: 5120).
+    pub pipe_chunk: usize,
+    /// Fixed pipeline segment size in bytes for the balanced allgather
+    /// (§3.5.1 "fixed pipeline size").
+    pub pipeline_bytes: usize,
+}
+
+impl Mode {
+    /// Original MPI, no compression.
+    pub fn plain() -> Mode {
+        Mode {
+            algo: Algo::Plain,
+            kind: CompressorKind::FzLight,
+            eb: ErrorBound::Abs(0.0),
+            multithread: false,
+            pipe_chunk: crate::compress::fzlight::DEFAULT_CHUNK,
+            pipeline_bytes: 1 << 16,
+        }
+    }
+    /// CPRP2P with the given codec.
+    pub fn cprp2p(kind: CompressorKind, eb: ErrorBound) -> Mode {
+        Mode { algo: Algo::Cprp2p, kind, eb, ..Mode::plain() }
+    }
+    /// The C-Coll baseline (always SZx, per the paper).
+    pub fn ccoll(eb: ErrorBound) -> Mode {
+        Mode { algo: Algo::CColl, kind: CompressorKind::Szx, eb, ..Mode::plain() }
+    }
+    /// ZCCL with the given codec.
+    pub fn zccl(kind: CompressorKind, eb: ErrorBound) -> Mode {
+        Mode { algo: Algo::Zccl, kind, eb, ..Mode::plain() }
+    }
+    /// Toggle the multi-thread codec wrappers.
+    pub fn with_multithread(mut self, mt: bool) -> Mode {
+        self.multithread = mt;
+        self
+    }
+    /// Override the PIPE chunk size (values).
+    pub fn with_pipe_chunk(mut self, values: usize) -> Mode {
+        self.pipe_chunk = values;
+        self
+    }
+
+    /// Whether this mode compresses at all.
+    pub fn compresses(&self) -> bool {
+        self.algo != Algo::Plain
+    }
+
+    /// Build the (possibly multithreaded) codec for this mode.
+    pub fn codec(&self) -> Box<dyn crate::compress::Compressor> {
+        if self.multithread {
+            Box::new(crate::compress::multithread::MtCompressor::with_chunk(
+                self.kind,
+                self.pipe_chunk,
+            ))
+        } else {
+            match self.kind {
+                CompressorKind::FzLight => {
+                    Box::new(crate::compress::FzLight::with_chunk(self.pipe_chunk))
+                }
+                CompressorKind::Szx => {
+                    Box::new(crate::compress::Szx::with_chunk(self.pipe_chunk))
+                }
+                other => crate::compress::build(other),
+            }
+        }
+    }
+}
+
+/// A communicator: a transport endpoint plus collective-call tag
+/// sequencing. All ranks must issue collectives in the same order.
+pub struct Communicator<'a> {
+    t: &'a mut dyn Transport,
+    next_tag: u64,
+}
+
+impl<'a> Communicator<'a> {
+    /// Wrap a transport endpoint.
+    pub fn new(t: &'a mut dyn Transport) -> Self {
+        Communicator { t, next_tag: 0 }
+    }
+    /// This rank.
+    pub fn rank(&self) -> usize {
+        self.t.rank()
+    }
+    /// Communicator size.
+    pub fn size(&self) -> usize {
+        self.t.size()
+    }
+    /// Reserve a tag range for one collective call (deterministic across
+    /// ranks because call order is identical).
+    pub fn fresh_tags(&mut self, count: u64) -> u64 {
+        let base = self.next_tag;
+        self.next_tag += count;
+        base
+    }
+    /// Access the raw transport.
+    pub fn transport(&mut self) -> &mut dyn Transport {
+        self.t
+    }
+    /// Synchronise all ranks.
+    pub fn barrier(&mut self) -> Result<()> {
+        let gen = self.fresh_tags(1);
+        self.t.barrier(gen)
+    }
+}
+
+/// Spawn `n` in-process ranks, each running `f` over its own
+/// [`Communicator`]; returns the per-rank results in rank order.
+pub fn run_ranks<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(&mut Communicator) -> R + Send + Sync + 'static,
+{
+    MemFabric::run(n, move |t| {
+        let mut comm = Communicator::new(t);
+        f(&mut comm)
+    })
+}
+
+/// Split `total` elements into `n` contiguous chunks (first `total % n`
+/// chunks get one extra element — MPI's standard partitioning).
+pub fn chunk_ranges(total: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    let base = total / n;
+    let rem = total % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Encode an `f32` slice little-endian.
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a little-endian `f32` buffer.
+pub fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(crate::Error::corrupt(format!("byte length {} not 4-aligned", b.len())));
+    }
+    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Exchange one `u32` per rank over the ring (the §3.5.1 size
+/// synchronisation: "as the compressed data size only has four bytes,
+/// this step is very fast"). Returns the value from every rank.
+pub(crate) fn exchange_sizes(
+    comm: &mut Communicator,
+    mine: u32,
+    tag_base: u64,
+) -> Result<Vec<u32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let mut sizes = vec![0u32; n];
+    sizes[me] = mine;
+    let ring = crate::topology::ring(me, n);
+    for round in 0..n.saturating_sub(1) {
+        let send_idx = crate::topology::ring_send_chunk(me, round, n);
+        let recv_idx = crate::topology::ring_recv_chunk(me, round, n);
+        comm.t.send(ring.next, tag_base + round as u64, &sizes[send_idx].to_le_bytes())?;
+        let m = comm.t.recv(ring.prev, tag_base + round as u64)?;
+        sizes[recv_idx] =
+            u32::from_le_bytes(m.as_slice().try_into().map_err(|_| {
+                crate::Error::corrupt("size exchange message must be 4 bytes")
+            })?);
+    }
+    Ok(sizes)
+}
+
+/// Send `data` as fixed-size pipeline segments (§3.5.1's balanced
+/// communication). The receiver knows the total from the size table.
+pub(crate) fn send_segmented(
+    t: &mut dyn Transport,
+    to: usize,
+    tag_base: u64,
+    data: &[u8],
+    segment: usize,
+) -> Result<u64> {
+    let mut sent = 0u64;
+    if data.is_empty() {
+        t.send(to, tag_base, &[])?;
+        return Ok(0);
+    }
+    for (i, seg) in data.chunks(segment.max(1)).enumerate() {
+        t.send(to, tag_base + i as u64, seg)?;
+        sent += seg.len() as u64;
+    }
+    Ok(sent)
+}
+
+/// Receive a `total`-byte message sent by [`send_segmented`].
+pub(crate) fn recv_segmented(
+    t: &mut dyn Transport,
+    from: usize,
+    tag_base: u64,
+    total: usize,
+    segment: usize,
+) -> Result<Vec<u8>> {
+    if total == 0 {
+        t.recv(from, tag_base)?;
+        return Ok(Vec::new());
+    }
+    let mut out = Vec::with_capacity(total);
+    let nseg = total.div_ceil(segment.max(1));
+    for i in 0..nseg {
+        let seg = t.recv(from, tag_base + i as u64)?;
+        out.extend_from_slice(&seg);
+    }
+    if out.len() != total {
+        return Err(crate::Error::corrupt(format!(
+            "segmented recv got {} of {total} bytes",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+/// Maximum tags a single segmented transfer may consume (tag arithmetic
+/// budget per round).
+pub(crate) const SEG_TAG_SPAN: u64 = 1 << 20;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover() {
+        for (total, n) in [(10usize, 3usize), (9, 3), (1, 4), (0, 2), (100, 7)] {
+            let r = chunk_ranges(total, n);
+            assert_eq!(r.len(), n);
+            assert_eq!(r[0].start, 0);
+            assert_eq!(r[n - 1].end, total);
+            for w in r.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            // Sizes differ by at most 1.
+            let lens: Vec<usize> = r.iter().map(|x| x.len()).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1);
+        }
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&v)).unwrap(), v);
+        assert!(bytes_to_f32s(&[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn size_exchange_all_ranks() {
+        let n = 5;
+        let out = run_ranks(n, move |c| {
+            let tag = c.fresh_tags(n as u64);
+            exchange_sizes(c, (c.rank() * 10) as u32, tag).unwrap()
+        });
+        for sizes in out {
+            assert_eq!(sizes, vec![0, 10, 20, 30, 40]);
+        }
+    }
+
+    #[test]
+    fn segmented_roundtrip() {
+        let out = run_ranks(2, |c| {
+            let tag = c.fresh_tags(SEG_TAG_SPAN);
+            if c.rank() == 0 {
+                let data: Vec<u8> = (0..1000u32).map(|i| i as u8).collect();
+                send_segmented(c.t, 1, tag, &data, 64).unwrap();
+                Vec::new()
+            } else {
+                recv_segmented(c.t, 0, tag, 1000, 64).unwrap()
+            }
+        });
+        assert_eq!(out[1].len(), 1000);
+        assert_eq!(out[1][999], (999u32 & 0xff) as u8);
+    }
+
+    #[test]
+    fn reduce_op_folds() {
+        let mut acc = vec![1.0f32, 5.0, -2.0];
+        ReduceOp::Sum.fold(&mut acc, &[1.0, 1.0, 1.0]);
+        assert_eq!(acc, vec![2.0, 6.0, -1.0]);
+        ReduceOp::Max.fold(&mut acc, &[0.0, 10.0, 0.0]);
+        assert_eq!(acc, vec![2.0, 10.0, 0.0]);
+        ReduceOp::Min.fold(&mut acc, &[-5.0, 100.0, 0.5]);
+        assert_eq!(acc, vec![-5.0, 10.0, 0.0]);
+        let mut avg = vec![10.0f32, 20.0];
+        ReduceOp::Avg.finish(&mut avg, 4);
+        assert_eq!(avg, vec![2.5, 5.0]);
+    }
+}

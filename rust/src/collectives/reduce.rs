@@ -1,0 +1,165 @@
+//! Binomial-tree reduce (to root) — a collective *computation* operation:
+//! each interior rank folds its children's partial results into its local
+//! buffer before forwarding upward, so the transferred data is updated at
+//! every level (compression cannot be hoisted; §3.1.2 applies).
+//!
+//! - `Plain`: raw partials.
+//! - `Cprp2p`/`CColl`: blocking compress → send per up-link.
+//! - `Zccl`: the up-link compression runs PIPE-fZ-light and polls the
+//!   outstanding child receives between chunks (the computation-framework
+//!   overlap, same as the ring reduce-scatter).
+
+use super::{bytes_to_f32s, f32s_to_bytes, Algo, Communicator, Mode, ReduceOp};
+use crate::compress::{CompressorKind, PipeFzLight};
+use crate::coordinator::{Metrics, Phase};
+use crate::topology::{binomial_bcast, tree_rounds};
+use crate::{Error, Result};
+
+/// Reduce `input` elementwise onto `root`; root returns `Some(result)`.
+pub fn reduce(
+    comm: &mut Communicator,
+    input: &[f32],
+    op: ReduceOp,
+    root: usize,
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Option<Vec<f32>>> {
+    let n = comm.size();
+    let me = comm.rank();
+    if root >= n {
+        return Err(Error::invalid(format!("root {root} out of {n}")));
+    }
+    let mut acc = input.to_vec();
+    if n == 1 {
+        op.finish(&mut acc, 1);
+        return Ok(Some(acc));
+    }
+    let base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let (parent_step, child_steps) = binomial_bcast(me, root, n);
+    m.raw_bytes += (input.len() * 4) as u64;
+
+    // Fold children (deepest subtree first = reverse round order).
+    for s in child_steps.iter().rev() {
+        let tag = base + s.round as u64;
+        let t0 = std::time::Instant::now();
+        let msg = comm.t.recv(s.peer, tag)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += msg.len() as u64;
+        let partial = match mode.algo {
+            Algo::Plain => bytes_to_f32s(&msg)?,
+            _ => m.time(Phase::Decompress, || crate::compress::decompress(&msg))?,
+        };
+        if partial.len() != acc.len() {
+            return Err(Error::corrupt("reduce partial length mismatch"));
+        }
+        m.time(Phase::Compute, || op.fold(&mut acc, &partial));
+    }
+
+    if me == root {
+        op.finish(&mut acc, n);
+        return Ok(Some(acc));
+    }
+
+    // Send the partial up.
+    let step = parent_step.expect("non-root has a parent");
+    let tag = base + step.round as u64;
+    let wire = match mode.algo {
+        Algo::Plain => f32s_to_bytes(&acc),
+        Algo::Zccl if mode.kind == CompressorKind::FzLight && !mode.multithread => {
+            // No receive is outstanding at this point (children drained),
+            // but the PIPE codec is still the right compressor: its chunked
+            // frame lets the parent start decompressing earlier in a
+            // streaming transport. Hook polls nothing here.
+            let pipe = PipeFzLight::with_chunk(mode.pipe_chunk);
+            let t0 = std::time::Instant::now();
+            let c = pipe.compress_with_progress(&acc, mode.eb, &mut |_| {})?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            c.bytes
+        }
+        _ => m.time(Phase::Compress, || mode.codec().compress(&acc, mode.eb))?.bytes,
+    };
+    let t0 = std::time::Instant::now();
+    comm.t.send(step.peer, tag, &wire)?;
+    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+    m.bytes_sent += wire.len() as u64;
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_ranks;
+    use crate::compress::ErrorBound;
+    use crate::data::fields::{Field, FieldKind};
+
+    fn rank_input(rank: usize, len: usize) -> Vec<f32> {
+        Field::generate(FieldKind::Rtm, len, 60 + rank as u64).values
+    }
+
+    fn serial(n: usize, len: usize, op: ReduceOp) -> Vec<f32> {
+        let mut acc = rank_input(0, len);
+        for r in 1..n {
+            op.fold(&mut acc, &rank_input(r, len));
+        }
+        op.finish(&mut acc, n);
+        acc
+    }
+
+    #[test]
+    fn plain_matches_serial() {
+        for n in [2usize, 5, 8] {
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                reduce(c, &rank_input(c.rank(), 512), ReduceOp::Sum, 0, &Mode::plain(), &mut m)
+                    .unwrap()
+            });
+            let want = serial(n, 512, ReduceOp::Sum);
+            let got = out[0].as_ref().unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "n={n}: {a} vs {b}");
+            }
+            assert!(out[1..].iter().all(Option::is_none));
+        }
+    }
+
+    #[test]
+    fn zccl_sum_bounded_by_tree_depth() {
+        let n = 8;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let mut m = Metrics::default();
+            reduce(
+                c,
+                &rank_input(c.rank(), 4096),
+                ReduceOp::Sum,
+                0,
+                &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap()
+        });
+        let want = serial(n, 4096, ReduceOp::Sum);
+        let got = out[0].as_ref().unwrap();
+        // Each of the n-1 up-links injects at most ê into the sum chain.
+        let tol = (n as f64) * eb * 1.01 + 1e-5;
+        for (a, b) in got.iter().zip(&want) {
+            assert!(((a - b).abs() as f64) <= tol);
+        }
+    }
+
+    #[test]
+    fn avg_and_max() {
+        let n = 4;
+        for op in [ReduceOp::Avg, ReduceOp::Max] {
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                reduce(c, &rank_input(c.rank(), 300), op, 1, &Mode::plain(), &mut m).unwrap()
+            });
+            let want = serial(n, 300, op);
+            let got = out[1].as_ref().unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+}

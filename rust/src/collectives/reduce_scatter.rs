@@ -1,0 +1,309 @@
+//! Ring reduce-scatter — the paper's showcase for the **collective
+//! computation framework** (§3.1.2, Fig. 4, evaluated in Fig. 11).
+//!
+//! Unlike data movement, the transferred data is *updated* every round
+//! (partial sums), so compression cannot be hoisted out of the loop.
+//! Instead ZCCL hides communication inside compression: each round posts
+//! the nonblocking receive first, then runs `PIPE-fZ-light`, whose
+//! progress hook polls the receive between 5120-value chunks (§3.5.2).
+//!
+//! Mode behaviour per round:
+//! - `Plain`: send raw partials, receive, reduce.
+//! - `Cprp2p`: blocking compress → send → recv → decompress → reduce.
+//! - `CColl`: same structure as `Cprp2p` but with SZx (the IPDPS'24
+//!   baseline had no compression/communication overlap in this stage).
+//! - `Zccl`: irecv → PIPE-compress (polling) → send → wait →
+//!   PIPE-decompress (polling the next send's progress slot) → reduce.
+
+use super::{bytes_to_f32s, chunk_ranges, f32s_to_bytes, Algo, Communicator, Mode, ReduceOp};
+use crate::compress::{CompressorKind, PipeFzLight};
+use crate::coordinator::{Metrics, Phase};
+use crate::topology::{ring, ring_recv_chunk, ring_send_chunk};
+use crate::{Error, Result};
+
+/// Reduce `input` (same length on every rank) elementwise with `op` and
+/// scatter the result: rank `r` returns `(range, values)` where `range`
+/// is the slice of the logical result it owns (chunk `(r+1) mod n`).
+pub fn reduce_scatter(
+    comm: &mut Communicator,
+    input: &[f32],
+    op: ReduceOp,
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<(std::ops::Range<usize>, Vec<f32>)> {
+    let n = comm.size();
+    let me = comm.rank();
+    if n == 1 {
+        return Ok((0..input.len(), input.to_vec()));
+    }
+    let base = comm.fresh_tags(n as u64);
+    let ranges = chunk_ranges(input.len(), n);
+    let nb = ring(me, n);
+    let mut acc = input.to_vec();
+    m.raw_bytes += (input.len() * 4) as u64 * (n as u64 - 1) / n as u64 * 2;
+
+    match mode.algo {
+        Algo::Plain => {
+            for t in 0..n - 1 {
+                let s = &ranges[ring_send_chunk(me, t, n)];
+                let r = &ranges[ring_recv_chunk(me, t, n)];
+                let send_buf = f32s_to_bytes(&acc[s.clone()]);
+                let t0 = std::time::Instant::now();
+                comm.t.send(nb.next, base + t as u64, &send_buf)?;
+                m.bytes_sent += send_buf.len() as u64;
+                let got = comm.t.recv(nb.prev, base + t as u64)?;
+                m.bytes_recv += got.len() as u64;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                let partial = bytes_to_f32s(&got)?;
+                if partial.len() != r.len() {
+                    return Err(Error::corrupt("reduce_scatter partial length mismatch"));
+                }
+                m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
+            }
+        }
+        Algo::Cprp2p | Algo::CColl => {
+            let codec = mode.codec();
+            for t in 0..n - 1 {
+                let s = &ranges[ring_send_chunk(me, t, n)];
+                let r = &ranges[ring_recv_chunk(me, t, n)];
+                let send_plain = acc[s.clone()].to_vec();
+                let compressed =
+                    m.time(Phase::Compress, || codec.compress(&send_plain, mode.eb))?;
+                let t0 = std::time::Instant::now();
+                comm.t.send(nb.next, base + t as u64, &compressed.bytes)?;
+                m.bytes_sent += compressed.bytes.len() as u64;
+                let got = comm.t.recv(nb.prev, base + t as u64)?;
+                m.bytes_recv += got.len() as u64;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                let partial =
+                    m.time(Phase::Decompress, || crate::compress::decompress(&got))?;
+                if partial.len() != r.len() {
+                    return Err(Error::corrupt("reduce_scatter partial length mismatch"));
+                }
+                m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
+            }
+        }
+        Algo::Zccl => {
+            reduce_scatter_zccl(comm, &mut acc, &ranges, op, mode, base, m)?;
+        }
+    }
+
+    let owned = (me + 1) % n;
+    Ok((ranges[owned].clone(), acc[ranges[owned].clone()].to_vec()))
+}
+
+/// The §3.5.2 pipelined round: communication progress is pulled from
+/// inside compression and decompression.
+fn reduce_scatter_zccl(
+    comm: &mut Communicator,
+    acc: &mut [f32],
+    ranges: &[std::ops::Range<usize>],
+    op: ReduceOp,
+    mode: &Mode,
+    base: u64,
+    m: &mut Metrics,
+) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    let nb = ring(me, n);
+    // PIPE overlap requires the chunked fZ-light codec; other codecs fall
+    // back to the blocking structure (still compress-per-round — that is
+    // inherent to collective computation).
+    let pipe = (mode.kind == CompressorKind::FzLight && !mode.multithread)
+        .then(|| PipeFzLight::with_chunk(mode.pipe_chunk));
+    let codec = mode.codec();
+
+    for t in 0..n - 1 {
+        let s = &ranges[ring_send_chunk(me, t, n)];
+        let r = &ranges[ring_recv_chunk(me, t, n)];
+        let send_plain = acc[s.clone()].to_vec();
+        let tag = base + t as u64;
+
+        // Post the receive BEFORE compressing, then poll it from inside
+        // the compression loop.
+        let mut h = comm.t.irecv(nb.prev, tag);
+        let compressed = match &pipe {
+            Some(p) => {
+                let t0 = std::time::Instant::now();
+                let c = {
+                    let tr = &mut *comm.t;
+                    p.compress_with_progress(&send_plain, mode.eb, &mut |_| {
+                        let _ = tr.try_complete(&mut h);
+                    })?
+                };
+                // Time spent here covers compression AND the polls it
+                // absorbed — that is precisely the §3.5.2 effect (comm
+                // hidden inside compression).
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+                c
+            }
+            None => m.time(Phase::Compress, || codec.compress(&send_plain, mode.eb))?,
+        };
+
+        let t0 = std::time::Instant::now();
+        comm.t.send(nb.next, tag, &compressed.bytes)?;
+        m.bytes_sent += compressed.bytes.len() as u64;
+        let got = loop {
+            if comm.t.try_complete(&mut h)? {
+                break h.take().expect("completed");
+            }
+            std::hint::spin_loop();
+        };
+        m.bytes_recv += got.len() as u64;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+
+        // Decompress; with PIPE the hook would poll the outstanding send
+        // (our transport's sends are eager, so the hook is a no-op slot).
+        let partial = match &pipe {
+            Some(p) => {
+                let t0 = std::time::Instant::now();
+                let d = p.decompress_with_progress(&got, &mut |_| {})?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                d
+            }
+            None => m.time(Phase::Decompress, || crate::compress::decompress(&got))?,
+        };
+        if partial.len() != r.len() {
+            return Err(Error::corrupt("reduce_scatter partial length mismatch"));
+        }
+        m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_ranks;
+    use crate::compress::ErrorBound;
+    use crate::data::fields::{Field, FieldKind};
+
+    fn rank_input(rank: usize, len: usize) -> Vec<f32> {
+        Field::generate(FieldKind::Hurricane, len, 500 + rank as u64).values
+    }
+
+    fn serial_reduce(n: usize, len: usize, op: ReduceOp) -> Vec<f32> {
+        let mut acc = rank_input(0, len);
+        for r in 1..n {
+            op.fold(&mut acc, &rank_input(r, len));
+        }
+        acc
+    }
+
+    #[test]
+    fn plain_matches_serial_sum() {
+        let (n, len) = (4, 1000);
+        let out = run_ranks(n, move |c| {
+            let input = rank_input(c.rank(), len);
+            let mut m = Metrics::default();
+            reduce_scatter(c, &input, ReduceOp::Sum, &Mode::plain(), &mut m).unwrap()
+        });
+        let want = serial_reduce(n, len, ReduceOp::Sum);
+        for (rank, (range, vals)) in out.into_iter().enumerate() {
+            assert_eq!(range, chunk_ranges(len, n)[(rank + 1) % n]);
+            for (a, b) in vals.iter().zip(&want[range]) {
+                assert!((a - b).abs() < 1e-4, "rank {rank}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn plain_max_min() {
+        let (n, len) = (5, 777);
+        for op in [ReduceOp::Max, ReduceOp::Min] {
+            let out = run_ranks(n, move |c| {
+                let input = rank_input(c.rank(), len);
+                let mut m = Metrics::default();
+                reduce_scatter(c, &input, op, &Mode::plain(), &mut m).unwrap()
+            });
+            let want = serial_reduce(n, len, op);
+            for (range, vals) in out {
+                assert_eq!(vals.as_slice(), &want[range]);
+            }
+        }
+    }
+
+    #[test]
+    fn zccl_sum_within_aggregated_bound() {
+        // Theorem 1 (worst case): the aggregated error of the sum chain is
+        // at most (n-1)·ê deterministically.
+        let (n, len) = (6, 4096);
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let input = rank_input(c.rank(), len);
+            let mut m = Metrics::default();
+            reduce_scatter(
+                c,
+                &input,
+                ReduceOp::Sum,
+                &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap()
+        });
+        let want = serial_reduce(n, len, ReduceOp::Sum);
+        for (range, vals) in out {
+            for (a, b) in vals.iter().zip(&want[range]) {
+                let tol = (n as f64) * eb * 1.01 + 1e-5;
+                assert!(((a - b).abs() as f64) <= tol, "{a} vs {b} tol {tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_modes_agree_on_smooth_data() {
+        let (n, len) = (4, 2048);
+        let eb = 1e-4f64;
+        let want = serial_reduce(n, len, ReduceOp::Sum);
+        for mode in [
+            Mode::plain(),
+            Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+            Mode::ccoll(ErrorBound::Abs(eb)),
+            Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+            Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)).with_multithread(true),
+        ] {
+            let out = run_ranks(n, move |c| {
+                let input = rank_input(c.rank(), len);
+                let mut m = Metrics::default();
+                reduce_scatter(c, &input, ReduceOp::Sum, &mode, &mut m).unwrap()
+            });
+            for (range, vals) in out {
+                for (a, b) in vals.iter().zip(&want[range]) {
+                    assert!(
+                        ((a - b).abs() as f64) <= (n as f64) * eb * 1.01 + 1e-5,
+                        "mode {:?}: {a} vs {b}",
+                        mode.algo
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_length() {
+        let (n, len) = (3, 1001); // not divisible
+        let out = run_ranks(n, move |c| {
+            let input = rank_input(c.rank(), len);
+            let mut m = Metrics::default();
+            reduce_scatter(c, &input, ReduceOp::Sum, &Mode::plain(), &mut m).unwrap()
+        });
+        let want = serial_reduce(n, len, ReduceOp::Sum);
+        let mut covered = vec![false; len];
+        for (range, vals) in out {
+            for (i, v) in range.clone().zip(vals) {
+                assert!((v - want[i]).abs() < 1e-4);
+                covered[i] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "owned chunks must cover the input");
+    }
+
+    #[test]
+    fn single_rank() {
+        let out = run_ranks(1, |c| {
+            let mut m = Metrics::default();
+            reduce_scatter(c, &[3.0, 4.0], ReduceOp::Sum, &Mode::plain(), &mut m).unwrap()
+        });
+        assert_eq!(out[0].1, vec![3.0, 4.0]);
+    }
+}

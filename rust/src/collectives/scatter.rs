@@ -1,0 +1,349 @@
+//! Binomial-tree scatter — "Z-Scatter" (§4.5.2, evaluated Fig. 15).
+//!
+//! The root splits its buffer into `n` chunks; chunks travel down the
+//! binomial tree, each interior rank peeling off its own chunk and
+//! forwarding its children's subtree blocks.
+//!
+//! - `Plain`: raw subtree blocks.
+//! - `Cprp2p`: every hop compresses the *whole subtree value block*
+//!   before sending and decompresses it on arrival — repeated
+//!   (de)compression of the same data plus per-hop error accumulation.
+//! - `CColl`/`Zccl`: the root compresses **each rank's chunk once**,
+//!   individually; interior ranks forward the per-rank frames verbatim
+//!   and decompress only their own. One compression per chunk, one
+//!   decompression per rank, single-`ê` error.
+
+use super::{bytes_to_f32s, chunk_ranges, f32s_to_bytes, Algo, Communicator, Mode};
+use crate::compress::bits::le;
+use crate::coordinator::{Metrics, Phase};
+use crate::topology::{binomial_bcast, binomial_subtree, tree_rounds};
+use crate::{Error, Result};
+
+/// Scatter `data` (significant at `root`) so rank `r` receives chunk `r`
+/// of [`chunk_ranges`]`(data.len(), n)`.
+pub fn scatter(
+    comm: &mut Communicator,
+    data: Option<&[f32]>,
+    root: usize,
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    if root >= n {
+        return Err(Error::invalid(format!("root {root} out of {n}")));
+    }
+    if me == root && data.is_none() {
+        return Err(Error::invalid("root must supply data"));
+    }
+    if n == 1 {
+        return Ok(data.unwrap().to_vec());
+    }
+    match mode.algo {
+        Algo::Plain | Algo::Cprp2p => scatter_values(comm, data, root, mode, m),
+        Algo::CColl | Algo::Zccl => scatter_frames(comm, data, root, mode, m),
+    }
+}
+
+/// Plain / CPRP2P path: per-rank *values* travel the tree; CPRP2P
+/// compresses the concatenated subtree block once per hop.
+fn scatter_values(
+    comm: &mut Communicator,
+    data: Option<&[f32]>,
+    root: usize,
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let (recv_step, send_steps) = binomial_bcast(me, root, n);
+    let my_subtree = binomial_subtree(me, root, n);
+
+    // Obtain (total, per-subtree-rank values).
+    let (total, mut chunks): (usize, Vec<Vec<f32>>) = if me == root {
+        let d = data.unwrap();
+        m.raw_bytes += (d.len() * 4) as u64;
+        let ranges = chunk_ranges(d.len(), n);
+        (d.len(), my_subtree.iter().map(|&r| d[ranges[r].clone()].to_vec()).collect())
+    } else {
+        let step = recv_step.expect("non-root receives");
+        let t0 = std::time::Instant::now();
+        let msg = comm.t.recv(step.peer, base + step.round as u64)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += msg.len() as u64;
+        let mut pos = 0usize;
+        let total = le::get_u64(&msg, &mut pos)? as usize;
+        let body = &msg[pos..];
+        let values = match mode.algo {
+            Algo::Plain => bytes_to_f32s(body)?,
+            _ => m.time(Phase::Decompress, || crate::compress::decompress(body))?,
+        };
+        // Split the concatenated block into per-subtree-rank chunks.
+        let ranges = chunk_ranges(total, n);
+        let mut chunks = Vec::with_capacity(my_subtree.len());
+        let mut off = 0usize;
+        for &r in &my_subtree {
+            let len = ranges[r].len();
+            if off + len > values.len() {
+                return Err(Error::corrupt("scatter block shorter than subtree"));
+            }
+            chunks.push(values[off..off + len].to_vec());
+            off += len;
+        }
+        (total, chunks)
+    };
+
+    for s in send_steps {
+        let child_subtree = binomial_subtree(s.peer, root, n);
+        let mut block: Vec<f32> = Vec::new();
+        for r in &child_subtree {
+            let idx = my_subtree.iter().position(|x| x == r).expect("child in subtree");
+            block.extend_from_slice(&chunks[idx]);
+        }
+        let mut wire = Vec::with_capacity(12 + block.len() * 4);
+        le::put_u64(&mut wire, total as u64);
+        match mode.algo {
+            Algo::Plain => wire.extend_from_slice(&f32s_to_bytes(&block)),
+            _ => {
+                let frame = m.time(Phase::Compress, || mode.codec().compress(&block, mode.eb))?;
+                wire.extend_from_slice(&frame.bytes);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        comm.t.send(s.peer, base + s.round as u64, &wire)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_sent += wire.len() as u64;
+    }
+
+    Ok(std::mem::take(&mut chunks[0]))
+}
+
+/// CColl / ZCCL path: per-rank compressed *frames* travel the tree
+/// verbatim; only the owner decompresses.
+fn scatter_frames(
+    comm: &mut Communicator,
+    data: Option<&[f32]>,
+    root: usize,
+    mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let (recv_step, send_steps) = binomial_bcast(me, root, n);
+    let my_subtree = binomial_subtree(me, root, n);
+
+    let (total, mut frames): (usize, Vec<Vec<u8>>) = if me == root {
+        let d = data.unwrap();
+        m.raw_bytes += (d.len() * 4) as u64;
+        let ranges = chunk_ranges(d.len(), n);
+        let codec = mode.codec();
+        let mut fs = Vec::with_capacity(my_subtree.len());
+        for &r in &my_subtree {
+            let chunk = &d[ranges[r].clone()];
+            fs.push(m.time(Phase::Compress, || codec.compress(chunk, mode.eb))?.bytes);
+        }
+        (d.len(), fs)
+    } else {
+        let step = recv_step.expect("non-root receives");
+        let t0 = std::time::Instant::now();
+        let msg = comm.t.recv(step.peer, base + step.round as u64)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += msg.len() as u64;
+        parse_bundle(&msg, my_subtree.len())?
+    };
+
+    for s in send_steps {
+        let child_subtree = binomial_subtree(s.peer, root, n);
+        let parts: Vec<&[u8]> = child_subtree
+            .iter()
+            .map(|r| {
+                let idx = my_subtree.iter().position(|x| x == r).expect("child in subtree");
+                frames[idx].as_slice()
+            })
+            .collect();
+        let wire = encode_bundle(total, &parts);
+        let t0 = std::time::Instant::now();
+        comm.t.send(s.peer, base + s.round as u64, &wire)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_sent += wire.len() as u64;
+    }
+
+    // Decompress ONLY our own chunk, exactly once.
+    let mine = std::mem::take(&mut frames[0]);
+    let out = m.time(Phase::Decompress, || crate::compress::decompress(&mine))?;
+    let want_len = chunk_ranges(total, n)[me].len();
+    if out.len() != want_len {
+        return Err(Error::corrupt(format!(
+            "scatter rank {me}: got {} values, want {want_len}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+/// Bundle wire format: `u64 total`, `u32 count`, `u32 sizes[count]`,
+/// payloads.
+fn encode_bundle(total: usize, payloads: &[&[u8]]) -> Vec<u8> {
+    let body: usize = payloads.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(12 + 4 * payloads.len() + body);
+    le::put_u64(&mut out, total as u64);
+    le::put_u32(&mut out, payloads.len() as u32);
+    for p in payloads {
+        le::put_u32(&mut out, p.len() as u32);
+    }
+    for p in payloads {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+fn parse_bundle(msg: &[u8], expect: usize) -> Result<(usize, Vec<Vec<u8>>)> {
+    let mut pos = 0usize;
+    let total = le::get_u64(msg, &mut pos)? as usize;
+    let count = le::get_u32(msg, &mut pos)? as usize;
+    if count != expect {
+        return Err(Error::corrupt(format!("bundle count {count}, expected {expect}")));
+    }
+    let mut sizes = Vec::with_capacity(count);
+    for _ in 0..count {
+        sizes.push(le::get_u32(msg, &mut pos)? as usize);
+    }
+    let mut payloads = Vec::with_capacity(count);
+    for s in sizes {
+        let end = pos + s;
+        if end > msg.len() {
+            return Err(Error::corrupt("bundle payload past end"));
+        }
+        payloads.push(msg[pos..end].to_vec());
+        pos = end;
+    }
+    Ok((total, payloads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_ranks;
+    use crate::compress::{CompressorKind, ErrorBound};
+    use crate::data::fields::{Field, FieldKind};
+
+    fn payload(len: usize) -> Vec<f32> {
+        Field::generate(FieldKind::Cesm, len, 777).values
+    }
+
+    #[test]
+    fn plain_exact() {
+        for n in [2usize, 4, 5, 8, 11] {
+            for root in [0usize, n - 1] {
+                let len = 999;
+                let out = run_ranks(n, move |c| {
+                    let data = (c.rank() == root).then(|| payload(len));
+                    let mut m = Metrics::default();
+                    scatter(c, data.as_deref(), root, &Mode::plain(), &mut m).unwrap()
+                });
+                let want = payload(len);
+                let ranges = chunk_ranges(len, n);
+                for (rank, o) in out.into_iter().enumerate() {
+                    assert_eq!(
+                        o.as_slice(),
+                        &want[ranges[rank].clone()],
+                        "n={n} root={root} rank={rank}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zccl_single_eb_per_chunk() {
+        let n = 8;
+        let len = 8192;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let data = (c.rank() == 0).then(|| payload(len));
+            let mut m = Metrics::default();
+            let r = scatter(
+                c,
+                data.as_deref(),
+                0,
+                &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap();
+            (r, m)
+        });
+        let want = payload(len);
+        let ranges = chunk_ranges(len, n);
+        for (rank, (o, m)) in out.iter().enumerate() {
+            for (a, b) in o.iter().zip(&want[ranges[rank].clone()]) {
+                assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6, "rank {rank}");
+            }
+            if rank != 0 {
+                assert_eq!(m.compress_s, 0.0, "only root compresses");
+            }
+        }
+    }
+
+    #[test]
+    fn cprp2p_bounded_by_depth() {
+        let n = 8; // depth 3
+        let len = 4096;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let data = (c.rank() == 0).then(|| payload(len));
+            let mut m = Metrics::default();
+            scatter(
+                c,
+                data.as_deref(),
+                0,
+                &Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap()
+        });
+        let want = payload(len);
+        let ranges = chunk_ranges(len, n);
+        for (rank, o) in out.into_iter().enumerate() {
+            for (a, b) in o.iter().zip(&want[ranges[rank].clone()]) {
+                assert!((a - b).abs() as f64 <= 3.0 * eb * 1.01 + 1e-6, "rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn ccoll_bounded() {
+        let n = 6;
+        let len = 3000;
+        let eb = 1e-2f64;
+        let out = run_ranks(n, move |c| {
+            let data = (c.rank() == 2).then(|| payload(len));
+            let mut m = Metrics::default();
+            scatter(c, data.as_deref(), 2, &Mode::ccoll(ErrorBound::Abs(eb)), &mut m).unwrap()
+        });
+        let want = payload(len);
+        let ranges = chunk_ranges(len, n);
+        for (rank, o) in out.into_iter().enumerate() {
+            for (a, b) in o.iter().zip(&want[ranges[rank].clone()]) {
+                assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_total() {
+        let n = 4;
+        let len = 10; // 3,3,2,2
+        let out = run_ranks(n, move |c| {
+            let data = (c.rank() == 0).then(|| payload(len));
+            let mut m = Metrics::default();
+            scatter(c, data.as_deref(), 0, &Mode::plain(), &mut m).unwrap()
+        });
+        let want = payload(len);
+        let ranges = chunk_ranges(len, n);
+        for (rank, o) in out.into_iter().enumerate() {
+            assert_eq!(o.as_slice(), &want[ranges[rank].clone()]);
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Fast bit-level packing used by the fixed-length ("bit-shifting")
+//! encoding stages of fZ-light and SZx.
+//!
+//! Both compressors emit, per small block, a run of `width`-bit magnitudes.
+//! The writer keeps a 64-bit accumulator and spills whole bytes, which is
+//! the hot loop of compression; the reader mirrors it.
+
+/// Append-only bit writer over a byte vector.
+pub struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    /// Create a writer with the given byte-capacity hint.
+    pub fn with_capacity(cap: usize) -> Self {
+        BitWriter { out: Vec::with_capacity(cap), acc: 0, nbits: 0 }
+    }
+
+    /// Number of whole bytes emitted so far (excluding a partial tail).
+    #[inline]
+    pub fn byte_len(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Write the low `width` bits of `v` (LSB-first into the stream).
+    /// `width` must be <= 57 so the accumulator never overflows.
+    #[inline]
+    pub fn put(&mut self, v: u64, width: u32) {
+        debug_assert!(width <= 57);
+        debug_assert!(width == 64 || v < (1u64 << width));
+        self.acc |= v << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.out.push((self.acc & 0xff) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Write a wide value (up to 64 bits) as two limbs.
+    #[inline]
+    pub fn put_wide(&mut self, v: u64, width: u32) {
+        if width <= 57 {
+            self.put(v, width);
+        } else {
+            self.put(v & ((1u64 << 32) - 1), 32);
+            self.put(v >> 32, width - 32);
+        }
+    }
+
+    /// Flush the partial byte (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xff) as u8);
+        }
+        self.out
+    }
+
+    /// Flush the partial byte into the buffer and continue writing on a
+    /// byte boundary (used between blocks so each block is byte-aligned).
+    #[inline]
+    pub fn align(&mut self) {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xff) as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    /// Create a reader over `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    /// Byte offset of the next unread byte, counting the bits currently
+    /// held in the accumulator as consumed.
+    #[inline]
+    pub fn byte_pos_aligned(&self) -> usize {
+        self.pos
+    }
+
+    /// Read `width` bits (<= 57). Returns 0 bits past the end (the caller
+    /// validates stream length up front).
+    #[inline]
+    pub fn get(&mut self, width: u32) -> u64 {
+        debug_assert!(width <= 57);
+        while self.nbits < width {
+            let b = if self.pos < self.buf.len() { self.buf[self.pos] } else { 0 };
+            self.pos += 1;
+            self.acc |= (b as u64) << self.nbits;
+            self.nbits += 8;
+        }
+        let v = self.acc & (((1u64 << width) - 1) | if width == 64 { u64::MAX } else { 0 });
+        self.acc >>= width;
+        self.nbits -= width;
+        v
+    }
+
+    /// Read a wide value (up to 64 bits) as two limbs.
+    #[inline]
+    pub fn get_wide(&mut self, width: u32) -> u64 {
+        if width <= 57 {
+            self.get(width)
+        } else {
+            let lo = self.get(32);
+            let hi = self.get(width - 32);
+            lo | (hi << 32)
+        }
+    }
+
+    /// Discard buffered bits and continue from the next byte boundary.
+    #[inline]
+    pub fn align(&mut self) {
+        self.acc = 0;
+        self.nbits = 0;
+    }
+}
+
+/// Zero-allocation fixed-width packer: append `vals[..cnt]` as `width`-bit
+/// little-endian codes directly onto `out` (byte-aligned at the end).
+/// Layout is identical to a [`BitWriter`] `put_wide` sequence + `align`.
+/// This is the compression hot loop — no per-block allocations.
+#[inline]
+pub fn pack_fixed(out: &mut Vec<u8>, vals: &[u64], width: u32) {
+    debug_assert!(width >= 1 && width <= 64);
+    let mut acc = 0u64;
+    let mut nb = 0u32;
+    if width <= 57 {
+        for &v in vals {
+            debug_assert!(width == 64 || v < (1u64 << width));
+            acc |= v << nb;
+            nb += width;
+            // Spill a word at a time when possible (amortises the Vec
+            // bookkeeping), then bytes.
+            if nb >= 32 {
+                out.extend_from_slice(&(acc as u32).to_le_bytes());
+                acc >>= 32;
+                nb -= 32;
+            }
+            while nb >= 8 {
+                out.push(acc as u8);
+                acc >>= 8;
+                nb -= 8;
+            }
+        }
+    } else {
+        for &v in vals {
+            acc |= (v & 0xFFFF_FFFF) << nb;
+            nb += 32;
+            while nb >= 8 {
+                out.push(acc as u8);
+                acc >>= 8;
+                nb -= 8;
+            }
+            acc |= (v >> 32) << nb;
+            nb += width - 32;
+            while nb >= 8 {
+                out.push(acc as u8);
+                acc >>= 8;
+                nb -= 8;
+            }
+        }
+    }
+    if nb > 0 {
+        out.push(acc as u8);
+    }
+}
+
+/// Zero-allocation fixed-width unpacker matching [`pack_fixed`]: calls
+/// `f(index, value)` for each of `cnt` `width`-bit codes in `bytes`.
+#[inline]
+pub fn unpack_fixed(bytes: &[u8], cnt: usize, width: u32, mut f: impl FnMut(usize, u64)) {
+    debug_assert!(width >= 1 && width <= 64);
+    if width <= 57 {
+        let mask = (1u64 << width) - 1;
+        let mut acc = 0u64;
+        let mut nb = 0u32;
+        let mut ptr = 0usize;
+        for j in 0..cnt {
+            while nb < width {
+                let b = if ptr < bytes.len() { bytes[ptr] } else { 0 };
+                acc |= (b as u64) << nb;
+                nb += 8;
+                ptr += 1;
+            }
+            f(j, acc & mask);
+            acc >>= width;
+            nb -= width;
+        }
+    } else {
+        // Rare path (codes wider than 57 bits): lean on BitReader.
+        let mut r = BitReader::new(bytes);
+        for j in 0..cnt {
+            f(j, r.get_wide(width));
+        }
+    }
+}
+
+/// Little-endian primitive read/write helpers for frame headers.
+pub mod le {
+    use crate::{Error, Result};
+
+    /// Append a `u32` little-endian.
+    pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append a `u64` little-endian.
+    pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append an `f64` little-endian.
+    pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append an `f32` little-endian.
+    pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Read a `u32` at `*pos`, advancing it.
+    pub fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+        let end = *pos + 4;
+        let b = buf.get(*pos..end).ok_or_else(|| Error::corrupt("u32 past end"))?;
+        *pos = end;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+    /// Read a `u64` at `*pos`, advancing it.
+    pub fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+        let end = *pos + 8;
+        let b = buf.get(*pos..end).ok_or_else(|| Error::corrupt("u64 past end"))?;
+        *pos = end;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+    /// Read an `f64` at `*pos`, advancing it.
+    pub fn get_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+        let end = *pos + 8;
+        let b = buf.get(*pos..end).ok_or_else(|| Error::corrupt("f64 past end"))?;
+        *pos = end;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+    }
+    /// Read an `f32` at `*pos`, advancing it.
+    pub fn get_f32(buf: &[u8], pos: &mut usize) -> Result<f32> {
+        let end = *pos + 4;
+        let b = buf.get(*pos..end).ok_or_else(|| Error::corrupt("f32 past end"))?;
+        *pos = end;
+        Ok(f32::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::with_capacity(64);
+        let vals: Vec<(u64, u32)> = vec![
+            (0b1, 1),
+            (0b1011, 4),
+            (0x7f, 7),
+            (0x1_0000, 17),
+            (0, 3),
+            (0x1f_ffff, 21),
+            ((1u64 << 57) - 1, 57),
+        ];
+        for &(v, n) in &vals {
+            w.put(v, n);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &(v, n) in &vals {
+            assert_eq!(r.get(n), v, "width {n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_wide() {
+        let mut w = BitWriter::with_capacity(64);
+        let vals = [u64::MAX, 0, 1, 0xdead_beef_cafe_f00d];
+        for &v in &vals {
+            w.put_wide(v, 64);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &v in &vals {
+            assert_eq!(r.get_wide(64), v);
+        }
+    }
+
+    #[test]
+    fn align_is_byte_boundary() {
+        let mut w = BitWriter::with_capacity(16);
+        w.put(0b101, 3);
+        w.align();
+        w.put(0xab, 8);
+        let buf = w.finish();
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf[1], 0xab);
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.get(3), 0b101);
+        r.align();
+        assert_eq!(r.get(8), 0xab);
+    }
+
+    #[test]
+    fn zero_width_is_noop() {
+        let mut w = BitWriter::with_capacity(4);
+        w.put(0, 0);
+        w.put(0b11, 2);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.get(0), 0);
+        assert_eq!(r.get(2), 0b11);
+    }
+
+    #[test]
+    fn le_roundtrip() {
+        let mut out = Vec::new();
+        le::put_u32(&mut out, 0xdeadbeef);
+        le::put_u64(&mut out, 42);
+        le::put_f64(&mut out, -1.5);
+        le::put_f32(&mut out, 3.25);
+        let mut pos = 0;
+        assert_eq!(le::get_u32(&out, &mut pos).unwrap(), 0xdeadbeef);
+        assert_eq!(le::get_u64(&out, &mut pos).unwrap(), 42);
+        assert_eq!(le::get_f64(&out, &mut pos).unwrap(), -1.5);
+        assert_eq!(le::get_f32(&out, &mut pos).unwrap(), 3.25);
+        assert!(le::get_u32(&out, &mut pos).is_err());
+    }
+}

@@ -1,0 +1,381 @@
+//! `fZ-light` (SZp-style) ultra-fast error-bounded lossy compressor.
+//!
+//! Algorithm (paper §3.3): the input is split into *chunks* (the paper's
+//! thread-blocks; also the pipelining granularity of §3.5.2), each chunk is
+//! quantized and Lorenzo-predicted in one fused pass —
+//!
+//! ```text
+//! q[i] = round(x[i] / (2·eb))          (error-bounded quantization)
+//! d[i] = q[i] - q[i-1]                 (1-D Lorenzo prediction)
+//! ```
+//!
+//! — the chunk's first quantized value is stored verbatim as an *outlier*,
+//! and the deltas are grouped into 32-value *blocks*. Per block the encoder
+//! stores one `code length` byte `L = bits(max |d|)`; `L == 0` marks a
+//! **constant block** (all deltas zero — the dominant case on smooth
+//! scientific fields), otherwise the block's sign bits and `L`-bit
+//! magnitudes follow (the paper's "ultra-fast bit-shifting encoding").
+//!
+//! Reconstruction is `x̂[i] = 2·eb · q[i]`, so `|x - x̂| <= eb` for every
+//! element — the fixed-accuracy guarantee the collectives build on.
+//!
+//! ## Frame body layout (after the common header)
+//!
+//! ```text
+//! u32 chunk_values              values per chunk (last chunk may be short)
+//! u32 nchunks
+//! u32 chunk_bytes[nchunks]      compressed size of each chunk payload
+//! u8  payload[...]              chunk payloads, concatenated
+//! ```
+//!
+//! The chunk-size index at the *head* of the buffer is exactly the §3.5.2
+//! customization: it lets [`super::pipe::PipeFzLight`] interleave
+//! communication progress between chunks, and lets
+//! [`super::multithread`] compress/decompress chunks in parallel.
+
+use super::bits::le;
+use super::traits::{
+    read_header, write_header, Compressed, CompressionStats, Compressor, CompressorKind,
+    ErrorBound, HEADER_LEN,
+};
+use crate::{Error, Result};
+
+/// Values per small encoding block (sign-bit + fixed-length group).
+pub const BLOCK: usize = 32;
+/// Default values per chunk (the paper's PIPE-fZ-light uses 5120).
+pub const DEFAULT_CHUNK: usize = 5120;
+
+/// The fZ-light compressor. `chunk_values` controls the pipelining /
+/// parallelism granularity; numerics are identical for any value.
+#[derive(Debug, Clone)]
+pub struct FzLight {
+    /// Values per chunk.
+    pub chunk_values: usize,
+}
+
+impl Default for FzLight {
+    fn default() -> Self {
+        FzLight { chunk_values: DEFAULT_CHUNK }
+    }
+}
+
+impl FzLight {
+    /// Construct with an explicit chunk size (values).
+    pub fn with_chunk(chunk_values: usize) -> Self {
+        assert!(chunk_values > 0, "chunk_values must be positive");
+        FzLight { chunk_values }
+    }
+}
+
+/// Compress one chunk: outlier + delta blocks. Returns the payload and the
+/// (blocks, constant_blocks) counts.
+///
+/// Hot path (see EXPERIMENTS.md §Perf): sign words and magnitudes are
+/// packed straight into the payload via [`super::bits::pack_fixed`] —
+/// zero allocations per block.
+pub(crate) fn compress_chunk(data: &[f32], twoeb: f64) -> (Vec<u8>, usize, usize) {
+    debug_assert!(!data.is_empty());
+    let inv = 1.0 / twoeb;
+    let q0 = quantize(data[0], inv);
+    let mut payload = Vec::with_capacity(16 + data.len() * 2);
+    payload.extend_from_slice(&q0.to_le_bytes());
+
+    let n_deltas = data.len() - 1;
+    let mut blocks = 0usize;
+    let mut constant = 0usize;
+    let mut prev = q0;
+    let mut mags = [0u64; BLOCK];
+    let mut b = 0;
+    while b < n_deltas {
+        let cnt = BLOCK.min(n_deltas - b);
+        let mut maxmag: u64 = 0;
+        let mut sign = 0u32;
+        // Two passes so the quantization loop auto-vectorises (the Lorenzo
+        // delta has a serial dependency; the quantize does not).
+        let mut qbuf = [0i64; BLOCK + 1];
+        qbuf[0] = prev;
+        for (slot, &x) in qbuf[1..1 + cnt].iter_mut().zip(&data[1 + b..1 + b + cnt]) {
+            *slot = quantize(x, inv);
+        }
+        prev = qbuf[cnt];
+        for j in 0..cnt {
+            let d = qbuf[j + 1] - qbuf[j];
+            mags[j] = d.unsigned_abs();
+            sign |= u32::from(d < 0) << j;
+            maxmag |= mags[j];
+        }
+        blocks += 1;
+        if maxmag == 0 {
+            constant += 1;
+            payload.push(0u8);
+        } else {
+            let bits = 64 - maxmag.leading_zeros();
+            payload.push(bits as u8);
+            // Sign section (byte-aligned; LSB-first == BitWriter layout),
+            // then fixed-length magnitudes.
+            payload.extend_from_slice(&sign.to_le_bytes()[..cnt.div_ceil(8)]);
+            super::bits::pack_fixed(&mut payload, &mags[..cnt], bits);
+        }
+        b += cnt;
+    }
+    (payload, blocks, constant)
+}
+
+/// Decompress one chunk of `cn` values into `out`.
+pub(crate) fn decompress_chunk(payload: &[u8], cn: usize, twoeb: f64, out: &mut Vec<f32>) -> Result<()> {
+    if payload.len() < 8 {
+        return Err(Error::corrupt("fzlight chunk shorter than outlier"));
+    }
+    let q0 = i64::from_le_bytes(payload[0..8].try_into().unwrap());
+    out.push((q0 as f64 * twoeb) as f32);
+    let mut q = q0;
+    let mut pos = 8usize;
+    let mut remaining = cn - 1;
+    while remaining > 0 {
+        let cnt = BLOCK.min(remaining);
+        let bits = *payload
+            .get(pos)
+            .ok_or_else(|| Error::corrupt("fzlight block header past end"))? as u32;
+        pos += 1;
+        if bits == 0 {
+            let x = (q as f64 * twoeb) as f32;
+            out.resize(out.len() + cnt, x);
+        } else {
+            if bits > 64 {
+                return Err(Error::corrupt(format!("fzlight code length {bits} > 64")));
+            }
+            let sign_bytes = cnt.div_ceil(8);
+            let mag_bytes = (cnt * bits as usize).div_ceil(8);
+            let end = pos + sign_bytes + mag_bytes;
+            if end > payload.len() {
+                return Err(Error::corrupt("fzlight block body past end"));
+            }
+            let mut sign = 0u32;
+            for (k, &byte) in payload[pos..pos + sign_bytes].iter().enumerate() {
+                sign |= (byte as u32) << (8 * k);
+            }
+            super::bits::unpack_fixed(&payload[pos + sign_bytes..end], cnt, bits, |j, mag| {
+                let d = mag as i64;
+                q += if sign >> j & 1 == 1 { -d } else { d };
+                out.push((q as f64 * twoeb) as f32);
+            });
+            pos = end;
+        }
+        remaining -= cnt;
+    }
+    Ok(())
+}
+
+#[inline]
+fn quantize(x: f32, inv_twoeb: f64) -> i64 {
+    // `as` saturates on overflow, which keeps absurd bound/value
+    // combinations from UB; realistic bounds never get near the limit.
+    (x as f64 * inv_twoeb).round() as i64
+}
+
+/// Assemble a full frame from per-chunk payloads (shared with the
+/// multithreaded and pipelined paths).
+pub(crate) fn assemble_frame(
+    n: usize,
+    eb_abs: f64,
+    chunk_values: usize,
+    payloads: &[Vec<u8>],
+) -> Vec<u8> {
+    let total: usize = payloads.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(HEADER_LEN + 8 + 4 * payloads.len() + total);
+    write_header(&mut out, CompressorKind::FzLight, n, eb_abs);
+    le::put_u32(&mut out, chunk_values as u32);
+    le::put_u32(&mut out, payloads.len() as u32);
+    for p in payloads {
+        le::put_u32(&mut out, p.len() as u32);
+    }
+    for p in payloads {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Parsed view over a frame's chunk table: `(chunk_values, payload ranges)`.
+pub(crate) fn frame_chunks(bytes: &[u8]) -> Result<(usize, f64, usize, Vec<std::ops::Range<usize>>)> {
+    let h = read_header(bytes)?;
+    let mut pos = HEADER_LEN;
+    let chunk_values = le::get_u32(bytes, &mut pos)? as usize;
+    let nchunks = le::get_u32(bytes, &mut pos)? as usize;
+    if chunk_values == 0 && nchunks > 0 {
+        return Err(Error::corrupt("zero chunk_values"));
+    }
+    let mut sizes = Vec::with_capacity(nchunks);
+    for _ in 0..nchunks {
+        sizes.push(le::get_u32(bytes, &mut pos)? as usize);
+    }
+    let mut ranges = Vec::with_capacity(nchunks);
+    for s in sizes {
+        let end = pos + s;
+        if end > bytes.len() {
+            return Err(Error::corrupt("fzlight chunk table past frame end"));
+        }
+        ranges.push(pos..end);
+        pos = end;
+    }
+    Ok((chunk_values, h.eb_abs, h.n, ranges))
+}
+
+impl Compressor for FzLight {
+    fn kind(&self) -> CompressorKind {
+        CompressorKind::FzLight
+    }
+
+    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+        let eb_abs = eb.resolve(data);
+        if !(eb_abs > 0.0) || !eb_abs.is_finite() {
+            return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
+        }
+        let twoeb = 2.0 * eb_abs;
+        let mut payloads = Vec::with_capacity(data.len().div_ceil(self.chunk_values.max(1)));
+        let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
+        for chunk in data.chunks(self.chunk_values) {
+            let (p, blocks, constant) = compress_chunk(chunk, twoeb);
+            stats.blocks += blocks;
+            stats.constant_blocks += constant;
+            payloads.push(p);
+        }
+        let bytes = assemble_frame(data.len(), eb_abs, self.chunk_values, &payloads);
+        stats.compressed_bytes = bytes.len();
+        Ok(Compressed { bytes, stats })
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let (chunk_values, eb_abs, n, ranges) = frame_chunks(bytes)?;
+        let twoeb = 2.0 * eb_abs;
+        let mut out = Vec::with_capacity(n);
+        for (i, r) in ranges.iter().enumerate() {
+            let cn = if i + 1 == ranges.len() {
+                n.checked_sub(chunk_values * (ranges.len() - 1))
+                    .filter(|&c| c >= 1 && c <= chunk_values)
+                    .ok_or_else(|| Error::corrupt("chunk table inconsistent with count"))?
+            } else {
+                chunk_values
+            };
+            decompress_chunk(&bytes[r.clone()], cn, twoeb, &mut out)?;
+        }
+        if out.len() != n {
+            return Err(Error::corrupt(format!("decoded {} of {} values", out.len(), n)));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fields::{Field, FieldKind};
+
+    fn check_bound(orig: &[f32], dec: &[f32], eb: f64) {
+        assert_eq!(orig.len(), dec.len());
+        for (i, (a, b)) in orig.iter().zip(dec).enumerate() {
+            let err = (*a as f64 - *b as f64).abs();
+            // f32 rounding of the reconstruction adds at most ~1 ulp.
+            let tol = eb * (1.0 + 1e-5) + a.abs() as f64 * 1e-6;
+            assert!(err <= tol, "idx {i}: |{a} - {b}| = {err} > {eb}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_smooth_field_abs_bound() {
+        let f = Field::generate(FieldKind::Rtm, 20_000, 3);
+        let c = FzLight::default().compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        let d = FzLight::default().decompress(&c.bytes).unwrap();
+        check_bound(&f.values, &d, 1e-3);
+        assert!(c.stats.ratio() > 4.0, "smooth field should compress well, got {}", c.stats.ratio());
+    }
+
+    #[test]
+    fn roundtrip_all_field_kinds_rel_bounds() {
+        for kind in FieldKind::ALL {
+            for rel in [1e-1, 1e-2, 1e-3, 1e-4] {
+                let f = Field::generate(kind, 8192, 11);
+                let eb_abs = ErrorBound::Rel(rel).resolve(&f.values);
+                let c = FzLight::default().compress(&f.values, ErrorBound::Rel(rel)).unwrap();
+                let d = FzLight::default().decompress(&c.bytes).unwrap();
+                check_bound(&f.values, &d, eb_abs);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        for n in [1usize, 2, 3, 31, 32, 33, 5119, 5120, 5121] {
+            let data: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+            let c = FzLight::default().compress(&data, ErrorBound::Abs(1e-4)).unwrap();
+            let d = FzLight::default().decompress(&c.bytes).unwrap();
+            check_bound(&data, &d, 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = FzLight::default().compress(&[], ErrorBound::Abs(1e-4)).unwrap();
+        let d = FzLight::default().decompress(&c.bytes).unwrap();
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn constant_input_is_all_constant_blocks() {
+        let data = vec![2.5f32; 10_000];
+        let c = FzLight::default().compress(&data, ErrorBound::Abs(1e-4)).unwrap();
+        assert_eq!(c.stats.constant_blocks, c.stats.blocks);
+        assert!(c.stats.ratio() > 100.0, "ratio {}", c.stats.ratio());
+        let d = FzLight::default().decompress(&c.bytes).unwrap();
+        check_bound(&data, &d, 1e-4);
+    }
+
+    #[test]
+    fn noise_still_bounded() {
+        // Worst case for Lorenzo: white noise.
+        let mut rng = crate::data::rng::Rng::new(99);
+        let data: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let eb = 1e-5;
+        let c = FzLight::default().compress(&data, ErrorBound::Abs(eb)).unwrap();
+        let d = FzLight::default().decompress(&c.bytes).unwrap();
+        check_bound(&data, &d, eb);
+    }
+
+    #[test]
+    fn rejects_nonpositive_bound() {
+        assert!(FzLight::default().compress(&[1.0], ErrorBound::Abs(0.0)).is_err());
+        assert!(FzLight::default().compress(&[1.0], ErrorBound::Abs(-1.0)).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_frame() {
+        let data = vec![1.0f32; 1000];
+        let c = FzLight::default().compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+        for cut in [10, HEADER_LEN, c.bytes.len() - 1] {
+            assert!(FzLight::default().decompress(&c.bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_numerics() {
+        let f = Field::generate(FieldKind::Nyx, 12_345, 5);
+        let a = FzLight::with_chunk(512).compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        let b = FzLight::with_chunk(5120).compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        let da = FzLight::default().decompress(&a.bytes).unwrap();
+        let db = FzLight::default().decompress(&b.bytes).unwrap();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn smaller_bound_lower_ratio() {
+        let f = Field::generate(FieldKind::Hurricane, 32_768, 2);
+        let hi = FzLight::default().compress(&f.values, ErrorBound::Rel(1e-1)).unwrap();
+        let lo = FzLight::default().compress(&f.values, ErrorBound::Rel(1e-4)).unwrap();
+        assert!(
+            hi.stats.ratio() > lo.stats.ratio(),
+            "ratio(1e-1)={} should exceed ratio(1e-4)={}",
+            hi.stats.ratio(),
+            lo.stats.ratio()
+        );
+        assert!(hi.stats.constant_fraction() >= lo.stats.constant_fraction());
+    }
+}

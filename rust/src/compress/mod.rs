@@ -1,0 +1,80 @@
+//! Error-bounded lossy compressors for collective communication.
+//!
+//! This module is the paper's "performance optimization layer" substrate:
+//! from-scratch Rust implementations of the compressors the paper studies
+//! in §3.3 plus the pipelined customization of §3.5.2.
+//!
+//! - [`fzlight`] — `fZ-light` (a.k.a. SZp): fused 1-D Lorenzo prediction +
+//!   error-bounded quantization + ultra-fast fixed-length bit-shifting
+//!   encoding. The paper's chosen compressor.
+//! - [`pipe`] — `PIPE-fZ-light`: the §3.5.2 redesign that splits the stream
+//!   into fixed 5120-value chunks with a size index at the head of the
+//!   buffer so communication progress can be polled between chunks.
+//! - [`szx`] — SZx-style compressor: 128-value blocks classified as
+//!   constant (stored as the mid-range mean) or non-constant (fixed-length
+//!   coded residuals). Used by the C-Coll baseline.
+//! - [`zfp_like`] — a fixed-rate block-transform baseline standing in for
+//!   1-D ZFP in its fixed-rate (FXR) and fixed-accuracy (ABS) modes.
+//! - [`multithread`] — rayon-parallel wrappers (the paper's multi-thread
+//!   mode; thread scaling is *modeled* in [`crate::sim`] on this 1-core
+//!   host, see DESIGN.md §2).
+//! - [`stats`] — NRMSE / PSNR / bitrate / error-distribution tooling used
+//!   by Tables 3–4 and Figures 5–8.
+
+pub mod bits;
+pub mod fzlight;
+pub mod multithread;
+pub mod pipe;
+pub mod stats;
+pub mod szx;
+pub mod traits;
+pub mod zfp_like;
+
+pub use fzlight::FzLight;
+pub use multithread::MtCompressor;
+pub use pipe::PipeFzLight;
+pub use szx::Szx;
+pub use traits::{
+    Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound,
+};
+pub use zfp_like::{ZfpAbs, ZfpFixedRate};
+
+use crate::Result;
+
+/// Instantiate a compressor by kind with default tuning parameters.
+pub fn build(kind: CompressorKind) -> Box<dyn Compressor> {
+    match kind {
+        CompressorKind::FzLight => Box::new(FzLight::default()),
+        CompressorKind::Szx => Box::new(Szx::default()),
+        CompressorKind::ZfpAbs => Box::new(ZfpAbs::default()),
+        CompressorKind::ZfpFixedRate => Box::new(ZfpFixedRate::default()),
+    }
+}
+
+/// Compress with `kind`, returning the framed byte stream.
+pub fn compress(kind: CompressorKind, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+    build(kind).compress(data, eb)
+}
+
+/// Decompress a framed byte stream produced by any compressor in this
+/// module (the frame header records the codec).
+pub fn decompress(bytes: &[u8]) -> Result<Vec<f32>> {
+    let codec = traits::peek_codec(bytes)?;
+    build(codec).decompress(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fields::{Field, FieldKind};
+
+    #[test]
+    fn dispatch_roundtrip_all_codecs() {
+        let f = Field::generate(FieldKind::Cesm, 4096, 7);
+        for kind in CompressorKind::ALL {
+            let c = compress(kind, &f.values, ErrorBound::Rel(1e-3)).unwrap();
+            let d = decompress(&c.bytes).unwrap();
+            assert_eq!(d.len(), f.values.len(), "{kind:?} length");
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Multi-thread compression mode (the paper's "ZCCL (multi-thread)").
+//!
+//! fZ-light's and SZx's chunked frame layout makes chunks independent, so
+//! compression and decompression parallelise over chunks with rayon.
+//! Numerics and the emitted frame are **bit-identical** to the
+//! single-thread path — only wall-clock changes.
+//!
+//! NOTE (DESIGN.md §2): this container exposes a single core, so measured
+//! multi-thread speedup here is ~1×. The virtual-time simulator applies a
+//! calibrated thread-scaling model for the paper's multi-thread figures;
+//! this module keeps the *implementation* real and testable.
+
+use crate::util::par::{default_threads, par_map, par_map_chunks};
+
+use super::fzlight::{self};
+use super::szx::{self};
+use super::traits::{Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound};
+use crate::{Error, Result};
+
+/// Multi-threaded wrapper over a chunk-parallel codec.
+#[derive(Debug, Clone)]
+pub struct MtCompressor {
+    /// Underlying codec (FzLight and Szx parallelise; others run serially).
+    pub kind: CompressorKind,
+    /// Values per chunk.
+    pub chunk_values: usize,
+    /// Worker threads (defaults to the host's parallelism).
+    pub threads: usize,
+}
+
+impl MtCompressor {
+    /// Construct for `kind` with the codec's default chunk size.
+    pub fn new(kind: CompressorKind) -> Self {
+        MtCompressor { kind, chunk_values: fzlight::DEFAULT_CHUNK, threads: default_threads() }
+    }
+
+    /// Construct with an explicit chunk size and default threads.
+    pub fn with_chunk(kind: CompressorKind, chunk_values: usize) -> Self {
+        MtCompressor { kind, chunk_values, threads: default_threads() }
+    }
+}
+
+impl Compressor for MtCompressor {
+    fn kind(&self) -> CompressorKind {
+        self.kind
+    }
+
+    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+        let eb_abs = eb.resolve(data);
+        if !(eb_abs > 0.0) || !eb_abs.is_finite() {
+            return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
+        }
+        match self.kind {
+            CompressorKind::FzLight => {
+                let twoeb = 2.0 * eb_abs;
+                let parts: Vec<(Vec<u8>, usize, usize)> =
+                    par_map_chunks(data, self.chunk_values, self.threads, |chunk| {
+                        fzlight::compress_chunk(chunk, twoeb)
+                    });
+                let mut stats =
+                    CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
+                let payloads: Vec<Vec<u8>> = parts
+                    .into_iter()
+                    .map(|(p, b, c)| {
+                        stats.blocks += b;
+                        stats.constant_blocks += c;
+                        p
+                    })
+                    .collect();
+                let bytes =
+                    fzlight::assemble_frame(data.len(), eb_abs, self.chunk_values, &payloads);
+                stats.compressed_bytes = bytes.len();
+                Ok(Compressed { bytes, stats })
+            }
+            CompressorKind::Szx => {
+                // SZx chunks are independent too; reuse the serial encoder
+                // per chunk and assemble the same frame layout.
+                let parts: Vec<(Vec<u8>, usize, usize)> =
+                    par_map_chunks(data, self.chunk_values, self.threads, |chunk| {
+                        szx::compress_chunk(chunk, eb_abs)
+                    });
+                let mut stats =
+                    CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
+                let mut payloads = Vec::with_capacity(parts.len());
+                for (p, b, c) in parts {
+                    stats.blocks += b;
+                    stats.constant_blocks += c;
+                    payloads.push(p);
+                }
+                // Frame assembly mirrors Szx::compress.
+                use super::bits::le;
+                use super::traits::{write_header, HEADER_LEN};
+                let total: usize = payloads.iter().map(Vec::len).sum();
+                let mut bytes =
+                    Vec::with_capacity(HEADER_LEN + 8 + 4 * payloads.len() + total);
+                write_header(&mut bytes, CompressorKind::Szx, data.len(), eb_abs);
+                le::put_u32(&mut bytes, self.chunk_values as u32);
+                le::put_u32(&mut bytes, payloads.len() as u32);
+                for p in &payloads {
+                    le::put_u32(&mut bytes, p.len() as u32);
+                }
+                for p in &payloads {
+                    bytes.extend_from_slice(p);
+                }
+                stats.compressed_bytes = bytes.len();
+                Ok(Compressed { bytes, stats })
+            }
+            other => super::build(other).compress(data, ErrorBound::Abs(eb_abs)),
+        }
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        match self.kind {
+            CompressorKind::FzLight => {
+                let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
+                let twoeb = 2.0 * eb_abs;
+                let nchunks = ranges.len();
+                let parts: Vec<Result<Vec<f32>>> =
+                    par_map(&ranges, self.threads, |i, r| {
+                        let cn = if i + 1 == nchunks {
+                            n.checked_sub(chunk_values * (nchunks - 1))
+                                .filter(|&c| c >= 1 && c <= chunk_values)
+                                .ok_or_else(|| Error::corrupt("chunk table inconsistent"))?
+                        } else {
+                            chunk_values
+                        };
+                        let mut out = Vec::with_capacity(cn);
+                        fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, &mut out)?;
+                        Ok(out)
+                    });
+                let mut out = Vec::with_capacity(n);
+                for p in parts {
+                    out.extend_from_slice(&p?);
+                }
+                if out.len() != n {
+                    return Err(Error::corrupt("mt decode length mismatch"));
+                }
+                Ok(out)
+            }
+            other => super::build(other).decompress(bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fields::{Field, FieldKind};
+    use crate::compress::{FzLight, Szx};
+
+    #[test]
+    fn mt_fzlight_bit_identical_to_st() {
+        let f = Field::generate(FieldKind::Nyx, 40_000, 77);
+        let st = FzLight::default().compress(&f.values, ErrorBound::Rel(1e-3)).unwrap();
+        let mt = MtCompressor::new(CompressorKind::FzLight)
+            .compress(&f.values, ErrorBound::Rel(1e-3))
+            .unwrap();
+        assert_eq!(st.bytes, mt.bytes);
+        assert_eq!(st.stats.blocks, mt.stats.blocks);
+        assert_eq!(st.stats.constant_blocks, mt.stats.constant_blocks);
+    }
+
+    #[test]
+    fn mt_szx_bit_identical_to_st() {
+        let f = Field::generate(FieldKind::Cesm, 33_000, 78);
+        let st = Szx::default().compress(&f.values, ErrorBound::Rel(1e-2)).unwrap();
+        let mt = MtCompressor::new(CompressorKind::Szx)
+            .compress(&f.values, ErrorBound::Rel(1e-2))
+            .unwrap();
+        assert_eq!(st.bytes, mt.bytes);
+    }
+
+    #[test]
+    fn mt_decode_matches_st_decode() {
+        let f = Field::generate(FieldKind::Rtm, 50_000, 79);
+        let c = FzLight::default().compress(&f.values, ErrorBound::Abs(1e-4)).unwrap();
+        let st = FzLight::default().decompress(&c.bytes).unwrap();
+        let mt = MtCompressor::new(CompressorKind::FzLight).decompress(&c.bytes).unwrap();
+        assert_eq!(st, mt);
+    }
+}

@@ -1,0 +1,154 @@
+//! `PIPE-fZ-light` — the paper's §3.5.2 customization: compression and
+//! decompression proceed in fixed 5120-value chunks, and a caller-supplied
+//! *progress hook* runs between chunks. The collective computation
+//! framework passes a closure that polls nonblocking `Isend`/`Irecv`
+//! progress, hiding communication inside (de)compression.
+//!
+//! The emitted frame is bit-identical to [`super::FzLight`]'s: the chunk
+//! size index lives at the head of the buffer ("essentially a kind of
+//! index", §3.5.2), so either implementation decodes the other's output.
+
+use super::fzlight::{self, DEFAULT_CHUNK};
+use super::traits::{Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound};
+use crate::{Error, Result};
+
+/// Pipelined fZ-light. See the module docs.
+#[derive(Debug, Clone)]
+pub struct PipeFzLight {
+    /// Values per pipeline chunk (paper: 5120).
+    pub chunk_values: usize,
+}
+
+impl Default for PipeFzLight {
+    fn default() -> Self {
+        PipeFzLight { chunk_values: DEFAULT_CHUNK }
+    }
+}
+
+impl PipeFzLight {
+    /// Construct with an explicit chunk size.
+    pub fn with_chunk(chunk_values: usize) -> Self {
+        assert!(chunk_values > 0);
+        PipeFzLight { chunk_values }
+    }
+
+    /// Compress `data`, invoking `progress` after every chunk.
+    ///
+    /// The hook receives the number of values compressed so far; the
+    /// collective layer ignores the argument and simply polls its
+    /// outstanding nonblocking operations.
+    pub fn compress_with_progress(
+        &self,
+        data: &[f32],
+        eb: ErrorBound,
+        progress: &mut dyn FnMut(usize),
+    ) -> Result<Compressed> {
+        let eb_abs = eb.resolve(data);
+        if !(eb_abs > 0.0) || !eb_abs.is_finite() {
+            return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
+        }
+        let twoeb = 2.0 * eb_abs;
+        let mut payloads = Vec::with_capacity(data.len().div_ceil(self.chunk_values));
+        let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
+        let mut done = 0usize;
+        for chunk in data.chunks(self.chunk_values) {
+            let (p, blocks, constant) = fzlight::compress_chunk(chunk, twoeb);
+            stats.blocks += blocks;
+            stats.constant_blocks += constant;
+            payloads.push(p);
+            done += chunk.len();
+            progress(done);
+        }
+        let bytes = fzlight::assemble_frame(data.len(), eb_abs, self.chunk_values, &payloads);
+        stats.compressed_bytes = bytes.len();
+        Ok(Compressed { bytes, stats })
+    }
+
+    /// Decompress, invoking `progress` after every chunk. The
+    /// chunk-starting-location pointer walks the size index recorded at
+    /// the head of the frame.
+    pub fn decompress_with_progress(
+        &self,
+        bytes: &[u8],
+        progress: &mut dyn FnMut(usize),
+    ) -> Result<Vec<f32>> {
+        let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
+        let twoeb = 2.0 * eb_abs;
+        let mut out = Vec::with_capacity(n);
+        for (i, r) in ranges.iter().enumerate() {
+            let cn = if i + 1 == ranges.len() {
+                n.checked_sub(chunk_values * (ranges.len() - 1))
+                    .filter(|&c| c >= 1 && c <= chunk_values)
+                    .ok_or_else(|| Error::corrupt("chunk table inconsistent with count"))?
+            } else {
+                chunk_values
+            };
+            fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, &mut out)?;
+            progress(out.len());
+        }
+        if out.len() != n {
+            return Err(Error::corrupt(format!("decoded {} of {} values", out.len(), n)));
+        }
+        Ok(out)
+    }
+}
+
+impl Compressor for PipeFzLight {
+    fn kind(&self) -> CompressorKind {
+        CompressorKind::FzLight
+    }
+    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+        self.compress_with_progress(data, eb, &mut |_| {})
+    }
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        self.decompress_with_progress(bytes, &mut |_| {})
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::FzLight;
+    use crate::data::fields::{Field, FieldKind};
+
+    #[test]
+    fn identical_frames_to_fzlight() {
+        let f = Field::generate(FieldKind::Hurricane, 23_456, 8);
+        let a = FzLight::default().compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        let b = PipeFzLight::default().compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        assert_eq!(a.bytes, b.bytes, "pipe frame must be bit-identical");
+    }
+
+    #[test]
+    fn cross_decode() {
+        let f = Field::generate(FieldKind::Nyx, 9_000, 8);
+        let c = PipeFzLight::default().compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        let d1 = FzLight::default().decompress(&c.bytes).unwrap();
+        let d2 = PipeFzLight::default().decompress(&c.bytes).unwrap();
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn progress_called_per_chunk() {
+        let f = Field::generate(FieldKind::Rtm, 5120 * 3 + 100, 8);
+        let pipe = PipeFzLight::default();
+        let mut calls = Vec::new();
+        let c = pipe
+            .compress_with_progress(&f.values, ErrorBound::Abs(1e-3), &mut |done| calls.push(done))
+            .unwrap();
+        assert_eq!(calls, vec![5120, 10240, 15360, 15460]);
+        let mut dcalls = 0;
+        let d = pipe.decompress_with_progress(&c.bytes, &mut |_| dcalls += 1).unwrap();
+        assert_eq!(dcalls, 4);
+        assert_eq!(d.len(), f.values.len());
+    }
+
+    #[test]
+    fn custom_chunk_size() {
+        let f = Field::generate(FieldKind::Cesm, 10_000, 8);
+        let pipe = PipeFzLight::with_chunk(1000);
+        let mut calls = 0;
+        pipe.compress_with_progress(&f.values, ErrorBound::Abs(1e-3), &mut |_| calls += 1).unwrap();
+        assert_eq!(calls, 10);
+    }
+}

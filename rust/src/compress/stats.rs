@@ -1,0 +1,198 @@
+//! Compression-quality metrics and error-distribution tooling.
+//!
+//! Backs Table 4 (NRMSE + std), Figure 7 (rate-distortion: bitrate vs
+//! PSNR), and Figures 5–6 (compression errors are ~normally distributed,
+//! verified with a moment-based MLE fit).
+
+/// Pointwise reconstruction-quality metrics between `orig` and `dec`.
+#[derive(Debug, Clone, Copy)]
+pub struct Quality {
+    /// Root mean square error.
+    pub rmse: f64,
+    /// RMSE normalised by the value range (Table 4's NRMSE).
+    pub nrmse: f64,
+    /// Standard deviation of the pointwise absolute error (Table 4's STD).
+    pub err_std: f64,
+    /// Peak signal-to-noise ratio in dB (Fig. 7's y-axis).
+    pub psnr: f64,
+    /// Maximum absolute error (must stay <= eb for bounded codecs).
+    pub max_err: f64,
+    /// Value range of the original data.
+    pub range: f64,
+}
+
+/// Compute [`Quality`] between original and reconstructed data.
+pub fn quality(orig: &[f32], dec: &[f32]) -> Quality {
+    assert_eq!(orig.len(), dec.len(), "length mismatch");
+    let n = orig.len().max(1) as f64;
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let mut sq = 0.0f64;
+    let mut sum_abs = 0.0f64;
+    let mut sum_abs2 = 0.0f64;
+    let mut max_err = 0.0f64;
+    for (&a, &b) in orig.iter().zip(dec) {
+        let a = a as f64;
+        let e = a - b as f64;
+        lo = lo.min(a);
+        hi = hi.max(a);
+        sq += e * e;
+        let ae = e.abs();
+        sum_abs += ae;
+        sum_abs2 += ae * ae;
+        max_err = max_err.max(ae);
+    }
+    let range = if orig.is_empty() { 0.0 } else { hi - lo };
+    let rmse = (sq / n).sqrt();
+    let mean_abs = sum_abs / n;
+    let var_abs = (sum_abs2 / n - mean_abs * mean_abs).max(0.0);
+    Quality {
+        rmse,
+        nrmse: if range > 0.0 { rmse / range } else { 0.0 },
+        err_std: var_abs.sqrt(),
+        psnr: if rmse > 0.0 && range > 0.0 {
+            20.0 * (range / rmse).log10()
+        } else {
+            f64::INFINITY
+        },
+        max_err,
+        range,
+    }
+}
+
+/// Histogram of signed pointwise errors with a Gaussian MLE fit
+/// (Figures 5–6: compression errors follow ~N(μ, σ²) within ±ê).
+#[derive(Debug, Clone)]
+pub struct ErrorHistogram {
+    /// Bin left edges (uniform width).
+    pub edges: Vec<f64>,
+    /// Normalised density per bin.
+    pub density: Vec<f64>,
+    /// MLE mean of the errors.
+    pub mu: f64,
+    /// MLE standard deviation of the errors.
+    pub sigma: f64,
+    /// Goodness of fit: sup-norm distance between the empirical CDF and
+    /// the fitted normal CDF (a Kolmogorov–Smirnov statistic).
+    pub ks: f64,
+    /// Excess kurtosis (0 for a perfect normal).
+    pub excess_kurtosis: f64,
+}
+
+/// Build an [`ErrorHistogram`] from original/reconstructed data.
+pub fn error_histogram(orig: &[f32], dec: &[f32], bins: usize) -> ErrorHistogram {
+    assert_eq!(orig.len(), dec.len());
+    let mut errs: Vec<f64> =
+        orig.iter().zip(dec).map(|(&a, &b)| a as f64 - b as f64).collect();
+    let n = errs.len().max(1) as f64;
+    let mu = errs.iter().sum::<f64>() / n;
+    let var = errs.iter().map(|e| (e - mu) * (e - mu)).sum::<f64>() / n;
+    let sigma = var.sqrt();
+    let m4 = errs.iter().map(|e| (e - mu).powi(4)).sum::<f64>() / n;
+    let excess_kurtosis = if var > 0.0 { m4 / (var * var) - 3.0 } else { 0.0 };
+
+    let (lo, hi) = errs
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &e| (l.min(e), h.max(e)));
+    let width = ((hi - lo) / bins as f64).max(f64::MIN_POSITIVE);
+    let mut counts = vec![0usize; bins];
+    for &e in &errs {
+        let b = (((e - lo) / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let density: Vec<f64> = counts.iter().map(|&c| c as f64 / (n * width)).collect();
+    let edges: Vec<f64> = (0..bins).map(|i| lo + i as f64 * width).collect();
+
+    // KS statistic against N(mu, sigma).
+    errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut ks = 0.0f64;
+    if sigma > 0.0 {
+        for (i, &e) in errs.iter().enumerate() {
+            let f = normal_cdf((e - mu) / sigma);
+            let emp_hi = (i + 1) as f64 / n;
+            let emp_lo = i as f64 / n;
+            ks = ks.max((f - emp_lo).abs()).max((f - emp_hi).abs());
+        }
+    }
+    ErrorHistogram { edges, density, mu, sigma, ks, excess_kurtosis }
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun erf approximation
+/// (max abs error ~1.5e-7 — plenty for a KS statistic).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let s = x.signum();
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    s * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, ErrorBound, FzLight};
+    use crate::data::fields::{Field, FieldKind};
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn quality_identity_is_perfect() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let q = quality(&x, &x);
+        assert_eq!(q.rmse, 0.0);
+        assert_eq!(q.max_err, 0.0);
+        assert!(q.psnr.is_infinite());
+    }
+
+    #[test]
+    fn quality_known_values() {
+        let a = vec![0.0f32, 1.0];
+        let b = vec![0.5f32, 1.0];
+        let q = quality(&a, &b);
+        assert!((q.rmse - (0.125f64).sqrt()).abs() < 1e-12);
+        assert!((q.nrmse - (0.125f64).sqrt()).abs() < 1e-12);
+        assert_eq!(q.max_err, 0.5);
+    }
+
+    #[test]
+    fn erf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gaussian_sample_fits() {
+        let mut rng = Rng::new(3);
+        let orig: Vec<f32> = (0..50_000).map(|_| rng.normal() as f32).collect();
+        let dec: Vec<f32> =
+            orig.iter().map(|&v| v + 0.01 * rng.normal() as f32).collect();
+        let h = error_histogram(&orig, &dec, 64);
+        assert!(h.mu.abs() < 1e-3);
+        assert!((h.sigma - 0.01).abs() < 1e-3, "sigma {}", h.sigma);
+        assert!(h.ks < 0.02, "ks {}", h.ks);
+        assert!(h.excess_kurtosis.abs() < 0.2);
+    }
+
+    #[test]
+    fn fig5_fzlight_errors_are_normal_ish() {
+        // The paper's Fig. 5 premise: compression errors on real-ish fields
+        // fit a normal curve well. Verify the KS distance is small.
+        let f = Field::generate(FieldKind::Cesm, 1 << 16, 6);
+        let eb = ErrorBound::Rel(1e-3);
+        let c = FzLight::default().compress(&f.values, eb).unwrap();
+        let d = FzLight::default().decompress(&c.bytes).unwrap();
+        let h = error_histogram(&f.values, &d, 64);
+        // Quantization errors are bounded and roughly symmetric.
+        let ebv = eb.resolve(&f.values);
+        assert!(h.mu.abs() < 0.2 * ebv);
+        assert!(h.sigma < ebv);
+        assert!(h.ks < 0.15, "ks {}", h.ks);
+    }
+}

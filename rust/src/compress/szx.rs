@@ -1,0 +1,284 @@
+//! SZx-style error-bounded lossy compressor (the C-Coll baseline's codec).
+//!
+//! Algorithm (paper §3.3, following Yu et al. HPDC'22): the input is split
+//! into 128-value blocks. Per block the mid-range mean
+//! `μ = (min + max) / 2` is computed; if every value lies within
+//! `(μ − eb, μ + eb)` the block is a **constant block** stored as `μ`
+//! alone (this flattening is what produces the Fig. 8 stripe artifacts).
+//! Otherwise the block is **non-constant**: the residuals `x − μ` are
+//! quantized with step `2·eb` and stored with sign bits + fixed-length
+//! magnitudes — a bitwise-cheap stand-in for SZx's IEEE-754
+//! leading-zero analysis with identical error behaviour (`|x − x̂| <= eb`).
+//!
+//! Unlike fZ-light there is **no Lorenzo prediction**: coding operates on
+//! raw residuals, so smooth data compresses noticeably worse (Table 3) —
+//! exactly the property the paper's compressor study turns on.
+//!
+//! ## Frame body layout (after the common header)
+//!
+//! ```text
+//! u32 chunk_values
+//! u32 nchunks
+//! u32 chunk_bytes[nchunks]
+//! u8  payload[...]
+//! ```
+//!
+//! Chunk payloads hold a sequence of blocks:
+//! `u8 tag (0 = constant, else code length L)`, `f32 μ`, and for
+//! non-constant blocks `ceil(cnt/8)` sign bytes + `cnt` `L`-bit magnitudes.
+
+use super::bits::le;
+use super::traits::{
+    read_header, write_header, Compressed, CompressionStats, Compressor, CompressorKind,
+    ErrorBound, HEADER_LEN,
+};
+use crate::{Error, Result};
+
+/// Values per SZx block (the reference implementation's default).
+pub const BLOCK: usize = 128;
+/// Default values per chunk (multithread/pipeline granularity).
+pub const DEFAULT_CHUNK: usize = 5120;
+
+/// The SZx-style compressor.
+#[derive(Debug, Clone)]
+pub struct Szx {
+    /// Values per chunk.
+    pub chunk_values: usize,
+}
+
+impl Default for Szx {
+    fn default() -> Self {
+        Szx { chunk_values: DEFAULT_CHUNK }
+    }
+}
+
+impl Szx {
+    /// Construct with an explicit chunk size (values).
+    pub fn with_chunk(chunk_values: usize) -> Self {
+        assert!(chunk_values > 0);
+        Szx { chunk_values }
+    }
+}
+
+/// Compress one chunk. Returns (payload, blocks, constant_blocks).
+pub(crate) fn compress_chunk(data: &[f32], eb: f64) -> (Vec<u8>, usize, usize) {
+    let twoeb = 2.0 * eb;
+    let inv = 1.0 / twoeb;
+    let mut payload = Vec::with_capacity(8 + data.len());
+    let mut blocks = 0usize;
+    let mut constant = 0usize;
+    let mut mags = [0u64; BLOCK];
+    for block in data.chunks(BLOCK) {
+        blocks += 1;
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in block {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let mu = (lo as f64 + hi as f64) * 0.5;
+        if (hi as f64 - mu) <= eb {
+            payload.push(0u8);
+            payload.extend_from_slice(&(mu as f32).to_le_bytes());
+            constant += 1;
+            continue;
+        }
+        // Non-constant: fixed-length-code the quantized residuals
+        // (zero-allocation pack; see EXPERIMENTS.md §Perf).
+        let mut maxmag: u64 = 0;
+        let mut sign = 0u128; // BLOCK = 128 sign bits
+        for (j, &v) in block.iter().enumerate() {
+            let q = ((v as f64 - mu) * inv).round() as i64;
+            mags[j] = q.unsigned_abs();
+            sign |= u128::from(q < 0) << j;
+            maxmag |= mags[j];
+        }
+        let bits = (64 - maxmag.leading_zeros()).max(1);
+        payload.push(bits as u8);
+        payload.extend_from_slice(&(mu as f32).to_le_bytes());
+        payload.extend_from_slice(&sign.to_le_bytes()[..block.len().div_ceil(8)]);
+        super::bits::pack_fixed(&mut payload, &mags[..block.len()], bits);
+    }
+    (payload, blocks, constant)
+}
+
+/// Decompress one chunk of `cn` values into `out`.
+pub(crate) fn decompress_chunk(payload: &[u8], cn: usize, eb: f64, out: &mut Vec<f32>) -> Result<()> {
+    let twoeb = 2.0 * eb;
+    let mut pos = 0usize;
+    let mut remaining = cn;
+    while remaining > 0 {
+        let cnt = BLOCK.min(remaining);
+        let tag = *payload
+            .get(pos)
+            .ok_or_else(|| Error::corrupt("szx block tag past end"))? as u32;
+        pos += 1;
+        let mu = le::get_f32(payload, &mut pos)? as f64;
+        if tag == 0 {
+            let x = mu as f32;
+            for _ in 0..cnt {
+                out.push(x);
+            }
+        } else {
+            if tag > 64 {
+                return Err(Error::corrupt(format!("szx code length {tag} > 64")));
+            }
+            let sign_bytes = cnt.div_ceil(8);
+            let mag_bytes = (cnt * tag as usize).div_ceil(8);
+            let end = pos + sign_bytes + mag_bytes;
+            if end > payload.len() {
+                return Err(Error::corrupt("szx block body past end"));
+            }
+            let mut sign = 0u128;
+            for (k, &byte) in payload[pos..pos + sign_bytes].iter().enumerate() {
+                sign |= (byte as u128) << (8 * k);
+            }
+            super::bits::unpack_fixed(&payload[pos + sign_bytes..end], cnt, tag, |j, mag| {
+                let d = mag as i64;
+                let q = if sign >> j & 1 == 1 { -d } else { d };
+                out.push((mu + q as f64 * twoeb) as f32);
+            });
+            pos = end;
+        }
+        remaining -= cnt;
+    }
+    Ok(())
+}
+
+impl Compressor for Szx {
+    fn kind(&self) -> CompressorKind {
+        CompressorKind::Szx
+    }
+
+    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+        let eb_abs = eb.resolve(data);
+        if !(eb_abs > 0.0) || !eb_abs.is_finite() {
+            return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
+        }
+        let mut payloads = Vec::new();
+        let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
+        for chunk in data.chunks(self.chunk_values) {
+            let (p, blocks, constant) = compress_chunk(chunk, eb_abs);
+            stats.blocks += blocks;
+            stats.constant_blocks += constant;
+            payloads.push(p);
+        }
+        let total: usize = payloads.iter().map(Vec::len).sum();
+        let mut bytes = Vec::with_capacity(HEADER_LEN + 8 + 4 * payloads.len() + total);
+        write_header(&mut bytes, CompressorKind::Szx, data.len(), eb_abs);
+        le::put_u32(&mut bytes, self.chunk_values as u32);
+        le::put_u32(&mut bytes, payloads.len() as u32);
+        for p in &payloads {
+            le::put_u32(&mut bytes, p.len() as u32);
+        }
+        for p in &payloads {
+            bytes.extend_from_slice(p);
+        }
+        stats.compressed_bytes = bytes.len();
+        Ok(Compressed { bytes, stats })
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let h = read_header(bytes)?;
+        if h.codec != CompressorKind::Szx {
+            return Err(Error::corrupt("not an szx frame"));
+        }
+        let mut pos = HEADER_LEN;
+        let chunk_values = le::get_u32(bytes, &mut pos)? as usize;
+        let nchunks = le::get_u32(bytes, &mut pos)? as usize;
+        let mut sizes = Vec::with_capacity(nchunks);
+        for _ in 0..nchunks {
+            sizes.push(le::get_u32(bytes, &mut pos)? as usize);
+        }
+        let mut out = Vec::with_capacity(h.n);
+        for (i, s) in sizes.iter().enumerate() {
+            let end = pos + s;
+            if end > bytes.len() {
+                return Err(Error::corrupt("szx chunk past frame end"));
+            }
+            let cn = if i + 1 == nchunks {
+                h.n.checked_sub(chunk_values * (nchunks - 1))
+                    .filter(|&c| c >= 1 && c <= chunk_values)
+                    .ok_or_else(|| Error::corrupt("szx chunk table inconsistent"))?
+            } else {
+                chunk_values
+            };
+            decompress_chunk(&bytes[pos..end], cn, h.eb_abs, &mut out)?;
+            pos = end;
+        }
+        if out.len() != h.n {
+            return Err(Error::corrupt(format!("decoded {} of {} values", out.len(), h.n)));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::FzLight;
+    use crate::data::fields::{Field, FieldKind};
+
+    fn check_bound(orig: &[f32], dec: &[f32], eb: f64) {
+        assert_eq!(orig.len(), dec.len());
+        for (i, (a, b)) in orig.iter().zip(dec).enumerate() {
+            let err = (*a as f64 - *b as f64).abs();
+            let tol = eb * (1.0 + 1e-5) + a.abs() as f64 * 1e-6;
+            assert!(err <= tol, "idx {i}: |{a} - {b}| = {err} > {eb}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_kinds_and_bounds() {
+        for kind in FieldKind::ALL {
+            for rel in [1e-1, 1e-3] {
+                let f = Field::generate(kind, 10_000, 21);
+                let eb_abs = ErrorBound::Rel(rel).resolve(&f.values);
+                let c = Szx::default().compress(&f.values, ErrorBound::Rel(rel)).unwrap();
+                let d = Szx::default().decompress(&c.bytes).unwrap();
+                check_bound(&f.values, &d, eb_abs);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_field_collapses() {
+        let data = vec![-3.25f32; 4096];
+        let c = Szx::default().compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+        assert_eq!(c.stats.constant_blocks, c.stats.blocks);
+        let d = Szx::default().decompress(&c.bytes).unwrap();
+        check_bound(&data, &d, 1e-3);
+    }
+
+    #[test]
+    fn fzlight_beats_szx_on_smooth_data() {
+        // Table 3's key relationship: Lorenzo prediction gives fZ-light a
+        // higher ratio than SZx on the same field and bound.
+        let f = Field::generate(FieldKind::Cesm, 1 << 16, 12);
+        let eb = ErrorBound::Rel(1e-3);
+        let fz = FzLight::default().compress(&f.values, eb).unwrap();
+        let sz = Szx::default().compress(&f.values, eb).unwrap();
+        assert!(
+            fz.stats.ratio() > sz.stats.ratio(),
+            "fzlight {:.2} should beat szx {:.2}",
+            fz.stats.ratio(),
+            sz.stats.ratio()
+        );
+    }
+
+    #[test]
+    fn tiny_and_partial_blocks() {
+        for n in [1usize, 127, 128, 129, 4095, 4097] {
+            let data: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos() * 5.0).collect();
+            let c = Szx::default().compress(&data, ErrorBound::Abs(1e-4)).unwrap();
+            let d = Szx::default().decompress(&c.bytes).unwrap();
+            check_bound(&data, &d, 1e-4);
+        }
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let c = Szx::default().compress(&data, ErrorBound::Abs(1e-2)).unwrap();
+        assert!(Szx::default().decompress(&c.bytes[..c.bytes.len() - 1]).is_err());
+    }
+}

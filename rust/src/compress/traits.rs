@@ -1,0 +1,293 @@
+//! Common compressor interface, frame header and error-bound modes.
+//!
+//! Every codec in this crate emits a self-describing frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  = b"ZCCL"
+//! 4       1     version = 1
+//! 5       1     codec   (CompressorKind discriminant)
+//! 6       2     reserved
+//! 8       8     element count (u64)
+//! 16      8     absolute error bound actually used (f64; 0 for fixed-rate)
+//! 24      ...   codec-specific body
+//! ```
+//!
+//! The header makes [`crate::compress::decompress`] codec-agnostic, which
+//! the collectives rely on: a rank can decode chunks produced by any peer
+//! without out-of-band metadata.
+
+use super::bits::le;
+use crate::{Error, Result};
+
+/// Frame magic bytes.
+pub const MAGIC: [u8; 4] = *b"ZCCL";
+/// Frame format version.
+pub const VERSION: u8 = 1;
+/// Byte length of the common frame header.
+pub const HEADER_LEN: usize = 24;
+
+/// Error-bound specification, matching the paper's "fixed-accuracy" mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ErrorBound {
+    /// Absolute bound: `|x - x̂| <= eb` for every element.
+    Abs(f64),
+    /// Value-range-relative bound: `eb_abs = rel * (max(x) - min(x))`.
+    Rel(f64),
+}
+
+impl ErrorBound {
+    /// Resolve to an absolute bound for the given data.
+    ///
+    /// A degenerate (constant or empty) input resolves a relative bound
+    /// against a unit range so the bound stays positive.
+    pub fn resolve(&self, data: &[f32]) -> f64 {
+        match *self {
+            ErrorBound::Abs(e) => e,
+            ErrorBound::Rel(r) => {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &v in data {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let range = (hi - lo) as f64;
+                if range.is_finite() && range > 0.0 {
+                    r * range
+                } else {
+                    r
+                }
+            }
+        }
+    }
+}
+
+/// Codec identifiers (stored in the frame header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompressorKind {
+    /// fZ-light / SZp: Lorenzo + quantization + bit-shifting encoding.
+    FzLight,
+    /// SZx: constant-block + fixed-length residual coding.
+    Szx,
+    /// ZFP-like block transform, fixed-accuracy (error-bounded) mode.
+    ZfpAbs,
+    /// ZFP-like block transform, fixed-rate mode (NOT error-bounded).
+    ZfpFixedRate,
+}
+
+impl CompressorKind {
+    /// All codecs, for sweep harnesses.
+    pub const ALL: [CompressorKind; 4] = [
+        CompressorKind::FzLight,
+        CompressorKind::Szx,
+        CompressorKind::ZfpAbs,
+        CompressorKind::ZfpFixedRate,
+    ];
+
+    /// Frame-header discriminant.
+    pub fn id(self) -> u8 {
+        match self {
+            CompressorKind::FzLight => 1,
+            CompressorKind::Szx => 2,
+            CompressorKind::ZfpAbs => 3,
+            CompressorKind::ZfpFixedRate => 4,
+        }
+    }
+
+    /// Inverse of [`CompressorKind::id`].
+    pub fn from_id(id: u8) -> Result<Self> {
+        Ok(match id {
+            1 => CompressorKind::FzLight,
+            2 => CompressorKind::Szx,
+            3 => CompressorKind::ZfpAbs,
+            4 => CompressorKind::ZfpFixedRate,
+            _ => return Err(Error::corrupt(format!("unknown codec id {id}"))),
+        })
+    }
+
+    /// Short display name used in benchmark tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            CompressorKind::FzLight => "fZ-light",
+            CompressorKind::Szx => "SZx",
+            CompressorKind::ZfpAbs => "ZFP(ABS)",
+            CompressorKind::ZfpFixedRate => "ZFP(FXR)",
+        }
+    }
+}
+
+impl std::str::FromStr for CompressorKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fzlight" | "fz-light" | "fz" | "szp" => CompressorKind::FzLight,
+            "szx" => CompressorKind::Szx,
+            "zfp-abs" | "zfpabs" => CompressorKind::ZfpAbs,
+            "zfp-fxr" | "zfpfixedrate" | "zfp" => CompressorKind::ZfpFixedRate,
+            other => return Err(Error::invalid(format!("unknown compressor '{other}'"))),
+        })
+    }
+}
+
+/// Per-compression statistics (Table 3 reports ratio + constant-block %).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompressionStats {
+    /// Total small blocks examined.
+    pub blocks: usize,
+    /// Blocks encoded as "constant" (code length 0 / within-bound).
+    pub constant_blocks: usize,
+    /// Input bytes.
+    pub raw_bytes: usize,
+    /// Output bytes (whole frame, header included).
+    pub compressed_bytes: usize,
+}
+
+impl CompressionStats {
+    /// Compression ratio `raw/compressed`.
+    pub fn ratio(&self) -> f64 {
+        if self.compressed_bytes == 0 {
+            0.0
+        } else {
+            self.raw_bytes as f64 / self.compressed_bytes as f64
+        }
+    }
+    /// Fraction of constant blocks in `[0, 1]`.
+    pub fn constant_fraction(&self) -> f64 {
+        if self.blocks == 0 {
+            0.0
+        } else {
+            self.constant_blocks as f64 / self.blocks as f64
+        }
+    }
+    /// Bit rate in bits per value (the paper plots `32 / ratio`).
+    pub fn bitrate(&self) -> f64 {
+        if self.raw_bytes == 0 {
+            0.0
+        } else {
+            self.compressed_bytes as f64 * 8.0 / (self.raw_bytes as f64 / 4.0)
+        }
+    }
+    /// Merge statistics from another (e.g. per-chunk) compression.
+    pub fn merge(&mut self, other: &CompressionStats) {
+        self.blocks += other.blocks;
+        self.constant_blocks += other.constant_blocks;
+        self.raw_bytes += other.raw_bytes;
+        self.compressed_bytes += other.compressed_bytes;
+    }
+}
+
+/// A compressed frame plus its statistics.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    /// Self-describing frame (header + body).
+    pub bytes: Vec<u8>,
+    /// Statistics gathered while compressing.
+    pub stats: CompressionStats,
+}
+
+/// The compressor interface shared by all codecs.
+pub trait Compressor: Send + Sync {
+    /// Codec identifier.
+    fn kind(&self) -> CompressorKind;
+
+    /// Compress `data` under the given error bound.
+    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed>;
+
+    /// Decompress a frame produced by [`Compressor::compress`].
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>>;
+
+    /// Whether the codec honours the error bound (`ZfpFixedRate` does not —
+    /// that is exactly the paper's criticism of fixed-rate baselines).
+    fn is_error_bounded(&self) -> bool {
+        true
+    }
+}
+
+/// Write the common frame header.
+pub fn write_header(out: &mut Vec<u8>, codec: CompressorKind, n: usize, eb_abs: f64) {
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(codec.id());
+    out.extend_from_slice(&[0, 0]);
+    le::put_u64(out, n as u64);
+    le::put_f64(out, eb_abs);
+}
+
+/// Parsed frame header.
+#[derive(Debug, Clone, Copy)]
+pub struct Header {
+    /// Codec that produced the frame.
+    pub codec: CompressorKind,
+    /// Element count.
+    pub n: usize,
+    /// Absolute error bound used at compression time.
+    pub eb_abs: f64,
+}
+
+/// Parse and validate the common frame header.
+pub fn read_header(bytes: &[u8]) -> Result<Header> {
+    if bytes.len() < HEADER_LEN {
+        return Err(Error::corrupt("frame shorter than header"));
+    }
+    if bytes[0..4] != MAGIC {
+        return Err(Error::corrupt("bad magic"));
+    }
+    if bytes[4] != VERSION {
+        return Err(Error::corrupt(format!("unsupported version {}", bytes[4])));
+    }
+    let codec = CompressorKind::from_id(bytes[5])?;
+    let mut pos = 8;
+    let n = le::get_u64(bytes, &mut pos)? as usize;
+    let eb_abs = le::get_f64(bytes, &mut pos)?;
+    Ok(Header { codec, n, eb_abs })
+}
+
+/// Peek the codec of a frame without decoding it.
+pub fn peek_codec(bytes: &[u8]) -> Result<CompressorKind> {
+    Ok(read_header(bytes)?.codec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let mut out = Vec::new();
+        write_header(&mut out, CompressorKind::Szx, 12345, 1e-4);
+        let h = read_header(&out).unwrap();
+        assert_eq!(h.codec, CompressorKind::Szx);
+        assert_eq!(h.n, 12345);
+        assert_eq!(h.eb_abs, 1e-4);
+    }
+
+    #[test]
+    fn header_rejects_garbage() {
+        assert!(read_header(b"nope").is_err());
+        let mut out = Vec::new();
+        write_header(&mut out, CompressorKind::FzLight, 1, 1.0);
+        out[0] = b'X';
+        assert!(read_header(&out).is_err());
+        let mut out2 = Vec::new();
+        write_header(&mut out2, CompressorKind::FzLight, 1, 1.0);
+        out2[5] = 99; // bad codec id
+        assert!(read_header(&out2).is_err());
+    }
+
+    #[test]
+    fn relative_bound_resolves_to_range() {
+        let data = vec![0.0f32, 10.0, 5.0];
+        let eb = ErrorBound::Rel(1e-2).resolve(&data);
+        assert!((eb - 0.1).abs() < 1e-12);
+        // Degenerate range falls back to the raw relative value.
+        let flat = vec![3.0f32; 8];
+        assert_eq!(ErrorBound::Rel(1e-2).resolve(&flat), 1e-2);
+        assert_eq!(ErrorBound::Abs(0.5).resolve(&data), 0.5);
+    }
+
+    #[test]
+    fn kind_ids_roundtrip() {
+        for k in CompressorKind::ALL {
+            assert_eq!(CompressorKind::from_id(k.id()).unwrap(), k);
+        }
+    }
+}

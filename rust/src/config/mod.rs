@@ -1,0 +1,226 @@
+//! Configuration system: a TOML-subset file format plus CLI-flag
+//! overrides (the offline stand-in for `toml` + `clap`).
+//!
+//! Supported file syntax: `[section]` headers, `key = value` with string
+//! (quoted), number, and boolean values, `#` comments. That covers every
+//! knob the runtime needs; see `zccl.toml.example` at the repo root.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::collectives::{Algo, Mode};
+use crate::compress::{CompressorKind, ErrorBound};
+use crate::{Error, Result};
+
+/// Parsed config: `section.key -> raw value string`.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse the TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::invalid(format!("config line {}: no '='", lineno + 1)))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let v = v.trim();
+            let v = v
+                .strip_prefix('"')
+                .and_then(|s| s.strip_suffix('"'))
+                .unwrap_or(v)
+                .to_string();
+            values.insert(key, v);
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    /// Typed lookups with defaults.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::invalid(format!("config {key}: '{v}' is not an integer"))),
+        }
+    }
+    /// f64 lookup.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::invalid(format!("config {key}: '{v}' is not a number"))),
+        }
+    }
+    /// bool lookup.
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => Err(Error::invalid(format!("config {key}: '{v}' is not a bool"))),
+        }
+    }
+
+    /// Apply `--section.key=value` style overrides.
+    pub fn apply_overrides<'a>(&mut self, overrides: impl Iterator<Item = &'a str>) -> Result<()> {
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| Error::invalid(format!("override '{o}': expected key=value")))?;
+            self.values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(())
+    }
+
+    /// Build a collective [`Mode`] from the `[collective]` section.
+    pub fn mode(&self) -> Result<Mode> {
+        let algo = match self.get("collective.algo").unwrap_or("zccl") {
+            "plain" | "mpi" => Algo::Plain,
+            "cprp2p" => Algo::Cprp2p,
+            "ccoll" | "c-coll" => Algo::CColl,
+            "zccl" => Algo::Zccl,
+            other => return Err(Error::invalid(format!("unknown algo '{other}'"))),
+        };
+        let kind: CompressorKind =
+            self.get("collective.compressor").unwrap_or("fzlight").parse()?;
+        let rel = self.get_f64("collective.rel_eb", f64::NAN)?;
+        let abs = self.get_f64("collective.abs_eb", f64::NAN)?;
+        let eb = if abs.is_finite() {
+            ErrorBound::Abs(abs)
+        } else if rel.is_finite() {
+            ErrorBound::Rel(rel)
+        } else {
+            ErrorBound::Rel(1e-4)
+        };
+        let mut mode = Mode {
+            algo,
+            kind,
+            eb,
+            multithread: self.get_bool("collective.multithread", false)?,
+            pipe_chunk: self.get_usize("collective.pipe_chunk", 5120)?,
+            pipeline_bytes: self.get_usize("collective.pipeline_bytes", 1 << 16)?,
+        };
+        if algo == Algo::CColl {
+            mode.kind = CompressorKind::Szx;
+        }
+        Ok(mode)
+    }
+}
+
+/// Build a [`Mode`] directly from CLI-style args
+/// (`--algo zccl --compressor fzlight --rel-eb 1e-4 --multithread`).
+pub fn mode_from_args(args: &[String]) -> Result<Mode> {
+    let mut cfg = Config::default();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        let key = match a.as_str() {
+            "--algo" => "collective.algo",
+            "--compressor" => "collective.compressor",
+            "--rel-eb" => "collective.rel_eb",
+            "--abs-eb" => "collective.abs_eb",
+            "--pipe-chunk" => "collective.pipe_chunk",
+            "--pipeline-bytes" => "collective.pipeline_bytes",
+            "--multithread" => {
+                cfg.values.insert("collective.multithread".into(), "true".into());
+                continue;
+            }
+            other => return Err(Error::invalid(format!("unknown mode flag '{other}'"))),
+        };
+        let v = it
+            .next()
+            .ok_or_else(|| Error::invalid(format!("flag {a} needs a value")))?;
+        cfg.values.insert(key.into(), v.clone());
+    }
+    cfg.mode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            r#"
+            # top comment
+            name = "zccl"
+            [collective]
+            algo = "zccl"
+            compressor = "szx"
+            rel_eb = 1e-3
+            multithread = true
+            pipe_chunk = 1024
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.get("name"), Some("zccl"));
+        let m = c.mode().unwrap();
+        assert_eq!(m.algo, Algo::Zccl);
+        assert_eq!(m.kind, CompressorKind::Szx);
+        assert!(m.multithread);
+        assert_eq!(m.pipe_chunk, 1024);
+        assert_eq!(m.eb, ErrorBound::Rel(1e-3));
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("[collective]\nalgo = \"plain\"\n").unwrap();
+        c.apply_overrides(["collective.algo=cprp2p"].into_iter()).unwrap();
+        assert_eq!(c.mode().unwrap().algo, Algo::Cprp2p);
+    }
+
+    #[test]
+    fn ccoll_forces_szx() {
+        let c = Config::parse("[collective]\nalgo = \"ccoll\"\ncompressor = \"fzlight\"\n")
+            .unwrap();
+        assert_eq!(c.mode().unwrap().kind, CompressorKind::Szx);
+    }
+
+    #[test]
+    fn mode_from_cli_args() {
+        let args: Vec<String> =
+            ["--algo", "zccl", "--compressor", "fzlight", "--rel-eb", "1e-2", "--multithread"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let m = mode_from_args(&args).unwrap();
+        assert_eq!(m.algo, Algo::Zccl);
+        assert!(m.multithread);
+        assert_eq!(m.eb, ErrorBound::Rel(1e-2));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("novalue").is_err());
+        let c = Config::parse("[collective]\nalgo = \"wat\"\n").unwrap();
+        assert!(c.mode().is_err());
+    }
+}

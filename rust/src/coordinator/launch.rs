@@ -1,0 +1,110 @@
+//! Multi-process deployment: a leader spawns workers (or they are started
+//! by hand on other machines) and all ranks meet over the TCP mesh.
+//!
+//! `zccl launch --ranks N ...` forks N-1 `zccl worker` processes on this
+//! host and becomes rank 0 itself; `zccl worker --rank R --peers a:p,b:p`
+//! joins an existing rendezvous. Each rank then runs the requested
+//! collective workload and rank 0 prints the aggregate report.
+
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use crate::collectives::{allreduce, Communicator, Mode, ReduceOp};
+use crate::coordinator::Metrics;
+use crate::data::fields::{Field, FieldKind};
+use crate::transport::tcp::TcpTransport;
+use crate::{Error, Result};
+
+/// Workload parameters shared by leader and workers.
+#[derive(Debug, Clone)]
+pub struct LaunchSpec {
+    /// Rendezvous addresses, rank order.
+    pub peers: Vec<SocketAddr>,
+    /// This process's rank.
+    pub rank: usize,
+    /// Values per rank for the workload.
+    pub values: usize,
+    /// Collective mode.
+    pub mode: Mode,
+    /// Dataset kind.
+    pub field: FieldKind,
+}
+
+/// Run the workload at this rank; returns (seconds, metrics, checksum).
+pub fn run_rank(spec: &LaunchSpec) -> Result<(f64, Metrics, f64)> {
+    let mut t = TcpTransport::connect(spec.rank, &spec.peers, Duration::from_secs(30))?;
+    let mut comm = Communicator::new(&mut t);
+    let f = Field::generate(spec.field, spec.values, 1000 + spec.rank as u64);
+    let mut m = Metrics::default();
+    comm.barrier()?;
+    let t0 = std::time::Instant::now();
+    let out = allreduce(&mut comm, &f.values, ReduceOp::Sum, &spec.mode, &mut m)?;
+    let secs = t0.elapsed().as_secs_f64();
+    comm.barrier()?;
+    let checksum = out.iter().map(|&v| v as f64).sum::<f64>();
+    Ok((secs, m, checksum))
+}
+
+/// Allocate `n` loopback rendezvous addresses starting at `base_port`.
+pub fn local_peers(n: usize, base_port: u16) -> Vec<SocketAddr> {
+    (0..n)
+        .map(|i| format!("127.0.0.1:{}", base_port + i as u16).parse().unwrap())
+        .collect()
+}
+
+/// Leader: spawn `n-1` local worker processes and run rank 0.
+pub fn launch_local(n: usize, base_port: u16, values: usize, mode_args: &[String]) -> Result<()> {
+    let peers = local_peers(n, base_port);
+    let exe = std::env::current_exe()?;
+    let peers_arg =
+        peers.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(",");
+    let mut children: Vec<Child> = Vec::new();
+    for rank in 1..n {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--peers")
+            .arg(&peers_arg)
+            .arg("--values")
+            .arg(values.to_string())
+            .args(mode_args)
+            .stdout(Stdio::inherit())
+            .stderr(Stdio::inherit());
+        children.push(cmd.spawn()?);
+    }
+    let spec = LaunchSpec {
+        peers,
+        rank: 0,
+        values,
+        mode: super::super::config::mode_from_args(mode_args)?,
+        field: FieldKind::Rtm,
+    };
+    let result = run_rank(&spec);
+    for mut c in children {
+        let status = c.wait()?;
+        if !status.success() {
+            return Err(Error::transport(format!("worker exited with {status}")));
+        }
+    }
+    let (secs, m, checksum) = result?;
+    println!("rank 0: allreduce {values} values in {secs:.4}s (checksum {checksum:.3e})");
+    let (c, comm, compute, other) = m.breakdown_pct();
+    println!(
+        "breakdown: compress {c:.1}% comm {comm:.1}% compute {compute:.1}% other {other:.1}%"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_peer_allocation() {
+        let peers = local_peers(3, 39000);
+        assert_eq!(peers.len(), 3);
+        assert_eq!(peers[2].port(), 39002);
+    }
+}

@@ -1,0 +1,142 @@
+//! Per-phase timing breakdown.
+//!
+//! The paper reports collective time split into *Compression /
+//! Communication / Computation / Other* (Fig. 9–11, Table 7). Every
+//! collective in this crate threads a [`Metrics`] through its hot path and
+//! attributes wall-clock to exactly one phase at a time.
+
+use std::time::Instant;
+
+/// The phases the paper's breakdowns distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Lossy compression.
+    Compress,
+    /// Lossy decompression.
+    Decompress,
+    /// Send/recv/wait/progress time not hidden inside compression.
+    Comm,
+    /// Reduction arithmetic (the collective-computation operator).
+    Compute,
+    /// Size exchange, buffer management, everything else.
+    Other,
+}
+
+/// Accumulated per-phase seconds and traffic counters for one rank's view
+/// of one collective call (or a whole run; metrics are additive).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Metrics {
+    /// Seconds in compression.
+    pub compress_s: f64,
+    /// Seconds in decompression.
+    pub decompress_s: f64,
+    /// Seconds in communication (not overlapped).
+    pub comm_s: f64,
+    /// Seconds in reduction arithmetic.
+    pub compute_s: f64,
+    /// Seconds in bookkeeping.
+    pub other_s: f64,
+    /// Bytes handed to the transport.
+    pub bytes_sent: u64,
+    /// Bytes received from the transport.
+    pub bytes_recv: u64,
+    /// Raw (uncompressed) bytes the collective moved logically.
+    pub raw_bytes: u64,
+}
+
+impl Metrics {
+    /// Time `f`, attributing its wall-clock to `phase`.
+    #[inline]
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(phase, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    /// Attribute `seconds` to `phase`.
+    #[inline]
+    pub fn add(&mut self, phase: Phase, seconds: f64) {
+        match phase {
+            Phase::Compress => self.compress_s += seconds,
+            Phase::Decompress => self.decompress_s += seconds,
+            Phase::Comm => self.comm_s += seconds,
+            Phase::Compute => self.compute_s += seconds,
+            Phase::Other => self.other_s += seconds,
+        }
+    }
+
+    /// Total accounted seconds.
+    pub fn total_s(&self) -> f64 {
+        self.compress_s + self.decompress_s + self.comm_s + self.compute_s + self.other_s
+    }
+
+    /// Fold another rank's metrics in (taking per-phase sums; callers that
+    /// want the critical path take maxima instead).
+    pub fn merge(&mut self, o: &Metrics) {
+        self.compress_s += o.compress_s;
+        self.decompress_s += o.decompress_s;
+        self.comm_s += o.comm_s;
+        self.compute_s += o.compute_s;
+        self.other_s += o.other_s;
+        self.bytes_sent += o.bytes_sent;
+        self.bytes_recv += o.bytes_recv;
+        self.raw_bytes += o.raw_bytes;
+    }
+
+    /// Percentage breakdown in the paper's Table-7 column order
+    /// `(compress+decompress, comm, compute, other)`.
+    pub fn breakdown_pct(&self) -> (f64, f64, f64, f64) {
+        let t = self.total_s();
+        if t <= 0.0 {
+            return (0.0, 0.0, 0.0, 0.0);
+        }
+        (
+            (self.compress_s + self.decompress_s) / t * 100.0,
+            self.comm_s / t * 100.0,
+            self.compute_s / t * 100.0,
+            self.other_s / t * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_attributes_phase() {
+        let mut m = Metrics::default();
+        let v = m.time(Phase::Compress, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.compress_s > 0.0);
+        assert_eq!(m.comm_s, 0.0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_100() {
+        let m = Metrics {
+            compress_s: 1.0,
+            decompress_s: 1.0,
+            comm_s: 1.0,
+            compute_s: 0.5,
+            other_s: 0.5,
+            ..Default::default()
+        };
+        let (c, comm, compute, other) = m.breakdown_pct();
+        assert!((c + comm + compute + other - 100.0).abs() < 1e-9);
+        assert!((c - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics { compress_s: 1.0, bytes_sent: 10, ..Default::default() };
+        let b = Metrics { compress_s: 2.0, bytes_sent: 5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.compress_s, 3.0);
+        assert_eq!(a.bytes_sent, 15);
+    }
+}

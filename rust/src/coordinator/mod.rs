@@ -1,0 +1,8 @@
+//! Leader/worker orchestration, per-phase metrics, and the benchmark
+//! harness dispatcher used by the `zccl` CLI.
+
+pub mod harness;
+pub mod launch;
+pub mod metrics;
+
+pub use metrics::{Metrics, Phase};

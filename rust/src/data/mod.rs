@@ -1,0 +1,14 @@
+//! Synthetic scientific-dataset substrate.
+//!
+//! The paper evaluates on four real application datasets (RTM seismic
+//! wavefields, NYX cosmology, CESM-ATM climate, Hurricane ISABEL weather —
+//! Table 5) that are multi-GB and not available here. Per DESIGN.md §2 we
+//! substitute seeded synthetic fields whose *local smoothness spectra*
+//! (the property compression ratio and constant-block fraction depend on)
+//! are tuned per application so the cross-dataset ordering of Table 3
+//! is preserved.
+
+pub mod fields;
+pub mod rng;
+
+pub use fields::{Field, FieldKind};

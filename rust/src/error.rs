@@ -1,0 +1,60 @@
+//! Unified error type for the crate.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error type covering every subsystem.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed or truncated compressed stream.
+    Corrupt(String),
+    /// Invalid argument / configuration.
+    Invalid(String),
+    /// Transport-level failure (peer gone, channel closed, socket error).
+    Transport(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Underlying I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Corrupt(m) => write!(f, "corrupt stream: {m}"),
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Transport(m) => write!(f, "transport: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Shorthand constructor for [`Error::Corrupt`].
+    pub fn corrupt(m: impl Into<String>) -> Self {
+        Error::Corrupt(m.into())
+    }
+    /// Shorthand constructor for [`Error::Invalid`].
+    pub fn invalid(m: impl Into<String>) -> Self {
+        Error::Invalid(m.into())
+    }
+    /// Shorthand constructor for [`Error::Transport`].
+    pub fn transport(m: impl Into<String>) -> Self {
+        Error::Transport(m.into())
+    }
+    /// Shorthand constructor for [`Error::Runtime`].
+    pub fn runtime(m: impl Into<String>) -> Self {
+        Error::Runtime(m.into())
+    }
+}

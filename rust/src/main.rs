@@ -1,0 +1,213 @@
+//! `zccl` CLI — leader entrypoint for the ZCCL reproduction.
+//!
+//! ```text
+//! zccl info
+//! zccl bench <id|all> [--out DIR]          regenerate paper tables/figures
+//! zccl run [--ranks N] [--values V] [mode flags]
+//!                                          one in-process collective run
+//! zccl launch --ranks N [--values V] [mode flags]
+//!                                          multi-process over local TCP
+//! zccl worker --rank R --peers a:p,... [--values V] [mode flags]
+//! zccl train [--workers W] [--steps S] [--artifacts DIR] [mode flags]
+//!                                          DDP transformer training (e2e)
+//! ```
+//!
+//! Mode flags: `--algo plain|cprp2p|ccoll|zccl`, `--compressor
+//! fzlight|szx|zfp-abs|zfp-fxr`, `--rel-eb X`, `--abs-eb X`,
+//! `--multithread`, `--pipe-chunk N`, `--pipeline-bytes N`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use zccl::collectives::{allreduce, run_ranks, ReduceOp};
+use zccl::config::mode_from_args;
+use zccl::coordinator::{harness, launch, Metrics};
+use zccl::data::fields::FieldKind;
+use zccl::transport::tcp::TcpTransport;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+    mode_flags: Vec<String>,
+}
+
+const MODE_FLAGS: &[&str] = &[
+    "--algo",
+    "--compressor",
+    "--rel-eb",
+    "--abs-eb",
+    "--pipe-chunk",
+    "--pipeline-bytes",
+];
+
+fn parse_args(raw: &[String]) -> Result<Args, String> {
+    let mut a = Args {
+        positional: Vec::new(),
+        flags: Default::default(),
+        mode_flags: Vec::new(),
+    };
+    let mut it = raw.iter().peekable();
+    while let Some(arg) = it.next() {
+        if arg == "--multithread" {
+            a.mode_flags.push(arg.clone());
+        } else if MODE_FLAGS.contains(&arg.as_str()) {
+            let v = it.next().ok_or_else(|| format!("{arg} needs a value"))?;
+            a.mode_flags.push(arg.clone());
+            a.mode_flags.push(v.clone());
+        } else if let Some(name) = arg.strip_prefix("--") {
+            let v = it.next().ok_or_else(|| format!("{arg} needs a value"))?;
+            a.flags.insert(name.to_string(), v.clone());
+        } else {
+            a.positional.push(arg.clone());
+        }
+    }
+    Ok(a)
+}
+
+fn usize_flag(a: &Args, name: &str, default: usize) -> usize {
+    a.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = raw.first().cloned().unwrap_or_default();
+    let args = parse_args(raw.get(1..).unwrap_or(&[])).map_err(anyhow::Error::msg)?;
+
+    match cmd.as_str() {
+        "info" => {
+            println!("zccl {} — ZCCL reproduction", env!("CARGO_PKG_VERSION"));
+            match zccl::runtime::Runtime::cpu() {
+                Ok(rt) => println!("PJRT: {}", rt.platform()),
+                Err(e) => println!("PJRT: unavailable ({e})"),
+            }
+            println!("benches: {}", harness::ALL.join(", "));
+        }
+        "bench" => {
+            let id = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+            let out = PathBuf::from(
+                args.flags.get("out").cloned().unwrap_or_else(|| "results".into()),
+            );
+            harness::run(&id, &out)?;
+        }
+        "run" => {
+            let n = usize_flag(&args, "ranks", 4);
+            let values = usize_flag(&args, "values", 1 << 20);
+            let mode = mode_from_args(&args.mode_flags)?;
+            let field = args
+                .flags
+                .get("field")
+                .map(|f| FieldKind::parse(f))
+                .transpose()?
+                .unwrap_or(FieldKind::Rtm);
+            let out = run_ranks(n, move |c| {
+                let f = zccl::data::fields::Field::generate(
+                    field,
+                    values,
+                    1000 + c.rank() as u64,
+                );
+                let mut m = Metrics::default();
+                let t0 = std::time::Instant::now();
+                allreduce(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
+                (t0.elapsed().as_secs_f64(), m)
+            });
+            let wall = out.iter().map(|x| x.0).fold(0.0, f64::max);
+            let mut m = Metrics::default();
+            for (_, mm) in &out {
+                m.merge(mm);
+            }
+            let (c, comm, compute, other) = m.breakdown_pct();
+            println!(
+                "allreduce {values} values x {n} ranks: {wall:.4}s \
+                 (compress {c:.1}% comm {comm:.1}% compute {compute:.1}% other {other:.1}%)"
+            );
+        }
+        "launch" => {
+            let n = usize_flag(&args, "ranks", 2);
+            let values = usize_flag(&args, "values", 1 << 20);
+            let port = usize_flag(&args, "port", 47000) as u16;
+            launch::launch_local(n, port, values, &args.mode_flags)?;
+        }
+        "worker" => {
+            let rank = usize_flag(&args, "rank", usize::MAX);
+            let peers_s = args
+                .flags
+                .get("peers")
+                .ok_or_else(|| anyhow::anyhow!("worker needs --peers"))?;
+            let peers: Vec<std::net::SocketAddr> = peers_s
+                .split(',')
+                .map(|p| p.parse())
+                .collect::<Result<_, _>>()
+                .map_err(|e| anyhow::anyhow!("bad --peers: {e}"))?;
+            let values = usize_flag(&args, "values", 1 << 20);
+            let spec = launch::LaunchSpec {
+                peers,
+                rank,
+                values,
+                mode: mode_from_args(&args.mode_flags)?,
+                field: FieldKind::Rtm,
+            };
+            let (secs, _, checksum) = launch::run_rank(&spec)?;
+            println!("rank {rank}: {secs:.4}s (checksum {checksum:.3e})");
+        }
+        "train" => {
+            let workers = usize_flag(&args, "workers", 2);
+            let steps = usize_flag(&args, "steps", 50);
+            let dir = PathBuf::from(
+                args.flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
+            );
+            let mode = mode_from_args(&args.mode_flags)?;
+            let mut cfg = zccl::apps::ddp::DdpConfig::new(&dir, workers, steps, mode);
+            if let Some(lr) = args.flags.get("lr").and_then(|v| v.parse().ok()) {
+                cfg.lr = lr;
+            }
+            if let Some(a) = args.flags.get("grad-artifact") {
+                cfg.grad_artifact = a.clone();
+            }
+            let report = zccl::apps::ddp::train(&cfg)?;
+            println!("step,loss,allreduce_s");
+            for s in &report.steps {
+                println!("{},{:.4},{:.5}", s.step, s.loss, s.allreduce_s);
+            }
+            println!("# final param norm {:.4}", report.final_param_norm);
+        }
+        "" | "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{}", HELP);
+            std::process::exit(2);
+        }
+    }
+    // Quiet unused-import warnings for transport types used only in docs.
+    let _ = std::mem::size_of::<TcpTransport>();
+    let _ = Duration::ZERO;
+    Ok(())
+}
+
+const HELP: &str = "\
+zccl — compression-accelerated collectives (ZCCL reproduction)
+
+USAGE:
+  zccl info
+  zccl bench <id|all> [--out DIR]
+  zccl run [--ranks N] [--values V] [--field rtm|nyx|cesm|hurricane] [mode flags]
+  zccl launch --ranks N [--values V] [--port P] [mode flags]
+  zccl worker --rank R --peers a:p,b:p,... [--values V] [mode flags]
+  zccl train [--workers W] [--steps S] [--artifacts DIR] [--lr X]
+             [--grad-artifact grad_step|grad_step_zccl] [mode flags]
+
+MODE FLAGS:
+  --algo plain|cprp2p|ccoll|zccl      (default zccl)
+  --compressor fzlight|szx|zfp-abs|zfp-fxr
+  --rel-eb X | --abs-eb X             (default rel 1e-4)
+  --multithread
+  --pipe-chunk N                      (default 5120 values)
+  --pipeline-bytes N                  (default 65536)
+";

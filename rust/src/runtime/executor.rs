@@ -1,0 +1,110 @@
+//! PJRT executor: compile HLO-text artifacts and run them.
+
+use std::path::Path;
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest, TensorSpec};
+use crate::{Error, Result};
+
+fn xerr(e: xla::Error) -> Error {
+    Error::runtime(e.to_string())
+}
+
+/// A PJRT client bound to the host CPU.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().map_err(xerr)? })
+    }
+
+    /// Platform string (for `zccl info`).
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Compile one artifact from its HLO text file.
+    pub fn compile(&self, dir: impl AsRef<Path>, spec: &ArtifactSpec) -> Result<Module> {
+        let path = dir.as_ref().join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::invalid("non-utf8 artifact path"))?,
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        Ok(Module { exe, spec: spec.clone() })
+    }
+
+    /// Convenience: load the manifest and compile `name`.
+    pub fn load(&self, dir: impl AsRef<Path>, name: &str) -> Result<Module> {
+        let manifest = Manifest::load(&dir)?;
+        let spec = manifest.artifact(name)?;
+        self.compile(&dir, spec)
+    }
+}
+
+/// One compiled artifact ready to execute.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    /// The artifact's signature (used for input validation).
+    pub spec: ArtifactSpec,
+}
+
+impl Module {
+    /// Execute with the given inputs (must match the manifest signature
+    /// arity). Returns the untupled outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::invalid(format!(
+                "artifact {}: {} inputs given, {} expected",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs).map_err(xerr)?;
+        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        lit.to_tuple().map_err(xerr)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(values: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != values.len() {
+        return Err(Error::invalid(format!("literal shape {shape:?} != {} values", values.len())));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(values).reshape(&dims).map_err(xerr)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(values: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != values.len() {
+        return Err(Error::invalid(format!("literal shape {shape:?} != {} values", values.len())));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(values).reshape(&dims).map_err(xerr)
+}
+
+/// Extract an f32 literal's values.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(xerr)
+}
+
+/// Validate that a literal matches a manifest tensor spec (debug aid).
+pub fn check_spec(lit: &xla::Literal, spec: &TensorSpec) -> Result<()> {
+    if lit.element_count() != spec.elements() {
+        return Err(Error::invalid(format!(
+            "literal has {} elements, spec {:?} wants {}",
+            lit.element_count(),
+            spec.shape,
+            spec.elements()
+        )));
+    }
+    Ok(())
+}

@@ -1,0 +1,239 @@
+//! `manifest.json` parsing (emitted by `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// One tensor's shape + dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Dimensions (row-major).
+    pub shape: Vec<usize>,
+    /// Dtype name as jax prints it (`float32`, `int32`).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered artifact (an HLO text file + its signature).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Artifact name (`grad_step`, `lorenzo_quant`, ...).
+    pub name: String,
+    /// HLO text filename relative to the artifact dir.
+    pub file: String,
+    /// Input signature in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output signature (the HLO returns a tuple in this order).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One initial-parameter table entry (into `params.bin`).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    /// Parameter name (`l0.attn.wqkv`, ...).
+    pub name: String,
+    /// Shape.
+    pub shape: Vec<usize>,
+    /// Byte offset in `params.bin`.
+    pub offset: usize,
+    /// Byte length.
+    pub bytes: usize,
+}
+
+/// Transformer dimensions recorded by aot.py.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// Model dimensions.
+    pub config: ModelConfig,
+    /// The error bound baked into `grad_step_zccl`.
+    pub grad_eb: f64,
+    /// Lowered artifacts.
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Initial parameter table.
+    pub params: Vec<ParamSpec>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::invalid("tensor spec missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| Error::invalid("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::invalid("tensor spec missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Load `manifest.json` from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+        if j.get("version").and_then(Json::as_usize) != Some(1) {
+            return Err(Error::invalid("unsupported manifest version"));
+        }
+        let cfgj = j.get("config").ok_or_else(|| Error::invalid("manifest missing config"))?;
+        let dim = |k: &str| -> Result<usize> {
+            cfgj.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::invalid(format!("config missing {k}")))
+        };
+        let config = ModelConfig {
+            vocab: dim("vocab")?,
+            d_model: dim("d_model")?,
+            n_heads: dim("n_heads")?,
+            n_layers: dim("n_layers")?,
+            seq: dim("seq")?,
+            batch: dim("batch")?,
+        };
+        let grad_eb = j.get("grad_eb").and_then(Json::as_f64).unwrap_or(1e-4);
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::invalid("manifest missing artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::invalid("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::invalid("artifact missing file"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::invalid("artifact missing inputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::invalid("artifact missing outputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec { name, file, inputs, outputs });
+        }
+        let mut params = Vec::new();
+        for p in j.get("params").and_then(Json::as_arr).unwrap_or(&[]) {
+            params.push(ParamSpec {
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::invalid("param missing name"))?
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::invalid("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| Error::invalid("bad dim")))
+                    .collect::<Result<Vec<_>>>()?,
+                offset: p
+                    .get("offset")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::invalid("param missing offset"))?,
+                bytes: p
+                    .get("bytes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::invalid("param missing bytes"))?,
+            });
+        }
+        Ok(Manifest { dir, config, grad_eb, artifacts, params })
+    }
+
+    /// Find an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::invalid(format!("no artifact '{name}' in manifest")))
+    }
+
+    /// Load the initial parameters from `params.bin` as `(name, shape,
+    /// values)` triples in manifest order.
+    pub fn load_params(&self) -> Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+        let blob = std::fs::read(self.dir.join("params.bin"))?;
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let end = p.offset + p.bytes;
+            let b = blob
+                .get(p.offset..end)
+                .ok_or_else(|| Error::corrupt(format!("params.bin short for {}", p.name)))?;
+            let vals: Vec<f32> =
+                b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+            if vals.len() != p.shape.iter().product::<usize>() {
+                return Err(Error::corrupt(format!("param {} size mismatch", p.name)));
+            }
+            out.push((p.name.clone(), p.shape.clone(), vals));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("zccl-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "preset": "tiny", "grad_eb": 0.001,
+                "config": {"vocab": 8, "d_model": 4, "n_heads": 2, "n_layers": 1, "seq": 4, "batch": 2},
+                "artifacts": [{"name": "m", "file": "m.hlo.txt",
+                  "inputs": [{"shape": [2, 4], "dtype": "int32"}],
+                  "outputs": [{"shape": [], "dtype": "float32"}]}],
+                "params": [{"name": "w", "shape": [2, 2], "offset": 0, "bytes": 16}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("params.bin"),
+            [1f32, 2.0, 3.0, 4.0].iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>(),
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.vocab, 8);
+        assert_eq!(m.grad_eb, 0.001);
+        let a = m.artifact("m").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 4]);
+        assert_eq!(a.outputs[0].elements(), 1);
+        let params = m.load_params().unwrap();
+        assert_eq!(params[0].2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs Python ONCE to lower the L2 model (+ L1 Pallas
+//! kernel) to HLO text plus a `manifest.json`; this module is the L3 side:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Python never runs on the request path —
+//! after `make artifacts` the Rust binary is self-contained.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{literal_f32, literal_i32, literal_to_f32, Module, Runtime};
+pub use manifest::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};

@@ -1,0 +1,91 @@
+//! Calibration: feed the simulator real numbers measured on this host.
+//!
+//! Two knobs connect the simulator to reality:
+//!
+//! 1. **Compression ratios** are never modeled — [`sample_ratio`] runs the
+//!    actual codec on a sampled synthetic field and returns the measured
+//!    ratio, which the simulations scale by.
+//! 2. **Local throughputs** — [`local_model`] measures this host's
+//!    compressor bandwidths so simulated small-rank runs can be
+//!    cross-checked against real `memchan` executions
+//!    (`rust/tests/sim_crosscheck.rs`).
+
+use super::{CodecRate, CostModel};
+use crate::compress::{self, CompressorKind, ErrorBound};
+use crate::data::fields::{Field, FieldKind};
+use crate::util::bench::measure_for;
+
+/// Measure the compression ratio of `kind` on a sampled field at `eb`.
+/// The sample is `sample_values` long (1 MiB of f32 by default covers the
+/// generators' longest correlation lengths).
+pub fn sample_ratio(
+    kind: CompressorKind,
+    field: FieldKind,
+    eb: ErrorBound,
+    sample_values: usize,
+    seed: u64,
+) -> f64 {
+    let f = Field::generate(field, sample_values.max(1024), seed);
+    match compress::build(kind).compress(&f.values, eb) {
+        Ok(c) => c.stats.ratio().max(1.0),
+        Err(_) => 1.0,
+    }
+}
+
+/// Measure this host's single-thread codec bandwidths (bytes/s). The
+/// multi-thread columns reuse the single-thread number scaled by the
+/// paper's Broadwell thread-scaling factor (this container has one core,
+/// DESIGN.md §2).
+pub fn local_model(budget_s: f64) -> CostModel {
+    let paper = CostModel::paper_broadwell();
+    let mut cm = CostModel {
+        // Keep the paper's network; only codec rates are local.
+        ..paper.clone()
+    };
+    let field = Field::generate(FieldKind::Rtm, 1 << 20, 7);
+    let eb = ErrorBound::Rel(1e-4);
+    let bytes = field.values.len() * 4;
+    for kind in [CompressorKind::FzLight, CompressorKind::Szx] {
+        let codec = compress::build(kind);
+        let frame = codec.compress(&field.values, eb).unwrap();
+        let comp = measure_for(budget_s, || codec.compress(&field.values, eb).unwrap());
+        let decomp = measure_for(budget_s, || codec.decompress(&frame.bytes).unwrap());
+        let paper_rate = paper.rate(kind);
+        let mt_scale_c = paper_rate.comp_mt / paper_rate.comp_st;
+        let mt_scale_d = paper_rate.decomp_mt / paper_rate.decomp_st;
+        let rate = CodecRate {
+            comp_st: comp.gbps(bytes) * 1e9,
+            decomp_st: decomp.gbps(bytes) * 1e9,
+            comp_mt: comp.gbps(bytes) * 1e9 * mt_scale_c,
+            decomp_mt: decomp.gbps(bytes) * 1e9 * mt_scale_d,
+        };
+        match kind {
+            CompressorKind::FzLight => cm.fzlight = rate,
+            CompressorKind::Szx => cm.szx = rate,
+            _ => unreachable!(),
+        }
+    }
+    cm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_sampling_orders_fields() {
+        let eb = ErrorBound::Rel(1e-4);
+        let rtm = sample_ratio(CompressorKind::FzLight, FieldKind::Rtm, eb, 1 << 16, 3);
+        let nyx = sample_ratio(CompressorKind::FzLight, FieldKind::Nyx, eb, 1 << 16, 3);
+        assert!(rtm > nyx, "rtm {rtm} vs nyx {nyx}");
+        assert!(rtm > 1.0 && nyx > 1.0);
+    }
+
+    #[test]
+    fn local_model_produces_positive_rates() {
+        let cm = local_model(0.02);
+        assert!(cm.fzlight.comp_st > 1e6, "fzlight {:.3e}", cm.fzlight.comp_st);
+        assert!(cm.szx.comp_st > 1e6);
+        assert!(cm.fzlight.comp_mt > cm.fzlight.comp_st);
+    }
+}

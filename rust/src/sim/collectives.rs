@@ -1,0 +1,470 @@
+//! Discrete-event models of the collective schedules.
+//!
+//! Each function mirrors the corresponding real implementation in
+//! [`crate::collectives`] *step for step* — same rounds, same peers, same
+//! compress/decompress placement — but advances per-rank virtual clocks
+//! instead of moving bytes. Lockstep ring rounds propagate waiting through
+//! the `max(own_ready, sender_ready)` dependency exactly like the real
+//! blocking schedule.
+
+use super::{CostModel, SimBreakdown, SimReport};
+use crate::collectives::Algo;
+use crate::compress::CompressorKind;
+use crate::topology::{binomial_bcast, tree_rounds};
+
+/// Inputs for one simulated collective.
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    /// Communicator size.
+    pub n: usize,
+    /// Uncompressed payload bytes (the collective's `D_input`).
+    pub bytes: f64,
+    /// Framework.
+    pub algo: Algo,
+    /// Codec for the compressed modes.
+    pub kind: CompressorKind,
+    /// Multi-thread codec mode.
+    pub multithread: bool,
+    /// Compression ratio (raw/compressed) measured on real data via
+    /// [`super::calibrate::sample_ratio`].
+    pub ratio: f64,
+}
+
+impl SimParams {
+    fn cfrac(&self) -> f64 {
+        if self.algo == Algo::Plain {
+            1.0
+        } else {
+            1.0 / self.ratio.max(1e-9)
+        }
+    }
+}
+
+/// Ring allgather (§3.1.1 / Fig. 10). `bytes` is the FULL gathered size;
+/// each rank contributes `bytes / n`.
+pub fn sim_allgather(p: &SimParams, cm: &CostModel) -> SimReport {
+    let n = p.n;
+    let chunk = p.bytes / n as f64;
+    let rate = cm.rate(p.kind);
+    let (comp, decomp) = (rate.comp(p.multithread), rate.decomp(p.multithread));
+    let mut t = vec![0.0f64; n];
+    let mut b = SimBreakdown::default();
+
+    match p.algo {
+        Algo::Plain => {
+            for _round in 0..n.saturating_sub(1) {
+                lockstep_ring(&mut t, cm.link_s(chunk));
+            }
+            b.comm_s = (n.saturating_sub(1)) as f64 * cm.link_s(chunk);
+        }
+        Algo::Cprp2p => {
+            // Per-hop codec + UNBALANCED compressed sends (§3.1.1).
+            let cb = chunk * p.cfrac() * cm.imbalance;
+            let per_round_pre = chunk / comp; // compress before send
+            let per_round_post = chunk / decomp; // decompress after recv
+            for _round in 0..n.saturating_sub(1) {
+                for v in t.iter_mut() {
+                    *v += per_round_pre;
+                }
+                lockstep_ring(&mut t, cm.link_s(cb));
+                for v in t.iter_mut() {
+                    *v += per_round_post;
+                }
+            }
+            let r = (n.saturating_sub(1)) as f64;
+            b.compress_s = r * per_round_pre;
+            b.decompress_s = r * per_round_post;
+            b.comm_s = r * cm.link_s(cb);
+        }
+        Algo::CColl | Algo::Zccl => {
+            let cb = chunk * p.cfrac();
+            // (1) one compression of the local chunk
+            let tc = chunk / comp;
+            for v in t.iter_mut() {
+                *v += tc;
+            }
+            b.compress_s = tc;
+            // (2) size exchange: n-1 tiny lockstep rounds
+            for _ in 0..n.saturating_sub(1) {
+                lockstep_ring(&mut t, cm.link_s(4.0));
+            }
+            b.other_s = (n.saturating_sub(1)) as f64 * cm.link_s(4.0);
+            // (3) n-1 rounds of compressed chunks (balanced: equal cb)
+            for _round in 0..n.saturating_sub(1) {
+                lockstep_ring(&mut t, cm.link_s(cb));
+            }
+            b.comm_s = (n.saturating_sub(1)) as f64 * cm.link_s(cb);
+            // (4) decompress all n chunks once
+            let td = n as f64 * chunk / decomp;
+            for v in t.iter_mut() {
+                *v += td;
+            }
+            b.decompress_s = td;
+        }
+    }
+    SimReport::from_ranks(t, b)
+}
+
+/// Ring reduce-scatter (§3.1.2 / Fig. 11). `bytes` is the full input size
+/// (every rank holds `bytes`).
+pub fn sim_reduce_scatter(p: &SimParams, cm: &CostModel) -> SimReport {
+    let n = p.n;
+    let chunk = p.bytes / n as f64;
+    let rate = cm.rate(p.kind);
+    let (comp, decomp) = (rate.comp(p.multithread), rate.decomp(p.multithread));
+    let mut t = vec![0.0f64; n];
+    let mut b = SimBreakdown::default();
+    let rounds = n.saturating_sub(1) as f64;
+    let treduce = chunk / cm.reduce_bps;
+
+    match p.algo {
+        Algo::Plain => {
+            for _ in 0..n.saturating_sub(1) {
+                lockstep_ring(&mut t, cm.link_s(chunk));
+                for v in t.iter_mut() {
+                    *v += treduce;
+                }
+            }
+            b.comm_s = rounds * cm.link_s(chunk);
+            b.compute_s = rounds * treduce;
+        }
+        Algo::Cprp2p | Algo::CColl => {
+            // Blocking compress -> send -> recv -> decompress -> reduce.
+            let cb = chunk * p.cfrac();
+            let tc = chunk / comp;
+            let td = chunk / decomp;
+            for _ in 0..n.saturating_sub(1) {
+                for v in t.iter_mut() {
+                    *v += tc;
+                }
+                lockstep_ring(&mut t, cm.link_s(cb));
+                for v in t.iter_mut() {
+                    *v += td + treduce;
+                }
+            }
+            b.compress_s = rounds * tc;
+            b.decompress_s = rounds * td;
+            b.comm_s = rounds * cm.link_s(cb);
+            b.compute_s = rounds * treduce;
+        }
+        Algo::Zccl => {
+            // PIPE overlap: the receive progresses while compressing; only
+            // the part of the transfer longer than the compression is
+            // exposed. Decompression likewise overlaps the send drain.
+            let cb = chunk * p.cfrac();
+            let tc = chunk / comp;
+            let td = chunk / decomp;
+            let tlink = cm.link_s(cb);
+            let exposed = (tlink - tc - td).max(0.0) + cm.alpha_s;
+            for _ in 0..n.saturating_sub(1) {
+                for v in t.iter_mut() {
+                    *v += tc;
+                }
+                lockstep_ring(&mut t, exposed);
+                for v in t.iter_mut() {
+                    *v += td + treduce;
+                }
+            }
+            b.compress_s = rounds * tc;
+            b.decompress_s = rounds * td;
+            b.comm_s = rounds * exposed;
+            b.compute_s = rounds * treduce;
+        }
+    }
+    SimReport::from_ranks(t, b)
+}
+
+/// Ring allreduce = reduce-scatter + allgather (§3.5 / Figs. 9, 12, 13).
+/// `bytes` is the input size per rank.
+pub fn sim_allreduce(p: &SimParams, cm: &CostModel) -> SimReport {
+    let rs = sim_reduce_scatter(p, cm);
+    let ag = sim_allgather(p, cm);
+    let per_rank: Vec<f64> =
+        rs.per_rank_s.iter().zip(&ag.per_rank_s).map(|(a, c)| a + c).collect();
+    let b = SimBreakdown {
+        compress_s: rs.breakdown.compress_s + ag.breakdown.compress_s,
+        decompress_s: rs.breakdown.decompress_s + ag.breakdown.decompress_s,
+        comm_s: rs.breakdown.comm_s + ag.breakdown.comm_s,
+        compute_s: rs.breakdown.compute_s + ag.breakdown.compute_s,
+        other_s: rs.breakdown.other_s + ag.breakdown.other_s,
+    };
+    SimReport::from_ranks(per_rank, b)
+}
+
+/// Binomial broadcast (§3.1.1 Fig. 3 / Fig. 14). `bytes` is the broadcast
+/// payload.
+pub fn sim_bcast(p: &SimParams, cm: &CostModel) -> SimReport {
+    let n = p.n;
+    let rate = cm.rate(p.kind);
+    let (comp, decomp) = (rate.comp(p.multithread), rate.decomp(p.multithread));
+    let cb = p.bytes * p.cfrac();
+    let tc = p.bytes / comp;
+    let td = p.bytes / decomp;
+
+    // Plain MPI_Bcast at these message sizes is NOT the binomial tree:
+    // MPICH switches to scatter + ring-allgather for large messages,
+    // costing ~2·(n-1)/n·bytes of link time. The compressed modes follow
+    // the paper's binomial design (Fig. 3).
+    if p.algo == Algo::Plain {
+        let t = 2.0 * (n as f64 - 1.0) / n as f64 * p.bytes / cm.link_bps
+            + tree_rounds(n) as f64 * cm.alpha_s;
+        let b = SimBreakdown { comm_s: t, ..Default::default() };
+        return SimReport::from_ranks(vec![t; n], b);
+    }
+
+    // Event-driven over the tree: ready[r] = when rank r has the payload
+    // and may start forwarding.
+    let mut ready = vec![f64::INFINITY; n];
+    let root = 0usize;
+    let mut b = SimBreakdown::default();
+    ready[root] = match p.algo {
+        Algo::Plain => 0.0,
+        Algo::Cprp2p => 0.0, // compresses per send below
+        Algo::CColl | Algo::Zccl => tc,
+    };
+    // Process ranks in BFS order of the binomial tree.
+    let order = bfs_order(root, n);
+    let mut done = vec![0.0f64; n];
+    for &r in &order {
+        let (_, sends) = binomial_bcast(r, root, n);
+        let mut nic_free = ready[r];
+        for s in &sends {
+            // Serial sends occupy the sender's NIC back to back.
+            let (payload, pre) = match p.algo {
+                Algo::Plain => (p.bytes, 0.0),
+                Algo::Cprp2p => (cb, tc), // re-compress before each send
+                Algo::CColl | Algo::Zccl => (cb, 0.0),
+            };
+            nic_free += pre;
+            let arrive = nic_free + cm.link_s(payload);
+            nic_free += payload / cm.link_bps; // pipelined: NIC frees at drain
+            let post = match p.algo {
+                Algo::Plain => 0.0,
+                Algo::Cprp2p => td, // decompress immediately on arrival
+                Algo::CColl | Algo::Zccl => 0.0, // forwards frame verbatim
+            };
+            ready[s.peer] = arrive + post;
+        }
+        // Rank r's own completion: Z modes decompress after forwarding.
+        done[r] = match p.algo {
+            Algo::Plain | Algo::Cprp2p => nic_free.max(ready[r]),
+            Algo::CColl | Algo::Zccl => nic_free.max(ready[r]) + td,
+        };
+    }
+    // Critical-path breakdown (approximate: attribute along the deepest
+    // leaf): depth rounds of links + per-mode codec work.
+    let depth = tree_rounds(n) as f64;
+    match p.algo {
+        Algo::Plain => b.comm_s = depth * cm.link_s(p.bytes),
+        Algo::Cprp2p => {
+            b.comm_s = depth * cm.link_s(cb);
+            b.compress_s = depth * tc;
+            b.decompress_s = depth * td;
+        }
+        Algo::CColl | Algo::Zccl => {
+            b.comm_s = depth * cm.link_s(cb);
+            b.compress_s = tc;
+            b.decompress_s = td;
+        }
+    }
+    SimReport::from_ranks(done, b)
+}
+
+/// Binomial scatter (§4.5.2 / Fig. 15). `bytes` is the root's full buffer.
+pub fn sim_scatter(p: &SimParams, cm: &CostModel) -> SimReport {
+    let n = p.n;
+    let rate = cm.rate(p.kind);
+    let (comp, decomp) = (rate.comp(p.multithread), rate.decomp(p.multithread));
+    let chunk = p.bytes / n as f64;
+    let root = 0usize;
+    let mut ready = vec![f64::INFINITY; n]; // when the rank holds its subtree block
+    let mut b = SimBreakdown::default();
+    // Root preprocessing: Z modes compress each chunk once (whole buffer).
+    ready[root] = match p.algo {
+        Algo::Plain => 0.0,
+        Algo::Cprp2p => 0.0,
+        Algo::CColl | Algo::Zccl => p.bytes / comp,
+    };
+    let order = bfs_order(root, n);
+    let mut done = vec![0.0f64; n];
+    let subtree_count = subtree_sizes(root, n);
+    for &r in &order {
+        let (_, sends) = binomial_bcast(r, root, n);
+        let mut nic_free = ready[r];
+        for s in &sends {
+            let sub_bytes = subtree_count[s.peer] as f64 * chunk;
+            let (payload, pre, post) = match p.algo {
+                Algo::Plain => (sub_bytes, 0.0, 0.0),
+                // CPRP2P compresses the whole forwarded block per hop and
+                // the child decompresses it on arrival.
+                Algo::Cprp2p => {
+                    (sub_bytes * p.cfrac(), sub_bytes / comp, sub_bytes / decomp)
+                }
+                // Z modes forward per-rank frames untouched.
+                Algo::CColl | Algo::Zccl => (sub_bytes * p.cfrac(), 0.0, 0.0),
+            };
+            nic_free += pre;
+            let arrive = nic_free + cm.link_s(payload);
+            nic_free += payload / cm.link_bps;
+            ready[s.peer] = arrive + post;
+        }
+        // Own completion: Z modes decompress only the own chunk.
+        done[r] = match p.algo {
+            Algo::Plain | Algo::Cprp2p => nic_free.max(ready[r]),
+            Algo::CColl | Algo::Zccl => nic_free.max(ready[r]) + chunk / decomp,
+        };
+    }
+    let depth = tree_rounds(n) as f64;
+    match p.algo {
+        Algo::Plain => b.comm_s = depth * cm.link_s(p.bytes / 2.0),
+        Algo::Cprp2p => {
+            b.comm_s = depth * cm.link_s(p.bytes / 2.0 * p.cfrac());
+            b.compress_s = p.bytes / comp; // ~half the data per level, x levels
+            b.decompress_s = p.bytes / decomp;
+        }
+        Algo::CColl | Algo::Zccl => {
+            b.comm_s = depth * cm.link_s(p.bytes / 2.0 * p.cfrac());
+            b.compress_s = p.bytes / comp;
+            b.decompress_s = chunk / decomp;
+        }
+    }
+    SimReport::from_ranks(done, b)
+}
+
+/// One lockstep ring round: every rank must wait for its predecessor's
+/// readiness before its receive completes.
+fn lockstep_ring(t: &mut [f64], step: f64) {
+    let n = t.len();
+    let prev: Vec<f64> = t.to_vec();
+    for r in 0..n {
+        let src = (r + n - 1) % n;
+        t[r] = prev[r].max(prev[src]) + step;
+    }
+}
+
+fn bfs_order(root: usize, n: usize) -> Vec<usize> {
+    let mut order = vec![root];
+    let mut i = 0;
+    while i < order.len() {
+        let (_, sends) = binomial_bcast(order[i], root, n);
+        for s in sends {
+            order.push(s.peer);
+        }
+        i += 1;
+    }
+    order
+}
+
+fn subtree_sizes(root: usize, n: usize) -> Vec<usize> {
+    let mut sizes = vec![0usize; n];
+    // Process ranks deepest-first (reverse BFS) accumulating children.
+    let order = bfs_order(root, n);
+    for &r in order.iter().rev() {
+        let (_, sends) = binomial_bcast(r, root, n);
+        sizes[r] = 1 + sends.iter().map(|s| sizes[s.peer]).sum::<usize>();
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(algo: Algo, n: usize, mb: f64, ratio: f64, mt: bool) -> SimParams {
+        SimParams {
+            n,
+            bytes: mb * 1e6,
+            algo,
+            kind: CompressorKind::FzLight,
+            multithread: mt,
+            ratio,
+        }
+    }
+
+    #[test]
+    fn subtree_sizes_sum_to_n() {
+        for n in [1usize, 2, 5, 8, 13, 128] {
+            let s = subtree_sizes(0, n);
+            assert_eq!(s[0], n);
+        }
+    }
+
+    #[test]
+    fn zccl_allgather_beats_cprp2p() {
+        // Fig. 10's shape: ZCCL > CPRP2P by ~2-4x at 64 ranks.
+        let cm = CostModel::paper_broadwell();
+        let z = sim_allgather(&p(Algo::Zccl, 64, 300.0, 10.0, false), &cm);
+        let c = sim_allgather(&p(Algo::Cprp2p, 64, 300.0, 10.0, false), &cm);
+        let speedup = c.makespan_s / z.makespan_s;
+        assert!(speedup > 1.5 && speedup < 30.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn zccl_allreduce_beats_plain_mpi() {
+        // Fig. 12: ZCCL ST ~1.9x, MT ~3.5x over MPI at 64 nodes / 600 MB.
+        let cm = CostModel::paper_broadwell();
+        let mpi = sim_allreduce(&p(Algo::Plain, 64, 600.0, 10.0, false), &cm);
+        let st = sim_allreduce(&p(Algo::Zccl, 64, 600.0, 10.0, false), &cm);
+        let mt = sim_allreduce(&p(Algo::Zccl, 64, 600.0, 10.0, true), &cm);
+        let s_st = mpi.makespan_s / st.makespan_s;
+        let s_mt = mpi.makespan_s / mt.makespan_s;
+        assert!(s_st > 1.0, "ST speedup {s_st} should exceed 1");
+        assert!(s_mt > s_st, "MT {s_mt} should beat ST {s_st}");
+        assert!(s_mt < 12.0, "MT speedup {s_mt} implausible");
+    }
+
+    #[test]
+    fn zccl_bcast_speedup_grows_with_ratio() {
+        let cm = CostModel::paper_broadwell();
+        let plain = sim_bcast(&p(Algo::Plain, 64, 300.0, 1.0, true), &cm);
+        let lo = sim_bcast(&p(Algo::Zccl, 64, 300.0, 5.0, true), &cm);
+        let hi = sim_bcast(&p(Algo::Zccl, 64, 300.0, 30.0, true), &cm);
+        assert!(plain.makespan_s / lo.makespan_s > 1.0);
+        assert!(
+            plain.makespan_s / hi.makespan_s > plain.makespan_s / lo.makespan_s,
+            "higher ratio must help more"
+        );
+    }
+
+    #[test]
+    fn cprp2p_bcast_pays_per_hop_codec() {
+        let cm = CostModel::paper_broadwell();
+        let z = sim_bcast(&p(Algo::Zccl, 64, 300.0, 10.0, false), &cm);
+        let c = sim_bcast(&p(Algo::Cprp2p, 64, 300.0, 10.0, false), &cm);
+        assert!(c.makespan_s > z.makespan_s);
+        assert!(c.breakdown.compress_s > 2.0 * z.breakdown.compress_s);
+    }
+
+    #[test]
+    fn reduce_scatter_overlap_reduces_exposed_comm() {
+        let cm = CostModel::paper_broadwell();
+        let blocking = sim_reduce_scatter(&p(Algo::CColl, 64, 300.0, 10.0, false), &cm);
+        let piped = sim_reduce_scatter(&p(Algo::Zccl, 64, 300.0, 10.0, false), &cm);
+        assert!(piped.breakdown.comm_s < blocking.breakdown.comm_s);
+        assert!(piped.makespan_s <= blocking.makespan_s);
+    }
+
+    #[test]
+    fn scaling_shape_monotone() {
+        // Fig. 13: fixed data size, growing node count — ZCCL stays ahead
+        // of plain MPI at every n.
+        let cm = CostModel::paper_broadwell();
+        for n in [2usize, 4, 8, 16, 32, 64, 128] {
+            let mpi = sim_allreduce(&p(Algo::Plain, n, 678.0, 28.0, false), &cm);
+            let z = sim_allreduce(&p(Algo::Zccl, n, 678.0, 28.0, true), &cm);
+            assert!(
+                z.makespan_s < mpi.makespan_s,
+                "n={n}: zccl {} vs mpi {}",
+                z.makespan_s,
+                mpi.makespan_s
+            );
+        }
+    }
+
+    #[test]
+    fn single_rank_degenerate() {
+        let cm = CostModel::paper_broadwell();
+        let r = sim_allreduce(&p(Algo::Zccl, 1, 10.0, 10.0, false), &cm);
+        assert!(r.makespan_s < 0.2);
+    }
+}

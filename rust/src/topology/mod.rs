@@ -1,0 +1,216 @@
+//! Communication schedules: ring and binomial tree.
+//!
+//! These are the two algorithm families the paper integrates compression
+//! into — the ring (allgather / reduce-scatter, §3.1.1–3.1.2) and the
+//! MPICH binomial tree (bcast / scatter, §4.5).
+
+/// Ring neighbours of `rank` in a communicator of `n`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingNeighbors {
+    /// Rank we send to (`rank + 1`).
+    pub next: usize,
+    /// Rank we receive from (`rank - 1`).
+    pub prev: usize,
+}
+
+/// Ring neighbours.
+pub fn ring(rank: usize, n: usize) -> RingNeighbors {
+    debug_assert!(rank < n && n > 0);
+    RingNeighbors { next: (rank + 1) % n, prev: (rank + n - 1) % n }
+}
+
+/// In the standard ring schedule, the chunk that `rank` *sends* in round
+/// `round` (0-based) of an allgather / the chunk it contributes in
+/// reduce-scatter.
+pub fn ring_send_chunk(rank: usize, round: usize, n: usize) -> usize {
+    (rank + n - round % n) % n
+}
+
+/// The chunk `rank` *receives* in round `round` of the ring schedule.
+pub fn ring_recv_chunk(rank: usize, round: usize, n: usize) -> usize {
+    (rank + n - round % n - 1) % n
+}
+
+/// One step of a binomial-tree schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreeStep {
+    /// Round index (0-based; round `k` spans distance `2^k` in the
+    /// standard MPICH formulation counting down from the top bit).
+    pub round: usize,
+    /// Peer rank for this step.
+    pub peer: usize,
+}
+
+/// Binomial-tree broadcast schedule for `rank` rooted at `root`.
+///
+/// Returns `(recv_from, sends)`: the (at most one) parent this rank
+/// receives from, then the ordered list of children it forwards to.
+/// Matches MPICH's `MPIR_Bcast_intra_binomial`: relative rank
+/// `vrank = (rank - root) mod n`; in the receiving phase the mask grows
+/// from 1, in the sending phase it shrinks back down.
+pub fn binomial_bcast(rank: usize, root: usize, n: usize) -> (Option<TreeStep>, Vec<TreeStep>) {
+    debug_assert!(rank < n && root < n && n > 0);
+    let vrank = (rank + n - root) % n;
+    let logtop = tree_rounds(n);
+    // Receive phase: the lowest set bit of vrank names the parent; the
+    // round is the step at which the parent reaches this subtree (the root
+    // sends its largest-mask child first, at round 0).
+    let mut recv = None;
+    let mut mask = 1usize;
+    while mask < n {
+        if vrank & mask != 0 {
+            let vpeer = vrank - mask;
+            let round = logtop - 1 - mask.trailing_zeros() as usize;
+            recv = Some(TreeStep { round, peer: (vpeer + root) % n });
+            break;
+        }
+        mask <<= 1;
+    }
+    if vrank == 0 {
+        mask = 1usize << logtop;
+    }
+    // Send phase (MPICH mask-halving): children get masks below our own
+    // lowest set bit, largest (earliest round) first.
+    let mut sends = Vec::new();
+    let mut m = mask >> 1;
+    while m > 0 {
+        let vchild = vrank + m;
+        if vchild < n {
+            sends.push(TreeStep {
+                round: logtop - 1 - m.trailing_zeros() as usize,
+                peer: (vchild + root) % n,
+            });
+        }
+        m >>= 1;
+    }
+    (recv, sends)
+}
+
+/// Number of rounds a binomial tree takes over `n` ranks (`ceil(log2 n)`).
+pub fn tree_rounds(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS as usize - (n - 1).leading_zeros() as usize
+    }
+}
+
+/// The set of descendant ranks of `rank` in the binomial scatter tree
+/// rooted at `root` (the ranks whose data must flow through `rank`),
+/// including `rank` itself. Used by Z-Scatter to forward only the needed
+/// compressed chunks.
+pub fn binomial_subtree(rank: usize, root: usize, n: usize) -> Vec<usize> {
+    let (_, sends) = binomial_bcast(rank, root, n);
+    let mut out = vec![rank];
+    for s in sends {
+        out.extend(binomial_subtree(s.peer, root, n));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_chunks_cover_everything() {
+        // Over n-1 rounds of the allgather schedule, each rank receives all
+        // chunks except its own.
+        let n = 8;
+        for rank in 0..n {
+            let mut got = vec![false; n];
+            got[rank] = true;
+            for round in 0..n - 1 {
+                let c = ring_recv_chunk(rank, round, n);
+                assert!(!got[c], "duplicate chunk {c} at rank {rank} round {round}");
+                got[c] = true;
+            }
+            assert!(got.iter().all(|&g| g));
+        }
+    }
+
+    #[test]
+    fn ring_send_matches_prev_recv() {
+        // What rank r sends in round t is what rank r+1 receives in round t.
+        let n = 7;
+        for rank in 0..n {
+            for round in 0..n - 1 {
+                let sent = ring_send_chunk(rank, round, n);
+                let recv = ring_recv_chunk((rank + 1) % n, round, n);
+                assert_eq!(sent, recv);
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_reaches_everyone_once() {
+        for n in [1usize, 2, 3, 4, 5, 8, 13, 16, 64, 100] {
+            for root in [0, n / 2, n - 1] {
+                let mut received = vec![0usize; n];
+                received[root] += 1; // root starts with the data
+                for rank in 0..n {
+                    let (recv, _) = binomial_bcast(rank, root, n);
+                    if let Some(r) = recv {
+                        assert_ne!(rank, root, "root must not receive");
+                        let _ = r;
+                        received[rank] += 1;
+                    }
+                }
+                for (rank, &c) in received.iter().enumerate() {
+                    assert_eq!(c, 1, "rank {rank} n {n} root {root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_send_recv_pair_up() {
+        // Every child's recv step must appear in its parent's send list
+        // with the same round.
+        for n in [2usize, 5, 8, 16, 33] {
+            let root = 1 % n;
+            for rank in 0..n {
+                let (recv, _) = binomial_bcast(rank, root, n);
+                if let Some(step) = recv {
+                    let (_, parent_sends) = binomial_bcast(step.peer, root, n);
+                    assert!(
+                        parent_sends.iter().any(|s| s.peer == rank && s.round == step.round),
+                        "n={n} rank={rank} parent={} round={}",
+                        step.peer,
+                        step.round
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_log2() {
+        assert_eq!(tree_rounds(1), 0);
+        assert_eq!(tree_rounds(2), 1);
+        assert_eq!(tree_rounds(8), 3);
+        assert_eq!(tree_rounds(9), 4);
+        assert_eq!(tree_rounds(128), 7);
+    }
+
+    #[test]
+    fn subtree_partition() {
+        // The root's subtree is everyone; subtrees of the root's children
+        // partition the non-root ranks.
+        let (n, root) = (16, 3);
+        let all = binomial_subtree(root, root, n);
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+        let (_, children) = binomial_bcast(root, root, n);
+        let mut seen = vec![false; n];
+        seen[root] = true;
+        for c in children {
+            for r in binomial_subtree(c.peer, root, n) {
+                assert!(!seen[r], "rank {r} in two subtrees");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

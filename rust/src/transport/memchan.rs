@@ -1,0 +1,272 @@
+//! In-process transport: every rank is a thread, links are unbounded
+//! lock-free channels. This is the default substrate for tests, examples
+//! and real-execution benchmarks (DESIGN.md §2: the paper's 128-node
+//! cluster is simulated; small-scale correctness runs are real).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread;
+
+use super::{RecvHandle, Transport};
+use crate::{Error, Result};
+
+type Packet = (u64, Vec<u8>); // (tag, payload)
+
+/// One rank's endpoint in an in-process fabric.
+pub struct MemTransport {
+    rank: usize,
+    size: usize,
+    /// Senders to each peer (index = destination rank).
+    tx: Vec<Sender<Packet>>,
+    /// Receivers from each peer (index = source rank).
+    rx: Vec<Receiver<Packet>>,
+    /// Messages that arrived but have not been matched yet, per (src, tag).
+    unmatched: HashMap<(usize, u64), VecDeque<Vec<u8>>>,
+}
+
+/// Factory for a set of fully-connected [`MemTransport`] endpoints.
+pub struct MemFabric;
+
+impl MemFabric {
+    /// Create `n` connected endpoints.
+    pub fn endpoints(n: usize) -> Vec<MemTransport> {
+        // matrix[s][d] = channel from s to d.
+        let mut txs: Vec<Vec<Option<Sender<Packet>>>> = (0..n)
+            .map(|_| (0..n).map(|_| None).collect())
+            .collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Packet>>>> = (0..n)
+            .map(|_| (0..n).map(|_| None).collect())
+            .collect();
+        for s in 0..n {
+            for d in 0..n {
+                let (tx, rx) = channel();
+                txs[s][d] = Some(tx);
+                rxs[d][s] = Some(rx);
+            }
+        }
+        txs.into_iter()
+            .zip(rxs)
+            .enumerate()
+            .map(|(rank, (tx_row, rx_row))| MemTransport {
+                rank,
+                size: n,
+                tx: tx_row.into_iter().map(Option::unwrap).collect(),
+                rx: rx_row.into_iter().map(Option::unwrap).collect(),
+                unmatched: HashMap::new(),
+            })
+            .collect()
+    }
+
+    /// Spawn `n` rank threads running `f` and return their results in rank
+    /// order. Panics in any rank propagate.
+    pub fn run<R, F>(n: usize, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(&mut MemTransport) -> R + Send + Sync + 'static,
+    {
+        let endpoints = Self::endpoints(n);
+        let f = std::sync::Arc::new(f);
+        let joins: Vec<thread::JoinHandle<R>> = endpoints
+            .into_iter()
+            .map(|mut t| {
+                let f = f.clone();
+                thread::Builder::new()
+                    .name(format!("rank-{}", t.rank))
+                    .stack_size(8 << 20)
+                    .spawn(move || f(&mut t))
+                    .expect("spawn rank thread")
+            })
+            .collect();
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("rank thread panicked"))
+            .collect()
+    }
+}
+
+impl MemTransport {
+    /// Drain every pending packet from `src` into the unmatched store,
+    /// returning true if `(src, tag)` became available.
+    fn pump(&mut self, src: usize, tag: u64) -> Result<bool> {
+        loop {
+            match self.rx[src].try_recv() {
+                Ok((t, payload)) => {
+                    if t == tag {
+                        self.unmatched.entry((src, t)).or_default().push_back(payload);
+                        return Ok(true);
+                    }
+                    self.unmatched.entry((src, t)).or_default().push_back(payload);
+                }
+                Err(TryRecvError::Empty) => return Ok(false),
+                Err(TryRecvError::Disconnected) => {
+                    return Err(Error::transport(format!(
+                        "rank {} disconnected from rank {}",
+                        src, self.rank
+                    )))
+                }
+            }
+        }
+    }
+
+    fn take_unmatched(&mut self, src: usize, tag: u64) -> Option<Vec<u8>> {
+        let q = self.unmatched.get_mut(&(src, tag))?;
+        let msg = q.pop_front();
+        if q.is_empty() {
+            self.unmatched.remove(&(src, tag));
+        }
+        msg
+    }
+}
+
+impl Transport for MemTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()> {
+        if to >= self.size {
+            return Err(Error::invalid(format!("send to rank {to} of {}", self.size)));
+        }
+        self.tx[to]
+            .send((tag, data.to_vec()))
+            .map_err(|_| Error::transport(format!("rank {to} receiver dropped")))
+    }
+
+    fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>> {
+        if from >= self.size {
+            return Err(Error::invalid(format!("recv from rank {from} of {}", self.size)));
+        }
+        loop {
+            if let Some(m) = self.take_unmatched(from, tag) {
+                return Ok(m);
+            }
+            // Block on the channel; push non-matching tags aside.
+            match self.rx[from].recv() {
+                Ok((t, payload)) => {
+                    self.unmatched.entry((from, t)).or_default().push_back(payload);
+                }
+                Err(_) => {
+                    return Err(Error::transport(format!(
+                        "rank {from} disconnected (recv tag {tag})"
+                    )))
+                }
+            }
+        }
+    }
+
+    fn try_complete(&mut self, h: &mut RecvHandle) -> Result<bool> {
+        if h.done.is_some() {
+            return Ok(true);
+        }
+        if let Some(m) = self.take_unmatched(h.from, h.tag) {
+            h.done = Some(m);
+            return Ok(true);
+        }
+        self.pump(h.from, h.tag)?;
+        if let Some(m) = self.take_unmatched(h.from, h.tag) {
+            h.done = Some(m);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pingpong() {
+        let results = MemFabric::run(2, |t| {
+            if t.rank() == 0 {
+                t.send(1, 7, b"ping").unwrap();
+                t.recv(1, 8).unwrap()
+            } else {
+                let m = t.recv(0, 7).unwrap();
+                assert_eq!(m, b"ping");
+                t.send(0, 8, b"pong").unwrap();
+                m
+            }
+        });
+        assert_eq!(results[0], b"pong");
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let results = MemFabric::run(2, |t| {
+            if t.rank() == 0 {
+                t.send(1, 1, b"first").unwrap();
+                t.send(1, 2, b"second").unwrap();
+                vec![]
+            } else {
+                // Receive in reverse tag order.
+                let b = t.recv(0, 2).unwrap();
+                let a = t.recv(0, 1).unwrap();
+                assert_eq!(a, b"first");
+                assert_eq!(b, b"second");
+                a
+            }
+        });
+        assert_eq!(results[1], b"first");
+    }
+
+    #[test]
+    fn same_tag_preserves_order() {
+        let results = MemFabric::run(2, |t| {
+            if t.rank() == 0 {
+                for i in 0..10u8 {
+                    t.send(1, 3, &[i]).unwrap();
+                }
+                0
+            } else {
+                for i in 0..10u8 {
+                    assert_eq!(t.recv(0, 3).unwrap(), vec![i]);
+                }
+                1
+            }
+        });
+        assert_eq!(results, vec![0, 1]);
+    }
+
+    #[test]
+    fn irecv_poll_completes() {
+        MemFabric::run(2, |t| {
+            if t.rank() == 0 {
+                // Delay so rank 1 actually polls a few times.
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                t.send(1, 9, b"late").unwrap();
+            } else {
+                let mut h = t.irecv(0, 9);
+                let mut polls = 0u64;
+                while !t.try_complete(&mut h).unwrap() {
+                    polls += 1;
+                }
+                assert_eq!(h.take().unwrap(), b"late");
+                assert!(polls > 0, "expected at least one unfulfilled poll");
+            }
+        });
+    }
+
+    #[test]
+    fn ring_pass_many_ranks() {
+        let n = 8;
+        let results = MemFabric::run(n, move |t| {
+            let me = t.rank();
+            let next = (me + 1) % n;
+            let prev = (me + n - 1) % n;
+            let mut token = vec![me as u8];
+            for round in 0..n as u64 {
+                t.send(next, round, &token).unwrap();
+                token = t.recv(prev, round).unwrap();
+            }
+            token[0] as usize
+        });
+        // After n hops every token returns home.
+        for (r, v) in results.iter().enumerate() {
+            assert_eq!(*v, r);
+        }
+    }
+}

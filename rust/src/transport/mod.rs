@@ -1,0 +1,126 @@
+//! Mini-MPI point-to-point substrate.
+//!
+//! The paper builds on MPI's blocking (`MPI_Send`/`MPI_Recv`) and
+//! nonblocking (`MPI_Isend`/`MPI_Irecv` + progress polling) primitives; we
+//! implement the equivalent from scratch:
+//!
+//! - [`memchan`] — in-process ranks (one thread each) over lock-free
+//!   channels. Used by tests, examples and all real-execution benchmarks.
+//! - [`tcp`] — genuine multi-process transport over a full TCP mesh, for
+//!   leader/worker deployments (`zccl launch` / `zccl worker`).
+//!
+//! Message matching follows MPI semantics: `(source, tag)` pairs, ordered
+//! per pair. Collectives allocate disjoint tag spaces per operation so
+//! concurrent collectives on the same communicator never cross-match.
+//!
+//! The nonblocking API is deliberately *polling-based* ([`RecvHandle`] +
+//! [`Transport::try_complete`]) because the paper's §3.5.2 contribution is
+//! precisely "actively pull communication progress within the compression
+//! and decompression phases".
+
+pub mod memchan;
+pub mod tcp;
+
+use crate::Result;
+
+/// Reserved tag namespace for barriers (collectives must use tags below
+/// this bit).
+pub const BARRIER_TAG_BASE: u64 = 1 << 62;
+
+/// Handle to an outstanding nonblocking receive.
+#[derive(Debug)]
+pub struct RecvHandle {
+    /// Source rank.
+    pub from: usize,
+    /// Match tag.
+    pub tag: u64,
+    pub(crate) done: Option<Vec<u8>>,
+}
+
+impl RecvHandle {
+    fn new(from: usize, tag: u64) -> Self {
+        RecvHandle { from, tag, done: None }
+    }
+    /// Whether the message has already been matched.
+    pub fn is_complete(&self) -> bool {
+        self.done.is_some()
+    }
+    /// Take the payload after completion.
+    pub fn take(self) -> Option<Vec<u8>> {
+        self.done
+    }
+}
+
+/// Point-to-point transport endpoint bound to one rank.
+///
+/// Sends are *eager*: `send` buffers and returns (matching MPI's eager
+/// protocol for the message sizes the collectives use after compression).
+pub trait Transport: Send {
+    /// This endpoint's rank.
+    fn rank(&self) -> usize;
+    /// Communicator size.
+    fn size(&self) -> usize;
+
+    /// Eager-buffered send (completes locally).
+    fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()>;
+
+    /// Blocking receive matching `(from, tag)`.
+    fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>>;
+
+    /// Post a nonblocking receive.
+    fn irecv(&mut self, from: usize, tag: u64) -> RecvHandle {
+        RecvHandle::new(from, tag)
+    }
+
+    /// Poll one outstanding receive; returns true when complete. This is
+    /// the progress engine the PIPE compressor hooks into.
+    fn try_complete(&mut self, h: &mut RecvHandle) -> Result<bool>;
+
+    /// Block until the handle completes and return the payload.
+    fn wait(&mut self, mut h: RecvHandle) -> Result<Vec<u8>> {
+        while !self.try_complete(&mut h)? {
+            std::hint::spin_loop();
+        }
+        Ok(h.take().expect("completed handle has payload"))
+    }
+
+    /// Dissemination barrier over the reserved tag space.
+    fn barrier(&mut self, generation: u64) -> Result<()> {
+        let n = self.size();
+        let me = self.rank();
+        if n <= 1 {
+            return Ok(());
+        }
+        let mut round = 0u64;
+        let mut dist = 1usize;
+        while dist < n {
+            let to = (me + dist) % n;
+            let from = (me + n - dist) % n;
+            let tag = BARRIER_TAG_BASE | (generation << 8) | round;
+            self.send(to, tag, &[])?;
+            self.recv(from, tag)?;
+            dist *= 2;
+            round += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::memchan::MemFabric;
+    use super::*;
+
+    #[test]
+    fn barrier_completes_all_sizes() {
+        for n in [1usize, 2, 3, 5, 8] {
+            let handles = MemFabric::run(n, move |t| {
+                for gen in 0..3u64 {
+                    t.barrier(gen).unwrap();
+                }
+                t.rank()
+            });
+            assert_eq!(handles.len(), n);
+        }
+    }
+}

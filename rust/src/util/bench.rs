@@ -1,0 +1,177 @@
+//! Tiny micro-benchmark harness (the offline stand-in for criterion).
+//!
+//! Usage mirrors the paper's protocol (§4.1): a warm-up stage followed by
+//! an execution stage; we report the mean plus min/max of the execution
+//! stage.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Fastest iteration.
+    pub min_s: f64,
+    /// Slowest iteration.
+    pub max_s: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Throughput in GB/s for `bytes` processed per iteration.
+    pub fn gbps(&self, bytes: usize) -> f64 {
+        if self.mean_s <= 0.0 {
+            return 0.0;
+        }
+        bytes as f64 / self.mean_s / 1e9
+    }
+}
+
+/// Run `f` `warmup` + `iters` times, timing only the final `iters`.
+pub fn measure<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut min_s = f64::INFINITY;
+    let mut max_s: f64 = 0.0;
+    let mut total = 0.0;
+    let iters = iters.max(1);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        min_s = min_s.min(dt);
+        max_s = max_s.max(dt);
+    }
+    Measurement { mean_s: total / iters as f64, min_s, max_s, iters }
+}
+
+/// Run `f` repeatedly until `budget_s` seconds elapse (at least once),
+/// reporting the mean. Good for auto-scaling iteration counts.
+pub fn measure_for<R>(budget_s: f64, mut f: impl FnMut() -> R) -> Measurement {
+    // One warmup call.
+    std::hint::black_box(f());
+    let start = Instant::now();
+    let mut iters = 0usize;
+    let mut min_s = f64::INFINITY;
+    let mut max_s: f64 = 0.0;
+    let mut total = 0.0;
+    while start.elapsed().as_secs_f64() < budget_s || iters == 0 {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        min_s = min_s.min(dt);
+        max_s = max_s.max(dt);
+        iters += 1;
+        if iters > 1_000_000 {
+            break;
+        }
+    }
+    Measurement { mean_s: total / iters as f64, min_s, max_s, iters }
+}
+
+/// Render a simple aligned table to stdout (benchmark harness output).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create with column headers.
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(c);
+                for _ in c.len()..widths[i] {
+                    out.push(' ');
+                }
+            }
+            out.push('\n');
+        };
+        line(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+    /// Render as CSV (for results/ files).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_numbers() {
+        let m = measure(1, 5, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.min_s <= m.mean_s && m.mean_s <= m.max_s);
+        assert!(m.mean_s > 0.0);
+    }
+
+    #[test]
+    fn gbps() {
+        let m = Measurement { mean_s: 0.5, min_s: 0.5, max_s: 0.5, iters: 1 };
+        assert!((m.gbps(1_000_000_000) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("name,value\n"));
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substitutes for common ecosystem crates (this build environment
+//! is fully offline; only `xla` + `anyhow` are vendored). Everything here
+//! is deliberately small and purpose-built:
+//!
+//! - [`par`]   — scoped thread pool / parallel chunk map (≈ rayon subset)
+//! - [`json`]  — minimal JSON writer + parser (manifest + results I/O)
+//! - [`bench`] — micro-benchmark timing harness (≈ criterion subset)
+
+pub mod bench;
+pub mod json;
+pub mod par;

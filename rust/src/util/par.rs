@@ -1,0 +1,100 @@
+//! Minimal data-parallel helpers over `std::thread::scope`.
+//!
+//! The multi-thread compression mode only needs "map a function over the
+//! chunks of a slice, in parallel, preserving order" — this module
+//! provides exactly that with a work-stealing-free atomic cursor.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every element of `items`, in parallel across `threads`
+/// workers, returning results in input order.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut parts: Vec<Vec<(usize, R)>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let cursor = &cursor;
+                let f = &f;
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("par_map worker panicked"));
+        }
+    });
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    for part in parts {
+        for (i, r) in part {
+            slots[i] = Some(r);
+        }
+    }
+    slots.into_iter().map(|s| s.expect("all indices produced")).collect()
+}
+
+/// Parallel map over the `chunk`-sized pieces of `data` (last piece may be
+/// short), preserving order.
+pub fn par_map_chunks<R, F>(data: &[f32], chunk: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&[f32]) -> R + Sync,
+{
+    let pieces: Vec<&[f32]> = data.chunks(chunk.max(1)).collect();
+    par_map(&pieces, threads, |_, p| f(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(&items, 4, |_, &x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        assert_eq!(par_map(&items, 1, |i, &x| x + i), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u8> = vec![];
+        let out: Vec<u8> = par_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn chunk_map() {
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let sums = par_map_chunks(&data, 4, 2, |c| c.iter().sum::<f32>());
+        assert_eq!(sums, vec![6.0, 22.0, 17.0]); // [0..4), [4..8), [8..10)
+    }
+}

@@ -1,0 +1,100 @@
+//! Integration: the full ZCCL collective stack over the REAL TCP mesh
+//! transport (multi-threaded here; `zccl launch` runs the same code
+//! multi-process).
+
+use std::net::{SocketAddr, TcpListener};
+use std::thread;
+use std::time::Duration;
+
+use zccl::collectives::{allreduce, bcast, Communicator, Mode, ReduceOp};
+use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::coordinator::Metrics;
+use zccl::data::fields::{Field, FieldKind};
+use zccl::transport::tcp::TcpTransport;
+
+fn local_addrs(n: usize) -> Vec<SocketAddr> {
+    let ls: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    ls.iter().map(|l| l.local_addr().unwrap()).collect()
+}
+
+fn run_tcp<R: Send + 'static>(
+    n: usize,
+    f: impl Fn(&mut Communicator) -> R + Send + Sync + Clone + 'static,
+) -> Vec<R> {
+    let addrs = local_addrs(n);
+    let joins: Vec<_> = (0..n)
+        .map(|rank| {
+            let addrs = addrs.clone();
+            let f = f.clone();
+            thread::spawn(move || {
+                let mut t =
+                    TcpTransport::connect(rank, &addrs, Duration::from_secs(20)).unwrap();
+                let mut comm = Communicator::new(&mut t);
+                f(&mut comm)
+            })
+        })
+        .collect();
+    joins.into_iter().map(|j| j.join().unwrap()).collect()
+}
+
+#[test]
+fn zccl_allreduce_over_tcp_matches_serial() {
+    let n = 3;
+    let len = 40_000;
+    let eb = 1e-3f64;
+    let out = run_tcp(n, move |comm| {
+        let f = Field::generate(FieldKind::Hurricane, len, 70 + comm.rank() as u64);
+        let mut m = Metrics::default();
+        allreduce(
+            comm,
+            &f.values,
+            ReduceOp::Sum,
+            &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+            &mut m,
+        )
+        .unwrap()
+    });
+    let mut exact = Field::generate(FieldKind::Hurricane, len, 70).values;
+    for r in 1..n {
+        let f = Field::generate(FieldKind::Hurricane, len, 70 + r as u64);
+        for (a, v) in exact.iter_mut().zip(&f.values) {
+            *a += v;
+        }
+    }
+    let tol = (n as f64 + 1.0) * eb * 1.01 + 1e-5;
+    for o in &out {
+        for (a, b) in o.iter().zip(&exact) {
+            assert!(((a - b).abs() as f64) <= tol, "{a} vs {b}");
+        }
+    }
+    // Identical output on every rank.
+    for o in &out[1..] {
+        assert_eq!(o, &out[0]);
+    }
+}
+
+#[test]
+fn bcast_over_tcp_with_segmented_pipeline() {
+    let n = 4;
+    let len = 30_000;
+    let out = run_tcp(n, move |comm| {
+        let data = (comm.rank() == 1).then(|| Field::generate(FieldKind::Rtm, len, 9).values);
+        let mut m = Metrics::default();
+        bcast(
+            comm,
+            data.as_deref(),
+            1,
+            &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3)),
+            &mut m,
+        )
+        .unwrap()
+    });
+    let want = Field::generate(FieldKind::Rtm, len, 9).values;
+    for o in out {
+        assert_eq!(o.len(), want.len());
+        for (a, b) in o.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-3 * 1.001 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Cross-mode equivalence sweep: every collective × every mode × several
+//! rank counts and lengths against a serial oracle, with the error
+//! envelope appropriate to each mode (single-ê for data movement under
+//! ZCCL, depth-scaled for CPRP2P, chain-scaled for computation).
+
+use zccl::collectives::{
+    allgather, allreduce, alltoall, bcast, chunk_ranges, gather, reduce, reduce_scatter,
+    run_ranks, scatter, Mode, ReduceOp,
+};
+use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::coordinator::Metrics;
+use zccl::data::fields::{Field, FieldKind};
+use zccl::topology::tree_rounds;
+
+const EB: f64 = 1e-3;
+
+fn modes() -> Vec<(Mode, &'static str)> {
+    vec![
+        (Mode::plain(), "plain"),
+        (Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(EB)), "cprp2p"),
+        (Mode::ccoll(ErrorBound::Abs(EB)), "ccoll"),
+        (Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(EB)), "zccl"),
+        (Mode::zccl(CompressorKind::Szx, ErrorBound::Abs(EB)), "zccl-szx"),
+        (
+            Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(EB)).with_multithread(true),
+            "zccl-mt",
+        ),
+    ]
+}
+
+fn input(rank: usize, len: usize) -> Vec<f32> {
+    Field::generate(FieldKind::Hurricane, len, 3000 + rank as u64).values
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f64, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            ((a - b).abs() as f64) <= tol,
+            "{ctx} idx {i}: |{a} - {b}| > {tol:.2e}"
+        );
+    }
+}
+
+#[test]
+fn sweep_allgather() {
+    for n in [2usize, 5, 8] {
+        for (mode, name) in modes() {
+            let len = 700;
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                allgather(c, &input(c.rank(), len), &mode, &mut m).unwrap()
+            });
+            let want: Vec<f32> = (0..n).flat_map(|r| input(r, len)).collect();
+            // Data movement: zccl/ccoll = ê; cprp2p = (n-1)ê; plain exact.
+            let tol = match name {
+                "plain" => 1e-7,
+                "cprp2p" => (n as f64 - 1.0) * EB * 1.01 + 1e-6,
+                _ => EB * 1.01 + 1e-6,
+            };
+            for o in out {
+                assert_close(&o, &want, tol, &format!("allgather {name} n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_allreduce_and_reduce_scatter() {
+    for n in [2usize, 6] {
+        for (mode, name) in modes() {
+            let len = 3001;
+            let want = {
+                let mut acc = input(0, len);
+                for r in 1..n {
+                    ReduceOp::Sum.fold(&mut acc, &input(r, len));
+                }
+                acc
+            };
+            let tol = if name == "plain" { 1e-3 } else { 2.0 * (n as f64 + 1.0) * EB + 1e-3 };
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                allreduce(c, &input(c.rank(), len), ReduceOp::Sum, &mode, &mut m).unwrap()
+            });
+            for o in out {
+                assert_close(&o, &want, tol, &format!("allreduce {name} n={n}"));
+            }
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                reduce_scatter(c, &input(c.rank(), len), ReduceOp::Sum, &mode, &mut m).unwrap()
+            });
+            for (range, vals) in out {
+                assert_close(
+                    &vals,
+                    &want[range],
+                    tol,
+                    &format!("reduce_scatter {name} n={n}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_tree_collectives() {
+    for n in [2usize, 7, 8] {
+        let depth = tree_rounds(n) as f64;
+        for (mode, name) in modes() {
+            let len = 900;
+            let payload = input(99, len);
+            // bcast
+            let want = payload.clone();
+            let p2 = payload.clone();
+            let out = run_ranks(n, move |c| {
+                let data = (c.rank() == 0).then(|| p2.clone());
+                let mut m = Metrics::default();
+                bcast(c, data.as_deref(), 0, &mode, &mut m).unwrap()
+            });
+            let tol = match name {
+                "plain" => 1e-7,
+                "cprp2p" => depth * EB * 1.01 + 1e-6,
+                _ => EB * 1.01 + 1e-6,
+            };
+            for o in out {
+                assert_close(&o, &want, tol, &format!("bcast {name} n={n}"));
+            }
+            // scatter
+            let p3 = payload.clone();
+            let out = run_ranks(n, move |c| {
+                let data = (c.rank() == 0).then(|| p3.clone());
+                let mut m = Metrics::default();
+                scatter(c, data.as_deref(), 0, &mode, &mut m).unwrap()
+            });
+            let ranges = chunk_ranges(len, n);
+            for (rank, o) in out.into_iter().enumerate() {
+                assert_close(
+                    &o,
+                    &want[ranges[rank].clone()],
+                    tol,
+                    &format!("scatter {name} n={n} rank={rank}"),
+                );
+            }
+            // gather
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                gather(c, &input(c.rank(), 200), 0, &mode, &mut m).unwrap()
+            });
+            let wantg: Vec<f32> = (0..n).flat_map(|r| input(r, 200)).collect();
+            assert_close(
+                out[0].as_ref().unwrap(),
+                &wantg,
+                tol,
+                &format!("gather {name} n={n}"),
+            );
+            // reduce
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                reduce(c, &input(c.rank(), 500), ReduceOp::Sum, 0, &mode, &mut m).unwrap()
+            });
+            let mut wantr = input(0, 500);
+            for r in 1..n {
+                ReduceOp::Sum.fold(&mut wantr, &input(r, 500));
+            }
+            let rtol = if name == "plain" { 1e-3 } else { 2.0 * (n as f64) * EB + 1e-3 };
+            assert_close(
+                out[0].as_ref().unwrap(),
+                &wantr,
+                rtol,
+                &format!("reduce {name} n={n}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_alltoall() {
+    for n in [2usize, 5] {
+        for (mode, name) in modes() {
+            let len = 1000;
+            let out = run_ranks(n, move |c| {
+                let mut m = Metrics::default();
+                alltoall(c, &input(c.rank(), len), &mode, &mut m).unwrap()
+            });
+            let ranges = chunk_ranges(len, n);
+            let tol = if name == "plain" { 1e-7 } else { EB * 1.01 + 1e-6 };
+            for (rank, o) in out.into_iter().enumerate() {
+                let want: Vec<f32> = (0..n)
+                    .flat_map(|src| input(src, len)[ranges[rank].clone()].to_vec())
+                    .collect();
+                assert_close(&o, &want, tol, &format!("alltoall {name} n={n} rank={rank}"));
+            }
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Statistical validation of the paper's §3.2 error-propagation theory.
+//!
+//! - **Theorem 1 / Corollary 1**: the Sum-reduced error over n ranks is
+//!   ~N(0, nσ²); within ±(2/3)√n·ê with probability ≈95.44% under
+//!   ê ≈ 3σ. We check the √n scaling of the measured error std and the
+//!   coverage probability.
+//! - **Corollary 2**: Average shrinks the error std by √n vs Sum (variance
+//!   by n).
+//! - **Theorem 2**: Max/Min error variance stays bounded by
+//!   (2 − (n+2)/2ⁿ)σ² < 2σ² — i.e. it does NOT grow with n.
+//!
+//! The "compressor" here is the real fZ-light quantizer, so the error
+//! distribution is the real quantization error, not injected noise.
+
+use zccl::collectives::{allreduce, run_ranks, Mode, ReduceOp};
+use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::coordinator::Metrics;
+use zccl::data::fields::{Field, FieldKind};
+
+const EB: f64 = 1e-3;
+
+/// Run a ZCCL Sum/Avg/... allreduce at n ranks and return the pointwise
+/// errors vs the exact serial reduction.
+fn reduce_errors(n: usize, len: usize, op: ReduceOp, seed: u64) -> Vec<f64> {
+    let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(EB));
+    let out = run_ranks(n, move |c| {
+        let f = Field::generate(FieldKind::Nyx, len, seed + c.rank() as u64);
+        let mut m = Metrics::default();
+        allreduce(c, &f.values, op, &mode, &mut m).unwrap()
+    });
+    let mut exact = Field::generate(FieldKind::Nyx, len, seed).values;
+    for r in 1..n {
+        let f = Field::generate(FieldKind::Nyx, len, seed + r as u64);
+        op.fold(&mut exact, &f.values);
+    }
+    op.finish(&mut exact, n);
+    out[0].iter().zip(&exact).map(|(a, b)| *a as f64 - *b as f64).collect()
+}
+
+fn std_dev(errs: &[f64]) -> f64 {
+    let n = errs.len() as f64;
+    let mu = errs.iter().sum::<f64>() / n;
+    (errs.iter().map(|e| (e - mu) * (e - mu)).sum::<f64>() / n).sqrt()
+}
+
+#[test]
+fn theorem1_sum_error_std_grows_like_sqrt_n() {
+    let len = 1 << 15;
+    let s2 = std_dev(&reduce_errors(2, len, ReduceOp::Sum, 100));
+    let s8 = std_dev(&reduce_errors(8, len, ReduceOp::Sum, 100));
+    // σ(8 ranks)/σ(2 ranks) should be ≈ √(8/2) = 2 — allow a wide band
+    // (the chain includes one extra allgather compression).
+    let ratio = s8 / s2;
+    assert!(
+        (1.2..4.0).contains(&ratio),
+        "sum error std should grow ~sqrt(n): sigma2={s2:.2e} sigma8={s8:.2e} ratio={ratio:.2}"
+    );
+    // And both stay far below the deterministic worst case n·ê.
+    assert!(s8 < 8.0 * EB);
+}
+
+#[test]
+fn theorem1_95pct_coverage_with_measured_sigma() {
+    // Theorem 1 proper: err_sum ~ N(0, k·σ²) over a k-hop aggregation
+    // chain, so |err| <= 2·√k·σ w.p. 95.44%. The paper's Corollary 1
+    // substitutes ê ≈ 3σ, which holds for their near-normal compressor
+    // error; fZ-light's quantization error on our synthetic fields is
+    // closer to uniform (σ = ê/√3 ≈ 0.58ê > ê/3), so we test the theorem
+    // with the MEASURED single-hop σ (that is exactly what the theorem
+    // claims — the corollary's constant is a distributional assumption,
+    // recorded as such in EXPERIMENTS.md).
+    let n = 8;
+    let len = 1 << 15;
+    // Measured single-compression error std on this data.
+    let one = {
+        use zccl::compress::{Compressor, FzLight};
+        let f = Field::generate(FieldKind::Nyx, len, 200);
+        let codec = FzLight::default();
+        let dec = codec
+            .decompress(&codec.compress(&f.values, ErrorBound::Abs(EB)).unwrap().bytes)
+            .unwrap();
+        std_dev(
+            &f.values
+                .iter()
+                .zip(&dec)
+                .map(|(a, b)| *a as f64 - *b as f64)
+                .collect::<Vec<_>>(),
+        )
+    };
+    let errs = reduce_errors(n, len, ReduceOp::Sum, 200);
+    // Chain length: n-1 reduce-scatter hops + 1 allgather compression.
+    let k = n as f64;
+    let bound = 2.0 * k.sqrt() * one;
+    let covered = errs.iter().filter(|e| e.abs() <= bound).count() as f64 / errs.len() as f64;
+    assert!(
+        covered >= 0.90,
+        "coverage {covered:.4} below ~95% for 2·sqrt(k)·sigma = {bound:.2e} (sigma1 {one:.2e})"
+    );
+    // The deterministic envelope k·ê must cover everything.
+    let max = errs.iter().fold(0.0f64, |m, e| m.max(e.abs()));
+    assert!(max <= k * EB * 1.01 + 1e-6);
+}
+
+#[test]
+fn corollary2_average_shrinks_error() {
+    // Corollary 2 concerns the aggregation chain itself, so test it on
+    // the binomial reduce-to-root (no final allgather re-compression,
+    // which would add a fresh ±ê to the averaged values and mask the
+    // 1/n shrink — allreduce(Avg) does pay that extra ê; see
+    // EXPERIMENTS.md).
+    use zccl::collectives::reduce;
+    let len = 1 << 14;
+    let n = 8;
+    let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(EB));
+    let run = move |op: ReduceOp, seed: u64| -> Vec<f64> {
+        let out = run_ranks(n, move |c| {
+            let f = Field::generate(FieldKind::Nyx, len, seed + c.rank() as u64);
+            let mut m = Metrics::default();
+            reduce(c, &f.values, op, 0, &mode, &mut m).unwrap()
+        });
+        let mut exact = Field::generate(FieldKind::Nyx, len, seed).values;
+        for r in 1..n {
+            let f = Field::generate(FieldKind::Nyx, len, seed + r as u64);
+            op.fold(&mut exact, &f.values);
+        }
+        op.finish(&mut exact, n);
+        out[0]
+            .as_ref()
+            .unwrap()
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| *a as f64 - *b as f64)
+            .collect()
+    };
+    let sum_std = std_dev(&run(ReduceOp::Sum, 300));
+    let avg_std = std_dev(&run(ReduceOp::Avg, 300));
+    let ratio = sum_std / avg_std.max(1e-18);
+    // Avg = Sum / n: the error std shrinks by exactly n.
+    assert!(
+        ratio > n as f64 * 0.8 && ratio < n as f64 * 1.2,
+        "avg must shrink error ~{n}x: sum {sum_std:.2e} avg {avg_std:.2e} ratio {ratio:.1}"
+    );
+}
+
+#[test]
+fn theorem2_max_error_does_not_grow_with_n() {
+    let len = 1 << 14;
+    let s2 = std_dev(&reduce_errors(2, len, ReduceOp::Max, 400));
+    let s16 = std_dev(&reduce_errors(16, len, ReduceOp::Max, 400));
+    // Theorem 2: variance bounded by 2σ² regardless of n — so the std at
+    // 16 ranks must stay within a small constant of the 2-rank std, not
+    // scale like √8 ≈ 2.8.
+    assert!(
+        s16 < 2.0 * s2 + 0.2 * EB,
+        "max-op error must not accumulate: sigma2={s2:.2e} sigma16={s16:.2e}"
+    );
+    // And stays near a single quantization error.
+    assert!(s16 < 2.0 * EB, "sigma16 {s16:.2e}");
+}
+
+#[test]
+fn zccl_data_movement_error_is_single_eb_regardless_of_n() {
+    // §3.1.1: data movement compresses once, so the bcast error at depth
+    // log2(n) equals the single-compression error — identical for n=2 and
+    // n=16.
+    for n in [2usize, 16] {
+        let payload = Field::generate(FieldKind::Cesm, 1 << 14, 500).values;
+        let want = payload.clone();
+        let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(EB));
+        let out = run_ranks(n, move |c| {
+            let data = (c.rank() == 0).then(|| payload.clone());
+            let mut m = Metrics::default();
+            zccl::collectives::bcast(c, data.as_deref(), 0, &mode, &mut m).unwrap()
+        });
+        for o in out {
+            let max_err = o
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0, f64::max);
+            assert!(max_err <= EB * 1.001 + 1e-7, "n={n}: max err {max_err:.2e}");
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Failure injection and robustness: corrupt/truncated frames must fail
+//! with errors (never panic, never return wrong-length data), and the
+//! codecs must round-trip adversarial inputs.
+
+use zccl::compress::{self, Compressor, CompressorKind, ErrorBound};
+use zccl::data::rng::Rng;
+
+/// Deterministic fuzz: random values at extreme magnitudes, with NaN-free
+/// adversarial patterns, across every codec.
+#[test]
+fn codec_fuzz_roundtrip_bounds() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..40 {
+        let n = 1 + rng.below(9000);
+        let scale = 10f64.powi(rng.below(9) as i32 - 4); // 1e-4 ..= 1e4
+        let data: Vec<f32> = (0..n)
+            .map(|i| {
+                let base = match case % 4 {
+                    0 => rng.normal(),
+                    1 => (i as f64 * 0.01).sin(),
+                    2 => (i % 7) as f64, // step pattern
+                    _ => rng.uniform() - 0.5,
+                };
+                (base * scale) as f32
+            })
+            .collect();
+        for kind in [CompressorKind::FzLight, CompressorKind::Szx, CompressorKind::ZfpAbs] {
+            let eb_rel = [1e-2, 1e-4][case % 2];
+            let eb = ErrorBound::Rel(eb_rel);
+            let eb_abs = eb.resolve(&data);
+            let codec = compress::build(kind);
+            let frame = codec.compress(&data, eb).unwrap();
+            let back = codec.decompress(&frame.bytes).unwrap();
+            assert_eq!(back.len(), data.len(), "{kind:?} case {case}");
+            for (i, (a, b)) in data.iter().zip(&back).enumerate() {
+                let err = (*a as f64 - *b as f64).abs();
+                let tol = eb_abs * (1.0 + 1e-5) + a.abs() as f64 * 1e-6 + 1e-30;
+                assert!(err <= tol, "{kind:?} case {case} idx {i}: {err:.3e} > {tol:.3e}");
+            }
+        }
+    }
+}
+
+/// Bit-flip fuzz: flipping any byte of a frame must produce Err or a
+/// decodable (possibly wrong) value — never a panic or an OOM-sized
+/// allocation.
+#[test]
+fn bitflip_never_panics() {
+    let data: Vec<f32> = (0..3000).map(|i| (i as f32 * 0.01).cos()).collect();
+    for kind in [CompressorKind::FzLight, CompressorKind::Szx] {
+        let codec = compress::build(kind);
+        let frame = codec.compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+        let mut rng = Rng::new(kind.id() as u64);
+        for _ in 0..200 {
+            let mut corrupted = frame.bytes.clone();
+            let pos = rng.below(corrupted.len());
+            corrupted[pos] ^= 1 << rng.below(8);
+            // Result is allowed to be Ok (payload-bit flips change values)
+            // but must never panic and never produce the wrong element
+            // count on Ok.
+            if let Ok(out) = codec.decompress(&corrupted) {
+                assert_eq!(out.len(), data.len());
+            }
+        }
+    }
+}
+
+/// Every truncation point of a frame must yield Err (not panic).
+#[test]
+fn truncation_always_err() {
+    let data: Vec<f32> = (0..2000).map(|i| (i as f32).sqrt()).collect();
+    for kind in CompressorKind::ALL {
+        let codec = compress::build(kind);
+        let frame = codec.compress(&data, ErrorBound::Rel(1e-3)).unwrap();
+        // Exhaustive near the header, sampled through the body.
+        let mut cuts: Vec<usize> = (0..64.min(frame.bytes.len())).collect();
+        let mut c = 64;
+        while c < frame.bytes.len() {
+            cuts.push(c);
+            c += 97;
+        }
+        for cut in cuts {
+            assert!(
+                codec.decompress(&frame.bytes[..cut]).is_err(),
+                "{kind:?}: truncation at {cut} must fail"
+            );
+        }
+    }
+}
+
+/// Cross-codec confusion: an SZx frame handed to the generic decoder
+/// dispatches correctly; a frame with a forged codec id fails cleanly.
+#[test]
+fn codec_dispatch_and_forgery() {
+    let data = vec![1.0f32; 500];
+    let frame = compress::build(CompressorKind::Szx)
+        .compress(&data, ErrorBound::Abs(1e-3))
+        .unwrap();
+    // Generic dispatch works.
+    assert_eq!(compress::decompress(&frame.bytes).unwrap().len(), 500);
+    // Forged codec id: either a clean parse error or a wrong-type error —
+    // decompressing szx bytes as fzlight must not panic.
+    let mut forged = frame.bytes.clone();
+    forged[5] = CompressorKind::FzLight.id();
+    let _ = compress::decompress(&forged); // must not panic
+    // Unknown codec id errors.
+    forged[5] = 0x7F;
+    assert!(compress::decompress(&forged).is_err());
+}
+
+/// Sending a frame through a collective where one rank's data is
+/// pathological (all NaN-free extremes) keeps every rank's output length
+/// correct under all modes.
+#[test]
+fn extreme_values_through_allreduce() {
+    use zccl::collectives::{allreduce, run_ranks, Mode, ReduceOp};
+    use zccl::coordinator::Metrics;
+    let n = 4;
+    let len = 4096;
+    for mode in [
+        Mode::plain(),
+        Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-2)),
+        Mode::cprp2p(CompressorKind::Szx, ErrorBound::Abs(1e-2)),
+    ] {
+        let out = run_ranks(n, move |c| {
+            // Rank 2 contributes huge-magnitude alternating data.
+            let input: Vec<f32> = if c.rank() == 2 {
+                (0..len).map(|i| if i % 2 == 0 { 1e6 } else { -1e6 }).collect()
+            } else {
+                (0..len).map(|i| (i as f32 * 0.001).sin()).collect()
+            };
+            let mut m = Metrics::default();
+            allreduce(c, &input, ReduceOp::Sum, &mode, &mut m).unwrap()
+        });
+        for o in &out {
+            assert_eq!(o.len(), len);
+            assert!(o.iter().all(|v| v.is_finite()));
+        }
+        for o in &out[1..] {
+            // All ranks agree bit-for-bit within each mode (identical
+            // fold order and identical frames).
+            assert_eq!(o.len(), out[0].len());
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Integration: the AOT bridge end to end — load HLO text produced by
+//! `python/compile/aot.py`, compile on the PJRT CPU client, execute, and
+//! check numerics against Rust-side oracles.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) if the
+//! artifact directory is missing so `cargo test` works standalone.
+
+use zccl::runtime::{literal_f32, literal_i32, literal_to_f32, Manifest, Runtime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn lorenzo_kernel_artifact_matches_rust_quantizer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.artifact("lorenzo_quant").unwrap();
+    let module = rt.compile(&dir, spec).unwrap();
+
+    let n = spec.inputs[0].elements();
+    let field = zccl::data::fields::Field::generate(zccl::data::fields::FieldKind::Cesm, n, 5);
+    let x = literal_f32(&field.values, &spec.inputs[0].shape).unwrap();
+    let out = module.run(&[x]).unwrap();
+    assert_eq!(out.len(), 2, "kernel returns (xhat, bits)");
+
+    let xhat = literal_to_f32(&out[0]).unwrap();
+    assert_eq!(xhat.len(), n);
+    // The kernel is the numeric core of fZ-light: xhat = 2eb*round(x/2eb)
+    // with eb = 1e-3 baked in by aot.py.
+    let eb = 1e-3f64;
+    for (i, (a, b)) in field.values.iter().zip(&xhat).enumerate() {
+        let err = (*a as f64 - *b as f64).abs();
+        assert!(err <= eb * (1.0 + 1e-5) + 1e-7, "idx {i}: |{a}-{b}| = {err}");
+    }
+    // bits sanity: small non-negative code lengths.
+    let bits = out[1].to_vec::<i32>().unwrap();
+    assert_eq!(bits.len(), n / 32);
+    assert!(bits.iter().all(|&b| (0..=40).contains(&b)));
+}
+
+#[test]
+fn grad_step_descends_and_matches_eval_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let grad = rt.compile(&dir, manifest.artifact("grad_step").unwrap()).unwrap();
+    let eval = rt.compile(&dir, manifest.artifact("eval_loss").unwrap()).unwrap();
+
+    let params = manifest.load_params().unwrap();
+    let cfg = manifest.config;
+    // Synthetic "shift" task batch: y = x + 1 mod vocab.
+    let mut rng = zccl::data::rng::Rng::new(3);
+    let x: Vec<i32> =
+        (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let y: Vec<i32> = x.iter().map(|&t| (t + 1) % cfg.vocab as i32).collect();
+
+    let mut inputs: Vec<xla::Literal> = params
+        .iter()
+        .map(|(_, shape, vals)| literal_f32(vals, shape).unwrap())
+        .collect();
+    inputs.push(literal_i32(&x, &[cfg.batch, cfg.seq]).unwrap());
+    inputs.push(literal_i32(&y, &[cfg.batch, cfg.seq]).unwrap());
+
+    let out = grad.run(&inputs).unwrap();
+    assert_eq!(out.len(), params.len() + 1);
+    let loss0 = literal_to_f32(&out[0]).unwrap()[0];
+    assert!(loss0.is_finite() && loss0 > 0.0, "loss {loss0}");
+    // Near-uniform initial loss ~ ln(vocab).
+    assert!((loss0 - (cfg.vocab as f32).ln()).abs() < 1.0);
+
+    // SGD step in Rust, then the loss on the same batch must drop.
+    let lr = 0.5f32;
+    let mut new_inputs: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+    for (i, (_, shape, vals)) in params.iter().enumerate() {
+        let g = literal_to_f32(&out[i + 1]).unwrap();
+        let updated: Vec<f32> = vals.iter().zip(&g).map(|(p, gi)| p - lr * gi).collect();
+        new_inputs.push(literal_f32(&updated, shape).unwrap());
+    }
+    new_inputs.push(literal_i32(&x, &[cfg.batch, cfg.seq]).unwrap());
+    new_inputs.push(literal_i32(&y, &[cfg.batch, cfg.seq]).unwrap());
+    let out1 = eval.run(&new_inputs).unwrap();
+    let loss1 = literal_to_f32(&out1[0]).unwrap()[0];
+    assert!(loss1 < loss0, "sgd step must descend: {loss0} -> {loss1}");
+}
+
+#[test]
+fn grad_step_zccl_close_to_plain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let plain = rt.compile(&dir, manifest.artifact("grad_step").unwrap()).unwrap();
+    let zccl = rt.compile(&dir, manifest.artifact("grad_step_zccl").unwrap()).unwrap();
+    let params = manifest.load_params().unwrap();
+    let cfg = manifest.config;
+    let mut rng = zccl::data::rng::Rng::new(4);
+    let x: Vec<i32> =
+        (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let y: Vec<i32> = x.iter().map(|&t| (t + 1) % cfg.vocab as i32).collect();
+    let mut inputs: Vec<xla::Literal> = params
+        .iter()
+        .map(|(_, shape, vals)| literal_f32(vals, shape).unwrap())
+        .collect();
+    inputs.push(literal_i32(&x, &[cfg.batch, cfg.seq]).unwrap());
+    inputs.push(literal_i32(&y, &[cfg.batch, cfg.seq]).unwrap());
+    let a = plain.run(&inputs).unwrap();
+    let b = zccl.run(&inputs).unwrap();
+    // Same loss; gradients within the baked-in error bound.
+    let la = literal_to_f32(&a[0]).unwrap()[0];
+    let lb = literal_to_f32(&b[0]).unwrap()[0];
+    assert!((la - lb).abs() < 1e-6);
+    let eb = manifest.grad_eb as f32;
+    for i in 1..a.len() {
+        let ga = literal_to_f32(&a[i]).unwrap();
+        let gb = literal_to_f32(&b[i]).unwrap();
+        for (p, q) in ga.iter().zip(&gb) {
+            assert!((p - q).abs() <= eb * 1.01 + 1e-7, "grad {i}: {p} vs {q}");
+        }
+    }
+}
