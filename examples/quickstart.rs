@@ -1,14 +1,14 @@
 //! Quickstart: compress a scientific field with fZ-light, then run the
 //! same data through a plain vs ZCCL Allreduce across four in-process
-//! ranks and compare time, traffic and accuracy.
+//! ranks — driven by the persistent [`CollCtx`] API — and compare time,
+//! traffic and accuracy.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use zccl::collectives::{allreduce, run_ranks, Mode, ReduceOp};
+use zccl::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
 use zccl::compress::{stats::quality, Compressor, CompressorKind, ErrorBound, FzLight};
-use zccl::coordinator::Metrics;
 use zccl::data::fields::{Field, FieldKind};
 
 fn main() -> zccl::Result<()> {
@@ -30,25 +30,38 @@ fn main() -> zccl::Result<()> {
         q.psnr
     );
 
-    // --- 2. The same compressor inside a collective. ---------------------
+    // --- 2. The same compressor inside a collective, via CollCtx. --------
+    // The context owns the codec (built once), a scratch-buffer pool and
+    // the metrics sink; iterated calls reuse everything. The old free
+    // functions (`zccl::collectives::allreduce(...)`) still exist as
+    // compatibility shims over a transient context.
     let n = 4;
+    let iters = 3;
     for (label, mode) in [
         ("plain MPI-style", Mode::plain()),
         ("Z-Allreduce (ZCCL)", Mode::zccl(CompressorKind::FzLight, eb)),
     ] {
         let out = run_ranks(n, move |comm| {
-            let f = Field::generate(FieldKind::Hurricane, 1 << 20, 7 + comm.rank() as u64);
-            let mut m = Metrics::default();
+            let mut ctx = CollCtx::over(comm, mode);
+            let f = Field::generate(FieldKind::Hurricane, 1 << 20, 7 + ctx.rank() as u64);
+            let mut result = Vec::new();
             let t0 = std::time::Instant::now();
-            let r = allreduce(comm, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
-            (t0.elapsed().as_secs_f64(), m, r)
+            for _ in 0..iters {
+                // `_into` + the pool: warm iterations don't allocate.
+                ctx.allreduce_into(&f.values, ReduceOp::Sum, &mut result).unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64() / iters as f64;
+            (wall, ctx.take_metrics(), ctx.pool_stats())
         });
         let wall = out.iter().map(|x| x.0).fold(0.0, f64::max);
         let sent: u64 = out.iter().map(|x| x.1.bytes_sent).sum();
+        let pool = out[0].2;
         println!(
-            "{label:20} {n} ranks: {:.3}s, {:.1} MB on the wire",
+            "{label:20} {n} ranks x {iters} iters: {:.3}s/iter, {:.1} MB on the wire, \
+             {} scratch buffers total",
             wall,
-            sent as f64 / 1e6
+            sent as f64 / 1e6,
+            pool.byte_buffers_created + pool.f32_buffers_created
         );
     }
     println!(

@@ -1,12 +1,14 @@
 //! `cargo bench --bench collectives` — real in-process collective wall
 //! times across modes (the small-scale counterpart of Figs. 10–15; the
 //! cluster-scale series come from `zccl bench fig*`).
+//!
+//! All cases drive the collectives through the persistent [`CollCtx`]
+//! API; the `allreduce-iterated` case additionally reports the context's
+//! pool counters to show that warm iterations run without codec
+//! construction or scratch growth.
 
-use zccl::collectives::{
-    allgather, allreduce, bcast, reduce_scatter, run_ranks, scatter, Mode, ReduceOp,
-};
+use zccl::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
 use zccl::compress::{CompressorKind, ErrorBound};
-use zccl::coordinator::Metrics;
 use zccl::data::fields::{Field, FieldKind};
 use zccl::util::bench::Table;
 
@@ -16,7 +18,8 @@ fn modes() -> Vec<(&'static str, Mode)> {
         ("plain", Mode::plain()),
         ("cprp2p", Mode::cprp2p(CompressorKind::FzLight, eb)),
         ("ccoll", Mode::ccoll(eb)),
-        ("zccl", Mode::zccl(CompressorKind::FzLight, eb)),
+        // Exercise the §3.5.1 fixed-pipeline knob through its builder.
+        ("zccl", Mode::zccl(CompressorKind::FzLight, eb).with_pipeline_bytes(1 << 16)),
     ]
 }
 
@@ -40,10 +43,10 @@ fn main() {
 
     bench("allreduce", &mut t, 3, |mode| {
         let out = run_ranks(n, move |c| {
-            let f = Field::generate(FieldKind::Rtm, values, 3 + c.rank() as u64);
-            let mut m = Metrics::default();
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values, 3 + ctx.rank() as u64);
             let t0 = std::time::Instant::now();
-            allreduce(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
+            ctx.allreduce(&f.values, ReduceOp::Sum).unwrap();
             t0.elapsed().as_secs_f64()
         });
         out.into_iter().fold(0.0, f64::max)
@@ -51,10 +54,10 @@ fn main() {
 
     bench("allgather", &mut t, 3, |mode| {
         let out = run_ranks(n, move |c| {
-            let f = Field::generate(FieldKind::Rtm, values / n, 3 + c.rank() as u64);
-            let mut m = Metrics::default();
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values / n, 3 + ctx.rank() as u64);
             let t0 = std::time::Instant::now();
-            allgather(c, &f.values, &mode, &mut m).unwrap();
+            ctx.allgather(&f.values).unwrap();
             t0.elapsed().as_secs_f64()
         });
         out.into_iter().fold(0.0, f64::max)
@@ -62,10 +65,10 @@ fn main() {
 
     bench("reduce_scatter", &mut t, 3, |mode| {
         let out = run_ranks(n, move |c| {
-            let f = Field::generate(FieldKind::Rtm, values, 3 + c.rank() as u64);
-            let mut m = Metrics::default();
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values, 3 + ctx.rank() as u64);
             let t0 = std::time::Instant::now();
-            reduce_scatter(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
+            ctx.reduce_scatter(&f.values, ReduceOp::Sum).unwrap();
             t0.elapsed().as_secs_f64()
         });
         out.into_iter().fold(0.0, f64::max)
@@ -73,11 +76,11 @@ fn main() {
 
     bench("bcast", &mut t, 3, |mode| {
         let out = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
             let data =
-                (c.rank() == 0).then(|| Field::generate(FieldKind::Rtm, values, 3).values);
-            let mut m = Metrics::default();
+                (ctx.rank() == 0).then(|| Field::generate(FieldKind::Rtm, values, 3).values);
             let t0 = std::time::Instant::now();
-            bcast(c, data.as_deref(), 0, &mode, &mut m).unwrap();
+            ctx.bcast(data.as_deref(), 0).unwrap();
             t0.elapsed().as_secs_f64()
         });
         out.into_iter().fold(0.0, f64::max)
@@ -85,15 +88,48 @@ fn main() {
 
     bench("scatter", &mut t, 3, |mode| {
         let out = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
             let data =
-                (c.rank() == 0).then(|| Field::generate(FieldKind::Rtm, values, 3).values);
-            let mut m = Metrics::default();
+                (ctx.rank() == 0).then(|| Field::generate(FieldKind::Rtm, values, 3).values);
             let t0 = std::time::Instant::now();
-            scatter(c, data.as_deref(), 0, &mode, &mut m).unwrap();
+            ctx.scatter(data.as_deref(), 0).unwrap();
             t0.elapsed().as_secs_f64()
         });
         out.into_iter().fold(0.0, f64::max)
     });
+
+    // Iterated allreduce on ONE persistent context — the DDP-loop shape.
+    // Reports first-iteration (cold pool) vs best warm iteration, plus the
+    // pool/codec counters proving the warm path allocates nothing new.
+    let iters = 6;
+    for (mode_name, mode) in modes() {
+        let out = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values, 3 + ctx.rank() as u64);
+            let mut dst = Vec::new();
+            let mut times = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let t0 = std::time::Instant::now();
+                ctx.allreduce_into(&f.values, ReduceOp::Sum, &mut dst).unwrap();
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            (times, ctx.pool_stats(), ctx.codec_builds())
+        });
+        let cold = out.iter().map(|(ts, _, _)| ts[0]).fold(0.0, f64::max);
+        let warm = out
+            .iter()
+            .map(|(ts, _, _)| ts[1..].iter().cloned().fold(f64::INFINITY, f64::min))
+            .fold(0.0, f64::max);
+        let (s, builds) = (&out[0].1, out[0].2);
+        t.row(vec![
+            "allreduce-iterated".into(),
+            mode_name.into(),
+            format!(
+                "{warm:.4} (cold {cold:.4}; codec builds {builds}, pool creates {}B/{}F)",
+                s.byte_buffers_created, s.f32_buffers_created
+            ),
+        ]);
+    }
 
     println!("{}", t.render());
 }

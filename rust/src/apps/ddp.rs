@@ -11,10 +11,10 @@
 
 use std::path::PathBuf;
 
-use crate::collectives::{allreduce, run_ranks, Mode, ReduceOp};
+use crate::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
 use crate::coordinator::Metrics;
 use crate::data::rng::Rng;
-use crate::runtime::{literal_f32, literal_i32, literal_to_f32, Manifest, Runtime};
+use crate::runtime::{literal_f32, literal_i32, literal_to_f32, Literal, Manifest, Runtime};
 use crate::{Error, Result};
 
 /// DDP run configuration.
@@ -98,10 +98,15 @@ pub fn train(cfg: &DdpConfig) -> Result<DdpReport> {
         let module = rt.load(&cfg2.artifact_dir, &artifact)?;
         let mut params: Vec<Vec<f32>> = init.clone();
         let mut records = Vec::new();
-        let mut metrics = Metrics::default();
+        // One persistent collective context for the whole training run:
+        // the codec is built once and the gradient/scratch buffers are
+        // reused every step (the allocator leaves the hot loop entirely).
+        let mut ctx = CollCtx::over(comm, cfg2.mode);
+        let mut flat: Vec<f32> = Vec::new();
+        let mut avg: Vec<f32> = Vec::new();
         for step in 0..cfg2.steps {
-            let (x, y) = batch(mcfg.vocab, mcfg.batch, mcfg.seq, comm.rank(), step, cfg2.seed);
-            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 2);
+            let (x, y) = batch(mcfg.vocab, mcfg.batch, mcfg.seq, ctx.rank(), step, cfg2.seed);
+            let mut inputs: Vec<Literal> = Vec::with_capacity(params.len() + 2);
             for (p, s) in params.iter().zip(&shapes) {
                 inputs.push(literal_f32(p, s)?);
             }
@@ -111,12 +116,12 @@ pub fn train(cfg: &DdpConfig) -> Result<DdpReport> {
             let loss = literal_to_f32(&out[0])?[0];
 
             // Flatten grads -> one allreduce (DDP bucketing).
-            let mut flat = Vec::new();
+            flat.clear();
             for o in &out[1..] {
                 flat.extend(literal_to_f32(o)?);
             }
             let t0 = std::time::Instant::now();
-            let avg = allreduce(comm, &flat, ReduceOp::Avg, &cfg2.mode, &mut metrics)?;
+            ctx.allreduce_into(&flat, ReduceOp::Avg, &mut avg)?;
             let allreduce_s = t0.elapsed().as_secs_f64();
 
             // Local SGD.
@@ -127,7 +132,7 @@ pub fn train(cfg: &DdpConfig) -> Result<DdpReport> {
                     off += 1;
                 }
             }
-            if comm.rank() == 0 {
+            if ctx.rank() == 0 {
                 records.push(StepRecord { step, loss, allreduce_s });
             }
         }
@@ -137,7 +142,7 @@ pub fn train(cfg: &DdpConfig) -> Result<DdpReport> {
             .map(|&v| v as f64 * v as f64)
             .sum::<f64>()
             .sqrt();
-        Ok((records, metrics, norm))
+        Ok((records, ctx.take_metrics(), norm))
     });
 
     let mut steps = Vec::new();
@@ -163,6 +168,10 @@ mod tests {
     use crate::compress::{CompressorKind, ErrorBound};
 
     fn artifacts() -> Option<PathBuf> {
+        if !Runtime::available() {
+            eprintln!("SKIP: built without the 'pjrt' feature");
+            return None;
+        }
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         dir.join("manifest.json").exists().then_some(dir)
     }

@@ -9,7 +9,7 @@
 //! per-phase breakdown, and PSNR/NRMSE of the compressed-stacked image
 //! against the exact serial stack.
 
-use crate::collectives::{allreduce, run_ranks, Mode, ReduceOp};
+use crate::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
 use crate::compress::stats::{quality, Quality};
 use crate::coordinator::Metrics;
 use crate::data::fields::{Field, FieldKind};
@@ -73,12 +73,14 @@ pub fn run(
     seed: u64,
 ) -> crate::Result<StackReport> {
     let results = run_ranks(ranks, move |comm| {
-        // Local stage: sum this rank's images (compute phase).
-        let mut m = Metrics::default();
-        let local = m.time(crate::coordinator::Phase::Compute, || {
+        // Persistent collective context; the app attributes its local
+        // compute time into the same metrics sink.
+        let mut ctx = CollCtx::over(comm, mode);
+        let rank = ctx.rank();
+        let local = ctx.metrics_mut().time(crate::coordinator::Phase::Compute, || {
             let mut acc = vec![0.0f32; rows * cols];
             for i in 0..images_per_rank {
-                let f = partial_image(comm.rank(), i, rows, cols, seed);
+                let f = partial_image(rank, i, rows, cols, seed);
                 for (a, v) in acc.iter_mut().zip(&f.values) {
                     *a += v;
                 }
@@ -86,9 +88,9 @@ pub fn run(
             acc
         });
         let t0 = std::time::Instant::now();
-        let stacked = allreduce(comm, &local, ReduceOp::Sum, &mode, &mut m);
+        let stacked = ctx.allreduce(&local, ReduceOp::Sum);
         let wall = t0.elapsed().as_secs_f64();
-        stacked.map(|s| (s, m, wall))
+        stacked.map(|s| (s, ctx.take_metrics(), wall))
     });
 
     let mut metrics = Metrics::default();

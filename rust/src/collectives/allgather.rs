@@ -7,18 +7,23 @@
 //!   cost and `(N−1)×` worst-case error accumulation. This is the
 //!   baseline the paper criticises.
 //! - `CColl`/`Zccl`: each rank compresses its own chunk exactly **once**
-//!   before the intensive communication, all ranks exchange the 4-byte
-//!   compressed sizes, the ring then forwards *compressed* chunks (ZCCL
+//!   before the intensive communication, all ranks exchange the
+//!   compressed sizes (8 bytes each; see `exchange_sizes` in the parent
+//!   module), the ring then forwards *compressed* chunks (ZCCL
 //!   additionally segments them into a fixed pipeline size so the
 //!   communication is balanced despite unequal compressed sizes), and
 //!   decompression happens exactly once after the last round.
 //!
-//! The internal entry point [`allgather_chunks`] takes a chunk-ownership
-//! `shift` so the allgather stage of the ring allreduce (where rank `r`
-//! owns chunk `(r+1) mod n` after reduce-scatter) reuses the same code.
+//! The implementation is written against [`super::ctx::CollState`]: the
+//! persistent [`super::CollCtx`] passes its long-lived codec + scratch
+//! pool, the free-function shim passes a transient one. The internal
+//! entry point takes a chunk-ownership `shift` so the allgather stage of
+//! the ring allreduce (where rank `r` owns chunk `(r+1) mod n` after
+//! reduce-scatter) reuses the same code.
 
+use super::ctx::CollState;
 use super::{
-    bytes_to_f32s, exchange_sizes, f32s_to_bytes, recv_segmented, send_segmented, Algo,
+    bytes_to_f32s_into, exchange_sizes, f32s_to_bytes_into, recv_segmented, send_segmented, Algo,
     Communicator, Mode, SEG_TAG_SPAN,
 };
 use crate::coordinator::{Metrics, Phase};
@@ -27,6 +32,9 @@ use crate::{Error, Result};
 
 /// Gather every rank's `my_chunk` onto every rank, concatenated in rank
 /// order. Chunk lengths may differ across ranks.
+///
+/// Compatibility shim: builds a transient codec + pool per call. Iterated
+/// callers should use [`super::CollCtx::allgather`].
 pub fn allgather(
     comm: &mut Communicator,
     my_chunk: &[f32],
@@ -36,8 +44,7 @@ pub fn allgather(
     allgather_chunks(comm, my_chunk, 0, mode, m)
 }
 
-/// Ring allgather where rank `r` contributes the chunk with logical index
-/// `(r + shift) mod n`; the output is concatenated in logical chunk order.
+/// Mode-based variant of [`allgather_chunks_with`] (transient state).
 pub(crate) fn allgather_chunks(
     comm: &mut Communicator,
     my_chunk: &[f32],
@@ -45,9 +52,28 @@ pub(crate) fn allgather_chunks(
     mode: &Mode,
     m: &mut Metrics,
 ) -> Result<Vec<f32>> {
+    let mut st = CollState::new(*mode);
+    let mut out = Vec::new();
+    allgather_chunks_with(comm, &mut st, my_chunk, shift, m, &mut out)?;
+    Ok(out)
+}
+
+/// Ring allgather where rank `r` contributes the chunk with logical index
+/// `(r + shift) mod n`; `out` is overwritten with the concatenation in
+/// logical chunk order.
+pub(crate) fn allgather_chunks_with(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    my_chunk: &[f32],
+    shift: usize,
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let n = comm.size();
+    out.clear();
     if n == 1 {
-        return Ok(my_chunk.to_vec());
+        out.extend_from_slice(my_chunk);
+        return Ok(());
     }
     let base = comm.fresh_tags((n as u64 + 2) * SEG_TAG_SPAN);
     let counts_tag = base;
@@ -55,144 +81,174 @@ pub(crate) fn allgather_chunks(
     let round_tag = |t: usize| base + (t as u64 + 1) * SEG_TAG_SPAN;
     let me = comm.rank();
 
-    // Everyone learns every chunk's value count (cheap 4-byte ring).
+    // Everyone learns every chunk's value count (cheap 8-byte ring).
     let t0 = std::time::Instant::now();
-    let by_rank = exchange_sizes(comm, my_chunk.len() as u32, counts_tag)?;
+    let by_rank = exchange_sizes(comm, my_chunk.len() as u64, counts_tag)?;
     m.add(Phase::Other, t0.elapsed().as_secs_f64());
-    let mut counts = vec![0u32; n];
+    let mut counts = vec![0u64; n];
     for (r, c) in by_rank.iter().enumerate() {
         counts[(r + shift) % n] = *c;
     }
-    m.raw_bytes += counts.iter().map(|&c| c as u64 * 4).sum::<u64>();
+    m.raw_bytes += counts.iter().map(|&c| c * 4).sum::<u64>();
     let vrank = me + shift; // virtual rank for the ring chunk schedule
 
-    match mode.algo {
-        Algo::Plain => allgather_plain(comm, my_chunk, vrank, &counts, round_tag, m),
-        Algo::Cprp2p => allgather_cprp2p(comm, my_chunk, vrank, &counts, mode, round_tag, m),
+    match st.mode.algo {
+        Algo::Plain => allgather_plain(comm, st, my_chunk, vrank, &counts, round_tag, m, out),
+        Algo::Cprp2p => allgather_cprp2p(comm, st, my_chunk, vrank, &counts, round_tag, m, out),
         Algo::CColl | Algo::Zccl => {
-            allgather_zccl(comm, my_chunk, vrank, &counts, mode, sizes_tag, round_tag, m)
+            allgather_zccl(comm, st, my_chunk, vrank, &counts, sizes_tag, round_tag, m, out)
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn allgather_plain(
     comm: &mut Communicator,
+    st: &mut CollState,
     my_chunk: &[f32],
     vrank: usize,
-    counts: &[u32],
+    counts: &[u64],
     round_tag: impl Fn(usize) -> u64,
     m: &mut Metrics,
-) -> Result<Vec<f32>> {
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let n = comm.size();
     let me = comm.rank();
     let nb = ring(me, n);
+    let own = vrank % n;
     let mut chunks: Vec<Option<Vec<u8>>> = vec![None; n];
-    chunks[vrank % n] = Some(f32s_to_bytes(my_chunk));
+    let mut mine = st.pool.take_bytes();
+    f32s_to_bytes_into(my_chunk, &mut mine);
+    chunks[own] = Some(mine);
     for t in 0..n - 1 {
         let s = ring_send_chunk(vrank, t, n);
         let r = ring_recv_chunk(vrank, t, n);
         let tag = round_tag(t);
-        let send_buf = chunks[s].as_ref().expect("ring schedule owns sent chunk").clone();
+        let send_buf = chunks[s].as_ref().expect("ring schedule owns sent chunk");
         let t0 = std::time::Instant::now();
-        m.bytes_sent += send_segmented(comm.t, nb.next, tag, &send_buf, usize::MAX)?;
+        m.bytes_sent += send_segmented(comm.t, nb.next, tag, send_buf, usize::MAX)?;
         let got = recv_segmented(comm.t, nb.prev, tag, counts[r] as usize * 4, usize::MAX)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += got.len() as u64;
         chunks[r] = Some(got);
     }
     let t0 = std::time::Instant::now();
-    let mut out = Vec::with_capacity(counts.iter().map(|&c| c as usize).sum());
-    for c in chunks {
-        out.extend(bytes_to_f32s(&c.expect("all chunks gathered"))?);
+    out.reserve(counts.iter().map(|&c| c as usize).sum());
+    for (r, c) in chunks.into_iter().enumerate() {
+        let buf = c.expect("all chunks gathered");
+        bytes_to_f32s_into(&buf, out)?;
+        if r == own {
+            st.pool.put_bytes(buf);
+        }
     }
     m.add(Phase::Other, t0.elapsed().as_secs_f64());
-    Ok(out)
+    Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn allgather_cprp2p(
     comm: &mut Communicator,
+    st: &mut CollState,
     my_chunk: &[f32],
     vrank: usize,
-    counts: &[u32],
-    mode: &Mode,
+    counts: &[u64],
     round_tag: impl Fn(usize) -> u64,
     m: &mut Metrics,
-) -> Result<Vec<f32>> {
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let n = comm.size();
     let me = comm.rank();
     let nb = ring(me, n);
-    let codec = mode.codec();
     // CPRP2P keeps chunks DECOMPRESSED between rounds, so every forward
     // re-compresses (and every hop re-lossy-fies) the data.
     let mut chunks: Vec<Option<Vec<f32>>> = vec![None; n];
-    chunks[vrank % n] = Some(my_chunk.to_vec());
+    let own = vrank % n;
+    let mut mine = st.pool.take_f32();
+    mine.extend_from_slice(my_chunk);
+    chunks[own] = Some(mine);
+    let mut frame = st.pool.take_bytes();
     for t in 0..n - 1 {
         let s = ring_send_chunk(vrank, t, n);
         let r = ring_recv_chunk(vrank, t, n);
         let tag = round_tag(t);
-        let send_plain = chunks[s].as_ref().expect("schedule").clone();
-        let compressed = m.time(Phase::Compress, || codec.compress(&send_plain, mode.eb))?;
+        frame.clear();
+        let send_plain = chunks[s].take().expect("schedule");
+        let t0 = std::time::Instant::now();
+        st.compress_into(&send_plain, &mut frame)?;
+        m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+        chunks[s] = Some(send_plain);
         // The receiver cannot know the compressed size in advance: CPRP2P
         // sends the frame as one message (this is exactly the unbalanced
         // communication §3.1.1 calls out).
         let t0 = std::time::Instant::now();
-        comm.t.send(nb.next, tag, &compressed.bytes)?;
-        m.bytes_sent += compressed.bytes.len() as u64;
+        comm.t.send(nb.next, tag, &frame)?;
+        m.bytes_sent += frame.len() as u64;
         let got = comm.t.recv(nb.prev, tag)?;
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-        let dec = m.time(Phase::Decompress, || crate::compress::decompress(&got))?;
-        if dec.len() != counts[r] as usize {
+        let mut dec = st.pool.take_f32();
+        let t0 = std::time::Instant::now();
+        let cnt = st.decode_into(&got, &mut dec)?;
+        m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+        if cnt != counts[r] as usize {
             return Err(Error::corrupt("cprp2p chunk count mismatch"));
         }
         chunks[r] = Some(dec);
     }
-    let mut out = Vec::with_capacity(counts.iter().map(|&c| c as usize).sum());
+    st.pool.put_bytes(frame);
+    out.reserve(counts.iter().map(|&c| c as usize).sum());
     for c in chunks {
-        out.extend(c.expect("all chunks gathered"));
+        let buf = c.expect("all chunks gathered");
+        out.extend_from_slice(&buf);
+        st.pool.put_f32(buf);
     }
-    Ok(out)
+    Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn allgather_zccl(
     comm: &mut Communicator,
+    st: &mut CollState,
     my_chunk: &[f32],
     vrank: usize,
-    counts: &[u32],
-    mode: &Mode,
+    counts: &[u64],
     sizes_tag: u64,
     round_tag: impl Fn(usize) -> u64,
     m: &mut Metrics,
-) -> Result<Vec<f32>> {
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let n = comm.size();
     let me = comm.rank();
     let nb = ring(me, n);
-    let codec = mode.codec();
 
-    // (1) Compress the local chunk exactly once.
-    let mine = m.time(Phase::Compress, || codec.compress(my_chunk, mode.eb))?;
+    // (1) Compress the local chunk exactly once, into pooled scratch.
+    let mut mine = st.pool.take_bytes();
+    let t0 = std::time::Instant::now();
+    st.compress_into(my_chunk, &mut mine)?;
+    m.add(Phase::Compress, t0.elapsed().as_secs_f64());
 
-    // (2) Synchronise compressed sizes (4 bytes per rank) so every rank
+    // (2) Synchronise compressed sizes (8 bytes per rank) so every rank
     //     can run a *balanced*, fixed-pipeline communication schedule.
     let t0 = std::time::Instant::now();
-    let by_rank = exchange_sizes(comm, mine.bytes.len() as u32, sizes_tag)?;
+    let by_rank = exchange_sizes(comm, mine.len() as u64, sizes_tag)?;
     m.add(Phase::Other, t0.elapsed().as_secs_f64());
-    let mut sizes = vec![0u32; n];
+    let mut sizes = vec![0u64; n];
     for (r, s) in by_rank.iter().enumerate() {
         sizes[(r + vrank - me) % n] = *s;
     }
 
     // (3) N-1 ring rounds forwarding COMPRESSED chunks in fixed segments.
+    let own = vrank % n;
     let mut chunks: Vec<Option<Vec<u8>>> = vec![None; n];
-    chunks[vrank % n] = Some(mine.bytes);
-    let seg = if mode.algo == Algo::Zccl { mode.pipeline_bytes } else { usize::MAX };
+    chunks[own] = Some(mine);
+    let seg = if st.mode.algo == Algo::Zccl { st.mode.pipeline_bytes } else { usize::MAX };
     for t in 0..n - 1 {
         let s = ring_send_chunk(vrank, t, n);
         let r = ring_recv_chunk(vrank, t, n);
         let tag = round_tag(t);
-        let send_buf = chunks[s].as_ref().expect("schedule").clone();
+        let send_buf = chunks[s].as_ref().expect("schedule");
         let t0 = std::time::Instant::now();
-        m.bytes_sent += send_segmented(comm.t, nb.next, tag, &send_buf, seg)?;
+        m.bytes_sent += send_segmented(comm.t, nb.next, tag, send_buf, seg)?;
         let got = recv_segmented(comm.t, nb.prev, tag, sizes[r] as usize, seg)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += got.len() as u64;
@@ -201,21 +257,26 @@ fn allgather_zccl(
 
     // (4) Decompress everything exactly once, after the last round
     //     (including our own frame, so every rank returns identical data —
-    //     MPI allgather semantics).
-    let mut out = Vec::with_capacity(counts.iter().map(|&c| c as usize).sum());
+    //     MPI allgather semantics), straight into the output buffer.
+    out.reserve(counts.iter().map(|&c| c as usize).sum());
     for (r, c) in chunks.into_iter().enumerate() {
         let frame = c.expect("all chunks gathered");
-        let dec = m.time(Phase::Decompress, || crate::compress::decompress(&frame))?;
-        if dec.len() != counts[r] as usize {
+        let t0 = std::time::Instant::now();
+        let cnt = st.decode_into(&frame, out)?;
+        m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+        if cnt != counts[r] as usize {
             return Err(Error::corrupt(format!(
-                "zccl chunk {r}: {} values, expected {}",
-                dec.len(),
+                "zccl chunk {r}: {cnt} values, expected {}",
                 counts[r]
             )));
         }
-        out.extend(dec);
+        if r == own {
+            // Our frame came from the pool; recv'd frames belong to the
+            // transport and are dropped.
+            st.pool.put_bytes(frame);
+        }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -385,5 +446,29 @@ mod tests {
             allgather(c, &[1.0, 2.0], &Mode::plain(), &mut m).unwrap()
         });
         assert_eq!(out[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn into_variant_reuses_destination() {
+        let n = 3;
+        let out = run_ranks(n, move |c| {
+            let mut ctx = crate::collectives::CollCtx::over(
+                c,
+                Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3)),
+            );
+            let mine = rank_chunk(ctx.rank(), 512);
+            let mut dst = Vec::new();
+            ctx.allgather_into(&mine, &mut dst).unwrap();
+            let cap = dst.capacity();
+            ctx.allgather_into(&mine, &mut dst).unwrap();
+            assert_eq!(dst.capacity(), cap, "second call must not regrow dst");
+            dst
+        });
+        let want = expected(n, 512);
+        for o in &out {
+            for (a, b) in o.iter().zip(&want) {
+                assert!((a - b).abs() as f64 <= 1e-3 * 1.001 + 1e-6);
+            }
+        }
     }
 }

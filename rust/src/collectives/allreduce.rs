@@ -6,13 +6,19 @@
 //! balanced pipeline). Per-rank traffic is `2(N−1)/N · D` — bandwidth
 //! optimal — and compression shrinks the constant.
 
-use super::allgather::allgather_chunks;
-use super::{reduce_scatter, Communicator, Mode, ReduceOp};
+use super::allgather::allgather_chunks_with;
+use super::ctx::CollState;
+use super::reduce_scatter::reduce_scatter_with;
+use super::{Communicator, Mode, ReduceOp};
 use crate::coordinator::Metrics;
 use crate::Result;
 
 /// Elementwise-reduce `input` across all ranks; every rank returns the
 /// full reduced vector (identical on all ranks up to compression error).
+///
+/// Compatibility shim: builds a transient codec + pool per call. Iterated
+/// callers should use [`super::CollCtx::allreduce`] /
+/// [`super::CollCtx::allreduce_into`].
 pub fn allreduce(
     comm: &mut Communicator,
     input: &[f32],
@@ -20,20 +26,43 @@ pub fn allreduce(
     mode: &Mode,
     m: &mut Metrics,
 ) -> Result<Vec<f32>> {
+    let mut st = CollState::new(*mode);
+    let mut out = Vec::with_capacity(input.len());
+    allreduce_with(comm, &mut st, input, op, m, &mut out)?;
+    Ok(out)
+}
+
+/// [`allreduce`] against a persistent [`CollState`], writing the reduced
+/// vector into `out` (overwritten; capacity reused across iterations).
+pub(crate) fn allreduce_with(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    op: ReduceOp,
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let n = comm.size();
     if n == 1 {
-        let mut out = input.to_vec();
-        op.finish(&mut out, 1);
-        return Ok(out);
+        out.clear();
+        out.extend_from_slice(input);
+        op.finish(out, 1);
+        return Ok(());
     }
     // Stage 1: reduce-scatter (collective computation framework). Rank r
-    // ends up owning fully-reduced chunk (r+1) mod n.
-    let (_range, mut owned) = reduce_scatter(comm, input, op, mode, m)?;
+    // ends up owning fully-reduced chunk (r+1) mod n. The owned chunk
+    // lives in pooled scratch so iterated calls reuse it. On error paths
+    // pooled buffers are simply dropped (the crate-wide policy — a failed
+    // collective leaves the communicator unusable anyway).
+    let mut owned = st.pool.take_f32();
+    reduce_scatter_with(comm, st, input, op, m, &mut owned)?;
     op.finish(&mut owned, n);
 
     // Stage 2: allgather of the owned chunks (collective data movement
     // framework), with ownership shifted by one.
-    allgather_chunks(comm, &owned, 1, mode, m)
+    allgather_chunks_with(comm, st, &owned, 1, m, out)?;
+    st.pool.put_f32(owned);
+    Ok(())
 }
 
 #[cfg(test)]

@@ -7,51 +7,79 @@
 //! the size pre-exchange so receives post exact buffers (balanced), while
 //! CPRP2P sends opaque frames of unknown size.
 
-use super::{bytes_to_f32s, chunk_ranges, exchange_sizes, f32s_to_bytes, Algo, Communicator, Mode};
+use super::ctx::CollState;
+use super::{
+    bytes_to_f32s_into, chunk_ranges, exchange_sizes, f32s_to_bytes_into, Algo, Communicator,
+    Mode,
+};
 use crate::coordinator::{Metrics, Phase};
 use crate::{Error, Result};
 
 /// Exchange chunks: `input` is split into `n` chunks (chunk `j` goes to
 /// rank `j`); the result concatenates the chunk received from every rank
 /// in rank order.
+///
+/// Compatibility shim: builds a transient codec + pool per call. Iterated
+/// callers should use [`super::CollCtx::alltoall`].
 pub fn alltoall(
     comm: &mut Communicator,
     input: &[f32],
     mode: &Mode,
     m: &mut Metrics,
 ) -> Result<Vec<f32>> {
+    let mut st = CollState::new(*mode);
+    let mut out = Vec::new();
+    alltoall_with(comm, &mut st, input, m, &mut out)?;
+    Ok(out)
+}
+
+/// [`alltoall`] against a persistent [`CollState`]; `out` is overwritten.
+pub(crate) fn alltoall_with(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let n = comm.size();
     let me = comm.rank();
+    out.clear();
     if n == 1 {
-        return Ok(input.to_vec());
+        out.extend_from_slice(input);
+        return Ok(());
     }
     let base = comm.fresh_tags(2 * n as u64);
     let sizes_tag = base + n as u64;
     let ranges = chunk_ranges(input.len(), n);
     m.raw_bytes += (input.len() * 4) as u64;
 
-    // Compress (or serialise) each outgoing chunk exactly once.
-    let codec = mode.compresses().then(|| mode.codec());
+    // Compress (or serialise) each outgoing chunk exactly once, into
+    // pooled per-destination buffers.
+    let compresses = st.mode.compresses();
     let mut outgoing: Vec<Vec<u8>> = Vec::with_capacity(n);
     for r in ranges.iter() {
         let chunk = &input[r.clone()];
-        outgoing.push(match &codec {
-            Some(c) => m.time(Phase::Compress, || c.compress(chunk, mode.eb))?.bytes,
-            None => f32s_to_bytes(chunk),
-        });
+        let mut buf = st.pool.take_bytes();
+        if compresses {
+            let t0 = std::time::Instant::now();
+            st.compress_into(chunk, &mut buf)?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+        } else {
+            f32s_to_bytes_into(chunk, &mut buf);
+        }
+        outgoing.push(buf);
     }
 
-    // ZCCL balances with a size pre-exchange (4 bytes/rank; here we ship
+    // ZCCL balances with a size pre-exchange (8 bytes/rank; here we ship
     // each peer the size of ITS chunk during the pairwise rounds' tag-0
     // message, so reuse exchange_sizes for the total only).
-    if mode.algo == Algo::Zccl {
+    if st.mode.algo == Algo::Zccl {
         let t0 = std::time::Instant::now();
-        let _ = exchange_sizes(comm, outgoing[me].len() as u32, sizes_tag)?;
+        let _ = exchange_sizes(comm, outgoing[me].len() as u64, sizes_tag)?;
         m.add(Phase::Other, t0.elapsed().as_secs_f64());
     }
 
     let mut incoming: Vec<Option<Vec<u8>>> = vec![None; n];
-    incoming[me] = Some(outgoing[me].clone());
     for t in 1..n {
         let to = (me + t) % n;
         let from = (me + n - t) % n;
@@ -66,18 +94,28 @@ pub fn alltoall(
 
     // Decode in rank order. Every rank's input may have a different
     // length, so sizes come from the frames themselves (compressed) or
-    // the byte count (plain).
-    let mut out = Vec::new();
-    for (r, buf) in incoming.into_iter().enumerate() {
-        let buf = buf.ok_or_else(|| Error::corrupt(format!("missing chunk from {r}")))?;
-        match &codec {
-            Some(_) => {
-                out.extend(m.time(Phase::Decompress, || crate::compress::decompress(&buf))?)
-            }
-            None => out.extend(bytes_to_f32s(&buf)?),
+    // the byte count (plain). Our own chunk decodes from `outgoing`
+    // directly (no copy).
+    for r in 0..n {
+        let buf: &[u8] = if r == me {
+            &outgoing[me]
+        } else {
+            incoming[r]
+                .as_deref()
+                .ok_or_else(|| Error::corrupt(format!("missing chunk from {r}")))?
+        };
+        if compresses {
+            let t0 = std::time::Instant::now();
+            st.decode_into(buf, out)?;
+            m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+        } else {
+            bytes_to_f32s_into(buf, out)?;
         }
     }
-    Ok(out)
+    for buf in outgoing {
+        st.pool.put_bytes(buf);
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -8,17 +8,33 @@
 //!   the compressed frame verbatim; every rank decompresses once. Cost
 //!   collapses to `T_comp + T_decom` and the error to a single `ê`.
 
+use super::ctx::CollState;
 use super::{bytes_to_f32s, f32s_to_bytes, Algo, Communicator, Mode};
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::binomial_bcast;
 use crate::{Error, Result};
 
 /// Broadcast `data` (significant at `root` only) to every rank.
+///
+/// Compatibility shim: builds a transient codec per call. Iterated
+/// callers should use [`super::CollCtx::bcast`].
 pub fn bcast(
     comm: &mut Communicator,
     data: Option<&[f32]>,
     root: usize,
     mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let mut st = CollState::new(*mode);
+    bcast_with(comm, &mut st, data, root, m)
+}
+
+/// [`bcast`] against a persistent [`CollState`] (codec built once).
+pub(crate) fn bcast_with(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    data: Option<&[f32]>,
+    root: usize,
     m: &mut Metrics,
 ) -> Result<Vec<f32>> {
     let n = comm.size();
@@ -35,7 +51,7 @@ pub fn bcast(
     let base = comm.fresh_tags(crate::topology::tree_rounds(n) as u64 + 1);
     let (recv_step, send_steps) = binomial_bcast(me, root, n);
 
-    match mode.algo {
+    match st.mode.algo {
         Algo::Plain => {
             let mut buf: Vec<u8> = if me == root {
                 let d = data.unwrap();
@@ -60,7 +76,6 @@ pub fn bcast(
             Ok(out)
         }
         Algo::Cprp2p => {
-            let codec = mode.codec();
             // Every rank holds DECOMPRESSED data between hops.
             let plain: Vec<f32> = if me == root {
                 let d = data.unwrap();
@@ -72,32 +87,44 @@ pub fn bcast(
                 let got = comm.t.recv(step.peer, base + step.round as u64)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
-                m.time(Phase::Decompress, || crate::compress::decompress(&got))?
+                let mut dec = Vec::new();
+                let t0 = std::time::Instant::now();
+                st.decode_into(&got, &mut dec)?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                dec
             };
+            let mut frame = st.pool.take_bytes();
             for s in send_steps {
                 // Re-compress for every forward: the CPRP2P pathology.
-                let frame = m.time(Phase::Compress, || codec.compress(&plain, mode.eb))?;
+                frame.clear();
                 let t0 = std::time::Instant::now();
-                comm.t.send(s.peer, base + s.round as u64, &frame.bytes)?;
+                st.compress_into(&plain, &mut frame)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+                let t0 = std::time::Instant::now();
+                comm.t.send(s.peer, base + s.round as u64, &frame)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-                m.bytes_sent += frame.bytes.len() as u64;
+                m.bytes_sent += frame.len() as u64;
             }
+            st.pool.put_bytes(frame);
             Ok(plain)
         }
         Algo::CColl | Algo::Zccl => {
-            let codec = mode.codec();
             // Root compresses once; the frame travels the tree verbatim.
-            let frame: Vec<u8> = if me == root {
+            let (frame, pooled): (Vec<u8>, bool) = if me == root {
                 let d = data.unwrap();
                 m.raw_bytes += (d.len() * 4) as u64;
-                m.time(Phase::Compress, || codec.compress(d, mode.eb))?.bytes
+                let mut f = st.pool.take_bytes();
+                let t0 = std::time::Instant::now();
+                st.compress_into(d, &mut f)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+                (f, true)
             } else {
                 let step = recv_step.expect("non-root receives");
                 let t0 = std::time::Instant::now();
                 let got = comm.t.recv(step.peer, base + step.round as u64)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
-                got
+                (got, false)
             };
             for s in send_steps {
                 let t0 = std::time::Instant::now();
@@ -107,7 +134,14 @@ pub fn bcast(
             }
             // Decompress exactly once, after forwarding (so children are
             // not delayed behind our decompression).
-            m.time(Phase::Decompress, || crate::compress::decompress(&frame))
+            let mut out = Vec::new();
+            let t0 = std::time::Instant::now();
+            st.decode_into(&frame, &mut out)?;
+            m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+            if pooled {
+                st.pool.put_bytes(frame);
+            }
+            Ok(out)
         }
     }
 }

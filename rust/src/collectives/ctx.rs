@@ -1,0 +1,435 @@
+//! Persistent per-rank collective context — the crate's primary API.
+//!
+//! ZCCL's premise is that a collective's hot path is bandwidth plus
+//! (de)compression; everything else is overhead. The free-function API
+//! paid two avoidable costs on every call: a fresh `Box<dyn Compressor>`
+//! (`Mode::codec()`), and fresh `Vec`s for every compressed frame,
+//! decoded partial and accumulator. C-Coll (arXiv:2304.03890) and gZCCL
+//! (arXiv:2308.05199) both stress reusing pre-registered buffers across
+//! iterations; [`CollCtx`] is that idea as an API:
+//!
+//! - the codec (and, for ZCCL's fZ-light, the PIPE codec) is built once
+//!   at construction and reused for every call;
+//! - a [`ScratchPool`] lends out byte / f32 buffers per call and takes
+//!   them back, so after one warm-up call iterated collectives perform
+//!   **zero pool growth** (observable through [`PoolStats`]);
+//! - the [`Metrics`] sink lives in the context, so callers stop threading
+//!   `&mut Metrics` through every call site.
+//!
+//! The long-standing free functions ([`super::allreduce`] etc.) remain as
+//! compatibility shims that build a transient context per call.
+
+use std::ops::Range;
+
+use super::{allgather, allreduce, alltoall, bcast, gather, reduce, reduce_scatter, scatter};
+use super::{Algo, Communicator, Mode, ReduceOp};
+use crate::compress::{Compressor, CompressorKind, PipeFzLight};
+use crate::coordinator::Metrics;
+use crate::transport::Transport;
+use crate::Result;
+
+/// Counters exposing the scratch pool's behaviour, for regression tests
+/// and capacity planning. All values are cumulative over the pool's life.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Byte buffers newly created because the free list was empty.
+    pub byte_buffers_created: u64,
+    /// f32 buffers newly created because the free list was empty.
+    pub f32_buffers_created: u64,
+    /// Checkouts served from the free list instead of the allocator.
+    pub reuses: u64,
+    /// High-water mark: the largest byte-buffer capacity ever checked in.
+    pub byte_capacity_hwm: usize,
+    /// High-water mark: the largest f32-buffer capacity ever checked in.
+    pub f32_capacity_hwm: usize,
+}
+
+/// A check-out / check-in free list of scratch buffers. Checked-out
+/// buffers are plain owned `Vec`s (so they never fight the borrow
+/// checker); checking one back in clears it but keeps its capacity for
+/// the next caller.
+///
+/// Error-path policy: collectives that bail out mid-call simply drop any
+/// checked-out buffers instead of returning them — a failed collective
+/// leaves the communicator out of sync, so the next successful call (if
+/// any) re-populates the pool with one extra allocation rather than
+/// every call paying an unwind guard.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    bytes: Vec<Vec<u8>>,
+    f32s: Vec<Vec<f32>>,
+    stats: PoolStats,
+}
+
+impl ScratchPool {
+    /// Free-list depth cap per type; buffers checked in beyond this are
+    /// dropped rather than hoarded. Sized so the widest per-call fan-out
+    /// (alltoall checks out one byte buffer per peer) stays fully pooled
+    /// at the rank counts this in-process substrate runs; beyond it the
+    /// pool degrades gracefully to per-call allocation for the overflow.
+    const MAX_FREE: usize = 64;
+
+    /// Check out a cleared byte buffer (reusing capacity when available).
+    pub fn take_bytes(&mut self) -> Vec<u8> {
+        match self.bytes.pop() {
+            Some(b) => {
+                self.stats.reuses += 1;
+                b
+            }
+            None => {
+                self.stats.byte_buffers_created += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Check a byte buffer back in.
+    pub fn put_bytes(&mut self, mut b: Vec<u8>) {
+        self.stats.byte_capacity_hwm = self.stats.byte_capacity_hwm.max(b.capacity());
+        if self.bytes.len() < Self::MAX_FREE {
+            b.clear();
+            self.bytes.push(b);
+        }
+    }
+
+    /// Check out a cleared f32 buffer (reusing capacity when available).
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        match self.f32s.pop() {
+            Some(b) => {
+                self.stats.reuses += 1;
+                b
+            }
+            None => {
+                self.stats.f32_buffers_created += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Check an f32 buffer back in.
+    pub fn put_f32(&mut self, mut b: Vec<f32>) {
+        self.stats.f32_capacity_hwm = self.stats.f32_capacity_hwm.max(b.capacity());
+        if self.f32s.len() < Self::MAX_FREE {
+            b.clear();
+            self.f32s.push(b);
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+}
+
+/// The reusable (communicator-independent) half of a [`CollCtx`]: mode,
+/// instantiated codec(s), scratch pool, and the codec-construction
+/// counter. Collective implementations receive `&mut CollState` so both
+/// the persistent context and the per-call compatibility shims share one
+/// code path.
+pub struct CollState {
+    pub(crate) mode: Mode,
+    pub(crate) codec: Box<dyn Compressor>,
+    /// Pre-built PIPE codec for the §3.5.2 overlap (ZCCL + fZ-light,
+    /// single-thread only — same condition the reduce-scatter used to
+    /// evaluate per call).
+    pub(crate) pipe: Option<PipeFzLight>,
+    pub(crate) pool: ScratchPool,
+    pub(crate) codec_builds: u64,
+}
+
+impl CollState {
+    /// Build the state for `mode`, constructing the codec exactly once.
+    pub fn new(mode: Mode) -> CollState {
+        let codec = mode.codec();
+        let pipe = (mode.algo == Algo::Zccl
+            && mode.kind == CompressorKind::FzLight
+            && !mode.multithread)
+            .then(|| PipeFzLight::with_chunk(mode.pipe_chunk));
+        CollState { mode, codec, pipe, pool: ScratchPool::default(), codec_builds: 1 }
+    }
+
+    /// Compress with the context's codec and error bound, appending to
+    /// `out`.
+    pub(crate) fn compress_into(
+        &mut self,
+        data: &[f32],
+        out: &mut Vec<u8>,
+    ) -> Result<crate::compress::CompressionStats> {
+        self.codec.compress_into(data, self.mode.eb, out)
+    }
+
+    /// Codec-agnostic decode, appending to `out` and returning the count.
+    /// Frames from peers running the same mode hit the resident codec; a
+    /// foreign codec id falls back to a transient build (counted).
+    pub(crate) fn decode_into(&mut self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
+        let kind = crate::compress::peek_codec(bytes)?;
+        if kind == self.codec.kind() {
+            self.codec.decompress_into(bytes, out)
+        } else {
+            self.codec_builds += 1;
+            crate::compress::build(kind).decompress_into(bytes, out)
+        }
+    }
+
+    /// How many codec instances this state has constructed (1 after
+    /// [`CollState::new`]; stable across iterated collectives — the
+    /// regression test for "no per-iteration codec construction").
+    pub fn codec_builds(&self) -> u64 {
+        self.codec_builds
+    }
+
+    /// Scratch pool counters.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+}
+
+/// Persistent per-rank collective context: a [`Communicator`] plus the
+/// reusable [`CollState`] and the [`Metrics`] sink. See the module docs
+/// for the motivation and [`crate::collectives`] for a usage example.
+pub struct CollCtx<'c, 'a> {
+    comm: &'c mut Communicator<'a>,
+    state: CollState,
+    metrics: Metrics,
+}
+
+impl<'c, 'a> CollCtx<'c, 'a> {
+    /// Wrap an existing communicator (keeps its collective-tag sequence,
+    /// so contexts and free functions can interleave on one communicator).
+    pub fn over(comm: &'c mut Communicator<'a>, mode: Mode) -> Self {
+        CollCtx { comm, state: CollState::new(mode), metrics: Metrics::default() }
+    }
+
+    /// This rank.
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// Communicator size.
+    pub fn size(&self) -> usize {
+        self.comm.size()
+    }
+
+    /// The mode this context was built for.
+    pub fn mode(&self) -> &Mode {
+        &self.state.mode
+    }
+
+    /// The resident codec (built once at construction).
+    pub fn codec(&self) -> &dyn Compressor {
+        self.state.codec.as_ref()
+    }
+
+    /// Access the underlying communicator (e.g. for point-to-point calls
+    /// between collectives).
+    pub fn comm(&mut self) -> &mut Communicator<'a> {
+        &mut *self.comm
+    }
+
+    /// Raw transport escape hatch.
+    pub fn transport(&mut self) -> &mut dyn Transport {
+        self.comm.transport()
+    }
+
+    /// Synchronise all ranks.
+    pub fn barrier(&mut self) -> Result<()> {
+        self.comm.barrier()
+    }
+
+    /// Accumulated per-phase timings across every call on this context.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Mutable metrics access (e.g. to attribute app-side compute time).
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    /// Take the accumulated metrics, resetting the sink.
+    pub fn take_metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
+    }
+
+    /// Scratch-pool counters (see [`PoolStats`]).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.state.pool_stats()
+    }
+
+    /// Codec constructions performed by this context (see
+    /// [`CollState::codec_builds`]).
+    pub fn codec_builds(&self) -> u64 {
+        self.state.codec_builds()
+    }
+
+    /// Elementwise-reduce `input` across all ranks; every rank returns the
+    /// full reduced vector.
+    pub fn allreduce(&mut self, input: &[f32], op: ReduceOp) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(input.len());
+        self.allreduce_into(input, op, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`CollCtx::allreduce`] into a caller-owned destination (cleared,
+    /// then filled — capacity is reused across iterations).
+    pub fn allreduce_into(
+        &mut self,
+        input: &[f32],
+        op: ReduceOp,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        allreduce::allreduce_with(self.comm, &mut self.state, input, op, &mut self.metrics, out)
+    }
+
+    /// Reduce + scatter: rank `r` returns `(range, values)` for the chunk
+    /// of the reduced vector it owns.
+    pub fn reduce_scatter(
+        &mut self,
+        input: &[f32],
+        op: ReduceOp,
+    ) -> Result<(Range<usize>, Vec<f32>)> {
+        let mut owned = Vec::new();
+        let range = reduce_scatter::reduce_scatter_with(
+            self.comm,
+            &mut self.state,
+            input,
+            op,
+            &mut self.metrics,
+            &mut owned,
+        )?;
+        Ok((range, owned))
+    }
+
+    /// Gather every rank's `my_chunk` onto every rank, concatenated in
+    /// rank order.
+    pub fn allgather(&mut self, my_chunk: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.allgather_into(my_chunk, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`CollCtx::allgather`] into a caller-owned destination.
+    pub fn allgather_into(&mut self, my_chunk: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        allgather::allgather_chunks_with(
+            self.comm,
+            &mut self.state,
+            my_chunk,
+            0,
+            &mut self.metrics,
+            out,
+        )
+    }
+
+    /// Pairwise exchange: chunk `j` of `input` goes to rank `j`.
+    pub fn alltoall(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        alltoall::alltoall_with(self.comm, &mut self.state, input, &mut self.metrics, &mut out)?;
+        Ok(out)
+    }
+
+    /// Broadcast `data` (significant at `root`) to every rank.
+    pub fn bcast(&mut self, data: Option<&[f32]>, root: usize) -> Result<Vec<f32>> {
+        bcast::bcast_with(self.comm, &mut self.state, data, root, &mut self.metrics)
+    }
+
+    /// Scatter `data` (significant at `root`): rank `r` receives chunk `r`.
+    pub fn scatter(&mut self, data: Option<&[f32]>, root: usize) -> Result<Vec<f32>> {
+        scatter::scatter_with(self.comm, &mut self.state, data, root, &mut self.metrics)
+    }
+
+    /// Gather each rank's `my_chunk` to `root` (others return `None`).
+    pub fn gather(&mut self, my_chunk: &[f32], root: usize) -> Result<Option<Vec<f32>>> {
+        gather::gather_with(self.comm, &mut self.state, my_chunk, root, &mut self.metrics)
+    }
+
+    /// Reduce `input` elementwise onto `root`.
+    pub fn reduce(
+        &mut self,
+        input: &[f32],
+        op: ReduceOp,
+        root: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        reduce::reduce_with(self.comm, &mut self.state, input, op, root, &mut self.metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_ranks;
+    use crate::compress::ErrorBound;
+    use crate::data::fields::{Field, FieldKind};
+
+    #[test]
+    fn pool_checkout_checkin_reuses_capacity() {
+        let mut p = ScratchPool::default();
+        let mut b = p.take_bytes();
+        b.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = b.capacity();
+        p.put_bytes(b);
+        let b2 = p.take_bytes();
+        assert!(b2.is_empty());
+        assert_eq!(b2.capacity(), cap);
+        let s = p.stats();
+        assert_eq!(s.byte_buffers_created, 1);
+        assert_eq!(s.reuses, 1);
+        assert_eq!(s.byte_capacity_hwm, cap);
+    }
+
+    #[test]
+    fn pool_free_list_is_bounded() {
+        let mut p = ScratchPool::default();
+        let many: Vec<Vec<f32>> = (0..ScratchPool::MAX_FREE + 5).map(|_| p.take_f32()).collect();
+        for b in many {
+            p.put_f32(b);
+        }
+        assert!(p.f32s.len() <= ScratchPool::MAX_FREE);
+    }
+
+    #[test]
+    fn state_builds_codec_once() {
+        let st = CollState::new(Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3)));
+        assert_eq!(st.codec_builds(), 1);
+        assert!(st.pipe.is_some(), "zccl + fzlight must pre-build the PIPE codec");
+        let st2 = CollState::new(Mode::ccoll(ErrorBound::Abs(1e-3)));
+        assert!(st2.pipe.is_none(), "ccoll has no PIPE overlap");
+    }
+
+    #[test]
+    fn ctx_collectives_match_free_functions() {
+        let n = 4;
+        let len = 2500;
+        let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3));
+        let via_ctx = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Cesm, len, 40 + ctx.rank() as u64);
+            ctx.allreduce(&f.values, ReduceOp::Sum).unwrap()
+        });
+        let via_free = run_ranks(n, move |c| {
+            let f = Field::generate(FieldKind::Cesm, len, 40 + c.rank() as u64);
+            let mut m = Metrics::default();
+            super::super::allreduce(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap()
+        });
+        assert_eq!(via_ctx, via_free, "ctx path and shim must agree bit-for-bit");
+    }
+
+    #[test]
+    fn ctx_accumulates_metrics_and_interleaves_with_free_functions() {
+        let n = 3;
+        let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3));
+        let ok = run_ranks(n, move |c| {
+            let f = Field::generate(FieldKind::Rtm, 4096, 7 + c.rank() as u64);
+            // Free function first, then a context on the same communicator:
+            // the shared tag sequence must keep the ranks matched up.
+            let mut m = Metrics::default();
+            let a = super::super::allreduce(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
+            let mut ctx = CollCtx::over(c, mode);
+            let b = ctx.allreduce(&f.values, ReduceOp::Sum).unwrap();
+            assert!(ctx.metrics().compress_s > 0.0, "ctx must record phase time");
+            assert!(ctx.take_metrics().total_s() > 0.0);
+            assert_eq!(ctx.metrics().total_s(), 0.0, "take_metrics resets");
+            a == b
+        });
+        assert!(ok.into_iter().all(|x| x));
+    }
+}

@@ -11,7 +11,8 @@
 //! Record format: `u32 count`, then per record `u32 rank, u32 bytes,
 //! payload`.
 
-use super::{bytes_to_f32s, f32s_to_bytes, Algo, Communicator, Mode};
+use super::ctx::CollState;
+use super::{bytes_to_f32s, bytes_to_f32s_into, f32s_to_bytes, Algo, Communicator, Mode};
 use crate::compress::bits::le;
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{binomial_bcast, tree_rounds};
@@ -20,11 +21,26 @@ use crate::{Error, Result};
 /// Gather each rank's `my_chunk` to `root`, which returns the chunks
 /// concatenated in rank order (other ranks return `None`). Chunk lengths
 /// may differ.
+///
+/// Compatibility shim: builds a transient codec per call. Iterated
+/// callers should use [`super::CollCtx::gather`].
 pub fn gather(
     comm: &mut Communicator,
     my_chunk: &[f32],
     root: usize,
     mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Option<Vec<f32>>> {
+    let mut st = CollState::new(*mode);
+    gather_with(comm, &mut st, my_chunk, root, m)
+}
+
+/// [`gather`] against a persistent [`CollState`] (codec built once).
+pub(crate) fn gather_with(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    my_chunk: &[f32],
+    root: usize,
     m: &mut Metrics,
 ) -> Result<Option<Vec<f32>>> {
     let n = comm.size();
@@ -45,11 +61,15 @@ pub fn gather(
     m.raw_bytes += (my_chunk.len() * 4) as u64;
     // Records this rank will forward: own chunk first.
     let mut records: Vec<(u32, Vec<u8>)> = Vec::new();
-    let own_payload = match mode.algo {
+    let own_payload = match st.mode.algo {
         Algo::Plain => f32s_to_bytes(my_chunk),
         Algo::Cprp2p => f32s_to_bytes(my_chunk), // compressed per hop below
         Algo::CColl | Algo::Zccl => {
-            m.time(Phase::Compress, || mode.codec().compress(my_chunk, mode.eb))?.bytes
+            let mut f = Vec::new();
+            let t0 = std::time::Instant::now();
+            st.compress_into(my_chunk, &mut f)?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            f
         }
     };
     records.push((me as u32, own_payload));
@@ -60,14 +80,18 @@ pub fn gather(
         let msg = comm.t.recv(s.peer, base + s.round as u64)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
-        let child_records = if mode.algo == Algo::Cprp2p {
+        let child_records = if st.mode.algo == Algo::Cprp2p {
             // The child compressed each record's values for the hop;
             // decompress them back to raw bytes.
             let recs = parse_records(&msg)?;
             let mut out = Vec::with_capacity(recs.len());
             for (rank, payload) in recs {
-                let vals = m.time(Phase::Decompress, || crate::compress::decompress(&payload))?;
+                let mut vals = st.pool.take_f32();
+                let t0 = std::time::Instant::now();
+                st.decode_into(&payload, &mut vals)?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
                 out.push((rank, f32s_to_bytes(&vals)));
+                st.pool.put_f32(vals);
             }
             out
         } else {
@@ -81,11 +105,13 @@ pub fn gather(
         records.sort_by_key(|(r, _)| *r);
         let mut out = Vec::new();
         for (_, payload) in records {
-            match mode.algo {
+            match st.mode.algo {
                 Algo::Plain | Algo::Cprp2p => out.extend(bytes_to_f32s(&payload)?),
-                Algo::CColl | Algo::Zccl => out.extend(
-                    m.time(Phase::Decompress, || crate::compress::decompress(&payload))?,
-                ),
+                Algo::CColl | Algo::Zccl => {
+                    let t0 = std::time::Instant::now();
+                    st.decode_into(&payload, &mut out)?;
+                    m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                }
             }
         }
         return Ok(Some(out));
@@ -93,14 +119,19 @@ pub fn gather(
 
     // Forward everything to the parent.
     let step = parent_step.expect("non-root has a parent");
-    let wire = if mode.algo == Algo::Cprp2p {
+    let wire = if st.mode.algo == Algo::Cprp2p {
         // Compress each record's values for this hop (CPRP2P re-compresses
         // at every level of the tree).
         let mut hop = Vec::with_capacity(records.len());
         for (rank, payload) in &records {
-            let vals = bytes_to_f32s(payload)?;
-            let frame = m.time(Phase::Compress, || mode.codec().compress(&vals, mode.eb))?;
-            hop.push((*rank, frame.bytes));
+            let mut vals = st.pool.take_f32();
+            bytes_to_f32s_into(payload, &mut vals)?;
+            let mut frame = Vec::new();
+            let t0 = std::time::Instant::now();
+            st.compress_into(&vals, &mut frame)?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            st.pool.put_f32(vals);
+            hop.push((*rank, frame));
         }
         encode_records(&hop)
     } else {

@@ -1,6 +1,41 @@
 //! Compression-accelerated collective operations — the paper's core
 //! contribution.
 //!
+//! ## Start here: [`CollCtx`]
+//!
+//! The primary API is the persistent per-rank collective context. It owns
+//! the codec (built **once**), a scratch-buffer pool, and the
+//! [`crate::coordinator::Metrics`] sink, so iterated collectives — a DDP
+//! training loop, an image-stacking sweep — pay no per-call codec
+//! construction and, after one warm-up call, no scratch allocation:
+//!
+//! ```
+//! use zccl::collectives::{CollCtx, Mode, ReduceOp};
+//! use zccl::compress::{CompressorKind, ErrorBound};
+//!
+//! let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-4));
+//! let results = zccl::collectives::run_ranks(4, move |comm| {
+//!     let mut ctx = CollCtx::over(comm, mode);
+//!     let x = vec![ctx.rank() as f32; 1024];
+//!     let mut out = Vec::new();
+//!     for _ in 0..3 {
+//!         // `_into` reuses `out`; the pool reuses every internal buffer.
+//!         ctx.allreduce_into(&x, ReduceOp::Sum, &mut out).unwrap();
+//!     }
+//!     out
+//! });
+//! for r in &results {
+//!     for v in r { assert!((v - 6.0).abs() < 5.0 * 1e-4); } // 0+1+2+3
+//! }
+//! ```
+//!
+//! The free functions ([`allreduce`], [`allgather`], …) are kept as
+//! **compatibility shims**: each builds a transient context per call and
+//! merges its timings into the caller's `Metrics`. They are fine for
+//! one-shot calls; anything iterated should hold a [`CollCtx`].
+//!
+//! ## Modes
+//!
 //! Every collective is implemented in four modes (Table 6):
 //!
 //! | mode       | data movement (§3.1.1)            | computation (§3.1.2)              |
@@ -10,7 +45,7 @@
 //! | `CColl`    | compress-once framework, SZx      | compressed RS, no overlap (IPDPS'24 C-Coll) |
 //! | `Zccl`     | compress-once + balanced pipeline | PIPE-fZ-light overlap (§3.5.2)    |
 //!
-//! The collectives are synchronous SPMD functions over a [`Communicator`]:
+//! The collectives are synchronous SPMD operations over a [`Communicator`]:
 //! all ranks of the communicator must call the same operation in the same
 //! order (MPI semantics). Timing is attributed per phase through
 //! [`crate::coordinator::Metrics`].
@@ -19,6 +54,7 @@ pub mod allgather;
 pub mod allreduce;
 pub mod alltoall;
 pub mod bcast;
+pub mod ctx;
 pub mod gather;
 pub mod reduce;
 pub mod reduce_scatter;
@@ -26,6 +62,7 @@ pub mod scatter;
 
 pub use allgather::allgather;
 pub use allreduce::allreduce;
+pub use ctx::{CollCtx, PoolStats, ScratchPool};
 pub use alltoall::alltoall;
 pub use bcast::bcast;
 pub use gather::gather;
@@ -152,6 +189,13 @@ impl Mode {
         self.pipe_chunk = values;
         self
     }
+    /// Override the fixed pipeline segment size in bytes for the balanced
+    /// allgather (§3.5.1). Counterpart of [`Mode::with_pipe_chunk`]; the
+    /// field existed without a builder before.
+    pub fn with_pipeline_bytes(mut self, bytes: usize) -> Mode {
+        self.pipeline_bytes = bytes;
+        self
+    }
 
     /// Whether this mode compresses at all.
     pub fn compresses(&self) -> bool {
@@ -248,31 +292,49 @@ pub fn chunk_ranges(total: usize, n: usize) -> Vec<std::ops::Range<usize>> {
 /// Encode an `f32` slice little-endian.
 pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(v.len() * 4);
+    f32s_to_bytes_into(v, &mut out);
+    out
+}
+
+/// Encode an `f32` slice little-endian, appending to `out`.
+pub fn f32s_to_bytes_into(v: &[f32], out: &mut Vec<u8>) {
+    out.reserve(v.len() * 4);
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
     }
-    out
 }
 
 /// Decode a little-endian `f32` buffer.
 pub fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(b.len() / 4);
+    bytes_to_f32s_into(b, &mut out)?;
+    Ok(out)
+}
+
+/// Decode a little-endian `f32` buffer, appending to `out`; returns the
+/// decoded count.
+pub fn bytes_to_f32s_into(b: &[u8], out: &mut Vec<f32>) -> Result<usize> {
     if b.len() % 4 != 0 {
         return Err(crate::Error::corrupt(format!("byte length {} not 4-aligned", b.len())));
     }
-    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    out.reserve(b.len() / 4);
+    out.extend(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+    Ok(b.len() / 4)
 }
 
-/// Exchange one `u32` per rank over the ring (the §3.5.1 size
-/// synchronisation: "as the compressed data size only has four bytes,
-/// this step is very fast"). Returns the value from every rank.
+/// Exchange one `u64` per rank over the ring — the §3.5.1 size
+/// synchronisation. The paper sends 4-byte sizes ("as the compressed data
+/// size only has four bytes, this step is very fast"); we widen to 8 bytes
+/// so compressed chunks ≥ 4 GiB cannot silently truncate — still a
+/// trivially small message per rank. Returns the value from every rank.
 pub(crate) fn exchange_sizes(
     comm: &mut Communicator,
-    mine: u32,
+    mine: u64,
     tag_base: u64,
-) -> Result<Vec<u32>> {
+) -> Result<Vec<u64>> {
     let n = comm.size();
     let me = comm.rank();
-    let mut sizes = vec![0u32; n];
+    let mut sizes = vec![0u64; n];
     sizes[me] = mine;
     let ring = crate::topology::ring(me, n);
     for round in 0..n.saturating_sub(1) {
@@ -281,8 +343,8 @@ pub(crate) fn exchange_sizes(
         comm.t.send(ring.next, tag_base + round as u64, &sizes[send_idx].to_le_bytes())?;
         let m = comm.t.recv(ring.prev, tag_base + round as u64)?;
         sizes[recv_idx] =
-            u32::from_le_bytes(m.as_slice().try_into().map_err(|_| {
-                crate::Error::corrupt("size exchange message must be 4 bytes")
+            u64::from_le_bytes(m.as_slice().try_into().map_err(|_| {
+                crate::Error::corrupt("size exchange message must be 8 bytes")
             })?);
     }
     Ok(sizes)
@@ -373,10 +435,25 @@ mod tests {
         let n = 5;
         let out = run_ranks(n, move |c| {
             let tag = c.fresh_tags(n as u64);
-            exchange_sizes(c, (c.rank() * 10) as u32, tag).unwrap()
+            exchange_sizes(c, (c.rank() * 10) as u64, tag).unwrap()
         });
         for sizes in out {
             assert_eq!(sizes, vec![0, 10, 20, 30, 40]);
+        }
+    }
+
+    #[test]
+    fn size_exchange_carries_over_4gib_values() {
+        // The u64 widening exists exactly for this: a compressed chunk
+        // larger than u32::MAX bytes must survive the exchange intact.
+        let n = 3;
+        let big = (u32::MAX as u64) + 12345;
+        let out = run_ranks(n, move |c| {
+            let tag = c.fresh_tags(n as u64);
+            exchange_sizes(c, big + c.rank() as u64, tag).unwrap()
+        });
+        for sizes in out {
+            assert_eq!(sizes, vec![big, big + 1, big + 2]);
         }
     }
 

@@ -9,19 +9,35 @@
 //!   outstanding child receives between chunks (the computation-framework
 //!   overlap, same as the ring reduce-scatter).
 
-use super::{bytes_to_f32s, f32s_to_bytes, Algo, Communicator, Mode, ReduceOp};
-use crate::compress::{CompressorKind, PipeFzLight};
+use super::ctx::CollState;
+use super::{bytes_to_f32s_into, f32s_to_bytes, Algo, Communicator, Mode, ReduceOp};
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{binomial_bcast, tree_rounds};
 use crate::{Error, Result};
 
 /// Reduce `input` elementwise onto `root`; root returns `Some(result)`.
+///
+/// Compatibility shim: builds a transient codec per call. Iterated
+/// callers should use [`super::CollCtx::reduce`].
 pub fn reduce(
     comm: &mut Communicator,
     input: &[f32],
     op: ReduceOp,
     root: usize,
     mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Option<Vec<f32>>> {
+    let mut st = CollState::new(*mode);
+    reduce_with(comm, &mut st, input, op, root, m)
+}
+
+/// [`reduce`] against a persistent [`CollState`] (codec built once).
+pub(crate) fn reduce_with(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    op: ReduceOp,
+    root: usize,
     m: &mut Metrics,
 ) -> Result<Option<Vec<f32>>> {
     let n = comm.size();
@@ -39,21 +55,29 @@ pub fn reduce(
     m.raw_bytes += (input.len() * 4) as u64;
 
     // Fold children (deepest subtree first = reverse round order).
+    let mut partial = st.pool.take_f32();
     for s in child_steps.iter().rev() {
         let tag = base + s.round as u64;
         let t0 = std::time::Instant::now();
         let msg = comm.t.recv(s.peer, tag)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
-        let partial = match mode.algo {
-            Algo::Plain => bytes_to_f32s(&msg)?,
-            _ => m.time(Phase::Decompress, || crate::compress::decompress(&msg))?,
+        partial.clear();
+        let cnt = match st.mode.algo {
+            Algo::Plain => bytes_to_f32s_into(&msg, &mut partial)?,
+            _ => {
+                let t0 = std::time::Instant::now();
+                let cnt = st.decode_into(&msg, &mut partial)?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                cnt
+            }
         };
-        if partial.len() != acc.len() {
+        if cnt != acc.len() {
             return Err(Error::corrupt("reduce partial length mismatch"));
         }
         m.time(Phase::Compute, || op.fold(&mut acc, &partial));
     }
+    st.pool.put_f32(partial);
 
     if me == root {
         op.finish(&mut acc, n);
@@ -63,25 +87,35 @@ pub fn reduce(
     // Send the partial up.
     let step = parent_step.expect("non-root has a parent");
     let tag = base + step.round as u64;
-    let wire = match mode.algo {
+    let wire = match st.mode.algo {
         Algo::Plain => f32s_to_bytes(&acc),
-        Algo::Zccl if mode.kind == CompressorKind::FzLight && !mode.multithread => {
-            // No receive is outstanding at this point (children drained),
-            // but the PIPE codec is still the right compressor: its chunked
-            // frame lets the parent start decompressing earlier in a
-            // streaming transport. Hook polls nothing here.
-            let pipe = PipeFzLight::with_chunk(mode.pipe_chunk);
+        _ => {
+            let mut frame = st.pool.take_bytes();
             let t0 = std::time::Instant::now();
-            let c = pipe.compress_with_progress(&acc, mode.eb, &mut |_| {})?;
+            match &st.pipe {
+                // No receive is outstanding at this point (children
+                // drained), but the PIPE codec is still the right
+                // compressor: its chunked frame lets the parent start
+                // decompressing earlier in a streaming transport. Hook
+                // polls nothing here.
+                Some(p) => {
+                    p.compress_into_with_progress(&acc, st.mode.eb, &mut frame, &mut |_| {})?;
+                }
+                None => {
+                    st.codec.compress_into(&acc, st.mode.eb, &mut frame)?;
+                }
+            }
             m.add(Phase::Compress, t0.elapsed().as_secs_f64());
-            c.bytes
+            frame
         }
-        _ => m.time(Phase::Compress, || mode.codec().compress(&acc, mode.eb))?.bytes,
     };
     let t0 = std::time::Instant::now();
     comm.t.send(step.peer, tag, &wire)?;
     m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     m.bytes_sent += wire.len() as u64;
+    if st.mode.algo != Algo::Plain {
+        st.pool.put_bytes(wire);
+    }
     Ok(None)
 }
 
@@ -89,7 +123,7 @@ pub fn reduce(
 mod tests {
     use super::*;
     use crate::collectives::run_ranks;
-    use crate::compress::ErrorBound;
+    use crate::compress::{CompressorKind, ErrorBound};
     use crate::data::fields::{Field, FieldKind};
 
     fn rank_input(rank: usize, len: usize) -> Vec<f32> {

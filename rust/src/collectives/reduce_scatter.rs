@@ -15,8 +15,10 @@
 //! - `Zccl`: irecv → PIPE-compress (polling) → send → wait →
 //!   PIPE-decompress (polling the next send's progress slot) → reduce.
 
-use super::{bytes_to_f32s, chunk_ranges, f32s_to_bytes, Algo, Communicator, Mode, ReduceOp};
-use crate::compress::{CompressorKind, PipeFzLight};
+use super::ctx::CollState;
+use super::{
+    bytes_to_f32s_into, chunk_ranges, f32s_to_bytes_into, Algo, Communicator, Mode, ReduceOp,
+};
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{ring, ring_recv_chunk, ring_send_chunk};
 use crate::{Error, Result};
@@ -24,6 +26,9 @@ use crate::{Error, Result};
 /// Reduce `input` (same length on every rank) elementwise with `op` and
 /// scatter the result: rank `r` returns `(range, values)` where `range`
 /// is the slice of the logical result it owns (chunk `(r+1) mod n`).
+///
+/// Compatibility shim: builds a transient codec + pool per call. Iterated
+/// callers should use [`super::CollCtx::reduce_scatter`].
 pub fn reduce_scatter(
     comm: &mut Communicator,
     input: &[f32],
@@ -31,118 +36,154 @@ pub fn reduce_scatter(
     mode: &Mode,
     m: &mut Metrics,
 ) -> Result<(std::ops::Range<usize>, Vec<f32>)> {
+    let mut st = CollState::new(*mode);
+    let mut owned = Vec::new();
+    let range = reduce_scatter_with(comm, &mut st, input, op, m, &mut owned)?;
+    Ok((range, owned))
+}
+
+/// [`reduce_scatter`] against a persistent [`CollState`]; the owned chunk
+/// is written into `owned` (overwritten), and its range returned.
+pub(crate) fn reduce_scatter_with(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    op: ReduceOp,
+    m: &mut Metrics,
+    owned: &mut Vec<f32>,
+) -> Result<std::ops::Range<usize>> {
     let n = comm.size();
     let me = comm.rank();
+    owned.clear();
     if n == 1 {
-        return Ok((0..input.len(), input.to_vec()));
+        owned.extend_from_slice(input);
+        return Ok(0..input.len());
     }
     let base = comm.fresh_tags(n as u64);
     let ranges = chunk_ranges(input.len(), n);
     let nb = ring(me, n);
-    let mut acc = input.to_vec();
+    let mut acc = st.pool.take_f32();
+    acc.extend_from_slice(input);
     m.raw_bytes += (input.len() * 4) as u64 * (n as u64 - 1) / n as u64 * 2;
 
-    match mode.algo {
+    match st.mode.algo {
         Algo::Plain => {
+            let mut send_buf = st.pool.take_bytes();
+            let mut partial = st.pool.take_f32();
             for t in 0..n - 1 {
                 let s = &ranges[ring_send_chunk(me, t, n)];
                 let r = &ranges[ring_recv_chunk(me, t, n)];
-                let send_buf = f32s_to_bytes(&acc[s.clone()]);
+                send_buf.clear();
+                f32s_to_bytes_into(&acc[s.clone()], &mut send_buf);
                 let t0 = std::time::Instant::now();
                 comm.t.send(nb.next, base + t as u64, &send_buf)?;
                 m.bytes_sent += send_buf.len() as u64;
                 let got = comm.t.recv(nb.prev, base + t as u64)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-                let partial = bytes_to_f32s(&got)?;
-                if partial.len() != r.len() {
+                partial.clear();
+                if bytes_to_f32s_into(&got, &mut partial)? != r.len() {
                     return Err(Error::corrupt("reduce_scatter partial length mismatch"));
                 }
                 m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
             }
+            st.pool.put_bytes(send_buf);
+            st.pool.put_f32(partial);
         }
         Algo::Cprp2p | Algo::CColl => {
-            let codec = mode.codec();
+            let mut frame = st.pool.take_bytes();
+            let mut partial = st.pool.take_f32();
             for t in 0..n - 1 {
                 let s = &ranges[ring_send_chunk(me, t, n)];
                 let r = &ranges[ring_recv_chunk(me, t, n)];
-                let send_plain = acc[s.clone()].to_vec();
-                let compressed =
-                    m.time(Phase::Compress, || codec.compress(&send_plain, mode.eb))?;
+                frame.clear();
                 let t0 = std::time::Instant::now();
-                comm.t.send(nb.next, base + t as u64, &compressed.bytes)?;
-                m.bytes_sent += compressed.bytes.len() as u64;
+                st.compress_into(&acc[s.clone()], &mut frame)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+                let t0 = std::time::Instant::now();
+                comm.t.send(nb.next, base + t as u64, &frame)?;
+                m.bytes_sent += frame.len() as u64;
                 let got = comm.t.recv(nb.prev, base + t as u64)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-                let partial =
-                    m.time(Phase::Decompress, || crate::compress::decompress(&got))?;
-                if partial.len() != r.len() {
+                partial.clear();
+                let t0 = std::time::Instant::now();
+                let cnt = st.decode_into(&got, &mut partial)?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                if cnt != r.len() {
                     return Err(Error::corrupt("reduce_scatter partial length mismatch"));
                 }
                 m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
             }
+            st.pool.put_bytes(frame);
+            st.pool.put_f32(partial);
         }
         Algo::Zccl => {
-            reduce_scatter_zccl(comm, &mut acc, &ranges, op, mode, base, m)?;
+            reduce_scatter_zccl(comm, st, &mut acc, &ranges, op, base, m)?;
         }
     }
 
-    let owned = (me + 1) % n;
-    Ok((ranges[owned].clone(), acc[ranges[owned].clone()].to_vec()))
+    let own = (me + 1) % n;
+    owned.extend_from_slice(&acc[ranges[own].clone()]);
+    st.pool.put_f32(acc);
+    Ok(ranges[own].clone())
 }
 
 /// The §3.5.2 pipelined round: communication progress is pulled from
 /// inside compression and decompression.
 fn reduce_scatter_zccl(
     comm: &mut Communicator,
+    st: &mut CollState,
     acc: &mut [f32],
     ranges: &[std::ops::Range<usize>],
     op: ReduceOp,
-    mode: &Mode,
     base: u64,
     m: &mut Metrics,
 ) -> Result<()> {
     let n = comm.size();
     let me = comm.rank();
     let nb = ring(me, n);
-    // PIPE overlap requires the chunked fZ-light codec; other codecs fall
-    // back to the blocking structure (still compress-per-round — that is
-    // inherent to collective computation).
-    let pipe = (mode.kind == CompressorKind::FzLight && !mode.multithread)
-        .then(|| PipeFzLight::with_chunk(mode.pipe_chunk));
-    let codec = mode.codec();
+    // PIPE overlap requires the chunked fZ-light codec (pre-built in the
+    // context); other codecs fall back to the blocking structure (still
+    // compress-per-round — that is inherent to collective computation).
+    let pipe = st.pipe.clone();
+    let mode = st.mode;
+    let mut frame = st.pool.take_bytes();
+    let mut partial = st.pool.take_f32();
 
     for t in 0..n - 1 {
         let s = &ranges[ring_send_chunk(me, t, n)];
         let r = &ranges[ring_recv_chunk(me, t, n)];
-        let send_plain = acc[s.clone()].to_vec();
         let tag = base + t as u64;
+        frame.clear();
 
         // Post the receive BEFORE compressing, then poll it from inside
         // the compression loop.
         let mut h = comm.t.irecv(nb.prev, tag);
-        let compressed = match &pipe {
+        match &pipe {
             Some(p) => {
                 let t0 = std::time::Instant::now();
-                let c = {
+                {
                     let tr = &mut *comm.t;
-                    p.compress_with_progress(&send_plain, mode.eb, &mut |_| {
+                    p.compress_into_with_progress(&acc[s.clone()], mode.eb, &mut frame, &mut |_| {
                         let _ = tr.try_complete(&mut h);
-                    })?
-                };
+                    })?;
+                }
                 // Time spent here covers compression AND the polls it
                 // absorbed — that is precisely the §3.5.2 effect (comm
                 // hidden inside compression).
                 m.add(Phase::Compress, t0.elapsed().as_secs_f64());
-                c
             }
-            None => m.time(Phase::Compress, || codec.compress(&send_plain, mode.eb))?,
-        };
+            None => {
+                let t0 = std::time::Instant::now();
+                st.compress_into(&acc[s.clone()], &mut frame)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            }
+        }
 
         let t0 = std::time::Instant::now();
-        comm.t.send(nb.next, tag, &compressed.bytes)?;
-        m.bytes_sent += compressed.bytes.len() as u64;
+        comm.t.send(nb.next, tag, &frame)?;
+        m.bytes_sent += frame.len() as u64;
         let got = loop {
             if comm.t.try_complete(&mut h)? {
                 break h.take().expect("completed");
@@ -154,20 +195,28 @@ fn reduce_scatter_zccl(
 
         // Decompress; with PIPE the hook would poll the outstanding send
         // (our transport's sends are eager, so the hook is a no-op slot).
-        let partial = match &pipe {
+        partial.clear();
+        let cnt = match &pipe {
             Some(p) => {
                 let t0 = std::time::Instant::now();
-                let d = p.decompress_with_progress(&got, &mut |_| {})?;
+                let cnt = p.decompress_into_with_progress(&got, &mut partial, &mut |_| {})?;
                 m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-                d
+                cnt
             }
-            None => m.time(Phase::Decompress, || crate::compress::decompress(&got))?,
+            None => {
+                let t0 = std::time::Instant::now();
+                let cnt = st.decode_into(&got, &mut partial)?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                cnt
+            }
         };
-        if partial.len() != r.len() {
+        if cnt != r.len() {
             return Err(Error::corrupt("reduce_scatter partial length mismatch"));
         }
         m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
     }
+    st.pool.put_bytes(frame);
+    st.pool.put_f32(partial);
     Ok(())
 }
 
@@ -175,7 +224,7 @@ fn reduce_scatter_zccl(
 mod tests {
     use super::*;
     use crate::collectives::run_ranks;
-    use crate::compress::ErrorBound;
+    use crate::compress::{CompressorKind, ErrorBound};
     use crate::data::fields::{Field, FieldKind};
 
     fn rank_input(rank: usize, len: usize) -> Vec<f32> {

@@ -13,6 +13,7 @@
 //!   and decompress only their own. One compression per chunk, one
 //!   decompression per rank, single-`ê` error.
 
+use super::ctx::CollState;
 use super::{bytes_to_f32s, chunk_ranges, f32s_to_bytes, Algo, Communicator, Mode};
 use crate::compress::bits::le;
 use crate::coordinator::{Metrics, Phase};
@@ -21,11 +22,26 @@ use crate::{Error, Result};
 
 /// Scatter `data` (significant at `root`) so rank `r` receives chunk `r`
 /// of [`chunk_ranges`]`(data.len(), n)`.
+///
+/// Compatibility shim: builds a transient codec per call. Iterated
+/// callers should use [`super::CollCtx::scatter`].
 pub fn scatter(
     comm: &mut Communicator,
     data: Option<&[f32]>,
     root: usize,
     mode: &Mode,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let mut st = CollState::new(*mode);
+    scatter_with(comm, &mut st, data, root, m)
+}
+
+/// [`scatter`] against a persistent [`CollState`] (codec built once).
+pub(crate) fn scatter_with(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    data: Option<&[f32]>,
+    root: usize,
     m: &mut Metrics,
 ) -> Result<Vec<f32>> {
     let n = comm.size();
@@ -39,9 +55,9 @@ pub fn scatter(
     if n == 1 {
         return Ok(data.unwrap().to_vec());
     }
-    match mode.algo {
-        Algo::Plain | Algo::Cprp2p => scatter_values(comm, data, root, mode, m),
-        Algo::CColl | Algo::Zccl => scatter_frames(comm, data, root, mode, m),
+    match st.mode.algo {
+        Algo::Plain | Algo::Cprp2p => scatter_values(comm, st, data, root, m),
+        Algo::CColl | Algo::Zccl => scatter_frames(comm, st, data, root, m),
     }
 }
 
@@ -49,9 +65,9 @@ pub fn scatter(
 /// compresses the concatenated subtree block once per hop.
 fn scatter_values(
     comm: &mut Communicator,
+    st: &mut CollState,
     data: Option<&[f32]>,
     root: usize,
-    mode: &Mode,
     m: &mut Metrics,
 ) -> Result<Vec<f32>> {
     let n = comm.size();
@@ -75,9 +91,15 @@ fn scatter_values(
         let mut pos = 0usize;
         let total = le::get_u64(&msg, &mut pos)? as usize;
         let body = &msg[pos..];
-        let values = match mode.algo {
+        let values = match st.mode.algo {
             Algo::Plain => bytes_to_f32s(body)?,
-            _ => m.time(Phase::Decompress, || crate::compress::decompress(body))?,
+            _ => {
+                let mut dec = Vec::new();
+                let t0 = std::time::Instant::now();
+                st.decode_into(body, &mut dec)?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                dec
+            }
         };
         // Split the concatenated block into per-subtree-rank chunks.
         let ranges = chunk_ranges(total, n);
@@ -103,11 +125,12 @@ fn scatter_values(
         }
         let mut wire = Vec::with_capacity(12 + block.len() * 4);
         le::put_u64(&mut wire, total as u64);
-        match mode.algo {
+        match st.mode.algo {
             Algo::Plain => wire.extend_from_slice(&f32s_to_bytes(&block)),
             _ => {
-                let frame = m.time(Phase::Compress, || mode.codec().compress(&block, mode.eb))?;
-                wire.extend_from_slice(&frame.bytes);
+                let t0 = std::time::Instant::now();
+                st.compress_into(&block, &mut wire)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
             }
         }
         let t0 = std::time::Instant::now();
@@ -123,9 +146,9 @@ fn scatter_values(
 /// verbatim; only the owner decompresses.
 fn scatter_frames(
     comm: &mut Communicator,
+    st: &mut CollState,
     data: Option<&[f32]>,
     root: usize,
-    mode: &Mode,
     m: &mut Metrics,
 ) -> Result<Vec<f32>> {
     let n = comm.size();
@@ -138,11 +161,14 @@ fn scatter_frames(
         let d = data.unwrap();
         m.raw_bytes += (d.len() * 4) as u64;
         let ranges = chunk_ranges(d.len(), n);
-        let codec = mode.codec();
         let mut fs = Vec::with_capacity(my_subtree.len());
         for &r in &my_subtree {
             let chunk = &d[ranges[r].clone()];
-            fs.push(m.time(Phase::Compress, || codec.compress(chunk, mode.eb))?.bytes);
+            let mut f = Vec::new();
+            let t0 = std::time::Instant::now();
+            st.compress_into(chunk, &mut f)?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            fs.push(f);
         }
         (d.len(), fs)
     } else {
@@ -172,7 +198,10 @@ fn scatter_frames(
 
     // Decompress ONLY our own chunk, exactly once.
     let mine = std::mem::take(&mut frames[0]);
-    let out = m.time(Phase::Decompress, || crate::compress::decompress(&mine))?;
+    let mut out = Vec::new();
+    let t0 = std::time::Instant::now();
+    st.decode_into(&mine, &mut out)?;
+    m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
     let want_len = chunk_ranges(total, n)[me].len();
     if out.len() != want_len {
         return Err(Error::corrupt(format!(

@@ -35,8 +35,8 @@
 
 use super::bits::le;
 use super::traits::{
-    read_header, write_header, Compressed, CompressionStats, Compressor, CompressorKind,
-    ErrorBound, HEADER_LEN,
+    read_header, write_header, CompressionStats, Compressor, CompressorKind, ErrorBound,
+    HEADER_LEN,
 };
 use crate::{Error, Result};
 
@@ -67,17 +67,26 @@ impl FzLight {
     }
 }
 
-/// Compress one chunk: outlier + delta blocks. Returns the payload and the
-/// (blocks, constant_blocks) counts.
+/// Compress one chunk into a fresh payload vector (the multithread path
+/// needs independently owned payloads; everything else should prefer
+/// [`compress_chunk_into`]).
+pub(crate) fn compress_chunk(data: &[f32], twoeb: f64) -> (Vec<u8>, usize, usize) {
+    let mut payload = Vec::with_capacity(16 + data.len() * 2);
+    let (blocks, constant) = compress_chunk_into(data, twoeb, &mut payload);
+    (payload, blocks, constant)
+}
+
+/// Compress one chunk (outlier + delta blocks), appending to `payload`.
+/// Returns the (blocks, constant_blocks) counts.
 ///
 /// Hot path (see EXPERIMENTS.md §Perf): sign words and magnitudes are
 /// packed straight into the payload via [`super::bits::pack_fixed`] —
 /// zero allocations per block.
-pub(crate) fn compress_chunk(data: &[f32], twoeb: f64) -> (Vec<u8>, usize, usize) {
+pub(crate) fn compress_chunk_into(data: &[f32], twoeb: f64, payload: &mut Vec<u8>) -> (usize, usize) {
     debug_assert!(!data.is_empty());
     let inv = 1.0 / twoeb;
     let q0 = quantize(data[0], inv);
-    let mut payload = Vec::with_capacity(16 + data.len() * 2);
+    payload.reserve(16 + data.len() * 2);
     payload.extend_from_slice(&q0.to_le_bytes());
 
     let n_deltas = data.len() - 1;
@@ -114,11 +123,11 @@ pub(crate) fn compress_chunk(data: &[f32], twoeb: f64) -> (Vec<u8>, usize, usize
             // Sign section (byte-aligned; LSB-first == BitWriter layout),
             // then fixed-length magnitudes.
             payload.extend_from_slice(&sign.to_le_bytes()[..cnt.div_ceil(8)]);
-            super::bits::pack_fixed(&mut payload, &mags[..cnt], bits);
+            super::bits::pack_fixed(payload, &mags[..cnt], bits);
         }
         b += cnt;
     }
-    (payload, blocks, constant)
+    (blocks, constant)
 }
 
 /// Decompress one chunk of `cn` values into `out`.
@@ -173,31 +182,78 @@ fn quantize(x: f32, inv_twoeb: f64) -> i64 {
     (x as f64 * inv_twoeb).round() as i64
 }
 
-/// Assemble a full frame from per-chunk payloads (shared with the
-/// multithreaded and pipelined paths).
-pub(crate) fn assemble_frame(
+/// Append a chunked frame (header, chunk table, payloads) to `out`. The
+/// chunked layout is shared by fZ-light and SZx, so the codec id is a
+/// parameter.
+pub(crate) fn assemble_frame_into(
+    codec: CompressorKind,
     n: usize,
     eb_abs: f64,
     chunk_values: usize,
     payloads: &[Vec<u8>],
-) -> Vec<u8> {
+    out: &mut Vec<u8>,
+) {
     let total: usize = payloads.iter().map(Vec::len).sum();
-    let mut out = Vec::with_capacity(HEADER_LEN + 8 + 4 * payloads.len() + total);
-    write_header(&mut out, CompressorKind::FzLight, n, eb_abs);
-    le::put_u32(&mut out, chunk_values as u32);
-    le::put_u32(&mut out, payloads.len() as u32);
+    out.reserve(HEADER_LEN + 8 + 4 * payloads.len() + total);
+    write_header(out, codec, n, eb_abs);
+    le::put_u32(out, chunk_values as u32);
+    le::put_u32(out, payloads.len() as u32);
     for p in payloads {
-        le::put_u32(&mut out, p.len() as u32);
+        le::put_u32(out, p.len() as u32);
     }
     for p in payloads {
         out.extend_from_slice(p);
     }
-    out
+}
+
+/// Compress directly into `out` (append): the chunk table is reserved up
+/// front — its length is known from the chunk count — and backfilled as
+/// each chunk's payload lands, so the whole frame is built with zero
+/// intermediate allocations. Shared by [`FzLight`] and
+/// [`super::pipe::PipeFzLight`] (whose `progress` hook runs per chunk).
+pub(crate) fn compress_frame_into(
+    chunk_values: usize,
+    data: &[f32],
+    eb: ErrorBound,
+    out: &mut Vec<u8>,
+    progress: &mut dyn FnMut(usize),
+) -> Result<CompressionStats> {
+    let eb_abs = eb.resolve(data);
+    if !(eb_abs > 0.0) || !eb_abs.is_finite() {
+        return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
+    }
+    let twoeb = 2.0 * eb_abs;
+    let chunk = chunk_values.max(1);
+    let nchunks = data.len().div_ceil(chunk);
+    let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
+    let base = out.len();
+    out.reserve(HEADER_LEN + 8 + 4 * nchunks + data.len() * 2);
+    write_header(out, CompressorKind::FzLight, data.len(), eb_abs);
+    le::put_u32(out, chunk as u32);
+    le::put_u32(out, nchunks as u32);
+    let table = out.len();
+    out.resize(table + 4 * nchunks, 0);
+    let mut done = 0usize;
+    for (i, c) in data.chunks(chunk).enumerate() {
+        let start = out.len();
+        let (blocks, constant) = compress_chunk_into(c, twoeb, out);
+        stats.blocks += blocks;
+        stats.constant_blocks += constant;
+        let sz = (out.len() - start) as u32;
+        out[table + 4 * i..table + 4 * i + 4].copy_from_slice(&sz.to_le_bytes());
+        done += c.len();
+        progress(done);
+    }
+    stats.compressed_bytes = out.len() - base;
+    Ok(stats)
 }
 
 /// Parsed view over a frame's chunk table: `(chunk_values, payload ranges)`.
 pub(crate) fn frame_chunks(bytes: &[u8]) -> Result<(usize, f64, usize, Vec<std::ops::Range<usize>>)> {
     let h = read_header(bytes)?;
+    if h.codec != CompressorKind::FzLight {
+        return Err(Error::corrupt("not an fzlight frame"));
+    }
     let mut pos = HEADER_LEN;
     let chunk_values = le::get_u32(bytes, &mut pos)? as usize;
     let nchunks = le::get_u32(bytes, &mut pos)? as usize;
@@ -225,29 +281,20 @@ impl Compressor for FzLight {
         CompressorKind::FzLight
     }
 
-    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
-        let eb_abs = eb.resolve(data);
-        if !(eb_abs > 0.0) || !eb_abs.is_finite() {
-            return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
-        }
-        let twoeb = 2.0 * eb_abs;
-        let mut payloads = Vec::with_capacity(data.len().div_ceil(self.chunk_values.max(1)));
-        let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
-        for chunk in data.chunks(self.chunk_values) {
-            let (p, blocks, constant) = compress_chunk(chunk, twoeb);
-            stats.blocks += blocks;
-            stats.constant_blocks += constant;
-            payloads.push(p);
-        }
-        let bytes = assemble_frame(data.len(), eb_abs, self.chunk_values, &payloads);
-        stats.compressed_bytes = bytes.len();
-        Ok(Compressed { bytes, stats })
+    fn compress_into(
+        &self,
+        data: &[f32],
+        eb: ErrorBound,
+        out: &mut Vec<u8>,
+    ) -> Result<CompressionStats> {
+        compress_frame_into(self.chunk_values, data, eb, out, &mut |_| {})
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+    fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
         let (chunk_values, eb_abs, n, ranges) = frame_chunks(bytes)?;
         let twoeb = 2.0 * eb_abs;
-        let mut out = Vec::with_capacity(n);
+        let start = out.len();
+        out.reserve(n);
         for (i, r) in ranges.iter().enumerate() {
             let cn = if i + 1 == ranges.len() {
                 n.checked_sub(chunk_values * (ranges.len() - 1))
@@ -256,12 +303,12 @@ impl Compressor for FzLight {
             } else {
                 chunk_values
             };
-            decompress_chunk(&bytes[r.clone()], cn, twoeb, &mut out)?;
+            decompress_chunk(&bytes[r.clone()], cn, twoeb, out)?;
         }
-        if out.len() != n {
-            return Err(Error::corrupt(format!("decoded {} of {} values", out.len(), n)));
+        if out.len() - start != n {
+            return Err(Error::corrupt(format!("decoded {} of {n} values", out.len() - start)));
         }
-        Ok(out)
+        Ok(n)
     }
 }
 

@@ -4,6 +4,34 @@
 //! from-scratch Rust implementations of the compressors the paper studies
 //! in §3.3 plus the pipelined customization of §3.5.2.
 //!
+//! ## The zero-alloc `*_into` API
+//!
+//! The [`Compressor`] trait's required methods are
+//! [`Compressor::compress_into`] and [`Compressor::decompress_into`]:
+//! they append to caller-owned buffers, so a long-lived caller — above
+//! all [`crate::collectives::CollCtx`], which pairs one codec instance
+//! with a scratch-buffer pool — performs **no allocation per call** once
+//! warm. The allocating [`Compressor::compress`] /
+//! [`Compressor::decompress`] remain as thin default-impl wrappers for
+//! one-shot use:
+//!
+//! ```
+//! use zccl::compress::{Compressor, CompressorKind, ErrorBound};
+//!
+//! let codec = zccl::compress::build(CompressorKind::FzLight);
+//! let data = vec![1.0f32; 4096];
+//! let (mut frame, mut restored) = (Vec::new(), Vec::new());
+//! for _ in 0..3 {
+//!     frame.clear();
+//!     restored.clear();
+//!     codec.compress_into(&data, ErrorBound::Abs(1e-4), &mut frame).unwrap();
+//!     codec.decompress_into(&frame, &mut restored).unwrap(); // reuses capacity
+//! }
+//! assert_eq!(restored.len(), data.len());
+//! ```
+//!
+//! ## Codecs
+//!
 //! - [`fzlight`] — `fZ-light` (a.k.a. SZp): fused 1-D Lorenzo prediction +
 //!   error-bounded quantization + ultra-fast fixed-length bit-shifting
 //!   encoding. The paper's chosen compressor.
@@ -35,7 +63,7 @@ pub use multithread::MtCompressor;
 pub use pipe::PipeFzLight;
 pub use szx::Szx;
 pub use traits::{
-    Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound,
+    peek_codec, Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound,
 };
 pub use zfp_like::{ZfpAbs, ZfpFixedRate};
 
@@ -56,11 +84,30 @@ pub fn compress(kind: CompressorKind, data: &[f32], eb: ErrorBound) -> Result<Co
     build(kind).compress(data, eb)
 }
 
+/// Compress with `kind`, appending the frame to `out`.
+pub fn compress_into(
+    kind: CompressorKind,
+    data: &[f32],
+    eb: ErrorBound,
+    out: &mut Vec<u8>,
+) -> Result<CompressionStats> {
+    build(kind).compress_into(data, eb, out)
+}
+
 /// Decompress a framed byte stream produced by any compressor in this
 /// module (the frame header records the codec).
 pub fn decompress(bytes: &[u8]) -> Result<Vec<f32>> {
     let codec = traits::peek_codec(bytes)?;
     build(codec).decompress(bytes)
+}
+
+/// Codec-agnostic [`decompress`] into a caller-owned buffer (appends;
+/// returns the decoded count). Note this builds a transient codec per
+/// call; hot paths with a known codec should hold a [`Compressor`]
+/// instance (see [`crate::collectives::CollCtx`]) instead.
+pub fn decompress_into(bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
+    let codec = traits::peek_codec(bytes)?;
+    build(codec).decompress_into(bytes, out)
 }
 
 #[cfg(test)]
@@ -76,5 +123,38 @@ mod tests {
             let d = decompress(&c.bytes).unwrap();
             assert_eq!(d.len(), f.values.len(), "{kind:?} length");
         }
+    }
+
+    #[test]
+    fn into_roundtrip_all_codecs_matches_allocating_path() {
+        let f = Field::generate(FieldKind::Nyx, 8192, 17);
+        let (mut frame, mut vals) = (Vec::new(), Vec::new());
+        for kind in CompressorKind::ALL {
+            frame.clear();
+            vals.clear();
+            let st = compress_into(kind, &f.values, ErrorBound::Rel(1e-3), &mut frame).unwrap();
+            let c = compress(kind, &f.values, ErrorBound::Rel(1e-3)).unwrap();
+            assert_eq!(frame, c.bytes, "{kind:?}: into-frame must be bit-identical");
+            assert_eq!(st.compressed_bytes, c.stats.compressed_bytes, "{kind:?} stats");
+            let n = decompress_into(&frame, &mut vals).unwrap();
+            assert_eq!(n, f.values.len(), "{kind:?} count");
+            assert_eq!(vals, decompress(&frame).unwrap(), "{kind:?} values");
+        }
+    }
+
+    #[test]
+    fn into_variants_append() {
+        // Two frames packed back to back each decode from their own slice.
+        let a = vec![1.0f32; 600];
+        let b: Vec<f32> = (0..500).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut buf = Vec::new();
+        compress_into(CompressorKind::FzLight, &a, ErrorBound::Abs(1e-4), &mut buf).unwrap();
+        let split = buf.len();
+        compress_into(CompressorKind::Szx, &b, ErrorBound::Abs(1e-4), &mut buf).unwrap();
+        let mut vals = Vec::new();
+        let na = decompress_into(&buf[..split], &mut vals).unwrap();
+        let nb = decompress_into(&buf[split..], &mut vals).unwrap();
+        assert_eq!((na, nb), (600, 500));
+        assert_eq!(vals.len(), 1100);
     }
 }

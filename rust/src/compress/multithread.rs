@@ -14,7 +14,7 @@ use crate::util::par::{default_threads, par_map, par_map_chunks};
 
 use super::fzlight::{self};
 use super::szx::{self};
-use super::traits::{Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound};
+use super::traits::{CompressionStats, Compressor, CompressorKind, ErrorBound};
 use crate::{Error, Result};
 
 /// Multi-threaded wrapper over a chunk-parallel codec.
@@ -45,17 +45,30 @@ impl Compressor for MtCompressor {
         self.kind
     }
 
-    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+    fn compress_into(
+        &self,
+        data: &[f32],
+        eb: ErrorBound,
+        out: &mut Vec<u8>,
+    ) -> Result<CompressionStats> {
         let eb_abs = eb.resolve(data);
         if !(eb_abs > 0.0) || !eb_abs.is_finite() {
             return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
         }
         match self.kind {
-            CompressorKind::FzLight => {
-                let twoeb = 2.0 * eb_abs;
+            CompressorKind::FzLight | CompressorKind::Szx => {
+                // Chunks compress in parallel into independently owned
+                // payloads (inherent to the fan-out), then one pass
+                // assembles the shared chunked frame layout into `out`.
+                let kind = self.kind;
                 let parts: Vec<(Vec<u8>, usize, usize)> =
                     par_map_chunks(data, self.chunk_values, self.threads, |chunk| {
-                        fzlight::compress_chunk(chunk, twoeb)
+                        match kind {
+                            CompressorKind::FzLight => {
+                                fzlight::compress_chunk(chunk, 2.0 * eb_abs)
+                            }
+                            _ => szx::compress_chunk(chunk, eb_abs),
+                        }
                     });
                 let mut stats =
                     CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
@@ -67,49 +80,23 @@ impl Compressor for MtCompressor {
                         p
                     })
                     .collect();
-                let bytes =
-                    fzlight::assemble_frame(data.len(), eb_abs, self.chunk_values, &payloads);
-                stats.compressed_bytes = bytes.len();
-                Ok(Compressed { bytes, stats })
+                let base = out.len();
+                fzlight::assemble_frame_into(
+                    kind,
+                    data.len(),
+                    eb_abs,
+                    self.chunk_values,
+                    &payloads,
+                    out,
+                );
+                stats.compressed_bytes = out.len() - base;
+                Ok(stats)
             }
-            CompressorKind::Szx => {
-                // SZx chunks are independent too; reuse the serial encoder
-                // per chunk and assemble the same frame layout.
-                let parts: Vec<(Vec<u8>, usize, usize)> =
-                    par_map_chunks(data, self.chunk_values, self.threads, |chunk| {
-                        szx::compress_chunk(chunk, eb_abs)
-                    });
-                let mut stats =
-                    CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
-                let mut payloads = Vec::with_capacity(parts.len());
-                for (p, b, c) in parts {
-                    stats.blocks += b;
-                    stats.constant_blocks += c;
-                    payloads.push(p);
-                }
-                // Frame assembly mirrors Szx::compress.
-                use super::bits::le;
-                use super::traits::{write_header, HEADER_LEN};
-                let total: usize = payloads.iter().map(Vec::len).sum();
-                let mut bytes =
-                    Vec::with_capacity(HEADER_LEN + 8 + 4 * payloads.len() + total);
-                write_header(&mut bytes, CompressorKind::Szx, data.len(), eb_abs);
-                le::put_u32(&mut bytes, self.chunk_values as u32);
-                le::put_u32(&mut bytes, payloads.len() as u32);
-                for p in &payloads {
-                    le::put_u32(&mut bytes, p.len() as u32);
-                }
-                for p in &payloads {
-                    bytes.extend_from_slice(p);
-                }
-                stats.compressed_bytes = bytes.len();
-                Ok(Compressed { bytes, stats })
-            }
-            other => super::build(other).compress(data, ErrorBound::Abs(eb_abs)),
+            other => super::build(other).compress_into(data, ErrorBound::Abs(eb_abs), out),
         }
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+    fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
         match self.kind {
             CompressorKind::FzLight => {
                 let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
@@ -128,16 +115,17 @@ impl Compressor for MtCompressor {
                         fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, &mut out)?;
                         Ok(out)
                     });
-                let mut out = Vec::with_capacity(n);
+                let start = out.len();
+                out.reserve(n);
                 for p in parts {
                     out.extend_from_slice(&p?);
                 }
-                if out.len() != n {
+                if out.len() - start != n {
                     return Err(Error::corrupt("mt decode length mismatch"));
                 }
-                Ok(out)
+                Ok(n)
             }
-            other => super::build(other).decompress(bytes),
+            other => super::build(other).decompress_into(bytes, out),
         }
     }
 }

@@ -7,6 +7,10 @@
 //! The emitted frame is bit-identical to [`super::FzLight`]'s: the chunk
 //! size index lives at the head of the buffer ("essentially a kind of
 //! index", §3.5.2), so either implementation decodes the other's output.
+//!
+//! Every entry point has an `_into` form writing into a caller-owned
+//! buffer; [`crate::collectives::CollCtx`] pairs those with its scratch
+//! pool so iterated collectives run allocation-free after warm-up.
 
 use super::fzlight::{self, DEFAULT_CHUNK};
 use super::traits::{Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound};
@@ -43,25 +47,21 @@ impl PipeFzLight {
         eb: ErrorBound,
         progress: &mut dyn FnMut(usize),
     ) -> Result<Compressed> {
-        let eb_abs = eb.resolve(data);
-        if !(eb_abs > 0.0) || !eb_abs.is_finite() {
-            return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
-        }
-        let twoeb = 2.0 * eb_abs;
-        let mut payloads = Vec::with_capacity(data.len().div_ceil(self.chunk_values));
-        let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
-        let mut done = 0usize;
-        for chunk in data.chunks(self.chunk_values) {
-            let (p, blocks, constant) = fzlight::compress_chunk(chunk, twoeb);
-            stats.blocks += blocks;
-            stats.constant_blocks += constant;
-            payloads.push(p);
-            done += chunk.len();
-            progress(done);
-        }
-        let bytes = fzlight::assemble_frame(data.len(), eb_abs, self.chunk_values, &payloads);
-        stats.compressed_bytes = bytes.len();
+        let mut bytes = Vec::new();
+        let stats = self.compress_into_with_progress(data, eb, &mut bytes, progress)?;
         Ok(Compressed { bytes, stats })
+    }
+
+    /// [`PipeFzLight::compress_with_progress`], appending the frame to a
+    /// caller-owned buffer (zero allocations when `out` has capacity).
+    pub fn compress_into_with_progress(
+        &self,
+        data: &[f32],
+        eb: ErrorBound,
+        out: &mut Vec<u8>,
+        progress: &mut dyn FnMut(usize),
+    ) -> Result<CompressionStats> {
+        fzlight::compress_frame_into(self.chunk_values, data, eb, out, progress)
     }
 
     /// Decompress, invoking `progress` after every chunk. The
@@ -72,9 +72,23 @@ impl PipeFzLight {
         bytes: &[u8],
         progress: &mut dyn FnMut(usize),
     ) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.decompress_into_with_progress(bytes, &mut out, progress)?;
+        Ok(out)
+    }
+
+    /// [`PipeFzLight::decompress_with_progress`], appending decoded values
+    /// to a caller-owned buffer. Returns the decoded value count.
+    pub fn decompress_into_with_progress(
+        &self,
+        bytes: &[u8],
+        out: &mut Vec<f32>,
+        progress: &mut dyn FnMut(usize),
+    ) -> Result<usize> {
         let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
         let twoeb = 2.0 * eb_abs;
-        let mut out = Vec::with_capacity(n);
+        let start = out.len();
+        out.reserve(n);
         for (i, r) in ranges.iter().enumerate() {
             let cn = if i + 1 == ranges.len() {
                 n.checked_sub(chunk_values * (ranges.len() - 1))
@@ -83,13 +97,13 @@ impl PipeFzLight {
             } else {
                 chunk_values
             };
-            fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, &mut out)?;
-            progress(out.len());
+            fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, out)?;
+            progress(out.len() - start);
         }
-        if out.len() != n {
-            return Err(Error::corrupt(format!("decoded {} of {} values", out.len(), n)));
+        if out.len() - start != n {
+            return Err(Error::corrupt(format!("decoded {} of {n} values", out.len() - start)));
         }
-        Ok(out)
+        Ok(n)
     }
 }
 
@@ -97,11 +111,16 @@ impl Compressor for PipeFzLight {
     fn kind(&self) -> CompressorKind {
         CompressorKind::FzLight
     }
-    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
-        self.compress_with_progress(data, eb, &mut |_| {})
+    fn compress_into(
+        &self,
+        data: &[f32],
+        eb: ErrorBound,
+        out: &mut Vec<u8>,
+    ) -> Result<CompressionStats> {
+        self.compress_into_with_progress(data, eb, out, &mut |_| {})
     }
-    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
-        self.decompress_with_progress(bytes, &mut |_| {})
+    fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
+        self.decompress_into_with_progress(bytes, out, &mut |_| {})
     }
 }
 
@@ -150,5 +169,25 @@ mod tests {
         let mut calls = 0;
         pipe.compress_with_progress(&f.values, ErrorBound::Abs(1e-3), &mut |_| calls += 1).unwrap();
         assert_eq!(calls, 10);
+    }
+
+    #[test]
+    fn into_variants_append_and_reuse_capacity() {
+        let f = Field::generate(FieldKind::Nyx, 12_000, 9);
+        let pipe = PipeFzLight::default();
+        let mut buf = Vec::new();
+        pipe.compress_into_with_progress(&f.values, ErrorBound::Abs(1e-3), &mut buf, &mut |_| {})
+            .unwrap();
+        let cap = buf.capacity();
+        let first = buf.clone();
+        buf.clear();
+        pipe.compress_into_with_progress(&f.values, ErrorBound::Abs(1e-3), &mut buf, &mut |_| {})
+            .unwrap();
+        assert_eq!(buf, first, "recompression must be deterministic");
+        assert_eq!(buf.capacity(), cap, "second compress must not reallocate");
+        let mut vals = Vec::new();
+        let n = pipe.decompress_into_with_progress(&buf, &mut vals, &mut |_| {}).unwrap();
+        assert_eq!(n, f.values.len());
+        assert_eq!(vals.len(), n);
     }
 }

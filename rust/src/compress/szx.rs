@@ -29,8 +29,8 @@
 
 use super::bits::le;
 use super::traits::{
-    read_header, write_header, Compressed, CompressionStats, Compressor, CompressorKind,
-    ErrorBound, HEADER_LEN,
+    read_header, write_header, CompressionStats, Compressor, CompressorKind, ErrorBound,
+    HEADER_LEN,
 };
 use crate::{Error, Result};
 
@@ -60,11 +60,20 @@ impl Szx {
     }
 }
 
-/// Compress one chunk. Returns (payload, blocks, constant_blocks).
+/// Compress one chunk into a fresh payload vector (the multithread path
+/// needs independently owned payloads).
 pub(crate) fn compress_chunk(data: &[f32], eb: f64) -> (Vec<u8>, usize, usize) {
+    let mut payload = Vec::with_capacity(8 + data.len());
+    let (blocks, constant) = compress_chunk_into(data, eb, &mut payload);
+    (payload, blocks, constant)
+}
+
+/// Compress one chunk, appending to `payload`. Returns
+/// (blocks, constant_blocks).
+pub(crate) fn compress_chunk_into(data: &[f32], eb: f64, payload: &mut Vec<u8>) -> (usize, usize) {
     let twoeb = 2.0 * eb;
     let inv = 1.0 / twoeb;
-    let mut payload = Vec::with_capacity(8 + data.len());
+    payload.reserve(8 + data.len());
     let mut blocks = 0usize;
     let mut constant = 0usize;
     let mut mags = [0u64; BLOCK];
@@ -96,9 +105,9 @@ pub(crate) fn compress_chunk(data: &[f32], eb: f64) -> (Vec<u8>, usize, usize) {
         payload.push(bits as u8);
         payload.extend_from_slice(&(mu as f32).to_le_bytes());
         payload.extend_from_slice(&sign.to_le_bytes()[..block.len().div_ceil(8)]);
-        super::bits::pack_fixed(&mut payload, &mags[..block.len()], bits);
+        super::bits::pack_fixed(payload, &mags[..block.len()], bits);
     }
-    (payload, blocks, constant)
+    (blocks, constant)
 }
 
 /// Decompress one chunk of `cn` values into `out`.
@@ -149,35 +158,42 @@ impl Compressor for Szx {
         CompressorKind::Szx
     }
 
-    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+    fn compress_into(
+        &self,
+        data: &[f32],
+        eb: ErrorBound,
+        out: &mut Vec<u8>,
+    ) -> Result<CompressionStats> {
         let eb_abs = eb.resolve(data);
         if !(eb_abs > 0.0) || !eb_abs.is_finite() {
             return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
         }
-        let mut payloads = Vec::new();
+        // Same backfilled-chunk-table trick as fZ-light: the table length
+        // is known up front, so the frame is built in place with zero
+        // intermediate allocations.
+        let chunk = self.chunk_values.max(1);
+        let nchunks = data.len().div_ceil(chunk);
         let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
-        for chunk in data.chunks(self.chunk_values) {
-            let (p, blocks, constant) = compress_chunk(chunk, eb_abs);
+        let base = out.len();
+        out.reserve(HEADER_LEN + 8 + 4 * nchunks + data.len());
+        write_header(out, CompressorKind::Szx, data.len(), eb_abs);
+        le::put_u32(out, chunk as u32);
+        le::put_u32(out, nchunks as u32);
+        let table = out.len();
+        out.resize(table + 4 * nchunks, 0);
+        for (i, c) in data.chunks(chunk).enumerate() {
+            let start = out.len();
+            let (blocks, constant) = compress_chunk_into(c, eb_abs, out);
             stats.blocks += blocks;
             stats.constant_blocks += constant;
-            payloads.push(p);
+            let sz = (out.len() - start) as u32;
+            out[table + 4 * i..table + 4 * i + 4].copy_from_slice(&sz.to_le_bytes());
         }
-        let total: usize = payloads.iter().map(Vec::len).sum();
-        let mut bytes = Vec::with_capacity(HEADER_LEN + 8 + 4 * payloads.len() + total);
-        write_header(&mut bytes, CompressorKind::Szx, data.len(), eb_abs);
-        le::put_u32(&mut bytes, self.chunk_values as u32);
-        le::put_u32(&mut bytes, payloads.len() as u32);
-        for p in &payloads {
-            le::put_u32(&mut bytes, p.len() as u32);
-        }
-        for p in &payloads {
-            bytes.extend_from_slice(p);
-        }
-        stats.compressed_bytes = bytes.len();
-        Ok(Compressed { bytes, stats })
+        stats.compressed_bytes = out.len() - base;
+        Ok(stats)
     }
 
-    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+    fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
         let h = read_header(bytes)?;
         if h.codec != CompressorKind::Szx {
             return Err(Error::corrupt("not an szx frame"));
@@ -185,11 +201,15 @@ impl Compressor for Szx {
         let mut pos = HEADER_LEN;
         let chunk_values = le::get_u32(bytes, &mut pos)? as usize;
         let nchunks = le::get_u32(bytes, &mut pos)? as usize;
+        if chunk_values == 0 && nchunks > 0 {
+            return Err(Error::corrupt("zero chunk_values"));
+        }
         let mut sizes = Vec::with_capacity(nchunks);
         for _ in 0..nchunks {
             sizes.push(le::get_u32(bytes, &mut pos)? as usize);
         }
-        let mut out = Vec::with_capacity(h.n);
+        let start = out.len();
+        out.reserve(h.n);
         for (i, s) in sizes.iter().enumerate() {
             let end = pos + s;
             if end > bytes.len() {
@@ -202,13 +222,17 @@ impl Compressor for Szx {
             } else {
                 chunk_values
             };
-            decompress_chunk(&bytes[pos..end], cn, h.eb_abs, &mut out)?;
+            decompress_chunk(&bytes[pos..end], cn, h.eb_abs, out)?;
             pos = end;
         }
-        if out.len() != h.n {
-            return Err(Error::corrupt(format!("decoded {} of {} values", out.len(), h.n)));
+        if out.len() - start != h.n {
+            return Err(Error::corrupt(format!(
+                "decoded {} of {} values",
+                out.len() - start,
+                h.n
+            )));
         }
-        Ok(out)
+        Ok(h.n)
     }
 }
 

@@ -185,15 +185,42 @@ pub struct Compressed {
 }
 
 /// The compressor interface shared by all codecs.
+///
+/// The required methods are the **zero-alloc** `*_into` variants: they
+/// write into caller-owned buffers so repeated collectives (e.g. a DDP
+/// training loop driving [`crate::collectives::CollCtx`]) can recycle
+/// scratch storage instead of paying allocator traffic per call. The
+/// allocating [`Compressor::compress`] / [`Compressor::decompress`] are
+/// default-impl conveniences layered on top.
 pub trait Compressor: Send + Sync {
     /// Codec identifier.
     fn kind(&self) -> CompressorKind;
 
-    /// Compress `data` under the given error bound.
-    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed>;
+    /// Compress `data` under the given error bound, **appending** the
+    /// self-describing frame to `out`. Callers reusing a scratch buffer
+    /// should `clear()` it first; append semantics let several frames be
+    /// packed back to back (as the scatter/gather bundles do).
+    fn compress_into(&self, data: &[f32], eb: ErrorBound, out: &mut Vec<u8>)
+        -> Result<CompressionStats>;
 
-    /// Decompress a frame produced by [`Compressor::compress`].
-    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>>;
+    /// Decompress a frame, **appending** the decoded values to `out` and
+    /// returning how many were appended. Callers reusing a scratch buffer
+    /// should `clear()` it first.
+    fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize>;
+
+    /// Compress `data` into a freshly allocated frame.
+    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+        let mut bytes = Vec::new();
+        let stats = self.compress_into(data, eb, &mut bytes)?;
+        Ok(Compressed { bytes, stats })
+    }
+
+    /// Decompress a frame into a freshly allocated vector.
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.decompress_into(bytes, &mut out)?;
+        Ok(out)
+    }
 
     /// Whether the codec honours the error bound (`ZfpFixedRate` does not —
     /// that is exactly the paper's criticism of fixed-rate baselines).

@@ -27,8 +27,8 @@
 
 use super::bits::{le, BitReader, BitWriter};
 use super::traits::{
-    read_header, write_header, Compressed, CompressionStats, Compressor, CompressorKind,
-    ErrorBound, HEADER_LEN,
+    read_header, write_header, CompressionStats, Compressor, CompressorKind, ErrorBound,
+    HEADER_LEN,
 };
 use crate::{Error, Result};
 
@@ -77,13 +77,19 @@ enum Mode {
     FixedRate(u8),
 }
 
-fn compress_impl(data: &[f32], eb_abs: f64, mode: Mode) -> Result<Compressed> {
+fn compress_impl(
+    data: &[f32],
+    eb_abs: f64,
+    mode: Mode,
+    bytes: &mut Vec<u8>,
+) -> Result<CompressionStats> {
     let kind = match mode {
         Mode::Abs => CompressorKind::ZfpAbs,
         Mode::FixedRate(_) => CompressorKind::ZfpFixedRate,
     };
-    let mut bytes = Vec::with_capacity(HEADER_LEN + 8 + data.len() * 2);
-    write_header(&mut bytes, kind, data.len(), eb_abs);
+    let base = bytes.len();
+    bytes.reserve(HEADER_LEN + 8 + data.len() * 2);
+    write_header(bytes, kind, data.len(), eb_abs);
     match mode {
         Mode::Abs => {
             bytes.push(0);
@@ -130,8 +136,8 @@ fn compress_impl(data: &[f32], eb_abs: f64, mode: Mode) -> Result<Compressed> {
                 }
             }
         };
-        le::put_f32(&mut bytes, lo as f32);
-        le::put_f32(&mut bytes, hi as f32);
+        le::put_f32(bytes, lo as f32);
+        le::put_f32(bytes, hi as f32);
         bytes.push(bits as u8);
         if bits == 0 {
             stats.constant_blocks += 1;
@@ -146,18 +152,19 @@ fn compress_impl(data: &[f32], eb_abs: f64, mode: Mode) -> Result<Compressed> {
         }
         bytes.extend_from_slice(&w.finish());
     }
-    stats.compressed_bytes = bytes.len();
-    Ok(Compressed { bytes, stats })
+    stats.compressed_bytes = bytes.len() - base;
+    Ok(stats)
 }
 
-fn decompress_impl(bytes: &[u8], expect: CompressorKind) -> Result<Vec<f32>> {
+fn decompress_impl(bytes: &[u8], expect: CompressorKind, out: &mut Vec<f32>) -> Result<usize> {
     let h = read_header(bytes)?;
     if h.codec != expect {
         return Err(Error::corrupt("zfp frame codec mismatch"));
     }
     let mut pos = HEADER_LEN + 4; // skip mode/rate/reserved
     let nblocks = h.n.div_ceil(BLOCK);
-    let mut out = Vec::with_capacity(nblocks * BLOCK);
+    let start = out.len();
+    out.reserve(nblocks * BLOCK);
     let mut buf = [0.0f64; BLOCK];
     for _ in 0..nblocks {
         let lo = le::get_f32(bytes, &mut pos)? as f64;
@@ -191,11 +198,11 @@ fn decompress_impl(bytes: &[u8], expect: CompressorKind) -> Result<Vec<f32>> {
             out.push(v as f32);
         }
     }
-    out.truncate(h.n);
-    if out.len() != h.n {
+    out.truncate(start + h.n);
+    if out.len() - start != h.n {
         return Err(Error::corrupt("zfp short output"));
     }
-    Ok(out)
+    Ok(h.n)
 }
 
 /// Fixed-accuracy (error-bounded) mode.
@@ -206,15 +213,20 @@ impl Compressor for ZfpAbs {
     fn kind(&self) -> CompressorKind {
         CompressorKind::ZfpAbs
     }
-    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+    fn compress_into(
+        &self,
+        data: &[f32],
+        eb: ErrorBound,
+        out: &mut Vec<u8>,
+    ) -> Result<CompressionStats> {
         let eb_abs = eb.resolve(data);
         if !(eb_abs > 0.0) || !eb_abs.is_finite() {
             return Err(Error::invalid("error bound must be positive"));
         }
-        compress_impl(data, eb_abs, Mode::Abs)
+        compress_impl(data, eb_abs, Mode::Abs, out)
     }
-    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
-        decompress_impl(bytes, CompressorKind::ZfpAbs)
+    fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
+        decompress_impl(bytes, CompressorKind::ZfpAbs, out)
     }
 }
 
@@ -235,14 +247,19 @@ impl Compressor for ZfpFixedRate {
     fn kind(&self) -> CompressorKind {
         CompressorKind::ZfpFixedRate
     }
-    fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {
+    fn compress_into(
+        &self,
+        data: &[f32],
+        eb: ErrorBound,
+        out: &mut Vec<u8>,
+    ) -> Result<CompressionStats> {
         // The error bound is recorded but NOT honoured — fixed-rate mode is
         // the paper's counterexample.
         let eb_abs = eb.resolve(data);
-        compress_impl(data, eb_abs, Mode::FixedRate(self.rate.clamp(1, 32)))
+        compress_impl(data, eb_abs, Mode::FixedRate(self.rate.clamp(1, 32)), out)
     }
-    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
-        decompress_impl(bytes, CompressorKind::ZfpFixedRate)
+    fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
+        decompress_impl(bytes, CompressorKind::ZfpFixedRate, out)
     }
     fn is_error_bounded(&self) -> bool {
         false

@@ -11,10 +11,9 @@
 use std::path::Path;
 
 use crate::apps::{image_stacking, visualize};
-use crate::collectives::{allgather, allreduce, reduce_scatter, run_ranks, Algo, Mode, ReduceOp};
+use crate::collectives::{run_ranks, Algo, CollCtx, Mode, ReduceOp};
 use crate::compress::stats::{error_histogram, quality};
 use crate::compress::{self, Compressor, CompressorKind, ErrorBound, MtCompressor};
-use crate::coordinator::Metrics;
 use crate::data::fields::{Field, FieldKind};
 use crate::sim::calibrate::sample_ratio;
 use crate::sim::collectives::{
@@ -554,10 +553,10 @@ fn crosscheck() -> Vec<(String, Table)> {
         ),
     ] {
         let out = run_ranks(n, move |c| {
-            let f = Field::generate(FieldKind::Rtm, values, 5 + c.rank() as u64);
-            let mut m = Metrics::default();
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values, 5 + ctx.rank() as u64);
             let t0 = std::time::Instant::now();
-            allreduce(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
+            ctx.allreduce(&f.values, ReduceOp::Sum).unwrap();
             t0.elapsed().as_secs_f64()
         });
         let real = out.iter().cloned().fold(0.0, f64::max);
@@ -594,11 +593,11 @@ fn ablation_chunk() -> Vec<(String, Table)> {
         let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Rel(1e-4))
             .with_pipe_chunk(chunk);
         let out = run_ranks(n, move |c| {
-            let f = Field::generate(FieldKind::Rtm, values, 9 + c.rank() as u64);
-            let mut m = Metrics::default();
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values, 9 + ctx.rank() as u64);
             let t0 = std::time::Instant::now();
-            reduce_scatter(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
-            (t0.elapsed().as_secs_f64(), m.compress_s)
+            ctx.reduce_scatter(&f.values, ReduceOp::Sum).unwrap();
+            (t0.elapsed().as_secs_f64(), ctx.metrics().compress_s)
         });
         let wall = out.iter().map(|x| x.0).fold(0.0, f64::max);
         let comp = out.iter().map(|x| x.1).sum::<f64>() / n as f64;
@@ -613,13 +612,13 @@ fn ablation_balance() -> Vec<(String, Table)> {
     let n = 4;
     let values = 1 << 19;
     for seg in [1usize << 12, 1 << 14, 1 << 16, 1 << 18, usize::MAX] {
-        let mut mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Rel(1e-4));
-        mode.pipeline_bytes = seg;
+        let mode =
+            Mode::zccl(CompressorKind::FzLight, ErrorBound::Rel(1e-4)).with_pipeline_bytes(seg);
         let out = run_ranks(n, move |c| {
-            let f = Field::generate(FieldKind::Hurricane, values, 31 + c.rank() as u64);
-            let mut m = Metrics::default();
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Hurricane, values, 31 + ctx.rank() as u64);
             let t0 = std::time::Instant::now();
-            allgather(c, &f.values, &mode, &mut m).unwrap();
+            ctx.allgather(&f.values).unwrap();
             t0.elapsed().as_secs_f64()
         });
         let wall = out.iter().cloned().fold(0.0, f64::max);
@@ -638,11 +637,11 @@ fn ablation_eb() -> Vec<(String, Table)> {
     for rel in [1e-1, 1e-2, 1e-3, 1e-4, 1e-5] {
         let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Rel(rel));
         let out = run_ranks(n, move |c| {
-            let f = Field::generate(FieldKind::Cesm, values, 77 + c.rank() as u64);
-            let mut m = Metrics::default();
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Cesm, values, 77 + ctx.rank() as u64);
             let t0 = std::time::Instant::now();
-            let r = allreduce(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
-            (t0.elapsed().as_secs_f64(), r, m)
+            let r = ctx.allreduce(&f.values, ReduceOp::Sum).unwrap();
+            (t0.elapsed().as_secs_f64(), r, ctx.take_metrics())
         });
         // Exact serial reference.
         let mut exact = Field::generate(FieldKind::Cesm, values, 77).values;

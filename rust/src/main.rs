@@ -19,7 +19,7 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use zccl::collectives::{allreduce, run_ranks, ReduceOp};
+use zccl::collectives::{run_ranks, CollCtx, ReduceOp};
 use zccl::config::mode_from_args;
 use zccl::coordinator::{harness, launch, Metrics};
 use zccl::data::fields::FieldKind;
@@ -75,10 +75,10 @@ fn main() {
     }
 }
 
-fn real_main() -> anyhow::Result<()> {
+fn real_main() -> zccl::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let cmd = raw.first().cloned().unwrap_or_default();
-    let args = parse_args(raw.get(1..).unwrap_or(&[])).map_err(anyhow::Error::msg)?;
+    let args = parse_args(raw.get(1..).unwrap_or(&[])).map_err(zccl::Error::invalid)?;
 
     match cmd.as_str() {
         "info" => {
@@ -107,15 +107,15 @@ fn real_main() -> anyhow::Result<()> {
                 .transpose()?
                 .unwrap_or(FieldKind::Rtm);
             let out = run_ranks(n, move |c| {
+                let mut ctx = CollCtx::over(c, mode);
                 let f = zccl::data::fields::Field::generate(
                     field,
                     values,
-                    1000 + c.rank() as u64,
+                    1000 + ctx.rank() as u64,
                 );
-                let mut m = Metrics::default();
                 let t0 = std::time::Instant::now();
-                allreduce(c, &f.values, ReduceOp::Sum, &mode, &mut m).unwrap();
-                (t0.elapsed().as_secs_f64(), m)
+                ctx.allreduce(&f.values, ReduceOp::Sum).unwrap();
+                (t0.elapsed().as_secs_f64(), ctx.take_metrics())
             });
             let wall = out.iter().map(|x| x.0).fold(0.0, f64::max);
             let mut m = Metrics::default();
@@ -139,12 +139,12 @@ fn real_main() -> anyhow::Result<()> {
             let peers_s = args
                 .flags
                 .get("peers")
-                .ok_or_else(|| anyhow::anyhow!("worker needs --peers"))?;
+                .ok_or_else(|| zccl::Error::invalid("worker needs --peers"))?;
             let peers: Vec<std::net::SocketAddr> = peers_s
                 .split(',')
                 .map(|p| p.parse())
                 .collect::<Result<_, _>>()
-                .map_err(|e| anyhow::anyhow!("bad --peers: {e}"))?;
+                .map_err(|e| zccl::Error::invalid(format!("bad --peers: {e}")))?;
             let values = usize_flag(&args, "values", 1 << 20);
             let spec = launch::LaunchSpec {
                 peers,

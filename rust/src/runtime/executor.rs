@@ -1,110 +1,224 @@
 //! PJRT executor: compile HLO-text artifacts and run them.
+//!
+//! The real executor needs the external `xla` crate, which not every
+//! build environment vendors. With the `pjrt` cargo feature the genuine
+//! PJRT path compiles; without it this module provides an API-compatible
+//! stub whose [`Runtime::cpu`] fails with a clear message — everything
+//! that does not touch PJRT (all compressors, collectives, benches)
+//! builds and runs identically either way.
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::path::Path;
 
-use crate::runtime::manifest::{ArtifactSpec, Manifest, TensorSpec};
-use crate::{Error, Result};
+    use crate::runtime::manifest::{ArtifactSpec, Manifest, TensorSpec};
+    use crate::{Error, Result};
 
-fn xerr(e: xla::Error) -> Error {
-    Error::runtime(e.to_string())
-}
+    /// The tensor/literal type handed to [`Module::run`].
+    pub use xla::Literal;
 
-/// A PJRT client bound to the host CPU.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu().map_err(xerr)? })
+    fn xerr(e: xla::Error) -> Error {
+        Error::runtime(e.to_string())
     }
 
-    /// Platform string (for `zccl info`).
-    pub fn platform(&self) -> String {
-        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    /// A PJRT client bound to the host CPU.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Compile one artifact from its HLO text file.
-    pub fn compile(&self, dir: impl AsRef<Path>, spec: &ArtifactSpec) -> Result<Module> {
-        let path = dir.as_ref().join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::invalid("non-utf8 artifact path"))?,
-        )
-        .map_err(xerr)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(xerr)?;
-        Ok(Module { exe, spec: spec.clone() })
+    impl Runtime {
+        /// Whether this build carries the real PJRT executor.
+        pub fn available() -> bool {
+            true
+        }
+
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime { client: xla::PjRtClient::cpu().map_err(xerr)? })
+        }
+
+        /// Platform string (for `zccl info`).
+        pub fn platform(&self) -> String {
+            format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+        }
+
+        /// Compile one artifact from its HLO text file.
+        pub fn compile(&self, dir: impl AsRef<Path>, spec: &ArtifactSpec) -> Result<Module> {
+            let path = dir.as_ref().join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::invalid("non-utf8 artifact path"))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xerr)?;
+            Ok(Module { exe, spec: spec.clone() })
+        }
+
+        /// Convenience: load the manifest and compile `name`.
+        pub fn load(&self, dir: impl AsRef<Path>, name: &str) -> Result<Module> {
+            let manifest = Manifest::load(&dir)?;
+            let spec = manifest.artifact(name)?;
+            self.compile(&dir, spec)
+        }
     }
 
-    /// Convenience: load the manifest and compile `name`.
-    pub fn load(&self, dir: impl AsRef<Path>, name: &str) -> Result<Module> {
-        let manifest = Manifest::load(&dir)?;
-        let spec = manifest.artifact(name)?;
-        self.compile(&dir, spec)
+    /// One compiled artifact ready to execute.
+    pub struct Module {
+        exe: xla::PjRtLoadedExecutable,
+        /// The artifact's signature (used for input validation).
+        pub spec: ArtifactSpec,
     }
-}
 
-/// One compiled artifact ready to execute.
-pub struct Module {
-    exe: xla::PjRtLoadedExecutable,
-    /// The artifact's signature (used for input validation).
-    pub spec: ArtifactSpec,
-}
+    impl Module {
+        /// Execute with the given inputs (must match the manifest signature
+        /// arity). Returns the untupled outputs.
+        pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+            if inputs.len() != self.spec.inputs.len() {
+                return Err(Error::invalid(format!(
+                    "artifact {}: {} inputs given, {} expected",
+                    self.spec.name,
+                    inputs.len(),
+                    self.spec.inputs.len()
+                )));
+            }
+            let result = self.exe.execute::<Literal>(inputs).map_err(xerr)?;
+            let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+            // aot.py lowers with return_tuple=True: always a tuple.
+            lit.to_tuple().map_err(xerr)
+        }
+    }
 
-impl Module {
-    /// Execute with the given inputs (must match the manifest signature
-    /// arity). Returns the untupled outputs.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.spec.inputs.len() {
+    /// Build an f32 literal of the given shape.
+    pub fn literal_f32(values: &[f32], shape: &[usize]) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        if n != values.len() {
             return Err(Error::invalid(format!(
-                "artifact {}: {} inputs given, {} expected",
-                self.spec.name,
-                inputs.len(),
-                self.spec.inputs.len()
+                "literal shape {shape:?} != {} values",
+                values.len()
             )));
         }
-        let result = self.exe.execute::<xla::Literal>(inputs).map_err(xerr)?;
-        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        lit.to_tuple().map_err(xerr)
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(values).reshape(&dims).map_err(xerr)
+    }
+
+    /// Build an i32 literal of the given shape.
+    pub fn literal_i32(values: &[i32], shape: &[usize]) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        if n != values.len() {
+            return Err(Error::invalid(format!(
+                "literal shape {shape:?} != {} values",
+                values.len()
+            )));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(values).reshape(&dims).map_err(xerr)
+    }
+
+    /// Extract an f32 literal's values.
+    pub fn literal_to_f32(lit: &Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(xerr)
+    }
+
+    /// Validate that a literal matches a manifest tensor spec (debug aid).
+    pub fn check_spec(lit: &Literal, spec: &TensorSpec) -> Result<()> {
+        if lit.element_count() != spec.elements() {
+            return Err(Error::invalid(format!(
+                "literal has {} elements, spec {:?} wants {}",
+                lit.element_count(),
+                spec.shape,
+                spec.elements()
+            )));
+        }
+        Ok(())
     }
 }
 
-/// Build an f32 literal of the given shape.
-pub fn literal_f32(values: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product();
-    if n != values.len() {
-        return Err(Error::invalid(format!("literal shape {shape:?} != {} values", values.len())));
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use crate::runtime::manifest::{ArtifactSpec, TensorSpec};
+    use crate::{Error, Result};
+
+    const MSG: &str = "built without the 'pjrt' feature: the PJRT/XLA runtime is stubbed \
+                       (enable feature `pjrt` and provide the `xla` crate)";
+
+    /// Opaque stand-in for `xla::Literal`.
+    #[derive(Debug, Clone)]
+    pub struct Literal;
+
+    impl Literal {
+        /// Mirrors `xla::Literal::to_vec`; always fails in a stub build.
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            Err(Error::runtime(MSG))
+        }
     }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(values).reshape(&dims).map_err(xerr)
+
+    /// Stubbed PJRT client; every constructor fails.
+    pub struct Runtime;
+
+    impl Runtime {
+        /// Whether this build carries the real PJRT executor.
+        pub fn available() -> bool {
+            false
+        }
+
+        /// Always fails in a stub build.
+        pub fn cpu() -> Result<Runtime> {
+            Err(Error::runtime(MSG))
+        }
+
+        /// Platform string (never reached in practice — `cpu()` fails).
+        pub fn platform(&self) -> String {
+            "pjrt-stub (0 devices)".into()
+        }
+
+        /// Always fails in a stub build.
+        pub fn compile(&self, _dir: impl AsRef<Path>, _spec: &ArtifactSpec) -> Result<Module> {
+            Err(Error::runtime(MSG))
+        }
+
+        /// Always fails in a stub build.
+        pub fn load(&self, _dir: impl AsRef<Path>, _name: &str) -> Result<Module> {
+            Err(Error::runtime(MSG))
+        }
+    }
+
+    /// Stubbed compiled artifact (cannot be constructed via [`Runtime`]).
+    pub struct Module {
+        /// The artifact's signature.
+        pub spec: ArtifactSpec,
+    }
+
+    impl Module {
+        /// Always fails in a stub build.
+        pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+            Err(Error::runtime(MSG))
+        }
+    }
+
+    /// Always fails in a stub build.
+    pub fn literal_f32(_values: &[f32], _shape: &[usize]) -> Result<Literal> {
+        Err(Error::runtime(MSG))
+    }
+
+    /// Always fails in a stub build.
+    pub fn literal_i32(_values: &[i32], _shape: &[usize]) -> Result<Literal> {
+        Err(Error::runtime(MSG))
+    }
+
+    /// Always fails in a stub build.
+    pub fn literal_to_f32(_lit: &Literal) -> Result<Vec<f32>> {
+        Err(Error::runtime(MSG))
+    }
+
+    /// Always fails in a stub build.
+    pub fn check_spec(_lit: &Literal, _spec: &TensorSpec) -> Result<()> {
+        Err(Error::runtime(MSG))
+    }
 }
 
-/// Build an i32 literal of the given shape.
-pub fn literal_i32(values: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product();
-    if n != values.len() {
-        return Err(Error::invalid(format!("literal shape {shape:?} != {} values", values.len())));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(values).reshape(&dims).map_err(xerr)
-}
-
-/// Extract an f32 literal's values.
-pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(xerr)
-}
-
-/// Validate that a literal matches a manifest tensor spec (debug aid).
-pub fn check_spec(lit: &xla::Literal, spec: &TensorSpec) -> Result<()> {
-    if lit.element_count() != spec.elements() {
-        return Err(Error::invalid(format!(
-            "literal has {} elements, spec {:?} wants {}",
-            lit.element_count(),
-            spec.shape,
-            spec.elements()
-        )));
-    }
-    Ok(())
-}
+#[cfg(feature = "pjrt")]
+pub use real::{check_spec, literal_f32, literal_i32, literal_to_f32, Literal, Module, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{check_spec, literal_f32, literal_i32, literal_to_f32, Literal, Module, Runtime};

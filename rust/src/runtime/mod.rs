@@ -9,5 +9,5 @@
 pub mod executor;
 pub mod manifest;
 
-pub use executor::{literal_f32, literal_i32, literal_to_f32, Module, Runtime};
+pub use executor::{check_spec, literal_f32, literal_i32, literal_to_f32, Literal, Module, Runtime};
 pub use manifest::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};

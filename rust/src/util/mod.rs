@@ -1,6 +1,7 @@
 //! In-tree substitutes for common ecosystem crates (this build environment
-//! is fully offline; only `xla` + `anyhow` are vendored). Everything here
-//! is deliberately small and purpose-built:
+//! is fully offline; the only external crate is `xla`, and it is optional
+//! behind the `pjrt` feature). Everything here is deliberately small and
+//! purpose-built:
 //!
 //! - [`par`]   — scoped thread pool / parallel chunk map (≈ rayon subset)
 //! - [`json`]  — minimal JSON writer + parser (manifest + results I/O)

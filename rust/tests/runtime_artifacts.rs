@@ -8,6 +8,10 @@
 use zccl::runtime::{literal_f32, literal_i32, literal_to_f32, Manifest, Runtime};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if !Runtime::available() {
+        eprintln!("SKIP: built without the 'pjrt' feature (PJRT runtime stubbed)");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)
@@ -62,7 +66,7 @@ fn grad_step_descends_and_matches_eval_loss() {
         (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
     let y: Vec<i32> = x.iter().map(|&t| (t + 1) % cfg.vocab as i32).collect();
 
-    let mut inputs: Vec<xla::Literal> = params
+    let mut inputs: Vec<zccl::runtime::Literal> = params
         .iter()
         .map(|(_, shape, vals)| literal_f32(vals, shape).unwrap())
         .collect();
@@ -78,7 +82,7 @@ fn grad_step_descends_and_matches_eval_loss() {
 
     // SGD step in Rust, then the loss on the same batch must drop.
     let lr = 0.5f32;
-    let mut new_inputs: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+    let mut new_inputs: Vec<zccl::runtime::Literal> = Vec::with_capacity(inputs.len());
     for (i, (_, shape, vals)) in params.iter().enumerate() {
         let g = literal_to_f32(&out[i + 1]).unwrap();
         let updated: Vec<f32> = vals.iter().zip(&g).map(|(p, gi)| p - lr * gi).collect();
@@ -104,7 +108,7 @@ fn grad_step_zccl_close_to_plain() {
     let x: Vec<i32> =
         (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
     let y: Vec<i32> = x.iter().map(|&t| (t + 1) % cfg.vocab as i32).collect();
-    let mut inputs: Vec<xla::Literal> = params
+    let mut inputs: Vec<zccl::runtime::Literal> = params
         .iter()
         .map(|(_, shape, vals)| literal_f32(vals, shape).unwrap())
         .collect();
