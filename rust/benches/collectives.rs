@@ -3,14 +3,21 @@
 //! cluster-scale series come from `zccl bench fig*`).
 //!
 //! All cases drive the collectives through the persistent [`CollCtx`]
-//! API; the `allreduce-iterated` case additionally reports the context's
-//! pool counters to show that warm iterations run without codec
-//! construction or scratch growth.
+//! API; the `allreduce-iterated` / `reduce_scatter-iterated` cases
+//! additionally report the context's pool counters to show that warm
+//! iterations run without codec construction or scratch growth.
+//!
+//! The final case isolates the per-hop **receive side** of a reduction
+//! collective — fused decompress–reduce vs decompress-then-fold on the
+//! same frame — and emits one machine-readable `BENCH_reduce.json` line
+//! (also written next to the working directory) so the perf trajectory
+//! of the fused kernel is tracked from PR to PR.
 
 use zccl::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
-use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::compress::{Compressor, CompressorKind, ErrorBound, FzLight};
 use zccl::data::fields::{Field, FieldKind};
-use zccl::util::bench::Table;
+use zccl::util::bench::{measure, Table};
+use zccl::util::json::Json;
 
 fn modes() -> Vec<(&'static str, Mode)> {
     let eb = ErrorBound::Rel(1e-4);
@@ -131,5 +138,79 @@ fn main() {
         ]);
     }
 
+    // Iterated reduce-scatter — the collective whose receive side is the
+    // fused decompress–reduce kernel; per-hop DecompressReduce time is
+    // reported alongside the wall time.
+    for (mode_name, mode) in modes() {
+        let out = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values, 3 + ctx.rank() as u64);
+            let mut times = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let t0 = std::time::Instant::now();
+                ctx.reduce_scatter(&f.values, ReduceOp::Sum).unwrap();
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            (times, ctx.metrics().decompress_reduce_s)
+        });
+        let warm = out
+            .iter()
+            .map(|(ts, _)| ts[1..].iter().cloned().fold(f64::INFINITY, f64::min))
+            .fold(0.0, f64::max);
+        let fused_s = out.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+        t.row(vec![
+            "reduce_scatter-iterated".into(),
+            mode_name.into(),
+            format!("{warm:.4} (decompress-reduce total {fused_s:.4})"),
+        ]);
+    }
+
+    // Per-hop receive side in isolation: the same compressed partial
+    // consumed fused vs unfused. The fused path must make fewer memory
+    // passes (constant blocks fold as a broadcast, no partial vector).
+    let codec = FzLight::default();
+    let field = Field::generate(FieldKind::Hurricane, values, 11);
+    let frame = codec.compress(&field.values, ErrorBound::Rel(1e-4)).unwrap();
+    let base = Field::generate(FieldKind::Hurricane, values, 12).values;
+    let mut acc = base.clone();
+    let mut partial: Vec<f32> = Vec::new();
+    let unfused = measure(1, 5, || {
+        acc.copy_from_slice(&base);
+        partial.clear();
+        codec.decompress_into(&frame.bytes, &mut partial).unwrap();
+        ReduceOp::Sum.fold(&mut acc, &partial);
+    });
+    let fused = measure(1, 5, || {
+        acc.copy_from_slice(&base);
+        codec.decompress_fold_into(&frame.bytes, ReduceOp::Sum, &mut acc).unwrap();
+    });
+    let per_elem = |s: f64| s * 1e9 / values as f64;
+    t.row(vec![
+        "receive-hop-unfused".into(),
+        "fzlight".into(),
+        format!("{:.4} ({:.2} ns/elem)", unfused.mean_s, per_elem(unfused.mean_s)),
+    ]);
+    t.row(vec![
+        "receive-hop-fused".into(),
+        "fzlight".into(),
+        format!("{:.4} ({:.2} ns/elem)", fused.mean_s, per_elem(fused.mean_s)),
+    ]);
+
     println!("{}", t.render());
+
+    // Single-line machine-readable trajectory summary.
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("reduce_receive_fused_vs_unfused".into())),
+        ("values", Json::Num(values as f64)),
+        ("compressed_bytes", Json::Num(frame.bytes.len() as f64)),
+        ("constant_block_fraction", Json::Num(frame.stats.constant_fraction())),
+        ("fused_ns_per_element", Json::Num(per_elem(fused.mean_s))),
+        ("unfused_ns_per_element", Json::Num(per_elem(unfused.mean_s))),
+        ("speedup", Json::Num(unfused.mean_s / fused.mean_s.max(1e-12))),
+    ]);
+    let line = summary.to_string();
+    println!("BENCH_reduce.json {line}");
+    if let Err(e) = std::fs::write("BENCH_reduce.json", format!("{line}\n")) {
+        eprintln!("warning: could not write BENCH_reduce.json: {e}");
+    }
 }

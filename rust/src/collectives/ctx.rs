@@ -171,6 +171,45 @@ impl CollState {
         }
     }
 
+    /// Codec-agnostic **fused decompress–reduce**: fold the frame's values
+    /// straight into `acc` via `op` — the reduction collectives' receive
+    /// path. `acc.len()` must equal the frame's element count; on `Err`,
+    /// `acc` is poisoned (see
+    /// [`crate::compress::Compressor::decompress_fold_into`]).
+    ///
+    /// Codecs with a native single-pass kernel run it directly; codecs on
+    /// the decompress-then-fold default are routed through the scratch
+    /// pool instead, so they keep the zero-alloc warm path rather than
+    /// paying the default impl's per-call temporary.
+    pub(crate) fn decode_fold_into(
+        &mut self,
+        bytes: &[u8],
+        op: ReduceOp,
+        acc: &mut [f32],
+    ) -> Result<usize> {
+        let kind = crate::compress::peek_codec(bytes)?;
+        if kind != self.codec.kind() {
+            self.codec_builds += 1;
+            return crate::compress::build(kind).decompress_fold_into(bytes, op, acc);
+        }
+        if self.codec.supports_fused_fold() {
+            return self.codec.decompress_fold_into(bytes, op, acc);
+        }
+        // Pooled decompress-then-fold. Error paths drop the buffer per the
+        // crate-wide pool policy (see [`ScratchPool`] docs).
+        let mut partial = self.pool.take_f32();
+        let cnt = self.codec.decompress_into(bytes, &mut partial)?;
+        if cnt != acc.len() {
+            return Err(crate::Error::invalid(format!(
+                "fused fold: frame holds {cnt} values but accumulator holds {}",
+                acc.len()
+            )));
+        }
+        op.fold(acc, &partial);
+        self.pool.put_f32(partial);
+        Ok(cnt)
+    }
+
     /// How many codec instances this state has constructed (1 after
     /// [`CollState::new`]; stable across iterated collectives — the
     /// regression test for "no per-iteration codec construction").
@@ -393,6 +432,38 @@ mod tests {
         assert!(st.pipe.is_some(), "zccl + fzlight must pre-build the PIPE codec");
         let st2 = CollState::new(Mode::ccoll(ErrorBound::Abs(1e-3)));
         assert!(st2.pipe.is_none(), "ccoll has no PIPE overlap");
+    }
+
+    #[test]
+    fn decode_fold_pools_default_impl_codecs_and_matches_unfused() {
+        // CColl runs SZx, which has no native fused kernel: the fold must
+        // go through pooled scratch (one f32 buffer ever created) and
+        // still equal decompress-then-fold exactly.
+        let mut st = CollState::new(Mode::ccoll(crate::compress::ErrorBound::Abs(1e-3)));
+        assert!(!st.codec.supports_fused_fold());
+        let data = Field::generate(FieldKind::Cesm, 4096, 11).values;
+        let mut frame = Vec::new();
+        st.compress_into(&data, &mut frame).unwrap();
+        let mut acc = vec![1.0f32; data.len()];
+        st.decode_fold_into(&frame, ReduceOp::Sum, &mut acc).unwrap();
+        let first = st.pool_stats();
+        let mut acc2 = vec![1.0f32; data.len()];
+        st.decode_fold_into(&frame, ReduceOp::Sum, &mut acc2).unwrap();
+        let second = st.pool_stats();
+        assert_eq!(second.f32_buffers_created, first.f32_buffers_created);
+        assert!(second.reuses > first.reuses, "warm fold must reuse pooled scratch");
+        let mut partial = Vec::new();
+        st.decode_into(&frame, &mut partial).unwrap();
+        let mut want = vec![1.0f32; data.len()];
+        ReduceOp::Sum.fold(&mut want, &partial);
+        assert_eq!(acc, want);
+        assert_eq!(acc2, want);
+        // The ZCCL/fZ-light state runs the native kernel instead.
+        let stz = CollState::new(Mode::zccl(
+            CompressorKind::FzLight,
+            crate::compress::ErrorBound::Abs(1e-3),
+        ));
+        assert!(stz.codec.supports_fused_fold());
     }
 
     #[test]

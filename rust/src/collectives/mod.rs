@@ -34,6 +34,19 @@
 //! merges its timings into the caller's `Metrics`. They are fine for
 //! one-shot calls; anything iterated should hold a [`CollCtx`].
 //!
+//! ## The fused decompress–reduce receive path
+//!
+//! The reduction collectives ([`reduce_scatter`], [`reduce`], and through
+//! them [`allreduce`]) never materialize a received partial: the receive
+//! side calls [`crate::compress::Compressor::decompress_fold_into`],
+//! which folds every reconstructed value straight into the accumulator
+//! (§3.4–§3.5, Fig. 4). For fZ-light frames, constant blocks — the
+//! dominant case on smooth fields — become one broadcast add/max/min over
+//! the run with no per-value decode; the `Plain` mode folds directly from
+//! the wire bytes. Time spent there is attributed to
+//! [`crate::coordinator::Phase::DecompressReduce`], since decode and
+//! reduce are no longer separable once fused.
+//!
 //! ## Modes
 //!
 //! Every collective is implemented in four modes (Table 6):
@@ -75,54 +88,12 @@ use crate::transport::memchan::MemFabric;
 use crate::transport::Transport;
 use crate::Result;
 
-/// The reduction operators the paper analyses (§3.2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ReduceOp {
-    /// Elementwise sum (Theorem 1).
-    Sum,
-    /// Elementwise mean (Corollary 2): sum followed by a `1/n` scale.
-    Avg,
-    /// Elementwise maximum (Theorem 2).
-    Max,
-    /// Elementwise minimum (Theorem 2).
-    Min,
-}
-
-impl ReduceOp {
-    /// Fold `src` into `acc` elementwise.
-    #[inline]
-    pub fn fold(self, acc: &mut [f32], src: &[f32]) {
-        debug_assert_eq!(acc.len(), src.len());
-        match self {
-            ReduceOp::Sum | ReduceOp::Avg => {
-                for (a, s) in acc.iter_mut().zip(src) {
-                    *a += s;
-                }
-            }
-            ReduceOp::Max => {
-                for (a, s) in acc.iter_mut().zip(src) {
-                    *a = a.max(*s);
-                }
-            }
-            ReduceOp::Min => {
-                for (a, s) in acc.iter_mut().zip(src) {
-                    *a = a.min(*s);
-                }
-            }
-        }
-    }
-
-    /// Final scaling (only `Avg` rescales by the communicator size).
-    #[inline]
-    pub fn finish(self, acc: &mut [f32], n: usize) {
-        if self == ReduceOp::Avg {
-            let inv = 1.0 / n as f32;
-            for a in acc.iter_mut() {
-                *a *= inv;
-            }
-        }
-    }
-}
+/// The reduction operators the paper analyses (§3.2). Defined in
+/// [`crate::ops`] — a leaf module below both the collective and the
+/// compression layer, because the fused decompress–reduce kernels
+/// ([`crate::compress::Compressor::decompress_fold_into`]) need the fold
+/// semantics too; this remains the canonical public path.
+pub use crate::ops::ReduceOp;
 
 /// Which collective framework to run (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -322,6 +293,27 @@ pub fn bytes_to_f32s_into(b: &[u8], out: &mut Vec<f32>) -> Result<usize> {
     Ok(b.len() / 4)
 }
 
+/// Fold a little-endian `f32` wire buffer straight into `acc` — the
+/// `Plain` mode's fused receive side: decode and reduce in one pass with
+/// no intermediate vector. The buffer must hold exactly `acc.len()`
+/// values. Returns the folded count.
+pub(crate) fn fold_f32_bytes(op: ReduceOp, b: &[u8], acc: &mut [f32]) -> Result<usize> {
+    if b.len() % 4 != 0 {
+        return Err(crate::Error::corrupt(format!("byte length {} not 4-aligned", b.len())));
+    }
+    let n = b.len() / 4;
+    if n != acc.len() {
+        return Err(crate::Error::corrupt(format!(
+            "partial holds {n} values but accumulator expects {}",
+            acc.len()
+        )));
+    }
+    for (a, c) in acc.iter_mut().zip(b.chunks_exact(4)) {
+        op.apply(a, f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    Ok(n)
+}
+
 /// Exchange one `u64` per rank over the ring — the §3.5.1 size
 /// synchronisation. The paper sends 4-byte sizes ("as the compressed data
 /// size only has four bytes, this step is very fast"); we widen to 8 bytes
@@ -485,5 +477,42 @@ mod tests {
         let mut avg = vec![10.0f32, 20.0];
         ReduceOp::Avg.finish(&mut avg, 4);
         assert_eq!(avg, vec![2.5, 5.0]);
+    }
+
+    #[test]
+    fn apply_and_apply_run_match_fold_bitwise() {
+        let base = vec![1.5f32, -0.25, 3.0e-7, -9.75, 0.0];
+        let src = vec![0.1f32, -2.0, 4.5e-7, -9.75, -0.0];
+        for op in [ReduceOp::Sum, ReduceOp::Avg, ReduceOp::Max, ReduceOp::Min] {
+            let mut folded = base.clone();
+            op.fold(&mut folded, &src);
+            let mut applied = base.clone();
+            for (a, &v) in applied.iter_mut().zip(&src) {
+                op.apply(a, v);
+            }
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&folded), bits(&applied), "{op:?}");
+            // apply_run == fold against a constant source.
+            let mut run = base.clone();
+            op.apply_run(&mut run, 0.75);
+            let constant = vec![0.75f32; base.len()];
+            let mut want = base.clone();
+            op.fold(&mut want, &constant);
+            assert_eq!(bits(&run), bits(&want), "{op:?} run");
+        }
+    }
+
+    #[test]
+    fn fold_f32_bytes_matches_decode_then_fold() {
+        let src = vec![2.0f32, -1.5, 0.25];
+        let wire = f32s_to_bytes(&src);
+        let mut fused = vec![1.0f32, 1.0, 1.0];
+        assert_eq!(fold_f32_bytes(ReduceOp::Sum, &wire, &mut fused).unwrap(), 3);
+        let mut unfused = vec![1.0f32, 1.0, 1.0];
+        ReduceOp::Sum.fold(&mut unfused, &bytes_to_f32s(&wire).unwrap());
+        assert_eq!(fused, unfused);
+        // Misaligned and mis-sized buffers are rejected.
+        assert!(fold_f32_bytes(ReduceOp::Sum, &wire[..5], &mut fused).is_err());
+        assert!(fold_f32_bytes(ReduceOp::Sum, &wire, &mut fused[..2]).is_err());
     }
 }

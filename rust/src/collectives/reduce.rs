@@ -3,14 +3,19 @@
 //! buffer before forwarding upward, so the transferred data is updated at
 //! every level (compression cannot be hoisted; §3.1.2 applies).
 //!
-//! - `Plain`: raw partials.
+//! - `Plain`: raw partials, folded straight from the wire.
 //! - `Cprp2p`/`CColl`: blocking compress → send per up-link.
 //! - `Zccl`: the up-link compression runs PIPE-fZ-light and polls the
 //!   outstanding child receives between chunks (the computation-framework
 //!   overlap, same as the ring reduce-scatter).
+//!
+//! Child partials are consumed through the **fused decompress–reduce**
+//! kernel ([`crate::compress::Compressor::decompress_fold_into`]): each
+//! child's frame folds straight into the local accumulator with no
+//! intermediate vector, timed as [`Phase::DecompressReduce`].
 
 use super::ctx::CollState;
-use super::{bytes_to_f32s_into, f32s_to_bytes, Algo, Communicator, Mode, ReduceOp};
+use super::{f32s_to_bytes, fold_f32_bytes, Algo, Communicator, Mode, ReduceOp};
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{binomial_bcast, tree_rounds};
 use crate::{Error, Result};
@@ -54,30 +59,28 @@ pub(crate) fn reduce_with(
     let (parent_step, child_steps) = binomial_bcast(me, root, n);
     m.raw_bytes += (input.len() * 4) as u64;
 
-    // Fold children (deepest subtree first = reverse round order).
-    let mut partial = st.pool.take_f32();
+    // Fold children (deepest subtree first = reverse round order). Each
+    // child's partial is consumed by the fused receive kernel — it is
+    // never materialized as a vector.
     for s in child_steps.iter().rev() {
         let tag = base + s.round as u64;
         let t0 = std::time::Instant::now();
         let msg = comm.t.recv(s.peer, tag)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
-        partial.clear();
-        let cnt = match st.mode.algo {
-            Algo::Plain => bytes_to_f32s_into(&msg, &mut partial)?,
+        match st.mode.algo {
+            Algo::Plain => {
+                let t0 = std::time::Instant::now();
+                fold_f32_bytes(op, &msg, &mut acc)?;
+                m.add(Phase::Compute, t0.elapsed().as_secs_f64());
+            }
             _ => {
                 let t0 = std::time::Instant::now();
-                let cnt = st.decode_into(&msg, &mut partial)?;
-                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-                cnt
+                st.decode_fold_into(&msg, op, &mut acc)?;
+                m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
-        };
-        if cnt != acc.len() {
-            return Err(Error::corrupt("reduce partial length mismatch"));
         }
-        m.time(Phase::Compute, || op.fold(&mut acc, &partial));
     }
-    st.pool.put_f32(partial);
 
     if me == root {
         op.finish(&mut acc, n);

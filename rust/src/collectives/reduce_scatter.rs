@@ -8,20 +8,29 @@
 //! progress hook polls the receive between 5120-value chunks (§3.5.2).
 //!
 //! Mode behaviour per round:
-//! - `Plain`: send raw partials, receive, reduce.
-//! - `Cprp2p`: blocking compress → send → recv → decompress → reduce.
+//! - `Plain`: send raw partials, receive, fold straight from the wire.
+//! - `Cprp2p`: blocking compress → send → recv → fused decompress–reduce.
 //! - `CColl`: same structure as `Cprp2p` but with SZx (the IPDPS'24
 //!   baseline had no compression/communication overlap in this stage).
 //! - `Zccl`: irecv → PIPE-compress (polling) → send → wait →
-//!   PIPE-decompress (polling the next send's progress slot) → reduce.
+//!   PIPE fused decompress–reduce (polling the next send's progress
+//!   slot between chunks).
+//!
+//! Every receive side is **fused** (§3.4–§3.5, Fig. 4): received partials
+//! are never materialized — the decoder folds each reconstructed value
+//! straight into the accumulator via
+//! [`crate::compress::Compressor::decompress_fold_into`], and constant
+//! fZ-light blocks fold as one broadcast over the run. The per-hop cost
+//! drops from decode-pass + reduce-pass (plus a pooled partial buffer) to
+//! a single pass, timed as [`Phase::DecompressReduce`].
 
 use super::ctx::CollState;
 use super::{
-    bytes_to_f32s_into, chunk_ranges, f32s_to_bytes_into, Algo, Communicator, Mode, ReduceOp,
+    chunk_ranges, f32s_to_bytes_into, fold_f32_bytes, Algo, Communicator, Mode, ReduceOp,
 };
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{ring, ring_recv_chunk, ring_send_chunk};
-use crate::{Error, Result};
+use crate::Result;
 
 /// Reduce `input` (same length on every rank) elementwise with `op` and
 /// scatter the result: rank `r` returns `(range, values)` where `range`
@@ -69,7 +78,6 @@ pub(crate) fn reduce_scatter_with(
     match st.mode.algo {
         Algo::Plain => {
             let mut send_buf = st.pool.take_bytes();
-            let mut partial = st.pool.take_f32();
             for t in 0..n - 1 {
                 let s = &ranges[ring_send_chunk(me, t, n)];
                 let r = &ranges[ring_recv_chunk(me, t, n)];
@@ -81,18 +89,15 @@ pub(crate) fn reduce_scatter_with(
                 let got = comm.t.recv(nb.prev, base + t as u64)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-                partial.clear();
-                if bytes_to_f32s_into(&got, &mut partial)? != r.len() {
-                    return Err(Error::corrupt("reduce_scatter partial length mismatch"));
-                }
-                m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
+                // Fold straight from the wire bytes — no partial vector.
+                let t0 = std::time::Instant::now();
+                fold_f32_bytes(op, &got, &mut acc[r.clone()])?;
+                m.add(Phase::Compute, t0.elapsed().as_secs_f64());
             }
             st.pool.put_bytes(send_buf);
-            st.pool.put_f32(partial);
         }
         Algo::Cprp2p | Algo::CColl => {
             let mut frame = st.pool.take_bytes();
-            let mut partial = st.pool.take_f32();
             for t in 0..n - 1 {
                 let s = &ranges[ring_send_chunk(me, t, n)];
                 let r = &ranges[ring_recv_chunk(me, t, n)];
@@ -106,17 +111,13 @@ pub(crate) fn reduce_scatter_with(
                 let got = comm.t.recv(nb.prev, base + t as u64)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-                partial.clear();
+                // Fused decompress–reduce: the frame folds straight into
+                // the owned accumulator range (length-checked inside).
                 let t0 = std::time::Instant::now();
-                let cnt = st.decode_into(&got, &mut partial)?;
-                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-                if cnt != r.len() {
-                    return Err(Error::corrupt("reduce_scatter partial length mismatch"));
-                }
-                m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
+                st.decode_fold_into(&got, op, &mut acc[r.clone()])?;
+                m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
             st.pool.put_bytes(frame);
-            st.pool.put_f32(partial);
         }
         Algo::Zccl => {
             reduce_scatter_zccl(comm, st, &mut acc, &ranges, op, base, m)?;
@@ -149,7 +150,6 @@ fn reduce_scatter_zccl(
     let pipe = st.pipe.clone();
     let mode = st.mode;
     let mut frame = st.pool.take_bytes();
-    let mut partial = st.pool.take_f32();
 
     for t in 0..n - 1 {
         let s = &ranges[ring_send_chunk(me, t, n)];
@@ -193,30 +193,24 @@ fn reduce_scatter_zccl(
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
 
-        // Decompress; with PIPE the hook would poll the outstanding send
-        // (our transport's sends are eager, so the hook is a no-op slot).
-        partial.clear();
-        let cnt = match &pipe {
+        // Fused decompress–reduce straight into the accumulator. With
+        // PIPE the per-chunk hook keeps the §3.5.2 overlap slot: it would
+        // poll the outstanding send between chunks (our transport's sends
+        // are eager, so the poll is a no-op here).
+        match &pipe {
             Some(p) => {
                 let t0 = std::time::Instant::now();
-                let cnt = p.decompress_into_with_progress(&got, &mut partial, &mut |_| {})?;
-                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-                cnt
+                p.decompress_fold_into_with_progress(&got, op, &mut acc[r.clone()], &mut |_| {})?;
+                m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
             None => {
                 let t0 = std::time::Instant::now();
-                let cnt = st.decode_into(&got, &mut partial)?;
-                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-                cnt
+                st.decode_fold_into(&got, op, &mut acc[r.clone()])?;
+                m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
-        };
-        if cnt != r.len() {
-            return Err(Error::corrupt("reduce_scatter partial length mismatch"));
         }
-        m.time(Phase::Compute, || op.fold(&mut acc[r.clone()], &partial));
     }
     st.pool.put_bytes(frame);
-    st.pool.put_f32(partial);
     Ok(())
 }
 

@@ -32,12 +32,25 @@
 //! customization: it lets [`super::pipe::PipeFzLight`] interleave
 //! communication progress between chunks, and lets
 //! [`super::multithread`] compress/decompress chunks in parallel.
+//!
+//! ## The fused decompress–reduce kernel
+//!
+//! The reduction collectives never materialize a decoded partial:
+//! [`decompress_fold_chunk`] walks a chunk's blocks and folds each
+//! reconstructed value straight into an accumulator slice (paper
+//! §3.4–§3.5, Fig. 4). A constant block — the dominant case on smooth
+//! fields — folds as a single `q·2eb` broadcast add/max/min over the run
+//! with **no per-value decode**, and non-constant blocks fold deltas as
+//! they are unpacked, so the intermediate partial vector and its second
+//! memory pass disappear entirely. Exposed through
+//! [`Compressor::decompress_fold_into`].
 
 use super::bits::le;
 use super::traits::{
     read_header, write_header, CompressionStats, Compressor, CompressorKind, ErrorBound,
     HEADER_LEN,
 };
+use crate::ops::ReduceOp;
 use crate::{Error, Result};
 
 /// Values per small encoding block (sign-bit + fixed-length group).
@@ -130,25 +143,84 @@ pub(crate) fn compress_chunk_into(data: &[f32], twoeb: f64, payload: &mut Vec<u8
     (blocks, constant)
 }
 
-/// Decompress one chunk of `cn` values into `out`.
+/// Decompress one chunk of `cn` values, appending to `out`. Thin wrapper
+/// over [`decompress_chunk_into_slice`] kept for Vec-building callers
+/// (the PIPE decode loop grows one Vec across chunks).
 pub(crate) fn decompress_chunk(payload: &[u8], cn: usize, twoeb: f64, out: &mut Vec<f32>) -> Result<()> {
+    let start = out.len();
+    out.resize(start + cn, 0.0);
+    let res = decompress_chunk_into_slice(payload, cn, twoeb, &mut out[start..]);
+    if res.is_err() {
+        out.truncate(start);
+    }
+    res
+}
+
+/// Destination of one reconstructed chunk: the plain decoder writes
+/// values in place, the fused kernel folds them into an accumulator.
+/// [`walk_chunk`] monomorphizes over the sink, so both kernels compile to
+/// the same block walk with a different innermost store — one copy of the
+/// frame-walking logic to maintain.
+trait ChunkSink {
+    /// Deliver the reconstructed value for slot `idx`.
+    fn value(&mut self, idx: usize, x: f32);
+    /// Deliver a constant run: slots `idx..idx + cnt` all reconstruct to
+    /// `x` (the constant-block fast path — no per-value decode).
+    fn run(&mut self, idx: usize, cnt: usize, x: f32);
+}
+
+/// Plain decode: write each value at its final offset.
+struct WriteSink<'a>(&'a mut [f32]);
+
+impl ChunkSink for WriteSink<'_> {
+    #[inline]
+    fn value(&mut self, idx: usize, x: f32) {
+        self.0[idx] = x;
+    }
+    #[inline]
+    fn run(&mut self, idx: usize, cnt: usize, x: f32) {
+        self.0[idx..idx + cnt].fill(x);
+    }
+}
+
+/// Fused decompress–reduce: fold each value into the accumulator.
+struct FoldSink<'a> {
+    op: ReduceOp,
+    acc: &'a mut [f32],
+}
+
+impl ChunkSink for FoldSink<'_> {
+    #[inline]
+    fn value(&mut self, idx: usize, x: f32) {
+        self.op.apply(&mut self.acc[idx], x);
+    }
+    #[inline]
+    fn run(&mut self, idx: usize, cnt: usize, x: f32) {
+        self.op.apply_run(&mut self.acc[idx..idx + cnt], x);
+    }
+}
+
+/// Reconstruct one chunk of `cn` (>= 1) values block by block, handing
+/// each value (or constant run) to `sink`. The single source of truth for
+/// the chunk payload format on the decode side.
+fn walk_chunk(payload: &[u8], cn: usize, twoeb: f64, sink: &mut impl ChunkSink) -> Result<()> {
+    debug_assert!(cn >= 1);
     if payload.len() < 8 {
         return Err(Error::corrupt("fzlight chunk shorter than outlier"));
     }
     let q0 = i64::from_le_bytes(payload[0..8].try_into().unwrap());
-    out.push((q0 as f64 * twoeb) as f32);
+    sink.value(0, (q0 as f64 * twoeb) as f32);
     let mut q = q0;
     let mut pos = 8usize;
-    let mut remaining = cn - 1;
-    while remaining > 0 {
-        let cnt = BLOCK.min(remaining);
+    let mut idx = 1usize;
+    while idx < cn {
+        let cnt = BLOCK.min(cn - idx);
         let bits = *payload
             .get(pos)
             .ok_or_else(|| Error::corrupt("fzlight block header past end"))? as u32;
         pos += 1;
         if bits == 0 {
-            let x = (q as f64 * twoeb) as f32;
-            out.resize(out.len() + cnt, x);
+            sink.run(idx, cnt, (q as f64 * twoeb) as f32);
         } else {
             if bits > 64 {
                 return Err(Error::corrupt(format!("fzlight code length {bits} > 64")));
@@ -166,13 +238,46 @@ pub(crate) fn decompress_chunk(payload: &[u8], cn: usize, twoeb: f64, out: &mut 
             super::bits::unpack_fixed(&payload[pos + sign_bytes..end], cnt, bits, |j, mag| {
                 let d = mag as i64;
                 q += if sign >> j & 1 == 1 { -d } else { d };
-                out.push((q as f64 * twoeb) as f32);
+                sink.value(idx + j, (q as f64 * twoeb) as f32);
             });
             pos = end;
         }
-        remaining -= cnt;
+        idx += cnt;
     }
     Ok(())
+}
+
+/// Decompress one chunk of `cn` values into a pre-sized slice — the
+/// non-fused hot path: writes land directly at their final offsets, no
+/// per-value `push` bookkeeping. `out.len()` must equal `cn` (>= 1).
+pub(crate) fn decompress_chunk_into_slice(
+    payload: &[u8],
+    cn: usize,
+    twoeb: f64,
+    out: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(out.len(), cn);
+    walk_chunk(payload, cn, twoeb, &mut WriteSink(out))
+}
+
+/// The fused decompress–reduce kernel over one chunk: reconstruct each of
+/// the chunk's `cn` values and fold it into the matching slot of `acc`
+/// via `op`, in one pass. Constant blocks apply a single broadcast
+/// `op(acc[i], q·2eb)` over the run — no per-value decode; non-constant
+/// blocks fold deltas in the integer-quantized domain as they are
+/// unpacked. `acc.len()` must equal `cn` (>= 1).
+///
+/// On `Err`, blocks preceding the error have already been folded into
+/// `acc` (see [`Compressor::decompress_fold_into`] error semantics).
+pub(crate) fn decompress_fold_chunk(
+    payload: &[u8],
+    cn: usize,
+    twoeb: f64,
+    op: ReduceOp,
+    acc: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(acc.len(), cn);
+    walk_chunk(payload, cn, twoeb, &mut FoldSink { op, acc })
 }
 
 #[inline]
@@ -180,6 +285,18 @@ fn quantize(x: f32, inv_twoeb: f64) -> i64 {
     // `as` saturates on overflow, which keeps absurd bound/value
     // combinations from UB; realistic bounds never get near the limit.
     (x as f64 * inv_twoeb).round() as i64
+}
+
+/// Guard for every quantity the chunked-frame layout stores as `u32`
+/// (chunk size, chunk count, per-chunk payload bytes): a silent `as u32`
+/// truncation here would produce an undecodable frame, so oversized
+/// values are an explicit [`Error::invalid`] instead. (The PR-1
+/// `exchange_sizes` u64 widening removed the *transport* 4 GiB limit;
+/// this closes the matching hole in the frame writer.)
+#[inline]
+pub(crate) fn frame_u32(value: usize, what: &str) -> Result<u32> {
+    u32::try_from(value)
+        .map_err(|_| Error::invalid(format!("{what} {value} exceeds the frame format's u32 limit")))
 }
 
 /// Append a chunked frame (header, chunk table, payloads) to `out`. The
@@ -192,18 +309,27 @@ pub(crate) fn assemble_frame_into(
     chunk_values: usize,
     payloads: &[Vec<u8>],
     out: &mut Vec<u8>,
-) {
+) -> Result<()> {
+    // Validate every u32-bound quantity before touching `out`, so an
+    // oversize error leaves the buffer exactly as it came in.
+    let chunk_values = frame_u32(chunk_values, "chunk_values")?;
+    let nchunks = frame_u32(payloads.len(), "chunk count")?;
+    let mut sizes = Vec::with_capacity(payloads.len());
+    for p in payloads {
+        sizes.push(frame_u32(p.len(), "chunk payload size")?);
+    }
     let total: usize = payloads.iter().map(Vec::len).sum();
     out.reserve(HEADER_LEN + 8 + 4 * payloads.len() + total);
     write_header(out, codec, n, eb_abs);
-    le::put_u32(out, chunk_values as u32);
-    le::put_u32(out, payloads.len() as u32);
-    for p in payloads {
-        le::put_u32(out, p.len() as u32);
+    le::put_u32(out, chunk_values);
+    le::put_u32(out, nchunks);
+    for s in sizes {
+        le::put_u32(out, s);
     }
     for p in payloads {
         out.extend_from_slice(p);
     }
+    Ok(())
 }
 
 /// Compress directly into `out` (append): the chunk table is reserved up
@@ -222,15 +348,33 @@ pub(crate) fn compress_frame_into(
     if !(eb_abs > 0.0) || !eb_abs.is_finite() {
         return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
     }
+    let base = out.len();
+    let res = write_frame(chunk_values, data, eb_abs, out, progress);
+    if res.is_err() {
+        // An oversize-chunk error must not leave a half-written frame.
+        out.truncate(base);
+    }
+    res
+}
+
+/// [`compress_frame_into`]'s body, split out so the caller can restore
+/// `out` on error.
+fn write_frame(
+    chunk_values: usize,
+    data: &[f32],
+    eb_abs: f64,
+    out: &mut Vec<u8>,
+    progress: &mut dyn FnMut(usize),
+) -> Result<CompressionStats> {
     let twoeb = 2.0 * eb_abs;
     let chunk = chunk_values.max(1);
     let nchunks = data.len().div_ceil(chunk);
-    let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
     let base = out.len();
+    let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
     out.reserve(HEADER_LEN + 8 + 4 * nchunks + data.len() * 2);
     write_header(out, CompressorKind::FzLight, data.len(), eb_abs);
-    le::put_u32(out, chunk as u32);
-    le::put_u32(out, nchunks as u32);
+    le::put_u32(out, frame_u32(chunk, "chunk_values")?);
+    le::put_u32(out, frame_u32(nchunks, "chunk count")?);
     let table = out.len();
     out.resize(table + 4 * nchunks, 0);
     let mut done = 0usize;
@@ -239,7 +383,7 @@ pub(crate) fn compress_frame_into(
         let (blocks, constant) = compress_chunk_into(c, twoeb, out);
         stats.blocks += blocks;
         stats.constant_blocks += constant;
-        let sz = (out.len() - start) as u32;
+        let sz = frame_u32(out.len() - start, "chunk payload size")?;
         out[table + 4 * i..table + 4 * i + 4].copy_from_slice(&sz.to_le_bytes());
         done += c.len();
         progress(done);
@@ -276,6 +420,118 @@ pub(crate) fn frame_chunks(bytes: &[u8]) -> Result<(usize, f64, usize, Vec<std::
     Ok((chunk_values, h.eb_abs, h.n, ranges))
 }
 
+/// Values in chunk `i` of a frame holding `n` values in `nchunks` chunks
+/// of nominally `chunk_values` each — every chunk is full except the
+/// last, whose count is validated against the header. Shared by the
+/// plain, pipelined, multithreaded and fused decode walkers.
+pub(crate) fn chunk_value_count(
+    i: usize,
+    nchunks: usize,
+    n: usize,
+    chunk_values: usize,
+) -> Result<usize> {
+    if i + 1 == nchunks {
+        chunk_values
+            .checked_mul(nchunks - 1)
+            .and_then(|prior| n.checked_sub(prior))
+            .filter(|&c| c >= 1 && c <= chunk_values)
+            .ok_or_else(|| Error::corrupt("chunk table inconsistent with count"))
+    } else {
+        Ok(chunk_values)
+    }
+}
+
+/// Cheap consistency check of the header's element count against the
+/// chunk table, run **before** sizing any destination buffer: a corrupt
+/// `n` (e.g. a flipped header bit, or a crafted tiny frame claiming
+/// billions of values) must fail cleanly rather than commit pages for a
+/// bogus length. Cross-checks `n` against the full-chunk arithmetic AND
+/// against the payload bytes actually present — a chunk payload of `L`
+/// bytes can encode at most `1 + (L − 8)·BLOCK` values (outlier plus one
+/// header byte per all-constant 32-value block).
+pub(crate) fn validate_frame_count(
+    ranges: &[std::ops::Range<usize>],
+    chunk_values: usize,
+    n: usize,
+) -> Result<()> {
+    match ranges.len().checked_sub(1) {
+        Some(last) => {
+            chunk_value_count(last, ranges.len(), n, chunk_values)?;
+            let mut cap = 0usize;
+            for r in ranges {
+                let per_chunk = r.len().saturating_sub(8).saturating_mul(BLOCK).saturating_add(1);
+                cap = cap.saturating_add(per_chunk);
+            }
+            if n > cap {
+                return Err(Error::corrupt(format!(
+                    "frame claims {n} values but its payload can hold at most {cap}"
+                )));
+            }
+        }
+        None if n != 0 => {
+            return Err(Error::corrupt(format!("frame claims {n} values but has no chunks")));
+        }
+        None => {}
+    }
+    Ok(())
+}
+
+/// Walk a parsed frame's chunks over their disjoint windows of `dst`
+/// (`dst.len() == n`), validating the chunk table as it goes: `kernel`
+/// decodes one chunk payload into its window, and `progress` runs after
+/// each chunk (the §3.5.2 hook). The single frame walk shared by the
+/// plain and fused decode paths.
+fn walk_frame_chunks(
+    bytes: &[u8],
+    ranges: &[std::ops::Range<usize>],
+    chunk_values: usize,
+    n: usize,
+    dst: &mut [f32],
+    progress: &mut dyn FnMut(usize),
+    kernel: &mut dyn FnMut(&[u8], usize, &mut [f32]) -> Result<()>,
+) -> Result<()> {
+    debug_assert_eq!(dst.len(), n);
+    let mut done = 0usize;
+    for (i, r) in ranges.iter().enumerate() {
+        let cn = chunk_value_count(i, ranges.len(), n, chunk_values)?;
+        let d = dst
+            .get_mut(done..done + cn)
+            .ok_or_else(|| Error::corrupt("chunk table exceeds element count"))?;
+        kernel(&bytes[r.clone()], cn, d)?;
+        done += cn;
+        progress(done);
+    }
+    if done != n {
+        return Err(Error::corrupt(format!("decoded {done} of {n} values")));
+    }
+    Ok(())
+}
+
+/// Walk an fZ-light frame applying the fused decompress–reduce kernel
+/// chunk by chunk, calling `progress` (with the values folded so far)
+/// after each chunk — the §3.5.2 hook, shared by [`FzLight`] (no-op
+/// hook) and [`super::pipe::PipeFzLight`] (polls outstanding
+/// communication). `acc.len()` must equal the frame's element count.
+pub(crate) fn decompress_fold_frame(
+    bytes: &[u8],
+    op: ReduceOp,
+    acc: &mut [f32],
+    progress: &mut dyn FnMut(usize),
+) -> Result<usize> {
+    let (chunk_values, eb_abs, n, ranges) = frame_chunks(bytes)?;
+    if acc.len() != n {
+        return Err(Error::invalid(format!(
+            "fused fold: frame holds {n} values but accumulator holds {}",
+            acc.len()
+        )));
+    }
+    let twoeb = 2.0 * eb_abs;
+    walk_frame_chunks(bytes, &ranges, chunk_values, n, acc, progress, &mut |p, cn, d| {
+        decompress_fold_chunk(p, cn, twoeb, op, d)
+    })?;
+    Ok(n)
+}
+
 impl Compressor for FzLight {
     fn kind(&self) -> CompressorKind {
         CompressorKind::FzLight
@@ -293,22 +549,36 @@ impl Compressor for FzLight {
     fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
         let (chunk_values, eb_abs, n, ranges) = frame_chunks(bytes)?;
         let twoeb = 2.0 * eb_abs;
+        validate_frame_count(&ranges, chunk_values, n)?;
+        // Pre-size once from the header; each chunk then decodes straight
+        // into its final slice (no per-value push). On error the buffer
+        // is restored to its incoming length.
         let start = out.len();
-        out.reserve(n);
-        for (i, r) in ranges.iter().enumerate() {
-            let cn = if i + 1 == ranges.len() {
-                n.checked_sub(chunk_values * (ranges.len() - 1))
-                    .filter(|&c| c >= 1 && c <= chunk_values)
-                    .ok_or_else(|| Error::corrupt("chunk table inconsistent with count"))?
-            } else {
-                chunk_values
-            };
-            decompress_chunk(&bytes[r.clone()], cn, twoeb, out)?;
+        out.resize(start + n, 0.0);
+        let res = walk_frame_chunks(
+            bytes,
+            &ranges,
+            chunk_values,
+            n,
+            &mut out[start..],
+            &mut |_| {},
+            &mut |p, cn, d| decompress_chunk_into_slice(p, cn, twoeb, d),
+        );
+        match res {
+            Ok(()) => Ok(n),
+            Err(e) => {
+                out.truncate(start);
+                Err(e)
+            }
         }
-        if out.len() - start != n {
-            return Err(Error::corrupt(format!("decoded {} of {n} values", out.len() - start)));
-        }
-        Ok(n)
+    }
+
+    fn decompress_fold_into(&self, bytes: &[u8], op: ReduceOp, acc: &mut [f32]) -> Result<usize> {
+        decompress_fold_frame(bytes, op, acc, &mut |_| {})
+    }
+
+    fn supports_fused_fold(&self) -> bool {
+        true
     }
 }
 
@@ -410,6 +680,86 @@ mod tests {
         let da = FzLight::default().decompress(&a.bytes).unwrap();
         let db = FzLight::default().decompress(&b.bytes).unwrap();
         assert_eq!(da, db);
+    }
+
+    #[test]
+    fn fused_fold_matches_decode_then_fold_bitwise() {
+        use crate::ops::ReduceOp;
+        let f = Field::generate(FieldKind::Hurricane, 12_345, 21);
+        let codec = FzLight::with_chunk(512);
+        let c = codec.compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        let dec = codec.decompress(&c.bytes).unwrap();
+        let base = Field::generate(FieldKind::Nyx, 12_345, 22).values;
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let mut unfused = base.clone();
+            op.fold(&mut unfused, &dec);
+            let mut fused = base.clone();
+            assert_eq!(codec.decompress_fold_into(&c.bytes, op, &mut fused).unwrap(), 12_345);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&fused), bits(&unfused), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn fused_fold_rejects_wrong_accumulator_length() {
+        use crate::ops::ReduceOp;
+        let data = vec![1.0f32; 100];
+        let c = FzLight::default().compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+        let mut acc = vec![0.0f32; 99];
+        let before = acc.clone();
+        assert!(FzLight::default().decompress_fold_into(&c.bytes, ReduceOp::Sum, &mut acc).is_err());
+        assert_eq!(acc, before, "length mismatch is detected before any fold");
+    }
+
+    #[test]
+    fn chunked_decode_restores_buffer_on_error() {
+        let data: Vec<f32> = (0..3000).map(|i| (i as f32 * 0.11).sin()).collect();
+        let c = FzLight::with_chunk(1000).compress(&data, ErrorBound::Abs(1e-4)).unwrap();
+        let mut out = vec![7.0f32; 3];
+        assert!(FzLight::default().decompress_into(&c.bytes[..c.bytes.len() - 1], &mut out).is_err());
+        assert_eq!(out, vec![7.0, 7.0, 7.0], "error path must not leave partial decodes");
+    }
+
+    #[test]
+    fn huge_claimed_count_rejected_before_allocation() {
+        // A crafted ~50-byte frame claiming u32::MAX values in one chunk
+        // must fail in validation, not commit a multi-GB destination.
+        let mut bytes = Vec::new();
+        write_header(&mut bytes, CompressorKind::FzLight, u32::MAX as usize, 1e-3);
+        le::put_u32(&mut bytes, u32::MAX); // chunk_values
+        le::put_u32(&mut bytes, 1); // nchunks
+        le::put_u32(&mut bytes, 8); // chunk payload size
+        bytes.extend_from_slice(&0i64.to_le_bytes()); // outlier-only payload
+        let mut out = Vec::new();
+        assert!(FzLight::default().decompress_into(&bytes, &mut out).is_err());
+        assert!(out.capacity() < 1 << 20, "destination must not be sized from the corrupt header");
+        let mt = crate::compress::MtCompressor::new(CompressorKind::FzLight);
+        let mut out2 = Vec::new();
+        assert!(mt.decompress_into(&bytes, &mut out2).is_err());
+        assert!(out2.capacity() < 1 << 20);
+    }
+
+    #[test]
+    fn frame_u32_guard() {
+        assert_eq!(frame_u32(12, "x").unwrap(), 12);
+        assert_eq!(frame_u32(u32::MAX as usize, "x").unwrap(), u32::MAX);
+        assert!(frame_u32(u32::MAX as usize + 1, "chunk payload size").is_err());
+    }
+
+    #[test]
+    fn assemble_frame_rejects_oversize_table_entries() {
+        // An oversized chunk_values must be refused, not truncated.
+        let payloads = vec![vec![0u8; 4]];
+        let mut out = Vec::new();
+        assert!(assemble_frame_into(
+            CompressorKind::FzLight,
+            8,
+            1e-3,
+            u32::MAX as usize + 1,
+            &payloads,
+            &mut out,
+        )
+        .is_err());
     }
 
     #[test]

@@ -10,11 +10,12 @@
 //! calibrated thread-scaling model for the paper's multi-thread figures;
 //! this module keeps the *implementation* real and testable.
 
-use crate::util::par::{default_threads, par_map, par_map_chunks};
+use crate::util::par::{default_threads, par_map_chunks, par_map_own};
 
 use super::fzlight::{self};
 use super::szx::{self};
 use super::traits::{CompressionStats, Compressor, CompressorKind, ErrorBound};
+use crate::ops::ReduceOp;
 use crate::{Error, Result};
 
 /// Multi-threaded wrapper over a chunk-parallel codec.
@@ -88,7 +89,7 @@ impl Compressor for MtCompressor {
                     self.chunk_values,
                     &payloads,
                     out,
-                );
+                )?;
                 stats.compressed_bytes = out.len() - base;
                 Ok(stats)
             }
@@ -101,33 +102,112 @@ impl Compressor for MtCompressor {
             CompressorKind::FzLight => {
                 let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
                 let twoeb = 2.0 * eb_abs;
-                let nchunks = ranges.len();
-                let parts: Vec<Result<Vec<f32>>> =
-                    par_map(&ranges, self.threads, |i, r| {
-                        let cn = if i + 1 == nchunks {
-                            n.checked_sub(chunk_values * (nchunks - 1))
-                                .filter(|&c| c >= 1 && c <= chunk_values)
-                                .ok_or_else(|| Error::corrupt("chunk table inconsistent"))?
-                        } else {
-                            chunk_values
-                        };
-                        let mut out = Vec::with_capacity(cn);
-                        fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, &mut out)?;
-                        Ok(out)
-                    });
+                fzlight::validate_frame_count(&ranges, chunk_values, n)?;
+                // Pre-size once; chunks then decode in parallel straight
+                // into their disjoint windows of the destination (no
+                // per-chunk temporaries, no gather copy).
                 let start = out.len();
-                out.reserve(n);
-                for p in parts {
-                    out.extend_from_slice(&p?);
+                out.resize(start + n, 0.0);
+                let res = mt_decode_chunks(
+                    bytes,
+                    &ranges,
+                    chunk_values,
+                    n,
+                    twoeb,
+                    self.threads,
+                    &mut out[start..],
+                );
+                match res {
+                    Ok(()) => Ok(n),
+                    Err(e) => {
+                        out.truncate(start);
+                        Err(e)
+                    }
                 }
-                if out.len() - start != n {
-                    return Err(Error::corrupt("mt decode length mismatch"));
-                }
-                Ok(n)
             }
             other => super::build(other).decompress_into(bytes, out),
         }
     }
+
+    fn decompress_fold_into(&self, bytes: &[u8], op: ReduceOp, acc: &mut [f32]) -> Result<usize> {
+        match self.kind {
+            CompressorKind::FzLight => {
+                let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
+                if acc.len() != n {
+                    return Err(Error::invalid(format!(
+                        "fused fold: frame holds {n} values but accumulator holds {}",
+                        acc.len()
+                    )));
+                }
+                let twoeb = 2.0 * eb_abs;
+                // Chunks map to disjoint accumulator windows, so the fused
+                // kernel parallelises with no synchronisation on `acc`;
+                // per-element fold order inside a window is serial, so the
+                // result is bit-identical to the single-thread kernel.
+                let items = chunk_windows(&ranges, chunk_values, n, acc)?;
+                let parts = par_map_own(items, self.threads, |_, (r, cn, dst)| {
+                    fzlight::decompress_fold_chunk(&bytes[r], cn, twoeb, op, dst)
+                });
+                for p in parts {
+                    p?;
+                }
+                Ok(n)
+            }
+            other => super::build(other).decompress_fold_into(bytes, op, acc),
+        }
+    }
+
+    fn supports_fused_fold(&self) -> bool {
+        self.kind == CompressorKind::FzLight
+    }
+}
+
+/// Decode every chunk of a parsed fZ-light frame into `dst`
+/// (`dst.len() == n`), chunks in parallel across disjoint windows.
+fn mt_decode_chunks(
+    bytes: &[u8],
+    ranges: &[std::ops::Range<usize>],
+    chunk_values: usize,
+    n: usize,
+    twoeb: f64,
+    threads: usize,
+    dst: &mut [f32],
+) -> Result<()> {
+    let items = chunk_windows(ranges, chunk_values, n, dst)?;
+    let parts = par_map_own(items, threads, |_, (r, cn, d)| {
+        fzlight::decompress_chunk_into_slice(&bytes[r], cn, twoeb, d)
+    });
+    for p in parts {
+        p?;
+    }
+    Ok(())
+}
+
+/// Pair each chunk's payload range (and value count) with its disjoint
+/// window of `dst`, validating the chunk table against the element count
+/// while splitting. The windows are handed to workers **by value** via
+/// [`par_map_own`].
+fn chunk_windows<'d>(
+    ranges: &[std::ops::Range<usize>],
+    chunk_values: usize,
+    n: usize,
+    mut dst: &'d mut [f32],
+) -> Result<Vec<(std::ops::Range<usize>, usize, &'d mut [f32])>> {
+    debug_assert_eq!(dst.len(), n);
+    let mut items = Vec::with_capacity(ranges.len());
+    for (i, r) in ranges.iter().enumerate() {
+        let cn = fzlight::chunk_value_count(i, ranges.len(), n, chunk_values)?;
+        if cn > dst.len() {
+            return Err(Error::corrupt("chunk table exceeds element count"));
+        }
+        let (head, tail) = std::mem::take(&mut dst).split_at_mut(cn);
+        items.push((r.clone(), cn, head));
+        dst = tail;
+    }
+    if !dst.is_empty() {
+        return Err(Error::corrupt("chunk table short of element count"));
+    }
+    Ok(items)
 }
 
 #[cfg(test)]
@@ -165,5 +245,23 @@ mod tests {
         let st = FzLight::default().decompress(&c.bytes).unwrap();
         let mt = MtCompressor::new(CompressorKind::FzLight).decompress(&c.bytes).unwrap();
         assert_eq!(st, mt);
+    }
+
+    #[test]
+    fn mt_fused_fold_bit_identical_to_st_fused() {
+        use crate::ops::ReduceOp;
+        let f = Field::generate(FieldKind::Hurricane, 50_000, 80);
+        let c = FzLight::default().compress(&f.values, ErrorBound::Abs(1e-4)).unwrap();
+        let base = Field::generate(FieldKind::Cesm, 50_000, 81).values;
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let mut st = base.clone();
+            FzLight::default().decompress_fold_into(&c.bytes, op, &mut st).unwrap();
+            let mut mt = base.clone();
+            MtCompressor::new(CompressorKind::FzLight)
+                .decompress_fold_into(&c.bytes, op, &mut mt)
+                .unwrap();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&st), bits(&mt), "{op:?}");
+        }
     }
 }

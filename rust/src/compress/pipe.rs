@@ -14,6 +14,7 @@
 
 use super::fzlight::{self, DEFAULT_CHUNK};
 use super::traits::{Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound};
+use crate::ops::ReduceOp;
 use crate::{Error, Result};
 
 /// Pipelined fZ-light. See the module docs.
@@ -87,16 +88,11 @@ impl PipeFzLight {
     ) -> Result<usize> {
         let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
         let twoeb = 2.0 * eb_abs;
+        fzlight::validate_frame_count(&ranges, chunk_values, n)?;
         let start = out.len();
         out.reserve(n);
         for (i, r) in ranges.iter().enumerate() {
-            let cn = if i + 1 == ranges.len() {
-                n.checked_sub(chunk_values * (ranges.len() - 1))
-                    .filter(|&c| c >= 1 && c <= chunk_values)
-                    .ok_or_else(|| Error::corrupt("chunk table inconsistent with count"))?
-            } else {
-                chunk_values
-            };
+            let cn = fzlight::chunk_value_count(i, ranges.len(), n, chunk_values)?;
             fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, out)?;
             progress(out.len() - start);
         }
@@ -104,6 +100,24 @@ impl PipeFzLight {
             return Err(Error::corrupt(format!("decoded {} of {n} values", out.len() - start)));
         }
         Ok(n)
+    }
+
+    /// The fused decompress–reduce kernel with the §3.5.2 progress hook:
+    /// each chunk's reconstructed values are folded straight into `acc`
+    /// via `op`, and `progress` runs between chunks so the collective
+    /// layer can keep polling outstanding nonblocking communication while
+    /// it reduces. `acc.len()` must equal the frame's element count.
+    ///
+    /// Error semantics match [`Compressor::decompress_fold_into`]: on
+    /// `Err` a prefix of `acc` may already be folded — discard it.
+    pub fn decompress_fold_into_with_progress(
+        &self,
+        bytes: &[u8],
+        op: ReduceOp,
+        acc: &mut [f32],
+        progress: &mut dyn FnMut(usize),
+    ) -> Result<usize> {
+        fzlight::decompress_fold_frame(bytes, op, acc, progress)
     }
 }
 
@@ -121,6 +135,12 @@ impl Compressor for PipeFzLight {
     }
     fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
         self.decompress_into_with_progress(bytes, out, &mut |_| {})
+    }
+    fn decompress_fold_into(&self, bytes: &[u8], op: ReduceOp, acc: &mut [f32]) -> Result<usize> {
+        self.decompress_fold_into_with_progress(bytes, op, acc, &mut |_| {})
+    }
+    fn supports_fused_fold(&self) -> bool {
+        true
     }
 }
 
@@ -169,6 +189,28 @@ mod tests {
         let mut calls = 0;
         pipe.compress_with_progress(&f.values, ErrorBound::Abs(1e-3), &mut |_| calls += 1).unwrap();
         assert_eq!(calls, 10);
+    }
+
+    #[test]
+    fn fused_fold_with_progress_matches_and_polls_per_chunk() {
+        use crate::ops::ReduceOp;
+        let f = Field::generate(FieldKind::Rtm, 5120 * 2 + 77, 8);
+        let pipe = PipeFzLight::default();
+        let c = pipe.compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        let dec = pipe.decompress(&c.bytes).unwrap();
+        let base = vec![0.5f32; f.values.len()];
+        let mut want = base.clone();
+        ReduceOp::Sum.fold(&mut want, &dec);
+        let mut acc = base;
+        let mut calls = Vec::new();
+        let n = pipe
+            .decompress_fold_into_with_progress(&c.bytes, ReduceOp::Sum, &mut acc, &mut |done| {
+                calls.push(done)
+            })
+            .unwrap();
+        assert_eq!(n, f.values.len());
+        assert_eq!(calls, vec![5120, 10240, 10317], "hook must run between chunks");
+        assert_eq!(acc, want);
     }
 
     #[test]

@@ -177,8 +177,8 @@ impl Compressor for Szx {
         let base = out.len();
         out.reserve(HEADER_LEN + 8 + 4 * nchunks + data.len());
         write_header(out, CompressorKind::Szx, data.len(), eb_abs);
-        le::put_u32(out, chunk as u32);
-        le::put_u32(out, nchunks as u32);
+        le::put_u32(out, super::fzlight::frame_u32(chunk, "chunk_values")?);
+        le::put_u32(out, super::fzlight::frame_u32(nchunks, "chunk count")?);
         let table = out.len();
         out.resize(table + 4 * nchunks, 0);
         for (i, c) in data.chunks(chunk).enumerate() {
@@ -186,7 +186,7 @@ impl Compressor for Szx {
             let (blocks, constant) = compress_chunk_into(c, eb_abs, out);
             stats.blocks += blocks;
             stats.constant_blocks += constant;
-            let sz = (out.len() - start) as u32;
+            let sz = super::fzlight::frame_u32(out.len() - start, "chunk payload size")?;
             out[table + 4 * i..table + 4 * i + 4].copy_from_slice(&sz.to_le_bytes());
         }
         stats.compressed_bytes = out.len() - base;
@@ -215,13 +215,7 @@ impl Compressor for Szx {
             if end > bytes.len() {
                 return Err(Error::corrupt("szx chunk past frame end"));
             }
-            let cn = if i + 1 == nchunks {
-                h.n.checked_sub(chunk_values * (nchunks - 1))
-                    .filter(|&c| c >= 1 && c <= chunk_values)
-                    .ok_or_else(|| Error::corrupt("szx chunk table inconsistent"))?
-            } else {
-                chunk_values
-            };
+            let cn = super::fzlight::chunk_value_count(i, nchunks, h.n, chunk_values)?;
             decompress_chunk(&bytes[pos..end], cn, h.eb_abs, out)?;
             pos = end;
         }

@@ -18,6 +18,7 @@
 //! without out-of-band metadata.
 
 use super::bits::le;
+use crate::ops::ReduceOp;
 use crate::{Error, Result};
 
 /// Frame magic bytes.
@@ -207,6 +208,49 @@ pub trait Compressor: Send + Sync {
     /// returning how many were appended. Callers reusing a scratch buffer
     /// should `clear()` it first.
     fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize>;
+
+    /// Decode a frame and fold every reconstructed value straight into
+    /// `acc` (`acc[i] = op(acc[i], x̂[i])`), returning the element count —
+    /// the **fused decompress–reduce kernel** the reduction collectives
+    /// run on their receive side (paper §3.4–§3.5, Fig. 4). `acc.len()`
+    /// must equal the frame's element count.
+    ///
+    /// The default implementation is decompress-then-fold, correct for
+    /// every codec. Codecs whose frame layout permits it (fZ-light and
+    /// its pipelined / multithreaded wrappers) override it with a true
+    /// single-pass kernel — constant blocks fold as one broadcast over
+    /// the run with no per-value decode — and advertise that via
+    /// [`Compressor::supports_fused_fold`].
+    ///
+    /// # Error semantics
+    ///
+    /// On `Err`, `acc` may already contain folded contributions from an
+    /// unspecified subset of the frame's chunks (a prefix for the serial
+    /// kernels; any subset for the multithreaded one) — each slot is
+    /// either untouched or folded exactly once. Callers must treat the
+    /// accumulator as poisoned and discard it (the collectives abandon
+    /// the whole call).
+    fn decompress_fold_into(&self, bytes: &[u8], op: ReduceOp, acc: &mut [f32]) -> Result<usize> {
+        let mut tmp = Vec::with_capacity(acc.len());
+        let n = self.decompress_into(bytes, &mut tmp)?;
+        if n != acc.len() {
+            return Err(Error::invalid(format!(
+                "fused fold: frame holds {n} values but accumulator holds {}",
+                acc.len()
+            )));
+        }
+        op.fold(acc, &tmp);
+        Ok(n)
+    }
+
+    /// Whether [`Compressor::decompress_fold_into`] is a native
+    /// single-pass kernel (`true`) or the decompress-then-fold default
+    /// (`false`). The collective layer routes codecs without a native
+    /// kernel through its pooled scratch instead of the default's
+    /// per-call temporary.
+    fn supports_fused_fold(&self) -> bool {
+        false
+    }
 
     /// Compress `data` into a freshly allocated frame.
     fn compress(&self, data: &[f32], eb: ErrorBound) -> Result<Compressed> {

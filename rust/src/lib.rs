@@ -5,6 +5,9 @@
 //!
 //! The crate is organised bottom-up:
 //!
+//! - [`ops`] — the elementwise reduction operators, shared by
+//!   [`collectives`] and the fused decompress–reduce kernels in
+//!   [`compress`].
 //! - [`compress`] — error-bounded lossy compressors: a Rust `fZ-light`
 //!   (Lorenzo + quantization + fixed-length bit-shifting encoding), its
 //!   pipelined variant `PIPE-fZ-light`, an `SZx`-style constant-block
@@ -55,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod ops;
 pub mod runtime;
 pub mod sim;
 pub mod topology;

@@ -1,0 +1,91 @@
+//! Reduction operators — the elementwise fold semantics shared by the
+//! collective layer (which reduces received partials) and the compression
+//! layer (whose fused decompress–reduce kernels fold values as they
+//! decode, see [`crate::compress::Compressor::decompress_fold_into`]).
+//! Lives below both layers so codec ↔ collective stays acyclic; the
+//! canonical public path remains [`crate::collectives::ReduceOp`].
+
+/// The reduction operators the paper analyses (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Elementwise sum (Theorem 1).
+    Sum,
+    /// Elementwise mean (Corollary 2): sum followed by a `1/n` scale.
+    Avg,
+    /// Elementwise maximum (Theorem 2).
+    Max,
+    /// Elementwise minimum (Theorem 2).
+    Min,
+}
+
+impl ReduceOp {
+    /// Fold `src` into `acc` elementwise.
+    #[inline]
+    pub fn fold(self, acc: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(acc.len(), src.len());
+        match self {
+            ReduceOp::Sum | ReduceOp::Avg => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a += s;
+                }
+            }
+            ReduceOp::Max => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a = a.max(*s);
+                }
+            }
+            ReduceOp::Min => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a = a.min(*s);
+                }
+            }
+        }
+    }
+
+    /// Fold a single value into one accumulator slot — the per-element
+    /// step of the fused decompress–reduce kernel. Bit-identical to the
+    /// corresponding lane of [`ReduceOp::fold`].
+    #[inline]
+    pub fn apply(self, a: &mut f32, v: f32) {
+        match self {
+            ReduceOp::Sum | ReduceOp::Avg => *a += v,
+            ReduceOp::Max => *a = a.max(v),
+            ReduceOp::Min => *a = a.min(v),
+        }
+    }
+
+    /// Fold the same value into every element of `acc` — the fused
+    /// kernel's constant-block fast path: one broadcast add/max/min over
+    /// the run with no per-value decode.
+    #[inline]
+    pub fn apply_run(self, acc: &mut [f32], v: f32) {
+        match self {
+            ReduceOp::Sum | ReduceOp::Avg => {
+                for a in acc.iter_mut() {
+                    *a += v;
+                }
+            }
+            ReduceOp::Max => {
+                for a in acc.iter_mut() {
+                    *a = a.max(v);
+                }
+            }
+            ReduceOp::Min => {
+                for a in acc.iter_mut() {
+                    *a = a.min(v);
+                }
+            }
+        }
+    }
+
+    /// Final scaling (only `Avg` rescales by the communicator size).
+    #[inline]
+    pub fn finish(self, acc: &mut [f32], n: usize) {
+        if self == ReduceOp::Avg {
+            let inv = 1.0 / n as f32;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+        }
+    }
+}

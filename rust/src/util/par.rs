@@ -2,9 +2,9 @@
 //!
 //! The multi-thread compression mode only needs "map a function over the
 //! chunks of a slice, in parallel, preserving order" — this module
-//! provides exactly that with a work-stealing-free atomic cursor.
-
-use std::sync::atomic::{AtomicUsize, Ordering};
+//! provides exactly that, dispatching work items through a mutex-guarded
+//! iterator (the per-item critical section is one `next()` call,
+//! negligible against a chunk's codec cost).
 
 /// Number of worker threads to use by default.
 pub fn default_threads() -> usize {
@@ -12,42 +12,58 @@ pub fn default_threads() -> usize {
 }
 
 /// Apply `f` to every element of `items`, in parallel across `threads`
-/// workers, returning results in input order.
+/// workers, returning results in input order. Thin borrow adapter over
+/// [`par_map_own`].
 pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads <= 1 || items.len() <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    par_map_own(items.iter().collect(), threads, |i, t| f(i, t))
+}
+
+/// Like [`par_map`] but consuming the items, so workers receive them **by
+/// value** — the shape needed to hand each worker a disjoint `&mut` slice
+/// (e.g. the multithread fused decompress–reduce kernel folding chunks
+/// into non-overlapping accumulator windows). Results come back in input
+/// order.
+pub fn par_map_own<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let cursor = AtomicUsize::new(0);
+    let queue = std::sync::Mutex::new(items.into_iter().enumerate());
     let mut parts: Vec<Vec<(usize, R)>> = Vec::new();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
-                let cursor = &cursor;
+                let queue = &queue;
                 let f = &f;
                 s.spawn(move || {
                     let mut local = Vec::new();
                     loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= items.len() {
-                            break;
-                        }
-                        local.push((i, f(i, &items[i])));
+                        // The guard drops at the end of this statement, so
+                        // the lock is NOT held while `f` runs.
+                        let next = queue.lock().expect("par_map_own queue poisoned").next();
+                        let Some((i, t)) = next else { break };
+                        local.push((i, f(i, t)));
                     }
                     local
                 })
             })
             .collect();
         for h in handles {
-            parts.push(h.join().expect("par_map worker panicked"));
+            parts.push(h.join().expect("par_map_own worker panicked"));
         }
     });
-    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     for part in parts {
         for (i, r) in part {
             slots[i] = Some(r);
@@ -89,6 +105,20 @@ mod tests {
         let items: Vec<u8> = vec![];
         let out: Vec<u8> = par_map(&items, 4, |_, &x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn own_map_feeds_mut_slices() {
+        let mut data = vec![0u32; 64];
+        let pieces: Vec<(usize, &mut [u32])> = data.chunks_mut(16).enumerate().collect();
+        let lens = par_map_own(pieces, 4, |_, (base, piece)| {
+            for (k, v) in piece.iter_mut().enumerate() {
+                *v = (base * 16 + k) as u32;
+            }
+            piece.len()
+        });
+        assert_eq!(lens, vec![16, 16, 16, 16]);
+        assert_eq!(data, (0..64).collect::<Vec<u32>>());
     }
 
     #[test]

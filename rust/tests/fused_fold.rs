@@ -1,0 +1,199 @@
+//! Fused-vs-unfused equivalence: [`Compressor::decompress_fold_into`]
+//! must match decompress-then-[`ReduceOp::fold`] **bit for bit** — for
+//! every codec (native fused kernels and default-impl codecs alike),
+//! every reduce op, every field kind, tiny and empty inputs, and the
+//! multithread wrappers — plus the documented corrupt-frame semantics.
+
+use zccl::collectives::ReduceOp;
+use zccl::compress::{
+    Compressor, CompressorKind, ErrorBound, FzLight, MtCompressor, PipeFzLight,
+};
+use zccl::data::fields::{Field, FieldKind};
+
+const OPS: [ReduceOp; 3] = [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Assert fused == unfused (bitwise) for `codec` over the given sizes.
+fn check_equivalence(codec: &dyn Compressor, label: &str, sizes: &[usize]) {
+    for kind in FieldKind::ALL {
+        for &n in sizes {
+            let f = Field::generate(kind, n, 7);
+            // Some codec/size combinations may legitimately refuse to
+            // compress; equivalence only applies where compression works.
+            let Ok(c) = codec.compress(&f.values, ErrorBound::Abs(1e-3)) else {
+                continue;
+            };
+            let dec = codec.decompress(&c.bytes).unwrap();
+            let base = Field::generate(kind, n, 8).values;
+            for op in OPS {
+                let mut unfused = base.clone();
+                op.fold(&mut unfused, &dec);
+                let mut fused = base.clone();
+                let cnt = codec.decompress_fold_into(&c.bytes, op, &mut fused).unwrap();
+                assert_eq!(cnt, n, "{label} {kind:?} {op:?} n={n}: count");
+                assert_eq!(
+                    bits(&fused),
+                    bits(&unfused),
+                    "{label} {kind:?} {op:?} n={n}: fused fold must be bit-identical"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_codecs_fused_matches_unfused_bitwise() {
+    // Small sizes exercise partial blocks, single-value chunks and empty
+    // frames across every codec, including the decompress-then-fold
+    // default impls (SZx, both ZFP modes).
+    let sizes = [0usize, 1, 5, 31, 32, 33, 500];
+    for kind in CompressorKind::ALL {
+        let codec = zccl::compress::build(kind);
+        check_equivalence(codec.as_ref(), kind.name(), &sizes);
+    }
+}
+
+#[test]
+fn fzlight_family_fused_matches_unfused_bitwise_large() {
+    // The native fused kernels (single-thread, pipelined, multithread)
+    // against multi-chunk inputs; chunk size 512 forces many chunks.
+    let sizes = [0usize, 5119, 5120, 5121, 20_000];
+    check_equivalence(&FzLight::with_chunk(512), "fzlight-512", &sizes);
+    check_equivalence(&PipeFzLight::with_chunk(512), "pipe-512", &sizes);
+    check_equivalence(
+        &MtCompressor::with_chunk(CompressorKind::FzLight, 512),
+        "mt-fzlight-512",
+        &sizes,
+    );
+    check_equivalence(&MtCompressor::new(CompressorKind::Szx), "mt-szx", &[0, 500, 5121]);
+}
+
+#[test]
+fn constant_field_exercises_broadcast_fast_path() {
+    // An all-constant input compresses to constant blocks only, so the
+    // fused kernel takes the broadcast run path for every block; the
+    // result must still match the unfused reference bitwise.
+    let data = vec![2.5f32; 10_000];
+    let codec = FzLight::default();
+    let c = codec.compress(&data, ErrorBound::Abs(1e-4)).unwrap();
+    assert_eq!(c.stats.constant_blocks, c.stats.blocks, "field must be all-constant blocks");
+    let dec = codec.decompress(&c.bytes).unwrap();
+    let base = Field::generate(FieldKind::Rtm, 10_000, 3).values;
+    for op in OPS {
+        let mut unfused = base.clone();
+        op.fold(&mut unfused, &dec);
+        let mut fused = base.clone();
+        codec.decompress_fold_into(&c.bytes, op, &mut fused).unwrap();
+        assert_eq!(bits(&fused), bits(&unfused), "{op:?}");
+    }
+}
+
+#[test]
+fn corrupt_frames_error_within_documented_semantics() {
+    // Documented semantics: on Err, each accumulator slot holds either
+    // its original value or the correctly-folded value (an unspecified
+    // subset of chunks may have been applied) — never garbage.
+    let f = Field::generate(FieldKind::Hurricane, 6_000, 13);
+    let codec = FzLight::with_chunk(1000);
+    let c = codec.compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+    let dec = codec.decompress(&c.bytes).unwrap();
+    let base = Field::generate(FieldKind::Nyx, 6_000, 14).values;
+    for cut in [c.bytes.len() - 1, c.bytes.len() / 2, 40, 25] {
+        let mut acc = base.clone();
+        let res = codec.decompress_fold_into(&c.bytes[..cut], ReduceOp::Sum, &mut acc);
+        assert!(res.is_err(), "cut {cut} must fail");
+        for (i, (&a, (&b, &d))) in acc.iter().zip(base.iter().zip(&dec)).enumerate() {
+            let folded = b + d;
+            assert!(
+                a.to_bits() == b.to_bits() || a.to_bits() == folded.to_bits(),
+                "cut {cut} idx {i}: {a} is neither original {b} nor folded {folded}"
+            );
+        }
+    }
+    // Corrupt a block header mid-frame (valid chunk table, bad payload):
+    // chunks before the bad one fold, the error surfaces, and every slot
+    // is still either original or correctly folded. Frame layout: common
+    // header (24) + chunk_values/nchunks (8) + 6-entry u32 table (24),
+    // payloads concatenated from byte 56.
+    let mut bad = c.bytes.clone();
+    let mut off = 56usize;
+    for k in 0..3 {
+        let e = 32 + 4 * k;
+        off += u32::from_le_bytes(bad[e..e + 4].try_into().unwrap()) as usize;
+    }
+    bad[off + 8] = 0xFF; // chunk 3's first block header: code length 255 > 64
+    let mut acc = base.clone();
+    assert!(codec.decompress_fold_into(&bad, ReduceOp::Sum, &mut acc).is_err());
+    let mut changed = 0usize;
+    for (i, (&a, (&b, &d))) in acc.iter().zip(base.iter().zip(&dec)).enumerate() {
+        let folded = b + d;
+        let is_orig = a.to_bits() == b.to_bits();
+        let is_folded = a.to_bits() == folded.to_bits();
+        assert!(is_orig || is_folded, "idx {i}: {a} neither original nor folded");
+        if is_folded && !is_orig {
+            changed += 1;
+        }
+    }
+    assert!(changed > 0, "chunks before the corruption must have folded");
+
+    // A wrong-length accumulator is rejected before any fold.
+    let mut short = base[..100].to_vec();
+    let before = short.clone();
+    assert!(codec.decompress_fold_into(&c.bytes, ReduceOp::Sum, &mut short).is_err());
+    assert_eq!(short, before);
+    // Garbage bytes never touch the accumulator.
+    let mut acc = base.clone();
+    assert!(codec.decompress_fold_into(b"not a frame", ReduceOp::Sum, &mut acc).is_err());
+    assert_eq!(bits(&acc), bits(&base));
+}
+
+#[test]
+fn reduction_collectives_agree_across_fused_modes() {
+    // End-to-end: the fused receive path must keep every compressed mode
+    // within the aggregated error bound of the plain result (the modes
+    // already-tested invariant, re-checked here through the new path for
+    // reduce + reduce_scatter via allreduce).
+    use zccl::collectives::{allreduce, run_ranks, Mode};
+    use zccl::coordinator::Metrics;
+    let (n, len) = (4, 2500);
+    let eb = 1e-4f64;
+    let want = {
+        let mut acc = Field::generate(FieldKind::Cesm, len, 70).values;
+        for r in 1..n {
+            ReduceOp::Sum.fold(&mut acc, &Field::generate(FieldKind::Cesm, len, 70 + r as u64).values);
+        }
+        acc
+    };
+    for mode in [
+        Mode::plain(),
+        Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+        Mode::ccoll(ErrorBound::Abs(eb)),
+        Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+        Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)).with_multithread(true),
+    ] {
+        let out = run_ranks(n, move |c| {
+            let input = Field::generate(FieldKind::Cesm, len, 70 + c.rank() as u64).values;
+            let mut m = Metrics::default();
+            let r = allreduce(c, &input, ReduceOp::Sum, &mode, &mut m).unwrap();
+            (r, m)
+        });
+        let tol = 2.0 * (n as f64) * eb + 1e-4;
+        for (vals, m) in out {
+            for (a, b) in vals.iter().zip(&want) {
+                assert!(((a - b).abs() as f64) <= tol, "mode {:?}: {a} vs {b}", mode.algo);
+            }
+            // Compressed modes must attribute receive time to the fused
+            // phase, not the old split Decompress/Compute pair.
+            if mode.compresses() {
+                assert!(
+                    m.decompress_reduce_s > 0.0,
+                    "mode {:?} must record DecompressReduce time",
+                    mode.algo
+                );
+            }
+        }
+    }
+}
