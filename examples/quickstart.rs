@@ -47,21 +47,28 @@ fn main() -> zccl::Result<()> {
             let mut result = Vec::new();
             let t0 = std::time::Instant::now();
             for _ in 0..iters {
-                // `_into` + the pool: warm iterations don't allocate.
+                // `_into` + the pools: warm iterations don't allocate —
+                // wire buffers arrive by `recv_into` swap from the
+                // transport's packet pool and frames decode straight
+                // into their final windows (placement decode).
                 ctx.allreduce_into(&f.values, ReduceOp::Sum, &mut result).unwrap();
             }
             let wall = t0.elapsed().as_secs_f64() / iters as f64;
-            (wall, ctx.take_metrics(), ctx.pool_stats())
+            (wall, ctx.take_metrics(), ctx.pool_stats(), ctx.packet_stats())
         });
         let wall = out.iter().map(|x| x.0).fold(0.0, f64::max);
         let sent: u64 = out.iter().map(|x| x.1.bytes_sent).sum();
         let pool = out[0].2;
+        let packets = out[0].3;
         println!(
             "{label:20} {n} ranks x {iters} iters: {:.3}s/iter, {:.1} MB on the wire, \
-             {} scratch buffers total",
+             {} scratch buffers, {} wire buffers (fabric), {} placement / {} staged decodes",
             wall,
             sent as f64 / 1e6,
-            pool.byte_buffers_created + pool.f32_buffers_created
+            pool.byte_buffers_created + pool.f32_buffers_created,
+            packets.allocated,
+            pool.placement_decodes,
+            pool.staged_decodes
         );
     }
     println!(

@@ -7,11 +7,14 @@
 //! additionally report the context's pool counters to show that warm
 //! iterations run without codec construction or scratch growth.
 //!
-//! The final case isolates the per-hop **receive side** of a reduction
-//! collective — fused decompress–reduce vs decompress-then-fold on the
-//! same frame — and emits one machine-readable `BENCH_reduce.json` line
-//! (also written next to the working directory) so the perf trajectory
-//! of the fused kernel is tracked from PR to PR.
+//! The `allgather-iterated` case exercises the pooled zero-copy receive
+//! path (lease → recv_into → placement decode) and emits one
+//! machine-readable `BENCH_allgather.json` line (bytes, ns/element,
+//! copies-per-hop, alloc counts) next to PR 2's `BENCH_reduce.json`,
+//! which the final case still produces by isolating the per-hop
+//! **receive side** of a reduction collective — fused decompress–reduce
+//! vs decompress-then-fold on the same frame — so both receive-path
+//! trajectories are tracked from PR to PR.
 
 use zccl::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
 use zccl::compress::{Compressor, CompressorKind, ErrorBound, FzLight};
@@ -165,6 +168,67 @@ fn main() {
         ]);
     }
 
+    // Iterated allgather — the receive path redesigned around pooled
+    // recv_into + placement decode. Reports warm wall time plus the
+    // counters proving the warm receive side allocates no byte buffers
+    // and performs no post-decode copies; emits BENCH_allgather.json.
+    let mut allgather_json: Option<String> = None;
+    for (mode_name, mode) in modes() {
+        let out = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values / n, 3 + ctx.rank() as u64);
+            let mut dst = Vec::new();
+            let mut times = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let t0 = std::time::Instant::now();
+                ctx.allgather_into(&f.values, &mut dst).unwrap();
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let m = ctx.take_metrics();
+            (times, ctx.pool_stats(), ctx.packet_stats(), m.bytes_recv)
+        });
+        let warm = out
+            .iter()
+            .map(|(ts, _, _, _)| ts[1..].iter().cloned().fold(f64::INFINITY, f64::min))
+            .fold(0.0, f64::max);
+        let (pool, packets, bytes_recv) = (&out[0].1, &out[0].2, out[0].3);
+        let hops = (iters * (n - 1)) as f64;
+        // Post-decode copies per receive hop: staged decodes are the only
+        // ones that copy (own-frame decodes are not hops but stage too —
+        // the ratio is what the trajectory tracks).
+        let copies_per_hop = pool.staged_decodes as f64 / hops;
+        t.row(vec![
+            "allgather-iterated".into(),
+            mode_name.into(),
+            format!(
+                "{warm:.4} (pool creates {}B/{}F, packet allocs {}, \
+                 placement/staged {}/{})",
+                pool.byte_buffers_created,
+                pool.f32_buffers_created,
+                packets.allocated,
+                pool.placement_decodes,
+                pool.staged_decodes
+            ),
+        ]);
+        if mode_name == "zccl" {
+            let summary = Json::obj(vec![
+                ("bench", Json::Str("allgather_receive_path".into())),
+                ("values", Json::Num(values as f64)),
+                ("ranks", Json::Num(n as f64)),
+                ("iters", Json::Num(iters as f64)),
+                ("bytes_recv_per_rank", Json::Num(bytes_recv as f64 / iters as f64)),
+                ("warm_ns_per_element", Json::Num(warm * 1e9 / values as f64)),
+                ("copies_per_hop", Json::Num(copies_per_hop)),
+                ("byte_buffers_created", Json::Num(pool.byte_buffers_created as f64)),
+                ("f32_buffers_created", Json::Num(pool.f32_buffers_created as f64)),
+                ("packet_allocs", Json::Num(packets.allocated as f64)),
+                ("placement_decodes", Json::Num(pool.placement_decodes as f64)),
+                ("staged_decodes", Json::Num(pool.staged_decodes as f64)),
+            ]);
+            allgather_json = Some(summary.to_string());
+        }
+    }
+
     // Per-hop receive side in isolation: the same compressed partial
     // consumed fused vs unfused. The fused path must make fewer memory
     // passes (constant blocks fold as a broadcast, no partial vector).
@@ -212,5 +276,11 @@ fn main() {
     println!("BENCH_reduce.json {line}");
     if let Err(e) = std::fs::write("BENCH_reduce.json", format!("{line}\n")) {
         eprintln!("warning: could not write BENCH_reduce.json: {e}");
+    }
+    if let Some(line) = allgather_json {
+        println!("BENCH_allgather.json {line}");
+        if let Err(e) = std::fs::write("BENCH_allgather.json", format!("{line}\n")) {
+            eprintln!("warning: could not write BENCH_allgather.json: {e}");
+        }
     }
 }

@@ -14,6 +14,17 @@
 //!   communication is balanced despite unequal compressed sizes), and
 //!   decompression happens exactly once after the last round.
 //!
+//! ## Receive side
+//!
+//! The chunk counts are known up front (the 8-byte count ring), so the
+//! output is sized **once** and every received frame follows the pooled
+//! zero-copy discipline (parent module docs): wire buffers are leased
+//! from the transport's packet pool, arrive by `recv_into` buffer swap,
+//! and decode **directly into their final window** of the output via the
+//! placement kernel. A warm iterated allgather performs zero byte-buffer
+//! allocations and zero post-decode copies on the receive path — the
+//! `PoolStats` / `PacketPoolStats` regression tests pin this down.
+//!
 //! The implementation is written against [`super::ctx::CollState`]: the
 //! persistent [`super::CollCtx`] passes its long-lived codec + scratch
 //! pool, the free-function shim passes a transient one. The internal
@@ -23,8 +34,8 @@
 
 use super::ctx::CollState;
 use super::{
-    bytes_to_f32s_into, exchange_sizes, f32s_to_bytes_into, recv_segmented, send_segmented, Algo,
-    Communicator, Mode, SEG_TAG_SPAN,
+    bytes_to_f32s_into_slice, exchange_sizes, f32s_to_bytes_into, recv_segmented_into,
+    send_segmented, Algo, Communicator, Mode, SEG_TAG_SPAN,
 };
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{ring, ring_recv_chunk, ring_send_chunk};
@@ -70,8 +81,8 @@ pub(crate) fn allgather_chunks_with(
     out: &mut Vec<f32>,
 ) -> Result<()> {
     let n = comm.size();
-    out.clear();
     if n == 1 {
+        out.clear();
         out.extend_from_slice(my_chunk);
         return Ok(());
     }
@@ -92,13 +103,30 @@ pub(crate) fn allgather_chunks_with(
     m.raw_bytes += counts.iter().map(|&c| c * 4).sum::<u64>();
     let vrank = me + shift; // virtual rank for the ring chunk schedule
 
+    // The counts fix every chunk's final window, so the output is sized
+    // exactly once and receives decode straight into place. `resize`
+    // without a prior `clear()`: a warm same-size iteration truncates or
+    // grows nothing and zero-fills nothing — every element is about to
+    // be overwritten by its window's decode (or is poisoned on error).
+    let mut offsets = Vec::with_capacity(n + 1);
+    offsets.push(0usize);
+    for &c in &counts {
+        offsets.push(offsets.last().unwrap() + c as usize);
+    }
+    out.resize(offsets[n], 0.0);
+
     match st.mode.algo {
-        Algo::Plain => allgather_plain(comm, st, my_chunk, vrank, &counts, round_tag, m, out),
-        Algo::Cprp2p => allgather_cprp2p(comm, st, my_chunk, vrank, &counts, round_tag, m, out),
+        Algo::Plain => allgather_plain(comm, st, my_chunk, vrank, &offsets, round_tag, m, out),
+        Algo::Cprp2p => allgather_cprp2p(comm, st, my_chunk, vrank, &offsets, round_tag, m, out),
         Algo::CColl | Algo::Zccl => {
-            allgather_zccl(comm, st, my_chunk, vrank, &counts, sizes_tag, round_tag, m, out)
+            allgather_zccl(comm, st, my_chunk, vrank, &offsets, sizes_tag, round_tag, m, out)
         }
     }
+}
+
+/// The final window of logical chunk `r` in the output.
+fn window(offsets: &[usize], r: usize) -> std::ops::Range<usize> {
+    offsets[r]..offsets[r + 1]
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -107,7 +135,7 @@ fn allgather_plain(
     st: &mut CollState,
     my_chunk: &[f32],
     vrank: usize,
-    counts: &[u64],
+    offsets: &[usize],
     round_tag: impl Fn(usize) -> u64,
     m: &mut Metrics,
     out: &mut Vec<f32>,
@@ -116,6 +144,8 @@ fn allgather_plain(
     let me = comm.rank();
     let nb = ring(me, n);
     let own = vrank % n;
+    // Raw chunks forwarded over the ring: our serialisation lives in
+    // CollState scratch, received chunks ride leased wire buffers.
     let mut chunks: Vec<Option<Vec<u8>>> = vec![None; n];
     let mut mine = st.pool.take_bytes();
     f32s_to_bytes_into(my_chunk, &mut mine);
@@ -127,18 +157,21 @@ fn allgather_plain(
         let send_buf = chunks[s].as_ref().expect("ring schedule owns sent chunk");
         let t0 = std::time::Instant::now();
         m.bytes_sent += send_segmented(comm.t, nb.next, tag, send_buf, usize::MAX)?;
-        let got = recv_segmented(comm.t, nb.prev, tag, counts[r] as usize * 4, usize::MAX)?;
+        let mut got = comm.t.lease();
+        let total = window(offsets, r).len() * 4;
+        recv_segmented_into(comm.t, nb.prev, tag, total, usize::MAX, &mut got)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += got.len() as u64;
         chunks[r] = Some(got);
     }
     let t0 = std::time::Instant::now();
-    out.reserve(counts.iter().map(|&c| c as usize).sum());
     for (r, c) in chunks.into_iter().enumerate() {
         let buf = c.expect("all chunks gathered");
-        bytes_to_f32s_into(&buf, out)?;
+        bytes_to_f32s_into_slice(&buf, &mut out[window(offsets, r)])?;
         if r == own {
             st.pool.put_bytes(buf);
+        } else {
+            comm.t.recycle(buf);
         }
     }
     m.add(Phase::Other, t0.elapsed().as_secs_f64());
@@ -151,7 +184,7 @@ fn allgather_cprp2p(
     st: &mut CollState,
     my_chunk: &[f32],
     vrank: usize,
-    counts: &[u64],
+    offsets: &[usize],
     round_tag: impl Fn(usize) -> u64,
     m: &mut Metrics,
     out: &mut Vec<f32>,
@@ -160,48 +193,38 @@ fn allgather_cprp2p(
     let me = comm.rank();
     let nb = ring(me, n);
     // CPRP2P keeps chunks DECOMPRESSED between rounds, so every forward
-    // re-compresses (and every hop re-lossy-fies) the data.
-    let mut chunks: Vec<Option<Vec<f32>>> = vec![None; n];
+    // re-compresses (and every hop re-lossy-fies) the data. The output
+    // itself is the between-rounds store: each received frame decodes
+    // straight into its final window, and forwards re-compress from
+    // there — no per-chunk value vectors at all.
     let own = vrank % n;
-    let mut mine = st.pool.take_f32();
-    mine.extend_from_slice(my_chunk);
-    chunks[own] = Some(mine);
+    out[window(offsets, own)].copy_from_slice(my_chunk);
     let mut frame = st.pool.take_bytes();
+    let mut got = comm.t.lease();
     for t in 0..n - 1 {
         let s = ring_send_chunk(vrank, t, n);
         let r = ring_recv_chunk(vrank, t, n);
         let tag = round_tag(t);
         frame.clear();
-        let send_plain = chunks[s].take().expect("schedule");
         let t0 = std::time::Instant::now();
-        st.compress_into(&send_plain, &mut frame)?;
+        st.compress_into(&out[window(offsets, s)], &mut frame)?;
         m.add(Phase::Compress, t0.elapsed().as_secs_f64());
-        chunks[s] = Some(send_plain);
         // The receiver cannot know the compressed size in advance: CPRP2P
         // sends the frame as one message (this is exactly the unbalanced
         // communication §3.1.1 calls out).
         let t0 = std::time::Instant::now();
         comm.t.send(nb.next, tag, &frame)?;
         m.bytes_sent += frame.len() as u64;
-        let got = comm.t.recv(nb.prev, tag)?;
+        comm.t.recv_into(nb.prev, tag, &mut got)?;
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-        let mut dec = st.pool.take_f32();
         let t0 = std::time::Instant::now();
-        let cnt = st.decode_into(&got, &mut dec)?;
+        st.decode_into_slice(&got, &mut out[window(offsets, r)])
+            .map_err(|e| Error::corrupt(format!("cprp2p chunk {r}: {e}")))?;
         m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-        if cnt != counts[r] as usize {
-            return Err(Error::corrupt("cprp2p chunk count mismatch"));
-        }
-        chunks[r] = Some(dec);
     }
     st.pool.put_bytes(frame);
-    out.reserve(counts.iter().map(|&c| c as usize).sum());
-    for c in chunks {
-        let buf = c.expect("all chunks gathered");
-        out.extend_from_slice(&buf);
-        st.pool.put_f32(buf);
-    }
+    comm.t.recycle(got);
     Ok(())
 }
 
@@ -211,7 +234,7 @@ fn allgather_zccl(
     st: &mut CollState,
     my_chunk: &[f32],
     vrank: usize,
-    counts: &[u64],
+    offsets: &[usize],
     sizes_tag: u64,
     round_tag: impl Fn(usize) -> u64,
     m: &mut Metrics,
@@ -237,7 +260,8 @@ fn allgather_zccl(
         sizes[(r + vrank - me) % n] = *s;
     }
 
-    // (3) N-1 ring rounds forwarding COMPRESSED chunks in fixed segments.
+    // (3) N-1 ring rounds forwarding COMPRESSED chunks in fixed segments,
+    //     each received into a leased wire buffer.
     let own = vrank % n;
     let mut chunks: Vec<Option<Vec<u8>>> = vec![None; n];
     chunks[own] = Some(mine);
@@ -249,31 +273,29 @@ fn allgather_zccl(
         let send_buf = chunks[s].as_ref().expect("schedule");
         let t0 = std::time::Instant::now();
         m.bytes_sent += send_segmented(comm.t, nb.next, tag, send_buf, seg)?;
-        let got = recv_segmented(comm.t, nb.prev, tag, sizes[r] as usize, seg)?;
+        let mut got = comm.t.lease();
+        recv_segmented_into(comm.t, nb.prev, tag, sizes[r] as usize, seg, &mut got)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += got.len() as u64;
         chunks[r] = Some(got);
     }
 
-    // (4) Decompress everything exactly once, after the last round
+    // (4) Placement-decode everything exactly once, after the last round
     //     (including our own frame, so every rank returns identical data —
-    //     MPI allgather semantics), straight into the output buffer.
-    out.reserve(counts.iter().map(|&c| c as usize).sum());
+    //     MPI allgather semantics), each frame straight into its final
+    //     window of the output.
     for (r, c) in chunks.into_iter().enumerate() {
         let frame = c.expect("all chunks gathered");
         let t0 = std::time::Instant::now();
-        let cnt = st.decode_into(&frame, out)?;
+        st.decode_into_slice(&frame, &mut out[window(offsets, r)])
+            .map_err(|e| Error::corrupt(format!("zccl chunk {r}: {e}")))?;
         m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-        if cnt != counts[r] as usize {
-            return Err(Error::corrupt(format!(
-                "zccl chunk {r}: {cnt} values, expected {}",
-                counts[r]
-            )));
-        }
         if r == own {
-            // Our frame came from the pool; recv'd frames belong to the
-            // transport and are dropped.
+            // Our frame came from the scratch pool; received frames go
+            // back to the transport's packet pool.
             st.pool.put_bytes(frame);
+        } else {
+            comm.t.recycle(frame);
         }
     }
     Ok(())
@@ -468,6 +490,42 @@ mod tests {
         for o in &out {
             for (a, b) in o.iter().zip(&want) {
                 assert!((a - b).abs() as f64 <= 1e-3 * 1.001 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_contributions_are_handled() {
+        // Some ranks contribute nothing (the allreduce stage hits this
+        // when len < n): their windows are empty and must not disturb the
+        // placement decode of their neighbours. Covers all three receive
+        // structures: raw ring (Plain), output-as-store with per-hop
+        // recompression (Cprp2p), and compressed frames (Zccl).
+        let n = 4;
+        for mode in [
+            Mode::plain(),
+            Mode::cprp2p(CompressorKind::FzLight, ErrorBound::Abs(1e-3)),
+            Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3)),
+        ] {
+            let out = run_ranks(n, move |c| {
+                let mine = if c.rank() % 2 == 0 { rank_chunk(c.rank(), 33) } else { Vec::new() };
+                let mut m = Metrics::default();
+                allgather(c, &mine, &mode, &mut m).unwrap()
+            });
+            let want: Vec<f32> = (0..n)
+                .flat_map(|r| if r % 2 == 0 { rank_chunk(r, 33) } else { Vec::new() })
+                .collect();
+            for o in out {
+                assert_eq!(o.len(), want.len(), "{:?}", mode.algo);
+                for (a, b) in o.iter().zip(&want) {
+                    // CPRP2P may accumulate up to (n-1)·eb; the others stay
+                    // within a single eb.
+                    assert!(
+                        (a - b).abs() as f64 <= (n as f64 - 1.0) * 1e-3 * 1.01 + 1e-6,
+                        "{:?}: {a} vs {b}",
+                        mode.algo
+                    );
+                }
             }
         }
     }

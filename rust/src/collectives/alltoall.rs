@@ -6,11 +6,15 @@
 //! one link, so each is compressed once and decompressed once; ZCCL adds
 //! the size pre-exchange so receives post exact buffers (balanced), while
 //! CPRP2P sends opaque frames of unknown size.
+//!
+//! Receive side (parent module docs): every peer's chunk arrives into a
+//! leased wire buffer, the frame headers size the output exactly once,
+//! and each frame placement-decodes straight into its final window.
 
 use super::ctx::CollState;
 use super::{
-    bytes_to_f32s_into, chunk_ranges, exchange_sizes, f32s_to_bytes_into, Algo, Communicator,
-    Mode,
+    bytes_to_f32s_into_slice, chunk_ranges, exchange_sizes, f32s_to_bytes_into, Algo,
+    Communicator, Mode,
 };
 use crate::coordinator::{Metrics, Phase};
 use crate::{Error, Result};
@@ -43,8 +47,8 @@ pub(crate) fn alltoall_with(
 ) -> Result<()> {
     let n = comm.size();
     let me = comm.rank();
-    out.clear();
     if n == 1 {
+        out.clear();
         out.extend_from_slice(input);
         return Ok(());
     }
@@ -86,16 +90,19 @@ pub(crate) fn alltoall_with(
         let t0 = std::time::Instant::now();
         comm.t.send(to, base + t as u64, &outgoing[to])?;
         m.bytes_sent += outgoing[to].len() as u64;
-        let got = comm.t.recv(from, base + t as u64)?;
+        let mut got = comm.t.lease();
+        comm.t.recv_into(from, base + t as u64, &mut got)?;
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         incoming[from] = Some(got);
     }
 
-    // Decode in rank order. Every rank's input may have a different
-    // length, so sizes come from the frames themselves (compressed) or
-    // the byte count (plain). Our own chunk decodes from `outgoing`
-    // directly (no copy).
+    // Decode in rank order, each chunk straight into its final window.
+    // Every rank's input may have a different length, so counts come from
+    // the frame headers (compressed) or the byte count (plain); the
+    // output is sized exactly once from them. Our own chunk decodes from
+    // `outgoing` directly (no copy).
+    let mut counts = Vec::with_capacity(n);
     for r in 0..n {
         let buf: &[u8] = if r == me {
             &outgoing[me]
@@ -104,16 +111,35 @@ pub(crate) fn alltoall_with(
                 .as_deref()
                 .ok_or_else(|| Error::corrupt(format!("missing chunk from {r}")))?
         };
+        counts.push(if compresses {
+            // Bounds-checked against the frame's physical size: a corrupt
+            // header must not size the output.
+            crate::compress::checked_count(buf)?
+        } else {
+            buf.len() / 4
+        });
+    }
+    // Plain `resize` (no prior clear): warm same-size iterations neither
+    // shrink nor zero-fill, and every element is overwritten below.
+    out.resize(counts.iter().sum(), 0.0);
+    let mut off = 0usize;
+    for r in 0..n {
+        let buf: &[u8] = if r == me { &outgoing[me] } else { incoming[r].as_deref().unwrap() };
+        let dst = &mut out[off..off + counts[r]];
         if compresses {
             let t0 = std::time::Instant::now();
-            st.decode_into(buf, out)?;
+            st.decode_into_slice(buf, dst)?;
             m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
         } else {
-            bytes_to_f32s_into(buf, out)?;
+            bytes_to_f32s_into_slice(buf, dst)?;
         }
+        off += counts[r];
     }
     for buf in outgoing {
         st.pool.put_bytes(buf);
+    }
+    for buf in incoming.into_iter().flatten() {
+        comm.t.recycle(buf);
     }
     Ok(())
 }

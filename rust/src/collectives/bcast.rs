@@ -9,7 +9,7 @@
 //!   collapses to `T_comp + T_decom` and the error to a single `ê`.
 
 use super::ctx::CollState;
-use super::{bytes_to_f32s, f32s_to_bytes, Algo, Communicator, Mode};
+use super::{bytes_to_f32s_into_slice, f32s_to_bytes_into, Algo, Communicator, Mode};
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::binomial_bcast;
 use crate::{Error, Result};
@@ -53,17 +53,20 @@ pub(crate) fn bcast_with(
 
     match st.mode.algo {
         Algo::Plain => {
-            let mut buf: Vec<u8> = if me == root {
+            let (buf, pooled): (Vec<u8>, bool) = if me == root {
                 let d = data.unwrap();
                 m.raw_bytes += (d.len() * 4) as u64;
-                f32s_to_bytes(d)
+                let mut b = st.pool.take_bytes();
+                f32s_to_bytes_into(d, &mut b);
+                (b, true)
             } else {
                 let step = recv_step.expect("non-root receives");
+                let mut got = comm.t.lease();
                 let t0 = std::time::Instant::now();
-                let got = comm.t.recv(step.peer, base + step.round as u64)?;
+                comm.t.recv_into(step.peer, base + step.round as u64, &mut got)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
-                got
+                (got, false)
             };
             for s in send_steps {
                 let t0 = std::time::Instant::now();
@@ -71,8 +74,13 @@ pub(crate) fn bcast_with(
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_sent += buf.len() as u64;
             }
-            let out = bytes_to_f32s(&buf)?;
-            buf.clear();
+            let mut out = vec![0.0f32; buf.len() / 4];
+            bytes_to_f32s_into_slice(&buf, &mut out)?;
+            if pooled {
+                st.pool.put_bytes(buf);
+            } else {
+                comm.t.recycle(buf);
+            }
             Ok(out)
         }
         Algo::Cprp2p => {
@@ -83,14 +91,20 @@ pub(crate) fn bcast_with(
                 d.to_vec()
             } else {
                 let step = recv_step.expect("non-root receives");
+                let mut got = comm.t.lease();
                 let t0 = std::time::Instant::now();
-                let got = comm.t.recv(step.peer, base + step.round as u64)?;
+                comm.t.recv_into(step.peer, base + step.round as u64, &mut got)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
-                let mut dec = Vec::new();
+                // Placement decode straight into the (once-sized) result;
+                // `checked_count` bounds the claimed count against the
+                // frame's physical size before anything is allocated.
+                let cnt = crate::compress::checked_count(&got)?;
+                let mut dec = vec![0.0f32; cnt];
                 let t0 = std::time::Instant::now();
-                st.decode_into(&got, &mut dec)?;
+                st.decode_into_slice(&got, &mut dec)?;
                 m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                comm.t.recycle(got);
                 dec
             };
             let mut frame = st.pool.take_bytes();
@@ -109,7 +123,8 @@ pub(crate) fn bcast_with(
             Ok(plain)
         }
         Algo::CColl | Algo::Zccl => {
-            // Root compresses once; the frame travels the tree verbatim.
+            // Root compresses once; the frame travels the tree verbatim
+            // (received into a leased wire buffer on every hop).
             let (frame, pooled): (Vec<u8>, bool) = if me == root {
                 let d = data.unwrap();
                 m.raw_bytes += (d.len() * 4) as u64;
@@ -120,8 +135,9 @@ pub(crate) fn bcast_with(
                 (f, true)
             } else {
                 let step = recv_step.expect("non-root receives");
+                let mut got = comm.t.lease();
                 let t0 = std::time::Instant::now();
-                let got = comm.t.recv(step.peer, base + step.round as u64)?;
+                comm.t.recv_into(step.peer, base + step.round as u64, &mut got)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
                 (got, false)
@@ -132,14 +148,19 @@ pub(crate) fn bcast_with(
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_sent += frame.len() as u64;
             }
-            // Decompress exactly once, after forwarding (so children are
-            // not delayed behind our decompression).
-            let mut out = Vec::new();
+            // Placement-decode exactly once, after forwarding (so children
+            // are not delayed behind our decompression): the header's
+            // size-bounded element count sizes the result, the frame
+            // decodes into it directly.
+            let cnt = crate::compress::checked_count(&frame)?;
+            let mut out = vec![0.0f32; cnt];
             let t0 = std::time::Instant::now();
-            st.decode_into(&frame, &mut out)?;
+            st.decode_into_slice(&frame, &mut out)?;
             m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
             if pooled {
                 st.pool.put_bytes(frame);
+            } else {
+                comm.t.recycle(frame);
             }
             Ok(out)
         }

@@ -42,6 +42,13 @@ pub struct PoolStats {
     pub byte_capacity_hwm: usize,
     /// High-water mark: the largest f32-buffer capacity ever checked in.
     pub f32_capacity_hwm: usize,
+    /// Receive-path decodes that landed directly in the output's final
+    /// window (native placement kernel — zero post-decode copies).
+    pub placement_decodes: u64,
+    /// Receive-path decodes staged through pooled scratch and then
+    /// copied into place (codecs without a native placement kernel —
+    /// SZx / ZFP behind the `supports_placement_decode` capability gate).
+    pub staged_decodes: u64,
 }
 
 /// A check-out / check-in free list of scratch buffers. Checked-out
@@ -115,6 +122,18 @@ impl ScratchPool {
         }
     }
 
+    /// Record a placement decode (receive frame decoded straight into its
+    /// final output window).
+    pub(crate) fn note_placement_decode(&mut self) {
+        self.stats.placement_decodes += 1;
+    }
+
+    /// Record a staged decode (receive frame decoded into pooled scratch,
+    /// then copied into place — the capability-gated fallback).
+    pub(crate) fn note_staged_decode(&mut self) {
+        self.stats.staged_decodes += 1;
+    }
+
     /// Current counters.
     pub fn stats(&self) -> PoolStats {
         self.stats
@@ -169,6 +188,43 @@ impl CollState {
             self.codec_builds += 1;
             crate::compress::build(kind).decompress_into(bytes, out)
         }
+    }
+
+    /// Codec-agnostic **placement decode**: reconstruct the frame's
+    /// values directly into `out`, their final window of the assembled
+    /// output — the movement collectives' receive path. `out.len()` must
+    /// equal the frame's element count; on `Err`, `out` is poisoned (see
+    /// [`crate::compress::Compressor::decompress_into_slice`]).
+    ///
+    /// Codecs with a native in-place kernel run it directly; codecs on
+    /// the decompress-then-copy default are routed through the scratch
+    /// pool instead, so they keep the zero-alloc warm path rather than
+    /// paying the default impl's per-call temporary. Both outcomes are
+    /// counted in [`PoolStats`] (`placement_decodes` / `staged_decodes`).
+    pub(crate) fn decode_into_slice(&mut self, bytes: &[u8], out: &mut [f32]) -> Result<usize> {
+        let kind = crate::compress::peek_codec(bytes)?;
+        if kind != self.codec.kind() {
+            self.codec_builds += 1;
+            return crate::compress::build(kind).decompress_into_slice(bytes, out);
+        }
+        if self.codec.supports_placement_decode() {
+            self.pool.note_placement_decode();
+            return self.codec.decompress_into_slice(bytes, out);
+        }
+        // Pooled decompress-then-copy. Error paths drop the buffer per the
+        // crate-wide pool policy (see [`ScratchPool`] docs).
+        self.pool.note_staged_decode();
+        let mut staged = self.pool.take_f32();
+        let cnt = self.codec.decompress_into(bytes, &mut staged)?;
+        if cnt != out.len() {
+            return Err(crate::Error::invalid(format!(
+                "placement decode: frame holds {cnt} values but destination holds {}",
+                out.len()
+            )));
+        }
+        out.copy_from_slice(&staged);
+        self.pool.put_f32(staged);
+        Ok(cnt)
     }
 
     /// Codec-agnostic **fused decompress–reduce**: fold the frame's values
@@ -293,6 +349,13 @@ impl<'c, 'a> CollCtx<'c, 'a> {
     /// Scratch-pool counters (see [`PoolStats`]).
     pub fn pool_stats(&self) -> PoolStats {
         self.state.pool_stats()
+    }
+
+    /// The transport packet pool's counters — the other half of the
+    /// receive path's zero-alloc story (wire buffers are leased from the
+    /// transport, scratch from [`ScratchPool`]).
+    pub fn packet_stats(&self) -> crate::transport::PacketPoolStats {
+        self.comm.packet_stats()
     }
 
     /// Codec constructions performed by this context (see

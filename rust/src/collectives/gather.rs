@@ -10,10 +10,19 @@
 //!
 //! Record format: `u32 count`, then per record `u32 rank, u32 bytes,
 //! payload`.
+//!
+//! Receive side (parent module docs): child bundles arrive into leased
+//! wire buffers that stay alive as record *stores* — records are ranges
+//! into them, never copied out — and the root sizes its output once from
+//! the record headers, placement-decoding every record straight into its
+//! final window.
 
 use super::ctx::CollState;
-use super::{bytes_to_f32s, bytes_to_f32s_into, f32s_to_bytes, Algo, Communicator, Mode};
+use super::{
+    bytes_to_f32s_into, bytes_to_f32s_into_slice, f32s_to_bytes_into, Algo, Communicator, Mode,
+};
 use crate::compress::bits::le;
+use crate::compress::fzlight::frame_u32;
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{binomial_bcast, tree_rounds};
 use crate::{Error, Result};
@@ -59,106 +68,164 @@ pub(crate) fn gather_with(
     let (parent_step, child_steps) = binomial_bcast(me, root, n);
 
     m.raw_bytes += (my_chunk.len() * 4) as u64;
-    // Records this rank will forward: own chunk first.
-    let mut records: Vec<(u32, Vec<u8>)> = Vec::new();
-    let own_payload = match st.mode.algo {
-        Algo::Plain => f32s_to_bytes(my_chunk),
-        Algo::Cprp2p => f32s_to_bytes(my_chunk), // compressed per hop below
+    // Record payloads live in `stores`: store 0 is pooled scratch holding
+    // our own payload (and, for CPRP2P, every re-serialized child
+    // record); the rest are leased arrival buffers kept alive so records
+    // can reference them in place. A record is `(rank, store, range)`.
+    let mut stores: Vec<Vec<u8>> = vec![st.pool.take_bytes()];
+    let mut records: Vec<(u32, usize, std::ops::Range<usize>)> = Vec::new();
+    match st.mode.algo {
+        Algo::Plain | Algo::Cprp2p => f32s_to_bytes_into(my_chunk, &mut stores[0]),
         Algo::CColl | Algo::Zccl => {
-            let mut f = Vec::new();
             let t0 = std::time::Instant::now();
-            st.compress_into(my_chunk, &mut f)?;
+            st.compress_into(my_chunk, &mut stores[0])?;
             m.add(Phase::Compress, t0.elapsed().as_secs_f64());
-            f
         }
-    };
-    records.push((me as u32, own_payload));
+    }
+    records.push((me as u32, 0, 0..stores[0].len()));
 
     // Receive children's bundles (reverse round order).
     for s in child_steps.iter().rev() {
+        let mut msg = comm.t.lease();
         let t0 = std::time::Instant::now();
-        let msg = comm.t.recv(s.peer, base + s.round as u64)?;
+        comm.t.recv_into(s.peer, base + s.round as u64, &mut msg)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
-        let child_records = if st.mode.algo == Algo::Cprp2p {
+        if st.mode.algo == Algo::Cprp2p {
             // The child compressed each record's values for the hop;
-            // decompress them back to raw bytes.
+            // placement-decode them back to raw bytes in store 0.
             let recs = parse_records(&msg)?;
-            let mut out = Vec::with_capacity(recs.len());
-            for (rank, payload) in recs {
-                let mut vals = st.pool.take_f32();
+            let mut vals = st.pool.take_f32();
+            for (rank, r) in recs {
+                let frame = &msg[r];
+                let cnt = crate::compress::checked_count(frame)?;
+                vals.clear();
+                vals.resize(cnt, 0.0);
                 let t0 = std::time::Instant::now();
-                st.decode_into(&payload, &mut vals)?;
+                st.decode_into_slice(frame, &mut vals)?;
                 m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-                out.push((rank, f32s_to_bytes(&vals)));
-                st.pool.put_f32(vals);
+                let start = stores[0].len();
+                f32s_to_bytes_into(&vals, &mut stores[0]);
+                records.push((rank, 0, start..stores[0].len()));
             }
-            out
+            st.pool.put_f32(vals);
+            comm.t.recycle(msg);
         } else {
-            parse_records(&msg)?
-        };
-        records.extend(child_records);
+            let recs = parse_records(&msg)?;
+            let idx = stores.len();
+            records.extend(recs.into_iter().map(|(rank, r)| (rank, idx, r)));
+            stores.push(msg);
+        }
     }
 
     if me == root {
-        // Assemble in rank order; decompress once per rank for Z modes.
-        records.sort_by_key(|(r, _)| *r);
-        let mut out = Vec::new();
-        for (_, payload) in records {
+        // Assemble in rank order: size the output once from the record
+        // headers (bounds-checked against each payload's physical size),
+        // then placement-decode every record into its window.
+        records.sort_by_key(|(r, _, _)| *r);
+        let mut counts = Vec::with_capacity(records.len());
+        for (_, si, r) in &records {
+            let payload = &stores[*si][r.clone()];
+            counts.push(match st.mode.algo {
+                Algo::Plain | Algo::Cprp2p => payload.len() / 4,
+                Algo::CColl | Algo::Zccl => crate::compress::checked_count(payload)?,
+            });
+        }
+        let mut out = vec![0.0f32; counts.iter().sum()];
+        let mut off = 0usize;
+        for ((_, si, r), &cnt) in records.iter().zip(&counts) {
+            let payload = &stores[*si][r.clone()];
             match st.mode.algo {
-                Algo::Plain | Algo::Cprp2p => out.extend(bytes_to_f32s(&payload)?),
+                Algo::Plain | Algo::Cprp2p => {
+                    bytes_to_f32s_into_slice(payload, &mut out[off..off + cnt])?;
+                }
                 Algo::CColl | Algo::Zccl => {
                     let t0 = std::time::Instant::now();
-                    st.decode_into(&payload, &mut out)?;
+                    st.decode_into_slice(payload, &mut out[off..off + cnt])?;
                     m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
                 }
             }
+            off += cnt;
         }
+        release_stores(comm, st, stores);
         return Ok(Some(out));
     }
 
-    // Forward everything to the parent.
+    // Forward everything to the parent through a pooled wire buffer.
     let step = parent_step.expect("non-root has a parent");
-    let wire = if st.mode.algo == Algo::Cprp2p {
+    let mut wire = st.pool.take_bytes();
+    if st.mode.algo == Algo::Cprp2p {
         // Compress each record's values for this hop (CPRP2P re-compresses
         // at every level of the tree).
-        let mut hop = Vec::with_capacity(records.len());
-        for (rank, payload) in &records {
-            let mut vals = st.pool.take_f32();
-            bytes_to_f32s_into(payload, &mut vals)?;
-            let mut frame = Vec::new();
+        let mut vals = st.pool.take_f32();
+        let mut frames = st.pool.take_bytes();
+        let mut franges: Vec<(u32, std::ops::Range<usize>)> = Vec::with_capacity(records.len());
+        for (rank, si, r) in &records {
+            vals.clear();
+            bytes_to_f32s_into(&stores[*si][r.clone()], &mut vals)?;
+            let start = frames.len();
             let t0 = std::time::Instant::now();
-            st.compress_into(&vals, &mut frame)?;
+            st.compress_into(&vals, &mut frames)?;
             m.add(Phase::Compress, t0.elapsed().as_secs_f64());
-            st.pool.put_f32(vals);
-            hop.push((*rank, frame));
+            franges.push((*rank, start..frames.len()));
         }
-        encode_records(&hop)
+        let parts: Vec<(u32, &[u8])> =
+            franges.iter().map(|(rank, r)| (*rank, &frames[r.clone()])).collect();
+        encode_records_into(&parts, &mut wire)?;
+        st.pool.put_f32(vals);
+        st.pool.put_bytes(frames);
     } else {
-        encode_records(&records)
-    };
+        let parts: Vec<(u32, &[u8])> =
+            records.iter().map(|(rank, si, r)| (*rank, &stores[*si][r.clone()])).collect();
+        encode_records_into(&parts, &mut wire)?;
+    }
     let t0 = std::time::Instant::now();
     comm.t.send(step.peer, base + step.round as u64, &wire)?;
     m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     m.bytes_sent += wire.len() as u64;
+    st.pool.put_bytes(wire);
+    release_stores(comm, st, stores);
     Ok(None)
 }
 
-fn encode_records(records: &[(u32, Vec<u8>)]) -> Vec<u8> {
+/// Return record stores to their home pools: store 0 to the scratch
+/// pool, arrival buffers to the transport's packet pool.
+fn release_stores(comm: &mut Communicator, st: &mut CollState, stores: Vec<Vec<u8>>) {
+    let mut it = stores.into_iter();
+    if let Some(own) = it.next() {
+        st.pool.put_bytes(own);
+    }
+    for msg in it {
+        comm.t.recycle(msg);
+    }
+}
+
+/// Append the record wire format to `out`. Payload lengths ride u32
+/// fields, so oversized records are an explicit error (same
+/// [`frame_u32`] guard the codec frame tables use), not a silent wrap —
+/// validated before `out` is touched.
+fn encode_records_into(records: &[(u32, &[u8])], out: &mut Vec<u8>) -> Result<()> {
+    let count = frame_u32(records.len(), "gather record count")?;
+    let mut sizes = Vec::with_capacity(records.len());
+    for (_, p) in records {
+        sizes.push(frame_u32(p.len(), "gather record size")?);
+    }
     let body: usize = records.iter().map(|(_, p)| p.len()).sum();
-    let mut out = Vec::with_capacity(4 + records.len() * 8 + body);
-    le::put_u32(&mut out, records.len() as u32);
-    for (rank, p) in records {
-        le::put_u32(&mut out, *rank);
-        le::put_u32(&mut out, p.len() as u32);
+    out.reserve(4 + records.len() * 8 + body);
+    le::put_u32(out, count);
+    for ((rank, _), size) in records.iter().zip(sizes) {
+        le::put_u32(out, *rank);
+        le::put_u32(out, size);
     }
     for (_, p) in records {
         out.extend_from_slice(p);
     }
-    out
+    Ok(())
 }
 
-fn parse_records(msg: &[u8]) -> Result<Vec<(u32, Vec<u8>)>> {
+/// Parse a record bundle **in place**: `(rank, payload range)` per
+/// record, ranges into `msg` (no copies).
+fn parse_records(msg: &[u8]) -> Result<Vec<(u32, std::ops::Range<usize>)>> {
     let mut pos = 0usize;
     let count = le::get_u32(msg, &mut pos)? as usize;
     let mut heads = Vec::with_capacity(count);
@@ -173,7 +240,7 @@ fn parse_records(msg: &[u8]) -> Result<Vec<(u32, Vec<u8>)>> {
         if end > msg.len() {
             return Err(Error::corrupt("gather record past end"));
         }
-        out.push((rank, msg[pos..end].to_vec()));
+        out.push((rank, pos..end));
         pos = end;
     }
     Ok(out)
@@ -264,6 +331,35 @@ mod tests {
         let root_out = out[0].as_ref().unwrap();
         for (a, b) in root_out.iter().zip(&want) {
             assert!((a - b).abs() as f64 <= 3.0 * eb * 1.01 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn uneven_chunks_compressed() {
+        // Record headers (not counts exchange) size the root's output:
+        // wildly different per-rank lengths, including an empty one.
+        let n = 5;
+        let eb = 1e-3f64;
+        let out = run_ranks(n, move |c| {
+            let len = if c.rank() == 2 { 0 } else { 100 + c.rank() * 37 };
+            let mine = rank_chunk(c.rank(), len);
+            let mut m = Metrics::default();
+            gather(
+                c,
+                &mine,
+                1,
+                &Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(eb)),
+                &mut m,
+            )
+            .unwrap()
+        });
+        let want: Vec<f32> = (0..n)
+            .flat_map(|r| rank_chunk(r, if r == 2 { 0 } else { 100 + r * 37 }))
+            .collect();
+        let root_out = out[1].as_ref().unwrap();
+        assert_eq!(root_out.len(), want.len());
+        for (a, b) in root_out.iter().zip(&want) {
+            assert!((a - b).abs() as f64 <= eb * 1.001 + 1e-6);
         }
     }
 }

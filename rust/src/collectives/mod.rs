@@ -34,6 +34,30 @@
 //! merges its timings into the caller's `Metrics`. They are fine for
 //! one-shot calls; anything iterated should hold a [`CollCtx`].
 //!
+//! ## The zero-copy receive path
+//!
+//! Every collective's receive side follows one discipline —
+//! **lease → recv_into → decode in place**:
+//!
+//! 1. wire buffers are leased from the transport's
+//!    [`crate::transport::PacketPool`] (never freshly allocated);
+//! 2. [`crate::transport::Transport::recv_into`] delivers each arrived
+//!    packet by buffer *swap* — the payload's allocation changes hands
+//!    and the old capacity returns to the pool;
+//! 3. the frame decodes **directly into its final window** of the
+//!    output via the placement kernel
+//!    ([`crate::compress::Compressor::decompress_into_slice`], routed
+//!    through the capability-aware `CollState::decode_into_slice`), so
+//!    no decoded value is ever staged and re-copied.
+//!
+//! After one warm-up call, an iterated ring allgather therefore performs
+//! **zero byte-buffer allocations and zero post-decode copies** on the
+//! receive path — observable through [`PoolStats`]
+//! (`placement_decodes` / `staged_decodes`) and
+//! [`crate::transport::PacketPoolStats`]. Codecs without a native
+//! placement kernel (SZx, ZFP) stage through pooled scratch instead, so
+//! they stay allocation-free even though they pay one copy.
+//!
 //! ## The fused decompress–reduce receive path
 //!
 //! The reduction collectives ([`reduce_scatter`], [`reduce`], and through
@@ -225,6 +249,20 @@ impl<'a> Communicator<'a> {
     pub fn transport(&mut self) -> &mut dyn Transport {
         self.t
     }
+    /// Lease a wire buffer from the transport's packet pool (see
+    /// [`crate::transport::PacketPool`]). Pair with
+    /// [`Communicator::recycle`].
+    pub fn lease(&mut self) -> Vec<u8> {
+        self.t.lease()
+    }
+    /// Return a wire buffer to the transport's packet pool.
+    pub fn recycle(&mut self, buf: Vec<u8>) {
+        self.t.recycle(buf)
+    }
+    /// The transport's packet-pool counters.
+    pub fn packet_stats(&self) -> crate::transport::PacketPoolStats {
+        self.t.packet_stats()
+    }
     /// Synchronise all ranks.
     pub fn barrier(&mut self) -> Result<()> {
         let gen = self.fresh_tags(1);
@@ -293,6 +331,26 @@ pub fn bytes_to_f32s_into(b: &[u8], out: &mut Vec<f32>) -> Result<usize> {
     Ok(b.len() / 4)
 }
 
+/// Decode a little-endian `f32` wire buffer straight into its final
+/// window of the output — the `Plain` mode's placement decode. The buffer
+/// must hold exactly `out.len()` values. Returns the decoded count.
+pub(crate) fn bytes_to_f32s_into_slice(b: &[u8], out: &mut [f32]) -> Result<usize> {
+    if b.len() % 4 != 0 {
+        return Err(crate::Error::corrupt(format!("byte length {} not 4-aligned", b.len())));
+    }
+    if b.len() / 4 != out.len() {
+        return Err(crate::Error::corrupt(format!(
+            "wire buffer holds {} values but destination holds {}",
+            b.len() / 4,
+            out.len()
+        )));
+    }
+    for (slot, c) in out.iter_mut().zip(b.chunks_exact(4)) {
+        *slot = f32::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(out.len())
+}
+
 /// Fold a little-endian `f32` wire buffer straight into `acc` — the
 /// `Plain` mode's fused receive side: decode and reduce in one pass with
 /// no intermediate vector. The buffer must hold exactly `acc.len()`
@@ -329,17 +387,39 @@ pub(crate) fn exchange_sizes(
     let mut sizes = vec![0u64; n];
     sizes[me] = mine;
     let ring = crate::topology::ring(me, n);
+    let mut buf = comm.t.lease();
     for round in 0..n.saturating_sub(1) {
         let send_idx = crate::topology::ring_send_chunk(me, round, n);
         let recv_idx = crate::topology::ring_recv_chunk(me, round, n);
         comm.t.send(ring.next, tag_base + round as u64, &sizes[send_idx].to_le_bytes())?;
-        let m = comm.t.recv(ring.prev, tag_base + round as u64)?;
+        comm.t.recv_into(ring.prev, tag_base + round as u64, &mut buf)?;
         sizes[recv_idx] =
-            u64::from_le_bytes(m.as_slice().try_into().map_err(|_| {
+            u64::from_le_bytes(buf.as_slice().try_into().map_err(|_| {
                 crate::Error::corrupt("size exchange message must be 8 bytes")
             })?);
     }
+    comm.t.recycle(buf);
     Ok(sizes)
+}
+
+/// Maximum tags a single segmented transfer may consume (tag arithmetic
+/// budget per round). Transfers needing more segments are rejected by
+/// [`send_segmented`] / [`recv_segmented_into`] — silently exceeding the
+/// span would collide with the next round's (or the next collective's)
+/// tag space and cross-match messages.
+pub(crate) const SEG_TAG_SPAN: u64 = 1 << 20;
+
+/// Number of segments a `total`-byte transfer splits into, validated
+/// against the [`SEG_TAG_SPAN`] tag budget.
+fn segment_count(total: usize, segment: usize) -> Result<usize> {
+    let nseg = total.div_ceil(segment.max(1)).max(1);
+    if nseg as u64 > SEG_TAG_SPAN {
+        return Err(crate::Error::corrupt(format!(
+            "segmented transfer of {total} bytes at segment {segment} needs {nseg} tags, \
+             exceeding the per-round budget of {SEG_TAG_SPAN}"
+        )));
+    }
+    Ok(nseg)
 }
 
 /// Send `data` as fixed-size pipeline segments (§3.5.1's balanced
@@ -351,6 +431,7 @@ pub(crate) fn send_segmented(
     data: &[u8],
     segment: usize,
 ) -> Result<u64> {
+    segment_count(data.len(), segment)?;
     let mut sent = 0u64;
     if data.is_empty() {
         t.send(to, tag_base, &[])?;
@@ -363,23 +444,31 @@ pub(crate) fn send_segmented(
     Ok(sent)
 }
 
-/// Receive a `total`-byte message sent by [`send_segmented`].
-pub(crate) fn recv_segmented(
+/// Receive a `total`-byte message sent by [`send_segmented`] into `out`
+/// (overwritten). Single-segment transfers — the common case for
+/// compressed chunks under the pipeline size — arrive by zero-copy buffer
+/// swap ([`Transport::recv_into`]); multi-segment transfers assemble into
+/// `out` through one pooled segment buffer.
+pub(crate) fn recv_segmented_into(
     t: &mut dyn Transport,
     from: usize,
     tag_base: u64,
     total: usize,
     segment: usize,
-) -> Result<Vec<u8>> {
-    if total == 0 {
-        t.recv(from, tag_base)?;
-        return Ok(Vec::new());
-    }
-    let mut out = Vec::with_capacity(total);
-    let nseg = total.div_ceil(segment.max(1));
-    for i in 0..nseg {
-        let seg = t.recv(from, tag_base + i as u64)?;
-        out.extend_from_slice(&seg);
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    let nseg = segment_count(total, segment)?;
+    if nseg == 1 {
+        t.recv_into(from, tag_base, out)?;
+    } else {
+        out.clear();
+        out.reserve(total);
+        let mut seg_buf = t.lease();
+        for i in 0..nseg {
+            t.recv_into(from, tag_base + i as u64, &mut seg_buf)?;
+            out.extend_from_slice(&seg_buf);
+        }
+        t.recycle(seg_buf);
     }
     if out.len() != total {
         return Err(crate::Error::corrupt(format!(
@@ -387,12 +476,24 @@ pub(crate) fn recv_segmented(
             out.len()
         )));
     }
-    Ok(out)
+    Ok(())
 }
 
-/// Maximum tags a single segmented transfer may consume (tag arithmetic
-/// budget per round).
-pub(crate) const SEG_TAG_SPAN: u64 = 1 << 20;
+/// Receive a `total`-byte message sent by [`send_segmented`] into a fresh
+/// vector. Wrapper over [`recv_segmented_into`]; the collectives lease a
+/// wire buffer and use the `_into` form.
+#[cfg(test)]
+pub(crate) fn recv_segmented(
+    t: &mut dyn Transport,
+    from: usize,
+    tag_base: u64,
+    total: usize,
+    segment: usize,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    recv_segmented_into(t, from, tag_base, total, segment, &mut out)?;
+    Ok(out)
+}
 
 #[cfg(test)]
 mod tests {
@@ -463,6 +564,44 @@ mod tests {
         });
         assert_eq!(out[1].len(), 1000);
         assert_eq!(out[1][999], (999u32 & 0xff) as u8);
+    }
+
+    #[test]
+    fn segmented_transfer_rejects_tag_budget_overflow() {
+        // Satellite regression: a transfer needing more than SEG_TAG_SPAN
+        // segments used to run straight past its tag budget and collide
+        // with the next round's tags; now both sides refuse up front
+        // (before any message moves).
+        let mut eps = crate::transport::memchan::MemFabric::endpoints(2);
+        let too_many = (SEG_TAG_SPAN as usize + 1) * 2; // 2-byte segments
+        let data = vec![0u8; too_many];
+        assert!(send_segmented(&mut eps[0], 1, 0, &data, 2).is_err());
+        let mut out = Vec::new();
+        assert!(recv_segmented_into(&mut eps[1], 0, 0, too_many, 2, &mut out).is_err());
+        // The largest in-budget segment count is still accepted.
+        assert!(segment_count(SEG_TAG_SPAN as usize * 2, 2).is_ok());
+        assert!(segment_count(SEG_TAG_SPAN as usize * 2 + 1, 2).is_err());
+    }
+
+    #[test]
+    fn recv_segmented_single_segment_is_a_buffer_swap() {
+        // total <= segment: the payload must arrive through the zero-copy
+        // recv_into path — warm packet-pool allocations freeze.
+        let mut eps = MemFabric::endpoints(2);
+        let (a, b) = eps.split_at_mut(1);
+        let (t0, t1) = (&mut a[0], &mut b[0]);
+        let mut wire = t1.lease();
+        let mut warm = 0;
+        for i in 0..4u64 {
+            send_segmented(t0, 1, i * 10, &[9u8; 512], usize::MAX).unwrap();
+            recv_segmented_into(t1, 0, i * 10, 512, usize::MAX, &mut wire).unwrap();
+            assert_eq!(wire.len(), 512);
+            if i == 1 {
+                warm = t1.packet_stats().allocated;
+            }
+        }
+        assert_eq!(t1.packet_stats().allocated, warm, "warm swaps must not allocate");
+        t1.recycle(wire);
     }
 
     #[test]

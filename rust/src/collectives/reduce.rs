@@ -60,12 +60,13 @@ pub(crate) fn reduce_with(
     m.raw_bytes += (input.len() * 4) as u64;
 
     // Fold children (deepest subtree first = reverse round order). Each
-    // child's partial is consumed by the fused receive kernel — it is
-    // never materialized as a vector.
+    // child's partial arrives in a leased wire buffer and is consumed by
+    // the fused receive kernel — it is never materialized as a vector.
+    let mut msg = comm.t.lease();
     for s in child_steps.iter().rev() {
         let tag = base + s.round as u64;
         let t0 = std::time::Instant::now();
-        let msg = comm.t.recv(s.peer, tag)?;
+        comm.t.recv_into(s.peer, tag, &mut msg)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
         match st.mode.algo {
@@ -81,6 +82,7 @@ pub(crate) fn reduce_with(
             }
         }
     }
+    comm.t.recycle(msg);
 
     if me == root {
         op.finish(&mut acc, n);

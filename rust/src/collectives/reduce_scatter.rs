@@ -78,6 +78,7 @@ pub(crate) fn reduce_scatter_with(
     match st.mode.algo {
         Algo::Plain => {
             let mut send_buf = st.pool.take_bytes();
+            let mut got = comm.t.lease();
             for t in 0..n - 1 {
                 let s = &ranges[ring_send_chunk(me, t, n)];
                 let r = &ranges[ring_recv_chunk(me, t, n)];
@@ -86,7 +87,7 @@ pub(crate) fn reduce_scatter_with(
                 let t0 = std::time::Instant::now();
                 comm.t.send(nb.next, base + t as u64, &send_buf)?;
                 m.bytes_sent += send_buf.len() as u64;
-                let got = comm.t.recv(nb.prev, base + t as u64)?;
+                comm.t.recv_into(nb.prev, base + t as u64, &mut got)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 // Fold straight from the wire bytes — no partial vector.
@@ -95,9 +96,11 @@ pub(crate) fn reduce_scatter_with(
                 m.add(Phase::Compute, t0.elapsed().as_secs_f64());
             }
             st.pool.put_bytes(send_buf);
+            comm.t.recycle(got);
         }
         Algo::Cprp2p | Algo::CColl => {
             let mut frame = st.pool.take_bytes();
+            let mut got = comm.t.lease();
             for t in 0..n - 1 {
                 let s = &ranges[ring_send_chunk(me, t, n)];
                 let r = &ranges[ring_recv_chunk(me, t, n)];
@@ -108,7 +111,7 @@ pub(crate) fn reduce_scatter_with(
                 let t0 = std::time::Instant::now();
                 comm.t.send(nb.next, base + t as u64, &frame)?;
                 m.bytes_sent += frame.len() as u64;
-                let got = comm.t.recv(nb.prev, base + t as u64)?;
+                comm.t.recv_into(nb.prev, base + t as u64, &mut got)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 // Fused decompress–reduce: the frame folds straight into
@@ -118,6 +121,7 @@ pub(crate) fn reduce_scatter_with(
                 m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
             st.pool.put_bytes(frame);
+            comm.t.recycle(got);
         }
         Algo::Zccl => {
             reduce_scatter_zccl(comm, st, &mut acc, &ranges, op, base, m)?;
@@ -150,6 +154,7 @@ fn reduce_scatter_zccl(
     let pipe = st.pipe.clone();
     let mode = st.mode;
     let mut frame = st.pool.take_bytes();
+    let mut got = comm.t.lease();
 
     for t in 0..n - 1 {
         let s = &ranges[ring_send_chunk(me, t, n)];
@@ -184,12 +189,13 @@ fn reduce_scatter_zccl(
         let t0 = std::time::Instant::now();
         comm.t.send(nb.next, tag, &frame)?;
         m.bytes_sent += frame.len() as u64;
-        let got = loop {
-            if comm.t.try_complete(&mut h)? {
-                break h.take().expect("completed");
-            }
-            std::hint::spin_loop();
-        };
+        // Pool-aware completion: the payload lands in the leased wire
+        // buffer by swap. Bounded spin then yield, so a straggling peer
+        // does not pin a core.
+        let mut backoff = crate::transport::Backoff::new();
+        while !comm.t.try_complete_into(&mut h, &mut got)? {
+            backoff.snooze();
+        }
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
 
@@ -211,6 +217,7 @@ fn reduce_scatter_zccl(
         }
     }
     st.pool.put_bytes(frame);
+    comm.t.recycle(got);
     Ok(())
 }
 

@@ -12,10 +12,16 @@
 //!   individually; interior ranks forward the per-rank frames verbatim
 //!   and decompress only their own. One compression per chunk, one
 //!   decompression per rank, single-`ê` error.
+//!
+//! Receive side (parent module docs): bundles arrive into leased wire
+//! buffers and are parsed **in place** — per-rank frames are ranges into
+//! the arrival buffer, never copied out — and the only decompression is
+//! a placement decode of our own chunk into the once-sized result.
 
 use super::ctx::CollState;
-use super::{bytes_to_f32s, chunk_ranges, f32s_to_bytes, Algo, Communicator, Mode};
+use super::{bytes_to_f32s_into_slice, chunk_ranges, f32s_to_bytes_into, Algo, Communicator, Mode};
 use crate::compress::bits::le;
+use crate::compress::fzlight::frame_u32;
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{binomial_bcast, binomial_subtree, tree_rounds};
 use crate::{Error, Result};
@@ -76,57 +82,77 @@ fn scatter_values(
     let (recv_step, send_steps) = binomial_bcast(me, root, n);
     let my_subtree = binomial_subtree(me, root, n);
 
-    // Obtain (total, per-subtree-rank values).
-    let (total, mut chunks): (usize, Vec<Vec<f32>>) = if me == root {
+    // Our subtree's values live either in the caller's buffer (root) or
+    // in pooled scratch the arriving block decodes into (non-root);
+    // `offsets[i]` is subtree member i's slice of that storage.
+    let mut values_buf = st.pool.take_f32();
+    let (total, values, offsets): (usize, &[f32], Vec<std::ops::Range<usize>>) = if me == root {
         let d = data.unwrap();
         m.raw_bytes += (d.len() * 4) as u64;
         let ranges = chunk_ranges(d.len(), n);
-        (d.len(), my_subtree.iter().map(|&r| d[ranges[r].clone()].to_vec()).collect())
+        (d.len(), d, my_subtree.iter().map(|&r| ranges[r].clone()).collect())
     } else {
         let step = recv_step.expect("non-root receives");
+        let mut msg = comm.t.lease();
         let t0 = std::time::Instant::now();
-        let msg = comm.t.recv(step.peer, base + step.round as u64)?;
+        comm.t.recv_into(step.peer, base + step.round as u64, &mut msg)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
         let mut pos = 0usize;
         let total = le::get_u64(&msg, &mut pos)? as usize;
         let body = &msg[pos..];
-        let values = match st.mode.algo {
-            Algo::Plain => bytes_to_f32s(body)?,
-            _ => {
-                let mut dec = Vec::new();
-                let t0 = std::time::Instant::now();
-                st.decode_into(body, &mut dec)?;
-                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-                dec
-            }
-        };
-        // Split the concatenated block into per-subtree-rank chunks.
+        // The block holds our whole subtree's values back to back; its
+        // layout is fixed by `total`, so the storage is sized once and
+        // the block decodes straight into it.
         let ranges = chunk_ranges(total, n);
-        let mut chunks = Vec::with_capacity(my_subtree.len());
+        let mut offsets = Vec::with_capacity(my_subtree.len());
         let mut off = 0usize;
         for &r in &my_subtree {
-            let len = ranges[r].len();
-            if off + len > values.len() {
-                return Err(Error::corrupt("scatter block shorter than subtree"));
-            }
-            chunks.push(values[off..off + len].to_vec());
-            off += len;
+            offsets.push(off..off + ranges[r].len());
+            off += ranges[r].len();
         }
-        (total, chunks)
+        // Validate the expected value count against the block actually
+        // received BEFORE sizing the destination — a corrupt `total`
+        // must fail cleanly, not commit pages.
+        let physical = match st.mode.algo {
+            Algo::Plain => body.len() / 4,
+            _ => crate::compress::checked_count(body)?,
+        };
+        if physical != off {
+            return Err(Error::corrupt(format!(
+                "scatter block holds {physical} values but the subtree expects {off}"
+            )));
+        }
+        values_buf.resize(off, 0.0);
+        match st.mode.algo {
+            Algo::Plain => {
+                bytes_to_f32s_into_slice(body, &mut values_buf)
+                    .map_err(|_| Error::corrupt("scatter block shorter than subtree"))?;
+            }
+            _ => {
+                let t0 = std::time::Instant::now();
+                st.decode_into_slice(body, &mut values_buf)
+                    .map_err(|e| Error::corrupt(format!("scatter block: {e}")))?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+            }
+        }
+        comm.t.recycle(msg);
+        (total, values_buf.as_slice(), offsets)
     };
 
+    let mut block = st.pool.take_f32();
+    let mut wire = st.pool.take_bytes();
     for s in send_steps {
         let child_subtree = binomial_subtree(s.peer, root, n);
-        let mut block: Vec<f32> = Vec::new();
+        block.clear();
         for r in &child_subtree {
             let idx = my_subtree.iter().position(|x| x == r).expect("child in subtree");
-            block.extend_from_slice(&chunks[idx]);
+            block.extend_from_slice(&values[offsets[idx].clone()]);
         }
-        let mut wire = Vec::with_capacity(12 + block.len() * 4);
+        wire.clear();
         le::put_u64(&mut wire, total as u64);
         match st.mode.algo {
-            Algo::Plain => wire.extend_from_slice(&f32s_to_bytes(&block)),
+            Algo::Plain => f32s_to_bytes_into(&block, &mut wire),
             _ => {
                 let t0 = std::time::Instant::now();
                 st.compress_into(&block, &mut wire)?;
@@ -138,8 +164,12 @@ fn scatter_values(
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_sent += wire.len() as u64;
     }
+    st.pool.put_bytes(wire);
+    st.pool.put_f32(block);
 
-    Ok(std::mem::take(&mut chunks[0]))
+    let out = values[offsets[0].clone()].to_vec();
+    st.pool.put_f32(values_buf);
+    Ok(out)
 }
 
 /// CColl / ZCCL path: per-rank compressed *frames* travel the tree
@@ -157,78 +187,105 @@ fn scatter_frames(
     let (recv_step, send_steps) = binomial_bcast(me, root, n);
     let my_subtree = binomial_subtree(me, root, n);
 
-    let (total, mut frames): (usize, Vec<Vec<u8>>) = if me == root {
-        let d = data.unwrap();
-        m.raw_bytes += (d.len() * 4) as u64;
-        let ranges = chunk_ranges(d.len(), n);
-        let mut fs = Vec::with_capacity(my_subtree.len());
-        for &r in &my_subtree {
-            let chunk = &d[ranges[r].clone()];
-            let mut f = Vec::new();
+    // One contiguous store for our subtree's frames: the root packs the
+    // frames it compresses back to back (append semantics), a non-root
+    // rank keeps the arrival buffer itself — frames are RANGES into the
+    // store, never copied out of it.
+    let (total, store, frames, pooled): (usize, Vec<u8>, Vec<std::ops::Range<usize>>, bool) =
+        if me == root {
+            let d = data.unwrap();
+            m.raw_bytes += (d.len() * 4) as u64;
+            let ranges = chunk_ranges(d.len(), n);
+            let mut buf = st.pool.take_bytes();
+            let mut frames = Vec::with_capacity(my_subtree.len());
+            for &r in &my_subtree {
+                let start = buf.len();
+                let t0 = std::time::Instant::now();
+                st.compress_into(&d[ranges[r].clone()], &mut buf)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+                frames.push(start..buf.len());
+            }
+            (d.len(), buf, frames, true)
+        } else {
+            let step = recv_step.expect("non-root receives");
+            let mut msg = comm.t.lease();
             let t0 = std::time::Instant::now();
-            st.compress_into(chunk, &mut f)?;
-            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
-            fs.push(f);
-        }
-        (d.len(), fs)
-    } else {
-        let step = recv_step.expect("non-root receives");
-        let t0 = std::time::Instant::now();
-        let msg = comm.t.recv(step.peer, base + step.round as u64)?;
-        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-        m.bytes_recv += msg.len() as u64;
-        parse_bundle(&msg, my_subtree.len())?
-    };
+            comm.t.recv_into(step.peer, base + step.round as u64, &mut msg)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            m.bytes_recv += msg.len() as u64;
+            let (total, frames) = parse_bundle(&msg, my_subtree.len())?;
+            (total, msg, frames, false)
+        };
 
+    let mut wire = st.pool.take_bytes();
     for s in send_steps {
         let child_subtree = binomial_subtree(s.peer, root, n);
         let parts: Vec<&[u8]> = child_subtree
             .iter()
             .map(|r| {
                 let idx = my_subtree.iter().position(|x| x == r).expect("child in subtree");
-                frames[idx].as_slice()
+                &store[frames[idx].clone()]
             })
             .collect();
-        let wire = encode_bundle(total, &parts);
+        wire.clear();
+        encode_bundle_into(total, &parts, &mut wire)?;
         let t0 = std::time::Instant::now();
         comm.t.send(s.peer, base + s.round as u64, &wire)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_sent += wire.len() as u64;
     }
+    st.pool.put_bytes(wire);
 
-    // Decompress ONLY our own chunk, exactly once.
-    let mine = std::mem::take(&mut frames[0]);
-    let mut out = Vec::new();
-    let t0 = std::time::Instant::now();
-    st.decode_into(&mine, &mut out)?;
-    m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+    // Placement-decode ONLY our own chunk, exactly once, straight into
+    // the once-sized result. A corrupt `total` must fail against the
+    // frame's physical size before the destination is allocated.
     let want_len = chunk_ranges(total, n)[me].len();
-    if out.len() != want_len {
+    let physical = crate::compress::checked_count(&store[frames[0].clone()])?;
+    if physical != want_len {
         return Err(Error::corrupt(format!(
-            "scatter rank {me}: got {} values, want {want_len}",
-            out.len()
+            "scatter rank {me}: frame holds {physical} values, want {want_len}"
         )));
+    }
+    let mut out = vec![0.0f32; want_len];
+    let t0 = std::time::Instant::now();
+    st.decode_into_slice(&store[frames[0].clone()], &mut out)
+        .map_err(|e| Error::corrupt(format!("scatter rank {me}: {e}")))?;
+    m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+    if pooled {
+        st.pool.put_bytes(store);
+    } else {
+        comm.t.recycle(store);
     }
     Ok(out)
 }
 
 /// Bundle wire format: `u64 total`, `u32 count`, `u32 sizes[count]`,
-/// payloads.
-fn encode_bundle(total: usize, payloads: &[&[u8]]) -> Vec<u8> {
-    let body: usize = payloads.iter().map(|p| p.len()).sum();
-    let mut out = Vec::with_capacity(12 + 4 * payloads.len() + body);
-    le::put_u64(&mut out, total as u64);
-    le::put_u32(&mut out, payloads.len() as u32);
+/// payloads. Appended to `out`. Payload lengths ride u32 fields, so
+/// oversized frames are an explicit error (same [`frame_u32`] guard the
+/// codec frame tables use), not a silent wrap — validated before `out`
+/// is touched.
+fn encode_bundle_into(total: usize, payloads: &[&[u8]], out: &mut Vec<u8>) -> Result<()> {
+    let count = frame_u32(payloads.len(), "scatter bundle count")?;
+    let mut sizes = Vec::with_capacity(payloads.len());
     for p in payloads {
-        le::put_u32(&mut out, p.len() as u32);
+        sizes.push(frame_u32(p.len(), "scatter bundle payload size")?);
+    }
+    let body: usize = payloads.iter().map(|p| p.len()).sum();
+    out.reserve(12 + 4 * payloads.len() + body);
+    le::put_u64(out, total as u64);
+    le::put_u32(out, count);
+    for s in sizes {
+        le::put_u32(out, s);
     }
     for p in payloads {
         out.extend_from_slice(p);
     }
-    out
+    Ok(())
 }
 
-fn parse_bundle(msg: &[u8], expect: usize) -> Result<(usize, Vec<Vec<u8>>)> {
+/// Parse a bundle **in place**: returns the total element count and each
+/// payload's range within `msg` (no copies).
+fn parse_bundle(msg: &[u8], expect: usize) -> Result<(usize, Vec<std::ops::Range<usize>>)> {
     let mut pos = 0usize;
     let total = le::get_u64(msg, &mut pos)? as usize;
     let count = le::get_u32(msg, &mut pos)? as usize;
@@ -245,7 +302,7 @@ fn parse_bundle(msg: &[u8], expect: usize) -> Result<(usize, Vec<Vec<u8>>)> {
         if end > msg.len() {
             return Err(Error::corrupt("bundle payload past end"));
         }
-        payloads.push(msg[pos..end].to_vec());
+        payloads.push(pos..end);
         pos = end;
     }
     Ok((total, payloads))

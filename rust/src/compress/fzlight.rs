@@ -507,6 +507,46 @@ fn walk_frame_chunks(
     Ok(())
 }
 
+/// Parse an fZ-light frame for a placement decode into a destination of
+/// `out_len` values: [`frame_chunks`] + destination-length check +
+/// [`validate_frame_count`], the shared prelude of the serial and
+/// multithreaded in-place kernels. Returns
+/// `(chunk_values, eb_abs, n, payload ranges)`.
+pub(crate) fn frame_chunks_for_slice(
+    bytes: &[u8],
+    out_len: usize,
+) -> Result<(usize, f64, usize, Vec<std::ops::Range<usize>>)> {
+    let (chunk_values, eb_abs, n, ranges) = frame_chunks(bytes)?;
+    if out_len != n {
+        return Err(Error::invalid(format!(
+            "placement decode: frame holds {n} values but destination holds {out_len}"
+        )));
+    }
+    validate_frame_count(&ranges, chunk_values, n)?;
+    Ok((chunk_values, eb_abs, n, ranges))
+}
+
+/// Placement decode of a whole fZ-light frame: every chunk reconstructs
+/// straight into its disjoint window of `out` (`out.len()` must equal the
+/// frame's element count), with `progress` running after each chunk — the
+/// §3.5.2 hook, shared by [`FzLight`] (no-op hook) and
+/// [`super::pipe::PipeFzLight`] (polls outstanding communication).
+///
+/// On `Err`, a prefix of `out` may already be written — the window is
+/// poisoned (see [`Compressor::decompress_into_slice`] error semantics).
+pub(crate) fn decompress_frame_into_slice(
+    bytes: &[u8],
+    out: &mut [f32],
+    progress: &mut dyn FnMut(usize),
+) -> Result<usize> {
+    let (chunk_values, eb_abs, n, ranges) = frame_chunks_for_slice(bytes, out.len())?;
+    let twoeb = 2.0 * eb_abs;
+    walk_frame_chunks(bytes, &ranges, chunk_values, n, out, progress, &mut |p, cn, d| {
+        decompress_chunk_into_slice(p, cn, twoeb, d)
+    })?;
+    Ok(n)
+}
+
 /// Walk an fZ-light frame applying the fused decompress–reduce kernel
 /// chunk by chunk, calling `progress` (with the values folded so far)
 /// after each chunk — the §3.5.2 hook, shared by [`FzLight`] (no-op
@@ -571,6 +611,14 @@ impl Compressor for FzLight {
                 Err(e)
             }
         }
+    }
+
+    fn decompress_into_slice(&self, bytes: &[u8], out: &mut [f32]) -> Result<usize> {
+        decompress_frame_into_slice(bytes, out, &mut |_| {})
+    }
+
+    fn supports_placement_decode(&self) -> bool {
+        true
     }
 
     fn decompress_fold_into(&self, bytes: &[u8], op: ReduceOp, acc: &mut [f32]) -> Result<usize> {

@@ -30,6 +30,14 @@
 //! assert_eq!(restored.len(), data.len());
 //! ```
 //!
+//! The receive-side counterpart is the **placement decode**
+//! [`Compressor::decompress_into_slice`]: values reconstruct directly at
+//! their final positions in a caller-carved window, so the movement
+//! collectives never stage-and-copy a decoded frame. fZ-light (and its
+//! PIPE / multithreaded wrappers) run native in-place kernels; SZx and
+//! ZFP fall back to decompress-then-copy and say so via
+//! [`Compressor::supports_placement_decode`].
+//!
 //! ## Codecs
 //!
 //! - [`fzlight`] — `fZ-light` (a.k.a. SZp): fused 1-D Lorenzo prediction +
@@ -63,7 +71,8 @@ pub use multithread::MtCompressor;
 pub use pipe::PipeFzLight;
 pub use szx::Szx;
 pub use traits::{
-    peek_codec, Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound,
+    checked_count, peek_codec, read_header, Compressed, CompressionStats, Compressor,
+    CompressorKind, ErrorBound, Header,
 };
 pub use zfp_like::{ZfpAbs, ZfpFixedRate};
 

@@ -129,6 +129,26 @@ impl Compressor for MtCompressor {
         }
     }
 
+    fn decompress_into_slice(&self, bytes: &[u8], out: &mut [f32]) -> Result<usize> {
+        match self.kind {
+            CompressorKind::FzLight => {
+                let (chunk_values, eb_abs, n, ranges) =
+                    fzlight::frame_chunks_for_slice(bytes, out.len())?;
+                // Chunks decode in parallel straight into their disjoint
+                // windows of the destination — same walk as the plain MT
+                // decode, minus the Vec bookkeeping. On Err an arbitrary
+                // subset of windows is written (poisoned; see the trait).
+                mt_decode_chunks(bytes, &ranges, chunk_values, n, 2.0 * eb_abs, self.threads, out)?;
+                Ok(n)
+            }
+            other => super::build(other).decompress_into_slice(bytes, out),
+        }
+    }
+
+    fn supports_placement_decode(&self) -> bool {
+        self.kind == CompressorKind::FzLight
+    }
+
     fn decompress_fold_into(&self, bytes: &[u8], op: ReduceOp, acc: &mut [f32]) -> Result<usize> {
         match self.kind {
             CompressorKind::FzLight => {

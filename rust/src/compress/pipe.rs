@@ -102,6 +102,23 @@ impl PipeFzLight {
         Ok(n)
     }
 
+    /// Placement decode with the §3.5.2 progress hook: each chunk
+    /// reconstructs straight into its final window of `out` (`out.len()`
+    /// must equal the frame's element count), and `progress` runs between
+    /// chunks so the collective layer can keep polling outstanding
+    /// nonblocking communication while it decodes into place.
+    ///
+    /// Error semantics match [`Compressor::decompress_into_slice`]: on
+    /// `Err` a prefix of `out` may already be written — discard it.
+    pub fn decompress_into_slice_with_progress(
+        &self,
+        bytes: &[u8],
+        out: &mut [f32],
+        progress: &mut dyn FnMut(usize),
+    ) -> Result<usize> {
+        fzlight::decompress_frame_into_slice(bytes, out, progress)
+    }
+
     /// The fused decompress–reduce kernel with the §3.5.2 progress hook:
     /// each chunk's reconstructed values are folded straight into `acc`
     /// via `op`, and `progress` runs between chunks so the collective
@@ -135,6 +152,12 @@ impl Compressor for PipeFzLight {
     }
     fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
         self.decompress_into_with_progress(bytes, out, &mut |_| {})
+    }
+    fn decompress_into_slice(&self, bytes: &[u8], out: &mut [f32]) -> Result<usize> {
+        self.decompress_into_slice_with_progress(bytes, out, &mut |_| {})
+    }
+    fn supports_placement_decode(&self) -> bool {
+        true
     }
     fn decompress_fold_into(&self, bytes: &[u8], op: ReduceOp, acc: &mut [f32]) -> Result<usize> {
         self.decompress_fold_into_with_progress(bytes, op, acc, &mut |_| {})

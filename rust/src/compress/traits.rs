@@ -105,6 +105,26 @@ impl CompressorKind {
         })
     }
 
+    /// Upper bound on how many values this codec can encode per frame
+    /// body byte — the invariant [`checked_count`] enforces before a
+    /// receiver sizes a destination from a frame header. Each bound
+    /// lives here, next to the codec id, and leaves ~2× headroom over
+    /// the encoder's actual best case; a codec change that beats its
+    /// bound must raise it in the same commit.
+    pub fn max_values_per_byte(self) -> usize {
+        match self {
+            // All-constant chunks: 1 tag byte per 32-value block
+            // (≈32 v/B, amortizing the per-chunk outlier + table entry).
+            CompressorKind::FzLight => 64,
+            // Constant blocks: 5 bytes (tag + f32 mean) per 128 values
+            // (≈25.6 v/B).
+            CompressorKind::Szx => 64,
+            // Best case: 9 bytes (lo, hi, bits=0) per 64-value block
+            // (≈7.1 v/B).
+            CompressorKind::ZfpAbs | CompressorKind::ZfpFixedRate => 16,
+        }
+    }
+
     /// Short display name used in benchmark tables.
     pub fn name(self) -> &'static str {
         match self {
@@ -208,6 +228,49 @@ pub trait Compressor: Send + Sync {
     /// returning how many were appended. Callers reusing a scratch buffer
     /// should `clear()` it first.
     fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize>;
+
+    /// **Placement decode**: reconstruct the frame's values directly at
+    /// their final positions in `out`, returning the element count —
+    /// the movement collectives' receive kernel. `out.len()` must equal
+    /// the frame's element count (the caller carves the destination
+    /// window out of the assembled output). Pairing this with a pooled
+    /// [`crate::transport::Transport::recv_into`] makes the receive path
+    /// copy-free: wire bytes land once, decoded values land once.
+    ///
+    /// The default implementation is decompress-then-copy, correct for
+    /// every codec. Codecs whose frame layout permits it (fZ-light and
+    /// its pipelined / multithreaded wrappers) override it with a true
+    /// in-place kernel — each chunk decodes straight into its disjoint
+    /// window — and advertise that via
+    /// [`Compressor::supports_placement_decode`].
+    ///
+    /// # Error semantics
+    ///
+    /// On `Err`, `out` may already contain decoded values from an
+    /// unspecified subset of the frame's chunks (a prefix for the serial
+    /// kernels; any subset for the multithreaded one). Callers must treat
+    /// the window as poisoned and discard it (the collectives abandon the
+    /// whole call).
+    fn decompress_into_slice(&self, bytes: &[u8], out: &mut [f32]) -> Result<usize> {
+        let mut tmp = Vec::with_capacity(out.len());
+        let n = self.decompress_into(bytes, &mut tmp)?;
+        if n != out.len() {
+            return Err(Error::invalid(format!(
+                "placement decode: frame holds {n} values but destination holds {}",
+                out.len()
+            )));
+        }
+        out.copy_from_slice(&tmp);
+        Ok(n)
+    }
+
+    /// Whether [`Compressor::decompress_into_slice`] is a native in-place
+    /// kernel (`true`) or the decompress-then-copy default (`false`). The
+    /// collective layer routes codecs without a native kernel through its
+    /// pooled scratch instead of the default impl's per-call temporary.
+    fn supports_placement_decode(&self) -> bool {
+        false
+    }
 
     /// Decode a frame and fold every reconstructed value straight into
     /// `acc` (`acc[i] = op(acc[i], x̂[i])`), returning the element count —
@@ -317,6 +380,30 @@ pub fn peek_codec(bytes: &[u8]) -> Result<CompressorKind> {
     Ok(read_header(bytes)?.codec)
 }
 
+/// Parse the header and sanity-check its element count against the
+/// frame's *physical* size, for callers that size a destination buffer
+/// **before** decoding: a corrupt or forged header claiming billions of
+/// values in a tiny frame is rejected here (cheaply, like PR 2's
+/// `validate_frame_count`) instead of committing pages for a bogus
+/// length. The density bound is the header codec's own
+/// [`CompressorKind::max_values_per_byte`]; codec-specific decoders
+/// still run their exact validation.
+pub fn checked_count(bytes: &[u8]) -> Result<usize> {
+    let h = read_header(bytes)?;
+    let cap = bytes
+        .len()
+        .saturating_sub(HEADER_LEN)
+        .saturating_mul(h.codec.max_values_per_byte());
+    if h.n > cap {
+        return Err(Error::corrupt(format!(
+            "frame claims {} values but its {} bytes can hold at most {cap}",
+            h.n,
+            bytes.len()
+        )));
+    }
+    Ok(h.n)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,6 +440,37 @@ mod tests {
         let flat = vec![3.0f32; 8];
         assert_eq!(ErrorBound::Rel(1e-2).resolve(&flat), 1e-2);
         assert_eq!(ErrorBound::Abs(0.5).resolve(&data), 0.5);
+    }
+
+    #[test]
+    fn checked_count_rejects_counts_the_frame_cannot_hold() {
+        // A tiny frame claiming a billion values must fail before any
+        // caller sizes a destination from it.
+        let mut forged = Vec::new();
+        write_header(&mut forged, CompressorKind::FzLight, 1_000_000_000, 1e-3);
+        forged.extend_from_slice(&[0u8; 16]);
+        assert!(checked_count(&forged).is_err());
+        // Plausible densities pass (64 values over 8 body bytes is within
+        // even the all-constant-block bound).
+        let mut ok = Vec::new();
+        write_header(&mut ok, CompressorKind::Szx, 64, 1e-3);
+        ok.extend_from_slice(&[0u8; 8]);
+        assert_eq!(checked_count(&ok).unwrap(), 64);
+        // Empty frames are fine.
+        let mut empty = Vec::new();
+        write_header(&mut empty, CompressorKind::FzLight, 0, 1e-3);
+        assert_eq!(checked_count(&empty).unwrap(), 0);
+        // The bound dispatches on the header's codec: 1000 values over 16
+        // body bytes is plausible for fZ-light (≤ 64 v/B) but impossible
+        // for the transform-based ZFP (≤ 16 v/B).
+        let mut fz = Vec::new();
+        write_header(&mut fz, CompressorKind::FzLight, 1000, 1e-3);
+        fz.extend_from_slice(&[0u8; 16]);
+        assert_eq!(checked_count(&fz).unwrap(), 1000);
+        let mut zfp = Vec::new();
+        write_header(&mut zfp, CompressorKind::ZfpAbs, 1000, 1e-3);
+        zfp.extend_from_slice(&[0u8; 16]);
+        assert!(checked_count(&zfp).is_err());
     }
 
     #[test]

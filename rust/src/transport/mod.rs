@@ -13,19 +13,187 @@
 //! per pair. Collectives allocate disjoint tag spaces per operation so
 //! concurrent collectives on the same communicator never cross-match.
 //!
+//! ## The pooled receive path
+//!
+//! The receive-side API is designed so a warm iterated collective moves
+//! bytes without touching the allocator:
+//!
+//! 1. **lease** — the consumer borrows a wire buffer from the transport's
+//!    [`PacketPool`] ([`Transport::lease`]); producers (the `memchan`
+//!    sender, the `tcp` reader threads) lease their packet buffers from
+//!    the same pool instead of allocating fresh `Vec`s.
+//! 2. **recv_into** — [`Transport::recv_into`] (and its nonblocking
+//!    sibling [`Transport::try_complete_into`]) delivers an arrived
+//!    packet by *swapping* it into the caller's buffer: the packet's
+//!    allocation changes hands, the buffer's old capacity goes back to
+//!    the pool for the next arrival. No copy, no allocation.
+//! 3. **decode in place** — the collectives then run a placement decode
+//!    ([`crate::compress::Compressor::decompress_into_slice`]) straight
+//!    from the wire buffer into the output's final window, and
+//!    [`Transport::recycle`] the buffer when done.
+//!
+//! The allocating [`Transport::recv`] / [`Transport::wait`] remain as
+//! default-impl conveniences over the `_into` forms (mirroring the
+//! compressor trait's `compress`/`compress_into` split).
+//!
 //! The nonblocking API is deliberately *polling-based* ([`RecvHandle`] +
 //! [`Transport::try_complete`]) because the paper's §3.5.2 contribution is
 //! precisely "actively pull communication progress within the compression
-//! and decompression phases".
+//! and decompression phases". Blocking waits use a bounded spin followed
+//! by [`std::thread::yield_now`] ([`Backoff`]) so a slow sender does not
+//! pin a full core.
 
 pub mod memchan;
 pub mod tcp;
+
+use std::sync::{Arc, Mutex};
 
 use crate::Result;
 
 /// Reserved tag namespace for barriers (collectives must use tags below
 /// this bit).
 pub const BARRIER_TAG_BASE: u64 = 1 << 62;
+
+/// Counters exposing a transport's packet-buffer pool, for regression
+/// tests and capacity planning. All values are cumulative.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PacketPoolStats {
+    /// Leases served by a fresh allocation because the free list was
+    /// empty.
+    pub allocated: u64,
+    /// Leases served from the free list.
+    pub reused: u64,
+    /// Buffers returned to the pool (swapped out by a receive or
+    /// explicitly recycled).
+    pub recycled: u64,
+    /// High-water mark: the largest buffer capacity ever returned.
+    pub capacity_hwm: usize,
+}
+
+#[derive(Debug, Default)]
+struct PacketPoolInner {
+    free: Vec<Vec<u8>>,
+    stats: PacketPoolStats,
+}
+
+/// Thread-safe free list of wire-packet buffers shared between a
+/// transport's producers (senders, reader threads) and its consumer (the
+/// collectives' receive path). The transport-layer sibling of the
+/// collective layer's [`crate::collectives::ScratchPool`]: same
+/// lease/return discipline, but `Sync` so reader threads can deposit
+/// arriving payloads into reused buffers.
+#[derive(Debug, Clone, Default)]
+pub struct PacketPool(Arc<Mutex<PacketPoolInner>>);
+
+impl PacketPool {
+    /// Free-list depth cap; buffers returned beyond this are dropped
+    /// rather than hoarded. Sized for the widest in-process fan-out (a
+    /// `memchan` fabric shares ONE pool across all ranks, so every
+    /// in-flight packet of every rank counts against it).
+    const MAX_FREE: usize = 256;
+
+    /// Lease a cleared buffer, reusing pooled capacity when available.
+    pub fn lease(&self) -> Vec<u8> {
+        let mut inner = self.0.lock().unwrap();
+        match inner.free.pop() {
+            Some(b) => {
+                inner.stats.reused += 1;
+                b
+            }
+            None => {
+                inner.stats.allocated += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer to the pool. Zero-capacity buffers are dropped
+    /// (pooling them would serve allocation-sized leases later).
+    pub fn release(&self, mut b: Vec<u8>) {
+        if b.capacity() == 0 {
+            return;
+        }
+        b.clear();
+        let mut inner = self.0.lock().unwrap();
+        inner.stats.recycled += 1;
+        inner.stats.capacity_hwm = inner.stats.capacity_hwm.max(b.capacity());
+        if inner.free.len() < Self::MAX_FREE {
+            inner.free.push(b);
+        }
+    }
+
+    /// Lease a cleared buffer with capacity for at least `len` bytes,
+    /// reserved **exactly** (`reserve_exact`) so circulating capacities
+    /// track the message sizes instead of doubling past them. The single
+    /// packet-sizing policy shared by every producer (send paths and the
+    /// TCP reader threads).
+    pub fn lease_with_capacity(&self, len: usize) -> Vec<u8> {
+        let mut p = self.lease();
+        if p.capacity() < len {
+            p.reserve_exact(len);
+        }
+        p
+    }
+
+    /// Build an outbound packet carrying `data`: empty payloads travel as
+    /// capacity-free vectors (barriers must not churn the pool), real
+    /// payloads ride pooled exact-sized buffers.
+    pub fn packet_from(&self, data: &[u8]) -> Vec<u8> {
+        if data.is_empty() {
+            return Vec::new();
+        }
+        let mut p = self.lease_with_capacity(data.len());
+        p.extend_from_slice(data);
+        p
+    }
+
+    /// Deliver an arrived `packet` into the caller's lease buffer without
+    /// copying: the packet's allocation is swapped in and the buffer's
+    /// old capacity returns to the pool for the next arrival. Returns the
+    /// payload length.
+    pub fn deposit(&self, packet: Vec<u8>, buf: &mut Vec<u8>) -> usize {
+        let n = packet.len();
+        let old = std::mem::replace(buf, packet);
+        self.release(old);
+        n
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> PacketPoolStats {
+        self.0.lock().unwrap().stats
+    }
+}
+
+/// Bounded spin-then-yield backoff for completion waits: a short
+/// [`std::hint::spin_loop`] burst catches messages that are nanoseconds
+/// away, then the waiter downgrades to [`std::thread::yield_now`] so a
+/// genuinely slow sender (a large TCP transfer, a straggling rank) does
+/// not burn a full core.
+#[derive(Debug, Default)]
+pub struct Backoff {
+    spins: u32,
+}
+
+impl Backoff {
+    /// Spin iterations before yielding to the scheduler.
+    pub const SPIN_LIMIT: u32 = 64;
+
+    /// Fresh backoff (starts in the spin phase).
+    pub fn new() -> Self {
+        Backoff::default()
+    }
+
+    /// Wait one step: spin while under [`Backoff::SPIN_LIMIT`], yield
+    /// afterwards.
+    pub fn snooze(&mut self) {
+        if self.spins < Self::SPIN_LIMIT {
+            self.spins += 1;
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
 
 /// Handle to an outstanding nonblocking receive.
 #[derive(Debug)]
@@ -35,17 +203,23 @@ pub struct RecvHandle {
     /// Match tag.
     pub tag: u64,
     pub(crate) done: Option<Vec<u8>>,
+    /// Set once the payload has been handed to a caller buffer via
+    /// [`Transport::try_complete_into`]; further polls stay `true`
+    /// without touching the buffer again.
+    pub(crate) delivered: bool,
 }
 
 impl RecvHandle {
     fn new(from: usize, tag: u64) -> Self {
-        RecvHandle { from, tag, done: None }
+        RecvHandle { from, tag, done: None, delivered: false }
     }
     /// Whether the message has already been matched.
     pub fn is_complete(&self) -> bool {
-        self.done.is_some()
+        self.done.is_some() || self.delivered
     }
-    /// Take the payload after completion.
+    /// Take the payload after completion ([`Transport::try_complete`]
+    /// path). `None` if the payload was already delivered into a caller
+    /// buffer by [`Transport::try_complete_into`].
     pub fn take(self) -> Option<Vec<u8>> {
         self.done
     }
@@ -55,6 +229,10 @@ impl RecvHandle {
 ///
 /// Sends are *eager*: `send` buffers and returns (matching MPI's eager
 /// protocol for the message sizes the collectives use after compression).
+///
+/// The required receive methods are the **pooled zero-copy** `_into`
+/// variants (see the module docs); the allocating [`Transport::recv`] and
+/// [`Transport::wait`] are default-impl wrappers.
 pub trait Transport: Send {
     /// This endpoint's rank.
     fn rank(&self) -> usize;
@@ -64,8 +242,46 @@ pub trait Transport: Send {
     /// Eager-buffered send (completes locally).
     fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()>;
 
-    /// Blocking receive matching `(from, tag)`.
-    fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>>;
+    /// The transport's packet pool, if it runs one. Transports with a
+    /// pool get pooled [`Transport::lease`] / [`Transport::recycle`] /
+    /// [`Transport::try_complete_into`] behaviour for free.
+    fn packet_pool(&self) -> Option<&PacketPool> {
+        None
+    }
+
+    /// Lease a cleared wire buffer from the packet pool (a plain `Vec`
+    /// for transports without one). Pair with [`Transport::recycle`].
+    fn lease(&mut self) -> Vec<u8> {
+        self.packet_pool().map(PacketPool::lease).unwrap_or_default()
+    }
+
+    /// Return a wire buffer — typically one handed out by
+    /// [`Transport::recv_into`] — to the packet pool.
+    fn recycle(&mut self, buf: Vec<u8>) {
+        if let Some(p) = self.packet_pool() {
+            p.release(buf);
+        }
+    }
+
+    /// Packet-pool counters (zeros for transports without a pool).
+    fn packet_stats(&self) -> PacketPoolStats {
+        self.packet_pool().map(PacketPool::stats).unwrap_or_default()
+    }
+
+    /// Blocking receive matching `(from, tag)`, delivering the payload
+    /// into `buf` (overwritten) and returning its length. Pooled
+    /// transports deliver by buffer swap — zero copies, zero allocations
+    /// once the pool is warm.
+    fn recv_into(&mut self, from: usize, tag: u64, buf: &mut Vec<u8>) -> Result<usize>;
+
+    /// Blocking receive into a freshly allocated vector. Default-impl
+    /// wrapper over [`Transport::recv_into`]; iterated callers should
+    /// lease a buffer and use the `_into` form.
+    fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.recv_into(from, tag, &mut buf)?;
+        Ok(buf)
+    }
 
     /// Post a nonblocking receive.
     fn irecv(&mut self, from: usize, tag: u64) -> RecvHandle {
@@ -76,12 +292,51 @@ pub trait Transport: Send {
     /// the progress engine the PIPE compressor hooks into.
     fn try_complete(&mut self, h: &mut RecvHandle) -> Result<bool>;
 
-    /// Block until the handle completes and return the payload.
-    fn wait(&mut self, mut h: RecvHandle) -> Result<Vec<u8>> {
-        while !self.try_complete(&mut h)? {
-            std::hint::spin_loop();
+    /// Pool-aware nonblocking completion: poll the receive and, on
+    /// completion, deliver the payload into `buf` (by swap on pooled
+    /// transports, by copy otherwise). Once delivered, further polls
+    /// return `Ok(true)` without touching `buf`.
+    fn try_complete_into(&mut self, h: &mut RecvHandle, buf: &mut Vec<u8>) -> Result<bool> {
+        if h.delivered {
+            return Ok(true);
         }
-        Ok(h.take().expect("completed handle has payload"))
+        if !self.try_complete(h)? {
+            return Ok(false);
+        }
+        let payload = h.done.take().expect("completed handle has payload");
+        match self.packet_pool() {
+            Some(pool) => {
+                pool.deposit(payload, buf);
+            }
+            None => {
+                buf.clear();
+                buf.extend_from_slice(&payload);
+            }
+        }
+        h.delivered = true;
+        Ok(true)
+    }
+
+    /// Block until the handle completes, delivering the payload into
+    /// `buf` and returning its length. Uses a bounded spin then
+    /// [`std::thread::yield_now`] backoff so a delayed sender cannot pin
+    /// a core (the old behaviour was an unbounded `spin_loop`).
+    fn wait_into(&mut self, mut h: RecvHandle, buf: &mut Vec<u8>) -> Result<usize> {
+        let mut backoff = Backoff::new();
+        loop {
+            if self.try_complete_into(&mut h, buf)? {
+                return Ok(buf.len());
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Block until the handle completes and return the payload. Wrapper
+    /// over [`Transport::wait_into`].
+    fn wait(&mut self, h: RecvHandle) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.wait_into(h, &mut buf)?;
+        Ok(buf)
     }
 
     /// Dissemination barrier over the reserved tag space.
@@ -122,5 +377,104 @@ mod tests {
             });
             assert_eq!(handles.len(), n);
         }
+    }
+
+    #[test]
+    fn packet_pool_lease_release_deposit() {
+        let pool = PacketPool::default();
+        let mut a = pool.lease();
+        a.extend_from_slice(&[1, 2, 3]);
+        let cap = a.capacity();
+        pool.release(a);
+        let b = pool.lease();
+        assert!(b.is_empty(), "released buffers come back cleared");
+        assert_eq!(b.capacity(), cap);
+        let s = pool.stats();
+        assert_eq!(s.allocated, 1);
+        assert_eq!(s.reused, 1);
+        assert_eq!(s.recycled, 1);
+        assert_eq!(s.capacity_hwm, cap);
+        // deposit: the packet's allocation changes hands, the old buffer
+        // capacity returns to the pool.
+        let mut dst = b;
+        dst.extend_from_slice(&[9; 16]);
+        let dst_cap = dst.capacity();
+        let packet = vec![7u8; 4];
+        assert_eq!(pool.deposit(packet, &mut dst), 4);
+        assert_eq!(dst, vec![7u8; 4]);
+        let relisted = pool.lease();
+        assert_eq!(relisted.capacity(), dst_cap, "old capacity must be pooled");
+        // Zero-capacity buffers are not pooled.
+        pool.release(Vec::new());
+        assert_eq!(pool.stats().recycled, 2, "empty release is a no-op");
+    }
+
+    #[test]
+    fn wait_with_delayed_sender_completes_and_yields() {
+        // Satellite regression: `wait` must complete even when the sender
+        // is tens of milliseconds late — far past the bounded spin budget,
+        // i.e. the wait has long since downgraded to yield_now.
+        MemFabric::run(2, |t| {
+            if t.rank() == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                t.send(1, 4, b"slow").unwrap();
+            } else {
+                let h = t.irecv(0, 4);
+                let got = t.wait(h).unwrap();
+                assert_eq!(got, b"slow");
+            }
+        });
+    }
+
+    #[test]
+    fn wait_into_reuses_caller_buffer() {
+        MemFabric::run(2, |t| {
+            if t.rank() == 0 {
+                t.send(1, 5, b"first").unwrap();
+                t.send(1, 6, b"second!").unwrap();
+            } else {
+                let mut buf = t.lease();
+                let h = t.irecv(0, 5);
+                assert_eq!(t.wait_into(h, &mut buf).unwrap(), 5);
+                assert_eq!(buf.as_slice(), b"first");
+                let h = t.irecv(0, 6);
+                assert_eq!(t.wait_into(h, &mut buf).unwrap(), 7);
+                assert_eq!(buf.as_slice(), b"second!");
+                t.recycle(buf);
+            }
+        });
+    }
+
+    #[test]
+    fn try_complete_into_is_idempotent_after_delivery() {
+        MemFabric::run(2, |t| {
+            if t.rank() == 0 {
+                t.send(1, 9, b"once").unwrap();
+            } else {
+                let mut h = t.irecv(0, 9);
+                let mut buf = Vec::new();
+                let mut backoff = Backoff::new();
+                while !t.try_complete_into(&mut h, &mut buf).unwrap() {
+                    backoff.snooze();
+                }
+                assert_eq!(buf.as_slice(), b"once");
+                assert!(h.is_complete());
+                // A second poll reports complete without clobbering the
+                // caller's buffer.
+                buf.extend_from_slice(b"!");
+                assert!(t.try_complete_into(&mut h, &mut buf).unwrap());
+                assert_eq!(buf.as_slice(), b"once!");
+                assert!(h.take().is_none(), "payload was delivered, not stored");
+            }
+        });
+    }
+
+    #[test]
+    fn backoff_spins_then_yields() {
+        let mut b = Backoff::new();
+        for _ in 0..Backoff::SPIN_LIMIT * 3 {
+            b.snooze(); // must not hang or panic past the spin budget
+        }
+        assert_eq!(b.spins, Backoff::SPIN_LIMIT);
     }
 }

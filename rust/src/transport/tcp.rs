@@ -5,6 +5,11 @@
 //! Each endpoint accepts connections from lower ranks and dials higher
 //! ranks, yielding a full mesh; one reader thread per peer pushes packets
 //! into a shared matched/unmatched store guarded by a mutex + condvar.
+//!
+//! Reader threads deposit payloads into reusable packet buffers leased
+//! from the endpoint's [`PacketPool`]; the consumer's `recv_into` swap
+//! returns a same-sized capacity to the pool, so a warm iterated workload
+//! receives without allocator traffic (see the parent module docs).
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
@@ -13,7 +18,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Duration;
 
-use super::{RecvHandle, Transport};
+use super::{PacketPool, RecvHandle, Transport};
 use crate::{Error, Result};
 
 type Store = Mutex<HashMap<(usize, u64), VecDeque<Vec<u8>>>>;
@@ -25,6 +30,7 @@ pub struct TcpTransport {
     writers: Vec<Option<Mutex<TcpStream>>>,
     store: Arc<(Store, Condvar)>,
     readers: Vec<thread::JoinHandle<()>>,
+    pool: PacketPool,
 }
 
 impl TcpTransport {
@@ -40,6 +46,7 @@ impl TcpTransport {
 
         let store: Arc<(Store, Condvar)> =
             Arc::new((Mutex::new(HashMap::new()), Condvar::new()));
+        let pool = PacketPool::default();
         let mut writers: Vec<Option<Mutex<TcpStream>>> = (0..size).map(|_| None).collect();
         let mut readers = Vec::new();
 
@@ -64,7 +71,11 @@ impl TcpTransport {
             let mut s = stream.try_clone().map_err(Error::Io)?;
             // Identify ourselves.
             s.write_all(&(rank as u32).to_le_bytes())?;
-            readers.push(spawn_reader(stream.try_clone().map_err(Error::Io)?, store.clone()));
+            readers.push(spawn_reader(
+                stream.try_clone().map_err(Error::Io)?,
+                store.clone(),
+                pool.clone(),
+            ));
             writers[peer] = Some(Mutex::new(stream));
         }
 
@@ -83,12 +94,16 @@ impl TcpTransport {
             if peer >= size || writers[peer].is_some() {
                 return Err(Error::transport(format!("bad peer hello {peer}")));
             }
-            readers.push(spawn_reader(stream.try_clone().map_err(Error::Io)?, store.clone()));
+            readers.push(spawn_reader(
+                stream.try_clone().map_err(Error::Io)?,
+                store.clone(),
+                pool.clone(),
+            ));
             writers[peer] = Some(Mutex::new(stream));
             pending -= 1;
         }
 
-        Ok(TcpTransport { rank, size, writers, store, readers })
+        Ok(TcpTransport { rank, size, writers, store, readers, pool })
     }
 
     fn take(&self, from: usize, tag: u64) -> Option<Vec<u8>> {
@@ -102,18 +117,15 @@ impl TcpTransport {
     }
 }
 
-fn spawn_reader(mut stream: TcpStream, store: Arc<(Store, Condvar)>) -> thread::JoinHandle<()> {
+fn spawn_reader(
+    mut stream: TcpStream,
+    store: Arc<(Store, Condvar)>,
+    pool: PacketPool,
+) -> thread::JoinHandle<()> {
     thread::spawn(move || {
-        let mut hello = [0u8; 4];
-        // The dialing side sends its rank first when it connected to us; on
-        // streams we dialed, the first frame already carries src per
-        // message, so a hello is only present on accepted streams. To keep
-        // the protocol uniform, every frame carries src — the hello is
-        // consumed by the acceptor before this thread starts; for dialed
-        // streams there is no hello. Detect by frame layout: src is
-        // repeated per message, so just read frames.
-        let _ = &mut hello;
         loop {
+            // Every frame carries src, so no per-stream hello is needed
+            // here (the acceptor consumed the dialer's hello already).
             let mut head = [0u8; 4 + 8 + 8];
             if stream.read_exact(&mut head).is_err() {
                 break;
@@ -121,9 +133,15 @@ fn spawn_reader(mut stream: TcpStream, store: Arc<(Store, Condvar)>) -> thread::
             let src = u32::from_le_bytes(head[0..4].try_into().unwrap()) as usize;
             let tag = u64::from_le_bytes(head[4..12].try_into().unwrap());
             let len = u64::from_le_bytes(head[12..20].try_into().unwrap()) as usize;
-            let mut payload = vec![0u8; len];
-            if stream.read_exact(&mut payload).is_err() {
-                break;
+            // Deposit into a reused packet buffer (sized exactly, so
+            // circulating capacities track the message sizes). `Take` +
+            // `read_to_end` appends into the reserved capacity without
+            // pre-zeroing it — no memset pass per received message.
+            let mut payload =
+                if len == 0 { Vec::new() } else { pool.lease_with_capacity(len) };
+            match stream.by_ref().take(len as u64).read_to_end(&mut payload) {
+                Ok(got) if got == len => {}
+                _ => break,
             }
             let (lock, cv) = &*store;
             lock.lock().unwrap().entry((src, tag)).or_default().push_back(payload);
@@ -140,11 +158,17 @@ impl Transport for TcpTransport {
         self.size
     }
 
+    fn packet_pool(&self) -> Option<&PacketPool> {
+        Some(&self.pool)
+    }
+
     fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()> {
         if to == self.rank {
-            // Self-send loops back through the store.
+            // Self-send loops back through the store (pooled like any
+            // arriving packet).
+            let packet = self.pool.packet_from(data);
             let (lock, cv) = &*self.store;
-            lock.lock().unwrap().entry((to, tag)).or_default().push_back(data.to_vec());
+            lock.lock().unwrap().entry((to, tag)).or_default().push_back(packet);
             cv.notify_all();
             return Ok(());
         }
@@ -152,16 +176,16 @@ impl Transport for TcpTransport {
             .as_ref()
             .ok_or_else(|| Error::transport(format!("no link to rank {to}")))?;
         let mut s = w.lock().unwrap();
-        let mut head = Vec::with_capacity(20);
-        head.extend_from_slice(&(self.rank as u32).to_le_bytes());
-        head.extend_from_slice(&tag.to_le_bytes());
-        head.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        let mut head = [0u8; 4 + 8 + 8];
+        head[0..4].copy_from_slice(&(self.rank as u32).to_le_bytes());
+        head[4..12].copy_from_slice(&tag.to_le_bytes());
+        head[12..20].copy_from_slice(&(data.len() as u64).to_le_bytes());
         s.write_all(&head)?;
         s.write_all(data)?;
         Ok(())
     }
 
-    fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>> {
+    fn recv_into(&mut self, from: usize, tag: u64, buf: &mut Vec<u8>) -> Result<usize> {
         let (lock, cv) = &*self.store;
         let mut map = lock.lock().unwrap();
         loop {
@@ -170,7 +194,8 @@ impl Transport for TcpTransport {
                     if q.is_empty() {
                         map.remove(&(from, tag));
                     }
-                    return Ok(m);
+                    drop(map);
+                    return Ok(self.pool.deposit(m, buf));
                 }
             }
             let (m, timeout) = cv
@@ -186,7 +211,7 @@ impl Transport for TcpTransport {
     }
 
     fn try_complete(&mut self, h: &mut RecvHandle) -> Result<bool> {
-        if h.done.is_some() {
+        if h.done.is_some() || h.delivered {
             return Ok(true);
         }
         if let Some(m) = self.take(h.from, h.tag) {
@@ -266,6 +291,72 @@ mod tests {
                 std::thread::yield_now();
             }
             assert_eq!(h.take().unwrap(), b"poll-me");
+            t.barrier(0).unwrap();
+        });
+        j0.join().unwrap();
+        j1.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_wait_with_delayed_sender_completes() {
+        // Satellite regression: a sender that shows up 60 ms late — far
+        // past the bounded spin budget — must still complete the wait
+        // (the waiter has downgraded to yield_now by then, not a hot spin).
+        let addrs = local_addrs(2);
+        let a = addrs.clone();
+        let j0 = thread::spawn(move || {
+            let mut t = TcpTransport::connect(0, &a, Duration::from_secs(10)).unwrap();
+            thread::sleep(Duration::from_millis(60));
+            t.send(1, 77, &[5u8; 2048]).unwrap();
+            t.barrier(0).unwrap();
+        });
+        let a = addrs.clone();
+        let j1 = thread::spawn(move || {
+            let mut t = TcpTransport::connect(1, &a, Duration::from_secs(10)).unwrap();
+            let h = t.irecv(0, 77);
+            let mut buf = t.lease();
+            assert_eq!(t.wait_into(h, &mut buf).unwrap(), 2048);
+            assert!(buf.iter().all(|&b| b == 5));
+            t.recycle(buf);
+            t.barrier(0).unwrap();
+        });
+        j0.join().unwrap();
+        j1.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_reader_reuses_pooled_packet_buffers() {
+        // The reader thread must lease arrival buffers from the pool:
+        // after a warm-up exchange, further same-sized receives allocate
+        // no new packet buffers.
+        let addrs = local_addrs(2);
+        let a = addrs.clone();
+        let j0 = thread::spawn(move || {
+            let mut t = TcpTransport::connect(0, &a, Duration::from_secs(10)).unwrap();
+            for i in 0..6u64 {
+                t.send(1, 300 + i, &[1u8; 1024]).unwrap();
+                t.recv(1, 400 + i).unwrap(); // ack paces the iterations
+            }
+            t.barrier(0).unwrap();
+        });
+        let a = addrs.clone();
+        let j1 = thread::spawn(move || {
+            let mut t = TcpTransport::connect(1, &a, Duration::from_secs(10)).unwrap();
+            let mut buf = t.lease();
+            let mut warm = 0;
+            for i in 0..6u64 {
+                assert_eq!(t.recv_into(0, 300 + i, &mut buf).unwrap(), 1024);
+                t.send(0, 400 + i, &[0u8]).unwrap();
+                if i == 1 {
+                    warm = t.packet_stats().allocated;
+                }
+            }
+            assert_eq!(
+                t.packet_stats().allocated,
+                warm,
+                "warm receives must reuse pooled packet buffers"
+            );
+            t.recycle(buf);
             t.barrier(0).unwrap();
         });
         j0.join().unwrap();

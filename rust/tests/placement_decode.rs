@@ -1,0 +1,253 @@
+//! Placement-decode property suite and receive-path allocation
+//! regressions:
+//!
+//! 1. `decompress_into_slice` must be **bit-identical** to
+//!    decompress-then-copy for every codec (all four base codecs, the
+//!    multithreaded wrapper, and PIPE), every field kind, and tiny /
+//!    empty / chunk-straddling inputs — whether the codec runs a native
+//!    in-place kernel or the default.
+//! 2. Wrong-sized destinations are rejected before any value lands.
+//! 3. A warm iterated ring allgather over memchan performs **zero
+//!    byte-buffer allocations and zero post-decode copies** on the
+//!    receive path, observable through `PoolStats` (placement vs staged
+//!    decode counters, pool creations) and `PacketPoolStats`.
+
+use zccl::collectives::{run_ranks, CollCtx, Mode, PoolStats};
+use zccl::compress::{
+    build, Compressor, CompressorKind, ErrorBound, MtCompressor, PipeFzLight,
+};
+use zccl::data::fields::{Field, FieldKind};
+
+/// Sizes crossing every interesting boundary: empty, single value, the
+/// 32-value fZ-light block edges, and the 5120-value chunk edges.
+const SIZES: [usize; 9] = [0, 1, 31, 32, 33, 5119, 5120, 5121, 12345];
+
+fn codecs() -> Vec<(String, Box<dyn Compressor>)> {
+    let mut out: Vec<(String, Box<dyn Compressor>)> = Vec::new();
+    for kind in CompressorKind::ALL {
+        out.push((format!("{kind:?}"), build(kind)));
+        out.push((format!("Mt-{kind:?}"), Box::new(MtCompressor::new(kind))));
+    }
+    out.push(("PipeFzLight".into(), Box::new(PipeFzLight::default())));
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn placement_decode_is_bit_identical_to_decompress_then_copy() {
+    for (name, codec) in codecs() {
+        for kind in FieldKind::ALL {
+            for &n in &SIZES {
+                let data = Field::generate(kind, n, 7).values;
+                let frame = codec.compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+                let staged = codec.decompress(&frame.bytes).unwrap();
+                let mut placed = vec![f32::NAN; n];
+                let cnt = codec.decompress_into_slice(&frame.bytes, &mut placed).unwrap();
+                assert_eq!(cnt, n, "{name} {kind:?} n={n} count");
+                assert_eq!(
+                    bits(&placed),
+                    bits(&staged),
+                    "{name} {kind:?} n={n}: placement decode must be bit-identical"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn placement_capability_flags_match_reality() {
+    // Native in-place kernels: fZ-light and its wrappers. SZx and ZFP
+    // run the decompress-then-copy default and must say so.
+    assert!(build(CompressorKind::FzLight).supports_placement_decode());
+    assert!(PipeFzLight::default().supports_placement_decode());
+    assert!(MtCompressor::new(CompressorKind::FzLight).supports_placement_decode());
+    assert!(!build(CompressorKind::Szx).supports_placement_decode());
+    assert!(!build(CompressorKind::ZfpAbs).supports_placement_decode());
+    assert!(!build(CompressorKind::ZfpFixedRate).supports_placement_decode());
+    assert!(!MtCompressor::new(CompressorKind::Szx).supports_placement_decode());
+}
+
+#[test]
+fn placement_decode_rejects_wrong_destination_length() {
+    for (name, codec) in codecs() {
+        let data = Field::generate(FieldKind::Cesm, 1000, 9).values;
+        let frame = codec.compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+        for wrong in [0usize, 999, 1001] {
+            let mut dst = vec![0.0f32; wrong];
+            assert!(
+                codec.decompress_into_slice(&frame.bytes, &mut dst).is_err(),
+                "{name}: destination of {wrong} must be rejected for a 1000-value frame"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipe_placement_decode_runs_progress_hook_per_chunk() {
+    let pipe = PipeFzLight::default();
+    let data = Field::generate(FieldKind::Rtm, 5120 * 2 + 77, 5).values;
+    let frame = pipe.compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+    let mut out = vec![0.0f32; data.len()];
+    let mut calls = Vec::new();
+    let n = pipe
+        .decompress_into_slice_with_progress(&frame.bytes, &mut out, &mut |done| calls.push(done))
+        .unwrap();
+    assert_eq!(n, data.len());
+    assert_eq!(calls, vec![5120, 10240, 10317], "§3.5.2 hook must run between chunks");
+    assert_eq!(bits(&out), bits(&pipe.decompress(&frame.bytes).unwrap()));
+}
+
+/// The tentpole's acceptance regression: a warm ring allgather leases
+/// every wire buffer and decodes every frame in place — zero byte-buffer
+/// allocations, zero post-decode copies, in both the scratch pool and
+/// the transport packet pool.
+#[test]
+fn warm_ring_allgather_is_allocation_free_and_copy_free() {
+    let (n, len) = (4usize, 6000usize);
+    let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3));
+    let ok = run_ranks(n, move |c| {
+        let mut ctx = CollCtx::over(c, mode);
+        let mine = Field::generate(FieldKind::Hurricane, len, ctx.rank() as u64).values;
+        let mut out = Vec::new();
+
+        // Deterministically pre-warm the fabric-shared packet pool past
+        // any possible concurrent demand (held chunks + in-flight
+        // packets), so the post-warm-up allocation counter cannot depend
+        // on thread interleaving.
+        let warmed: Vec<Vec<u8>> = (0..12)
+            .map(|_| {
+                let mut b = ctx.transport().lease();
+                b.reserve_exact(64 << 10); // non-zero capacity, so release() pools it
+                b
+            })
+            .collect();
+        // Holding all leases across a barrier forces the pool to a depth
+        // of 12 × n buffers no matter how the rank threads interleave.
+        ctx.barrier().unwrap();
+        for b in warmed {
+            ctx.transport().recycle(b);
+        }
+
+        // Two warm-up iterations populate this rank's scratch pool.
+        ctx.allgather_into(&mine, &mut out).unwrap();
+        ctx.allgather_into(&mine, &mut out).unwrap();
+        ctx.barrier().unwrap(); // all ranks quiescent before reading stats
+        let warm: PoolStats = ctx.pool_stats();
+        let warm_packets = ctx.packet_stats().allocated;
+        assert!(warm.byte_buffers_created > 0, "pool must be exercised");
+        assert_eq!(warm.staged_decodes, 0, "fZ-light must never stage a decode");
+        assert_eq!(
+            warm.placement_decodes,
+            2 * n as u64,
+            "every frame (incl. our own) must placement-decode, each iteration"
+        );
+
+        for _ in 0..3 {
+            ctx.allgather_into(&mine, &mut out).unwrap();
+        }
+        ctx.barrier().unwrap();
+        let after = ctx.pool_stats();
+        assert_eq!(
+            after.byte_buffers_created, warm.byte_buffers_created,
+            "warm allgather must perform zero byte-buffer allocations"
+        );
+        assert_eq!(
+            after.f32_buffers_created, warm.f32_buffers_created,
+            "warm allgather must perform zero f32-buffer allocations"
+        );
+        assert_eq!(after.staged_decodes, 0, "zero post-decode copies on the receive path");
+        assert_eq!(
+            after.placement_decodes,
+            5 * n as u64,
+            "placement decode must keep carrying every frame"
+        );
+        assert_eq!(
+            ctx.packet_stats().allocated,
+            warm_packets,
+            "warm allgather must lease every wire buffer from the packet pool"
+        );
+        true
+    });
+    assert!(ok.into_iter().all(|x| x));
+}
+
+/// Codecs without a native placement kernel stay allocation-free through
+/// pooled staging — and the stage is counted, not hidden.
+#[test]
+fn staged_codecs_pool_their_scratch_and_are_counted() {
+    let (n, len) = (3usize, 2000usize);
+    let mode = Mode::ccoll(ErrorBound::Abs(1e-2)); // SZx: default placement path
+    let ok = run_ranks(n, move |c| {
+        let mut ctx = CollCtx::over(c, mode);
+        let mine = Field::generate(FieldKind::Cesm, len, ctx.rank() as u64).values;
+        let mut out = Vec::new();
+        ctx.allgather_into(&mine, &mut out).unwrap();
+        ctx.allgather_into(&mine, &mut out).unwrap();
+        let warm = ctx.pool_stats();
+        assert_eq!(warm.placement_decodes, 0, "SZx has no native placement kernel");
+        assert_eq!(warm.staged_decodes, 2 * n as u64, "every frame stages through scratch");
+        for _ in 0..2 {
+            ctx.allgather_into(&mine, &mut out).unwrap();
+        }
+        let after = ctx.pool_stats();
+        assert_eq!(
+            after.f32_buffers_created, warm.f32_buffers_created,
+            "staging scratch must come from the pool once warm"
+        );
+        assert_eq!(
+            after.byte_buffers_created, warm.byte_buffers_created,
+            "staged decode must not allocate byte buffers either"
+        );
+        true
+    });
+    assert!(ok.into_iter().all(|x| x));
+}
+
+/// End-to-end cross-check: the placement-decode receive path yields the
+/// same collective results as the seed's staged path did — every rank
+/// identical, error bounded, for every movement collective.
+#[test]
+fn movement_collectives_stay_bounded_under_placement_decode() {
+    let (n, len) = (4usize, 3000usize);
+    let eb = 1e-3f64;
+    for kind in [CompressorKind::FzLight, CompressorKind::Szx] {
+        let mode = Mode::zccl(kind, ErrorBound::Abs(eb));
+        let out = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let mine = Field::generate(FieldKind::Nyx, len, 70 + ctx.rank() as u64).values;
+            let gathered = ctx.allgather(&mine).unwrap();
+            let root_data = (ctx.rank() == 0)
+                .then(|| Field::generate(FieldKind::Nyx, len, 7).values);
+            let bcasted = ctx.bcast(root_data.as_deref(), 0).unwrap();
+            let scattered = ctx.scatter(root_data.as_deref(), 0).unwrap();
+            let exchanged = ctx.alltoall(&mine).unwrap();
+            (gathered, bcasted, scattered, exchanged)
+        });
+        let want_gather: Vec<f32> = (0..n)
+            .flat_map(|r| Field::generate(FieldKind::Nyx, len, 70 + r as u64).values)
+            .collect();
+        let want_root = Field::generate(FieldKind::Nyx, len, 7).values;
+        let ranges = zccl::collectives::chunk_ranges(len, n);
+        for (rank, (g, b, s, x)) in out.iter().enumerate() {
+            assert_eq!(g.len(), want_gather.len(), "{kind:?}");
+            for (a, w) in g.iter().zip(&want_gather) {
+                assert!((a - w).abs() as f64 <= eb * 1.001 + 1e-6, "{kind:?} allgather");
+            }
+            for (a, w) in b.iter().zip(&want_root) {
+                assert!((a - w).abs() as f64 <= eb * 1.001 + 1e-6, "{kind:?} bcast");
+            }
+            for (a, w) in s.iter().zip(&want_root[ranges[rank].clone()]) {
+                assert!((a - w).abs() as f64 <= eb * 1.001 + 1e-6, "{kind:?} scatter");
+            }
+            assert_eq!(x.len(), len, "{kind:?} alltoall length");
+        }
+        // MPI semantics: allgather/bcast identical on every rank.
+        for (g, b, _, _) in &out[1..] {
+            assert_eq!(g, &out[0].0, "{kind:?}");
+            assert_eq!(b, &out[0].1, "{kind:?}");
+        }
+    }
+}
