@@ -15,10 +15,17 @@
 //! **receive side** of a reduction collective — fused decompress–reduce
 //! vs decompress-then-fold on the same frame — so both receive-path
 //! trajectories are tracked from PR to PR.
+//!
+//! The `allreduce-hier-4x4` case runs the hierarchical allreduce over a
+//! node-partitioned 4×4 fabric against flat ZCCL on the same 16 ranks
+//! and emits `BENCH_hier.json`: bytes crossing the slow tier per
+//! iteration, warm ns/element for both schedules, and the leader vs
+//! follower compression counts (followers must be 0).
 
-use zccl::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
+use zccl::collectives::{run_ranks, run_ranks_on, CollCtx, Mode, ReduceOp};
 use zccl::compress::{Compressor, CompressorKind, ErrorBound, FzLight};
 use zccl::data::fields::{Field, FieldKind};
+use zccl::topology::Topology;
 use zccl::util::bench::{measure, Table};
 use zccl::util::json::Json;
 
@@ -229,6 +236,88 @@ fn main() {
         }
     }
 
+    // Iterated HIERARCHICAL allreduce over a 4-node x 4-rank
+    // node-partitioned fabric vs flat ZCCL on the same 16 ranks: the
+    // tier ledger reports how many bytes cross the slow tier per
+    // iteration, and the codec counters show compression collapsing onto
+    // the leaders. Emits BENCH_hier.json.
+    let hier_json = {
+        let topo = Topology::blocked(4, 4);
+        let hn = topo.ranks();
+        let hvalues = 1 << 18; // 1 MiB per rank so 16 ranks stay snappy
+        let eb = ErrorBound::Rel(1e-4);
+        let run = |mode: Mode, topo: &Topology| {
+            let t2 = topo.clone();
+            run_ranks_on(topo, move |c| {
+                let mut ctx = CollCtx::over_nodes(c, mode, t2.clone()).unwrap();
+                let f = Field::generate(FieldKind::Rtm, hvalues, 3 + ctx.rank() as u64);
+                let mut dst = Vec::new();
+                let mut times = Vec::with_capacity(iters);
+                for _ in 0..iters {
+                    let t0 = std::time::Instant::now();
+                    ctx.allreduce_into(&f.values, ReduceOp::Sum, &mut dst).unwrap();
+                    times.push(t0.elapsed().as_secs_f64());
+                }
+                (times, ctx.compress_calls())
+            })
+        };
+        let (flat_out, flat_report) =
+            run(Mode::zccl(CompressorKind::FzLight, eb), &topo);
+        let (hier_out, hier_report) = run(Mode::hier(CompressorKind::FzLight, eb), &topo);
+        let warm = |out: &[(Vec<f64>, u64)]| {
+            out.iter()
+                .map(|(ts, _)| ts[1..].iter().cloned().fold(f64::INFINITY, f64::min))
+                .fold(0.0, f64::max)
+        };
+        let (flat_warm, hier_warm) = (warm(&flat_out), warm(&hier_out));
+        let compresses = |leaders: bool| -> u64 {
+            hier_out
+                .iter()
+                .enumerate()
+                .filter(|(r, _)| topo.is_leader(*r) == leaders)
+                .map(|(_, o)| o.1)
+                .sum()
+        };
+        let (leader_compresses, follower_compresses) = (compresses(true), compresses(false));
+        t.row(vec![
+            "allreduce-hier-4x4".into(),
+            "zccl-flat".into(),
+            format!(
+                "{flat_warm:.4} ({:.1} MB/iter on slow tier)",
+                flat_report.tier.inter_bytes as f64 / iters as f64 / 1e6
+            ),
+        ]);
+        t.row(vec![
+            "allreduce-hier-4x4".into(),
+            "hier".into(),
+            format!(
+                "{hier_warm:.4} ({:.1} MB/iter on slow tier; \
+                 {leader_compresses} leader / {follower_compresses} follower compresses)",
+                hier_report.tier.inter_bytes as f64 / iters as f64 / 1e6
+            ),
+        ]);
+        Json::obj(vec![
+            ("bench", Json::Str("hier_allreduce_4x4".into())),
+            ("values", Json::Num(hvalues as f64)),
+            ("ranks", Json::Num(hn as f64)),
+            ("nodes", Json::Num(topo.nodes() as f64)),
+            ("iters", Json::Num(iters as f64)),
+            ("hier_warm_ns_per_element", Json::Num(hier_warm * 1e9 / hvalues as f64)),
+            ("flat_warm_ns_per_element", Json::Num(flat_warm * 1e9 / hvalues as f64)),
+            (
+                "hier_slow_tier_bytes_per_iter",
+                Json::Num(hier_report.tier.inter_bytes as f64 / iters as f64),
+            ),
+            (
+                "flat_slow_tier_bytes_per_iter",
+                Json::Num(flat_report.tier.inter_bytes as f64 / iters as f64),
+            ),
+            ("leader_compress_calls", Json::Num(leader_compresses as f64)),
+            ("follower_compress_calls", Json::Num(follower_compresses as f64)),
+        ])
+        .to_string()
+    };
+
     // Per-hop receive side in isolation: the same compressed partial
     // consumed fused vs unfused. The fused path must make fewer memory
     // passes (constant blocks fold as a broadcast, no partial vector).
@@ -282,5 +371,9 @@ fn main() {
         if let Err(e) = std::fs::write("BENCH_allgather.json", format!("{line}\n")) {
             eprintln!("warning: could not write BENCH_allgather.json: {e}");
         }
+    }
+    println!("BENCH_hier.json {hier_json}");
+    if let Err(e) = std::fs::write("BENCH_hier.json", format!("{hier_json}\n")) {
+        eprintln!("warning: could not write BENCH_hier.json: {e}");
     }
 }

@@ -76,7 +76,14 @@ pub struct DdpReport {
 
 /// Generate one worker's batch for `step`: the learnable "shift" task
 /// (next token = token + 1 mod vocab) on worker-disjoint random data.
-fn batch(cfg_vocab: usize, batch: usize, seq: usize, worker: usize, step: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+fn batch(
+    cfg_vocab: usize,
+    batch: usize,
+    seq: usize,
+    worker: usize,
+    step: usize,
+    seed: u64,
+) -> (Vec<i32>, Vec<i32>) {
     let mut rng = Rng::new(seed ^ ((worker as u64) << 32) ^ step as u64);
     let x: Vec<i32> = (0..batch * seq).map(|_| rng.below(cfg_vocab) as i32).collect();
     let y: Vec<i32> = x.iter().map(|&t| (t + 1) % cfg_vocab as i32).collect();

@@ -86,6 +86,14 @@ pub(crate) fn allgather_chunks_with(
         out.extend_from_slice(my_chunk);
         return Ok(());
     }
+    if st.mode.algo == Algo::Hier {
+        // The hierarchical arm runs its own tiered count exchange (a flat
+        // count ring would cross the slow tier between non-leaders). The
+        // allreduce stage never reaches here under Hier, so the ownership
+        // shift is always zero.
+        debug_assert_eq!(shift, 0, "hier allgather is only entered unshifted");
+        return super::hier::allgather_hier(comm, st, my_chunk, m, out);
+    }
     let base = comm.fresh_tags((n as u64 + 2) * SEG_TAG_SPAN);
     let counts_tag = base;
     let sizes_tag = base + n as u64;
@@ -121,6 +129,7 @@ pub(crate) fn allgather_chunks_with(
         Algo::CColl | Algo::Zccl => {
             allgather_zccl(comm, st, my_chunk, vrank, &offsets, sizes_tag, round_tag, m, out)
         }
+        Algo::Hier => unreachable!("hier allgather dispatched above"),
     }
 }
 
@@ -199,13 +208,14 @@ fn allgather_cprp2p(
     // there — no per-chunk value vectors at all.
     let own = vrank % n;
     out[window(offsets, own)].copy_from_slice(my_chunk);
-    let mut frame = st.pool.take_bytes();
     let mut got = comm.t.lease();
     for t in 0..n - 1 {
         let s = ring_send_chunk(vrank, t, n);
         let r = ring_recv_chunk(vrank, t, n);
         let tag = round_tag(t);
-        frame.clear();
+        // Each round's re-compressed frame lands in a transport-leased
+        // wire buffer and is sent by value — no packet_from copy.
+        let mut frame = comm.t.lease();
         let t0 = std::time::Instant::now();
         st.compress_into(&out[window(offsets, s)], &mut frame)?;
         m.add(Phase::Compress, t0.elapsed().as_secs_f64());
@@ -213,8 +223,8 @@ fn allgather_cprp2p(
         // sends the frame as one message (this is exactly the unbalanced
         // communication §3.1.1 calls out).
         let t0 = std::time::Instant::now();
-        comm.t.send(nb.next, tag, &frame)?;
         m.bytes_sent += frame.len() as u64;
+        comm.t.send_pooled(nb.next, tag, frame)?;
         comm.t.recv_into(nb.prev, tag, &mut got)?;
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
@@ -223,7 +233,6 @@ fn allgather_cprp2p(
             .map_err(|e| Error::corrupt(format!("cprp2p chunk {r}: {e}")))?;
         m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
     }
-    st.pool.put_bytes(frame);
     comm.t.recycle(got);
     Ok(())
 }

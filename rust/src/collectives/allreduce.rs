@@ -49,6 +49,11 @@ pub(crate) fn allreduce_with(
         op.finish(out, 1);
         return Ok(());
     }
+    if st.mode.algo == super::Algo::Hier {
+        // Two-level schedule: intra-node raw reduce → inter-leader
+        // compressed ring reduce-scatter/allgather → intra-node raw bcast.
+        return super::hier::allreduce_hier(comm, st, input, op, m, out);
+    }
     // Stage 1: reduce-scatter (collective computation framework). Rank r
     // ends up owning fully-reduced chunk (r+1) mod n. The owned chunk
     // lives in pooled scratch so iterated calls reuse it. On error paths

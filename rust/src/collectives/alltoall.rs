@@ -58,12 +58,14 @@ pub(crate) fn alltoall_with(
     m.raw_bytes += (input.len() * 4) as u64;
 
     // Compress (or serialise) each outgoing chunk exactly once, into
-    // pooled per-destination buffers.
+    // transport-leased wire buffers: every peer's chunk is sent by value
+    // (send_pooled — no packet_from copy) and our own stays resident for
+    // the in-place decode below.
     let compresses = st.mode.compresses();
     let mut outgoing: Vec<Vec<u8>> = Vec::with_capacity(n);
     for r in ranges.iter() {
         let chunk = &input[r.clone()];
-        let mut buf = st.pool.take_bytes();
+        let mut buf = comm.t.lease();
         if compresses {
             let t0 = std::time::Instant::now();
             st.compress_into(chunk, &mut buf)?;
@@ -77,7 +79,7 @@ pub(crate) fn alltoall_with(
     // ZCCL balances with a size pre-exchange (8 bytes/rank; here we ship
     // each peer the size of ITS chunk during the pairwise rounds' tag-0
     // message, so reuse exchange_sizes for the total only).
-    if st.mode.algo == Algo::Zccl {
+    if matches!(st.mode.algo, Algo::Zccl | Algo::Hier) {
         let t0 = std::time::Instant::now();
         let _ = exchange_sizes(comm, outgoing[me].len() as u64, sizes_tag)?;
         m.add(Phase::Other, t0.elapsed().as_secs_f64());
@@ -88,8 +90,9 @@ pub(crate) fn alltoall_with(
         let to = (me + t) % n;
         let from = (me + n - t) % n;
         let t0 = std::time::Instant::now();
-        comm.t.send(to, base + t as u64, &outgoing[to])?;
-        m.bytes_sent += outgoing[to].len() as u64;
+        let buf = std::mem::take(&mut outgoing[to]);
+        m.bytes_sent += buf.len() as u64;
+        comm.t.send_pooled(to, base + t as u64, buf)?;
         let mut got = comm.t.lease();
         comm.t.recv_into(from, base + t as u64, &mut got)?;
         m.bytes_recv += got.len() as u64;
@@ -136,7 +139,9 @@ pub(crate) fn alltoall_with(
         off += counts[r];
     }
     for buf in outgoing {
-        st.pool.put_bytes(buf);
+        // Only our own buffer still holds capacity (the others were moved
+        // to the wire); recycling an emptied Vec is a no-op.
+        comm.t.recycle(buf);
     }
     for buf in incoming.into_iter().flatten() {
         comm.t.recycle(buf);

@@ -48,6 +48,12 @@ pub(crate) fn bcast_with(
     if n == 1 {
         return Ok(data.unwrap().to_vec());
     }
+    if st.mode.algo == Algo::Hier {
+        // Two-level schedule: root compresses once, the frame travels the
+        // leader tree over the slow tier, leaders decode once per node
+        // and fan out raw over the fast tier.
+        return super::hier::bcast_hier(comm, st, data, root, m);
+    }
     let base = comm.fresh_tags(crate::topology::tree_rounds(n) as u64 + 1);
     let (recv_step, send_steps) = binomial_bcast(me, root, n);
 
@@ -107,19 +113,18 @@ pub(crate) fn bcast_with(
                 comm.t.recycle(got);
                 dec
             };
-            let mut frame = st.pool.take_bytes();
             for s in send_steps {
-                // Re-compress for every forward: the CPRP2P pathology.
-                frame.clear();
+                // Re-compress for every forward (the CPRP2P pathology),
+                // straight into a transport-leased buffer sent by value.
+                let mut frame = comm.t.lease();
                 let t0 = std::time::Instant::now();
                 st.compress_into(&plain, &mut frame)?;
                 m.add(Phase::Compress, t0.elapsed().as_secs_f64());
                 let t0 = std::time::Instant::now();
-                comm.t.send(s.peer, base + s.round as u64, &frame)?;
-                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_sent += frame.len() as u64;
+                comm.t.send_pooled(s.peer, base + s.round as u64, frame)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
             }
-            st.pool.put_bytes(frame);
             Ok(plain)
         }
         Algo::CColl | Algo::Zccl => {
@@ -164,6 +169,7 @@ pub(crate) fn bcast_with(
             }
             Ok(out)
         }
+        Algo::Hier => unreachable!("hier bcast dispatched above"),
     }
 }
 

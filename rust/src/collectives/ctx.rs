@@ -148,23 +148,46 @@ impl ScratchPool {
 pub struct CollState {
     pub(crate) mode: Mode,
     pub(crate) codec: Box<dyn Compressor>,
-    /// Pre-built PIPE codec for the §3.5.2 overlap (ZCCL + fZ-light,
-    /// single-thread only — same condition the reduce-scatter used to
-    /// evaluate per call).
+    /// Pre-built PIPE codec for the §3.5.2 overlap (ZCCL/Hier +
+    /// fZ-light, single-thread only — same condition the reduce-scatter
+    /// used to evaluate per call).
     pub(crate) pipe: Option<PipeFzLight>,
     pub(crate) pool: ScratchPool,
     pub(crate) codec_builds: u64,
+    /// Codec compression invocations (every frame built by this state) —
+    /// the leader-side counter the hierarchical acceptance tests pin:
+    /// under [`Algo::Hier`] only leaders (and tree roots) may compress.
+    pub(crate) compress_calls: u64,
+    /// Rank→node topology for the hierarchical schedules, shared by
+    /// reference so every hierarchical call clones an `Arc`, not the
+    /// node tables. `None` under [`Algo::Hier`] means
+    /// [`crate::topology::Topology::flat`] — every rank its own node,
+    /// degenerating to flat ZCCL.
+    pub(crate) topo: Option<std::sync::Arc<crate::topology::Topology>>,
+    /// The intra-node tier's mode. Only [`Algo::Plain`] (raw `f32`
+    /// windows over the fast tier) is currently implemented — enforced by
+    /// [`CollCtx::set_intra_mode`].
+    pub(crate) intra: Mode,
 }
 
 impl CollState {
     /// Build the state for `mode`, constructing the codec exactly once.
     pub fn new(mode: Mode) -> CollState {
         let codec = mode.codec();
-        let pipe = (mode.algo == Algo::Zccl
+        let pipe = ((mode.algo == Algo::Zccl || mode.algo == Algo::Hier)
             && mode.kind == CompressorKind::FzLight
             && !mode.multithread)
             .then(|| PipeFzLight::with_chunk(mode.pipe_chunk));
-        CollState { mode, codec, pipe, pool: ScratchPool::default(), codec_builds: 1 }
+        CollState {
+            mode,
+            codec,
+            pipe,
+            pool: ScratchPool::default(),
+            codec_builds: 1,
+            compress_calls: 0,
+            topo: None,
+            intra: Mode::plain(),
+        }
     }
 
     /// Compress with the context's codec and error bound, appending to
@@ -174,6 +197,7 @@ impl CollState {
         data: &[f32],
         out: &mut Vec<u8>,
     ) -> Result<crate::compress::CompressionStats> {
+        self.compress_calls += 1;
         self.codec.compress_into(data, self.mode.eb, out)
     }
 
@@ -273,6 +297,12 @@ impl CollState {
         self.codec_builds
     }
 
+    /// Codec compression invocations performed by this state (one per
+    /// frame built). Under [`Algo::Hier`], non-leader ranks stay at 0.
+    pub fn compress_calls(&self) -> u64 {
+        self.compress_calls
+    }
+
     /// Scratch pool counters.
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
@@ -293,6 +323,58 @@ impl<'c, 'a> CollCtx<'c, 'a> {
     /// so contexts and free functions can interleave on one communicator).
     pub fn over(comm: &'c mut Communicator<'a>, mode: Mode) -> Self {
         CollCtx { comm, state: CollState::new(mode), metrics: Metrics::default() }
+    }
+
+    /// [`CollCtx::over`] with a rank→node [`Topology`] for the
+    /// hierarchical schedules ([`Algo::Hier`]). Errors if the topology's
+    /// rank count does not match the communicator.
+    pub fn over_nodes(
+        comm: &'c mut Communicator<'a>,
+        mode: Mode,
+        topo: crate::topology::Topology,
+    ) -> Result<Self> {
+        let mut ctx = CollCtx::over(comm, mode);
+        ctx.set_topology(topo)?;
+        Ok(ctx)
+    }
+
+    /// Install (or replace) the rank→node topology consumed by
+    /// [`Algo::Hier`]. Flat modes ignore it.
+    pub fn set_topology(&mut self, topo: crate::topology::Topology) -> Result<()> {
+        if topo.ranks() != self.comm.size() {
+            return Err(crate::Error::invalid(format!(
+                "topology covers {} ranks but the communicator has {}",
+                topo.ranks(),
+                self.comm.size()
+            )));
+        }
+        self.state.topo = Some(std::sync::Arc::new(topo));
+        Ok(())
+    }
+
+    /// The installed topology, if any.
+    pub fn topology(&self) -> Option<&crate::topology::Topology> {
+        self.state.topo.as_deref()
+    }
+
+    /// Set the intra-node tier's mode. The two-level schedules currently
+    /// ship raw `f32` over the fast tier — only [`Algo::Plain`] is
+    /// accepted; a compressed intra tier (for slow shared-memory
+    /// transports) is future work.
+    pub fn set_intra_mode(&mut self, intra: Mode) -> Result<()> {
+        if intra.compresses() {
+            return Err(crate::Error::invalid(
+                "compressed intra-node tier not supported: only leaders compress \
+                 (use Mode::plain() for the fast tier)",
+            ));
+        }
+        self.state.intra = intra;
+        Ok(())
+    }
+
+    /// The intra-node tier's mode (see [`CollCtx::set_intra_mode`]).
+    pub fn intra_mode(&self) -> &Mode {
+        &self.state.intra
     }
 
     /// This rank.
@@ -362,6 +444,13 @@ impl<'c, 'a> CollCtx<'c, 'a> {
     /// [`CollState::codec_builds`]).
     pub fn codec_builds(&self) -> u64 {
         self.state.codec_builds()
+    }
+
+    /// Codec compression invocations performed by this context (see
+    /// [`CollState::compress_calls`]): the hierarchical tests assert
+    /// leaders compress and followers never do.
+    pub fn compress_calls(&self) -> u64 {
+        self.state.compress_calls()
     }
 
     /// Elementwise-reduce `input` across all ranks; every rank returns the

@@ -76,7 +76,8 @@ pub(crate) fn gather_with(
     let mut records: Vec<(u32, usize, std::ops::Range<usize>)> = Vec::new();
     match st.mode.algo {
         Algo::Plain | Algo::Cprp2p => f32s_to_bytes_into(my_chunk, &mut stores[0]),
-        Algo::CColl | Algo::Zccl => {
+        // Hier gathers like flat ZCCL (no hierarchical gather yet).
+        Algo::CColl | Algo::Zccl | Algo::Hier => {
             let t0 = std::time::Instant::now();
             st.compress_into(my_chunk, &mut stores[0])?;
             m.add(Phase::Compress, t0.elapsed().as_secs_f64());
@@ -128,7 +129,9 @@ pub(crate) fn gather_with(
             let payload = &stores[*si][r.clone()];
             counts.push(match st.mode.algo {
                 Algo::Plain | Algo::Cprp2p => payload.len() / 4,
-                Algo::CColl | Algo::Zccl => crate::compress::checked_count(payload)?,
+                Algo::CColl | Algo::Zccl | Algo::Hier => {
+                    crate::compress::checked_count(payload)?
+                }
             });
         }
         let mut out = vec![0.0f32; counts.iter().sum()];
@@ -139,7 +142,7 @@ pub(crate) fn gather_with(
                 Algo::Plain | Algo::Cprp2p => {
                     bytes_to_f32s_into_slice(payload, &mut out[off..off + cnt])?;
                 }
-                Algo::CColl | Algo::Zccl => {
+                Algo::CColl | Algo::Zccl | Algo::Hier => {
                     let t0 = std::time::Instant::now();
                     st.decode_into_slice(payload, &mut out[off..off + cnt])?;
                     m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
@@ -151,9 +154,10 @@ pub(crate) fn gather_with(
         return Ok(Some(out));
     }
 
-    // Forward everything to the parent through a pooled wire buffer.
+    // Forward everything to the parent through a transport-leased wire
+    // buffer handed over by value (send_pooled — no packet_from copy).
     let step = parent_step.expect("non-root has a parent");
-    let mut wire = st.pool.take_bytes();
+    let mut wire = comm.t.lease();
     if st.mode.algo == Algo::Cprp2p {
         // Compress each record's values for this hop (CPRP2P re-compresses
         // at every level of the tree).
@@ -180,10 +184,9 @@ pub(crate) fn gather_with(
         encode_records_into(&parts, &mut wire)?;
     }
     let t0 = std::time::Instant::now();
-    comm.t.send(step.peer, base + step.round as u64, &wire)?;
-    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     m.bytes_sent += wire.len() as u64;
-    st.pool.put_bytes(wire);
+    comm.t.send_pooled(step.peer, base + step.round as u64, wire)?;
+    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     release_stores(comm, st, stores);
     Ok(None)
 }

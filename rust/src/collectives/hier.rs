@@ -1,0 +1,667 @@
+//! Hierarchical topology-aware collectives ([`Algo::Hier`]).
+//!
+//! Real clusters are two-tier: cheap intra-node links, expensive
+//! inter-node links. Flat compressed schedules ignore that and make every
+//! rank compress, so a 4-rank node compresses the same wire payloads four
+//! times and ships them over the slow tier from four NICs. The
+//! hierarchical schedules (gZCCL, arXiv:2308.05199; C-Coll,
+//! arXiv:2304.03890 stresses keeping codec cost off the inter-node
+//! critical path) split every collective across the tiers of a
+//! [`Topology`]:
+//!
+//! - **intra-node tier** — raw `f32` windows over the fast links; only
+//!   computation (reduction folds), never compression;
+//! - **inter-node tier** — the unchanged flat ZCCL schedules run over the
+//!   node **leaders** only (via [`GroupTransport`]), carrying compressed
+//!   frames that are forwarded verbatim: compress-once extended across
+//!   tiers. Each node's data is compressed exactly once, by its leader,
+//!   and every frame that crosses the slow tier travels leader↔leader.
+//!
+//! Per collective:
+//!
+//! | collective  | intra up            | inter (leaders)                   | intra down        |
+//! |-------------|---------------------|-----------------------------------|-------------------|
+//! | `allreduce` | raw partials → leader fold | flat ZCCL reduce-scatter + allgather | raw result, binomial |
+//! | `allgather` | raw chunks → leader | per-rank frame bundles over the ring | raw result, binomial |
+//! | `bcast`     | root's frame → its leader | frame over the binomial tree | raw payload, binomial |
+//! | `scatter`   | root's frame bundle → its leader | subtree bundles over the binomial tree ([`binomial_subtree_into`]) | raw chunk per member |
+//!
+//! Because the leader tier reuses the flat code verbatim and per-rank
+//! frame boundaries are preserved, `allgather`, `bcast` and `scatter`
+//! return **bit-identical** results to flat [`Algo::Zccl`] on the same
+//! communicator, and `allreduce` is bit-identical to flat `Zccl` run over
+//! the leader group on the node-reduced inputs (and therefore to flat
+//! `Zccl` outright whenever every node holds one rank). The remaining
+//! collectives fall back to their flat `Zccl` form under `Hier`.
+//!
+//! Without an installed topology ([`super::CollCtx::set_topology`]),
+//! [`Topology::flat`] is assumed and everything degenerates to flat ZCCL.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use super::allgather::allgather_chunks_with;
+use super::ctx::CollState;
+use super::reduce_scatter::reduce_scatter_with;
+use super::scatter::{encode_bundle_into, parse_bundle};
+use super::{
+    bytes_to_f32s_into, bytes_to_f32s_into_slice, chunk_ranges, f32s_to_bytes_into,
+    fold_f32_bytes, Algo, Communicator, ReduceOp,
+};
+use crate::coordinator::{Metrics, Phase};
+use crate::topology::{
+    binomial_bcast_in_group, binomial_subtree_into, ring_in_group, ring_recv_chunk,
+    ring_send_chunk, tree_rounds, Topology,
+};
+use crate::transport::GroupTransport;
+use crate::{Error, Result};
+
+/// Parent-communicator tag budget reserved for one leader-tier stage (the
+/// inner flat collectives reserve `(L + 2) * SEG_TAG_SPAN`-ish spans from
+/// the group communicator, all offset into this window).
+const HIER_GROUP_SPAN: u64 = 1 << 33;
+
+/// The topology the hierarchical schedules run over: the installed one
+/// (an `Arc` clone — the node tables are shared, not copied, so warm
+/// iterated calls stay allocation-light), validated against the
+/// communicator, or the flat (rank-per-node) degenerate default. Also
+/// holds the per-tier contract: the intra tier declared on the context
+/// must be raw — `set_intra_mode` enforces it at the API boundary and
+/// this re-check keeps crate-internal callers honest.
+fn resolve_topo(st: &mut CollState, n: usize) -> Result<Arc<Topology>> {
+    if st.intra.compresses() {
+        return Err(Error::invalid(
+            "hierarchical schedules ship raw f32 on the intra tier; \
+             a compressed intra mode is not supported",
+        ));
+    }
+    if st.topo.is_none() {
+        // Cache the degenerate rank-per-node default so iterated calls
+        // without an installed topology stay allocation-light too.
+        st.topo = Some(Arc::new(Topology::flat(n)));
+    }
+    let topo = {
+        let t = st.topo.as_ref().expect("installed above");
+        if t.ranks() != n {
+            return Err(Error::invalid(format!(
+                "topology covers {} ranks but the communicator has {n}",
+                t.ranks()
+            )));
+        }
+        Arc::clone(t)
+    };
+    // Tag-budget guard: the leader tier's inner flat collectives reserve
+    // up to `(L + 2) * SEG_TAG_SPAN + L` tags out of the
+    // [`HIER_GROUP_SPAN`] window; more leaders than fit would silently
+    // spill into the parent's subsequent tag windows and cross-match
+    // unrelated messages — the same silent-collision class
+    // `segment_count` guards against on the segmented path.
+    let worst = (topo.nodes() as u64 + 3) * super::SEG_TAG_SPAN;
+    if worst > HIER_GROUP_SPAN {
+        return Err(Error::invalid(format!(
+            "hierarchical schedules support at most {} nodes (leader-tier tag budget)",
+            HIER_GROUP_SPAN / super::SEG_TAG_SPAN - 3
+        )));
+    }
+    Ok(topo)
+}
+
+/// Intra-node raw broadcast of the leader's `out` to every member over
+/// the fast tier (binomial over the member group, rooted at the leader).
+/// On entry the leader's `out` holds the values; on exit every member's
+/// `out` holds them (bit-identical — the wire is a plain `f32`
+/// serialisation).
+fn intra_bcast_result(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    members: &[usize],
+    local_idx: usize,
+    tag_base: u64,
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if members.len() == 1 {
+        return Ok(());
+    }
+    let (recv_step, send_steps) = binomial_bcast_in_group(members, local_idx, 0);
+    let (buf, pooled) = if local_idx == 0 {
+        let mut b = st.pool.take_bytes();
+        f32s_to_bytes_into(out, &mut b);
+        (b, true)
+    } else {
+        let step = recv_step.expect("non-leader member receives");
+        let mut got = comm.t.lease();
+        let t0 = std::time::Instant::now();
+        comm.t.recv_into(step.peer, tag_base + step.round as u64, &mut got)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += got.len() as u64;
+        (got, false)
+    };
+    for s in send_steps {
+        let t0 = std::time::Instant::now();
+        comm.t.send(s.peer, tag_base + s.round as u64, &buf)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_sent += buf.len() as u64;
+    }
+    if local_idx != 0 {
+        out.resize(buf.len() / 4, 0.0);
+        bytes_to_f32s_into_slice(&buf, out.as_mut_slice())?;
+    }
+    if pooled {
+        st.pool.put_bytes(buf);
+    } else {
+        comm.t.recycle(buf);
+    }
+    Ok(())
+}
+
+/// The inter tier of the hierarchical allreduce: the unchanged flat ZCCL
+/// reduce-scatter + allgather over the leader group. The caller has
+/// already switched `st.mode.algo` to [`Algo::Zccl`].
+#[allow(clippy::too_many_arguments)]
+fn leader_tier_allreduce(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    topo: &Topology,
+    group_base: u64,
+    acc: &[f32],
+    op: ReduceOp,
+    total_ranks: usize,
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let mut owned = st.pool.take_f32();
+    let mut gt = GroupTransport::new(&mut *comm.t, topo.leaders(), group_base)?;
+    let mut gc = Communicator::new(&mut gt);
+    reduce_scatter_with(&mut gc, st, acc, op, m, &mut owned)?;
+    // Finish with the TOTAL rank count: the node partials already hold
+    // every member's contribution (matters for Avg).
+    op.finish(&mut owned, total_ranks);
+    allgather_chunks_with(&mut gc, st, &owned, 1, m, out)?;
+    st.pool.put_f32(owned);
+    Ok(())
+}
+
+/// Hierarchical allreduce: intra-node raw reduce onto the leader →
+/// inter-leader compressed ring reduce-scatter/allgather → intra-node raw
+/// bcast. Only leaders touch the codec; each compressed frame crosses the
+/// slow tier leader↔leader and is forwarded without recompression.
+pub(crate) fn allreduce_hier(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    op: ReduceOp,
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    let topo = resolve_topo(st, n)?;
+    if n == 1 {
+        out.clear();
+        out.extend_from_slice(input);
+        op.finish(out, 1);
+        return Ok(());
+    }
+    // Tag plan — identical reservations on every rank.
+    let up_tag = comm.fresh_tags(1);
+    let group_base = comm.fresh_tags(HIER_GROUP_SPAN);
+    let down_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+
+    let node = topo.node_of(me);
+    let members = topo.members(node);
+    let local_idx = topo.local_index(me);
+    m.raw_bytes += (input.len() * 4) as u64;
+
+    if local_idx == 0 {
+        // (1) Intra tier: fold member partials in ascending member order
+        //     — deterministic, exact, raw over the fast tier.
+        let mut acc = st.pool.take_f32();
+        acc.extend_from_slice(input);
+        let mut wire = comm.t.lease();
+        for &mr in &members[1..] {
+            let t0 = std::time::Instant::now();
+            comm.t.recv_into(mr, up_tag, &mut wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            m.bytes_recv += wire.len() as u64;
+            let t0 = std::time::Instant::now();
+            fold_f32_bytes(op, &wire, &mut acc)?;
+            m.add(Phase::Compute, t0.elapsed().as_secs_f64());
+        }
+        comm.t.recycle(wire);
+
+        // (2) Inter tier (leaders only).
+        if topo.nodes() == 1 {
+            out.clear();
+            out.extend_from_slice(&acc);
+            op.finish(out, n);
+        } else {
+            let saved = st.mode.algo;
+            st.mode.algo = Algo::Zccl;
+            let inter =
+                leader_tier_allreduce(comm, st, &topo, group_base, &acc, op, n, m, out);
+            st.mode.algo = saved;
+            inter?;
+        }
+        st.pool.put_f32(acc);
+    } else {
+        // Follower: raw partial up (pooled zero-copy send), raw result
+        // down; the codec never runs here.
+        let mut up = comm.t.lease();
+        f32s_to_bytes_into(input, &mut up);
+        m.bytes_sent += up.len() as u64;
+        let t0 = std::time::Instant::now();
+        comm.t.send_pooled(topo.leader_of(me), up_tag, up)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+    }
+
+    // (3) Intra tier: the full result, raw, down the member binomial.
+    intra_bcast_result(comm, st, members, local_idx, down_base, m, out)
+}
+
+/// Hierarchical allgather. Members ship raw chunks to their leader; the
+/// leader compresses each member chunk **individually** (preserving the
+/// flat per-rank frame boundaries, so results are bit-identical to flat
+/// ZCCL) and the leaders ring node bundles of frames around the slow
+/// tier, forwarding them verbatim; each leader then decodes every frame
+/// exactly once and broadcasts the raw gathered vector down the fast
+/// tier.
+pub(crate) fn allgather_hier(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    my_chunk: &[f32],
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    let topo = resolve_topo(st, n)?;
+    if n == 1 {
+        out.clear();
+        out.extend_from_slice(my_chunk);
+        return Ok(());
+    }
+    let up_tag = comm.fresh_tags(1);
+    let ring_base = comm.fresh_tags(n as u64); // >= nodes - 1 rounds
+    let down_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+
+    let node = topo.node_of(me);
+    let members = topo.members(node);
+    let local_idx = topo.local_index(me);
+    m.raw_bytes += (my_chunk.len() * 4) as u64;
+
+    if local_idx != 0 {
+        // Follower: raw chunk up, raw gathered vector down.
+        let mut up = comm.t.lease();
+        f32s_to_bytes_into(my_chunk, &mut up);
+        m.bytes_sent += up.len() as u64;
+        let t0 = std::time::Instant::now();
+        comm.t.send_pooled(topo.leader_of(me), up_tag, up)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        return intra_bcast_result(comm, st, members, local_idx, down_base, m, out);
+    }
+
+    let nnodes = topo.nodes();
+    // (1) Collect member chunks (raw, fast tier) and compress each one
+    //     individually — one compression per rank, all at the leader.
+    let mut store = st.pool.take_bytes();
+    let mut frames: Vec<Range<usize>> = Vec::with_capacity(members.len());
+    {
+        let mut wire = comm.t.lease();
+        let mut vals = st.pool.take_f32();
+        for (k, &mr) in members.iter().enumerate() {
+            let start = store.len();
+            if k == 0 {
+                let t0 = std::time::Instant::now();
+                st.compress_into(my_chunk, &mut store)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            } else {
+                let t0 = std::time::Instant::now();
+                comm.t.recv_into(mr, up_tag, &mut wire)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_recv += wire.len() as u64;
+                vals.clear();
+                bytes_to_f32s_into(&wire, &mut vals)?;
+                let t0 = std::time::Instant::now();
+                st.compress_into(&vals, &mut store)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            }
+            frames.push(start..store.len());
+        }
+        st.pool.put_f32(vals);
+        comm.t.recycle(wire);
+    }
+
+    // (2) Ring the node bundles around the leader tier (compressed frames
+    //     forwarded verbatim, leader↔leader only).
+    let lring = ring_in_group(topo.leaders(), node);
+    let mut bundles: Vec<Option<Vec<u8>>> = vec![None; nnodes];
+    {
+        let mut mine = st.pool.take_bytes();
+        let parts: Vec<&[u8]> = frames.iter().map(|r| &store[r.clone()]).collect();
+        encode_bundle_into(my_chunk.len(), &parts, &mut mine)?;
+        bundles[node] = Some(mine);
+    }
+    st.pool.put_bytes(store);
+    for t in 0..nnodes - 1 {
+        let s = ring_send_chunk(node, t, nnodes);
+        let r = ring_recv_chunk(node, t, nnodes);
+        let tag = ring_base + t as u64;
+        let send_buf = bundles[s].as_ref().expect("ring schedule owns sent bundle");
+        let t0 = std::time::Instant::now();
+        comm.t.send(lring.next, tag, send_buf)?;
+        m.bytes_sent += send_buf.len() as u64;
+        let mut got = comm.t.lease();
+        comm.t.recv_into(lring.prev, tag, &mut got)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += got.len() as u64;
+        bundles[r] = Some(got);
+    }
+
+    // (3) Size the output from the (size-bounded) frame headers, then
+    //     placement-decode every frame — each exactly once, all here.
+    let mut parsed: Vec<(Vec<u8>, Vec<Range<usize>>)> = Vec::with_capacity(nnodes);
+    let mut counts = vec![0usize; n];
+    for (j, slot) in bundles.iter_mut().enumerate() {
+        let buf = slot.take().expect("all bundles gathered");
+        let (_, ranges) = parse_bundle(&buf, topo.members(j).len())?;
+        for (k, &rank) in topo.members(j).iter().enumerate() {
+            counts[rank] = crate::compress::checked_count(&buf[ranges[k].clone()])?;
+        }
+        parsed.push((buf, ranges));
+    }
+    let mut offsets = Vec::with_capacity(n + 1);
+    offsets.push(0usize);
+    for &c in &counts {
+        offsets.push(offsets.last().unwrap() + c);
+    }
+    out.resize(offsets[n], 0.0);
+    for (j, (buf, ranges)) in parsed.into_iter().enumerate() {
+        for (k, &rank) in topo.members(j).iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            st.decode_into_slice(
+                &buf[ranges[k].clone()],
+                &mut out[offsets[rank]..offsets[rank + 1]],
+            )
+            .map_err(|e| Error::corrupt(format!("hier allgather rank {rank}: {e}")))?;
+            m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+        }
+        if j == node {
+            st.pool.put_bytes(buf);
+        } else {
+            comm.t.recycle(buf);
+        }
+    }
+
+    // (4) Intra tier: raw gathered vector down the member binomial.
+    intra_bcast_result(comm, st, members, 0, down_base, m, out)
+}
+
+/// Hierarchical broadcast: the root compresses **once**; the frame hops
+/// to the root's node leader (if distinct), travels the leader binomial
+/// tree verbatim over the slow tier, is decoded once per node by the
+/// leader, and fans out raw over the fast tier. Output is bit-identical
+/// to flat ZCCL (`D(C(data))` everywhere).
+pub(crate) fn bcast_hier(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    data: Option<&[f32]>,
+    root: usize,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let topo = resolve_topo(st, n)?;
+    let hop_tag = comm.fresh_tags(1);
+    let tree_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let down_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+
+    let node = topo.node_of(me);
+    let members = topo.members(node);
+    let local_idx = topo.local_index(me);
+    let root_node = topo.node_of(root);
+    let root_leader = topo.leader_of(root);
+
+    // (1) The root compresses once. A follower root hops the frame to its
+    //     leader over the fast tier and rejoins as a plain member.
+    let mut own_frame: Option<Vec<u8>> = None;
+    if me == root {
+        let d = data.unwrap();
+        m.raw_bytes += (d.len() * 4) as u64;
+        if me == root_leader {
+            let mut f = st.pool.take_bytes();
+            let t0 = std::time::Instant::now();
+            st.compress_into(d, &mut f)?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            own_frame = Some(f);
+        } else {
+            let mut f = comm.t.lease();
+            let t0 = std::time::Instant::now();
+            st.compress_into(d, &mut f)?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            m.bytes_sent += f.len() as u64;
+            let t0 = std::time::Instant::now();
+            comm.t.send_pooled(root_leader, hop_tag, f)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        }
+    }
+
+    if local_idx == 0 {
+        // Leader: obtain the frame, forward it verbatim down the leader
+        // tree (slow tier), decode exactly once, fan out raw.
+        let (recv_step, send_steps) = binomial_bcast_in_group(topo.leaders(), node, root_node);
+        let (frame, pooled) = match own_frame {
+            Some(f) => (f, true),
+            None => {
+                let mut got = comm.t.lease();
+                let t0 = std::time::Instant::now();
+                if node == root_node {
+                    comm.t.recv_into(root, hop_tag, &mut got)?;
+                } else {
+                    let step = recv_step.expect("non-root-node leader receives");
+                    comm.t.recv_into(step.peer, tree_base + step.round as u64, &mut got)?;
+                }
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_recv += got.len() as u64;
+                (got, false)
+            }
+        };
+        for s in send_steps {
+            let t0 = std::time::Instant::now();
+            comm.t.send(s.peer, tree_base + s.round as u64, &frame)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            m.bytes_sent += frame.len() as u64;
+        }
+        let cnt = crate::compress::checked_count(&frame)?;
+        let mut out = vec![0.0f32; cnt];
+        let t0 = std::time::Instant::now();
+        st.decode_into_slice(&frame, &mut out)?;
+        m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+        if pooled {
+            st.pool.put_bytes(frame);
+        } else {
+            comm.t.recycle(frame);
+        }
+        intra_bcast_result(comm, st, members, 0, down_base, m, &mut out)?;
+        Ok(out)
+    } else {
+        let mut out = Vec::new();
+        intra_bcast_result(comm, st, members, local_idx, down_base, m, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// The global ranks covered by the leader-tree subtree rooted at node
+/// `at` (tree rooted at node `lroot`): subtree nodes in breadth-first
+/// order via the iterative [`binomial_subtree_into`], then each node's
+/// members. Sender and receiver compute the same enumeration, so bundle
+/// positions need no rank table.
+fn subtree_ranks(topo: &Topology, lroot: usize, at: usize, out: &mut Vec<usize>) {
+    let mut nodes = Vec::new();
+    binomial_subtree_into(at, lroot, topo.nodes(), &mut nodes);
+    out.clear();
+    for &j in &nodes {
+        out.extend_from_slice(topo.members(j));
+    }
+}
+
+/// Hierarchical scatter: the root compresses each rank's chunk **once**;
+/// bundles of frames travel the leader binomial tree (each leader
+/// forwarding its children's node-subtree bundles, slow tier,
+/// leader↔leader); each leader decodes its members' frames — the node's
+/// only decompressions — and hands every member its raw chunk over the
+/// fast tier. Outputs are bit-identical to flat ZCCL.
+pub(crate) fn scatter_hier(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    data: Option<&[f32]>,
+    root: usize,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let topo = resolve_topo(st, n)?;
+    let hop_tag = comm.fresh_tags(1);
+    let tree_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let down_tag = comm.fresh_tags(1);
+
+    let node = topo.node_of(me);
+    let members = topo.members(node);
+    let local_idx = topo.local_index(me);
+    let root_node = topo.node_of(root);
+    let root_leader = topo.leader_of(root);
+
+    // (1) The root compresses every rank's chunk once, packed in the
+    //     root-leader subtree enumeration (= all ranks).
+    let mut root_bundle: Option<(Vec<u8>, Vec<Range<usize>>, usize)> = None;
+    if me == root {
+        let d = data.unwrap();
+        m.raw_bytes += (d.len() * 4) as u64;
+        let ranges = chunk_ranges(d.len(), n);
+        let mut order = Vec::new();
+        subtree_ranks(&topo, root_node, root_node, &mut order);
+        let mut store = st.pool.take_bytes();
+        let mut frames = Vec::with_capacity(n);
+        for &r in &order {
+            let start = store.len();
+            let t0 = std::time::Instant::now();
+            st.compress_into(&d[ranges[r].clone()], &mut store)?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            frames.push(start..store.len());
+        }
+        if me == root_leader {
+            root_bundle = Some((store, frames, d.len()));
+        } else {
+            let mut wire = comm.t.lease();
+            let parts: Vec<&[u8]> = frames.iter().map(|r| &store[r.clone()]).collect();
+            encode_bundle_into(d.len(), &parts, &mut wire)?;
+            m.bytes_sent += wire.len() as u64;
+            let t0 = std::time::Instant::now();
+            comm.t.send_pooled(root_leader, hop_tag, wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            st.pool.put_bytes(store);
+        }
+    }
+
+    if local_idx == 0 {
+        // Leader: obtain the bundle covering my node subtree, forward
+        // each child leader its sub-bundle, deliver member chunks raw.
+        let mut my_ranks = Vec::new();
+        subtree_ranks(&topo, root_node, node, &mut my_ranks);
+        let (recv_step, send_steps) = binomial_bcast_in_group(topo.leaders(), node, root_node);
+        let (store, frames, total, pooled) = match root_bundle {
+            Some((s, f, t)) => (s, f, t, true),
+            None => {
+                let mut got = comm.t.lease();
+                let t0 = std::time::Instant::now();
+                if node == root_node {
+                    comm.t.recv_into(root, hop_tag, &mut got)?;
+                } else {
+                    let step = recv_step.expect("non-root-node leader receives");
+                    comm.t.recv_into(step.peer, tree_base + step.round as u64, &mut got)?;
+                }
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_recv += got.len() as u64;
+                let (total, ranges) = parse_bundle(&got, my_ranks.len())?;
+                (got, ranges, total, false)
+            }
+        };
+        let mut child_ranks = Vec::new();
+        for s in send_steps {
+            let child_node = topo.node_of(s.peer);
+            subtree_ranks(&topo, root_node, child_node, &mut child_ranks);
+            let parts: Vec<&[u8]> = child_ranks
+                .iter()
+                .map(|r| {
+                    let idx =
+                        my_ranks.iter().position(|x| x == r).expect("child rank in subtree");
+                    &store[frames[idx].clone()]
+                })
+                .collect();
+            // One-shot bundle: assemble straight in a transport-leased
+            // wire buffer and send it by value — no packet_from copy.
+            let mut wire = comm.t.lease();
+            encode_bundle_into(total, &parts, &mut wire)?;
+            let t0 = std::time::Instant::now();
+            m.bytes_sent += wire.len() as u64;
+            comm.t.send_pooled(s.peer, tree_base + s.round as u64, wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        }
+
+        // Deliver: my node's ranks lead the enumeration (BFS starts at
+        // the own node). Decode each member frame once — validated
+        // against the frame's physical size first — and ship raw chunks.
+        let ranges = chunk_ranges(total, n);
+        let mut own = Vec::new();
+        let mut vals = st.pool.take_f32();
+        for (k, &mr) in members.iter().enumerate() {
+            let frame = &store[frames[k].clone()];
+            let want = ranges[mr].len();
+            let physical = crate::compress::checked_count(frame)?;
+            if physical != want {
+                return Err(Error::corrupt(format!(
+                    "hier scatter rank {mr}: frame holds {physical} values, want {want}"
+                )));
+            }
+            if mr == me {
+                own = vec![0.0f32; want];
+                let t0 = std::time::Instant::now();
+                st.decode_into_slice(frame, &mut own)
+                    .map_err(|e| Error::corrupt(format!("hier scatter rank {mr}: {e}")))?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+            } else {
+                vals.clear();
+                vals.resize(want, 0.0);
+                let t0 = std::time::Instant::now();
+                st.decode_into_slice(frame, &mut vals)
+                    .map_err(|e| Error::corrupt(format!("hier scatter rank {mr}: {e}")))?;
+                m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+                let mut raw = comm.t.lease();
+                f32s_to_bytes_into(&vals, &mut raw);
+                m.bytes_sent += raw.len() as u64;
+                let t0 = std::time::Instant::now();
+                comm.t.send_pooled(mr, down_tag, raw)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            }
+        }
+        st.pool.put_f32(vals);
+        if pooled {
+            st.pool.put_bytes(store);
+        } else {
+            comm.t.recycle(store);
+        }
+        Ok(own)
+    } else {
+        // Member (a follower root rejoins here): raw chunk from the
+        // leader over the fast tier.
+        let mut got = comm.t.lease();
+        let t0 = std::time::Instant::now();
+        comm.t.recv_into(topo.leader_of(me), down_tag, &mut got)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += got.len() as u64;
+        let mut out = vec![0.0f32; got.len() / 4];
+        bytes_to_f32s_into_slice(&got, &mut out)?;
+        comm.t.recycle(got);
+        Ok(out)
+    }
+}

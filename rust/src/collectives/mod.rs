@@ -73,7 +73,8 @@
 //!
 //! ## Modes
 //!
-//! Every collective is implemented in four modes (Table 6):
+//! Every collective is implemented in the paper's four flat modes
+//! (Table 6) plus the two-level hierarchical mode:
 //!
 //! | mode       | data movement (§3.1.1)            | computation (§3.1.2)              |
 //! |------------|-----------------------------------|-----------------------------------|
@@ -81,6 +82,14 @@
 //! | `Cprp2p`   | compress before EVERY send, decompress after EVERY recv (Zhou et al.) |
 //! | `CColl`    | compress-once framework, SZx      | compressed RS, no overlap (IPDPS'24 C-Coll) |
 //! | `Zccl`     | compress-once + balanced pipeline | PIPE-fZ-light overlap (§3.5.2)    |
+//! | `Hier`     | two-level: raw `f32` windows on the fast intra-node tier, ZCCL compressed frames between node **leaders** only (gZCCL-style; see [`hier`]) | intra-node raw reduce → inter-leader ZCCL reduce-scatter → intra-node raw bcast |
+//!
+//! `Hier` consumes a [`crate::topology::Topology`] from the context
+//! ([`CollCtx::over_nodes`] / [`CollCtx::set_topology`]); without one it
+//! defaults to [`crate::topology::Topology::flat`] and degenerates to
+//! flat `Zccl`. Hierarchical schedules exist for allreduce, allgather,
+//! bcast and scatter; the remaining collectives transparently fall back
+//! to their flat `Zccl` form under `Hier`.
 //!
 //! The collectives are synchronous SPMD operations over a [`Communicator`]:
 //! all ranks of the communicator must call the same operation in the same
@@ -93,6 +102,7 @@ pub mod alltoall;
 pub mod bcast;
 pub mod ctx;
 pub mod gather;
+pub mod hier;
 pub mod reduce;
 pub mod reduce_scatter;
 pub mod scatter;
@@ -130,6 +140,9 @@ pub enum Algo {
     CColl,
     /// This paper: compress-once + balanced pipeline + PIPE overlap.
     Zccl,
+    /// Two-level topology-aware schedules: raw exchanges inside a node,
+    /// ZCCL compressed frames between node leaders only (see [`hier`]).
+    Hier,
 }
 
 /// Full mode description for a collective call.
@@ -173,6 +186,13 @@ impl Mode {
     /// ZCCL with the given codec.
     pub fn zccl(kind: CompressorKind, eb: ErrorBound) -> Mode {
         Mode { algo: Algo::Zccl, kind, eb, ..Mode::plain() }
+    }
+    /// Hierarchical two-level mode: the inter-leader tier runs ZCCL with
+    /// the given codec, the intra-node tier ships raw `f32`. Pair with
+    /// [`CollCtx::over_nodes`] or [`CollCtx::set_topology`]; without a
+    /// topology it degenerates to flat ZCCL.
+    pub fn hier(kind: CompressorKind, eb: ErrorBound) -> Mode {
+        Mode { algo: Algo::Hier, kind, eb, ..Mode::plain() }
     }
     /// Toggle the multi-thread codec wrappers.
     pub fn with_multithread(mut self, mt: bool) -> Mode {
@@ -278,6 +298,24 @@ where
     F: Fn(&mut Communicator) -> R + Send + Sync + 'static,
 {
     MemFabric::run(n, move |t| {
+        let mut comm = Communicator::new(t);
+        f(&mut comm)
+    })
+}
+
+/// [`run_ranks`] over a node-partitioned fabric: one rank per entry of
+/// `topo`, with every message tier-classified. Returns the per-rank
+/// results plus the fabric's [`crate::transport::memchan::TrafficReport`]
+/// (bytes crossing the slow tier, which rank pairs crossed it).
+pub fn run_ranks_on<R, F>(
+    topo: &crate::topology::Topology,
+    f: F,
+) -> (Vec<R>, crate::transport::memchan::TrafficReport)
+where
+    R: Send + 'static,
+    F: Fn(&mut Communicator) -> R + Send + Sync + 'static,
+{
+    MemFabric::run_on_nodes(topo, move |t| {
         let mut comm = Communicator::new(t);
         f(&mut comm)
     })

@@ -15,7 +15,7 @@
 //! intermediate vector, timed as [`Phase::DecompressReduce`].
 
 use super::ctx::CollState;
-use super::{f32s_to_bytes, fold_f32_bytes, Algo, Communicator, Mode, ReduceOp};
+use super::{f32s_to_bytes_into, fold_f32_bytes, Algo, Communicator, Mode, ReduceOp};
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{binomial_bcast, tree_rounds};
 use crate::{Error, Result};
@@ -89,13 +89,16 @@ pub(crate) fn reduce_with(
         return Ok(Some(acc));
     }
 
-    // Send the partial up.
+    // Send the partial up: serialise/compress straight into a
+    // transport-leased wire buffer and hand it over by value — the
+    // up-link frame is built once and sent once, with no packet_from
+    // copy.
     let step = parent_step.expect("non-root has a parent");
     let tag = base + step.round as u64;
-    let wire = match st.mode.algo {
-        Algo::Plain => f32s_to_bytes(&acc),
+    let mut wire = comm.t.lease();
+    match st.mode.algo {
+        Algo::Plain => f32s_to_bytes_into(&acc, &mut wire),
         _ => {
-            let mut frame = st.pool.take_bytes();
             let t0 = std::time::Instant::now();
             match &st.pipe {
                 // No receive is outstanding at this point (children
@@ -104,23 +107,20 @@ pub(crate) fn reduce_with(
                 // decompressing earlier in a streaming transport. Hook
                 // polls nothing here.
                 Some(p) => {
-                    p.compress_into_with_progress(&acc, st.mode.eb, &mut frame, &mut |_| {})?;
+                    p.compress_into_with_progress(&acc, st.mode.eb, &mut wire, &mut |_| {})?;
                 }
                 None => {
-                    st.codec.compress_into(&acc, st.mode.eb, &mut frame)?;
+                    st.codec.compress_into(&acc, st.mode.eb, &mut wire)?;
                 }
             }
+            st.compress_calls += 1; // direct codec calls bypass compress_into
             m.add(Phase::Compress, t0.elapsed().as_secs_f64());
-            frame
         }
-    };
-    let t0 = std::time::Instant::now();
-    comm.t.send(step.peer, tag, &wire)?;
-    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-    m.bytes_sent += wire.len() as u64;
-    if st.mode.algo != Algo::Plain {
-        st.pool.put_bytes(wire);
     }
+    let t0 = std::time::Instant::now();
+    m.bytes_sent += wire.len() as u64;
+    comm.t.send_pooled(step.peer, tag, wire)?;
+    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     Ok(None)
 }
 

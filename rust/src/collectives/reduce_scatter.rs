@@ -77,16 +77,18 @@ pub(crate) fn reduce_scatter_with(
 
     match st.mode.algo {
         Algo::Plain => {
-            let mut send_buf = st.pool.take_bytes();
             let mut got = comm.t.lease();
             for t in 0..n - 1 {
                 let s = &ranges[ring_send_chunk(me, t, n)];
                 let r = &ranges[ring_recv_chunk(me, t, n)];
-                send_buf.clear();
+                // Serialise into a transport-leased wire buffer and hand
+                // it over by value: the packet IS the buffer (zero-copy
+                // send); the pool keeps warm rounds allocation-free.
+                let mut send_buf = comm.t.lease();
                 f32s_to_bytes_into(&acc[s.clone()], &mut send_buf);
                 let t0 = std::time::Instant::now();
-                comm.t.send(nb.next, base + t as u64, &send_buf)?;
                 m.bytes_sent += send_buf.len() as u64;
+                comm.t.send_pooled(nb.next, base + t as u64, send_buf)?;
                 comm.t.recv_into(nb.prev, base + t as u64, &mut got)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
@@ -95,22 +97,23 @@ pub(crate) fn reduce_scatter_with(
                 fold_f32_bytes(op, &got, &mut acc[r.clone()])?;
                 m.add(Phase::Compute, t0.elapsed().as_secs_f64());
             }
-            st.pool.put_bytes(send_buf);
             comm.t.recycle(got);
         }
         Algo::Cprp2p | Algo::CColl => {
-            let mut frame = st.pool.take_bytes();
             let mut got = comm.t.lease();
             for t in 0..n - 1 {
                 let s = &ranges[ring_send_chunk(me, t, n)];
                 let r = &ranges[ring_recv_chunk(me, t, n)];
-                frame.clear();
+                // Compress straight into a transport-leased wire buffer —
+                // the frame is sent once, by value, with no packet_from
+                // copy.
+                let mut frame = comm.t.lease();
                 let t0 = std::time::Instant::now();
                 st.compress_into(&acc[s.clone()], &mut frame)?;
                 m.add(Phase::Compress, t0.elapsed().as_secs_f64());
                 let t0 = std::time::Instant::now();
-                comm.t.send(nb.next, base + t as u64, &frame)?;
                 m.bytes_sent += frame.len() as u64;
+                comm.t.send_pooled(nb.next, base + t as u64, frame)?;
                 comm.t.recv_into(nb.prev, base + t as u64, &mut got)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
@@ -120,10 +123,12 @@ pub(crate) fn reduce_scatter_with(
                 st.decode_fold_into(&got, op, &mut acc[r.clone()])?;
                 m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
-            st.pool.put_bytes(frame);
             comm.t.recycle(got);
         }
-        Algo::Zccl => {
+        // Hier has no dedicated hierarchical reduce-scatter yet: it runs
+        // the flat ZCCL pipeline (the hierarchical allreduce composes its
+        // leader tier out of exactly this arm via a GroupTransport).
+        Algo::Zccl | Algo::Hier => {
             reduce_scatter_zccl(comm, st, &mut acc, &ranges, op, base, m)?;
         }
     }
@@ -153,14 +158,16 @@ fn reduce_scatter_zccl(
     // compress-per-round — that is inherent to collective computation).
     let pipe = st.pipe.clone();
     let mode = st.mode;
-    let mut frame = st.pool.take_bytes();
     let mut got = comm.t.lease();
 
     for t in 0..n - 1 {
         let s = &ranges[ring_send_chunk(me, t, n)];
         let r = &ranges[ring_recv_chunk(me, t, n)];
         let tag = base + t as u64;
-        frame.clear();
+        // The per-round frame compresses straight into a transport-leased
+        // wire buffer: it is sent once, by value (no packet_from copy),
+        // and its capacity circulates back through the pool.
+        let mut frame = comm.t.lease();
 
         // Post the receive BEFORE compressing, then poll it from inside
         // the compression loop.
@@ -174,6 +181,8 @@ fn reduce_scatter_zccl(
                         let _ = tr.try_complete(&mut h);
                     })?;
                 }
+                st.compress_calls += 1; // PIPE path bypasses CollState::compress_into
+
                 // Time spent here covers compression AND the polls it
                 // absorbed — that is precisely the §3.5.2 effect (comm
                 // hidden inside compression).
@@ -187,8 +196,8 @@ fn reduce_scatter_zccl(
         }
 
         let t0 = std::time::Instant::now();
-        comm.t.send(nb.next, tag, &frame)?;
         m.bytes_sent += frame.len() as u64;
+        comm.t.send_pooled(nb.next, tag, frame)?;
         // Pool-aware completion: the payload lands in the leased wire
         // buffer by swap. Bounded spin then yield, so a straggling peer
         // does not pin a core.
@@ -216,7 +225,6 @@ fn reduce_scatter_zccl(
             }
         }
     }
-    st.pool.put_bytes(frame);
     comm.t.recycle(got);
     Ok(())
 }

@@ -64,6 +64,7 @@ pub(crate) fn scatter_with(
     match st.mode.algo {
         Algo::Plain | Algo::Cprp2p => scatter_values(comm, st, data, root, m),
         Algo::CColl | Algo::Zccl => scatter_frames(comm, st, data, root, m),
+        Algo::Hier => super::hier::scatter_hier(comm, st, data, root, m),
     }
 }
 
@@ -141,7 +142,6 @@ fn scatter_values(
     };
 
     let mut block = st.pool.take_f32();
-    let mut wire = st.pool.take_bytes();
     for s in send_steps {
         let child_subtree = binomial_subtree(s.peer, root, n);
         block.clear();
@@ -149,7 +149,9 @@ fn scatter_values(
             let idx = my_subtree.iter().position(|x| x == r).expect("child in subtree");
             block.extend_from_slice(&values[offsets[idx].clone()]);
         }
-        wire.clear();
+        // Each child's block is built straight in a transport-leased wire
+        // buffer and sent by value — no packet_from copy.
+        let mut wire = comm.t.lease();
         le::put_u64(&mut wire, total as u64);
         match st.mode.algo {
             Algo::Plain => f32s_to_bytes_into(&block, &mut wire),
@@ -160,11 +162,10 @@ fn scatter_values(
             }
         }
         let t0 = std::time::Instant::now();
-        comm.t.send(s.peer, base + s.round as u64, &wire)?;
-        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_sent += wire.len() as u64;
+        comm.t.send_pooled(s.peer, base + s.round as u64, wire)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     }
-    st.pool.put_bytes(wire);
     st.pool.put_f32(block);
 
     let out = values[offsets[0].clone()].to_vec();
@@ -217,7 +218,6 @@ fn scatter_frames(
             (total, msg, frames, false)
         };
 
-    let mut wire = st.pool.take_bytes();
     for s in send_steps {
         let child_subtree = binomial_subtree(s.peer, root, n);
         let parts: Vec<&[u8]> = child_subtree
@@ -227,14 +227,15 @@ fn scatter_frames(
                 &store[frames[idx].clone()]
             })
             .collect();
-        wire.clear();
+        // Bundles assemble straight in transport-leased wire buffers and
+        // travel by value — no packet_from copy per hop.
+        let mut wire = comm.t.lease();
         encode_bundle_into(total, &parts, &mut wire)?;
         let t0 = std::time::Instant::now();
-        comm.t.send(s.peer, base + s.round as u64, &wire)?;
-        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_sent += wire.len() as u64;
+        comm.t.send_pooled(s.peer, base + s.round as u64, wire)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     }
-    st.pool.put_bytes(wire);
 
     // Placement-decode ONLY our own chunk, exactly once, straight into
     // the once-sized result. A corrupt `total` must fail against the
@@ -263,8 +264,15 @@ fn scatter_frames(
 /// payloads. Appended to `out`. Payload lengths ride u32 fields, so
 /// oversized frames are an explicit error (same [`frame_u32`] guard the
 /// codec frame tables use), not a silent wrap — validated before `out`
-/// is touched.
-fn encode_bundle_into(total: usize, payloads: &[&[u8]], out: &mut Vec<u8>) -> Result<()> {
+/// is touched. Shared with the hierarchical forwarding paths
+/// ([`super::hier`]), whose leader-tree bundles use the same layout
+/// (`total` is the operation's element count for scatter, the sender's
+/// contribution count for the allgather node bundles).
+pub(crate) fn encode_bundle_into(
+    total: usize,
+    payloads: &[&[u8]],
+    out: &mut Vec<u8>,
+) -> Result<()> {
     let count = frame_u32(payloads.len(), "scatter bundle count")?;
     let mut sizes = Vec::with_capacity(payloads.len());
     for p in payloads {
@@ -285,7 +293,10 @@ fn encode_bundle_into(total: usize, payloads: &[&[u8]], out: &mut Vec<u8>) -> Re
 
 /// Parse a bundle **in place**: returns the total element count and each
 /// payload's range within `msg` (no copies).
-fn parse_bundle(msg: &[u8], expect: usize) -> Result<(usize, Vec<std::ops::Range<usize>>)> {
+pub(crate) fn parse_bundle(
+    msg: &[u8],
+    expect: usize,
+) -> Result<(usize, Vec<std::ops::Range<usize>>)> {
     let mut pos = 0usize;
     let total = le::get_u64(msg, &mut pos)? as usize;
     let count = le::get_u32(msg, &mut pos)? as usize;

@@ -95,7 +95,11 @@ pub(crate) fn compress_chunk(data: &[f32], twoeb: f64) -> (Vec<u8>, usize, usize
 /// Hot path (see EXPERIMENTS.md §Perf): sign words and magnitudes are
 /// packed straight into the payload via [`super::bits::pack_fixed`] —
 /// zero allocations per block.
-pub(crate) fn compress_chunk_into(data: &[f32], twoeb: f64, payload: &mut Vec<u8>) -> (usize, usize) {
+pub(crate) fn compress_chunk_into(
+    data: &[f32],
+    twoeb: f64,
+    payload: &mut Vec<u8>,
+) -> (usize, usize) {
     debug_assert!(!data.is_empty());
     let inv = 1.0 / twoeb;
     let q0 = quantize(data[0], inv);
@@ -146,7 +150,12 @@ pub(crate) fn compress_chunk_into(data: &[f32], twoeb: f64, payload: &mut Vec<u8
 /// Decompress one chunk of `cn` values, appending to `out`. Thin wrapper
 /// over [`decompress_chunk_into_slice`] kept for Vec-building callers
 /// (the PIPE decode loop grows one Vec across chunks).
-pub(crate) fn decompress_chunk(payload: &[u8], cn: usize, twoeb: f64, out: &mut Vec<f32>) -> Result<()> {
+pub(crate) fn decompress_chunk(
+    payload: &[u8],
+    cn: usize,
+    twoeb: f64,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let start = out.len();
     out.resize(start + cn, 0.0);
     let res = decompress_chunk_into_slice(payload, cn, twoeb, &mut out[start..]);
@@ -393,7 +402,9 @@ fn write_frame(
 }
 
 /// Parsed view over a frame's chunk table: `(chunk_values, payload ranges)`.
-pub(crate) fn frame_chunks(bytes: &[u8]) -> Result<(usize, f64, usize, Vec<std::ops::Range<usize>>)> {
+pub(crate) fn frame_chunks(
+    bytes: &[u8],
+) -> Result<(usize, f64, usize, Vec<std::ops::Range<usize>>)> {
     let h = read_header(bytes)?;
     if h.codec != CompressorKind::FzLight {
         return Err(Error::corrupt("not an fzlight frame"));
@@ -651,7 +662,11 @@ mod tests {
         let c = FzLight::default().compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
         let d = FzLight::default().decompress(&c.bytes).unwrap();
         check_bound(&f.values, &d, 1e-3);
-        assert!(c.stats.ratio() > 4.0, "smooth field should compress well, got {}", c.stats.ratio());
+        assert!(
+            c.stats.ratio() > 4.0,
+            "smooth field should compress well, got {}",
+            c.stats.ratio()
+        );
     }
 
     #[test]
@@ -755,7 +770,9 @@ mod tests {
         let c = FzLight::default().compress(&data, ErrorBound::Abs(1e-3)).unwrap();
         let mut acc = vec![0.0f32; 99];
         let before = acc.clone();
-        assert!(FzLight::default().decompress_fold_into(&c.bytes, ReduceOp::Sum, &mut acc).is_err());
+        assert!(FzLight::default()
+            .decompress_fold_into(&c.bytes, ReduceOp::Sum, &mut acc)
+            .is_err());
         assert_eq!(acc, before, "length mismatch is detected before any fold");
     }
 
@@ -764,7 +781,9 @@ mod tests {
         let data: Vec<f32> = (0..3000).map(|i| (i as f32 * 0.11).sin()).collect();
         let c = FzLight::with_chunk(1000).compress(&data, ErrorBound::Abs(1e-4)).unwrap();
         let mut out = vec![7.0f32; 3];
-        assert!(FzLight::default().decompress_into(&c.bytes[..c.bytes.len() - 1], &mut out).is_err());
+        assert!(FzLight::default()
+            .decompress_into(&c.bytes[..c.bytes.len() - 1], &mut out)
+            .is_err());
         assert_eq!(out, vec![7.0, 7.0, 7.0], "error path must not leave partial decodes");
     }
 

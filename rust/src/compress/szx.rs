@@ -111,7 +111,12 @@ pub(crate) fn compress_chunk_into(data: &[f32], eb: f64, payload: &mut Vec<u8>) 
 }
 
 /// Decompress one chunk of `cn` values into `out`.
-pub(crate) fn decompress_chunk(payload: &[u8], cn: usize, eb: f64, out: &mut Vec<f32>) -> Result<()> {
+pub(crate) fn decompress_chunk(
+    payload: &[u8],
+    cn: usize,
+    eb: f64,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let twoeb = 2.0 * eb;
     let mut pos = 0usize;
     let mut remaining = cn;

@@ -107,6 +107,7 @@ impl Config {
             "cprp2p" => Algo::Cprp2p,
             "ccoll" | "c-coll" => Algo::CColl,
             "zccl" => Algo::Zccl,
+            "hier" | "hierarchical" => Algo::Hier,
             other => return Err(Error::invalid(format!("unknown algo '{other}'"))),
         };
         let kind: CompressorKind =
@@ -195,6 +196,12 @@ mod tests {
         let mut c = Config::parse("[collective]\nalgo = \"plain\"\n").unwrap();
         c.apply_overrides(["collective.algo=cprp2p"].into_iter()).unwrap();
         assert_eq!(c.mode().unwrap().algo, Algo::Cprp2p);
+    }
+
+    #[test]
+    fn hier_algo_parses() {
+        let c = Config::parse("[collective]\nalgo = \"hier\"\n").unwrap();
+        assert_eq!(c.mode().unwrap().algo, Algo::Hier);
     }
 
     #[test]

@@ -11,15 +11,17 @@
 use std::path::Path;
 
 use crate::apps::{image_stacking, visualize};
-use crate::collectives::{run_ranks, Algo, CollCtx, Mode, ReduceOp};
+use crate::collectives::{run_ranks, run_ranks_on, Algo, CollCtx, Mode, ReduceOp};
 use crate::compress::stats::{error_histogram, quality};
 use crate::compress::{self, Compressor, CompressorKind, ErrorBound, MtCompressor};
 use crate::data::fields::{Field, FieldKind};
-use crate::sim::calibrate::sample_ratio;
+use crate::sim::calibrate::{pick_allreduce_algo, sample_ratio};
 use crate::sim::collectives::{
-    sim_allgather, sim_allreduce, sim_bcast, sim_reduce_scatter, sim_scatter, SimParams,
+    sim_allgather, sim_allreduce, sim_allreduce_hier, sim_bcast, sim_reduce_scatter,
+    sim_scatter, SimParams,
 };
 use crate::sim::CostModel;
+use crate::topology::Topology;
 use crate::util::bench::{measure_for, Table};
 use crate::Result;
 
@@ -33,8 +35,8 @@ const BUDGET_S: f64 = 0.08;
 /// All bench ids, in DESIGN.md §5 order.
 pub const ALL: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
-    "fig11", "fig12", "fig13", "fig14", "fig15", "table7", "crosscheck", "ablation-chunk",
-    "ablation-balance", "ablation-eb",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "table7", "crosscheck", "hier",
+    "ablation-chunk", "ablation-balance", "ablation-eb",
 ];
 
 /// Run one bench (or `all`), printing tables and writing CSVs to
@@ -66,6 +68,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<()> {
         "fig15" => fig_tree("fig15-scatter", sim_scatter),
         "table7" => table7(out_dir)?,
         "crosscheck" => crosscheck(),
+        "hier" => hier_bench(),
         "ablation-chunk" => ablation_chunk(),
         "ablation-balance" => ablation_balance(),
         "ablation-eb" => ablation_eb(),
@@ -560,8 +563,13 @@ fn crosscheck() -> Vec<(String, Table)> {
             t0.elapsed().as_secs_f64()
         });
         let real = out.iter().cloned().fold(0.0, f64::max);
-        let ratio =
-            sample_ratio(CompressorKind::FzLight, FieldKind::Rtm, ErrorBound::Rel(1e-4), 1 << 18, 5);
+        let ratio = sample_ratio(
+            CompressorKind::FzLight,
+            FieldKind::Rtm,
+            ErrorBound::Rel(1e-4),
+            1 << 18,
+            5,
+        );
         let sim = sim_allreduce(
             &SimParams {
                 n,
@@ -582,6 +590,88 @@ fn crosscheck() -> Vec<(String, Table)> {
         ]);
     }
     vec![("crosscheck-sim-vs-real".into(), t)]
+}
+
+/// Hierarchical vs flat allreduce: REAL 4-node × 4-rank runs over the
+/// node-partitioned in-process fabric (wall time, bytes crossing the
+/// slow tier, leader/follower compress counts), plus the per-tier
+/// simulator sweeping ranks-per-node at cluster scale with the
+/// calibrated flat-vs-hier picker.
+fn hier_bench() -> Vec<(String, Table)> {
+    let mut t = Table::new(&[
+        "schedule", "ranks", "wall s", "slow-tier MB", "leader compresses",
+        "follower compresses",
+    ]);
+    let topo = Topology::blocked(4, 4);
+    let values = 1 << 18;
+    let eb = ErrorBound::Rel(1e-4);
+    for (label, mode) in [
+        ("flat zccl", Mode::zccl(CompressorKind::FzLight, eb)),
+        ("hier 4x4", Mode::hier(CompressorKind::FzLight, eb)),
+    ] {
+        let t2 = topo.clone();
+        let (out, report) = run_ranks_on(&topo, move |c| {
+            let mut ctx = CollCtx::over_nodes(c, mode, t2.clone()).unwrap();
+            let f = Field::generate(FieldKind::Rtm, values, 11 + ctx.rank() as u64);
+            let t0 = std::time::Instant::now();
+            ctx.allreduce(&f.values, ReduceOp::Sum).unwrap();
+            (t0.elapsed().as_secs_f64(), ctx.compress_calls())
+        });
+        let wall = out.iter().map(|x| x.0).fold(0.0, f64::max);
+        let leader: u64 = out
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| topo.is_leader(*r))
+            .map(|(_, x)| x.1)
+            .sum();
+        let follower: u64 = out
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| !topo.is_leader(*r))
+            .map(|(_, x)| x.1)
+            .sum();
+        t.row(vec![
+            label.into(),
+            format!("{}", topo.ranks()),
+            format!("{wall:.4}"),
+            format!("{:.2}", report.tier.inter_bytes as f64 / 1e6),
+            format!("{leader}"),
+            format!("{follower}"),
+        ]);
+    }
+    // Per-tier simulator: where does the hierarchy start paying at
+    // cluster scale?
+    let cm = CostModel::paper_broadwell();
+    let mut sim_t =
+        Table::new(&["total ranks", "ranks/node", "hier s", "flat s", "picker"]);
+    let ratio = sample_ratio(
+        CompressorKind::FzLight,
+        FieldKind::Rtm,
+        ErrorBound::Rel(1e-4),
+        1 << 18,
+        17,
+    );
+    for rpn in [1usize, 4, 8, 16] {
+        let p = SimParams {
+            n: 512,
+            bytes: 300e6,
+            algo: Algo::Zccl,
+            kind: CompressorKind::FzLight,
+            multithread: false,
+            ratio,
+        };
+        let flat = sim_allreduce(&p, &cm);
+        let hier = sim_allreduce_hier(&p, rpn, &cm);
+        let pick = pick_allreduce_algo(&p, rpn, &cm);
+        sim_t.row(vec![
+            "512".into(),
+            format!("{rpn}"),
+            format!("{:.4}", hier.makespan_s),
+            format!("{:.4}", flat.makespan_s),
+            format!("{pick:?}"),
+        ]);
+    }
+    vec![("hier-real-4x4".into(), t), ("hier-sim-scaling".into(), sim_t)]
 }
 
 /// Ablation: PIPE-fZ-light chunk size (paper fixes 5120).
@@ -659,7 +749,8 @@ fn ablation_eb() -> Vec<(String, Table)> {
             .map(|(a, b)| (a - b).abs() as f64)
             .fold(0.0, f64::max);
         // eb resolved against rank-0's field range (approximation).
-        let eb_abs = ErrorBound::Rel(rel).resolve(&Field::generate(FieldKind::Cesm, values, 77).values);
+        let eb_abs =
+            ErrorBound::Rel(rel).resolve(&Field::generate(FieldKind::Cesm, values, 77).values);
         let ratio = out[0].2.raw_bytes.max(1) as f64 / out[0].2.bytes_sent.max(1) as f64;
         t.row(vec![
             format!("{rel:.0e}"),

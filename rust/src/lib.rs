@@ -17,10 +17,13 @@
 //! - [`transport`] — a mini-MPI substrate: blocking and nonblocking
 //!   point-to-point messaging with explicit progress polling, over
 //!   in-process channels or TCP.
-//! - [`topology`] — ring and binomial-tree communication schedules.
+//! - [`topology`] — ring and binomial-tree communication schedules, plus
+//!   the two-level `Topology` layer (rank→node maps, leader election,
+//!   group-mapped schedule generators) behind the hierarchical modes.
 //! - [`collectives`] — the paper's contribution: Allgather, Reduce-scatter,
 //!   Allreduce, Bcast, Scatter, Gather, Reduce in `Plain` / `Cprp2p` /
-//!   `CColl` / `Zccl` modes.
+//!   `CColl` / `Zccl` modes, with topology-aware two-level `Hier`
+//!   schedules that compress only at node leaders.
 //! - [`sim`] — a calibrated virtual-time cost model reproducing the paper's
 //!   128-node Broadwell + 100 Gbps Omni-Path testbed (this container has a
 //!   single core, so scaling figures run on the simulator; real-transport

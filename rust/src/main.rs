@@ -12,7 +12,7 @@
 //!                                          DDP transformer training (e2e)
 //! ```
 //!
-//! Mode flags: `--algo plain|cprp2p|ccoll|zccl`, `--compressor
+//! Mode flags: `--algo plain|cprp2p|ccoll|zccl|hier`, `--compressor
 //! fzlight|szx|zfp-abs|zfp-fxr`, `--rel-eb X`, `--abs-eb X`,
 //! `--multithread`, `--pipe-chunk N`, `--pipeline-bytes N`.
 
@@ -204,7 +204,7 @@ USAGE:
              [--grad-artifact grad_step|grad_step_zccl] [mode flags]
 
 MODE FLAGS:
-  --algo plain|cprp2p|ccoll|zccl      (default zccl)
+  --algo plain|cprp2p|ccoll|zccl|hier (default zccl)
   --compressor fzlight|szx|zfp-abs|zfp-fxr
   --rel-eb X | --abs-eb X             (default rel 1e-4)
   --multithread

@@ -10,7 +10,9 @@
 //!    cross-checked against real `memchan` executions
 //!    (`rust/tests/sim_crosscheck.rs`).
 
+use super::collectives::{sim_allreduce, sim_allreduce_hier, SimParams};
 use super::{CodecRate, CostModel};
+use crate::collectives::Algo;
 use crate::compress::{self, CompressorKind, ErrorBound};
 use crate::data::fields::{Field, FieldKind};
 use crate::util::bench::measure_for;
@@ -68,6 +70,21 @@ pub fn local_model(budget_s: f64) -> CostModel {
     cm
 }
 
+/// Pick the faster allreduce framework for this shape under the per-tier
+/// cost model: flat ZCCL (every rank on the slow tier) vs the two-level
+/// hierarchical schedule (`p.n / ranks_per_node` leaders on the slow
+/// tier, raw hops inside each node). Ties go to flat — the simpler
+/// schedule with no leader hot spot.
+pub fn pick_allreduce_algo(p: &SimParams, ranks_per_node: usize, cm: &CostModel) -> Algo {
+    let flat = sim_allreduce(&SimParams { algo: Algo::Zccl, ..*p }, cm);
+    let hier = sim_allreduce_hier(&SimParams { algo: Algo::Hier, ..*p }, ranks_per_node, cm);
+    if hier.makespan_s < flat.makespan_s {
+        Algo::Hier
+    } else {
+        Algo::Zccl
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +104,21 @@ mod tests {
         assert!(cm.fzlight.comp_st > 1e6, "fzlight {:.3e}", cm.fzlight.comp_st);
         assert!(cm.szx.comp_st > 1e6);
         assert!(cm.fzlight.comp_mt > cm.fzlight.comp_st);
+    }
+
+    #[test]
+    fn picker_prefers_hier_on_dense_nodes_and_flat_on_sparse() {
+        let cm = CostModel::paper_broadwell();
+        let p = SimParams {
+            n: 64,
+            bytes: 300e6,
+            algo: Algo::Zccl,
+            kind: CompressorKind::FzLight,
+            multithread: false,
+            ratio: 10.0,
+        };
+        assert_eq!(pick_allreduce_algo(&p, 8, &cm), Algo::Hier);
+        // One rank per node: the hierarchy adds nothing — ties go flat.
+        assert_eq!(pick_allreduce_algo(&p, 1, &cm), Algo::Zccl);
     }
 }

@@ -76,7 +76,7 @@ pub fn sim_allgather(p: &SimParams, cm: &CostModel) -> SimReport {
             b.decompress_s = r * per_round_post;
             b.comm_s = r * cm.link_s(cb);
         }
-        Algo::CColl | Algo::Zccl => {
+        Algo::CColl | Algo::Zccl | Algo::Hier => {
             let cb = chunk * p.cfrac();
             // (1) one compression of the local chunk
             let tc = chunk / comp;
@@ -147,7 +147,7 @@ pub fn sim_reduce_scatter(p: &SimParams, cm: &CostModel) -> SimReport {
             b.comm_s = rounds * cm.link_s(cb);
             b.compute_s = rounds * treduce;
         }
-        Algo::Zccl => {
+        Algo::Zccl | Algo::Hier => {
             // PIPE overlap: the receive progresses while compressing; only
             // the part of the transfer longer than the compression is
             // exposed. Decompression likewise overlaps the send drain.
@@ -191,6 +191,34 @@ pub fn sim_allreduce(p: &SimParams, cm: &CostModel) -> SimReport {
     SimReport::from_ranks(per_rank, b)
 }
 
+/// Hierarchical two-level allreduce ([`Algo::Hier`]) over
+/// `p.n / ranks_per_node` nodes of `ranks_per_node` ranks: intra-node
+/// raw star-reduce onto the leader (fast tier), the flat ZCCL allreduce
+/// over the leaders only (slow tier, priced by [`sim_allreduce`]), then
+/// an intra-node raw binomial bcast. With `ranks_per_node == 1` this is
+/// exactly the flat model — the degenerate topology.
+pub fn sim_allreduce_hier(p: &SimParams, ranks_per_node: usize, cm: &CostModel) -> SimReport {
+    let rpn = ranks_per_node.clamp(1, p.n.max(1));
+    let nodes = p.n.div_ceil(rpn);
+    // Intra up: members stream raw partials into the leader's memory bus
+    // back to back; the leader folds each one.
+    let up_comm = (rpn - 1) as f64 * cm.intra_link_s(p.bytes);
+    let up_fold = (rpn - 1) as f64 * p.bytes / cm.reduce_bps;
+    // Inter: the unchanged flat schedule over the leader group.
+    let inner = if nodes > 1 {
+        sim_allreduce(&SimParams { n: nodes, algo: Algo::Zccl, ..*p }, cm)
+    } else {
+        SimReport::from_ranks(vec![0.0], SimBreakdown::default())
+    };
+    // Intra down: raw binomial bcast of the full result.
+    let down_comm = tree_rounds(rpn) as f64 * cm.intra_link_s(p.bytes);
+    let total = up_comm + up_fold + inner.makespan_s + down_comm;
+    let mut b = inner.breakdown;
+    b.comm_s += up_comm + down_comm;
+    b.compute_s += up_fold;
+    SimReport::from_ranks(vec![total; p.n], b)
+}
+
 /// Binomial broadcast (§3.1.1 Fig. 3 / Fig. 14). `bytes` is the broadcast
 /// payload.
 pub fn sim_bcast(p: &SimParams, cm: &CostModel) -> SimReport {
@@ -220,7 +248,7 @@ pub fn sim_bcast(p: &SimParams, cm: &CostModel) -> SimReport {
     ready[root] = match p.algo {
         Algo::Plain => 0.0,
         Algo::Cprp2p => 0.0, // compresses per send below
-        Algo::CColl | Algo::Zccl => tc,
+        Algo::CColl | Algo::Zccl | Algo::Hier => tc,
     };
     // Process ranks in BFS order of the binomial tree.
     let order = bfs_order(root, n);
@@ -233,7 +261,7 @@ pub fn sim_bcast(p: &SimParams, cm: &CostModel) -> SimReport {
             let (payload, pre) = match p.algo {
                 Algo::Plain => (p.bytes, 0.0),
                 Algo::Cprp2p => (cb, tc), // re-compress before each send
-                Algo::CColl | Algo::Zccl => (cb, 0.0),
+                Algo::CColl | Algo::Zccl | Algo::Hier => (cb, 0.0),
             };
             nic_free += pre;
             let arrive = nic_free + cm.link_s(payload);
@@ -241,14 +269,14 @@ pub fn sim_bcast(p: &SimParams, cm: &CostModel) -> SimReport {
             let post = match p.algo {
                 Algo::Plain => 0.0,
                 Algo::Cprp2p => td, // decompress immediately on arrival
-                Algo::CColl | Algo::Zccl => 0.0, // forwards frame verbatim
+                Algo::CColl | Algo::Zccl | Algo::Hier => 0.0, // forwards frame verbatim
             };
             ready[s.peer] = arrive + post;
         }
         // Rank r's own completion: Z modes decompress after forwarding.
         done[r] = match p.algo {
             Algo::Plain | Algo::Cprp2p => nic_free.max(ready[r]),
-            Algo::CColl | Algo::Zccl => nic_free.max(ready[r]) + td,
+            Algo::CColl | Algo::Zccl | Algo::Hier => nic_free.max(ready[r]) + td,
         };
     }
     // Critical-path breakdown (approximate: attribute along the deepest
@@ -261,7 +289,7 @@ pub fn sim_bcast(p: &SimParams, cm: &CostModel) -> SimReport {
             b.compress_s = depth * tc;
             b.decompress_s = depth * td;
         }
-        Algo::CColl | Algo::Zccl => {
+        Algo::CColl | Algo::Zccl | Algo::Hier => {
             b.comm_s = depth * cm.link_s(cb);
             b.compress_s = tc;
             b.decompress_s = td;
@@ -283,7 +311,7 @@ pub fn sim_scatter(p: &SimParams, cm: &CostModel) -> SimReport {
     ready[root] = match p.algo {
         Algo::Plain => 0.0,
         Algo::Cprp2p => 0.0,
-        Algo::CColl | Algo::Zccl => p.bytes / comp,
+        Algo::CColl | Algo::Zccl | Algo::Hier => p.bytes / comp,
     };
     let order = bfs_order(root, n);
     let mut done = vec![0.0f64; n];
@@ -301,7 +329,7 @@ pub fn sim_scatter(p: &SimParams, cm: &CostModel) -> SimReport {
                     (sub_bytes * p.cfrac(), sub_bytes / comp, sub_bytes / decomp)
                 }
                 // Z modes forward per-rank frames untouched.
-                Algo::CColl | Algo::Zccl => (sub_bytes * p.cfrac(), 0.0, 0.0),
+                Algo::CColl | Algo::Zccl | Algo::Hier => (sub_bytes * p.cfrac(), 0.0, 0.0),
             };
             nic_free += pre;
             let arrive = nic_free + cm.link_s(payload);
@@ -311,7 +339,7 @@ pub fn sim_scatter(p: &SimParams, cm: &CostModel) -> SimReport {
         // Own completion: Z modes decompress only the own chunk.
         done[r] = match p.algo {
             Algo::Plain | Algo::Cprp2p => nic_free.max(ready[r]),
-            Algo::CColl | Algo::Zccl => nic_free.max(ready[r]) + chunk / decomp,
+            Algo::CColl | Algo::Zccl | Algo::Hier => nic_free.max(ready[r]) + chunk / decomp,
         };
     }
     let depth = tree_rounds(n) as f64;
@@ -322,7 +350,7 @@ pub fn sim_scatter(p: &SimParams, cm: &CostModel) -> SimReport {
             b.compress_s = p.bytes / comp; // ~half the data per level, x levels
             b.decompress_s = p.bytes / decomp;
         }
-        Algo::CColl | Algo::Zccl => {
+        Algo::CColl | Algo::Zccl | Algo::Hier => {
             b.comm_s = depth * cm.link_s(p.bytes / 2.0 * p.cfrac());
             b.compress_s = p.bytes / comp;
             b.decompress_s = chunk / decomp;
@@ -466,5 +494,42 @@ mod tests {
         let cm = CostModel::paper_broadwell();
         let r = sim_allreduce(&p(Algo::Zccl, 1, 10.0, 10.0, false), &cm);
         assert!(r.makespan_s < 0.2);
+    }
+
+    #[test]
+    fn hier_with_one_rank_per_node_is_flat() {
+        let cm = CostModel::paper_broadwell();
+        let flat = sim_allreduce(&p(Algo::Zccl, 32, 300.0, 10.0, false), &cm);
+        let hier = sim_allreduce_hier(&p(Algo::Hier, 32, 300.0, 10.0, false), 1, &cm);
+        assert!(
+            (hier.makespan_s - flat.makespan_s).abs() < 1e-12,
+            "rpn=1 must collapse to the flat model"
+        );
+    }
+
+    #[test]
+    fn hier_beats_flat_on_dense_nodes() {
+        // 64 ranks as 8 nodes x 8: only 8 leaders ring compressed frames
+        // over the slow tier instead of 64 ranks — the intra raw hops are
+        // cheap next to the saved inter-node rounds.
+        let cm = CostModel::paper_broadwell();
+        let flat = sim_allreduce(&p(Algo::Zccl, 64, 300.0, 10.0, false), &cm);
+        let hier = sim_allreduce_hier(&p(Algo::Hier, 64, 300.0, 10.0, false), 8, &cm);
+        assert!(
+            hier.makespan_s < flat.makespan_s,
+            "hier {} vs flat {}",
+            hier.makespan_s,
+            flat.makespan_s
+        );
+    }
+
+    #[test]
+    fn hier_flat_sim_arms_accept_hier_algo() {
+        // The flat models price Algo::Hier like Zccl (used when a flat
+        // stage runs under a hierarchical mode).
+        let cm = CostModel::paper_broadwell();
+        let z = sim_allgather(&p(Algo::Zccl, 16, 100.0, 10.0, false), &cm);
+        let h = sim_allgather(&p(Algo::Hier, 16, 100.0, 10.0, false), &cm);
+        assert!((z.makespan_s - h.makespan_s).abs() < 1e-12);
     }
 }

@@ -59,10 +59,20 @@ impl CodecRate {
 /// The simulator's cost constants.
 #[derive(Debug, Clone)]
 pub struct CostModel {
-    /// Per-message latency in seconds (α of the postal model).
+    /// Per-message latency in seconds (α of the postal model) on the
+    /// inter-node tier.
     pub alpha_s: f64,
-    /// Link bandwidth in bytes/second (β⁻¹), full duplex per NIC.
+    /// Inter-node link bandwidth in bytes/second (β⁻¹), full duplex per
+    /// NIC.
     pub link_bps: f64,
+    /// Per-message latency on the fast intra-node tier (shared memory /
+    /// NVLink class).
+    pub intra_alpha_s: f64,
+    /// Intra-node bandwidth in bytes/second. The hierarchical schedules
+    /// ([`crate::collectives::Algo::Hier`]) move raw data on this tier
+    /// and compressed frames on the slow one; pricing the tiers
+    /// separately is what lets `calibrate` pick flat vs hierarchical.
+    pub intra_bps: f64,
     /// Straggler multiplier on ring-round link time when compressed chunk
     /// sizes are NOT balanced (§3.1.1: the paper measures the balanced
     /// fixed-pipeline schedule up to 1.46× faster at 600 MB; CPRP2P and
@@ -95,6 +105,11 @@ impl CostModel {
             // large-message collective bandwidth near 1.4 GB/s per rank
             // (fabric contention + MPI protocol overheads).
             link_bps: 1.4 * g,
+            // The fast tier: intra-node MPI over shared memory on the
+            // paper's dual-socket Broadwell runs at memory-copy class
+            // bandwidth with sub-microsecond latency.
+            intra_alpha_s: 4e-7,
+            intra_bps: 8.0 * g,
             imbalance: 1.35,
             // One Broadwell core streams ~6 GB/s of f32 sums.
             reduce_bps: 6.0 * g,
@@ -138,10 +153,16 @@ impl CostModel {
         }
     }
 
-    /// Link time for a message of `bytes`.
+    /// Inter-node link time for a message of `bytes`.
     #[inline]
     pub fn link_s(&self, bytes: f64) -> f64 {
         self.alpha_s + bytes / self.link_bps
+    }
+
+    /// Intra-node (fast tier) link time for a message of `bytes`.
+    #[inline]
+    pub fn intra_link_s(&self, bytes: f64) -> f64 {
+        self.intra_alpha_s + bytes / self.intra_bps
     }
 }
 
@@ -203,5 +224,13 @@ mod tests {
         let cm = CostModel::paper_broadwell();
         assert!(cm.fzlight.comp_mt > cm.fzlight.comp_st * 10.0);
         assert!(cm.szx.comp_st > cm.zfp_abs.comp_st);
+    }
+
+    #[test]
+    fn intra_tier_is_faster() {
+        let cm = CostModel::paper_broadwell();
+        assert!(cm.intra_bps > cm.link_bps, "fast tier must out-run the network");
+        assert!(cm.intra_alpha_s < cm.alpha_s);
+        assert!(cm.intra_link_s(1e6) < cm.link_s(1e6));
     }
 }

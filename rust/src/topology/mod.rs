@@ -1,8 +1,37 @@
-//! Communication schedules: ring and binomial tree.
+//! Communication schedules and the two-level topology layer.
 //!
-//! These are the two algorithm families the paper integrates compression
-//! into — the ring (allgather / reduce-scatter, §3.1.1–3.1.2) and the
-//! MPICH binomial tree (bcast / scatter, §4.5).
+//! ## Flat primitives
+//!
+//! The paper integrates compression into two flat schedule families — the
+//! ring (allgather / reduce-scatter, §3.1.1–3.1.2) and the MPICH binomial
+//! tree (bcast / scatter, §4.5). [`ring`], [`ring_send_chunk`] /
+//! [`ring_recv_chunk`], [`binomial_bcast`] and [`binomial_subtree`] are
+//! those primitives, expressed over a dense rank space `0..n`.
+//!
+//! ## The two-level schedule API
+//!
+//! Real deployments are hierarchical: cheap intra-node links and
+//! expensive inter-node links (gZCCL, arXiv:2308.05199). [`Topology`]
+//! captures that shape — a rank→node map, one elected leader per node,
+//! and a [`LinkClass`] per rank pair — and the *group-mapped* schedule
+//! generators ([`ring_in_group`], [`binomial_bcast_in_group`],
+//! [`binomial_subtree_into`]) re-express the flat primitives over an
+//! arbitrary rank subset, so a hierarchical collective composes them per
+//! tier:
+//!
+//! - the **inter-node tier** runs a flat schedule over
+//!   [`Topology::leaders`] (a ring for allreduce/allgather, a binomial
+//!   tree for bcast/scatter), carrying *compressed* frames that are
+//!   forwarded verbatim — compress-once extended across tiers;
+//! - the **intra-node tier** runs a star or binomial schedule over
+//!   [`Topology::members`], carrying raw `f32` windows over the fast
+//!   links (only leaders compress/decompress).
+//!
+//! [`crate::collectives::hier`] consumes exactly this API; the
+//! [`crate::sim`] cost model prices the two tiers separately so
+//! `calibrate` can pick flat vs hierarchical per message size.
+
+use crate::{Error, Result};
 
 /// Ring neighbours of `rank` in a communicator of `n`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -17,6 +46,15 @@ pub struct RingNeighbors {
 pub fn ring(rank: usize, n: usize) -> RingNeighbors {
     debug_assert!(rank < n && n > 0);
     RingNeighbors { next: (rank + 1) % n, prev: (rank + n - 1) % n }
+}
+
+/// Ring neighbours within an arbitrary rank `group`: the member at
+/// position `idx` talks to the members at the adjacent positions, with
+/// peers reported as **global** ranks. This is the inter-tier face of the
+/// flat [`ring`]: a leader ring is `ring_in_group(topo.leaders(), lidx)`.
+pub fn ring_in_group(group: &[usize], idx: usize) -> RingNeighbors {
+    let nb = ring(idx, group.len());
+    RingNeighbors { next: group[nb.next], prev: group[nb.prev] }
 }
 
 /// In the standard ring schedule, the chunk that `rank` *sends* in round
@@ -86,6 +124,27 @@ pub fn binomial_bcast(rank: usize, root: usize, n: usize) -> (Option<TreeStep>, 
     (recv, sends)
 }
 
+/// [`binomial_bcast`] over an arbitrary rank `group`: positions within
+/// the group form the tree, peers are reported as **global** ranks. A
+/// hierarchical bcast runs
+/// `binomial_bcast_in_group(topo.leaders(), lidx, root_node)` for its
+/// inter tier and `binomial_bcast_in_group(topo.members(node), k, 0)`
+/// for its intra tier — the same primitive composed per tier.
+pub fn binomial_bcast_in_group(
+    group: &[usize],
+    idx: usize,
+    root_idx: usize,
+) -> (Option<TreeStep>, Vec<TreeStep>) {
+    let (recv, sends) = binomial_bcast(idx, root_idx, group.len());
+    (
+        recv.map(|s| TreeStep { round: s.round, peer: group[s.peer] }),
+        sends
+            .into_iter()
+            .map(|s| TreeStep { round: s.round, peer: group[s.peer] })
+            .collect(),
+    )
+}
+
 /// Number of rounds a binomial tree takes over `n` ranks (`ceil(log2 n)`).
 pub fn tree_rounds(n: usize) -> usize {
     if n <= 1 {
@@ -97,15 +156,193 @@ pub fn tree_rounds(n: usize) -> usize {
 
 /// The set of descendant ranks of `rank` in the binomial scatter tree
 /// rooted at `root` (the ranks whose data must flow through `rank`),
-/// including `rank` itself. Used by Z-Scatter to forward only the needed
-/// compressed chunks.
+/// including `rank` itself. Used by Z-Scatter (flat and hierarchical) to
+/// forward only the needed compressed chunks.
 pub fn binomial_subtree(rank: usize, root: usize, n: usize) -> Vec<usize> {
-    let (_, sends) = binomial_bcast(rank, root, n);
-    let mut out = vec![rank];
-    for s in sends {
-        out.extend(binomial_subtree(s.peer, root, n));
-    }
+    let mut out = Vec::new();
+    binomial_subtree_into(rank, root, n, &mut out);
     out
+}
+
+/// [`binomial_subtree`] into a caller-owned accumulator (appended, not
+/// cleared): iterative worklist walk deriving each member's children
+/// masks directly, so there is no per-call recursion and no transient
+/// `Vec` per visited rank — the old recursive form allocated one child
+/// list per descendant. `out[start]` is always `rank` itself; descendants
+/// follow in breadth-first order.
+pub fn binomial_subtree_into(rank: usize, root: usize, n: usize, out: &mut Vec<usize>) {
+    debug_assert!(rank < n && root < n && n > 0);
+    let start = out.len();
+    out.push(rank);
+    let mut i = start;
+    while i < out.len() {
+        let r = out[i];
+        let vrank = (r + n - root) % n;
+        // Children carry masks strictly below our own lowest set bit
+        // (below the tree top for the root) — the send phase of
+        // `binomial_bcast` without materializing the steps.
+        let top = if vrank == 0 {
+            1usize << tree_rounds(n)
+        } else {
+            vrank & vrank.wrapping_neg()
+        };
+        let mut m = top >> 1;
+        while m > 0 {
+            let vchild = vrank + m;
+            if vchild < n {
+                out.push((vchild + root) % n);
+            }
+            m >>= 1;
+        }
+        i += 1;
+    }
+}
+
+/// Which tier a rank pair's link belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Same node: the fast tier (shared memory / NVLink class).
+    Intra,
+    /// Different nodes: the slow tier (the network the compressed frames
+    /// are meant for).
+    Inter,
+}
+
+/// A two-level topology: which node each rank lives on, plus the elected
+/// intra-node leader (the lowest rank of each node). Nodes are dense
+/// (`0..nodes()`), every node is non-empty, and `leaders()[j]` is the
+/// leader of node `j` — so a node index doubles as the leader's position
+/// in the leader group, which is what the inter-tier schedules run over.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Node id per rank.
+    node_of: Vec<usize>,
+    /// Ranks per node, ascending.
+    members: Vec<Vec<usize>>,
+    /// Leader rank per node (lowest member).
+    leaders: Vec<usize>,
+}
+
+impl Topology {
+    /// Build from an explicit rank→node map. Node ids must be dense
+    /// (`0..=max` all present) and every node non-empty.
+    pub fn from_map(node_of: Vec<usize>) -> Result<Topology> {
+        if node_of.is_empty() {
+            return Err(Error::invalid("topology needs at least one rank"));
+        }
+        let nodes = node_of.iter().max().unwrap() + 1;
+        // Dense non-empty nodes imply nodes <= ranks; reject oversized ids
+        // BEFORE sizing the member table, so a bogus map errors instead of
+        // allocating max_id vectors.
+        if nodes > node_of.len() {
+            return Err(Error::invalid(format!(
+                "topology node id {} out of range for {} ranks (node ids must be dense)",
+                nodes - 1,
+                node_of.len()
+            )));
+        }
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); nodes];
+        for (rank, &node) in node_of.iter().enumerate() {
+            members[node].push(rank);
+        }
+        for (node, m) in members.iter().enumerate() {
+            if m.is_empty() {
+                return Err(Error::invalid(format!(
+                    "topology node {node} has no ranks (node ids must be dense)"
+                )));
+            }
+        }
+        let leaders = members.iter().map(|m| m[0]).collect();
+        Ok(Topology { node_of, members, leaders })
+    }
+
+    /// Every rank its own node (`n` nodes × 1 rank): the degenerate map
+    /// under which every hierarchical schedule collapses to its flat
+    /// counterpart. The default when a hierarchical mode runs without an
+    /// explicit topology.
+    pub fn flat(n: usize) -> Topology {
+        Topology::from_map((0..n).collect()).expect("flat map is always valid")
+    }
+
+    /// `nodes` nodes × `per_node` consecutive ranks (rank `r` on node
+    /// `r / per_node`) — the shape cluster launchers hand out.
+    pub fn blocked(nodes: usize, per_node: usize) -> Topology {
+        assert!(nodes > 0 && per_node > 0, "blocked topology needs nodes and ranks");
+        Topology::from_map((0..nodes * per_node).map(|r| r / per_node).collect())
+            .expect("blocked map is always valid")
+    }
+
+    /// Consecutive nodes of the given (possibly uneven) sizes, e.g.
+    /// `grouped(&[3, 1, 2])` puts ranks 0–2 on node 0, rank 3 on node 1,
+    /// ranks 4–5 on node 2.
+    pub fn grouped(sizes: &[usize]) -> Result<Topology> {
+        let mut map = Vec::new();
+        for (node, &s) in sizes.iter().enumerate() {
+            if s == 0 {
+                return Err(Error::invalid(format!("topology node {node} has size 0")));
+            }
+            map.extend(std::iter::repeat(node).take(s));
+        }
+        Topology::from_map(map)
+    }
+
+    /// Total ranks.
+    pub fn ranks(&self) -> usize {
+        self.node_of.len()
+    }
+
+    /// Node count.
+    pub fn nodes(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The node `rank` lives on.
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of[rank]
+    }
+
+    /// The ranks of `node`, ascending (the leader first).
+    pub fn members(&self, node: usize) -> &[usize] {
+        &self.members[node]
+    }
+
+    /// Every node's leader, indexed by node — the inter-tier group.
+    pub fn leaders(&self) -> &[usize] {
+        &self.leaders
+    }
+
+    /// The leader of `rank`'s node.
+    pub fn leader_of(&self, rank: usize) -> usize {
+        self.leaders[self.node_of[rank]]
+    }
+
+    /// Whether `rank` is its node's leader.
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.leader_of(rank) == rank
+    }
+
+    /// `rank`'s position within its node's member list.
+    pub fn local_index(&self, rank: usize) -> usize {
+        self.members[self.node_of[rank]]
+            .iter()
+            .position(|&r| r == rank)
+            .expect("rank is in its own node")
+    }
+
+    /// The tier the `a`↔`b` link belongs to (self-links are intra).
+    pub fn link_class(&self, a: usize, b: usize) -> LinkClass {
+        if self.node_of[a] == self.node_of[b] {
+            LinkClass::Intra
+        } else {
+            LinkClass::Inter
+        }
+    }
+
+    /// Whether any node holds more than one rank (i.e. the two tiers are
+    /// actually distinct).
+    pub fn is_hierarchical(&self) -> bool {
+        self.members.iter().any(|m| m.len() > 1)
+    }
 }
 
 #[cfg(test)]
@@ -212,5 +449,106 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn subtree_iterative_matches_tree_children() {
+        // The accumulator walk must enumerate exactly the ranks whose
+        // bcast recv-parent chain passes through `rank`, with the rank
+        // itself first, for every shape and root.
+        for n in [1usize, 2, 5, 8, 13, 16, 33] {
+            for root in [0, n / 2, n - 1] {
+                for rank in 0..n {
+                    let sub = binomial_subtree(rank, root, n);
+                    assert_eq!(sub[0], rank, "own rank leads");
+                    let mut inset = vec![false; n];
+                    for &r in &sub {
+                        assert!(!inset[r], "duplicate {r}");
+                        inset[r] = true;
+                    }
+                    // Membership check: walk each rank's parent chain.
+                    for r in 0..n {
+                        let mut cur = r;
+                        let mut through = false;
+                        loop {
+                            if cur == rank {
+                                through = true;
+                                break;
+                            }
+                            match binomial_bcast(cur, root, n).0 {
+                                Some(step) => cur = step.peer,
+                                None => break,
+                            }
+                        }
+                        assert_eq!(inset[r], through, "n={n} root={root} rank={rank} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subtree_into_appends_without_clearing() {
+        let mut out = vec![99usize];
+        binomial_subtree_into(0, 0, 4, &mut out);
+        assert_eq!(out[0], 99);
+        assert_eq!(out[1], 0);
+        assert_eq!(out.len(), 5);
+    }
+
+    #[test]
+    fn topology_from_map_and_accessors() {
+        let t = Topology::from_map(vec![0, 0, 1, 1, 1, 2]).unwrap();
+        assert_eq!(t.ranks(), 6);
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.members(1), &[2, 3, 4]);
+        assert_eq!(t.leaders(), &[0, 2, 5]);
+        assert!(t.is_leader(2) && !t.is_leader(3));
+        assert_eq!(t.leader_of(4), 2);
+        assert_eq!(t.local_index(4), 2);
+        assert_eq!(t.link_class(0, 1), LinkClass::Intra);
+        assert_eq!(t.link_class(1, 2), LinkClass::Inter);
+        assert_eq!(t.link_class(3, 3), LinkClass::Intra);
+        assert!(t.is_hierarchical());
+    }
+
+    #[test]
+    fn topology_shapes() {
+        let flat = Topology::flat(5);
+        assert_eq!(flat.nodes(), 5);
+        assert!(!flat.is_hierarchical());
+        assert_eq!(flat.leaders(), &[0, 1, 2, 3, 4]);
+
+        let blocked = Topology::blocked(3, 4);
+        assert_eq!(blocked.ranks(), 12);
+        assert_eq!(blocked.node_of(7), 1);
+        assert_eq!(blocked.leaders(), &[0, 4, 8]);
+
+        let grouped = Topology::grouped(&[3, 1, 2]).unwrap();
+        assert_eq!(grouped.members(0), &[0, 1, 2]);
+        assert_eq!(grouped.members(1), &[3]);
+        assert_eq!(grouped.members(2), &[4, 5]);
+
+        assert!(Topology::from_map(vec![0, 2]).is_err(), "gap in node ids");
+        assert!(Topology::from_map(Vec::new()).is_err());
+        assert!(Topology::grouped(&[2, 0]).is_err());
+    }
+
+    #[test]
+    fn group_mapped_schedules_translate_ranks() {
+        let group = [3usize, 7, 11, 15];
+        let nb = ring_in_group(&group, 0);
+        assert_eq!(nb.next, 7);
+        assert_eq!(nb.prev, 15);
+        // Group binomial must be the flat binomial with peers mapped.
+        for idx in 0..group.len() {
+            let (recv, sends) = binomial_bcast_in_group(&group, idx, 1);
+            let (frecv, fsends) = binomial_bcast(idx, 1, group.len());
+            assert_eq!(recv.map(|s| s.peer), frecv.map(|s| group[s.peer]));
+            assert_eq!(recv.map(|s| s.round), frecv.map(|s| s.round));
+            let mapped: Vec<usize> = fsends.iter().map(|s| group[s.peer]).collect();
+            let got: Vec<usize> = sends.iter().map(|s| s.peer).collect();
+            assert_eq!(got, mapped);
+        }
     }
 }

@@ -7,7 +7,9 @@
 //! its packet buffer from the pool, the buffer travels the channel, and
 //! the receiver's `recv_into` swap returns a same-sized capacity to the
 //! pool — so a warm iterated collective moves every byte through recycled
-//! buffers with zero allocator traffic.
+//! buffers with zero allocator traffic. [`Transport::send_pooled`] closes
+//! the loop on the send side: an already-leased buffer is moved onto the
+//! channel as-is, skipping the `packet_from` copy entirely.
 //!
 //! The pool is deliberately fabric-wide rather than per-endpoint: a
 //! packet allocated by the sender is recycled by the *receiver*, so
@@ -17,15 +19,78 @@
 //! receives none, so its private pool would drain and re-allocate every
 //! iteration). The cost is one shared mutex, held for a `Vec` push/pop —
 //! small next to the per-message channel synchronisation already paid.
+//!
+//! ## Node-partitioned fabrics
+//!
+//! [`MemFabric::endpoints_on_nodes`] / [`MemFabric::run_on_nodes`] build
+//! the same fabric pinned to a [`Topology`]: every message is classified
+//! by [`LinkClass`] and counted into fabric-wide [`TierTraffic`] totals,
+//! and each (src, dst) pair that crosses the slow tier is recorded — so
+//! tests and benches can assert, e.g., that a hierarchical collective's
+//! inter-node traffic flows **only between leaders**, and report
+//! bytes-crossing-the-slow-tier per iteration.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::thread;
 
 use super::{PacketPool, RecvHandle, Transport};
+use crate::topology::{LinkClass, Topology};
 use crate::{Error, Result};
 
 type Packet = (u64, Vec<u8>); // (tag, payload)
+
+/// Fabric-wide per-tier traffic totals of a node-partitioned fabric.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierTraffic {
+    /// Messages on the fast (same-node) tier.
+    pub intra_msgs: u64,
+    /// Bytes on the fast tier.
+    pub intra_bytes: u64,
+    /// Messages crossing the slow (inter-node) tier.
+    pub inter_msgs: u64,
+    /// Bytes crossing the slow tier.
+    pub inter_bytes: u64,
+}
+
+/// Traffic snapshot of a node-partitioned fabric.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficReport {
+    /// Per-tier totals.
+    pub tier: TierTraffic,
+    /// Every directed (src, dst) rank pair that crossed the slow tier.
+    pub inter_pairs: Vec<(usize, usize)>,
+}
+
+/// Shared node map + traffic ledger of a node-partitioned fabric.
+#[derive(Debug)]
+struct NodeMap {
+    topo: Topology,
+    traffic: Mutex<(TierTraffic, BTreeSet<(usize, usize)>)>,
+}
+
+impl NodeMap {
+    fn record(&self, from: usize, to: usize, bytes: usize) {
+        let mut t = self.traffic.lock().unwrap();
+        match self.topo.link_class(from, to) {
+            LinkClass::Intra => {
+                t.0.intra_msgs += 1;
+                t.0.intra_bytes += bytes as u64;
+            }
+            LinkClass::Inter => {
+                t.0.inter_msgs += 1;
+                t.0.inter_bytes += bytes as u64;
+                t.1.insert((from, to));
+            }
+        }
+    }
+
+    fn report(&self) -> TrafficReport {
+        let t = self.traffic.lock().unwrap();
+        TrafficReport { tier: t.0, inter_pairs: t.1.iter().copied().collect() }
+    }
+}
 
 /// One rank's endpoint in an in-process fabric.
 pub struct MemTransport {
@@ -39,6 +104,8 @@ pub struct MemTransport {
     unmatched: HashMap<(usize, u64), VecDeque<Vec<u8>>>,
     /// Fabric-wide packet pool (shared by every endpoint).
     pool: PacketPool,
+    /// Node partition + traffic ledger (node-partitioned fabrics only).
+    nodes: Option<Arc<NodeMap>>,
 }
 
 /// Factory for a set of fully-connected [`MemTransport`] endpoints.
@@ -47,13 +114,25 @@ pub struct MemFabric;
 impl MemFabric {
     /// Create `n` connected endpoints (sharing one packet pool).
     pub fn endpoints(n: usize) -> Vec<MemTransport> {
+        Self::build(n, None)
+    }
+
+    /// Create one endpoint per rank of `topo`, all pinned to their nodes:
+    /// every message is tier-classified and counted (see the module docs).
+    pub fn endpoints_on_nodes(topo: &Topology) -> Vec<MemTransport> {
+        let nodes = Arc::new(NodeMap {
+            topo: topo.clone(),
+            traffic: Mutex::new((TierTraffic::default(), BTreeSet::new())),
+        });
+        Self::build(topo.ranks(), Some(nodes))
+    }
+
+    fn build(n: usize, nodes: Option<Arc<NodeMap>>) -> Vec<MemTransport> {
         // matrix[s][d] = channel from s to d.
-        let mut txs: Vec<Vec<Option<Sender<Packet>>>> = (0..n)
-            .map(|_| (0..n).map(|_| None).collect())
-            .collect();
-        let mut rxs: Vec<Vec<Option<Receiver<Packet>>>> = (0..n)
-            .map(|_| (0..n).map(|_| None).collect())
-            .collect();
+        let mut txs: Vec<Vec<Option<Sender<Packet>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Packet>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
         for s in 0..n {
             for d in 0..n {
                 let (tx, rx) = channel();
@@ -72,6 +151,7 @@ impl MemFabric {
                 rx: rx_row.into_iter().map(Option::unwrap).collect(),
                 unmatched: HashMap::new(),
                 pool: pool.clone(),
+                nodes: nodes.clone(),
             })
             .collect()
     }
@@ -83,7 +163,28 @@ impl MemFabric {
         R: Send + 'static,
         F: Fn(&mut MemTransport) -> R + Send + Sync + 'static,
     {
-        let endpoints = Self::endpoints(n);
+        Self::launch(Self::endpoints(n), f)
+    }
+
+    /// [`MemFabric::run`] over a node-partitioned fabric: one thread per
+    /// rank of `topo`, returning the per-rank results *and* the fabric's
+    /// tier-traffic report.
+    pub fn run_on_nodes<R, F>(topo: &Topology, f: F) -> (Vec<R>, TrafficReport)
+    where
+        R: Send + 'static,
+        F: Fn(&mut MemTransport) -> R + Send + Sync + 'static,
+    {
+        let endpoints = Self::endpoints_on_nodes(topo);
+        let nodes = endpoints[0].nodes.clone().expect("node-partitioned fabric");
+        let results = Self::launch(endpoints, f);
+        (results, nodes.report())
+    }
+
+    fn launch<R, F>(endpoints: Vec<MemTransport>, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(&mut MemTransport) -> R + Send + Sync + 'static,
+    {
         let f = std::sync::Arc::new(f);
         let joins: Vec<thread::JoinHandle<R>> = endpoints
             .into_iter()
@@ -135,6 +236,12 @@ impl MemTransport {
         }
         msg
     }
+
+    /// Traffic snapshot of a node-partitioned fabric (`None` for fabrics
+    /// built without a topology).
+    pub fn traffic(&self) -> Option<TrafficReport> {
+        self.nodes.as_ref().map(|n| n.report())
+    }
 }
 
 impl Transport for MemTransport {
@@ -153,8 +260,26 @@ impl Transport for MemTransport {
         if to >= self.size {
             return Err(Error::invalid(format!("send to rank {to} of {}", self.size)));
         }
+        if let Some(nodes) = &self.nodes {
+            nodes.record(self.rank, to, data.len());
+        }
         self.tx[to]
             .send((tag, self.pool.packet_from(data)))
+            .map_err(|_| Error::transport(format!("rank {to} receiver dropped")))
+    }
+
+    fn send_pooled(&mut self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        if to >= self.size {
+            return Err(Error::invalid(format!("send to rank {to} of {}", self.size)));
+        }
+        if let Some(nodes) = &self.nodes {
+            nodes.record(self.rank, to, data.len());
+        }
+        // The caller's leased buffer IS the packet: no copy; its capacity
+        // re-enters the pool at the receiver's swap.
+        self.pool.note_pooled_send();
+        self.tx[to]
+            .send((tag, data))
             .map_err(|_| Error::transport(format!("rank {to} receiver dropped")))
     }
 
@@ -319,5 +444,50 @@ mod tests {
         assert_eq!(end, warm, "warm iterations must not allocate packet buffers");
         t0.recycle(buf0);
         t1.recycle(buf1);
+    }
+
+    #[test]
+    fn node_partitioned_fabric_classifies_traffic() {
+        // 2 nodes x 2 ranks: 0,1 on node 0; 2,3 on node 1. Drive the four
+        // endpoints single-threaded and check the ledger.
+        let topo = Topology::blocked(2, 2);
+        let mut eps = MemFabric::endpoints_on_nodes(&topo);
+        // intra: 0 -> 1 (4 bytes); inter: 0 -> 2 (2 bytes), 3 -> 1 (1 byte,
+        // pooled).
+        eps[0].send(1, 1, b"fast").unwrap();
+        eps[0].send(2, 2, b"xx").unwrap();
+        let mut pooled = eps[3].lease();
+        pooled.extend_from_slice(b"y");
+        eps[3].send_pooled(1, 3, pooled).unwrap();
+        assert_eq!(eps[1].recv(0, 1).unwrap(), b"fast");
+        assert_eq!(eps[2].recv(0, 2).unwrap(), b"xx");
+        assert_eq!(eps[1].recv(3, 3).unwrap(), b"y");
+        let report = eps[0].traffic().unwrap();
+        assert_eq!(report.tier.intra_msgs, 1);
+        assert_eq!(report.tier.intra_bytes, 4);
+        assert_eq!(report.tier.inter_msgs, 2);
+        assert_eq!(report.tier.inter_bytes, 3);
+        assert_eq!(report.inter_pairs, vec![(0, 2), (3, 1)]);
+        // Plain fabrics have no ledger.
+        assert!(MemFabric::endpoints(2)[0].traffic().is_none());
+    }
+
+    #[test]
+    fn run_on_nodes_returns_results_and_report() {
+        let topo = Topology::grouped(&[2, 1]).unwrap();
+        let (results, report) = MemFabric::run_on_nodes(&topo, |t| {
+            // Ring pass: every rank sends 8 bytes to its successor.
+            let n = t.size();
+            let me = t.rank();
+            t.send((me + 1) % n, 7, &[me as u8; 8]).unwrap();
+            let got = t.recv((me + n - 1) % n, 7).unwrap();
+            got[0] as usize
+        });
+        assert_eq!(results, vec![2, 0, 1]);
+        // Links 1->2 and 2->0 cross nodes; 0->1 stays inside node 0.
+        assert_eq!(report.tier.intra_msgs, 1);
+        assert_eq!(report.tier.inter_msgs, 2);
+        assert_eq!(report.tier.inter_bytes, 16);
+        assert_eq!(report.inter_pairs, vec![(1, 2), (2, 0)]);
     }
 }

@@ -66,6 +66,11 @@ pub struct PacketPoolStats {
     /// Buffers returned to the pool (swapped out by a receive or
     /// explicitly recycled).
     pub recycled: u64,
+    /// Sends whose payload buffer was handed over **by value**
+    /// ([`Transport::send_pooled`]) on a transport that moves it to the
+    /// wire without the `packet_from` copy. The send-side mirror of the
+    /// zero-copy receive counters.
+    pub pooled_sends: u64,
     /// High-water mark: the largest buffer capacity ever returned.
     pub capacity_hwm: usize,
 }
@@ -158,6 +163,13 @@ impl PacketPool {
         n
     }
 
+    /// Record a zero-copy pooled send (see
+    /// [`PacketPoolStats::pooled_sends`]). Called by transports whose
+    /// [`Transport::send_pooled`] genuinely moves the caller's buffer.
+    pub fn note_pooled_send(&self) {
+        self.0.lock().unwrap().stats.pooled_sends += 1;
+    }
+
     /// Current counters.
     pub fn stats(&self) -> PacketPoolStats {
         self.0.lock().unwrap().stats
@@ -241,6 +253,19 @@ pub trait Transport: Send {
 
     /// Eager-buffered send (completes locally).
     fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()>;
+
+    /// Send an already-leased pooled buffer **by value** — the send-side
+    /// mirror of [`Transport::recv_into`]. The caller compresses (or
+    /// serialises) straight into a buffer from [`Transport::lease`] and
+    /// hands it over; pooled transports move it to the wire with no
+    /// `packet_from` copy (counted in [`PacketPoolStats::pooled_sends`]).
+    /// The buffer is consumed either way: the default implementation
+    /// falls back to a copying [`Transport::send`] and recycles it.
+    fn send_pooled(&mut self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        let r = self.send(to, tag, &data);
+        self.recycle(data);
+        r
+    }
 
     /// The transport's packet pool, if it runs one. Transports with a
     /// pool get pooled [`Transport::lease`] / [`Transport::recycle`] /
@@ -361,6 +386,70 @@ pub trait Transport: Send {
     }
 }
 
+/// A sub-communicator view over an existing transport: the member at
+/// position `i` of `members` appears as rank `i` of a `members.len()`-rank
+/// transport, and every tag is offset by `tag_base` so the group's traffic
+/// cannot cross-match the parent communicator's.
+///
+/// This is how the hierarchical collectives reuse the flat schedules
+/// *verbatim* on one tier: the leader tier wraps the fabric in a
+/// `GroupTransport` over [`crate::topology::Topology::leaders`] and runs
+/// the unchanged flat ring collectives over it. All group members must
+/// construct the view with the same `members` slice and `tag_base`
+/// (SPMD, like any collective).
+pub struct GroupTransport<'a> {
+    inner: &'a mut dyn Transport,
+    members: &'a [usize],
+    my_idx: usize,
+    tag_base: u64,
+}
+
+impl<'a> GroupTransport<'a> {
+    /// Wrap `inner` as the `members` sub-communicator. Errors if the
+    /// inner rank is not a member.
+    pub fn new(
+        inner: &'a mut dyn Transport,
+        members: &'a [usize],
+        tag_base: u64,
+    ) -> Result<GroupTransport<'a>> {
+        let me = inner.rank();
+        let my_idx = members
+            .iter()
+            .position(|&r| r == me)
+            .ok_or_else(|| crate::Error::invalid(format!("rank {me} is not in the group")))?;
+        Ok(GroupTransport { inner, members, my_idx, tag_base })
+    }
+}
+
+impl Transport for GroupTransport<'_> {
+    fn rank(&self) -> usize {
+        self.my_idx
+    }
+    fn size(&self) -> usize {
+        self.members.len()
+    }
+    fn packet_pool(&self) -> Option<&PacketPool> {
+        self.inner.packet_pool()
+    }
+    fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()> {
+        self.inner.send(self.members[to], self.tag_base + tag, data)
+    }
+    fn send_pooled(&mut self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        self.inner.send_pooled(self.members[to], self.tag_base + tag, data)
+    }
+    fn recv_into(&mut self, from: usize, tag: u64, buf: &mut Vec<u8>) -> Result<usize> {
+        self.inner.recv_into(self.members[from], self.tag_base + tag, buf)
+    }
+    fn irecv(&mut self, from: usize, tag: u64) -> RecvHandle {
+        // Handles are issued in the PARENT's rank/tag space so the inner
+        // transport's progress engine can poll them directly.
+        RecvHandle::new(self.members[from], self.tag_base + tag)
+    }
+    fn try_complete(&mut self, h: &mut RecvHandle) -> Result<bool> {
+        self.inner.try_complete(h)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::memchan::MemFabric;
@@ -476,5 +565,81 @@ mod tests {
             b.snooze(); // must not hang or panic past the spin budget
         }
         assert_eq!(b.spins, Backoff::SPIN_LIMIT);
+    }
+
+    #[test]
+    fn send_pooled_moves_the_buffer_without_copying() {
+        // A leased buffer handed to send_pooled must travel the fabric
+        // without a packet_from copy: warm round-trips allocate nothing
+        // and the pooled_sends counter advances.
+        let mut eps = MemFabric::endpoints(2);
+        let (a, b) = eps.split_at_mut(1);
+        let (t0, t1) = (&mut a[0], &mut b[0]);
+        let mut got = t1.lease();
+        let mut warm = 0;
+        for i in 0..4u64 {
+            let mut buf = t0.lease();
+            buf.extend_from_slice(&[0x5A; 2048]);
+            t0.send_pooled(1, 40 + i, buf).unwrap();
+            assert_eq!(t1.recv_into(0, 40 + i, &mut got).unwrap(), 2048);
+            if i == 1 {
+                warm = t0.packet_stats().allocated;
+            }
+        }
+        let stats = t0.packet_stats();
+        assert_eq!(stats.allocated, warm, "warm pooled sends must not allocate");
+        assert_eq!(stats.pooled_sends, 4, "every send_pooled is counted");
+        t1.recycle(got);
+    }
+
+    #[test]
+    fn group_transport_translates_ranks_and_tags() {
+        // Ranks {1, 3} of a 4-rank fabric form a 2-rank group; group rank
+        // 0 <-> global 1, group rank 1 <-> global 3, tags offset so the
+        // parent's tag 5 and the group's tag 5 never cross-match.
+        let n = 4;
+        let results = MemFabric::run(n, move |t| {
+            let members = [1usize, 3];
+            let me = t.rank();
+            if me == 1 || me == 3 {
+                let mut g = GroupTransport::new(t, &members, 1000).unwrap();
+                assert_eq!(g.size(), 2);
+                if g.rank() == 0 {
+                    g.send(1, 5, b"group").unwrap();
+                    let mut buf = g.lease();
+                    let h = g.irecv(1, 6);
+                    g.wait_into(h, &mut buf).unwrap();
+                    let out = buf.clone();
+                    g.recycle(buf);
+                    out
+                } else {
+                    let m = g.recv(0, 5).unwrap();
+                    let mut reply = g.lease();
+                    reply.extend_from_slice(b"back");
+                    g.send_pooled(0, 6, reply).unwrap();
+                    m
+                }
+            } else {
+                // Outsiders exchange on the raw tags the group offsets
+                // away from: no cross-matching.
+                if me == 0 {
+                    t.send(2, 5, b"flat").unwrap();
+                    Vec::new()
+                } else {
+                    t.recv(0, 5).unwrap()
+                }
+            }
+        });
+        assert_eq!(results[1], b"back");
+        assert_eq!(results[3], b"group");
+        assert_eq!(results[2], b"flat");
+    }
+
+    #[test]
+    fn group_transport_rejects_non_members() {
+        let mut eps = MemFabric::endpoints(3);
+        let members = [0usize, 2];
+        assert!(GroupTransport::new(&mut eps[1], &members, 0).is_err());
+        assert!(GroupTransport::new(&mut eps[2], &members, 0).is_ok());
     }
 }

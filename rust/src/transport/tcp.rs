@@ -185,6 +185,24 @@ impl Transport for TcpTransport {
         Ok(())
     }
 
+    fn send_pooled(&mut self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        self.pool.note_pooled_send();
+        if to == self.rank {
+            // Self-send: the caller's buffer becomes the stored packet
+            // directly — no packet_from copy.
+            let (lock, cv) = &*self.store;
+            lock.lock().unwrap().entry((to, tag)).or_default().push_back(data);
+            cv.notify_all();
+            return Ok(());
+        }
+        // The socket write streams straight from the caller's buffer (no
+        // intermediate packet); the buffer's capacity goes back to the
+        // pool for the reader threads to reuse.
+        let r = self.send(to, tag, &data);
+        self.pool.release(data);
+        r
+    }
+
     fn recv_into(&mut self, from: usize, tag: u64, buf: &mut Vec<u8>) -> Result<usize> {
         let (lock, cv) = &*self.store;
         let mut map = lock.lock().unwrap();

@@ -243,7 +243,10 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
                         let start = *pos;
                         let mut end = *pos + 1;
                         if c < 0x80 {
-                            while end < b.len() && b[end] != b'"' && b[end] != b'\\' && b[end] < 0x80
+                            while end < b.len()
+                                && b[end] != b'"'
+                                && b[end] != b'\\'
+                                && b[end] < 0x80
                             {
                                 end += 1;
                             }

@@ -163,7 +163,8 @@ fn reduction_collectives_agree_across_fused_modes() {
     let want = {
         let mut acc = Field::generate(FieldKind::Cesm, len, 70).values;
         for r in 1..n {
-            ReduceOp::Sum.fold(&mut acc, &Field::generate(FieldKind::Cesm, len, 70 + r as u64).values);
+            let src = Field::generate(FieldKind::Cesm, len, 70 + r as u64).values;
+            ReduceOp::Sum.fold(&mut acc, &src);
         }
         acc
     };

@@ -1,0 +1,455 @@
+//! Hierarchical-collective property suite.
+//!
+//! 1. `Algo::Hier` allgather / bcast / scatter are **bit-identical** to
+//!    flat `Algo::Zccl` on the same communicator for every node shape
+//!    (1×n, n×1, uneven nodes, non-power-of-two leader counts): the
+//!    leaders preserve the flat per-rank frame boundaries, so the decoded
+//!    values cannot differ.
+//! 2. Hier allreduce is bit-identical to flat `Zccl` run over the
+//!    **leader group** on the node-reduced inputs (the inter tier IS the
+//!    flat schedule, via `GroupTransport`) — and therefore to flat `Zccl`
+//!    outright when every node holds one rank.
+//! 3. The 4-node × 4-rank acceptance: each node's data is compressed
+//!    exactly once, by its leader (codec counters), every frame crossing
+//!    the slow tier travels leader↔leader (fabric tier ledger), and
+//!    followers never touch the codec.
+//! 4. Warm hierarchical calls stay allocation-free
+//!    (`PoolStats` / `PacketPoolStats`).
+
+use zccl::collectives::{run_ranks, run_ranks_on, CollCtx, Mode, ReduceOp};
+use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::data::fields::{Field, FieldKind};
+use zccl::topology::Topology;
+
+const EB: f64 = 1e-3;
+
+fn inter_mode() -> Mode {
+    Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(EB))
+}
+
+fn hier_mode() -> Mode {
+    Mode::hier(CompressorKind::FzLight, ErrorBound::Abs(EB))
+}
+
+/// The node shapes the suite sweeps: single node (1×n), flat (n×1),
+/// uneven nodes, even blocks, and a non-power-of-two leader count.
+fn shapes() -> Vec<Topology> {
+    vec![
+        Topology::grouped(&[5]).unwrap(),       // 1 node x 5 ranks
+        Topology::flat(5),                      // 5 nodes x 1 rank
+        Topology::grouped(&[3, 1, 2]).unwrap(), // uneven
+        Topology::blocked(2, 2),                // 2 x 2
+        Topology::grouped(&[2, 2, 2]).unwrap(), // 3 leaders (non-pow2)
+    ]
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn rank_chunk(rank: usize, len: usize) -> Vec<f32> {
+    Field::generate(FieldKind::Cesm, len, 4000 + rank as u64).values
+}
+
+#[test]
+fn hier_allgather_bit_identical_to_flat_zccl() {
+    for topo in shapes() {
+        let n = topo.ranks();
+        // Unequal chunk lengths, including an empty contribution.
+        let len_of = |r: usize| if r == 1 { 0 } else { 200 + 37 * r };
+        let flat = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, inter_mode());
+            let mine = rank_chunk(ctx.rank(), len_of(ctx.rank()));
+            ctx.allgather(&mine).unwrap()
+        });
+        let t2 = topo.clone();
+        let (hier, report) = run_ranks_on(&topo, move |c| {
+            let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+            let mine = rank_chunk(ctx.rank(), len_of(ctx.rank()));
+            ctx.allgather(&mine).unwrap()
+        });
+        for (rank, (h, f)) in hier.iter().zip(&flat).enumerate() {
+            assert_eq!(bits(h), bits(f), "topo {topo:?} rank {rank}");
+        }
+        for &(a, b) in &report.inter_pairs {
+            assert!(
+                topo.is_leader(a) && topo.is_leader(b),
+                "slow tier crossed by non-leaders {a}->{b} in {topo:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hier_bcast_bit_identical_to_flat_zccl() {
+    for topo in shapes() {
+        let n = topo.ranks();
+        // Roots covering a leader, a follower (where one exists), and the
+        // last rank.
+        for root in [0, 1 % n, n - 1] {
+            let flat = run_ranks(n, move |c| {
+                let mut ctx = CollCtx::over(c, inter_mode());
+                let data = (c.rank() == root).then(|| rank_chunk(99, 3000));
+                ctx.bcast(data.as_deref(), root).unwrap()
+            });
+            let t2 = topo.clone();
+            let (hier, report) = run_ranks_on(&topo, move |c| {
+                let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+                let data = (c.rank() == root).then(|| rank_chunk(99, 3000));
+                (ctx.bcast(data.as_deref(), root).unwrap(), ctx.compress_calls())
+            });
+            for (rank, ((h, compresses), f)) in hier.iter().zip(&flat).enumerate() {
+                assert_eq!(bits(h), bits(f), "topo {topo:?} root {root} rank {rank}");
+                let want = u64::from(rank == root);
+                assert_eq!(
+                    *compresses, want,
+                    "only the root compresses (topo {topo:?} root {root} rank {rank})"
+                );
+            }
+            for &(a, b) in &report.inter_pairs {
+                assert!(topo.is_leader(a) && topo.is_leader(b), "{topo:?} root {root}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hier_scatter_bit_identical_to_flat_zccl() {
+    for topo in shapes() {
+        let n = topo.ranks();
+        for root in [0, n - 1] {
+            for len in [1001usize, 3] {
+                // len=3 < n: some ranks own empty chunks.
+                let flat = run_ranks(n, move |c| {
+                    let mut ctx = CollCtx::over(c, inter_mode());
+                    let data = (c.rank() == root).then(|| rank_chunk(7, len));
+                    ctx.scatter(data.as_deref(), root).unwrap()
+                });
+                let t2 = topo.clone();
+                let (hier, report) = run_ranks_on(&topo, move |c| {
+                    let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+                    let data = (c.rank() == root).then(|| rank_chunk(7, len));
+                    ctx.scatter(data.as_deref(), root).unwrap()
+                });
+                for (rank, (h, f)) in hier.iter().zip(&flat).enumerate() {
+                    assert_eq!(
+                        bits(h),
+                        bits(f),
+                        "topo {topo:?} root {root} len {len} rank {rank}"
+                    );
+                }
+                for &(a, b) in &report.inter_pairs {
+                    assert!(topo.is_leader(a) && topo.is_leader(b), "{topo:?} root {root}");
+                }
+            }
+        }
+    }
+}
+
+/// Hier allreduce's inter tier IS the flat ZCCL allreduce over the leader
+/// group: running flat ZCCL on a leaders-only fabric fed the node-reduced
+/// inputs must reproduce the hierarchical result bit for bit.
+#[test]
+fn hier_allreduce_bit_identical_to_leader_tier_reference() {
+    let len = 2500;
+    for topo in shapes() {
+        let n = topo.ranks();
+        for op in [ReduceOp::Sum, ReduceOp::Max] {
+            let t2 = topo.clone();
+            let (hier, _) = run_ranks_on(&topo, move |c| {
+                let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+                let input = rank_chunk(ctx.rank(), len);
+                ctx.allreduce(&input, op).unwrap()
+            });
+            // Node-reduced inputs, folded in ascending member order — the
+            // same order the leader folds raw member partials.
+            let nodes = topo.nodes();
+            let node_sums: Vec<Vec<f32>> = (0..nodes)
+                .map(|j| {
+                    let members = topo.members(j);
+                    let mut acc = rank_chunk(members[0], len);
+                    for &r in &members[1..] {
+                        op.fold(&mut acc, &rank_chunk(r, len));
+                    }
+                    acc
+                })
+                .collect();
+            let reference = run_ranks(nodes, move |c| {
+                let mut ctx = CollCtx::over(c, inter_mode());
+                let me = ctx.rank();
+                ctx.allreduce(&node_sums[me], op).unwrap()
+            });
+            for (rank, h) in hier.iter().enumerate() {
+                assert_eq!(bits(h), bits(&reference[0]), "topo {topo:?} {op:?} rank {rank}");
+            }
+        }
+    }
+}
+
+/// With one rank per node the hierarchy is the identity: hier == flat
+/// ZCCL on the very same communicator, bit for bit.
+#[test]
+fn hier_allreduce_flat_topology_matches_flat_zccl() {
+    let (n, len) = (5, 3000);
+    let flat = run_ranks(n, move |c| {
+        let mut ctx = CollCtx::over(c, inter_mode());
+        let input = rank_chunk(ctx.rank(), len);
+        ctx.allreduce(&input, ReduceOp::Sum).unwrap()
+    });
+    let topo = Topology::flat(n);
+    let (hier, report) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, hier_mode(), Topology::flat(5)).unwrap();
+        let input = rank_chunk(ctx.rank(), len);
+        ctx.allreduce(&input, ReduceOp::Sum).unwrap()
+    });
+    for (h, f) in hier.iter().zip(&flat) {
+        assert_eq!(bits(h), bits(f));
+    }
+    // Every rank is a leader, so crossings are unrestricted — but the
+    // ledger must have seen traffic (everything is inter-node here).
+    assert!(report.tier.inter_bytes > 0);
+    assert_eq!(report.tier.intra_bytes, 0);
+}
+
+/// A hierarchical mode without an installed topology degenerates to flat
+/// ZCCL (Topology::flat default).
+#[test]
+fn hier_without_topology_degenerates_to_flat() {
+    let (n, len) = (4, 1500);
+    let flat = run_ranks(n, move |c| {
+        let mut ctx = CollCtx::over(c, inter_mode());
+        let input = rank_chunk(ctx.rank(), len);
+        ctx.allreduce(&input, ReduceOp::Sum).unwrap()
+    });
+    let hier = run_ranks(n, move |c| {
+        let mut ctx = CollCtx::over(c, hier_mode());
+        let input = rank_chunk(ctx.rank(), len);
+        ctx.allreduce(&input, ReduceOp::Sum).unwrap()
+    });
+    for (h, f) in hier.iter().zip(&flat) {
+        assert_eq!(bits(h), bits(f));
+    }
+}
+
+/// Accuracy: the hierarchical sum stays inside the compressed-chain error
+/// envelope of the LEADER ring (L hops), not the full rank count — the
+/// intra tier is exact. Avg finishes with the total rank count.
+#[test]
+fn hier_allreduce_error_envelope_and_avg() {
+    let topo = Topology::blocked(4, 4);
+    let (n, len) = (topo.ranks(), 4096);
+    for op in [ReduceOp::Sum, ReduceOp::Avg] {
+        let t2 = topo.clone();
+        let (out, _) = run_ranks_on(&topo, move |c| {
+            let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+            let input = rank_chunk(ctx.rank(), len);
+            ctx.allreduce(&input, op).unwrap()
+        });
+        let mut exact = rank_chunk(0, len);
+        for r in 1..n {
+            op.fold(&mut exact, &rank_chunk(r, len));
+        }
+        op.finish(&mut exact, n);
+        // The reduce-scatter chain over L = 4 leaders injects at most
+        // (L-1)·ê into the (pre-finish) partial — scaled by 1/n for Avg —
+        // and the allgather hop compresses the finished chunk once more
+        // at full ê.
+        let scale = if op == ReduceOp::Avg { 1.0 / n as f64 } else { 1.0 };
+        let tol = (topo.nodes() as f64 - 1.0) * EB * scale + EB * 1.01 + 1e-5;
+        for o in &out {
+            assert_eq!(o.len(), len);
+            for (a, b) in o.iter().zip(&exact) {
+                assert!(((a - b).abs() as f64) <= tol, "{op:?}: {a} vs {b} tol {tol}");
+            }
+        }
+        for o in &out[1..] {
+            assert_eq!(bits(o), bits(&out[0]), "all ranks identical ({op:?})");
+        }
+    }
+}
+
+/// The ISSUE acceptance: over a 4-node × 4-rank fabric, each node's data
+/// is compressed exactly once per frame, by its leader; followers never
+/// touch the codec; every slow-tier crossing is leader↔leader.
+#[test]
+fn acceptance_4x4_compress_once_per_node_leaders_only() {
+    let topo = Topology::blocked(4, 4);
+    let nodes = topo.nodes();
+    let len = 4096;
+
+    // Allreduce: each leader compresses L frames (L-1 reduce-scatter
+    // rounds + its allgather chunk), followers none, and nobody decodes
+    // anything off the fast tier except leaders.
+    let t2 = topo.clone();
+    let (out, report) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+        let input = rank_chunk(ctx.rank(), len);
+        let r = ctx.allreduce(&input, ReduceOp::Sum).unwrap();
+        let pool = ctx.pool_stats();
+        (r, ctx.compress_calls(), pool.placement_decodes + pool.staged_decodes)
+    });
+    for (rank, (_, compresses, decodes)) in out.iter().enumerate() {
+        if topo.is_leader(rank) {
+            assert_eq!(
+                *compresses,
+                nodes as u64,
+                "leader {rank} compresses one frame per inter-tier hop"
+            );
+            assert!(*decodes > 0, "leader {rank} decodes");
+        } else {
+            assert_eq!(*compresses, 0, "follower {rank} must never compress");
+            assert_eq!(*decodes, 0, "follower {rank} must never decompress");
+        }
+    }
+    assert!(report.tier.inter_bytes > 0, "leaders exchanged compressed frames");
+    assert!(report.tier.intra_bytes > 0, "members exchanged raw windows");
+    assert!(!report.inter_pairs.is_empty());
+    for &(a, b) in &report.inter_pairs {
+        assert!(
+            topo.is_leader(a) && topo.is_leader(b),
+            "slow tier crossed by non-leaders: {a} -> {b}"
+        );
+    }
+    for o in &out[1..] {
+        assert_eq!(bits(&o.0), bits(&out.first().unwrap().0), "MPI semantics");
+    }
+
+    // Allgather: exactly one compression per member chunk, all at the
+    // leader — "compress once per node" in its purest form.
+    let t3 = topo.clone();
+    let (ag, report) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, hier_mode(), t3.clone()).unwrap();
+        let mine = rank_chunk(ctx.rank(), 700);
+        ctx.allgather(&mine).unwrap();
+        ctx.compress_calls()
+    });
+    for (rank, compresses) in ag.iter().enumerate() {
+        let want = if topo.is_leader(rank) {
+            topo.members(topo.node_of(rank)).len() as u64
+        } else {
+            0
+        };
+        assert_eq!(*compresses, want, "rank {rank}: one compression per node chunk");
+    }
+    for &(a, b) in &report.inter_pairs {
+        assert!(topo.is_leader(a) && topo.is_leader(b));
+    }
+}
+
+/// Warm hierarchical allreduce performs zero scratch-pool growth and
+/// zero packet-pool allocations — the satellite regression mirroring the
+/// flat warm-path tests.
+#[test]
+fn warm_hier_allreduce_is_allocation_free() {
+    let topo = Topology::blocked(2, 2);
+    let len = 5000;
+    let t2 = topo.clone();
+    let (ok, _) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+        let input = rank_chunk(ctx.rank(), len);
+        let mut out = Vec::new();
+
+        // Deterministically pre-warm the fabric-shared packet pool past
+        // any possible concurrent demand, so the post-warm-up counter
+        // cannot depend on thread interleaving (same pattern as the flat
+        // placement-decode regression).
+        let warmed: Vec<Vec<u8>> = (0..16)
+            .map(|_| {
+                let mut b = ctx.transport().lease();
+                b.reserve_exact(64 << 10);
+                b
+            })
+            .collect();
+        ctx.barrier().unwrap();
+        for b in warmed {
+            ctx.transport().recycle(b);
+        }
+
+        ctx.allreduce_into(&input, ReduceOp::Sum, &mut out).unwrap();
+        ctx.allreduce_into(&input, ReduceOp::Sum, &mut out).unwrap();
+        ctx.barrier().unwrap();
+        let warm = ctx.pool_stats();
+        let warm_packets = ctx.packet_stats().allocated;
+        let warm_builds = ctx.codec_builds();
+
+        for _ in 0..3 {
+            ctx.allreduce_into(&input, ReduceOp::Sum, &mut out).unwrap();
+        }
+        ctx.barrier().unwrap();
+        let after = ctx.pool_stats();
+        assert_eq!(
+            after.byte_buffers_created, warm.byte_buffers_created,
+            "warm hier allreduce must not create byte buffers"
+        );
+        assert_eq!(
+            after.f32_buffers_created, warm.f32_buffers_created,
+            "warm hier allreduce must not create f32 buffers"
+        );
+        assert_eq!(
+            ctx.packet_stats().allocated,
+            warm_packets,
+            "warm hier allreduce must lease every wire buffer from the pool"
+        );
+        assert_eq!(ctx.codec_builds(), warm_builds, "no per-iteration codec builds");
+        true
+    });
+    assert!(ok.into_iter().all(|x| x));
+}
+
+/// Collectives without a dedicated hierarchical schedule fall back to
+/// their flat ZCCL form under `Algo::Hier` — same results, no surprises.
+#[test]
+fn hier_fallback_collectives_match_flat_zccl() {
+    let topo = Topology::blocked(2, 2);
+    let (n, len) = (topo.ranks(), 1200);
+    let flat = run_ranks(n, move |c| {
+        let mut ctx = CollCtx::over(c, inter_mode());
+        let input = rank_chunk(ctx.rank(), len);
+        let rs = ctx.reduce_scatter(&input, ReduceOp::Sum).unwrap();
+        let g = ctx.gather(&input, 0).unwrap();
+        let a2a = ctx.alltoall(&input).unwrap();
+        let red = ctx.reduce(&input, ReduceOp::Sum, 1).unwrap();
+        (rs, g, a2a, red)
+    });
+    let t2 = topo.clone();
+    let (hier, _) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+        let input = rank_chunk(ctx.rank(), len);
+        let rs = ctx.reduce_scatter(&input, ReduceOp::Sum).unwrap();
+        let g = ctx.gather(&input, 0).unwrap();
+        let a2a = ctx.alltoall(&input).unwrap();
+        let red = ctx.reduce(&input, ReduceOp::Sum, 1).unwrap();
+        (rs, g, a2a, red)
+    });
+    for (rank, (h, f)) in hier.iter().zip(&flat).enumerate() {
+        assert_eq!(h.0 .0, f.0 .0, "reduce_scatter range, rank {rank}");
+        assert_eq!(bits(&h.0 .1), bits(&f.0 .1), "reduce_scatter, rank {rank}");
+        assert_eq!(
+            h.1.as_deref().map(bits),
+            f.1.as_deref().map(bits),
+            "gather, rank {rank}"
+        );
+        assert_eq!(bits(&h.2), bits(&f.2), "alltoall, rank {rank}");
+        assert_eq!(h.3.as_deref().map(bits), f.3.as_deref().map(bits), "reduce, rank {rank}");
+    }
+}
+
+#[test]
+fn topology_and_tier_mode_validation() {
+    let n = 3;
+    let results = run_ranks(n, move |c| {
+        let mut ctx = CollCtx::over(c, hier_mode());
+        // Wrong rank count is rejected.
+        let bad = ctx.set_topology(Topology::flat(7));
+        // Right rank count installs.
+        let good = ctx.set_topology(Topology::grouped(&[2, 1]).unwrap());
+        // Compressed intra tier is rejected; raw is accepted.
+        let bad_intra = ctx.set_intra_mode(inter_mode());
+        let good_intra = ctx.set_intra_mode(Mode::plain());
+        // Keep the ranks in lockstep (no collective ran here).
+        (bad.is_err(), good.is_ok(), bad_intra.is_err(), good_intra.is_ok())
+    });
+    for r in results {
+        assert_eq!(r, (true, true, true, true));
+    }
+}
