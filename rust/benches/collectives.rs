@@ -26,7 +26,7 @@ use zccl::collectives::{run_ranks, run_ranks_on, CollCtx, Mode, ReduceOp};
 use zccl::compress::{Compressor, CompressorKind, ErrorBound, FzLight};
 use zccl::data::fields::{Field, FieldKind};
 use zccl::topology::Topology;
-use zccl::util::bench::{measure, Table};
+use zccl::util::bench::{emit_bench_line, measure, Table};
 use zccl::util::json::Json;
 
 fn modes() -> Vec<(&'static str, Mode)> {
@@ -179,7 +179,7 @@ fn main() {
     // recv_into + placement decode. Reports warm wall time plus the
     // counters proving the warm receive side allocates no byte buffers
     // and performs no post-decode copies; emits BENCH_allgather.json.
-    let mut allgather_json: Option<String> = None;
+    let mut allgather_json: Option<Json> = None;
     for (mode_name, mode) in modes() {
         let out = run_ranks(n, move |c| {
             let mut ctx = CollCtx::over(c, mode);
@@ -232,7 +232,7 @@ fn main() {
                 ("placement_decodes", Json::Num(pool.placement_decodes as f64)),
                 ("staged_decodes", Json::Num(pool.staged_decodes as f64)),
             ]);
-            allgather_json = Some(summary.to_string());
+            allgather_json = Some(summary);
         }
     }
 
@@ -315,7 +315,6 @@ fn main() {
             ("leader_compress_calls", Json::Num(leader_compresses as f64)),
             ("follower_compress_calls", Json::Num(follower_compresses as f64)),
         ])
-        .to_string()
     };
 
     // Per-hop receive side in isolation: the same compressed partial
@@ -361,19 +360,9 @@ fn main() {
         ("unfused_ns_per_element", Json::Num(per_elem(unfused.mean_s))),
         ("speedup", Json::Num(unfused.mean_s / fused.mean_s.max(1e-12))),
     ]);
-    let line = summary.to_string();
-    println!("BENCH_reduce.json {line}");
-    if let Err(e) = std::fs::write("BENCH_reduce.json", format!("{line}\n")) {
-        eprintln!("warning: could not write BENCH_reduce.json: {e}");
+    emit_bench_line("BENCH_reduce.json", &summary);
+    if let Some(summary) = allgather_json {
+        emit_bench_line("BENCH_allgather.json", &summary);
     }
-    if let Some(line) = allgather_json {
-        println!("BENCH_allgather.json {line}");
-        if let Err(e) = std::fs::write("BENCH_allgather.json", format!("{line}\n")) {
-            eprintln!("warning: could not write BENCH_allgather.json: {e}");
-        }
-    }
-    println!("BENCH_hier.json {hier_json}");
-    if let Err(e) = std::fs::write("BENCH_hier.json", format!("{hier_json}\n")) {
-        eprintln!("warning: could not write BENCH_hier.json: {e}");
-    }
+    emit_bench_line("BENCH_hier.json", &hier_json);
 }

@@ -1,10 +1,19 @@
 //! `cargo bench --bench compressors` — codec micro-benchmarks (the
 //! Tables 1–3 measurement core, custom harness; this environment has no
 //! criterion).
+//!
+//! Besides the per-codec table below, this runs the shared
+//! `codec_bench` driver (also behind `zccl bench codec`): end-to-end
+//! comp/decomp GB/s for the bit-shifting codecs plus the word-parallel
+//! `pack_fixed`/`unpack_fixed` kernels against the scalar
+//! `BitWriter`/`BitReader` reference path, emitting the single-line
+//! `BENCH_codec.json` trajectory summary (`speedup_vs_reference`) next
+//! to `BENCH_reduce` / `BENCH_allgather` / `BENCH_hier`.
 
 use zccl::compress::{self, Compressor, CompressorKind, ErrorBound, MtCompressor};
+use zccl::coordinator::harness::codec_bench;
 use zccl::data::fields::{Field, FieldKind};
-use zccl::util::bench::{measure_for, Table};
+use zccl::util::bench::{emit_bench_line, measure_for, Table};
 
 fn main() {
     let n = 1 << 21; // 8 MiB of f32
@@ -45,4 +54,14 @@ fn main() {
         }
     }
     println!("{}", t.render());
+
+    // Word-parallel kernel trajectory: shared driver with `zccl bench
+    // codec`, smaller budget here since the table above already covers
+    // the end-to-end sweep.
+    let (tables, summary) = codec_bench(1 << 20, 0.05);
+    for (name, table) in tables {
+        println!("== {name} ==");
+        println!("{}", table.render());
+    }
+    emit_bench_line("BENCH_codec.json", &summary);
 }

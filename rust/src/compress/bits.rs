@@ -1,11 +1,34 @@
-//! Fast bit-level packing used by the fixed-length ("bit-shifting")
-//! encoding stages of fZ-light and SZx.
+//! Word-parallel bit-level packing used by the fixed-length
+//! ("bit-shifting") encoding stages of fZ-light and SZx.
 //!
-//! Both compressors emit, per small block, a run of `width`-bit magnitudes.
-//! The writer keeps a 64-bit accumulator and spills whole bytes, which is
-//! the hot loop of compression; the reader mirrors it.
+//! Both compressors emit, per small block, a run of `width`-bit magnitudes
+//! (LSB-first, byte-aligned at the end of each block). Two kernel families
+//! implement that layout:
+//!
+//! - **Word-parallel kernels** — the hot path. [`pack_fixed`] keeps a
+//!   64-bit accumulator and spills **whole 8-byte words** per overflow
+//!   (one amortised `extend_from_slice` instead of up to eight `push`es),
+//!   and [`unpack_fixed`] decodes a caller-sized batch of codes with
+//!   whole-`u64` refills (`u64::from_le_bytes` on full words, a masked
+//!   tail load at the end of the slice). The decode side is
+//!   block-batched: callers hand it a stack array per block instead of a
+//!   per-value closure, so the surrounding sign/reconstruct/dequantize
+//!   stages run as straight-line loops the compiler can vectorize.
+//! - **Scalar reference** — [`BitWriter`] / [`BitReader`] and the thin
+//!   [`pack_fixed_reference`] / [`unpack_fixed_reference`] wrappers over
+//!   them. One bit-accumulator step per byte, kept deliberately simple:
+//!   this is the executable specification of the stream layout. The
+//!   property suite (`tests/codec_kernels.rs`) checks the word-parallel
+//!   kernels against it for every width 1..=64, and `zccl bench codec`
+//!   reports `speedup_vs_reference` in `BENCH_codec.json` so the gap is
+//!   tracked from PR to PR.
+//!
+//! Both families produce bit-identical streams; the layout is the spec
+//! and existing frames must decode unchanged.
 
-/// Append-only bit writer over a byte vector.
+/// Append-only bit writer over a byte vector — the **scalar reference**
+/// encoder (see the module docs). Production encode goes through
+/// [`pack_fixed`].
 pub struct BitWriter {
     out: Vec<u8>,
     acc: u64,
@@ -25,11 +48,15 @@ impl BitWriter {
     }
 
     /// Write the low `width` bits of `v` (LSB-first into the stream).
-    /// `width` must be <= 57 so the accumulator never overflows.
+    ///
+    /// `width` must be <= 57 — the single-limb invariant shared with
+    /// [`BitReader::get`]: the 64-bit accumulator holds at most 7 leftover
+    /// bits, so 57 more always fit. Wider values go through
+    /// [`BitWriter::put_wide`], which splits them into two limbs.
     #[inline]
     pub fn put(&mut self, v: u64, width: u32) {
         debug_assert!(width <= 57);
-        debug_assert!(width == 64 || v < (1u64 << width));
+        debug_assert!(v < (1u64 << width));
         self.acc |= v << self.nbits;
         self.nbits += width;
         while self.nbits >= 8 {
@@ -70,7 +97,9 @@ impl BitWriter {
     }
 }
 
-/// LSB-first bit reader over a byte slice.
+/// LSB-first bit reader over a byte slice — the **scalar reference**
+/// decoder (see the module docs). Production decode goes through
+/// [`unpack_fixed`].
 pub struct BitReader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -91,8 +120,13 @@ impl<'a> BitReader<'a> {
         self.pos
     }
 
-    /// Read `width` bits (<= 57). Returns 0 bits past the end (the caller
+    /// Read `width` bits. Returns 0 bits past the end (the caller
     /// validates stream length up front).
+    ///
+    /// `width` must be <= 57 — the single-limb invariant shared with
+    /// [`BitWriter::put`] (at most 7 leftover accumulator bits + 57 never
+    /// overflow 64, and the mask below never needs the full-word case).
+    /// Wider values go through [`BitReader::get_wide`].
     #[inline]
     pub fn get(&mut self, width: u32) -> u64 {
         debug_assert!(width <= 57);
@@ -102,7 +136,7 @@ impl<'a> BitReader<'a> {
             self.acc |= (b as u64) << self.nbits;
             self.nbits += 8;
         }
-        let v = self.acc & (((1u64 << width) - 1) | if width == 64 { u64::MAX } else { 0 });
+        let v = self.acc & ((1u64 << width) - 1);
         self.acc >>= width;
         self.nbits -= width;
         v
@@ -128,83 +162,163 @@ impl<'a> BitReader<'a> {
     }
 }
 
-/// Zero-allocation fixed-width packer: append `vals[..cnt]` as `width`-bit
-/// little-endian codes directly onto `out` (byte-aligned at the end).
-/// Layout is identical to a [`BitWriter`] `put_wide` sequence + `align`.
-/// This is the compression hot loop — no per-block allocations.
+/// Word-parallel fixed-width packer: append `vals` as `width`-bit
+/// little-endian codes onto `out` (byte-aligned at the end). The layout
+/// is identical to a [`BitWriter`] `put_wide` sequence + `align` — see
+/// [`pack_fixed_reference`] for that executable spec.
+///
+/// This is the compression hot loop: the 64-bit accumulator spills a
+/// **whole 8-byte word** per overflow (`extend_from_slice` of
+/// `acc.to_le_bytes()`, one amortised memcpy) instead of draining byte
+/// by byte, and only the sub-word tail is pushed per byte. Zero
+/// allocations beyond the single up-front `reserve`.
 #[inline]
 pub fn pack_fixed(out: &mut Vec<u8>, vals: &[u64], width: u32) {
     debug_assert!(width >= 1 && width <= 64);
+    out.reserve((vals.len() * width as usize).div_ceil(8));
     let mut acc = 0u64;
     let mut nb = 0u32;
     if width <= 57 {
+        // Single-limb path. Invariant: bits >= nb of `acc` are zero, and
+        // nb <= 63 at the top of each iteration, so `v << nb` keeps every
+        // bit that belongs below the spill boundary; the bits it sheds
+        // (positions >= 64) are exactly the ones restored from `v` after
+        // the word is written out.
         for &v in vals {
-            debug_assert!(width == 64 || v < (1u64 << width));
+            debug_assert!(v < (1u64 << width));
             acc |= v << nb;
             nb += width;
-            // Spill a word at a time when possible (amortises the Vec
-            // bookkeeping), then bytes.
-            if nb >= 32 {
-                out.extend_from_slice(&(acc as u32).to_le_bytes());
-                acc >>= 32;
-                nb -= 32;
-            }
-            while nb >= 8 {
-                out.push(acc as u8);
-                acc >>= 8;
-                nb -= 8;
+            if nb >= 64 {
+                out.extend_from_slice(&acc.to_le_bytes());
+                nb -= 64;
+                acc = if nb > 0 { v >> (width - nb) } else { 0 };
             }
         }
     } else {
+        // Two-limb path (codes wider than 57 bits): low 32 bits, then the
+        // remaining `width - 32`, matching `BitWriter::put_wide`.
+        let hiw = width - 32;
         for &v in vals {
-            acc |= (v & 0xFFFF_FFFF) << nb;
+            let lo = v & 0xFFFF_FFFF;
+            acc |= lo << nb;
             nb += 32;
-            while nb >= 8 {
-                out.push(acc as u8);
-                acc >>= 8;
-                nb -= 8;
+            if nb >= 64 {
+                out.extend_from_slice(&acc.to_le_bytes());
+                nb -= 64;
+                acc = if nb > 0 { lo >> (32 - nb) } else { 0 };
             }
-            acc |= (v >> 32) << nb;
-            nb += width - 32;
-            while nb >= 8 {
-                out.push(acc as u8);
-                acc >>= 8;
-                nb -= 8;
+            let hi = v >> 32;
+            acc |= hi << nb;
+            nb += hiw;
+            if nb >= 64 {
+                out.extend_from_slice(&acc.to_le_bytes());
+                nb -= 64;
+                acc = if nb > 0 { hi >> (hiw - nb) } else { 0 };
             }
         }
+    }
+    // Sub-word tail: whole leftover bytes, then the zero-padded partial.
+    while nb >= 8 {
+        out.push(acc as u8);
+        acc >>= 8;
+        nb -= 8;
     }
     if nb > 0 {
         out.push(acc as u8);
     }
 }
 
-/// Zero-allocation fixed-width unpacker matching [`pack_fixed`]: calls
-/// `f(index, value)` for each of `cnt` `width`-bit codes in `bytes`.
-#[inline]
-pub fn unpack_fixed(bytes: &[u8], cnt: usize, width: u32, mut f: impl FnMut(usize, u64)) {
+/// Scalar reference for [`pack_fixed`]: the same stream via [`BitWriter`]
+/// (`put_wide` each value, `align`). Kept as the executable layout spec
+/// for the property suite and the `BENCH_codec.json`
+/// `speedup_vs_reference` baseline — not a hot path.
+pub fn pack_fixed_reference(out: &mut Vec<u8>, vals: &[u64], width: u32) {
     debug_assert!(width >= 1 && width <= 64);
-    if width <= 57 {
-        let mask = (1u64 << width) - 1;
-        let mut acc = 0u64;
-        let mut nb = 0u32;
-        let mut ptr = 0usize;
-        for j in 0..cnt {
-            while nb < width {
-                let b = if ptr < bytes.len() { bytes[ptr] } else { 0 };
-                acc |= (b as u64) << nb;
-                nb += 8;
-                ptr += 1;
+    let mut w = BitWriter::with_capacity((vals.len() * width as usize).div_ceil(8));
+    for &v in vals {
+        w.put_wide(v, width);
+    }
+    out.extend_from_slice(&w.finish());
+}
+
+/// Load the 8 bytes at `ptr` as a little-endian word, zero-padding past
+/// the end of `bytes` (the tail load of [`unpack_fixed`]).
+#[inline]
+fn word_at(bytes: &[u8], ptr: usize) -> u64 {
+    match bytes.get(ptr..ptr + 8) {
+        Some(s) => u64::from_le_bytes(s.try_into().unwrap()),
+        None => {
+            let mut tmp = [0u8; 8];
+            if let Some(rest) = bytes.get(ptr..) {
+                tmp[..rest.len()].copy_from_slice(rest);
             }
-            f(j, acc & mask);
-            acc >>= width;
-            nb -= width;
+            u64::from_le_bytes(tmp)
         }
-    } else {
-        // Rare path (codes wider than 57 bits): lean on BitReader.
+    }
+}
+
+/// Word-parallel fixed-width unpacker matching [`pack_fixed`]: decode
+/// `out.len()` `width`-bit codes from `bytes` into `out` — the
+/// block-batch decode kernel (callers pass one block's stack array at a
+/// time). Refills load a **whole `u64`** per step and advance by however
+/// many full bytes fit the accumulator, so the per-value work is one
+/// mask/shift pair.
+///
+/// # Contract
+///
+/// `bytes` must hold all `out.len() * width` bits
+/// (`debug_assert`-checked). Codes read past the end of a too-short
+/// buffer silently decode as zero in release builds — callers validate
+/// payload length up front (as the frame decoders do) rather than
+/// relying on that.
+#[inline]
+pub fn unpack_fixed(bytes: &[u8], width: u32, out: &mut [u64]) {
+    debug_assert!(width >= 1 && width <= 64);
+    debug_assert!(
+        bytes.len() >= (out.len() * width as usize).div_ceil(8),
+        "unpack_fixed: {} bytes cannot hold {} {width}-bit codes (would zero-fill)",
+        bytes.len(),
+        out.len(),
+    );
+    if width > 57 {
+        // Rare path (codes wider than 57 bits): two limbs via the scalar
+        // reference reader.
         let mut r = BitReader::new(bytes);
-        for j in 0..cnt {
-            f(j, r.get_wide(width));
+        for slot in out.iter_mut() {
+            *slot = r.get_wide(width);
         }
+        return;
+    }
+    let mask = (1u64 << width) - 1;
+    let mut acc = 0u64;
+    let mut nb = 0u32;
+    let mut ptr = 0usize;
+    for slot in out.iter_mut() {
+        if nb < width {
+            // Whole-word refill: consume as many full bytes as fit. The
+            // word's top bits that do NOT fit are still ORed in — they
+            // are the true next stream bits, and the next refill rereads
+            // the byte they came from, so the OR is idempotent.
+            let w = word_at(bytes, ptr);
+            acc |= w << nb;
+            let took = (64 - nb) >> 3;
+            ptr += took as usize;
+            nb += took * 8;
+        }
+        *slot = acc & mask;
+        acc >>= width;
+        nb -= width;
+    }
+}
+
+/// Scalar reference for [`unpack_fixed`] via [`BitReader`] (`get_wide`
+/// per value). The executable layout spec for the property suite and the
+/// `BENCH_codec.json` `speedup_vs_reference` baseline — not a hot path.
+pub fn unpack_fixed_reference(bytes: &[u8], width: u32, out: &mut [u64]) {
+    debug_assert!(width >= 1 && width <= 64);
+    let mut r = BitReader::new(bytes);
+    for slot in out.iter_mut() {
+        *slot = r.get_wide(width);
     }
 }
 
@@ -323,6 +437,46 @@ mod tests {
         let mut r = BitReader::new(&buf);
         assert_eq!(r.get(0), 0);
         assert_eq!(r.get(2), 0b11);
+    }
+
+    #[test]
+    fn pack_matches_reference_and_roundtrips() {
+        let mut rng = crate::data::rng::Rng::new(5);
+        for width in 1..=64u32 {
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            for cnt in [1usize, 7, 32, 61] {
+                let vals: Vec<u64> = (0..cnt).map(|_| rng.next_u64() & mask).collect();
+                let mut fast = Vec::new();
+                pack_fixed(&mut fast, &vals, width);
+                let mut reference = Vec::new();
+                pack_fixed_reference(&mut reference, &vals, width);
+                assert_eq!(fast, reference, "width {width} cnt {cnt}");
+                let mut dec = vec![0u64; cnt];
+                unpack_fixed(&fast, width, &mut dec);
+                assert_eq!(dec, vals, "width {width} cnt {cnt}");
+                let mut dec_ref = vec![0u64; cnt];
+                unpack_fixed_reference(&fast, width, &mut dec_ref);
+                assert_eq!(dec_ref, vals, "width {width} cnt {cnt} (reference)");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_appends_after_existing_bytes() {
+        let mut out = vec![0xEE, 0xFF];
+        pack_fixed(&mut out, &[0b101, 0b011], 3);
+        assert_eq!(&out[..2], &[0xEE, 0xFF]);
+        let mut dec = [0u64; 2];
+        unpack_fixed(&out[2..], 3, &mut dec);
+        assert_eq!(dec, [0b101, 0b011]);
+    }
+
+    #[test]
+    fn empty_input_emits_nothing() {
+        let mut out = Vec::new();
+        pack_fixed(&mut out, &[], 13);
+        assert!(out.is_empty());
+        unpack_fixed(&out, 13, &mut []);
     }
 
     #[test]

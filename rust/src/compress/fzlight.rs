@@ -82,52 +82,66 @@ impl FzLight {
 
 /// Compress one chunk into a fresh payload vector (the multithread path
 /// needs independently owned payloads; everything else should prefer
-/// [`compress_chunk_into`]).
+/// [`compress_chunk_into`]). The quantize scratch is thread-local so a
+/// worker pays one allocation for all the chunks it processes, not one
+/// per chunk.
 pub(crate) fn compress_chunk(data: &[f32], twoeb: f64) -> (Vec<u8>, usize, usize) {
+    thread_local! {
+        static QBUF: std::cell::RefCell<Vec<i64>> =
+            const { std::cell::RefCell::new(Vec::new()) };
+    }
     let mut payload = Vec::with_capacity(16 + data.len() * 2);
-    let (blocks, constant) = compress_chunk_into(data, twoeb, &mut payload);
+    let (blocks, constant) = QBUF
+        .with(|q| compress_chunk_into(data, twoeb, &mut payload, &mut q.borrow_mut()));
     (payload, blocks, constant)
 }
 
 /// Compress one chunk (outlier + delta blocks), appending to `payload`.
-/// Returns the (blocks, constant_blocks) counts.
+/// `qbuf` is caller-owned scratch for the quantized chunk (cleared here;
+/// reuse it across chunks for a zero-alloc warm path). Returns the
+/// (blocks, constant_blocks) counts.
 ///
-/// Hot path (see EXPERIMENTS.md §Perf): sign words and magnitudes are
-/// packed straight into the payload via [`super::bits::pack_fixed`] —
-/// zero allocations per block.
+/// Hot path (tracked by `benches/compressors.rs` / `BENCH_codec.json`):
+/// the stages run as **separate whole-chunk / whole-block loops** — one
+/// quantize pass over the chunk into `qbuf`, then per block a delta
+/// pass, a sign/magnitude pass, and the word-parallel
+/// [`super::bits::pack_fixed`] spill — so each loop is straight-line and
+/// auto-vectorizable, with zero allocations per block.
 pub(crate) fn compress_chunk_into(
     data: &[f32],
     twoeb: f64,
     payload: &mut Vec<u8>,
+    qbuf: &mut Vec<i64>,
 ) -> (usize, usize) {
     debug_assert!(!data.is_empty());
     let inv = 1.0 / twoeb;
-    let q0 = quantize(data[0], inv);
+    // Stage 1: quantize the whole chunk in one pass (the Lorenzo delta
+    // has a serial dependency; the quantize does not).
+    qbuf.clear();
+    qbuf.extend(data.iter().map(|&x| quantize(x, inv)));
+    let q0 = qbuf[0];
     payload.reserve(16 + data.len() * 2);
     payload.extend_from_slice(&q0.to_le_bytes());
 
     let n_deltas = data.len() - 1;
     let mut blocks = 0usize;
     let mut constant = 0usize;
-    let mut prev = q0;
+    let mut deltas = [0i64; BLOCK];
     let mut mags = [0u64; BLOCK];
     let mut b = 0;
     while b < n_deltas {
         let cnt = BLOCK.min(n_deltas - b);
+        // Stage 2: the block's Lorenzo deltas from the quantized chunk.
+        let qs = &qbuf[b..b + cnt + 1];
+        for j in 0..cnt {
+            deltas[j] = qs[j + 1] - qs[j];
+        }
+        // Stage 3: signs, magnitudes and the running max in one pass.
         let mut maxmag: u64 = 0;
         let mut sign = 0u32;
-        // Two passes so the quantization loop auto-vectorises (the Lorenzo
-        // delta has a serial dependency; the quantize does not).
-        let mut qbuf = [0i64; BLOCK + 1];
-        qbuf[0] = prev;
-        for (slot, &x) in qbuf[1..1 + cnt].iter_mut().zip(&data[1 + b..1 + b + cnt]) {
-            *slot = quantize(x, inv);
-        }
-        prev = qbuf[cnt];
         for j in 0..cnt {
-            let d = qbuf[j + 1] - qbuf[j];
-            mags[j] = d.unsigned_abs();
-            sign |= u32::from(d < 0) << j;
+            mags[j] = deltas[j].unsigned_abs();
+            sign |= u32::from(deltas[j] < 0) << j;
             maxmag |= mags[j];
         }
         blocks += 1;
@@ -137,8 +151,9 @@ pub(crate) fn compress_chunk_into(
         } else {
             let bits = 64 - maxmag.leading_zeros();
             payload.push(bits as u8);
-            // Sign section (byte-aligned; LSB-first == BitWriter layout),
-            // then fixed-length magnitudes.
+            // Stage 4: sign section (byte-aligned; LSB-first ==
+            // BitWriter layout), then word-parallel fixed-length
+            // magnitudes.
             payload.extend_from_slice(&sign.to_le_bytes()[..cnt.div_ceil(8)]);
             super::bits::pack_fixed(payload, &mags[..cnt], bits);
         }
@@ -171,20 +186,23 @@ pub(crate) fn decompress_chunk(
 /// the same block walk with a different innermost store — one copy of the
 /// frame-walking logic to maintain.
 trait ChunkSink {
-    /// Deliver the reconstructed value for slot `idx`.
-    fn value(&mut self, idx: usize, x: f32);
+    /// Deliver a batch of reconstructed values for slots
+    /// `idx..idx + xs.len()` — one whole decoded block at a time, so the
+    /// sink's inner loop runs over a slice (copy or elementwise fold)
+    /// instead of a per-value call.
+    fn values(&mut self, idx: usize, xs: &[f32]);
     /// Deliver a constant run: slots `idx..idx + cnt` all reconstruct to
     /// `x` (the constant-block fast path — no per-value decode).
     fn run(&mut self, idx: usize, cnt: usize, x: f32);
 }
 
-/// Plain decode: write each value at its final offset.
+/// Plain decode: copy each decoded block to its final offset.
 struct WriteSink<'a>(&'a mut [f32]);
 
 impl ChunkSink for WriteSink<'_> {
     #[inline]
-    fn value(&mut self, idx: usize, x: f32) {
-        self.0[idx] = x;
+    fn values(&mut self, idx: usize, xs: &[f32]) {
+        self.0[idx..idx + xs.len()].copy_from_slice(xs);
     }
     #[inline]
     fn run(&mut self, idx: usize, cnt: usize, x: f32) {
@@ -192,7 +210,7 @@ impl ChunkSink for WriteSink<'_> {
     }
 }
 
-/// Fused decompress–reduce: fold each value into the accumulator.
+/// Fused decompress–reduce: fold each decoded block into the accumulator.
 struct FoldSink<'a> {
     op: ReduceOp,
     acc: &'a mut [f32],
@@ -200,8 +218,8 @@ struct FoldSink<'a> {
 
 impl ChunkSink for FoldSink<'_> {
     #[inline]
-    fn value(&mut self, idx: usize, x: f32) {
-        self.op.apply(&mut self.acc[idx], x);
+    fn values(&mut self, idx: usize, xs: &[f32]) {
+        self.op.apply_slice(&mut self.acc[idx..idx + xs.len()], xs);
     }
     #[inline]
     fn run(&mut self, idx: usize, cnt: usize, x: f32) {
@@ -210,18 +228,29 @@ impl ChunkSink for FoldSink<'_> {
 }
 
 /// Reconstruct one chunk of `cn` (>= 1) values block by block, handing
-/// each value (or constant run) to `sink`. The single source of truth for
-/// the chunk payload format on the decode side.
+/// each decoded block (or constant run) to `sink`. The single source of
+/// truth for the chunk payload format on the decode side.
+///
+/// The block decode is **batched** (tracked by `benches/compressors.rs`
+/// / `BENCH_codec.json`): the block's magnitudes land in a stack array
+/// via the word-parallel [`super::bits::unpack_fixed`], signs apply
+/// branchlessly, the Lorenzo chain reconstructs as a log-step prefix sum
+/// over the deltas, and dequantization is one multiply pass — four
+/// straight-line loops the compiler can vectorize, where the scalar
+/// kernel ran a serial `q += d` closure per value.
 fn walk_chunk(payload: &[u8], cn: usize, twoeb: f64, sink: &mut impl ChunkSink) -> Result<()> {
     debug_assert!(cn >= 1);
     if payload.len() < 8 {
         return Err(Error::corrupt("fzlight chunk shorter than outlier"));
     }
     let q0 = i64::from_le_bytes(payload[0..8].try_into().unwrap());
-    sink.value(0, (q0 as f64 * twoeb) as f32);
+    sink.values(0, &[(q0 as f64 * twoeb) as f32]);
     let mut q = q0;
     let mut pos = 8usize;
     let mut idx = 1usize;
+    let mut mags = [0u64; BLOCK];
+    let mut deltas = [0i64; BLOCK];
+    let mut vals = [0f32; BLOCK];
     while idx < cn {
         let cnt = BLOCK.min(cn - idx);
         let bits = *payload
@@ -244,11 +273,34 @@ fn walk_chunk(payload: &[u8], cn: usize, twoeb: f64, sink: &mut impl ChunkSink) 
             for (k, &byte) in payload[pos..pos + sign_bytes].iter().enumerate() {
                 sign |= (byte as u32) << (8 * k);
             }
-            super::bits::unpack_fixed(&payload[pos + sign_bytes..end], cnt, bits, |j, mag| {
-                let d = mag as i64;
-                q += if sign >> j & 1 == 1 { -d } else { d };
-                sink.value(idx + j, (q as f64 * twoeb) as f32);
-            });
+            // Whole-block magnitude unpack (word-parallel refills).
+            super::bits::unpack_fixed(&payload[pos + sign_bytes..end], bits, &mut mags[..cnt]);
+            // Branchless sign application: m is 0 or -1, and
+            // `(x ^ m) - m` is x or -x.
+            for j in 0..cnt {
+                let m = -(((sign >> j) & 1) as i64);
+                deltas[j] = (mags[j] as i64 ^ m).wrapping_sub(m);
+            }
+            // Lorenzo reconstruction: in-place log-step (Hillis–Steele)
+            // prefix sum turns the deltas into offsets from `q`. The
+            // descending inner loop reads only lanes not yet updated in
+            // the current step. Wrapping adds: a log-step intermediate
+            // can exceed i64 even when every true prefix fits (e.g. two
+            // adjacent +2^62 deltas that the serial chain would cancel
+            // against earlier terms); the wraps cancel in the final
+            // two's-complement sums, so valid frames reconstruct exactly
+            // and corrupt ones stay panic-free.
+            for sh in [1usize, 2, 4, 8, 16] {
+                for j in (sh..cnt).rev() {
+                    deltas[j] = deltas[j].wrapping_add(deltas[j - sh]);
+                }
+            }
+            // Dequantize in one multiply pass.
+            for j in 0..cnt {
+                vals[j] = (q.wrapping_add(deltas[j]) as f64 * twoeb) as f32;
+            }
+            q = q.wrapping_add(deltas[cnt - 1]);
+            sink.values(idx, &vals[..cnt]);
             pos = end;
         }
         idx += cnt;
@@ -387,9 +439,11 @@ fn write_frame(
     let table = out.len();
     out.resize(table + 4 * nchunks, 0);
     let mut done = 0usize;
+    // Quantization scratch, reused across every chunk of the frame.
+    let mut qbuf: Vec<i64> = Vec::with_capacity(chunk.min(data.len()));
     for (i, c) in data.chunks(chunk).enumerate() {
         let start = out.len();
-        let (blocks, constant) = compress_chunk_into(c, twoeb, out);
+        let (blocks, constant) = compress_chunk_into(c, twoeb, out, &mut qbuf);
         stats.blocks += blocks;
         stats.constant_blocks += constant;
         let sz = frame_u32(out.len() - start, "chunk payload size")?;

@@ -38,6 +38,24 @@
 //! ZFP fall back to decompress-then-copy and say so via
 //! [`Compressor::supports_placement_decode`].
 //!
+//! ## Word-parallel codec kernels
+//!
+//! The paper's §3.4 vectorized bit-shifting encoding is realised in
+//! [`bits`]: the fixed-length packer spills **whole 8-byte words** from
+//! its 64-bit accumulator and the unpacker refills with whole-`u64`
+//! loads, while the fZ-light / SZx stages around them run
+//! **block-batched** — quantize, delta/sign/magnitude, prefix-sum
+//! reconstruction, and dequantize each execute as separate
+//! straight-line loops over a whole chunk or block rather than
+//! interleaved per-value work. Every collective receive path (plain,
+//! placement, fused decompress–reduce, pipelined, multithreaded)
+//! inherits these kernels. The scalar `BitWriter`/`BitReader` pair is
+//! retained in [`bits`] as the executable layout spec; `zccl bench
+//! codec` (and `cargo bench --bench compressors`) emits
+//! `BENCH_codec.json` with comp/decomp GB/s per codec × dataset × bound
+//! and a `speedup_vs_reference` field tracking the word-parallel
+//! kernels against that reference from PR to PR.
+//!
 //! ## Codecs
 //!
 //! - [`fzlight`] — `fZ-light` (a.k.a. SZp): fused 1-D Lorenzo prediction +

@@ -3,7 +3,10 @@
 //! fZ-light's and SZx's chunked frame layout makes chunks independent, so
 //! compression and decompression parallelise over chunks with rayon.
 //! Numerics and the emitted frame are **bit-identical** to the
-//! single-thread path — only wall-clock changes.
+//! single-thread path — only wall-clock changes. Each worker runs the
+//! same word-parallel block-batched kernels as the serial codecs, so
+//! thread scaling stacks on top of the single-core codec speedups
+//! tracked in `BENCH_codec.json`.
 //!
 //! NOTE (DESIGN.md §2): this container exposes a single core, so measured
 //! multi-thread speedup here is ~1×. The virtual-time simulator applies a

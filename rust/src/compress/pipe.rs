@@ -10,7 +10,10 @@
 //!
 //! Every entry point has an `_into` form writing into a caller-owned
 //! buffer; [`crate::collectives::CollCtx`] pairs those with its scratch
-//! pool so iterated collectives run allocation-free after warm-up.
+//! pool so iterated collectives run allocation-free after warm-up. All
+//! paths delegate to [`super::fzlight`]'s word-parallel block-batched
+//! kernels, so pipelined (de)compression is exactly as fast per chunk
+//! as the plain codec — only the progress hook differs.
 
 use super::fzlight::{self, DEFAULT_CHUNK};
 use super::traits::{Compressed, CompressionStats, Compressor, CompressorKind, ErrorBound};

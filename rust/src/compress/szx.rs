@@ -70,12 +70,19 @@ pub(crate) fn compress_chunk(data: &[f32], eb: f64) -> (Vec<u8>, usize, usize) {
 
 /// Compress one chunk, appending to `payload`. Returns
 /// (blocks, constant_blocks).
+///
+/// Hot path (tracked by `benches/compressors.rs` / `BENCH_codec.json`):
+/// per block the min/max, residual-quantize, and sign/magnitude stages
+/// run as separate straight-line loops, and the magnitudes spill through
+/// the word-parallel [`super::bits::pack_fixed`] — zero allocations per
+/// block.
 pub(crate) fn compress_chunk_into(data: &[f32], eb: f64, payload: &mut Vec<u8>) -> (usize, usize) {
     let twoeb = 2.0 * eb;
     let inv = 1.0 / twoeb;
     payload.reserve(8 + data.len());
     let mut blocks = 0usize;
     let mut constant = 0usize;
+    let mut qs = [0i64; BLOCK];
     let mut mags = [0u64; BLOCK];
     for block in data.chunks(BLOCK) {
         blocks += 1;
@@ -91,14 +98,16 @@ pub(crate) fn compress_chunk_into(data: &[f32], eb: f64, payload: &mut Vec<u8>) 
             constant += 1;
             continue;
         }
-        // Non-constant: fixed-length-code the quantized residuals
-        // (zero-allocation pack; see EXPERIMENTS.md §Perf).
+        // Non-constant: quantize the residuals in one pass, then derive
+        // signs / magnitudes / running max in a second.
+        for (slot, &v) in qs.iter_mut().zip(block) {
+            *slot = ((v as f64 - mu) * inv).round() as i64;
+        }
         let mut maxmag: u64 = 0;
         let mut sign = 0u128; // BLOCK = 128 sign bits
-        for (j, &v) in block.iter().enumerate() {
-            let q = ((v as f64 - mu) * inv).round() as i64;
-            mags[j] = q.unsigned_abs();
-            sign |= u128::from(q < 0) << j;
+        for j in 0..block.len() {
+            mags[j] = qs[j].unsigned_abs();
+            sign |= u128::from(qs[j] < 0) << j;
             maxmag |= mags[j];
         }
         let bits = (64 - maxmag.leading_zeros()).max(1);
@@ -111,6 +120,11 @@ pub(crate) fn compress_chunk_into(data: &[f32], eb: f64, payload: &mut Vec<u8>) 
 }
 
 /// Decompress one chunk of `cn` values into `out`.
+///
+/// Block-batched like the fZ-light walk: magnitudes unpack into a stack
+/// array via the word-parallel [`super::bits::unpack_fixed`], signs
+/// apply branchlessly, dequantization is one multiply pass, and the
+/// decoded block lands in `out` as a single `extend_from_slice`.
 pub(crate) fn decompress_chunk(
     payload: &[u8],
     cn: usize,
@@ -120,6 +134,8 @@ pub(crate) fn decompress_chunk(
     let twoeb = 2.0 * eb;
     let mut pos = 0usize;
     let mut remaining = cn;
+    let mut mags = [0u64; BLOCK];
+    let mut vals = [0f32; BLOCK];
     while remaining > 0 {
         let cnt = BLOCK.min(remaining);
         let tag = *payload
@@ -128,10 +144,7 @@ pub(crate) fn decompress_chunk(
         pos += 1;
         let mu = le::get_f32(payload, &mut pos)? as f64;
         if tag == 0 {
-            let x = mu as f32;
-            for _ in 0..cnt {
-                out.push(x);
-            }
+            out.resize(out.len() + cnt, mu as f32);
         } else {
             if tag > 64 {
                 return Err(Error::corrupt(format!("szx code length {tag} > 64")));
@@ -146,11 +159,15 @@ pub(crate) fn decompress_chunk(
             for (k, &byte) in payload[pos..pos + sign_bytes].iter().enumerate() {
                 sign |= (byte as u128) << (8 * k);
             }
-            super::bits::unpack_fixed(&payload[pos + sign_bytes..end], cnt, tag, |j, mag| {
-                let d = mag as i64;
-                let q = if sign >> j & 1 == 1 { -d } else { d };
-                out.push((mu + q as f64 * twoeb) as f32);
-            });
+            super::bits::unpack_fixed(&payload[pos + sign_bytes..end], tag, &mut mags[..cnt]);
+            // Branchless sign application (m is 0 or -1); wrapping so a
+            // corrupt 2^63 magnitude cannot panic a debug build.
+            for j in 0..cnt {
+                let m = -(((sign >> j) & 1) as i64);
+                let q = (mags[j] as i64 ^ m).wrapping_sub(m);
+                vals[j] = (mu + q as f64 * twoeb) as f32;
+            }
+            out.extend_from_slice(&vals[..cnt]);
             pos = end;
         }
         remaining -= cnt;

@@ -13,8 +13,9 @@ use std::path::Path;
 use crate::apps::{image_stacking, visualize};
 use crate::collectives::{run_ranks, run_ranks_on, Algo, CollCtx, Mode, ReduceOp};
 use crate::compress::stats::{error_histogram, quality};
-use crate::compress::{self, Compressor, CompressorKind, ErrorBound, MtCompressor};
+use crate::compress::{self, bits, Compressor, CompressorKind, ErrorBound, MtCompressor};
 use crate::data::fields::{Field, FieldKind};
+use crate::data::rng::Rng;
 use crate::sim::calibrate::{pick_allreduce_algo, sample_ratio};
 use crate::sim::collectives::{
     sim_allgather, sim_allreduce, sim_allreduce_hier, sim_bcast, sim_reduce_scatter,
@@ -22,7 +23,8 @@ use crate::sim::collectives::{
 };
 use crate::sim::CostModel;
 use crate::topology::Topology;
-use crate::util::bench::{measure_for, Table};
+use crate::util::bench::{emit_bench_line, measure_for, Table};
+use crate::util::json::Json;
 use crate::Result;
 
 const RELS: [f64; 4] = [1e-1, 1e-2, 1e-3, 1e-4];
@@ -35,17 +37,19 @@ const BUDGET_S: f64 = 0.08;
 /// All bench ids, in DESIGN.md §5 order.
 pub const ALL: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
-    "fig11", "fig12", "fig13", "fig14", "fig15", "table7", "crosscheck", "hier",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "table7", "crosscheck", "hier", "codec",
     "ablation-chunk", "ablation-balance", "ablation-eb",
 ];
 
 /// Run one bench (or `all`), printing tables and writing CSVs to
-/// `out_dir`.
-pub fn run(id: &str, out_dir: &Path) -> Result<()> {
+/// `out_dir`. `budget` overrides the per-cell measurement budget in
+/// seconds where a bench supports it (currently `codec`; CI uses a small
+/// value so `BENCH_codec.json` is produced on every run).
+pub fn run(id: &str, out_dir: &Path, budget: Option<f64>) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     if id == "all" {
         for b in ALL {
-            run(b, out_dir)?;
+            run(b, out_dir, budget)?;
         }
         return Ok(());
     }
@@ -69,6 +73,11 @@ pub fn run(id: &str, out_dir: &Path) -> Result<()> {
         "table7" => table7(out_dir)?,
         "crosscheck" => crosscheck(),
         "hier" => hier_bench(),
+        "codec" => {
+            let (tables, summary) = codec_bench(BENCH_VALUES, budget.unwrap_or(BUDGET_S));
+            emit_bench_line("BENCH_codec.json", &summary);
+            tables
+        }
         "ablation-chunk" => ablation_chunk(),
         "ablation-balance" => ablation_balance(),
         "ablation-eb" => ablation_eb(),
@@ -672,6 +681,111 @@ fn hier_bench() -> Vec<(String, Table)> {
         ]);
     }
     vec![("hier-real-4x4".into(), t), ("hier-sim-scaling".into(), sim_t)]
+}
+
+/// `zccl bench codec` — word-parallel codec kernel throughput. Two
+/// tables: end-to-end comp/decomp GB/s per codec × dataset × REL bound
+/// (the bit-shifting codecs, single-thread), and the raw
+/// [`bits::pack_fixed`] / [`bits::unpack_fixed`] kernels against the
+/// retained scalar [`bits::BitWriter`] / [`bits::BitReader`] reference
+/// path across code widths. Returns the tables plus the single-line
+/// `BENCH_codec.json` summary whose `speedup_vs_reference` field tracks
+/// the word-parallel kernels' edge from PR to PR. Exposed as a library
+/// function so a tier-1 test can run it on a tiny budget and assert the
+/// JSON contract.
+pub fn codec_bench(values: usize, budget_s: f64) -> (Vec<(String, Table)>, Json) {
+    let mut t = Table::new(&["codec", "dataset", "rel", "comp GB/s", "decomp GB/s", "ratio"]);
+    let mut codec_rows: Vec<Json> = Vec::new();
+    for kind in [CompressorKind::FzLight, CompressorKind::Szx] {
+        for fk in [FieldKind::Rtm, FieldKind::Nyx] {
+            let f = Field::generate(fk, values, 42);
+            let bytes = values * 4;
+            for rel in [1e-2, 1e-4] {
+                let codec = compress::build(kind);
+                let eb = ErrorBound::Rel(rel);
+                let frame = codec.compress(&f.values, eb).expect("compress");
+                let mut buf = Vec::with_capacity(frame.bytes.len());
+                let c = measure_for(budget_s, || {
+                    buf.clear();
+                    codec.compress_into(&f.values, eb, &mut buf).unwrap()
+                });
+                let mut dst: Vec<f32> = Vec::with_capacity(values);
+                let d = measure_for(budget_s, || {
+                    dst.clear();
+                    codec.decompress_into(&frame.bytes, &mut dst).unwrap()
+                });
+                t.row(vec![
+                    kind.name().into(),
+                    fk.name().into(),
+                    format!("{rel:.0e}"),
+                    format!("{:.3}", c.gbps(bytes)),
+                    format!("{:.3}", d.gbps(bytes)),
+                    format!("{:.2}", frame.stats.ratio()),
+                ]);
+                codec_rows.push(Json::obj(vec![
+                    ("codec", Json::Str(kind.name().into())),
+                    ("dataset", Json::Str(fk.name().into())),
+                    ("rel", Json::Num(rel)),
+                    ("comp_gbps", Json::Num(c.gbps(bytes))),
+                    ("decomp_gbps", Json::Num(d.gbps(bytes))),
+                    ("ratio", Json::Num(frame.stats.ratio())),
+                ]));
+            }
+        }
+    }
+
+    // Raw bit-kernel section: the same code stream packed/unpacked by the
+    // word-parallel kernels and by the scalar reference, per width class
+    // (incl. the 58..=64 two-limb path). Throughput is u64 codes
+    // processed (8 bytes per code).
+    let mut kt = Table::new(&[
+        "width", "pack GB/s", "pack ref GB/s", "unpack GB/s", "unpack ref GB/s",
+    ]);
+    let mut rng = Rng::new(7);
+    let codes = (values / 8).max(1024);
+    let code_bytes = codes * 8;
+    let mut kernel_s = 0.0f64;
+    let mut reference_s = 0.0f64;
+    for width in [2u32, 7, 13, 26, 57, 64] {
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let vals: Vec<u64> = (0..codes).map(|_| rng.next_u64() & mask).collect();
+        let mut buf = Vec::new();
+        let pk = measure_for(budget_s, || {
+            buf.clear();
+            bits::pack_fixed(&mut buf, &vals, width);
+        });
+        let mut rbuf = Vec::new();
+        let pr = measure_for(budget_s, || {
+            rbuf.clear();
+            bits::pack_fixed_reference(&mut rbuf, &vals, width);
+        });
+        buf.clear();
+        bits::pack_fixed(&mut buf, &vals, width);
+        let mut out = vec![0u64; codes];
+        let uk = measure_for(budget_s, || bits::unpack_fixed(&buf, width, &mut out));
+        let ur = measure_for(budget_s, || bits::unpack_fixed_reference(&buf, width, &mut out));
+        kernel_s += pk.mean_s + uk.mean_s;
+        reference_s += pr.mean_s + ur.mean_s;
+        kt.row(vec![
+            format!("{width}"),
+            format!("{:.3}", pk.gbps(code_bytes)),
+            format!("{:.3}", pr.gbps(code_bytes)),
+            format!("{:.3}", uk.gbps(code_bytes)),
+            format!("{:.3}", ur.gbps(code_bytes)),
+        ]);
+    }
+    let speedup = reference_s / kernel_s.max(1e-12);
+
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("codec_kernels".into())),
+        ("values", Json::Num(values as f64)),
+        ("budget_s", Json::Num(budget_s)),
+        ("codecs", Json::Arr(codec_rows)),
+        ("kernel_pack_unpack_s", Json::Num(kernel_s)),
+        ("reference_pack_unpack_s", Json::Num(reference_s)),
+        ("speedup_vs_reference", Json::Num(speedup)),
+    ]);
+    (vec![("codec-throughput".into(), t), ("codec-bit-kernels".into(), kt)], summary)
 }
 
 /// Ablation: PIPE-fZ-light chunk size (paper fixes 5120).

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! zccl info
-//! zccl bench <id|all> [--out DIR]          regenerate paper tables/figures
+//! zccl bench <id|all> [--out DIR] [--budget S]
+//!                                          regenerate paper tables/figures
 //! zccl run [--ranks N] [--values V] [mode flags]
 //!                                          one in-process collective run
 //! zccl launch --ranks N [--values V] [mode flags]
@@ -94,7 +95,8 @@ fn real_main() -> zccl::Result<()> {
             let out = PathBuf::from(
                 args.flags.get("out").cloned().unwrap_or_else(|| "results".into()),
             );
-            harness::run(&id, &out)?;
+            let budget = args.flags.get("budget").and_then(|v| v.parse::<f64>().ok());
+            harness::run(&id, &out, budget)?;
         }
         "run" => {
             let n = usize_flag(&args, "ranks", 4);
@@ -196,7 +198,7 @@ zccl — compression-accelerated collectives (ZCCL reproduction)
 
 USAGE:
   zccl info
-  zccl bench <id|all> [--out DIR]
+  zccl bench <id|all> [--out DIR] [--budget S]
   zccl run [--ranks N] [--values V] [--field rtm|nyx|cesm|hurricane] [mode flags]
   zccl launch --ranks N [--values V] [--port P] [mode flags]
   zccl worker --rank R --peers a:p,b:p,... [--values V] [mode flags]

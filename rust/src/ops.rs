@@ -23,6 +23,16 @@ impl ReduceOp {
     #[inline]
     pub fn fold(self, acc: &mut [f32], src: &[f32]) {
         debug_assert_eq!(acc.len(), src.len());
+        self.apply_slice(acc, src);
+    }
+
+    /// Fold a decoded block into the matching accumulator window — the
+    /// slice-granularity step of the fused decompress–reduce kernel
+    /// (each decoded block folds as one straight-line loop rather than a
+    /// per-value [`ReduceOp::apply`] call). Bit-identical to the
+    /// corresponding lanes of [`ReduceOp::fold`], which delegates here.
+    #[inline]
+    pub fn apply_slice(self, acc: &mut [f32], src: &[f32]) {
         match self {
             ReduceOp::Sum | ReduceOp::Avg => {
                 for (a, s) in acc.iter_mut().zip(src) {
@@ -42,9 +52,9 @@ impl ReduceOp {
         }
     }
 
-    /// Fold a single value into one accumulator slot — the per-element
-    /// step of the fused decompress–reduce kernel. Bit-identical to the
-    /// corresponding lane of [`ReduceOp::fold`].
+    /// Fold a single value into one accumulator slot (used where values
+    /// arrive one at a time, e.g. folding raw wire bytes). Bit-identical
+    /// to the corresponding lane of [`ReduceOp::fold`].
     #[inline]
     pub fn apply(self, a: &mut f32, v: f32) {
         match self {

@@ -6,6 +6,21 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
+/// Print and persist a single-line machine-readable benchmark summary —
+/// the `BENCH_*.json` files (`BENCH_reduce` / `BENCH_allgather` /
+/// `BENCH_hier` / `BENCH_codec`) that track the perf trajectory from PR
+/// to PR. Written to the current directory; failure to write is a
+/// warning, never an error (the printed line is the canonical record).
+pub fn emit_bench_line(file_name: &str, summary: &Json) {
+    let line = summary.to_string();
+    println!("{file_name} {line}");
+    if let Err(e) = std::fs::write(file_name, format!("{line}\n")) {
+        eprintln!("warning: could not write {file_name}: {e}");
+    }
+}
+
 /// Result of one measured benchmark.
 #[derive(Debug, Clone, Copy)]
 pub struct Measurement {

@@ -1,0 +1,362 @@
+//! Word-parallel codec kernel suite: proves the block-batched
+//! `pack_fixed` / `unpack_fixed` kernels and the rewritten fZ-light /
+//! SZx encode/decode stages are **bit-identical** to the scalar
+//! `BitWriter` / `BitReader` reference layout — the frame layout is the
+//! spec, and every pre-existing frame must decode unchanged.
+//!
+//! Three layers of evidence:
+//! 1. kernel-level property tests over ALL widths 1..=64 (including the
+//!    rarely-exercised 58..=64 two-limb path) and many block counts;
+//! 2. whole-frame equality against an in-test reference encoder built
+//!    on `BitWriter` straight from the documented chunk layout;
+//! 3. hand-computed golden frames (bytes written out literally) that
+//!    both encode sides must emit and both decode sides must accept.
+
+use zccl::compress::bits::{
+    le, pack_fixed, pack_fixed_reference, unpack_fixed, unpack_fixed_reference, BitWriter,
+};
+use zccl::compress::traits::write_header;
+use zccl::compress::{
+    Compressor, CompressorKind, ErrorBound, FzLight, MtCompressor, PipeFzLight, Szx,
+};
+use zccl::coordinator::harness::codec_bench;
+use zccl::data::fields::{Field, FieldKind};
+use zccl::data::rng::Rng;
+use zccl::util::json::Json;
+
+// ---------------------------------------------------------------- kernels
+
+/// Every width 1..=64 (the 58..=64 range takes the two-limb path), many
+/// counts: the word-parallel packer must emit the exact BitWriter
+/// stream, and both unpackers must restore the values.
+#[test]
+fn pack_unpack_match_reference_all_widths() {
+    let mut rng = Rng::new(0xC0DEC);
+    for width in 1..=64u32 {
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        for cnt in [0usize, 1, 2, 7, 8, 9, 31, 32, 33, 63, 64, 100, 257] {
+            let mut vals: Vec<u64> = (0..cnt).map(|_| rng.next_u64() & mask).collect();
+            // Force boundary patterns into the mix.
+            if cnt >= 3 {
+                vals[0] = mask;
+                vals[1] = 0;
+                vals[2] = mask & 0x5555_5555_5555_5555;
+            }
+            let mut fast = Vec::new();
+            pack_fixed(&mut fast, &vals, width);
+            let mut reference = Vec::new();
+            pack_fixed_reference(&mut reference, &vals, width);
+            assert_eq!(fast, reference, "pack width {width} cnt {cnt}");
+            assert_eq!(fast.len(), (cnt * width as usize).div_ceil(8));
+
+            let mut dec = vec![0u64; cnt];
+            unpack_fixed(&fast, width, &mut dec);
+            assert_eq!(dec, vals, "unpack width {width} cnt {cnt}");
+            let mut dec_ref = vec![0u64; cnt];
+            unpack_fixed_reference(&fast, width, &mut dec_ref);
+            assert_eq!(dec_ref, vals, "reference unpack width {width} cnt {cnt}");
+        }
+    }
+}
+
+// ----------------------------------------------- whole-frame vs reference
+
+/// Reference fZ-light frame encoder: the documented chunk layout
+/// realised directly with the scalar `BitWriter` spec path. Any byte
+/// divergence from `FzLight::compress` is a layout break.
+fn reference_fzlight_frame(data: &[f32], chunk: usize, eb_abs: f64) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_header(&mut out, CompressorKind::FzLight, data.len(), eb_abs);
+    let nchunks = data.len().div_ceil(chunk);
+    le::put_u32(&mut out, chunk as u32);
+    le::put_u32(&mut out, nchunks as u32);
+    let twoeb = 2.0 * eb_abs;
+    let inv = 1.0 / twoeb;
+    let mut payloads: Vec<Vec<u8>> = Vec::new();
+    for c in data.chunks(chunk) {
+        let q: Vec<i64> = c.iter().map(|&x| (x as f64 * inv).round() as i64).collect();
+        let deltas: Vec<i64> = q.windows(2).map(|w| w[1] - w[0]).collect();
+        let mut p = Vec::new();
+        p.extend_from_slice(&q[0].to_le_bytes());
+        for db in deltas.chunks(32) {
+            let maxmag = db.iter().fold(0u64, |a, d| a | d.unsigned_abs());
+            if maxmag == 0 {
+                p.push(0);
+                continue;
+            }
+            let bits = 64 - maxmag.leading_zeros();
+            p.push(bits as u8);
+            let mut sign = 0u32;
+            for (j, &d) in db.iter().enumerate() {
+                sign |= u32::from(d < 0) << j;
+            }
+            p.extend_from_slice(&sign.to_le_bytes()[..db.len().div_ceil(8)]);
+            let mut w = BitWriter::with_capacity(db.len() * 8);
+            for &d in db {
+                w.put_wide(d.unsigned_abs(), bits);
+            }
+            p.extend_from_slice(&w.finish());
+        }
+        payloads.push(p);
+    }
+    for p in &payloads {
+        le::put_u32(&mut out, p.len() as u32);
+    }
+    for p in &payloads {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+#[test]
+fn fzlight_frames_match_scalar_reference_encoder() {
+    for (kind, n, chunk, eb) in [
+        (FieldKind::Rtm, 10_000usize, 5120usize, 1e-3f64),
+        (FieldKind::Nyx, 7_001, 512, 1e-4),
+        (FieldKind::Hurricane, 65, 32, 1e-2),
+        (FieldKind::Cesm, 1, 5120, 1e-3),
+    ] {
+        let f = Field::generate(kind, n, 9);
+        let reference = reference_fzlight_frame(&f.values, chunk, eb);
+        for (label, frame) in [
+            ("fzlight", FzLight::with_chunk(chunk).compress(&f.values, ErrorBound::Abs(eb))),
+            ("pipe", PipeFzLight::with_chunk(chunk).compress(&f.values, ErrorBound::Abs(eb))),
+            (
+                "mt",
+                MtCompressor::with_chunk(CompressorKind::FzLight, chunk)
+                    .compress(&f.values, ErrorBound::Abs(eb)),
+            ),
+        ] {
+            assert_eq!(
+                frame.unwrap().bytes,
+                reference,
+                "{label} frame must match the scalar reference layout ({kind:?} n={n})"
+            );
+        }
+    }
+    // Empty input: header + empty chunk table, no payloads.
+    let reference = reference_fzlight_frame(&[], 5120, 1e-3);
+    let c = FzLight::default().compress(&[], ErrorBound::Abs(1e-3)).unwrap();
+    assert_eq!(c.bytes, reference);
+}
+
+// ----------------------------------------------------------- golden frames
+
+/// Golden fZ-light frame, worked out by hand from the layout spec:
+/// data `[0, 1, 3, 2, -1]`, chunk 8, eb 0.5 (so `2eb = 1` and `q = x`).
+/// One block of deltas `[1, 2, -1, -3]` → sign bits 0b1100, code length
+/// 2, magnitudes `[1, 2, 1, 3]` packed LSB-first into `0xD9` (217).
+fn golden_fzlight() -> (Vec<f32>, Vec<u8>, Vec<f32>) {
+    let data = vec![0.0f32, 1.0, 3.0, 2.0, -1.0];
+    let mut frame = Vec::new();
+    write_header(&mut frame, CompressorKind::FzLight, 5, 0.5);
+    le::put_u32(&mut frame, 8); // chunk_values
+    le::put_u32(&mut frame, 1); // nchunks
+    le::put_u32(&mut frame, 11); // payload bytes
+    frame.extend_from_slice(&0i64.to_le_bytes()); // outlier q0 = 0
+    frame.push(2); // code length
+    frame.push(0b1100); // sign bits (deltas 2 and 3 negative)
+    frame.push(217); // magnitudes 1,2,1,3 at 2 bits LSB-first
+    let expect = vec![0.0f32, 1.0, 3.0, 2.0, -1.0];
+    (data, frame, expect)
+}
+
+/// Golden all-constant fZ-light frame: 40 × `5.0` at eb 0.5 → outlier 5
+/// plus two zero code-length bytes (blocks of 32 and 7 deltas).
+fn golden_fzlight_constant() -> (Vec<f32>, Vec<u8>, Vec<f32>) {
+    let data = vec![5.0f32; 40];
+    let mut frame = Vec::new();
+    write_header(&mut frame, CompressorKind::FzLight, 40, 0.5);
+    le::put_u32(&mut frame, 64); // chunk_values
+    le::put_u32(&mut frame, 1); // nchunks
+    le::put_u32(&mut frame, 10); // payload bytes
+    frame.extend_from_slice(&5i64.to_le_bytes()); // outlier q0 = 5
+    frame.push(0); // constant block (32 deltas)
+    frame.push(0); // constant block (7 deltas)
+    (data, frame, vec![5.0f32; 40])
+}
+
+/// Golden SZx frame: data `[1, 2]` at eb 0.25 → μ = 1.5, residual
+/// quantization step 0.5, q = [-1, +1] → tag 1, sign byte 0b01,
+/// magnitude byte 0b11.
+fn golden_szx() -> (Vec<f32>, Vec<u8>, Vec<f32>) {
+    let data = vec![1.0f32, 2.0];
+    let mut frame = Vec::new();
+    write_header(&mut frame, CompressorKind::Szx, 2, 0.25);
+    le::put_u32(&mut frame, 128); // chunk_values
+    le::put_u32(&mut frame, 1); // nchunks
+    le::put_u32(&mut frame, 7); // payload bytes
+    frame.push(1); // code length
+    le::put_f32(&mut frame, 1.5); // μ
+    frame.push(0b01); // sign bits (first residual negative)
+    frame.push(0b11); // magnitudes 1,1 at 1 bit
+    (data, frame, vec![1.0f32, 2.0])
+}
+
+/// Golden constant-block SZx frame: data `[1, 2]` at eb 0.6 → the whole
+/// block lies within μ ± eb, stored as tag 0 + μ alone.
+fn golden_szx_constant() -> (Vec<f32>, Vec<u8>, Vec<f32>) {
+    let data = vec![1.0f32, 2.0];
+    let mut frame = Vec::new();
+    write_header(&mut frame, CompressorKind::Szx, 2, 0.6);
+    le::put_u32(&mut frame, 128); // chunk_values
+    le::put_u32(&mut frame, 1); // nchunks
+    le::put_u32(&mut frame, 5); // payload bytes
+    frame.push(0); // constant block
+    le::put_f32(&mut frame, 1.5); // μ
+    (data, frame, vec![1.5f32, 1.5])
+}
+
+#[test]
+fn golden_frames_encode_byte_identical() {
+    let (data, frame, _) = golden_fzlight();
+    for (label, got) in [
+        ("fzlight", FzLight::with_chunk(8).compress(&data, ErrorBound::Abs(0.5))),
+        ("pipe", PipeFzLight::with_chunk(8).compress(&data, ErrorBound::Abs(0.5))),
+        (
+            "mt",
+            MtCompressor::with_chunk(CompressorKind::FzLight, 8)
+                .compress(&data, ErrorBound::Abs(0.5)),
+        ),
+    ] {
+        assert_eq!(got.unwrap().bytes, frame, "{label} golden frame");
+    }
+
+    let (data, frame, _) = golden_fzlight_constant();
+    let got = FzLight::with_chunk(64).compress(&data, ErrorBound::Abs(0.5)).unwrap();
+    assert_eq!(got.bytes, frame, "constant golden frame");
+    assert_eq!(got.stats.constant_blocks, got.stats.blocks);
+
+    let (data, frame, _) = golden_szx();
+    assert_eq!(
+        Szx::with_chunk(128).compress(&data, ErrorBound::Abs(0.25)).unwrap().bytes,
+        frame,
+        "szx golden frame"
+    );
+    assert_eq!(
+        MtCompressor::with_chunk(CompressorKind::Szx, 128)
+            .compress(&data, ErrorBound::Abs(0.25))
+            .unwrap()
+            .bytes,
+        frame,
+        "szx mt golden frame"
+    );
+
+    let (data, frame, _) = golden_szx_constant();
+    assert_eq!(
+        Szx::with_chunk(128).compress(&data, ErrorBound::Abs(0.6)).unwrap().bytes,
+        frame,
+        "szx constant golden frame"
+    );
+}
+
+/// The golden bytes stand in for frames produced by earlier builds:
+/// every decode path (plain, placement, fused is covered elsewhere) must
+/// reconstruct them bit-exactly.
+#[test]
+fn golden_frames_decode_bit_exact() {
+    let cases = [golden_fzlight(), golden_fzlight_constant()];
+    for (i, (_, frame, expect)) in cases.iter().enumerate() {
+        for decoder in [
+            Box::new(FzLight::default()) as Box<dyn Compressor>,
+            Box::new(PipeFzLight::default()),
+            Box::new(MtCompressor::new(CompressorKind::FzLight)),
+        ] {
+            let d = decoder.decompress(frame).unwrap();
+            assert_eq!(&d, expect, "fzlight golden {i} plain decode");
+            let mut out = vec![0.0f32; expect.len()];
+            decoder.decompress_into_slice(frame, &mut out).unwrap();
+            assert_eq!(&out, expect, "fzlight golden {i} placement decode");
+        }
+    }
+    for (i, (_, frame, expect)) in [golden_szx(), golden_szx_constant()].iter().enumerate() {
+        let d = Szx::default().decompress(frame).unwrap();
+        assert_eq!(&d, expect, "szx golden {i}");
+    }
+}
+
+// ------------------------------------------------------- wide code paths
+
+/// Drive the 58..=64-bit code widths through the whole codec stack.
+/// Values are powers of two, so quantization and reconstruction are
+/// exact and the roundtrip must return the input bit-for-bit.
+#[test]
+fn wide_codes_roundtrip_across_wrappers() {
+    for k in [50u32, 57, 58, 60, 62] {
+        // twoeb = 2^-41; amplitude 2^(k-41) quantizes to ±2^k, so deltas
+        // have magnitude 2^k (or 2^(k+1) mid-swing) → code length k+1.
+        let eb = (2.0f64).powi(-42);
+        let amp = (2.0f32).powi(k as i32 - 41);
+        let data: Vec<f32> = (0..40usize).map(|i| [0.0, amp, 0.0, -amp][i % 4]).collect();
+        let reference =
+            FzLight::with_chunk(100).compress(&data, ErrorBound::Abs(eb)).unwrap();
+        // Block header byte: 24 header + 4 + 4 + 4 table + 8 outlier.
+        let code_len = reference.bytes[44];
+        assert!(
+            code_len as u32 >= k + 1,
+            "expected a wide code (>= {}), got {code_len}",
+            k + 1
+        );
+        for codec in [
+            Box::new(FzLight::with_chunk(100)) as Box<dyn Compressor>,
+            Box::new(PipeFzLight::with_chunk(100)),
+            Box::new(MtCompressor::with_chunk(CompressorKind::FzLight, 100)),
+        ] {
+            let c = codec.compress(&data, ErrorBound::Abs(eb)).unwrap();
+            assert_eq!(c.bytes, reference.bytes, "wide frame equality (k={k})");
+            let d = codec.decompress(&c.bytes).unwrap();
+            assert_eq!(d, data, "wide roundtrip must be exact (k={k})");
+        }
+
+        // SZx: residuals ±2^k around μ → same wide code lengths.
+        let szx_data = vec![0.0f32, (2.0f32).powi(k as i32 - 40)];
+        let c = Szx::with_chunk(128).compress(&szx_data, ErrorBound::Abs(eb)).unwrap();
+        assert_eq!(c.bytes[36], (k + 1) as u8, "szx code length (k={k})");
+        let d = Szx::default().decompress(&c.bytes).unwrap();
+        assert_eq!(d, szx_data, "szx wide roundtrip must be exact (k={k})");
+    }
+
+    // Width 64: a saturated quantizer (|q| = 2^63) produces the maximal
+    // magnitude; the decoder's wrapping sign flip restores it exactly.
+    let eb = (2.0f64).powi(-42);
+    let data = vec![0.0f32, -(2.0f32).powi(22)];
+    let reference = FzLight::with_chunk(8).compress(&data, ErrorBound::Abs(eb)).unwrap();
+    assert_eq!(reference.bytes[44], 64, "fzlight code length must be 64");
+    for codec in [
+        Box::new(FzLight::with_chunk(8)) as Box<dyn Compressor>,
+        Box::new(PipeFzLight::with_chunk(8)),
+        Box::new(MtCompressor::with_chunk(CompressorKind::FzLight, 8)),
+    ] {
+        let c = codec.compress(&data, ErrorBound::Abs(eb)).unwrap();
+        assert_eq!(c.bytes, reference.bytes, "64-bit frame equality");
+        assert_eq!(codec.decompress(&c.bytes).unwrap(), data, "64-bit roundtrip");
+    }
+    let szx_data = vec![(2.0f32).powi(23), 0.0];
+    let c = Szx::with_chunk(128).compress(&szx_data, ErrorBound::Abs(eb)).unwrap();
+    assert_eq!(c.bytes[36], 64, "szx code length must be 64");
+    assert_eq!(Szx::default().decompress(&c.bytes).unwrap(), szx_data, "szx 64-bit roundtrip");
+}
+
+// -------------------------------------------------------- bench contract
+
+/// Tier-1 guard for the CI `zccl bench codec` step: the library driver
+/// must emit JSON that parses and carries the `speedup_vs_reference`
+/// trajectory field plus per-codec comp/decomp throughput rows.
+#[test]
+fn bench_codec_json_parses_with_speedup_field() {
+    let (tables, summary) = codec_bench(1 << 14, 0.002);
+    assert_eq!(tables.len(), 2, "throughput + bit-kernel tables");
+    let parsed = Json::parse(&summary.to_string()).expect("BENCH_codec.json must parse");
+    let speedup = parsed
+        .get("speedup_vs_reference")
+        .and_then(Json::as_f64)
+        .expect("speedup_vs_reference field");
+    assert!(speedup > 0.0, "speedup must be a positive ratio, got {speedup}");
+    let rows = parsed.get("codecs").and_then(Json::as_arr).expect("codecs array");
+    assert_eq!(rows.len(), 8, "2 codecs x 2 datasets x 2 bounds");
+    for row in rows {
+        assert!(row.get("comp_gbps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(row.get("decomp_gbps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(row.get("ratio").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

@@ -67,8 +67,9 @@ fn theorem1_95pct_coverage_with_measured_sigma() {
     // error; fZ-light's quantization error on our synthetic fields is
     // closer to uniform (σ = ê/√3 ≈ 0.58ê > ê/3), so we test the theorem
     // with the MEASURED single-hop σ (that is exactly what the theorem
-    // claims — the corollary's constant is a distributional assumption,
-    // recorded as such in EXPERIMENTS.md).
+    // claims — the corollary's constant is a distributional assumption;
+    // `zccl bench fig5` reports how close each codec's error comes to
+    // normal).
     let n = 8;
     let len = 1 << 15;
     // Measured single-compression error std on this data.
@@ -106,8 +107,7 @@ fn corollary2_average_shrinks_error() {
     // Corollary 2 concerns the aggregation chain itself, so test it on
     // the binomial reduce-to-root (no final allgather re-compression,
     // which would add a fresh ±ê to the averaged values and mask the
-    // 1/n shrink — allreduce(Avg) does pay that extra ê; see
-    // EXPERIMENTS.md).
+    // 1/n shrink — allreduce(Avg) does pay that extra ê).
     use zccl::collectives::reduce;
     let len = 1 << 14;
     let n = 8;
