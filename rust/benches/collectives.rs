@@ -5,7 +5,10 @@
 //! All cases drive the collectives through the persistent [`CollCtx`]
 //! API; the `allreduce-iterated` / `reduce_scatter-iterated` cases
 //! additionally report the context's pool counters to show that warm
-//! iterations run without codec construction or scratch growth.
+//! iterations run without codec construction or scratch growth, and
+//! `iallreduce-iterated` drives the same loop through the nonblocking
+//! request API (launch → test-polled compute → wait), reporting the
+//! exposed/hidden communication split.
 //!
 //! The `allgather-iterated` case exercises the pooled zero-copy receive
 //! path (lease → recv_into → placement decode) and emits one
@@ -143,6 +146,48 @@ fn main() {
             mode_name.into(),
             format!(
                 "{warm:.4} (cold {cold:.4}; codec builds {builds}, pool creates {}B/{}F)",
+                s.byte_buffers_created, s.f32_buffers_created
+            ),
+        ]);
+    }
+
+    // Iterated NONBLOCKING allreduce on one persistent context — launch,
+    // synthetic compute with test() polls driving progress, wait_into.
+    // Reports warm wall time plus the exposed/hidden communication split
+    // from the overlap accounting.
+    for (mode_name, mode) in modes() {
+        let out = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let f = Field::generate(FieldKind::Rtm, values, 3 + ctx.rank() as u64);
+            let mut dst = Vec::new();
+            let mut times = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let t0 = std::time::Instant::now();
+                let req = ctx.iallreduce(&f.values, ReduceOp::Sum).unwrap();
+                let mut acc = 0.0f32;
+                for i in 0..256 {
+                    acc += std::hint::black_box(i as f32).sqrt();
+                    ctx.test(&req).unwrap();
+                }
+                std::hint::black_box(acc);
+                ctx.wait_into(req, &mut dst).unwrap();
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let m = ctx.take_metrics();
+            (times, m.exposed_comm_s, m.hidden_comm_s, ctx.pool_stats())
+        });
+        let warm = out
+            .iter()
+            .map(|(ts, ..)| ts[1..].iter().cloned().fold(f64::INFINITY, f64::min))
+            .fold(0.0, f64::max);
+        let exposed = out.iter().map(|(_, e, _, _)| *e).fold(0.0, f64::max);
+        let hidden = out.iter().map(|(_, _, h, _)| *h).fold(0.0, f64::max);
+        let s = &out[0].3;
+        t.row(vec![
+            "iallreduce-iterated".into(),
+            mode_name.into(),
+            format!(
+                "{warm:.4} (exposed {exposed:.4} / hidden {hidden:.4}; pool creates {}B/{}F)",
                 s.byte_buffers_created, s.f32_buffers_created
             ),
         ]);

@@ -4,10 +4,13 @@
 //!
 //! Each worker thread owns a PJRT runtime executing the `grad_step`
 //! artifact on its own shard of a synthetic next-token task; the
-//! per-worker gradients are flattened into one vector and averaged with
-//! the collective under test ([`crate::collectives::allreduce`] +
-//! `ReduceOp::Avg`). The SGD update is applied locally — identical across
-//! workers up to the collective's error bound.
+//! per-worker gradients are averaged with the collective under test
+//! (`ReduceOp::Avg`), either flattened into one blocking allreduce or —
+//! with [`DdpConfig::bucket_values`] set — bucketed into nonblocking
+//! `iallreduce` requests that overlap gradient extraction with
+//! communication, so only the final waits' time is exposed. The SGD
+//! update is applied locally — identical across workers up to the
+//! collective's error bound.
 
 use std::path::PathBuf;
 
@@ -35,6 +38,12 @@ pub struct DdpConfig {
     pub grad_artifact: String,
     /// Base data seed.
     pub seed: u64,
+    /// `Some(values)`: bucketed nonblocking gradient allreduce — each
+    /// bucket's `iallreduce` launches as soon as its gradients are
+    /// extracted (reverse tensor order, mirroring backward-pass
+    /// readiness) and overlaps with extracting the rest; only the final
+    /// waits are exposed. `None`: the blocking single-bucket baseline.
+    pub bucket_values: Option<usize>,
 }
 
 impl DdpConfig {
@@ -48,7 +57,15 @@ impl DdpConfig {
             mode,
             grad_artifact: "grad_step".into(),
             seed: 7,
+            bucket_values: None,
         }
+    }
+
+    /// Enable the bucketed compute/communication-overlap path (see
+    /// [`DdpConfig::bucket_values`]).
+    pub fn with_bucket_values(mut self, values: usize) -> Self {
+        self.bucket_values = Some(values);
+        self
     }
 }
 
@@ -122,23 +139,71 @@ pub fn train(cfg: &DdpConfig) -> Result<DdpReport> {
             let out = module.run(&inputs)?;
             let loss = literal_to_f32(&out[0])?[0];
 
-            // Flatten grads -> one allreduce (DDP bucketing).
-            flat.clear();
-            for o in &out[1..] {
-                flat.extend(literal_to_f32(o)?);
-            }
-            let t0 = std::time::Instant::now();
-            ctx.allreduce_into(&flat, ReduceOp::Avg, &mut avg)?;
-            let allreduce_s = t0.elapsed().as_secs_f64();
-
-            // Local SGD.
-            let mut off = 0;
-            for p in params.iter_mut() {
-                for v in p.iter_mut() {
-                    *v -= cfg2.lr * avg[off];
-                    off += 1;
+            let grads = &out[1..];
+            let allreduce_s = if let Some(bucket_values) = cfg2.bucket_values {
+                // Bucketed overlap: walk gradients in reverse tensor
+                // order (the order a backward pass produces them), launch
+                // each full bucket's iallreduce immediately, and keep
+                // extracting — every launch's test() poll pulls all
+                // in-flight requests forward, so communication hides
+                // behind the remaining extraction. Bucket boundaries
+                // depend only on the (identical) shapes, keeping the
+                // launch sequence SPMD-deterministic.
+                let mut pending: Vec<(crate::collectives::CollRequest, Vec<usize>)> = Vec::new();
+                let mut members: Vec<usize> = Vec::new();
+                flat.clear();
+                for gi in (0..grads.len()).rev() {
+                    flat.extend(literal_to_f32(&grads[gi])?);
+                    members.push(gi);
+                    if flat.len() >= bucket_values {
+                        let req = ctx.iallreduce(&flat, ReduceOp::Avg)?;
+                        pending.push((req, std::mem::take(&mut members)));
+                        flat.clear();
+                        if let Some((first, _)) = pending.first() {
+                            let _ = ctx.test(first)?; // drives every request
+                        }
+                    }
                 }
-            }
+                if !members.is_empty() {
+                    let req = ctx.iallreduce(&flat, ReduceOp::Avg)?;
+                    pending.push((req, members));
+                }
+                // Complete in launch order; only this blocked time is the
+                // step's exposed allreduce cost. SGD applies per bucket.
+                let mut exposed = 0.0f64;
+                for (req, tensors) in pending {
+                    let t0 = std::time::Instant::now();
+                    ctx.wait_into(req, &mut avg)?;
+                    exposed += t0.elapsed().as_secs_f64();
+                    let mut off = 0;
+                    for &gi in &tensors {
+                        for v in params[gi].iter_mut() {
+                            *v -= cfg2.lr * avg[off];
+                            off += 1;
+                        }
+                    }
+                }
+                exposed
+            } else {
+                // Flatten grads -> one blocking allreduce (single bucket).
+                flat.clear();
+                for o in grads {
+                    flat.extend(literal_to_f32(o)?);
+                }
+                let t0 = std::time::Instant::now();
+                ctx.allreduce_into(&flat, ReduceOp::Avg, &mut avg)?;
+                let s = t0.elapsed().as_secs_f64();
+
+                // Local SGD.
+                let mut off = 0;
+                for p in params.iter_mut() {
+                    for v in p.iter_mut() {
+                        *v -= cfg2.lr * avg[off];
+                        off += 1;
+                    }
+                }
+                s
+            };
             if ctx.rank() == 0 {
                 records.push(StepRecord { step, loss, allreduce_s });
             }
@@ -204,5 +269,30 @@ mod tests {
                 mode.algo
             );
         }
+    }
+
+    #[test]
+    fn ddp_bucketed_overlap_trains_like_blocking() {
+        let Some(dir) = artifacts() else {
+            eprintln!("SKIP: artifacts/ not built");
+            return;
+        };
+        let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-4));
+        let blocking = train(&DdpConfig::new(&dir, 2, 6, mode)).unwrap();
+        let bucketed =
+            train(&DdpConfig::new(&dir, 2, 6, mode).with_bucket_values(1 << 12)).unwrap();
+        assert_eq!(bucketed.steps.len(), 6);
+        let first = bucketed.steps[0].loss;
+        let last = bucketed.steps.last().unwrap().loss;
+        assert!(last < first, "bucketed loss must descend ({first} -> {last})");
+        // Bucket boundaries change chunking (and thus rounding/codec
+        // grouping), so trajectories agree to tolerance, not bitwise.
+        let rel = (bucketed.final_param_norm - blocking.final_param_norm).abs()
+            / blocking.final_param_norm.max(1e-12);
+        assert!(rel < 1e-2, "bucketed param norm drifted {rel} from blocking");
+        assert!(
+            bucketed.metrics.exposed_comm_s >= 0.0 && bucketed.metrics.hidden_comm_s >= 0.0,
+            "overlap accounting must populate"
+        );
     }
 }

@@ -20,12 +20,17 @@
 //! compatibility shims that build a transient context per call.
 
 use std::ops::Range;
+use std::time::Instant;
 
+use super::nonblocking::{
+    AllgatherSm, AllreduceSm, BcastSm, CollOutput, CollRequest, Machine, ReduceScatterSm,
+};
+use super::progress::ProgressEngine;
 use super::{allgather, allreduce, alltoall, bcast, gather, reduce, reduce_scatter, scatter};
 use super::{Algo, Communicator, Mode, ReduceOp};
 use crate::compress::{Compressor, CompressorKind, PipeFzLight};
 use crate::coordinator::Metrics;
-use crate::transport::Transport;
+use crate::transport::{Backoff, Transport};
 use crate::Result;
 
 /// Counters exposing the scratch pool's behaviour, for regression tests
@@ -316,13 +321,20 @@ pub struct CollCtx<'c, 'a> {
     comm: &'c mut Communicator<'a>,
     state: CollState,
     metrics: Metrics,
+    /// Slab of in-flight nonblocking requests (see [`super::progress`]).
+    engine: ProgressEngine,
 }
 
 impl<'c, 'a> CollCtx<'c, 'a> {
     /// Wrap an existing communicator (keeps its collective-tag sequence,
     /// so contexts and free functions can interleave on one communicator).
     pub fn over(comm: &'c mut Communicator<'a>, mode: Mode) -> Self {
-        CollCtx { comm, state: CollState::new(mode), metrics: Metrics::default() }
+        CollCtx {
+            comm,
+            state: CollState::new(mode),
+            metrics: Metrics::default(),
+            engine: ProgressEngine::default(),
+        }
     }
 
     /// [`CollCtx::over`] with a rank→node [`Topology`] for the
@@ -541,6 +553,209 @@ impl<'c, 'a> CollCtx<'c, 'a> {
         root: usize,
     ) -> Result<Option<Vec<f32>>> {
         reduce::reduce_with(self.comm, &mut self.state, input, op, root, &mut self.metrics)
+    }
+
+    // -- nonblocking (`icollective`) API ---------------------------------
+    //
+    // Each `i*` start reserves the operation's whole tag slice, posts its
+    // first receives, and parks a resumable machine in the progress
+    // engine; results are bit-identical to the blocking calls (see
+    // [`super::nonblocking`]). SPMD contract: all ranks start the same
+    // requests in the same order; `test`/`wait` order is free.
+
+    fn park(&mut self, m: Machine) -> CollRequest {
+        let (slot, gen) = self.engine.insert(m);
+        CollRequest { slot, gen }
+    }
+
+    fn park_done(&mut self, r: Result<CollOutput>) -> CollRequest {
+        let (slot, gen) = self.engine.insert_done(r);
+        CollRequest { slot, gen }
+    }
+
+    /// Start a nonblocking [`CollCtx::allreduce`]. The result's `values`
+    /// is the full reduced vector.
+    pub fn iallreduce(&mut self, input: &[f32], op: ReduceOp) -> Result<CollRequest> {
+        let n = self.comm.size();
+        if n == 1 {
+            let mut out = self.state.pool.take_f32();
+            out.extend_from_slice(input);
+            op.finish(&mut out, 1);
+            return Ok(self.park_done(Ok(CollOutput { values: out, range: None })));
+        }
+        if self.state.mode.algo == Algo::Hier {
+            // The two-level schedule is leader-synchronous; run it eagerly
+            // through the blocking path and park the finished result.
+            let mut out = self.state.pool.take_f32();
+            let r = allreduce::allreduce_with(
+                self.comm,
+                &mut self.state,
+                input,
+                op,
+                &mut self.metrics,
+                &mut out,
+            )
+            .map(|()| CollOutput { values: out, range: None });
+            return Ok(self.park_done(r));
+        }
+        // Reserve BOTH stages' tag slices up front so the reduce-scatter →
+        // allgather hand-off needs no mid-flight reservation (which would
+        // race other requests' starts for ordering).
+        let rs_base = self.comm.try_fresh_tags(n as u64)?;
+        let ag_base = self.comm.try_fresh_tags((n as u64 + 2) * super::SEG_TAG_SPAN)?;
+        let rs = ReduceScatterSm::new(
+            self.comm,
+            &mut self.state,
+            &mut self.metrics,
+            input,
+            op,
+            rs_base,
+        );
+        Ok(self.park(Machine::Allreduce(Box::new(AllreduceSm::new(op, ag_base, rs)))))
+    }
+
+    /// Start a nonblocking [`CollCtx::reduce_scatter`]. The result's
+    /// `range` is the chunk of the reduced vector this rank owns.
+    pub fn ireduce_scatter(&mut self, input: &[f32], op: ReduceOp) -> Result<CollRequest> {
+        let n = self.comm.size();
+        if n == 1 {
+            let mut owned = self.state.pool.take_f32();
+            owned.extend_from_slice(input);
+            let len = input.len();
+            return Ok(self.park_done(Ok(CollOutput { values: owned, range: Some(0..len) })));
+        }
+        let base = self.comm.try_fresh_tags(n as u64)?;
+        let rs = ReduceScatterSm::new(
+            self.comm,
+            &mut self.state,
+            &mut self.metrics,
+            input,
+            op,
+            base,
+        );
+        Ok(self.park(Machine::ReduceScatter(Box::new(rs))))
+    }
+
+    /// Start a nonblocking [`CollCtx::allgather`].
+    pub fn iallgather(&mut self, my_chunk: &[f32]) -> Result<CollRequest> {
+        let n = self.comm.size();
+        if n == 1 {
+            let mut out = self.state.pool.take_f32();
+            out.extend_from_slice(my_chunk);
+            return Ok(self.park_done(Ok(CollOutput { values: out, range: None })));
+        }
+        if self.state.mode.algo == Algo::Hier {
+            let mut out = self.state.pool.take_f32();
+            let r = allgather::allgather_chunks_with(
+                self.comm,
+                &mut self.state,
+                my_chunk,
+                0,
+                &mut self.metrics,
+                &mut out,
+            )
+            .map(|()| CollOutput { values: out, range: None });
+            return Ok(self.park_done(r));
+        }
+        let base = self.comm.try_fresh_tags((n as u64 + 2) * super::SEG_TAG_SPAN)?;
+        let mut mine = self.state.pool.take_f32();
+        mine.extend_from_slice(my_chunk);
+        let ag = AllgatherSm::new(self.comm, &mut self.state, mine, 0, base);
+        Ok(self.park(Machine::Allgather(Box::new(ag))))
+    }
+
+    /// Start a nonblocking [`CollCtx::bcast`] (`data` significant at
+    /// `root`).
+    pub fn ibcast(&mut self, data: Option<&[f32]>, root: usize) -> Result<CollRequest> {
+        let n = self.comm.size();
+        let me = self.comm.rank();
+        if root >= n {
+            return Err(crate::Error::invalid(format!("root {root} out of {n}")));
+        }
+        if me == root && data.is_none() {
+            return Err(crate::Error::invalid("root must supply data"));
+        }
+        if n == 1 {
+            let mut out = self.state.pool.take_f32();
+            out.extend_from_slice(data.expect("validated: the root supplied data"));
+            return Ok(self.park_done(Ok(CollOutput { values: out, range: None })));
+        }
+        if self.state.mode.algo == Algo::Hier {
+            let r = bcast::bcast_with(self.comm, &mut self.state, data, root, &mut self.metrics)
+                .map(|values| CollOutput { values, range: None });
+            return Ok(self.park_done(r));
+        }
+        let base = self.comm.try_fresh_tags(crate::topology::tree_rounds(n) as u64 + 1)?;
+        let payload = (me == root).then(|| {
+            let mut d = self.state.pool.take_f32();
+            d.extend_from_slice(data.expect("validated: the root supplied data"));
+            d
+        });
+        let sm = BcastSm::new(self.comm, base, root, payload);
+        Ok(self.park(Machine::Bcast(Box::new(sm))))
+    }
+
+    /// Poll: drive **every** in-flight request forward, then report
+    /// whether `req` has finished. Time spent here is communication
+    /// *hidden* behind the caller's compute
+    /// ([`Metrics::note_hidden_comm`]). Never surfaces schedule errors —
+    /// a failed request reports done and parks its error for
+    /// [`CollCtx::wait`].
+    pub fn test(&mut self, req: &CollRequest) -> Result<bool> {
+        let t0 = Instant::now();
+        self.engine.step_all(self.comm, &mut self.state, &mut self.metrics)?;
+        self.metrics.note_hidden_comm(t0.elapsed().as_secs_f64());
+        Ok(self.engine.is_done(req.slot, req.gen))
+    }
+
+    /// Complete a request, copying its values into a caller-owned
+    /// destination (cleared, then filled — capacity is reused across
+    /// iterations, keeping warm requests allocation-free). Returns the
+    /// owned range for reduce-scatter requests, `None` otherwise. Time
+    /// blocked here is *exposed* communication
+    /// ([`Metrics::note_exposed_comm`]).
+    pub fn wait_into(
+        &mut self,
+        req: CollRequest,
+        out: &mut Vec<f32>,
+    ) -> Result<Option<Range<usize>>> {
+        let t0 = Instant::now();
+        let mut backoff = Backoff::new();
+        loop {
+            self.engine.step_all(self.comm, &mut self.state, &mut self.metrics)?;
+            if let Some(res) = self.engine.take(req.slot, req.gen) {
+                self.metrics.note_exposed_comm(t0.elapsed().as_secs_f64());
+                let o = res?;
+                out.clear();
+                out.extend_from_slice(&o.values);
+                let range = o.range;
+                self.state.pool.put_f32(o.values);
+                return Ok(range);
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Complete a request, taking ownership of its [`CollOutput`] (the
+    /// values vector leaves the scratch pool). Prefer
+    /// [`CollCtx::wait_into`] in iterated loops.
+    pub fn wait(&mut self, req: CollRequest) -> Result<CollOutput> {
+        let t0 = Instant::now();
+        let mut backoff = Backoff::new();
+        loop {
+            self.engine.step_all(self.comm, &mut self.state, &mut self.metrics)?;
+            if let Some(res) = self.engine.take(req.slot, req.gen) {
+                self.metrics.note_exposed_comm(t0.elapsed().as_secs_f64());
+                return res;
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Number of nonblocking requests currently in flight (running or
+    /// finished-but-uncollected).
+    pub fn pending_requests(&self) -> usize {
+        self.engine.in_flight()
     }
 }
 

@@ -34,6 +34,58 @@
 //! merges its timings into the caller's `Metrics`. They are fine for
 //! one-shot calls; anything iterated should hold a [`CollCtx`].
 //!
+//! ## The dual API: blocking calls and `icollective` requests
+//!
+//! Every context offers each collective in two forms. The **blocking**
+//! form above runs the whole schedule before returning. The
+//! **nonblocking** (`icollective`) form — [`CollCtx::iallreduce`],
+//! [`CollCtx::iallgather`], [`CollCtx::ireduce_scatter`],
+//! [`CollCtx::ibcast`] — *starts* the schedule and returns a
+//! [`CollRequest`] handle; the caller interleaves its own compute with
+//! [`CollCtx::test`] polls (each poll drives *every* in-flight request
+//! through the per-rank progress engine) and completes with
+//! [`CollCtx::wait`] / [`CollCtx::wait_into`]. Results are **bit
+//! identical** to the blocking call: the request machines run the same
+//! schedules over the same pooled buffers and fused kernels, merely
+//! rearranged into resumable form (see [`nonblocking`]).
+//!
+//! Quickstart — launch, compute, wait:
+//!
+//! ```
+//! use zccl::collectives::{CollCtx, Mode, ReduceOp};
+//! use zccl::compress::{CompressorKind, ErrorBound};
+//!
+//! let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-4));
+//! let results = zccl::collectives::run_ranks(4, move |comm| {
+//!     let mut ctx = CollCtx::over(comm, mode);
+//!     let x = vec![ctx.rank() as f32; 1024];
+//!     // 1. Launch: reserves the tag slice, posts receives, returns.
+//!     let req = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+//!     // 2. Compute: poll between blocks of your own work — each test()
+//!     //    pulls communication progress (§3.5.2), hiding comm time.
+//!     let mut acc = 0.0f32;
+//!     for i in 0..8 {
+//!         acc += (i as f32).sqrt(); // ... a slice of app compute ...
+//!         let _done = ctx.test(&req).unwrap();
+//!     }
+//!     // 3. Wait: blocks only for whatever communication is left.
+//!     let out = ctx.wait(req).unwrap();
+//!     assert!(acc > 0.0);
+//!     out.values
+//! });
+//! for r in &results {
+//!     for v in r { assert!((v - 6.0).abs() < 5.0 * 1e-4); } // 0+1+2+3
+//! }
+//! ```
+//!
+//! Multiple requests may be in flight on one context; each reserves its
+//! own tag-namespace slice up front ([`Communicator::try_fresh_tags`]),
+//! so concurrent requests can never cross-match messages. All ranks must
+//! *start* the same requests in the same order (SPMD), but may
+//! `test`/`wait` them in any order. The [`crate::coordinator::Metrics`]
+//! sink splits nonblocking wall time into hidden (inside `test`,
+//! overlapped with compute) and exposed (blocked in `wait`) components.
+//!
 //! ## The zero-copy receive path
 //!
 //! Every collective's receive side follows one discipline —
@@ -91,10 +143,10 @@
 //! bcast and scatter; the remaining collectives transparently fall back
 //! to their flat `Zccl` form under `Hier`.
 //!
-//! The collectives are synchronous SPMD operations over a [`Communicator`]:
-//! all ranks of the communicator must call the same operation in the same
-//! order (MPI semantics). Timing is attributed per phase through
-//! [`crate::coordinator::Metrics`].
+//! The collectives are SPMD operations over a [`Communicator`]: all
+//! ranks of the communicator must issue the same operations (blocking
+//! calls and request *starts*) in the same order (MPI semantics). Timing
+//! is attributed per phase through [`crate::coordinator::Metrics`].
 
 pub mod allgather;
 pub mod allreduce;
@@ -103,6 +155,8 @@ pub mod bcast;
 pub mod ctx;
 pub mod gather;
 pub mod hier;
+pub mod nonblocking;
+pub mod progress;
 pub mod reduce;
 pub mod reduce_scatter;
 pub mod scatter;
@@ -111,6 +165,7 @@ pub use allgather::allgather;
 pub use allreduce::allreduce;
 pub use ctx::{CollCtx, PoolStats, ScratchPool};
 pub use alltoall::alltoall;
+pub use nonblocking::{CollOutput, CollRequest};
 pub use bcast::bcast;
 pub use gather::gather;
 pub use reduce::reduce;
@@ -260,10 +315,34 @@ impl<'a> Communicator<'a> {
     }
     /// Reserve a tag range for one collective call (deterministic across
     /// ranks because call order is identical).
+    ///
+    /// Panics if the reservation would run into the transport's reserved
+    /// barrier namespace; fallible callers (the nonblocking request
+    /// starts) use [`Communicator::try_fresh_tags`].
     pub fn fresh_tags(&mut self, count: u64) -> u64 {
+        self.try_fresh_tags(count).expect("collective tag space exhausted")
+    }
+    /// Fallible [`Communicator::fresh_tags`]: reserve `count` tags, or
+    /// refuse (committing nothing) if the reservation would overflow into
+    /// [`crate::transport::BARRIER_TAG_BASE`]'s reserved namespace. Every
+    /// in-flight nonblocking request holds its own slice from this
+    /// sequence, so two requests on one context can never cross-match
+    /// tags — the guard turns an eventual silent collision into an error
+    /// at start time.
+    pub fn try_fresh_tags(&mut self, count: u64) -> Result<u64> {
         let base = self.next_tag;
-        self.next_tag += count;
-        base
+        let end = base.checked_add(count).ok_or_else(|| {
+            crate::Error::invalid("collective tag space exhausted (tag counter overflow)")
+        })?;
+        if end > crate::transport::BARRIER_TAG_BASE {
+            return Err(crate::Error::invalid(format!(
+                "collective tag space exhausted: reserving {count} tags at {base} would \
+                 cross the barrier namespace at {}",
+                crate::transport::BARRIER_TAG_BASE
+            )));
+        }
+        self.next_tag = end;
+        Ok(base)
     }
     /// Access the raw transport.
     pub fn transport(&mut self) -> &mut dyn Transport {
@@ -449,7 +528,7 @@ pub(crate) const SEG_TAG_SPAN: u64 = 1 << 20;
 
 /// Number of segments a `total`-byte transfer splits into, validated
 /// against the [`SEG_TAG_SPAN`] tag budget.
-fn segment_count(total: usize, segment: usize) -> Result<usize> {
+pub(crate) fn segment_count(total: usize, segment: usize) -> Result<usize> {
     let nseg = total.div_ceil(segment.max(1)).max(1);
     if nseg as u64 > SEG_TAG_SPAN {
         return Err(crate::Error::corrupt(format!(
@@ -640,6 +719,28 @@ mod tests {
         }
         assert_eq!(t1.packet_stats().allocated, warm, "warm swaps must not allocate");
         t1.recycle(wire);
+    }
+
+    #[test]
+    fn fresh_tags_budget_guard_refuses_barrier_collision() {
+        // Satellite regression: every in-flight request's tag slice comes
+        // from this counter; the guard must hand out disjoint slices and
+        // refuse (without committing) once a reservation would run into
+        // the transport's reserved barrier namespace.
+        let mut eps = MemFabric::endpoints(1);
+        let mut c = Communicator::new(&mut eps[0]);
+        let a = c.try_fresh_tags(10).unwrap();
+        let b = c.try_fresh_tags(10).unwrap();
+        assert_eq!(b, a + 10, "reservations must be disjoint and ordered");
+        assert!(c.try_fresh_tags(u64::MAX).is_err(), "overflow must be refused");
+        let left = crate::transport::BARRIER_TAG_BASE - (b + 10);
+        assert!(c.try_fresh_tags(left + 1).is_err(), "crossing the barrier base must fail");
+        // A refused reservation commits nothing: the exact remainder
+        // still fits...
+        let d = c.try_fresh_tags(left).unwrap();
+        assert_eq!(d, b + 10);
+        // ...and afterwards the space is genuinely exhausted.
+        assert!(c.try_fresh_tags(1).is_err());
     }
 
     #[test]

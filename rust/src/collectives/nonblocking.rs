@@ -1,0 +1,772 @@
+//! Nonblocking (`icollective`) state machines: persistent request
+//! handles over the same schedules, buffers and kernels as the blocking
+//! collectives.
+//!
+//! ## Model
+//!
+//! [`super::CollCtx::iallreduce`] / [`super::CollCtx::iallgather`] /
+//! [`super::CollCtx::ireduce_scatter`] / [`super::CollCtx::ibcast`]
+//! *start* an operation: they reserve the operation's whole tag slice up
+//! front (so concurrent requests can never cross-match messages), post
+//! the first receives, and park a resumable [`Machine`] in the context's
+//! [`super::progress::ProgressEngine`]. The returned [`CollRequest`] is a
+//! lightweight handle; the data plane lives in the engine.
+//!
+//! Progress is **cooperative** — there is no progress thread, because
+//! the transport endpoint is exclusively owned by the rank's
+//! communicator. Every [`super::CollCtx::test`] and
+//! [`super::CollCtx::wait`] steps *all* in-flight machines: each machine
+//! makes maximal progress (compress, send, fold) and yields only on an
+//! un-arrived receive, which it re-polls on the next step via
+//! [`crate::transport::Transport::try_complete_into`]. Interleaving
+//! compute with `test()` calls is exactly the §3.5.2 "pull communication
+//! progress inside compute" discipline, lifted from inside one
+//! collective to the application loop.
+//!
+//! ## Equivalence to the blocking calls
+//!
+//! Each machine performs the *same data operations in the same order* as
+//! its blocking twin — same tag layout, same compress inputs, same fold
+//! order, same pooled-buffer discipline — so its result is **bit
+//! identical** to the blocking call on the same inputs (the
+//! `nonblocking` integration tests pin this across modes, rank counts
+//! and shapes). Only the waiting is rearranged. SPMD contract: all ranks
+//! must *start* the same requests in the same order; they may then
+//! `test`/`wait` them in any order, because every step drives every
+//! in-flight machine.
+//!
+//! Per-phase codec timings are not attributed by the machines; instead
+//! the context splits wall time into *hidden* communication (spent
+//! inside `test`, overlapped with the caller's compute) and *exposed*
+//! communication (spent blocked in `wait`) — see
+//! [`crate::coordinator::Metrics::note_hidden_comm`] /
+//! [`crate::coordinator::Metrics::note_exposed_comm`].
+//!
+//! `Hier` requests with a dedicated two-level schedule (allreduce,
+//! allgather, bcast) complete eagerly through the blocking hierarchical
+//! path at start; flat-fallback cases (reduce-scatter) run the normal
+//! machine, mirroring the blocking dispatch.
+
+use std::ops::Range;
+
+use super::ctx::CollState;
+use super::progress::RecvSlot;
+use super::{
+    bytes_to_f32s_into_slice, chunk_ranges, f32s_to_bytes_into, fold_f32_bytes, segment_count,
+    send_segmented, Algo, Communicator, ReduceOp, SEG_TAG_SPAN,
+};
+use crate::coordinator::Metrics;
+use crate::topology::{binomial_bcast, ring, ring_recv_chunk, ring_send_chunk, TreeStep};
+use crate::{Error, Result};
+
+/// Handle to an in-flight nonblocking collective started on a
+/// [`super::CollCtx`]. Poll with [`super::CollCtx::test`], complete with
+/// [`super::CollCtx::wait`] / [`super::CollCtx::wait_into`].
+#[must_use = "complete the request with CollCtx::wait()/wait_into()"]
+#[derive(Debug)]
+pub struct CollRequest {
+    pub(crate) slot: usize,
+    pub(crate) gen: u64,
+}
+
+/// A completed collective's result: the values, plus — for
+/// reduce-scatter — the range of the logical vector they cover.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollOutput {
+    /// The operation's output values (full vector for allreduce /
+    /// allgather / bcast; the owned chunk for reduce-scatter).
+    pub values: Vec<f32>,
+    /// For reduce-scatter: the owned chunk's range of the logical
+    /// result. `None` for the whole-vector collectives.
+    pub range: Option<Range<usize>>,
+}
+
+/// One in-flight operation's resumable schedule. Stepped by the
+/// [`super::progress::ProgressEngine`]; boxed so the engine slab stays
+/// small.
+pub(crate) enum Machine {
+    ReduceScatter(Box<ReduceScatterSm>),
+    Allgather(Box<AllgatherSm>),
+    Allreduce(Box<AllreduceSm>),
+    Bcast(Box<BcastSm>),
+}
+
+impl Machine {
+    /// Make maximal progress; `Some(out)` when the operation completed.
+    pub(crate) fn step(
+        &mut self,
+        comm: &mut Communicator,
+        st: &mut CollState,
+        m: &mut Metrics,
+    ) -> Result<Option<CollOutput>> {
+        match self {
+            Machine::ReduceScatter(sm) => sm.step(comm, st, m),
+            Machine::Allgather(sm) => sm.step(comm, st, m),
+            Machine::Allreduce(sm) => sm.step(comm, st, m),
+            Machine::Bcast(sm) => sm.step(comm, st, m),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reduce-scatter
+// ---------------------------------------------------------------------
+
+/// Resumable ring reduce-scatter — the nonblocking twin of
+/// [`super::reduce_scatter::reduce_scatter_with`]. Rounds are inherently
+/// sequential (round `t`'s fold produces round `t+1`'s compress input),
+/// so the machine runs one round at a time, yielding only while that
+/// round's partial has not arrived. Under ZCCL the per-round compression
+/// polls the posted receive between PIPE chunks, and the fused fold
+/// pulls transport-wide progress (§3.5.2) — the same overlap as the
+/// blocking path, now also serving concurrent requests.
+pub(crate) struct ReduceScatterSm {
+    base: u64,
+    op: ReduceOp,
+    ranges: Vec<Range<usize>>,
+    /// Pooled accumulator, seeded with this rank's input.
+    acc: Vec<f32>,
+    /// Next round to complete (fold).
+    round: usize,
+    /// Outstanding receive for `round`; `Some` once the round's frame
+    /// has been compressed and sent.
+    slot: Option<RecvSlot>,
+}
+
+impl ReduceScatterSm {
+    /// Seed the accumulator and account the schedule's raw traffic. The
+    /// caller has already reserved `n` tags at `base`.
+    pub(crate) fn new(
+        comm: &Communicator,
+        st: &mut CollState,
+        m: &mut Metrics,
+        input: &[f32],
+        op: ReduceOp,
+        base: u64,
+    ) -> ReduceScatterSm {
+        let n = comm.size();
+        let mut acc = st.pool.take_f32();
+        acc.extend_from_slice(input);
+        m.raw_bytes += (input.len() * 4) as u64 * (n as u64 - 1) / n as u64 * 2;
+        ReduceScatterSm {
+            base,
+            op,
+            ranges: chunk_ranges(input.len(), n),
+            acc,
+            round: 0,
+            slot: None,
+        }
+    }
+
+    fn step(
+        &mut self,
+        comm: &mut Communicator,
+        st: &mut CollState,
+        m: &mut Metrics,
+    ) -> Result<Option<CollOutput>> {
+        let n = comm.size();
+        let me = comm.rank();
+        let nb = ring(me, n);
+        while self.round < n - 1 {
+            let t = self.round;
+            let s = self.ranges[ring_send_chunk(me, t, n)].clone();
+            let r = self.ranges[ring_recv_chunk(me, t, n)].clone();
+            let tag = self.base + t as u64;
+            if self.slot.is_none() {
+                // Begin the round: post the receive BEFORE compressing,
+                // poll it from inside the compression loop, then send.
+                self.slot = Some(RecvSlot::post(comm.t, nb.prev, tag));
+                let mut frame = comm.t.lease();
+                match st.mode.algo {
+                    Algo::Plain => f32s_to_bytes_into(&self.acc[s.clone()], &mut frame),
+                    _ => match st.pipe.clone() {
+                        Some(p) => {
+                            let (h, buf, done) = self.slot.as_mut().unwrap().parts();
+                            let tr = &mut *comm.t;
+                            p.compress_into_with_progress(
+                                &self.acc[s.clone()],
+                                st.mode.eb,
+                                &mut frame,
+                                &mut |_| {
+                                    if !*done && tr.try_complete_into(h, buf).unwrap_or(false) {
+                                        *done = true;
+                                    }
+                                },
+                            )?;
+                            st.compress_calls += 1; // PIPE bypasses compress_into
+                        }
+                        None => {
+                            st.compress_into(&self.acc[s.clone()], &mut frame)?;
+                        }
+                    },
+                }
+                m.bytes_sent += frame.len() as u64;
+                comm.t.send_pooled(nb.next, tag, frame)?;
+            }
+            if !self.slot.as_mut().unwrap().poll(comm.t)? {
+                return Ok(None); // yield: this round's partial not here yet
+            }
+            let got = self.slot.take().unwrap().into_buf();
+            m.bytes_recv += got.len() as u64;
+            match st.mode.algo {
+                Algo::Plain => {
+                    fold_f32_bytes(self.op, &got, &mut self.acc[r.clone()])?;
+                }
+                _ => match st.pipe.clone() {
+                    Some(p) => {
+                        // Fused decompress–reduce; between chunks the hook
+                        // pulls transport-wide progress so concurrent
+                        // requests' arrivals drain while we fold.
+                        let tr = &mut *comm.t;
+                        p.decompress_fold_into_with_progress(
+                            &got,
+                            self.op,
+                            &mut self.acc[r.clone()],
+                            &mut |_| {
+                                let _ = tr.progress();
+                            },
+                        )?;
+                    }
+                    None => {
+                        st.decode_fold_into(&got, self.op, &mut self.acc[r.clone()])?;
+                    }
+                },
+            }
+            comm.t.recycle(got);
+            self.round += 1;
+        }
+        let own = (me + 1) % n;
+        let range = self.ranges[own].clone();
+        let mut owned = st.pool.take_f32();
+        owned.extend_from_slice(&self.acc[range.clone()]);
+        st.pool.put_f32(std::mem::take(&mut self.acc));
+        Ok(Some(CollOutput { values: owned, range: Some(range) }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Allgather
+// ---------------------------------------------------------------------
+
+enum AgPhase {
+    /// The 8-byte value-count ring (mirror of `exchange_sizes`).
+    Counts,
+    /// The compressed-size ring (`CColl`/`Zccl` only).
+    Sizes,
+    /// The N−1 data rounds.
+    Rounds,
+    /// Final placement decode (`Plain`/`CColl`/`Zccl`).
+    Decode,
+}
+
+/// Resumable ring allgather — the nonblocking twin of
+/// [`super::allgather::allgather_chunks_with`], including the allreduce
+/// stage's chunk-ownership `shift`. Same tag layout (`base` = counts
+/// ring, `base + n` = size ring, `base + (t+1)·SEG_TAG_SPAN` = round
+/// `t`), same segmented receive behaviour, same decode-once-at-the-end
+/// placement discipline.
+pub(crate) struct AllgatherSm {
+    base: u64,
+    shift: usize,
+    /// Pooled copy of this rank's contribution (returned to the pool at
+    /// completion).
+    my_chunk: Vec<f32>,
+    /// Value counts, indexed by actual rank while the ring runs.
+    counts: Vec<u64>,
+    /// Compressed sizes: actual-rank order during the size ring, logical
+    /// chunk order afterwards.
+    sizes: Vec<u64>,
+    offsets: Vec<usize>,
+    /// Pooled output (every chunk's final window).
+    out: Vec<f32>,
+    chunks: Vec<Option<Vec<u8>>>,
+    round: usize,
+    /// Whether the current data round's send has been issued.
+    round_sent: bool,
+    /// Current data round's expected byte total and segment bookkeeping.
+    total: usize,
+    nseg: usize,
+    seg_idx: usize,
+    /// Multi-segment assembly buffer (leased while in use).
+    asm: Vec<u8>,
+    slot: Option<RecvSlot>,
+    phase: AgPhase,
+}
+
+impl AllgatherSm {
+    /// `my_chunk` is an owned (pooled) vector; the caller has already
+    /// reserved `(n + 2) · SEG_TAG_SPAN` tags at `base`.
+    pub(crate) fn new(
+        comm: &Communicator,
+        st: &mut CollState,
+        my_chunk: Vec<f32>,
+        shift: usize,
+        base: u64,
+    ) -> AllgatherSm {
+        let n = comm.size();
+        let mut counts = vec![0u64; n];
+        counts[comm.rank()] = my_chunk.len() as u64;
+        AllgatherSm {
+            base,
+            shift,
+            my_chunk,
+            counts,
+            sizes: Vec::new(),
+            offsets: Vec::new(),
+            out: st.pool.take_f32(),
+            chunks: Vec::new(),
+            round: 0,
+            round_sent: false,
+            total: 0,
+            nseg: 0,
+            seg_idx: 0,
+            asm: Vec::new(),
+            slot: None,
+            phase: AgPhase::Counts,
+        }
+    }
+
+    /// One step of an 8-byte u64 ring exchange over `vals` (indexed by
+    /// actual rank). `Ok(Some(true))` = ring finished, `Ok(Some(false))`
+    /// = one round advanced, `Ok(None)` = waiting.
+    fn ring_u64_step(
+        &mut self,
+        comm: &mut Communicator,
+        tag_base: u64,
+        sizes_ring: bool,
+    ) -> Result<Option<bool>> {
+        let n = comm.size();
+        let me = comm.rank();
+        let nb = ring(me, n);
+        if self.round == n - 1 {
+            return Ok(Some(true));
+        }
+        let tag = tag_base + self.round as u64;
+        if self.slot.is_none() {
+            let vals = if sizes_ring { &self.sizes } else { &self.counts };
+            let v = vals[ring_send_chunk(me, self.round, n)];
+            comm.t.send(nb.next, tag, &v.to_le_bytes())?;
+            self.slot = Some(RecvSlot::post(comm.t, nb.prev, tag));
+        }
+        if !self.slot.as_mut().unwrap().poll(comm.t)? {
+            return Ok(None);
+        }
+        let slot = self.slot.take().unwrap();
+        let v = u64::from_le_bytes(
+            slot.buf
+                .as_slice()
+                .try_into()
+                .map_err(|_| Error::corrupt("size exchange message must be 8 bytes"))?,
+        );
+        slot.recycle(comm.t);
+        let vals = if sizes_ring { &mut self.sizes } else { &mut self.counts };
+        vals[ring_recv_chunk(me, self.round, n)] = v;
+        self.round += 1;
+        Ok(Some(false))
+    }
+
+    /// Counts are in: size the output, prepare this rank's chunk, and
+    /// dispatch to the mode's round structure.
+    fn setup(
+        &mut self,
+        comm: &mut Communicator,
+        st: &mut CollState,
+        m: &mut Metrics,
+    ) -> Result<()> {
+        let n = comm.size();
+        let me = comm.rank();
+        let vrank = me + self.shift;
+        let own = vrank % n;
+        let mut counts = vec![0u64; n];
+        for (r, c) in self.counts.iter().enumerate() {
+            counts[(r + self.shift) % n] = *c;
+        }
+        m.raw_bytes += counts.iter().map(|&c| c * 4).sum::<u64>();
+        self.offsets.clear();
+        self.offsets.reserve(n + 1);
+        self.offsets.push(0);
+        for &c in &counts {
+            self.offsets.push(self.offsets.last().unwrap() + c as usize);
+        }
+        self.out.resize(self.offsets[n], 0.0);
+        self.chunks = vec![None; n];
+        self.round = 0;
+        match st.mode.algo {
+            Algo::Plain => {
+                let mut mine = st.pool.take_bytes();
+                f32s_to_bytes_into(&self.my_chunk, &mut mine);
+                self.chunks[own] = Some(mine);
+                self.phase = AgPhase::Rounds;
+            }
+            Algo::Cprp2p => {
+                // The output doubles as the between-rounds store.
+                self.out[window(&self.offsets, own)].copy_from_slice(&self.my_chunk);
+                self.phase = AgPhase::Rounds;
+            }
+            Algo::CColl | Algo::Zccl => {
+                // Compress the local chunk exactly once, then learn every
+                // compressed size before the data rounds.
+                let mut mine = st.pool.take_bytes();
+                st.compress_into(&self.my_chunk, &mut mine)?;
+                self.sizes = vec![0u64; n];
+                self.sizes[me] = mine.len() as u64;
+                self.chunks[own] = Some(mine);
+                self.phase = AgPhase::Sizes;
+            }
+            Algo::Hier => unreachable!("hier iallgather completes via the blocking fallback"),
+        }
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        comm: &mut Communicator,
+        st: &mut CollState,
+        m: &mut Metrics,
+    ) -> Result<Option<CollOutput>> {
+        let n = comm.size();
+        let me = comm.rank();
+        let nb = ring(me, n);
+        let vrank = me + self.shift;
+        loop {
+            match self.phase {
+                AgPhase::Counts => match self.ring_u64_step(comm, self.base, false)? {
+                    None => return Ok(None),
+                    Some(false) => {}
+                    Some(true) => self.setup(comm, st, m)?,
+                },
+                AgPhase::Sizes => match self.ring_u64_step(comm, self.base + n as u64, true)? {
+                    None => return Ok(None),
+                    Some(false) => {}
+                    Some(true) => {
+                        // Actual-rank order → logical chunk order (the
+                        // blocking path's `(r + vrank - me) % n` remap).
+                        let mut logical = vec![0u64; n];
+                        for (r, s) in self.sizes.iter().enumerate() {
+                            logical[(r + self.shift) % n] = *s;
+                        }
+                        self.sizes = logical;
+                        self.round = 0;
+                        self.phase = AgPhase::Rounds;
+                    }
+                },
+                AgPhase::Rounds => {
+                    if self.round == n - 1 {
+                        if st.mode.algo == Algo::Cprp2p {
+                            // Decoded per round; the output is complete.
+                            return Ok(Some(self.finish(st)));
+                        }
+                        self.phase = AgPhase::Decode;
+                        continue;
+                    }
+                    let t = self.round;
+                    let s = ring_send_chunk(vrank, t, n);
+                    let r = ring_recv_chunk(vrank, t, n);
+                    let tag = self.base + (t as u64 + 1) * SEG_TAG_SPAN;
+                    if st.mode.algo == Algo::Cprp2p {
+                        if !self.round_sent {
+                            let mut frame = comm.t.lease();
+                            st.compress_into(&self.out[window(&self.offsets, s)], &mut frame)?;
+                            m.bytes_sent += frame.len() as u64;
+                            comm.t.send_pooled(nb.next, tag, frame)?;
+                            self.slot = Some(RecvSlot::post(comm.t, nb.prev, tag));
+                            self.round_sent = true;
+                        }
+                        if !self.slot.as_mut().unwrap().poll(comm.t)? {
+                            return Ok(None);
+                        }
+                        let got = self.slot.take().unwrap().into_buf();
+                        m.bytes_recv += got.len() as u64;
+                        st.decode_into_slice(&got, &mut self.out[window(&self.offsets, r)])
+                            .map_err(|e| Error::corrupt(format!("cprp2p chunk {r}: {e}")))?;
+                        comm.t.recycle(got);
+                        self.round += 1;
+                        self.round_sent = false;
+                        continue;
+                    }
+                    // Plain / CColl / Zccl: forward a stored chunk, receive
+                    // the next one (segmented under ZCCL's fixed pipeline).
+                    let seg = if st.mode.algo == Algo::Zccl {
+                        st.mode.pipeline_bytes
+                    } else {
+                        usize::MAX
+                    };
+                    if !self.round_sent {
+                        let send_buf = self.chunks[s].as_ref().expect("ring schedule owns chunk");
+                        m.bytes_sent += send_segmented(comm.t, nb.next, tag, send_buf, seg)?;
+                        self.total = match st.mode.algo {
+                            Algo::Plain => window(&self.offsets, r).len() * 4,
+                            _ => self.sizes[r] as usize,
+                        };
+                        self.nseg = segment_count(self.total, seg)?;
+                        self.seg_idx = 0;
+                        if self.nseg > 1 {
+                            self.asm = comm.t.lease();
+                            self.asm.clear();
+                            self.asm.reserve(self.total);
+                        }
+                        self.slot = Some(RecvSlot::post(comm.t, nb.prev, tag));
+                        self.round_sent = true;
+                    }
+                    if !self.slot.as_mut().unwrap().poll(comm.t)? {
+                        return Ok(None);
+                    }
+                    let got = if self.nseg == 1 {
+                        // Single segment: the payload arrived by buffer
+                        // swap — it IS the chunk.
+                        self.slot.take().unwrap().into_buf()
+                    } else {
+                        let slot = self.slot.take().unwrap();
+                        self.asm.extend_from_slice(&slot.buf);
+                        slot.recycle(comm.t);
+                        self.seg_idx += 1;
+                        if self.seg_idx < self.nseg {
+                            self.slot = Some(RecvSlot::post(
+                                comm.t,
+                                nb.prev,
+                                tag + self.seg_idx as u64,
+                            ));
+                            continue;
+                        }
+                        std::mem::take(&mut self.asm)
+                    };
+                    if got.len() != self.total {
+                        return Err(Error::corrupt(format!(
+                            "segmented recv got {} of {} bytes",
+                            got.len(),
+                            self.total
+                        )));
+                    }
+                    m.bytes_recv += got.len() as u64;
+                    self.chunks[r] = Some(got);
+                    self.round += 1;
+                    self.round_sent = false;
+                }
+                AgPhase::Decode => {
+                    let own = vrank % n;
+                    for (r, c) in std::mem::take(&mut self.chunks).into_iter().enumerate() {
+                        let buf = c.expect("all chunks gathered");
+                        match st.mode.algo {
+                            Algo::Plain => {
+                                bytes_to_f32s_into_slice(
+                                    &buf,
+                                    &mut self.out[window(&self.offsets, r)],
+                                )?;
+                            }
+                            _ => {
+                                st.decode_into_slice(&buf, &mut self.out[window(&self.offsets, r)])
+                                    .map_err(|e| Error::corrupt(format!("zccl chunk {r}: {e}")))?;
+                            }
+                        }
+                        if r == own {
+                            st.pool.put_bytes(buf);
+                        } else {
+                            comm.t.recycle(buf);
+                        }
+                    }
+                    return Ok(Some(self.finish(st)));
+                }
+            }
+        }
+    }
+
+    fn finish(&mut self, st: &mut CollState) -> CollOutput {
+        st.pool.put_f32(std::mem::take(&mut self.my_chunk));
+        CollOutput { values: std::mem::take(&mut self.out), range: None }
+    }
+}
+
+/// The final window of logical chunk `r` in the output.
+fn window(offsets: &[usize], r: usize) -> Range<usize> {
+    offsets[r]..offsets[r + 1]
+}
+
+// ---------------------------------------------------------------------
+// Allreduce
+// ---------------------------------------------------------------------
+
+enum ArStage {
+    Rs(ReduceScatterSm),
+    Ag(AllgatherSm),
+}
+
+/// Resumable ring allreduce — reduce-scatter then shift-1 allgather,
+/// composed exactly like [`super::allreduce::allreduce_with`]. Both
+/// stages' tag slices are reserved at start, so the stage transition
+/// needs no communicator access beyond what the machines already hold.
+pub(crate) struct AllreduceSm {
+    op: ReduceOp,
+    ag_base: u64,
+    stage: ArStage,
+}
+
+impl AllreduceSm {
+    pub(crate) fn new(op: ReduceOp, ag_base: u64, rs: ReduceScatterSm) -> AllreduceSm {
+        AllreduceSm { op, ag_base, stage: ArStage::Rs(rs) }
+    }
+
+    fn step(
+        &mut self,
+        comm: &mut Communicator,
+        st: &mut CollState,
+        m: &mut Metrics,
+    ) -> Result<Option<CollOutput>> {
+        if let ArStage::Rs(sm) = &mut self.stage {
+            match sm.step(comm, st, m)? {
+                None => return Ok(None),
+                Some(mut rs_out) => {
+                    self.op.finish(&mut rs_out.values, comm.size());
+                    let ag = AllgatherSm::new(comm, st, rs_out.values, 1, self.ag_base);
+                    self.stage = ArStage::Ag(ag);
+                }
+            }
+        }
+        match &mut self.stage {
+            ArStage::Ag(sm) => sm.step(comm, st, m),
+            ArStage::Rs(_) => unreachable!("reduce-scatter stage handled above"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bcast
+// ---------------------------------------------------------------------
+
+/// Resumable binomial-tree broadcast — the nonblocking twin of
+/// [`super::bcast::bcast_with`]. The root's work (compress once, eager
+/// sends, decode) is entirely send-side and completes on its first step;
+/// a non-root rank has exactly one yield point: its parent's frame.
+pub(crate) struct BcastSm {
+    base: u64,
+    /// Pooled copy of the payload (root only).
+    data: Option<Vec<f32>>,
+    recv_step: Option<TreeStep>,
+    send_steps: Vec<TreeStep>,
+    /// Posted at start (non-root).
+    slot: Option<RecvSlot>,
+}
+
+impl BcastSm {
+    /// The caller has validated root/data and reserved
+    /// `tree_rounds(n) + 1` tags at `base`; `data` is a pooled copy,
+    /// `Some` exactly at the root. Posts the parent receive immediately.
+    pub(crate) fn new(
+        comm: &mut Communicator,
+        base: u64,
+        root: usize,
+        data: Option<Vec<f32>>,
+    ) -> BcastSm {
+        let (recv_step, send_steps) = binomial_bcast(comm.rank(), root, comm.size());
+        let slot = recv_step
+            .as_ref()
+            .filter(|_| data.is_none())
+            .map(|s| RecvSlot::post(comm.t, s.peer, base + s.round as u64));
+        BcastSm { base, data, recv_step, send_steps, slot }
+    }
+
+    fn step(
+        &mut self,
+        comm: &mut Communicator,
+        st: &mut CollState,
+        m: &mut Metrics,
+    ) -> Result<Option<CollOutput>> {
+        if let Some(d) = self.data.take() {
+            // Root: compress/serialise once, eager-send to every child,
+            // decode exactly what was sent (so all ranks agree bitwise).
+            m.raw_bytes += (d.len() * 4) as u64;
+            let values = match st.mode.algo {
+                Algo::Plain => {
+                    let mut b = st.pool.take_bytes();
+                    f32s_to_bytes_into(&d, &mut b);
+                    for s in &self.send_steps {
+                        comm.t.send(s.peer, self.base + s.round as u64, &b)?;
+                        m.bytes_sent += b.len() as u64;
+                    }
+                    st.pool.put_bytes(b);
+                    // The wire form round-trips f32s exactly: the decoded
+                    // payload is bit-identical to `d`.
+                    d
+                }
+                Algo::Cprp2p => {
+                    for s in &self.send_steps {
+                        let mut frame = comm.t.lease();
+                        st.compress_into(&d, &mut frame)?;
+                        m.bytes_sent += frame.len() as u64;
+                        comm.t.send_pooled(s.peer, self.base + s.round as u64, frame)?;
+                    }
+                    d
+                }
+                _ => {
+                    let mut frame = st.pool.take_bytes();
+                    st.compress_into(&d, &mut frame)?;
+                    for s in &self.send_steps {
+                        comm.t.send(s.peer, self.base + s.round as u64, &frame)?;
+                        m.bytes_sent += frame.len() as u64;
+                    }
+                    // Every rank returns the decompressed frame, the root
+                    // included — MPI-consistent and bit-identical to the
+                    // blocking call.
+                    let cnt = crate::compress::checked_count(&frame)?;
+                    let mut out = st.pool.take_f32();
+                    out.resize(cnt, 0.0);
+                    st.decode_into_slice(&frame, &mut out)?;
+                    st.pool.put_bytes(frame);
+                    st.pool.put_f32(d);
+                    out
+                }
+            };
+            return Ok(Some(CollOutput { values, range: None }));
+        }
+        // Non-root: wait for the parent's frame, forward, decode.
+        let slot = self.slot.as_mut().expect("non-root bcast has a posted receive");
+        if !slot.poll(comm.t)? {
+            return Ok(None);
+        }
+        let got = self.slot.take().unwrap().into_buf();
+        m.bytes_recv += got.len() as u64;
+        debug_assert!(self.recv_step.is_some());
+        let values = match st.mode.algo {
+            Algo::Plain => {
+                for s in &self.send_steps {
+                    comm.t.send(s.peer, self.base + s.round as u64, &got)?;
+                    m.bytes_sent += got.len() as u64;
+                }
+                let mut out = st.pool.take_f32();
+                out.resize(got.len() / 4, 0.0);
+                bytes_to_f32s_into_slice(&got, &mut out)?;
+                comm.t.recycle(got);
+                out
+            }
+            Algo::Cprp2p => {
+                let cnt = crate::compress::checked_count(&got)?;
+                let mut out = st.pool.take_f32();
+                out.resize(cnt, 0.0);
+                st.decode_into_slice(&got, &mut out)?;
+                comm.t.recycle(got);
+                // Re-compress for every forward — the CPRP2P pathology.
+                for s in &self.send_steps {
+                    let mut frame = comm.t.lease();
+                    st.compress_into(&out, &mut frame)?;
+                    m.bytes_sent += frame.len() as u64;
+                    comm.t.send_pooled(s.peer, self.base + s.round as u64, frame)?;
+                }
+                out
+            }
+            _ => {
+                // Forward the frame verbatim BEFORE decoding, so children
+                // are not delayed behind our decompression.
+                for s in &self.send_steps {
+                    comm.t.send(s.peer, self.base + s.round as u64, &got)?;
+                    m.bytes_sent += got.len() as u64;
+                }
+                let cnt = crate::compress::checked_count(&got)?;
+                let mut out = st.pool.take_f32();
+                out.resize(cnt, 0.0);
+                st.decode_into_slice(&got, &mut out)?;
+                comm.t.recycle(got);
+                out
+            }
+        };
+        Ok(Some(CollOutput { values, range: None }))
+    }
+}

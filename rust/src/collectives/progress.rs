@@ -1,0 +1,173 @@
+//! The per-rank cooperative progress engine behind the nonblocking
+//! collectives ([`super::nonblocking`]).
+//!
+//! There is no progress *thread*: the transport endpoint is `&mut`-owned
+//! by the rank's [`super::Communicator`], so all progress is pulled
+//! cooperatively from the application thread — exactly the §3.5.2
+//! discipline the blocking schedules already use, generalised to many
+//! outstanding operations. Every call to [`super::CollCtx::test`] /
+//! [`super::CollCtx::wait`] steps **all** resident state machines
+//! round-robin, so a request keeps moving even while the caller polls a
+//! different one.
+//!
+//! The engine is a slab: starting a request inserts its
+//! [`super::nonblocking::Machine`] and hands back a slot index (wrapped
+//! in a [`super::nonblocking::CollRequest`]); completion parks the output
+//! in the slot until the caller collects it. Slots are generation-tagged
+//! so a stale request handle can never observe a recycled slot.
+
+use super::ctx::CollState;
+use super::nonblocking::{CollOutput, Machine};
+use super::Communicator;
+use crate::coordinator::Metrics;
+use crate::transport::{RecvHandle, Transport};
+use crate::{Error, Result};
+
+/// One resumable receive: a posted [`RecvHandle`] plus the leased wire
+/// buffer its payload will swap into. The state machines park one of
+/// these per outstanding message and poll it on every step.
+pub(crate) struct RecvSlot {
+    h: RecvHandle,
+    /// Transport-leased wire buffer; the payload arrives here by swap.
+    pub(crate) buf: Vec<u8>,
+    done: bool,
+}
+
+impl RecvSlot {
+    /// Post a nonblocking receive and lease its landing buffer.
+    pub(crate) fn post(t: &mut dyn Transport, from: usize, tag: u64) -> RecvSlot {
+        RecvSlot { h: t.irecv(from, tag), buf: t.lease(), done: false }
+    }
+
+    /// Poll the receive (idempotent after completion). `Ok(true)` means
+    /// the payload is in [`RecvSlot::buf`].
+    pub(crate) fn poll(&mut self, t: &mut dyn Transport) -> Result<bool> {
+        if !self.done && t.try_complete_into(&mut self.h, &mut self.buf)? {
+            self.done = true;
+        }
+        Ok(self.done)
+    }
+
+    /// Split-borrow accessor for progress hooks: the handle, the landing
+    /// buffer and the completion flag as three disjoint `&mut`s.
+    pub(crate) fn parts(&mut self) -> (&mut RecvHandle, &mut Vec<u8>, &mut bool) {
+        (&mut self.h, &mut self.buf, &mut self.done)
+    }
+
+    /// Consume the slot, returning the payload buffer (the receive must
+    /// have completed).
+    pub(crate) fn into_buf(self) -> Vec<u8> {
+        debug_assert!(self.done, "into_buf on an incomplete receive");
+        self.buf
+    }
+
+    /// Consume the slot after its payload has been copied out, returning
+    /// the buffer to the transport pool.
+    pub(crate) fn recycle(self, t: &mut dyn Transport) {
+        t.recycle(self.buf);
+    }
+}
+
+/// A slab slot: a running machine, a parked result, or a parked error.
+enum Entry {
+    Running(Machine),
+    Done(CollOutput),
+    Failed(Error),
+}
+
+/// The slab of in-flight nonblocking collectives owned by a
+/// [`super::CollCtx`]. See the module docs.
+#[derive(Default)]
+pub(crate) struct ProgressEngine {
+    slots: Vec<Option<Entry>>,
+    /// Per-slot generation, bumped when a slot's result is taken; stale
+    /// [`super::nonblocking::CollRequest`]s are rejected instead of
+    /// aliasing a recycled slot.
+    gens: Vec<u64>,
+}
+
+impl ProgressEngine {
+    fn claim(&mut self, e: Entry) -> (usize, u64) {
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.is_none() {
+                *s = Some(e);
+                return (i, self.gens[i]);
+            }
+        }
+        self.slots.push(Some(e));
+        self.gens.push(0);
+        (self.slots.len() - 1, 0)
+    }
+
+    /// Register a running machine; returns `(slot, generation)`.
+    pub(crate) fn insert(&mut self, m: Machine) -> (usize, u64) {
+        self.claim(Entry::Running(m))
+    }
+
+    /// Register an already-finished operation (immediate completions:
+    /// single-rank shortcuts and the hierarchical blocking fallback).
+    pub(crate) fn insert_done(&mut self, r: Result<CollOutput>) -> (usize, u64) {
+        self.claim(match r {
+            Ok(out) => Entry::Done(out),
+            Err(e) => Entry::Failed(e),
+        })
+    }
+
+    /// Step every running machine once (each makes maximal progress and
+    /// yields only on an un-arrived receive). A machine that errors is
+    /// dropped — its pooled buffers are abandoned per the crate-wide
+    /// error-path policy (see [`super::ScratchPool`]) — and the error is
+    /// parked for the owner's `wait`.
+    pub(crate) fn step_all(
+        &mut self,
+        comm: &mut Communicator,
+        st: &mut CollState,
+        m: &mut Metrics,
+    ) -> Result<()> {
+        for slot in self.slots.iter_mut() {
+            if let Some(Entry::Running(machine)) = slot {
+                match machine.step(comm, st, m) {
+                    Ok(Some(out)) => *slot = Some(Entry::Done(out)),
+                    Ok(None) => {}
+                    Err(e) => *slot = Some(Entry::Failed(e)),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether the slot has finished (successfully or not).
+    pub(crate) fn is_done(&self, slot: usize, gen: u64) -> bool {
+        matches!(
+            self.slots.get(slot),
+            Some(Some(Entry::Done(_) | Entry::Failed(_))) if self.gens[slot] == gen
+        )
+    }
+
+    /// Collect a finished slot's result, freeing the slot. `None` while
+    /// still running; `Some(Err(..))` for a stale handle or a failed
+    /// machine.
+    pub(crate) fn take(&mut self, slot: usize, gen: u64) -> Option<Result<CollOutput>> {
+        if slot >= self.slots.len() || self.gens[slot] != gen {
+            return Some(Err(Error::invalid("stale or unknown collective request handle")));
+        }
+        match self.slots[slot] {
+            Some(Entry::Running(_)) => None,
+            Some(_) => {
+                let e = self.slots[slot].take().unwrap();
+                self.gens[slot] += 1;
+                Some(match e {
+                    Entry::Done(out) => Ok(out),
+                    Entry::Failed(err) => Err(err),
+                    Entry::Running(_) => unreachable!(),
+                })
+            }
+            None => Some(Err(Error::invalid("collective request already collected"))),
+        }
+    }
+
+    /// Number of requests still in flight (running or uncollected).
+    pub(crate) fn in_flight(&self) -> usize {
+        self.slots.iter().flatten().count()
+    }
+}

@@ -59,14 +59,23 @@ pub(crate) fn reduce_with(
     let (parent_step, child_steps) = binomial_bcast(me, root, n);
     m.raw_bytes += (input.len() * 4) as u64;
 
-    // Fold children (deepest subtree first = reverse round order). Each
-    // child's partial arrives in a leased wire buffer and is consumed by
-    // the fused receive kernel — it is never materialized as a vector.
+    // Fold children (deepest subtree first = reverse round order). Every
+    // child receive is posted up front, so while one child's partial is
+    // being folded the other children's frames keep progressing — the
+    // fused kernel's per-chunk hook polls the still-outstanding handles
+    // (§3.5.2). The folds themselves stay in fixed reverse-round order:
+    // folding in arrival order would make the result nondeterministic.
+    let pipe = st.pipe.clone();
+    let mut handles: Vec<crate::transport::RecvHandle> =
+        child_steps.iter().rev().map(|s| comm.t.irecv(s.peer, base + s.round as u64)).collect();
     let mut msg = comm.t.lease();
-    for s in child_steps.iter().rev() {
-        let tag = base + s.round as u64;
+    for i in 0..handles.len() {
+        let (h, rest) = handles[i..].split_first_mut().expect("index in range");
         let t0 = std::time::Instant::now();
-        comm.t.recv_into(s.peer, tag, &mut msg)?;
+        let mut backoff = crate::transport::Backoff::new();
+        while !comm.t.try_complete_into(h, &mut msg)? {
+            backoff.snooze();
+        }
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
         match st.mode.algo {
@@ -77,7 +86,26 @@ pub(crate) fn reduce_with(
             }
             _ => {
                 let t0 = std::time::Instant::now();
-                st.decode_fold_into(&msg, op, &mut acc)?;
+                match &pipe {
+                    // Same kernel as the resident codec's fused fold
+                    // (both run `fzlight::decompress_fold_frame`, so the
+                    // result is bit-identical) — but with a live hook
+                    // pulling the remaining children's progress.
+                    Some(p)
+                        if crate::compress::peek_codec(&msg)?
+                            == crate::compress::CompressorKind::FzLight =>
+                    {
+                        let tr = &mut *comm.t;
+                        p.decompress_fold_into_with_progress(&msg, op, &mut acc, &mut |_| {
+                            for nh in rest.iter_mut() {
+                                let _ = tr.try_complete(nh);
+                            }
+                        })?;
+                    }
+                    _ => {
+                        st.decode_fold_into(&msg, op, &mut acc)?;
+                    }
+                }
                 m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
         }
@@ -101,13 +129,16 @@ pub(crate) fn reduce_with(
         _ => {
             let t0 = std::time::Instant::now();
             match &st.pipe {
-                // No receive is outstanding at this point (children
-                // drained), but the PIPE codec is still the right
-                // compressor: its chunked frame lets the parent start
-                // decompressing earlier in a streaming transport. Hook
-                // polls nothing here.
+                // All child receives are drained by now, but other
+                // traffic (concurrent nonblocking requests, later
+                // collectives' early arrivals) may be sitting in the
+                // transport: the hook pulls transport-wide progress
+                // between chunks instead of polling nothing.
                 Some(p) => {
-                    p.compress_into_with_progress(&acc, st.mode.eb, &mut wire, &mut |_| {})?;
+                    let tr = &mut *comm.t;
+                    p.compress_into_with_progress(&acc, st.mode.eb, &mut wire, &mut |_| {
+                        let _ = tr.progress();
+                    })?;
                 }
                 None => {
                     st.codec.compress_into(&acc, st.mode.eb, &mut wire)?;

@@ -160,6 +160,11 @@ fn reduce_scatter_zccl(
     let mode = st.mode;
     let mut got = comm.t.lease();
 
+    // Round 0's receive is posted before any compression, and every later
+    // round's receive is posted before the *previous* round's fold — so
+    // both the compression hook and the fold hook always have a live
+    // handle to poll (§3.5.2).
+    let mut h = comm.t.irecv(nb.prev, base);
     for t in 0..n - 1 {
         let s = &ranges[ring_send_chunk(me, t, n)];
         let r = &ranges[ring_recv_chunk(me, t, n)];
@@ -169,9 +174,6 @@ fn reduce_scatter_zccl(
         // and its capacity circulates back through the pool.
         let mut frame = comm.t.lease();
 
-        // Post the receive BEFORE compressing, then poll it from inside
-        // the compression loop.
-        let mut h = comm.t.irecv(nb.prev, tag);
         match &pipe {
             Some(p) => {
                 let t0 = std::time::Instant::now();
@@ -208,14 +210,31 @@ fn reduce_scatter_zccl(
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
 
+        // Post the NEXT round's receive before folding this one, so the
+        // fold has real communication to pull forward.
+        let mut next_h = (t + 1 < n - 1).then(|| comm.t.irecv(nb.prev, base + t as u64 + 1));
+
         // Fused decompress–reduce straight into the accumulator. With
-        // PIPE the per-chunk hook keeps the §3.5.2 overlap slot: it would
-        // poll the outstanding send between chunks (our transport's sends
-        // are eager, so the poll is a no-op here).
+        // PIPE the per-chunk hook keeps the §3.5.2 overlap slot: it polls
+        // the next round's already-posted receive (last round: it pulls
+        // transport-wide progress instead, draining whatever concurrent
+        // traffic has arrived).
         match &pipe {
             Some(p) => {
                 let t0 = std::time::Instant::now();
-                p.decompress_fold_into_with_progress(&got, op, &mut acc[r.clone()], &mut |_| {})?;
+                {
+                    let tr = &mut *comm.t;
+                    p.decompress_fold_into_with_progress(&got, op, &mut acc[r.clone()], &mut |_| {
+                        match next_h.as_mut() {
+                            Some(nh) => {
+                                let _ = tr.try_complete(nh);
+                            }
+                            None => {
+                                let _ = tr.progress();
+                            }
+                        }
+                    })?;
+                }
                 m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
             None => {
@@ -223,6 +242,9 @@ fn reduce_scatter_zccl(
                 st.decode_fold_into(&got, op, &mut acc[r.clone()])?;
                 m.add(Phase::DecompressReduce, t0.elapsed().as_secs_f64());
             }
+        }
+        if let Some(nh) = next_h {
+            h = nh;
         }
     }
     comm.t.recycle(got);

@@ -49,6 +49,15 @@ pub struct Metrics {
     pub bytes_recv: u64,
     /// Raw (uncompressed) bytes the collective moved logically.
     pub raw_bytes: u64,
+    /// Seconds the application was *blocked* on nonblocking-collective
+    /// completion (`wait`/`wait_into`). A subset of [`Metrics::comm_s`]
+    /// — the communication the overlap failed to hide.
+    pub exposed_comm_s: f64,
+    /// Seconds spent driving nonblocking progress from inside `test()`
+    /// polls — communication *hidden* behind the application's own
+    /// compute. Informational: overlapped with compute by construction,
+    /// so NOT part of [`Metrics::total_s`].
+    pub hidden_comm_s: f64,
 }
 
 impl Metrics {
@@ -84,6 +93,25 @@ impl Metrics {
             + self.other_s
     }
 
+    /// Record `seconds` the application spent blocked in a nonblocking
+    /// `wait`: exposed communication, counted in [`Metrics::comm_s`] (it
+    /// is real critical-path time) and itemised in
+    /// [`Metrics::exposed_comm_s`].
+    #[inline]
+    pub fn note_exposed_comm(&mut self, seconds: f64) {
+        self.comm_s += seconds;
+        self.exposed_comm_s += seconds;
+    }
+
+    /// Record `seconds` spent pulling nonblocking progress inside a
+    /// `test()` poll: hidden communication. Tracked separately and NOT
+    /// added to any phase — this wall-clock belongs to the caller's
+    /// compute, which overlapped it.
+    #[inline]
+    pub fn note_hidden_comm(&mut self, seconds: f64) {
+        self.hidden_comm_s += seconds;
+    }
+
     /// Fold another rank's metrics in (taking per-phase sums; callers that
     /// want the critical path take maxima instead).
     pub fn merge(&mut self, o: &Metrics) {
@@ -96,6 +124,8 @@ impl Metrics {
         self.bytes_sent += o.bytes_sent;
         self.bytes_recv += o.bytes_recv;
         self.raw_bytes += o.raw_bytes;
+        self.exposed_comm_s += o.exposed_comm_s;
+        self.hidden_comm_s += o.hidden_comm_s;
     }
 
     /// Percentage breakdown in the paper's Table-7 column order
@@ -159,6 +189,24 @@ mod tests {
         let mut o = Metrics::default();
         o.merge(&m);
         assert_eq!(o.decompress_reduce_s, 0.25);
+    }
+
+    #[test]
+    fn exposed_and_hidden_comm_accounting() {
+        let mut m = Metrics::default();
+        m.note_exposed_comm(0.5);
+        m.note_hidden_comm(2.0);
+        // Exposed time is real critical-path communication…
+        assert_eq!(m.comm_s, 0.5);
+        assert_eq!(m.exposed_comm_s, 0.5);
+        assert_eq!(m.total_s(), 0.5);
+        // …hidden time is informational only: overlapped with the
+        // caller's compute, never double-counted into the total.
+        assert_eq!(m.hidden_comm_s, 2.0);
+        let mut o = Metrics::default();
+        o.merge(&m);
+        assert_eq!(o.exposed_comm_s, 0.5);
+        assert_eq!(o.hidden_comm_s, 2.0);
     }
 
     #[test]

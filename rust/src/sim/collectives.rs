@@ -191,6 +191,61 @@ pub fn sim_allreduce(p: &SimParams, cm: &CostModel) -> SimReport {
     SimReport::from_ranks(per_rank, b)
 }
 
+/// Result of [`sim_allreduce_overlap`]: the bucketed nonblocking
+/// allreduce overlapped with application compute, against the blocking
+/// single-bucket baseline on the same inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapSim {
+    /// Critical-path seconds of the overlapped step
+    /// (`compute + exposed`).
+    pub total_s: f64,
+    /// Collective time NOT hidden behind compute — what the application
+    /// blocks on in `wait()`.
+    pub exposed_comm_s: f64,
+    /// Collective time hidden behind compute (driven by `test()` polls).
+    pub hidden_comm_s: f64,
+    /// The blocking baseline's step time (`compute + full collective`).
+    pub blocking_total_s: f64,
+    /// The blocking baseline's collective time — all of it exposed.
+    pub blocking_comm_s: f64,
+}
+
+/// Bucketed nonblocking allreduce overlapped with `compute_s` seconds of
+/// application work (the DDP backward pass), mirroring the real
+/// `iallreduce` path in [`crate::apps::ddp`]: the gradient stream is cut
+/// into `buckets` equal buckets, bucket `i` becomes ready (launches) at
+/// `(i+1)/B · compute_s`, and in-flight collectives progress whenever the
+/// link is free. Per-bucket collective cost is the blocking critical path
+/// split `B` ways plus one extra α (smaller messages pay latency per
+/// bucket — the overlap-granularity tax). The link serialises buckets:
+/// a bucket starts when it is ready AND the link has drained its
+/// predecessors. Whatever drains past the end of compute is exposed.
+pub fn sim_allreduce_overlap(
+    p: &SimParams,
+    cm: &CostModel,
+    compute_s: f64,
+    buckets: usize,
+) -> OverlapSim {
+    let blocking = sim_allreduce(p, cm);
+    let b = buckets.max(1);
+    let per = blocking.makespan_s / b as f64 + cm.alpha_s;
+    let comm_total = per * b as f64;
+    let mut link_free = 0.0f64;
+    for i in 0..b {
+        let launch = (i as f64 + 1.0) / b as f64 * compute_s;
+        let start = launch.max(link_free);
+        link_free = start + per;
+    }
+    let exposed = (link_free - compute_s).max(0.0);
+    OverlapSim {
+        total_s: compute_s + exposed,
+        exposed_comm_s: exposed,
+        hidden_comm_s: comm_total - exposed,
+        blocking_total_s: compute_s + blocking.makespan_s,
+        blocking_comm_s: blocking.makespan_s,
+    }
+}
+
 /// Hierarchical two-level allreduce ([`Algo::Hier`]) over
 /// `p.n / ranks_per_node` nodes of `ranks_per_node` ranks: intra-node
 /// raw star-reduce onto the leader (fast tier), the flat ZCCL allreduce
@@ -486,6 +541,56 @@ mod tests {
                 z.makespan_s,
                 mpi.makespan_s
             );
+        }
+    }
+
+    #[test]
+    fn overlap_exposed_comm_shrinks_with_compute() {
+        // More backward-pass compute to hide behind -> less exposed
+        // communication, down to the last bucket's cost (which can never
+        // be hidden: it only becomes ready when compute ends).
+        let cm = CostModel::paper_broadwell();
+        let params = p(Algo::Zccl, 16, 100.0, 10.0, false);
+        let blocking = sim_allreduce(&params, &cm).makespan_s;
+        let mut prev = f64::INFINITY;
+        for k in 0..8 {
+            let compute_s = blocking * k as f64 / 2.0;
+            let o = sim_allreduce_overlap(&params, &cm, compute_s, 8);
+            assert!(
+                o.exposed_comm_s <= prev + 1e-12,
+                "exposed must be non-increasing in compute ({} after {prev})",
+                o.exposed_comm_s
+            );
+            assert!(o.total_s <= o.blocking_total_s + 1e-12, "overlap can never lose");
+            prev = o.exposed_comm_s;
+        }
+        // With zero compute nothing can hide; with ample compute only the
+        // final bucket is exposed.
+        let none = sim_allreduce_overlap(&params, &cm, 0.0, 8);
+        assert!(none.hidden_comm_s < 1e-12);
+        let ample = sim_allreduce_overlap(&params, &cm, blocking * 10.0, 8);
+        assert!(ample.exposed_comm_s < blocking / 4.0, "most comm should hide");
+    }
+
+    #[test]
+    fn overlap_accounting_conserves_comm() {
+        // hidden + exposed must equal the nonblocking schedule's total
+        // collective work (blocking critical path + per-bucket alpha tax).
+        let cm = CostModel::paper_broadwell();
+        let params = p(Algo::Zccl, 32, 300.0, 10.0, false);
+        let blocking = sim_allreduce(&params, &cm).makespan_s;
+        for buckets in [1usize, 3, 8] {
+            let nb_total = blocking + buckets as f64 * cm.alpha_s;
+            for compute_s in [0.0, blocking * 0.5, blocking * 3.0] {
+                let o = sim_allreduce_overlap(&params, &cm, compute_s, buckets);
+                let sum = o.hidden_comm_s + o.exposed_comm_s;
+                assert!(
+                    (sum - nb_total).abs() < 1e-9,
+                    "buckets={buckets}: {sum} vs {nb_total}"
+                );
+                assert!(o.hidden_comm_s >= 0.0 && o.exposed_comm_s >= 0.0);
+                assert!((o.blocking_comm_s - blocking).abs() < 1e-12);
+            }
         }
     }
 

@@ -320,6 +320,25 @@ impl Transport for MemTransport {
         }
         Ok(false)
     }
+
+    fn progress(&mut self) -> Result<()> {
+        // Drain every peer's channel into the unmatched store. Unlike
+        // `pump`, a disconnected peer is NOT an error here: progress is
+        // called opportunistically from compute hooks, and a peer may
+        // have legitimately finished its run already — any message it
+        // did send was buffered by the channel before the disconnect.
+        for src in 0..self.size {
+            loop {
+                match self.rx[src].try_recv() {
+                    Ok((t, payload)) => {
+                        self.unmatched.entry((src, t)).or_default().push_back(payload);
+                    }
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -317,6 +317,19 @@ pub trait Transport: Send {
     /// the progress engine the PIPE compressor hooks into.
     fn try_complete(&mut self, h: &mut RecvHandle) -> Result<bool>;
 
+    /// Opportunistically advance transport-internal progress without a
+    /// specific handle: drain arrived packets into the matching store so
+    /// later `try_complete` calls find them already buffered. Called from
+    /// compression/fold progress hooks (§3.5.2) when no receive of the
+    /// *current* operation is outstanding — e.g. a tree root compressing
+    /// its up-link frame while children of a *concurrent* request are
+    /// still sending. The default is a no-op; transports with an internal
+    /// arrival queue override it. Must tolerate peers that already
+    /// finished and disconnected.
+    fn progress(&mut self) -> Result<()> {
+        Ok(())
+    }
+
     /// Pool-aware nonblocking completion: poll the receive and, on
     /// completion, deliver the payload into `buf` (by swap on pooled
     /// transports, by copy otherwise). Once delivered, further polls
@@ -447,6 +460,9 @@ impl Transport for GroupTransport<'_> {
     }
     fn try_complete(&mut self, h: &mut RecvHandle) -> Result<bool> {
         self.inner.try_complete(h)
+    }
+    fn progress(&mut self) -> Result<()> {
+        self.inner.progress()
     }
 }
 

@@ -1,6 +1,8 @@
 //! Failure injection and robustness: corrupt/truncated frames must fail
-//! with errors (never panic, never return wrong-length data), and the
-//! codecs must round-trip adversarial inputs.
+//! with errors (never panic, never return wrong-length data), the codecs
+//! must round-trip adversarial inputs, and adversarial *timing* (delayed
+//! senders, straggler ranks) must leave the nonblocking collectives
+//! bit-identical to their blocking twins.
 
 use zccl::compress::{self, Compressor, CompressorKind, ErrorBound};
 use zccl::data::rng::Rng;
@@ -106,6 +108,94 @@ fn codec_dispatch_and_forgery() {
     // Unknown codec id errors.
     forged[5] = 0x7F;
     assert!(compress::decompress(&forged).is_err());
+}
+
+/// Deterministic per-rank input for the nonblocking timing tests.
+fn rank_input(rank: usize) -> Vec<f32> {
+    (0..5000).map(|i| ((i + rank * 1013) as f32 * 0.001).sin()).collect()
+}
+
+/// Delayed sender: one rank sleeps before even *starting* its request,
+/// so every other rank's receives find nothing and their state machines
+/// must yield (not block) across many `test()` polls. Once the sleeper
+/// joins, the result must be bit-identical to the blocking collective on
+/// the same inputs — timing can rearrange waiting, never data.
+#[test]
+fn nonblocking_delayed_sender_matches_blocking_bitwise() {
+    use zccl::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
+    let n = 4;
+    for mode in [Mode::plain(), Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3))] {
+        let blocking = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let x = rank_input(ctx.rank());
+            ctx.allreduce(&x, ReduceOp::Sum).unwrap()
+        });
+        let nonblocking = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let x = rank_input(ctx.rank());
+            if ctx.rank() == 1 {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+            }
+            let req = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+            while !ctx.test(&req).unwrap() {
+                std::thread::yield_now();
+            }
+            ctx.wait(req).unwrap().values
+        });
+        for (rank, (b, nb)) in blocking.iter().zip(&nonblocking).enumerate() {
+            assert_eq!(b.len(), nb.len());
+            for (i, (x, y)) in b.iter().zip(nb).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "mode {:?} rank {rank} idx {i}: {x} vs {y}",
+                    mode.algo
+                );
+            }
+        }
+    }
+}
+
+/// Straggler rank: one rank drives progress only every few milliseconds
+/// while the others poll hot. The ring stalls on the straggler each
+/// round (its sends and folds gate its neighbours), but completion and
+/// bit-identity with the blocking schedule must be unaffected.
+#[test]
+fn nonblocking_straggler_rank_matches_blocking_bitwise() {
+    use zccl::collectives::{run_ranks, CollCtx, Mode, ReduceOp};
+    let n = 4;
+    for mode in [Mode::plain(), Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3))] {
+        let blocking = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let x = rank_input(ctx.rank());
+            ctx.allreduce(&x, ReduceOp::Sum).unwrap()
+        });
+        let nonblocking = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let x = rank_input(ctx.rank());
+            let req = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+            let lazy = ctx.rank() == 2;
+            while !ctx.test(&req).unwrap() {
+                if lazy {
+                    std::thread::sleep(std::time::Duration::from_millis(3));
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+            ctx.wait(req).unwrap().values
+        });
+        for (rank, (b, nb)) in blocking.iter().zip(&nonblocking).enumerate() {
+            assert_eq!(b.len(), nb.len());
+            for (i, (x, y)) in b.iter().zip(nb).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "mode {:?} rank {rank} idx {i}: {x} vs {y}",
+                    mode.algo
+                );
+            }
+        }
+    }
 }
 
 /// Sending a frame through a collective where one rank's data is

@@ -1,0 +1,284 @@
+//! Property tests for the nonblocking (`icollective`) API.
+//!
+//! The contract under test: every wired collective's nonblocking result
+//! is **bit-identical** to its blocking twin across rank counts, shapes
+//! (including payloads smaller than the communicator) and codecs — the
+//! state machines perform the same data operations in the same order as
+//! the blocking schedules, only the waiting is rearranged. On top of
+//! that: concurrent requests on one context must never cross-match tags,
+//! and warm requests must be allocation-free per the pool counters.
+
+use zccl::collectives::{run_ranks, run_ranks_on, CollCtx, Mode, ReduceOp};
+use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::data::fields::{Field, FieldKind};
+use zccl::topology::Topology;
+
+fn rank_field(rank: usize, len: usize, salt: u64) -> Vec<f32> {
+    Field::generate(FieldKind::Rtm, len, salt + rank as u64).values
+}
+
+fn modes() -> Vec<Mode> {
+    let eb = ErrorBound::Abs(1e-3);
+    vec![
+        Mode::plain(),
+        Mode::cprp2p(CompressorKind::FzLight, eb),
+        Mode::ccoll(eb),
+        Mode::zccl(CompressorKind::FzLight, eb),
+        Mode::zccl(CompressorKind::Szx, eb),
+    ]
+}
+
+fn assert_bits(tag: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag} idx {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn iallreduce_bitwise_matches_blocking() {
+    for n in [2usize, 5] {
+        // len 3 < n exercises empty ring chunks.
+        for len in [3usize, 1000, 4097] {
+            for mode in modes() {
+                let blocking = run_ranks(n, move |c| {
+                    let mut ctx = CollCtx::over(c, mode);
+                    let x = rank_field(ctx.rank(), len, 7);
+                    ctx.allreduce(&x, ReduceOp::Sum).unwrap()
+                });
+                let nonblocking = run_ranks(n, move |c| {
+                    let mut ctx = CollCtx::over(c, mode);
+                    let x = rank_field(ctx.rank(), len, 7);
+                    let req = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+                    ctx.wait(req).unwrap().values
+                });
+                for (r, (b, nb)) in blocking.iter().zip(&nonblocking).enumerate() {
+                    let tag = format!("allreduce {:?} n={n} len={len} rank={r}", mode.algo);
+                    assert_bits(&tag, b, nb);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ireduce_scatter_bitwise_matches_blocking() {
+    let eb = ErrorBound::Abs(1e-3);
+    for n in [3usize, 4] {
+        for len in [5usize, 2048] {
+            for mode in [
+                Mode::plain(),
+                Mode::zccl(CompressorKind::FzLight, eb),
+                Mode::zccl(CompressorKind::Szx, eb),
+            ] {
+                let blocking = run_ranks(n, move |c| {
+                    let mut ctx = CollCtx::over(c, mode);
+                    let x = rank_field(ctx.rank(), len, 31);
+                    ctx.reduce_scatter(&x, ReduceOp::Sum).unwrap()
+                });
+                let nonblocking = run_ranks(n, move |c| {
+                    let mut ctx = CollCtx::over(c, mode);
+                    let x = rank_field(ctx.rank(), len, 31);
+                    let req = ctx.ireduce_scatter(&x, ReduceOp::Sum).unwrap();
+                    let out = ctx.wait(req).unwrap();
+                    (out.range.expect("reduce-scatter returns a range"), out.values)
+                });
+                for (r, ((brange, b), (nbrange, nb))) in
+                    blocking.iter().zip(&nonblocking).enumerate()
+                {
+                    let tag = format!("reduce_scatter {:?} n={n} len={len} rank={r}", mode.algo);
+                    assert_eq!(brange, nbrange, "{tag}: owned range");
+                    assert_bits(&tag, b, nb);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn iallgather_bitwise_matches_blocking_uneven_chunks() {
+    let eb = ErrorBound::Abs(1e-3);
+    for n in [2usize, 5] {
+        for mode in [
+            Mode::plain(),
+            Mode::cprp2p(CompressorKind::FzLight, eb),
+            Mode::zccl(CompressorKind::FzLight, eb),
+        ] {
+            // Every rank contributes a different chunk length.
+            let blocking = run_ranks(n, move |c| {
+                let mut ctx = CollCtx::over(c, mode);
+                let chunk = rank_field(ctx.rank(), 64 + 17 * ctx.rank(), 55);
+                ctx.allgather(&chunk).unwrap()
+            });
+            let nonblocking = run_ranks(n, move |c| {
+                let mut ctx = CollCtx::over(c, mode);
+                let chunk = rank_field(ctx.rank(), 64 + 17 * ctx.rank(), 55);
+                let req = ctx.iallgather(&chunk).unwrap();
+                ctx.wait(req).unwrap().values
+            });
+            for (r, (b, nb)) in blocking.iter().zip(&nonblocking).enumerate() {
+                let tag = format!("allgather {:?} n={n} rank={r}", mode.algo);
+                assert_bits(&tag, b, nb);
+            }
+        }
+    }
+}
+
+#[test]
+fn ibcast_bitwise_matches_blocking() {
+    let eb = ErrorBound::Abs(1e-3);
+    let len = 1000;
+    for n in [2usize, 5] {
+        let root = n - 1;
+        for mode in [
+            Mode::plain(),
+            Mode::cprp2p(CompressorKind::FzLight, eb),
+            Mode::ccoll(eb),
+            Mode::zccl(CompressorKind::FzLight, eb),
+        ] {
+            let blocking = run_ranks(n, move |c| {
+                let mut ctx = CollCtx::over(c, mode);
+                let payload = (ctx.rank() == root).then(|| rank_field(root, len, 91));
+                ctx.bcast(payload.as_deref(), root).unwrap()
+            });
+            let nonblocking = run_ranks(n, move |c| {
+                let mut ctx = CollCtx::over(c, mode);
+                let payload = (ctx.rank() == root).then(|| rank_field(root, len, 91));
+                let req = ctx.ibcast(payload.as_deref(), root).unwrap();
+                ctx.wait(req).unwrap().values
+            });
+            for (r, (b, nb)) in blocking.iter().zip(&nonblocking).enumerate() {
+                let tag = format!("bcast {:?} n={n} rank={r}", mode.algo);
+                assert_bits(&tag, b, nb);
+            }
+        }
+    }
+}
+
+/// Hier allreduce completes through the blocking fallback at start; the
+/// request is done by the first `test()` and bit-identical anyway.
+#[test]
+fn hier_iallreduce_matches_blocking() {
+    let len = 2048;
+    let mode = Mode::hier(CompressorKind::FzLight, ErrorBound::Abs(1e-3));
+    let topo = Topology::blocked(2, 2);
+    let t2 = topo.clone();
+    let (blocking, _) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, mode, t2.clone()).unwrap();
+        let x = rank_field(ctx.rank(), len, 13);
+        ctx.allreduce(&x, ReduceOp::Sum).unwrap()
+    });
+    let t3 = topo.clone();
+    let (nonblocking, _) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, mode, t3.clone()).unwrap();
+        let x = rank_field(ctx.rank(), len, 13);
+        let req = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+        assert!(ctx.test(&req).unwrap(), "hier fallback completes eagerly");
+        ctx.wait(req).unwrap().values
+    });
+    for (r, (b, nb)) in blocking.iter().zip(&nonblocking).enumerate() {
+        assert_bits(&format!("hier allreduce rank={r}"), b, nb);
+    }
+}
+
+/// Two in-flight requests on one context: per-request tag-namespace
+/// slices mean the ring traffic of the allreduce and the allgather can
+/// never cross-match, and completion order is free — here the
+/// later-started request is collected first.
+#[test]
+fn concurrent_requests_complete_out_of_order() {
+    let n = 4;
+    let len = 2048;
+    for mode in [Mode::plain(), Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3))] {
+        let blocking = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let x = rank_field(ctx.rank(), len, 7);
+            let g = rank_field(ctx.rank(), len / n, 101);
+            (ctx.allreduce(&x, ReduceOp::Sum).unwrap(), ctx.allgather(&g).unwrap())
+        });
+        let nonblocking = run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let x = rank_field(ctx.rank(), len, 7);
+            let g = rank_field(ctx.rank(), len / n, 101);
+            let r1 = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+            let r2 = ctx.iallgather(&g).unwrap();
+            assert_eq!(ctx.pending_requests(), 2);
+            // Reverse completion order: waiting on r2 drives r1 too.
+            let ag = ctx.wait(r2).unwrap().values;
+            assert_eq!(ctx.pending_requests(), 1);
+            let ar = ctx.wait(r1).unwrap().values;
+            assert_eq!(ctx.pending_requests(), 0);
+            (ar, ag)
+        });
+        for (r, ((bar, bag), (nar, nag))) in blocking.iter().zip(&nonblocking).enumerate() {
+            assert_bits(&format!("concurrent allreduce {:?} rank={r}", mode.algo), bar, nar);
+            assert_bits(&format!("concurrent allgather {:?} rank={r}", mode.algo), bag, nag);
+        }
+    }
+}
+
+/// Warm requests are allocation-free: after the pools are primed, more
+/// launch/wait_into cycles create no new byte/f32 buffers and lease no
+/// new packets — the whole request lifecycle runs on recycled memory.
+#[test]
+fn warm_requests_are_allocation_free() {
+    let n = 4;
+    let len = 4096;
+    for mode in [Mode::plain(), Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3))] {
+        run_ranks(n, move |c| {
+            let mut ctx = CollCtx::over(c, mode);
+            let x = rank_field(ctx.rank(), len, 3);
+            let mut out = Vec::new();
+            for _ in 0..2 {
+                let req = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+                ctx.wait_into(req, &mut out).unwrap();
+            }
+            let pool = ctx.pool_stats();
+            let packets = ctx.packet_stats();
+            for _ in 0..3 {
+                let req = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+                ctx.wait_into(req, &mut out).unwrap();
+            }
+            let pool2 = ctx.pool_stats();
+            let packets2 = ctx.packet_stats();
+            let tag = format!("{:?} rank {}", mode.algo, ctx.rank());
+            assert_eq!(
+                pool.byte_buffers_created, pool2.byte_buffers_created,
+                "{tag}: warm requests must not create byte buffers"
+            );
+            assert_eq!(
+                pool.f32_buffers_created, pool2.f32_buffers_created,
+                "{tag}: warm requests must not create f32 buffers"
+            );
+            assert_eq!(
+                packets.allocated, packets2.allocated,
+                "{tag}: warm requests must not allocate packets"
+            );
+            assert!(pool2.reuses > pool.reuses, "{tag}: warm requests must reuse the pool");
+        });
+    }
+}
+
+/// Degenerate single-rank requests complete at start (no communication),
+/// and invalid `ibcast` arguments fail before anything is parked.
+#[test]
+fn single_rank_requests_and_invalid_args() {
+    run_ranks(1, move |c| {
+        let mut ctx = CollCtx::over(c, Mode::plain());
+        let x = vec![2.0f32; 17];
+        let req = ctx.iallreduce(&x, ReduceOp::Sum).unwrap();
+        assert!(ctx.test(&req).unwrap());
+        let ar = ctx.wait(req).unwrap().values;
+        assert_bits("single-rank allreduce", &ar, &x);
+        let req = ctx.ireduce_scatter(&x, ReduceOp::Sum).unwrap();
+        let rs = ctx.wait(req).unwrap();
+        assert_eq!(rs.range, Some(0..17));
+        assert_bits("single-rank reduce_scatter", &rs.values, &x);
+        let req = ctx.ibcast(Some(&x), 0).unwrap();
+        let bc = ctx.wait(req).unwrap().values;
+        assert_bits("single-rank bcast", &bc, &x);
+        assert!(ctx.ibcast(Some(&x), 5).is_err(), "out-of-range root must fail");
+        assert!(ctx.ibcast(None, 0).is_err(), "root without data must fail");
+        assert_eq!(ctx.pending_requests(), 0);
+    });
+}
