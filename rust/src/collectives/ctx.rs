@@ -20,7 +20,7 @@
 //! compatibility shims that build a transient context per call.
 
 use std::ops::Range;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::nonblocking::{
     AllgatherSm, AllreduceSm, BcastSm, CollOutput, CollRequest, Machine, ReduceScatterSm,
@@ -30,8 +30,8 @@ use super::{allgather, allreduce, alltoall, bcast, gather, reduce, reduce_scatte
 use super::{Algo, Communicator, Mode, ReduceOp};
 use crate::compress::{Compressor, CompressorKind, PipeFzLight};
 use crate::coordinator::Metrics;
-use crate::transport::{Backoff, Transport};
-use crate::Result;
+use crate::transport::{Backoff, Transport, WireStats};
+use crate::{Error, Result};
 
 /// Counters exposing the scratch pool's behaviour, for regression tests
 /// and capacity planning. All values are cumulative over the pool's life.
@@ -323,17 +323,22 @@ pub struct CollCtx<'c, 'a> {
     metrics: Metrics,
     /// Slab of in-flight nonblocking requests (see [`super::progress`]).
     engine: ProgressEngine,
+    /// Transport wire-counter snapshot at the last [`CollCtx::observe`];
+    /// the delta since then is folded into [`Metrics`].
+    last_wire: WireStats,
 }
 
 impl<'c, 'a> CollCtx<'c, 'a> {
     /// Wrap an existing communicator (keeps its collective-tag sequence,
     /// so contexts and free functions can interleave on one communicator).
     pub fn over(comm: &'c mut Communicator<'a>, mode: Mode) -> Self {
+        let last_wire = comm.transport().wire_stats();
         CollCtx {
             comm,
             state: CollState::new(mode),
             metrics: Metrics::default(),
             engine: ProgressEngine::default(),
+            last_wire,
         }
     }
 
@@ -425,6 +430,51 @@ impl<'c, 'a> CollCtx<'c, 'a> {
         self.comm.barrier()
     }
 
+    /// Arm every blocking collective and nonblocking `wait`/`test` on
+    /// this context with a deadline (`None` disarms). Forwards to
+    /// [`Transport::set_timeout`]; on expiry calls return
+    /// [`crate::Error::Timeout`] naming the `(source rank, tag)` receives
+    /// that were still pending.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) {
+        self.comm.transport().set_timeout(timeout);
+    }
+
+    /// The currently armed deadline, if any.
+    pub fn timeout(&mut self) -> Option<Duration> {
+        self.comm.transport().timeout()
+    }
+
+    /// Classify a finished call's result and keep the failure counters
+    /// honest: fold the transport's wire-counter deltas into [`Metrics`],
+    /// count timeouts, and — for any communication failure — raise the
+    /// abort fence so peers blocked on this rank fail fast instead of
+    /// riding out their own timeouts. Local argument errors
+    /// ([`crate::Error::Invalid`]) are raised before any traffic and do
+    /// not poison the fabric.
+    fn observe<T>(&mut self, r: Result<T>) -> Result<T> {
+        let now = self.comm.transport().wire_stats();
+        self.metrics.corrupt_frames += now.corrupt_frames - self.last_wire.corrupt_frames;
+        self.metrics.dup_frames_dropped +=
+            now.dup_frames_dropped - self.last_wire.dup_frames_dropped;
+        self.metrics.aborts_observed += now.aborts_seen - self.last_wire.aborts_seen;
+        self.last_wire = now;
+        if let Err(e) = &r {
+            match e {
+                Error::Timeout { .. } => {
+                    self.metrics.timeouts += 1;
+                    let me = self.comm.rank();
+                    self.comm.transport().send_abort(&format!("rank {me}: {e}"));
+                }
+                Error::Invalid(_) => {}
+                _ => {
+                    let me = self.comm.rank();
+                    self.comm.transport().send_abort(&format!("rank {me}: {e}"));
+                }
+            }
+        }
+        r
+    }
+
     /// Accumulated per-phase timings across every call on this context.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
@@ -481,7 +531,15 @@ impl<'c, 'a> CollCtx<'c, 'a> {
         op: ReduceOp,
         out: &mut Vec<f32>,
     ) -> Result<()> {
-        allreduce::allreduce_with(self.comm, &mut self.state, input, op, &mut self.metrics, out)
+        let r = allreduce::allreduce_with(
+            self.comm,
+            &mut self.state,
+            input,
+            op,
+            &mut self.metrics,
+            out,
+        );
+        self.observe(r)
     }
 
     /// Reduce + scatter: rank `r` returns `(range, values)` for the chunk
@@ -492,14 +550,15 @@ impl<'c, 'a> CollCtx<'c, 'a> {
         op: ReduceOp,
     ) -> Result<(Range<usize>, Vec<f32>)> {
         let mut owned = Vec::new();
-        let range = reduce_scatter::reduce_scatter_with(
+        let r = reduce_scatter::reduce_scatter_with(
             self.comm,
             &mut self.state,
             input,
             op,
             &mut self.metrics,
             &mut owned,
-        )?;
+        );
+        let range = self.observe(r)?;
         Ok((range, owned))
     }
 
@@ -513,36 +572,42 @@ impl<'c, 'a> CollCtx<'c, 'a> {
 
     /// [`CollCtx::allgather`] into a caller-owned destination.
     pub fn allgather_into(&mut self, my_chunk: &[f32], out: &mut Vec<f32>) -> Result<()> {
-        allgather::allgather_chunks_with(
+        let r = allgather::allgather_chunks_with(
             self.comm,
             &mut self.state,
             my_chunk,
             0,
             &mut self.metrics,
             out,
-        )
+        );
+        self.observe(r)
     }
 
     /// Pairwise exchange: chunk `j` of `input` goes to rank `j`.
     pub fn alltoall(&mut self, input: &[f32]) -> Result<Vec<f32>> {
         let mut out = Vec::new();
-        alltoall::alltoall_with(self.comm, &mut self.state, input, &mut self.metrics, &mut out)?;
+        let r =
+            alltoall::alltoall_with(self.comm, &mut self.state, input, &mut self.metrics, &mut out);
+        self.observe(r)?;
         Ok(out)
     }
 
     /// Broadcast `data` (significant at `root`) to every rank.
     pub fn bcast(&mut self, data: Option<&[f32]>, root: usize) -> Result<Vec<f32>> {
-        bcast::bcast_with(self.comm, &mut self.state, data, root, &mut self.metrics)
+        let r = bcast::bcast_with(self.comm, &mut self.state, data, root, &mut self.metrics);
+        self.observe(r)
     }
 
     /// Scatter `data` (significant at `root`): rank `r` receives chunk `r`.
     pub fn scatter(&mut self, data: Option<&[f32]>, root: usize) -> Result<Vec<f32>> {
-        scatter::scatter_with(self.comm, &mut self.state, data, root, &mut self.metrics)
+        let r = scatter::scatter_with(self.comm, &mut self.state, data, root, &mut self.metrics);
+        self.observe(r)
     }
 
     /// Gather each rank's `my_chunk` to `root` (others return `None`).
     pub fn gather(&mut self, my_chunk: &[f32], root: usize) -> Result<Option<Vec<f32>>> {
-        gather::gather_with(self.comm, &mut self.state, my_chunk, root, &mut self.metrics)
+        let r = gather::gather_with(self.comm, &mut self.state, my_chunk, root, &mut self.metrics);
+        self.observe(r)
     }
 
     /// Reduce `input` elementwise onto `root`.
@@ -552,7 +617,8 @@ impl<'c, 'a> CollCtx<'c, 'a> {
         op: ReduceOp,
         root: usize,
     ) -> Result<Option<Vec<f32>>> {
-        reduce::reduce_with(self.comm, &mut self.state, input, op, root, &mut self.metrics)
+        let r = reduce::reduce_with(self.comm, &mut self.state, input, op, root, &mut self.metrics);
+        self.observe(r)
     }
 
     // -- nonblocking (`icollective`) API ---------------------------------
@@ -720,12 +786,12 @@ impl<'c, 'a> CollCtx<'c, 'a> {
         out: &mut Vec<f32>,
     ) -> Result<Option<Range<usize>>> {
         let t0 = Instant::now();
-        let mut backoff = Backoff::new();
+        let mut backoff = Backoff::until(self.comm.transport().timeout());
         loop {
             self.engine.step_all(self.comm, &mut self.state, &mut self.metrics)?;
             if let Some(res) = self.engine.take(req.slot, req.gen) {
                 self.metrics.note_exposed_comm(t0.elapsed().as_secs_f64());
-                let o = res?;
+                let o = self.observe(res)?;
                 out.clear();
                 out.extend_from_slice(&o.values);
                 let range = o.range;
@@ -733,6 +799,12 @@ impl<'c, 'a> CollCtx<'c, 'a> {
                 return Ok(range);
             }
             backoff.snooze();
+            if backoff.is_yielding() {
+                if let Some(e) = self.wait_failure(&req, &backoff) {
+                    self.metrics.note_exposed_comm(t0.elapsed().as_secs_f64());
+                    return self.observe(Err(e));
+                }
+            }
         }
     }
 
@@ -741,15 +813,35 @@ impl<'c, 'a> CollCtx<'c, 'a> {
     /// [`CollCtx::wait_into`] in iterated loops.
     pub fn wait(&mut self, req: CollRequest) -> Result<CollOutput> {
         let t0 = Instant::now();
-        let mut backoff = Backoff::new();
+        let mut backoff = Backoff::until(self.comm.transport().timeout());
         loop {
             self.engine.step_all(self.comm, &mut self.state, &mut self.metrics)?;
             if let Some(res) = self.engine.take(req.slot, req.gen) {
                 self.metrics.note_exposed_comm(t0.elapsed().as_secs_f64());
-                return res;
+                return self.observe(res);
             }
             backoff.snooze();
+            if backoff.is_yielding() {
+                if let Some(e) = self.wait_failure(&req, &backoff) {
+                    self.metrics.note_exposed_comm(t0.elapsed().as_secs_f64());
+                    return self.observe(Err(e));
+                }
+            }
         }
+    }
+
+    /// Yield-phase failure poll shared by the nonblocking waits: the
+    /// abort fence first (a failed peer beats a timeout to the punch),
+    /// then the deadline — reporting exactly which `(source rank, tag)`
+    /// receives the request was still parked on.
+    fn wait_failure(&mut self, req: &CollRequest, backoff: &Backoff) -> Option<Error> {
+        if let Err(e) = self.comm.transport().check_abort() {
+            return Some(e);
+        }
+        if backoff.expired() {
+            return Some(Error::timeout(self.engine.pending_recvs(req.slot, req.gen)));
+        }
+        None
     }
 
     /// Number of nonblocking requests currently in flight (running or

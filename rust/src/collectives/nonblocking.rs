@@ -106,6 +106,23 @@ impl Machine {
             Machine::Bcast(sm) => sm.step(comm, st, m),
         }
     }
+
+    /// The `(source rank, tag)` receives this operation is parked on —
+    /// what a deadline-expired `wait` reports in
+    /// [`crate::Error::Timeout`]. Each machine yields on at most one
+    /// outstanding receive, so this is its un-arrived slot's origin.
+    pub(crate) fn pending(&self) -> Vec<(usize, u64)> {
+        let slot = match self {
+            Machine::ReduceScatter(sm) => &sm.slot,
+            Machine::Allgather(sm) => &sm.slot,
+            Machine::Allreduce(sm) => match &sm.stage {
+                ArStage::Rs(rs) => &rs.slot,
+                ArStage::Ag(ag) => &ag.slot,
+            },
+            Machine::Bcast(sm) => &sm.slot,
+        };
+        slot.as_ref().and_then(|s| s.pending_origin()).into_iter().collect()
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -54,6 +54,13 @@ impl RecvSlot {
         (&mut self.h, &mut self.buf, &mut self.done)
     }
 
+    /// The `(source rank, tag)` this slot is still waiting on, or `None`
+    /// once the payload has arrived — the unit of [`crate::Error::Timeout`]
+    /// pending reports.
+    pub(crate) fn pending_origin(&self) -> Option<(usize, u64)> {
+        (!self.done).then_some((self.h.from, self.h.tag))
+    }
+
     /// Consume the slot, returning the payload buffer (the receive must
     /// have completed).
     pub(crate) fn into_buf(self) -> Vec<u8> {
@@ -169,5 +176,15 @@ impl ProgressEngine {
     /// Number of requests still in flight (running or uncollected).
     pub(crate) fn in_flight(&self) -> usize {
         self.slots.iter().flatten().count()
+    }
+
+    /// The `(source rank, tag)` receives the request is still waiting on —
+    /// the payload of the [`crate::Error::Timeout`] a deadline-expired
+    /// `wait` reports. Empty for finished, stale or unknown requests.
+    pub(crate) fn pending_recvs(&self, slot: usize, gen: u64) -> Vec<(usize, u64)> {
+        match self.slots.get(slot) {
+            Some(Some(Entry::Running(m))) if self.gens[slot] == gen => m.pending(),
+            _ => Vec::new(),
+        }
     }
 }

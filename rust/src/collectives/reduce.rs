@@ -72,9 +72,15 @@ pub(crate) fn reduce_with(
     for i in 0..handles.len() {
         let (h, rest) = handles[i..].split_first_mut().expect("index in range");
         let t0 = std::time::Instant::now();
-        let mut backoff = crate::transport::Backoff::new();
+        let mut backoff = crate::transport::Backoff::until(comm.t.timeout());
         while !comm.t.try_complete_into(h, &mut msg)? {
             backoff.snooze();
+            if backoff.is_yielding() {
+                comm.t.check_abort()?;
+                if backoff.expired() {
+                    return Err(Error::timeout(vec![(h.from, h.tag)]));
+                }
+            }
         }
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;

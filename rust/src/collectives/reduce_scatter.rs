@@ -30,7 +30,7 @@ use super::{
 };
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{ring, ring_recv_chunk, ring_send_chunk};
-use crate::Result;
+use crate::{Error, Result};
 
 /// Reduce `input` (same length on every rank) elementwise with `op` and
 /// scatter the result: rank `r` returns `(range, values)` where `range`
@@ -203,9 +203,15 @@ fn reduce_scatter_zccl(
         // Pool-aware completion: the payload lands in the leased wire
         // buffer by swap. Bounded spin then yield, so a straggling peer
         // does not pin a core.
-        let mut backoff = crate::transport::Backoff::new();
+        let mut backoff = crate::transport::Backoff::until(comm.t.timeout());
         while !comm.t.try_complete_into(&mut h, &mut got)? {
             backoff.snooze();
+            if backoff.is_yielding() {
+                comm.t.check_abort()?;
+                if backoff.expired() {
+                    return Err(Error::timeout(vec![(h.from, h.tag)]));
+                }
+            }
         }
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());

@@ -9,9 +9,10 @@
 //! in-process runs at small scale.
 
 use std::path::Path;
+use std::time::Duration;
 
 use crate::apps::{image_stacking, visualize};
-use crate::collectives::{run_ranks, run_ranks_on, Algo, CollCtx, Mode, ReduceOp};
+use crate::collectives::{run_ranks, run_ranks_on, Algo, CollCtx, Communicator, Mode, ReduceOp};
 use crate::compress::stats::{error_histogram, quality};
 use crate::compress::{self, bits, Compressor, CompressorKind, ErrorBound, MtCompressor};
 use crate::data::fields::{Field, FieldKind};
@@ -23,6 +24,9 @@ use crate::sim::collectives::{
 };
 use crate::sim::CostModel;
 use crate::topology::Topology;
+use crate::transport::crc32c;
+use crate::transport::fault::{FaultPlan, FaultTransport};
+use crate::transport::memchan::MemFabric;
 use crate::util::bench::{emit_bench_line, measure_for, Table};
 use crate::util::json::Json;
 use crate::Result;
@@ -38,7 +42,7 @@ const BUDGET_S: f64 = 0.08;
 pub const ALL: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "table7", "crosscheck", "hier", "codec",
-    "overlap", "ablation-chunk", "ablation-balance", "ablation-eb",
+    "overlap", "ablation-chunk", "ablation-balance", "ablation-eb", "chaos",
 ];
 
 /// Run one bench (or `all`), printing tables and writing CSVs to
@@ -81,6 +85,11 @@ pub fn run(id: &str, out_dir: &Path, budget: Option<f64>) -> Result<()> {
         "overlap" => {
             let (tables, summary) = overlap_bench(budget.unwrap_or(BUDGET_S));
             emit_bench_line("BENCH_overlap.json", &summary);
+            tables
+        }
+        "chaos" => {
+            let (tables, summary) = chaos_bench(budget.unwrap_or(BUDGET_S));
+            emit_bench_line("BENCH_chaos.json", &summary);
             tables
         }
         "ablation-chunk" => ablation_chunk(),
@@ -915,6 +924,87 @@ pub fn overlap_bench(budget_s: f64) -> (Vec<(String, Table)>, Json) {
         ("hidden_fraction", Json::Num(hidden_fraction)),
     ]);
     (vec![("overlap-allreduce".into(), t)], summary)
+}
+
+/// One dead-peer detection sample: a 4-rank ZCCL allreduce over the
+/// fault-wrapped in-process fabric with rank 1 killed after its second
+/// ring send. Returns the slowest *survivor*'s time-to-error — the
+/// latency between a peer dying mid-collective and every other rank
+/// holding a typed failure.
+fn dead_peer_sample(timeout: Duration) -> f64 {
+    const RANKS: usize = 4;
+    const KILLED: usize = 1;
+    let handles: Vec<_> = MemFabric::endpoints(RANKS)
+        .into_iter()
+        .enumerate()
+        .map(|(r, t)| {
+            let plan = if r == KILLED {
+                FaultPlan::new(7).kill_after(2)
+            } else {
+                FaultPlan::new(7 ^ r as u64)
+            };
+            std::thread::spawn(move || {
+                let mut ft = FaultTransport::new(t, plan);
+                let mut comm = Communicator::new(&mut ft);
+                let mode = Mode::zccl(CompressorKind::FzLight, ErrorBound::Abs(1e-3));
+                let mut ctx = CollCtx::over(&mut comm, mode);
+                ctx.set_timeout(Some(timeout));
+                let x: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.01).sin()).collect();
+                let t0 = std::time::Instant::now();
+                let failed = ctx.allreduce(&x, ReduceOp::Sum).is_err();
+                (failed, t0.elapsed().as_secs_f64())
+            })
+        })
+        .collect();
+    let out: Vec<(bool, f64)> =
+        handles.into_iter().map(|h| h.join().expect("bench rank panicked")).collect();
+    out.iter()
+        .enumerate()
+        .filter(|&(r, &(failed, _))| r != KILLED && failed)
+        .map(|(_, &(_, s))| s)
+        .fold(0.0, f64::max)
+}
+
+/// `zccl bench chaos` — failure-path costs. Two numbers, emitted as the
+/// single-line `BENCH_chaos.json`: how fast a dead peer is detected (the
+/// slowest survivor's time-to-error in a fault-injected 4-rank ZCCL
+/// allreduce, to be read against the armed deadline), and what the wire
+/// integrity layer costs (CRC32C ns/element over a 4 MiB buffer, with a
+/// plain memcpy of the same bytes as the unchecked baseline). Exposed as
+/// a library function so a tier-1 test can run it on a tiny budget and
+/// assert the JSON contract.
+pub fn chaos_bench(budget_s: f64) -> (Vec<(String, Table)>, Json) {
+    // Dead-peer detection: best of three samples (scheduler noise only
+    // ever inflates the number).
+    let timeout = Duration::from_millis(150);
+    let detect_s = (0..3).map(|_| dead_peer_sample(timeout)).fold(f64::INFINITY, f64::min);
+
+    // Wire-integrity overhead: CRC32C vs memcpy over the same bytes.
+    let values: usize = 1 << 20;
+    let bytes = values * 4;
+    let mut rng = Rng::new(11);
+    let buf: Vec<u8> = (0..bytes).map(|_| rng.next_u64() as u8).collect();
+    let crc = measure_for(budget_s, || std::hint::black_box(crc32c(&[&buf])));
+    let mut dst = vec![0u8; bytes];
+    let cpy = measure_for(budget_s, || dst.copy_from_slice(&buf));
+    let crc_ns = crc.mean_s / values as f64 * 1e9;
+    let cpy_ns = cpy.mean_s / values as f64 * 1e9;
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["deadline ms".into(), format!("{:.0}", timeout.as_secs_f64() * 1e3)]);
+    t.row(vec!["dead-peer detect ms".into(), format!("{:.1}", detect_s * 1e3)]);
+    t.row(vec!["crc32c GB/s".into(), format!("{:.2}", crc.gbps(bytes))]);
+    t.row(vec!["crc32c ns/element".into(), format!("{crc_ns:.3}")]);
+    t.row(vec!["memcpy ns/element (unchecked)".into(), format!("{cpy_ns:.3}")]);
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("chaos".into())),
+        ("deadline_ms", Json::Num(timeout.as_secs_f64() * 1e3)),
+        ("dead_peer_detect_ms", Json::Num(detect_s * 1e3)),
+        ("crc_gbps", Json::Num(crc.gbps(bytes))),
+        ("crc_ns_per_element", Json::Num(crc_ns)),
+        ("memcpy_ns_per_element", Json::Num(cpy_ns)),
+    ]);
+    (vec![("chaos-failure-paths".into(), t)], summary)
 }
 
 /// Ablation: PIPE-fZ-light chunk size (paper fixes 5120).

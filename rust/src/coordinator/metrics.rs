@@ -58,6 +58,16 @@ pub struct Metrics {
     /// compute. Informational: overlapped with compute by construction,
     /// so NOT part of [`Metrics::total_s`].
     pub hidden_comm_s: f64,
+    /// Collective calls (or waits) that expired their deadline
+    /// ([`crate::Error::Timeout`]).
+    pub timeouts: u64,
+    /// Wire frames whose CRC32C failed verification (observed via
+    /// [`crate::transport::Transport::wire_stats`]).
+    pub corrupt_frames: u64,
+    /// Wire frames dropped idempotently as sequence-number duplicates.
+    pub dup_frames_dropped: u64,
+    /// Abort-fence poison messages observed from peers.
+    pub aborts_observed: u64,
 }
 
 impl Metrics {
@@ -126,6 +136,10 @@ impl Metrics {
         self.raw_bytes += o.raw_bytes;
         self.exposed_comm_s += o.exposed_comm_s;
         self.hidden_comm_s += o.hidden_comm_s;
+        self.timeouts += o.timeouts;
+        self.corrupt_frames += o.corrupt_frames;
+        self.dup_frames_dropped += o.dup_frames_dropped;
+        self.aborts_observed += o.aborts_observed;
     }
 
     /// Percentage breakdown in the paper's Table-7 column order
@@ -216,5 +230,21 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.compress_s, 3.0);
         assert_eq!(a.bytes_sent, 15);
+    }
+
+    #[test]
+    fn failure_counters_merge() {
+        let mut a = Metrics { timeouts: 1, corrupt_frames: 2, ..Default::default() };
+        let b = Metrics {
+            timeouts: 3,
+            dup_frames_dropped: 4,
+            aborts_observed: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.timeouts, 4);
+        assert_eq!(a.corrupt_frames, 2);
+        assert_eq!(a.dup_frames_dropped, 4);
+        assert_eq!(a.aborts_observed, 5);
     }
 }

@@ -18,6 +18,13 @@ pub enum Error {
     Runtime(String),
     /// Underlying I/O error.
     Io(std::io::Error),
+    /// A deadline expired while receives were still outstanding. `pending`
+    /// lists exactly which `(source rank, tag)` matches never arrived, so
+    /// a hung collective names the peers it was waiting on.
+    Timeout {
+        /// The `(source rank, tag)` receives still pending at expiry.
+        pending: Vec<(usize, u64)>,
+    },
 }
 
 impl fmt::Display for Error {
@@ -28,6 +35,17 @@ impl fmt::Display for Error {
             Error::Transport(m) => write!(f, "transport: {m}"),
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
+            Error::Timeout { pending } => {
+                write!(f, "timeout: {} receive(s) still pending", pending.len())?;
+                for (i, (rank, tag)) in pending.iter().take(8).enumerate() {
+                    let sep = if i == 0 { ": " } else { ", " };
+                    write!(f, "{sep}(rank {rank}, tag {tag})")?;
+                }
+                if pending.len() > 8 {
+                    write!(f, ", ... ({} more)", pending.len() - 8)?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -56,5 +74,16 @@ impl Error {
     /// Shorthand constructor for [`Error::Runtime`].
     pub fn runtime(m: impl Into<String>) -> Self {
         Error::Runtime(m.into())
+    }
+    /// Shorthand constructor for [`Error::Timeout`].
+    pub fn timeout(pending: Vec<(usize, u64)>) -> Self {
+        Error::Timeout { pending }
+    }
+    /// Whether retrying the operation (with the same peers) can succeed.
+    /// Only [`Error::Timeout`] is recoverable: the peers may merely be
+    /// slow. Corruption, transport failure, and invalid arguments are
+    /// permanent for this communicator.
+    pub fn is_recoverable(&self) -> bool {
+        matches!(self, Error::Timeout { .. })
     }
 }

@@ -85,6 +85,27 @@
 //!     for v in r { assert!((v - 6.0).abs() < 5.0 * 1e-4); }
 //! }
 //! ```
+//!
+//! ## Failure semantics
+//!
+//! The transport is chaos-hardened (the full contract lives in the
+//! [`transport`] module docs). Every frame carries a CRC32C checksum and
+//! a per-(peer, tag) sequence number, verified on receive *before* any
+//! byte reaches a codec: a flipped bit surfaces as [`Error::Corrupt`]
+//! naming the sending rank, a replayed frame is dropped idempotently,
+//! and a lost frame shows up as a sequence gap ([`Error::Transport`]) or
+//! a timeout. Deadlines are per-context —
+//! [`collectives::CollCtx::set_timeout`] arms every blocking collective
+//! and nonblocking `wait()` (the TCP transport defaults to 60 s, the
+//! in-process fabric to none) — and a stalled operation converts into
+//! [`Error::Timeout`] listing the `(peer, tag)` receives still pending.
+//! A rank that fails mid-collective broadcasts a poison frame on a
+//! reserved tag so its peers fail fast with [`Error::Transport`] instead
+//! of waiting out their own deadlines; [`Error::is_recoverable`]
+//! separates deadline expiries (retryable) from integrity and abort
+//! failures (not). Deterministic fault injection for tests lives in
+//! [`transport::fault`], and `zccl bench chaos` prices the failure
+//! paths (dead-peer detection latency, checksum overhead per element).
 
 pub mod apps;
 pub mod collectives;

@@ -34,8 +34,10 @@ use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::Duration;
 
-use super::{PacketPool, RecvHandle, Transport};
+use super::{Backoff, PacketPool, RecvHandle, SeqCheck, Transport, WireStats};
+use super::{ABORT_TAG, WIRE_TRAILER};
 use crate::topology::{LinkClass, Topology};
 use crate::{Error, Result};
 
@@ -106,6 +108,18 @@ pub struct MemTransport {
     pool: PacketPool,
     /// Node partition + traffic ledger (node-partitioned fabrics only).
     nodes: Option<Arc<NodeMap>>,
+    /// Next outbound sequence number per (destination, tag). Grows with
+    /// the number of distinct (peer, tag) streams ever used — bounded in
+    /// practice by the collectives' tag-rationing discipline.
+    tx_seq: HashMap<(usize, u64), u64>,
+    /// Next expected inbound sequence number per (source, tag).
+    rx_seq: HashMap<(usize, u64), u64>,
+    /// Wire-integrity counters.
+    wire: WireStats,
+    /// Deadline armed on every blocking wait (`None` = wait forever).
+    timeout: Option<Duration>,
+    /// Sticky abort latch: set on the first poison message observed.
+    aborted: Option<String>,
 }
 
 /// Factory for a set of fully-connected [`MemTransport`] endpoints.
@@ -152,6 +166,11 @@ impl MemFabric {
                 unmatched: HashMap::new(),
                 pool: pool.clone(),
                 nodes: nodes.clone(),
+                tx_seq: HashMap::new(),
+                rx_seq: HashMap::new(),
+                wire: WireStats::default(),
+                timeout: None,
+                aborted: None,
             })
             .collect()
     }
@@ -237,6 +256,36 @@ impl MemTransport {
         msg
     }
 
+    /// Verify and strip the integrity trailer of a frame pulled from the
+    /// store — the last step before bytes reach the caller (and so the
+    /// codec). `Ok(Some(payload))` delivers; `Ok(None)` means the frame
+    /// was a duplicate and was dropped idempotently (pull the next one).
+    fn deliver(&mut self, src: usize, tag: u64, mut frame: Vec<u8>) -> Result<Option<Vec<u8>>> {
+        let seq = match super::unseal(src, tag, &mut frame) {
+            Ok(seq) => seq,
+            Err(e) => {
+                self.wire.corrupt_frames += 1;
+                self.pool.release(frame);
+                return Err(e);
+            }
+        };
+        match super::check_seq(&mut self.rx_seq, src, tag, seq) {
+            SeqCheck::Deliver => Ok(Some(frame)),
+            SeqCheck::Duplicate => {
+                self.wire.dup_frames_dropped += 1;
+                self.pool.release(frame);
+                Ok(None)
+            }
+            SeqCheck::Gap { expected } => {
+                self.wire.gaps_detected += 1;
+                self.pool.release(frame);
+                Err(Error::transport(format!(
+                    "lost frame from rank {src} tag {tag}: expected seq {expected}, got {seq}"
+                )))
+            }
+        }
+    }
+
     /// Traffic snapshot of a node-partitioned fabric (`None` for fabrics
     /// built without a topology).
     pub fn traffic(&self) -> Option<TrafficReport> {
@@ -256,16 +305,49 @@ impl Transport for MemTransport {
         Some(&self.pool)
     }
 
+    fn set_timeout(&mut self, timeout: Option<Duration>) {
+        self.timeout = timeout;
+    }
+
+    fn timeout(&self) -> Option<Duration> {
+        self.timeout
+    }
+
+    fn wire_stats(&self) -> WireStats {
+        self.wire
+    }
+
+    fn seal_frame(&mut self, to: usize, tag: u64, mut payload: Vec<u8>) -> Vec<u8> {
+        let seq = self.tx_seq.entry((to, tag)).or_insert(0);
+        let this = *seq;
+        *seq += 1;
+        super::seal_into(&mut payload, self.rank, tag, this);
+        payload
+    }
+
+    fn send_frame(&mut self, to: usize, tag: u64, frame: Vec<u8>) -> Result<()> {
+        if to >= self.size {
+            return Err(Error::invalid(format!("send to rank {to} of {}", self.size)));
+        }
+        self.tx[to]
+            .send((tag, frame))
+            .map_err(|_| Error::transport(format!("rank {to} receiver dropped")))
+    }
+
     fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()> {
         if to >= self.size {
             return Err(Error::invalid(format!("send to rank {to} of {}", self.size)));
         }
         if let Some(nodes) = &self.nodes {
+            // The ledger counts logical payload bytes, not trailer bytes.
             nodes.record(self.rank, to, data.len());
         }
-        self.tx[to]
-            .send((tag, self.pool.packet_from(data)))
-            .map_err(|_| Error::transport(format!("rank {to} receiver dropped")))
+        // Lease with trailer headroom so sealing never reallocates (and
+        // empty barrier payloads still ride pooled buffers).
+        let mut packet = self.pool.lease_with_capacity(data.len() + WIRE_TRAILER);
+        packet.extend_from_slice(data);
+        let frame = self.seal_frame(to, tag, packet);
+        self.send_frame(to, tag, frame)
     }
 
     fn send_pooled(&mut self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
@@ -278,28 +360,41 @@ impl Transport for MemTransport {
         // The caller's leased buffer IS the packet: no copy; its capacity
         // re-enters the pool at the receiver's swap.
         self.pool.note_pooled_send();
-        self.tx[to]
-            .send((tag, data))
-            .map_err(|_| Error::transport(format!("rank {to} receiver dropped")))
+        let frame = self.seal_frame(to, tag, data);
+        self.send_frame(to, tag, frame)
     }
 
     fn recv_into(&mut self, from: usize, tag: u64, buf: &mut Vec<u8>) -> Result<usize> {
         if from >= self.size {
             return Err(Error::invalid(format!("recv from rank {from} of {}", self.size)));
         }
+        let mut backoff = Backoff::until(self.timeout);
         loop {
-            if let Some(m) = self.take_unmatched(from, tag) {
-                return Ok(self.pool.deposit(m, buf));
+            while let Some(m) = self.take_unmatched(from, tag) {
+                if let Some(payload) = self.deliver(from, tag, m)? {
+                    return Ok(self.pool.deposit(payload, buf));
+                }
+                // Duplicate dropped: pull the next queued frame.
             }
-            // Block on the channel; push non-matching tags aside.
-            match self.rx[from].recv() {
+            match self.rx[from].try_recv() {
                 Ok((t, payload)) => {
                     self.unmatched.entry((from, t)).or_default().push_back(payload);
+                    continue;
                 }
-                Err(_) => {
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => {
+                    // try_recv drains buffered messages before reporting a
+                    // disconnect, so the sought frame can no longer arrive.
                     return Err(Error::transport(format!(
                         "rank {from} disconnected (recv tag {tag})"
-                    )))
+                    )));
+                }
+            }
+            backoff.snooze();
+            if backoff.is_yielding() {
+                self.check_abort()?;
+                if backoff.expired() {
+                    return Err(Error::timeout(vec![(from, tag)]));
                 }
             }
         }
@@ -309,16 +404,62 @@ impl Transport for MemTransport {
         if h.done.is_some() || h.delivered {
             return Ok(true);
         }
-        if let Some(m) = self.take_unmatched(h.from, h.tag) {
-            h.done = Some(m);
-            return Ok(true);
+        if let Some(m) = &h.failed {
+            return Err(Error::transport(m.clone()));
         }
-        self.pump(h.from, h.tag)?;
-        if let Some(m) = self.take_unmatched(h.from, h.tag) {
-            h.done = Some(m);
-            return Ok(true);
+        loop {
+            if let Some(m) = self.take_unmatched(h.from, h.tag) {
+                match self.deliver(h.from, h.tag, m) {
+                    Ok(Some(payload)) => {
+                        h.done = Some(payload);
+                        return Ok(true);
+                    }
+                    Ok(None) => continue, // duplicate dropped
+                    Err(e) => {
+                        // The matching frame was consumed by verification;
+                        // latch so later polls replay instead of hanging.
+                        h.failed = Some(format!(
+                            "receive from rank {} tag {} failed: {e}",
+                            h.from, h.tag
+                        ));
+                        return Err(e);
+                    }
+                }
+            }
+            if !self.pump(h.from, h.tag)? {
+                return Ok(false);
+            }
         }
-        Ok(false)
+    }
+
+    fn check_abort(&mut self) -> Result<()> {
+        if let Some(m) = &self.aborted {
+            return Err(Error::transport(m.clone()));
+        }
+        // Pull in anything newly arrived, then scan for poison — any tag
+        // with the abort bit set (GroupTransport offsets tags by a base
+        // below bit 62, preserving the bit).
+        self.progress()?;
+        loop {
+            let Some(&(src, tag)) = self.unmatched.keys().find(|(_, t)| t & ABORT_TAG != 0)
+            else {
+                return Ok(());
+            };
+            let frame = self.take_unmatched(src, tag).expect("key just observed");
+            let text = match self.deliver(src, tag, frame) {
+                Ok(Some(payload)) => {
+                    let text = String::from_utf8_lossy(&payload).into_owned();
+                    self.pool.release(payload);
+                    text
+                }
+                Ok(None) => continue, // duplicate poison: drop, rescan
+                Err(_) => String::from("(unreadable abort payload)"),
+            };
+            let msg = format!("abort from rank {src}: {text}");
+            self.wire.aborts_seen += 1;
+            self.aborted = Some(msg.clone());
+            return Err(Error::transport(msg));
+        }
     }
 
     fn progress(&mut self) -> Result<()> {
@@ -463,6 +604,51 @@ mod tests {
         assert_eq!(end, warm, "warm iterations must not allocate packet buffers");
         t0.recycle(buf0);
         t1.recycle(buf1);
+    }
+
+    #[test]
+    fn duplicate_frames_dropped_idempotently() {
+        let mut eps = MemFabric::endpoints(2);
+        let (a, b) = eps.split_at_mut(1);
+        let (t0, t1) = (&mut a[0], &mut b[0]);
+        // Seal once, put the identical frame on the wire twice.
+        let frame = t0.seal_frame(1, 7, b"once".to_vec());
+        t0.send_frame(1, 7, frame.clone()).unwrap();
+        t0.send_frame(1, 7, frame).unwrap();
+        t0.send(1, 7, b"next").unwrap();
+        assert_eq!(t1.recv(0, 7).unwrap(), b"once");
+        assert_eq!(t1.recv(0, 7).unwrap(), b"next", "the replay must be dropped, not delivered");
+        assert_eq!(t1.wire_stats().dup_frames_dropped, 1);
+    }
+
+    #[test]
+    fn corrupt_frame_detected_at_delivery_names_sender() {
+        let mut eps = MemFabric::endpoints(2);
+        let (a, b) = eps.split_at_mut(1);
+        let (t0, t1) = (&mut a[0], &mut b[0]);
+        let mut frame = t0.seal_frame(1, 9, b"payload".to_vec());
+        frame[2] ^= 0x40;
+        t0.send_frame(1, 9, frame).unwrap();
+        let e = t1.recv(0, 9).unwrap_err();
+        assert!(matches!(e, Error::Corrupt(_)), "got {e:?}");
+        assert!(format!("{e}").contains("rank 0"), "error must name the sender");
+        assert_eq!(t1.wire_stats().corrupt_frames, 1);
+    }
+
+    #[test]
+    fn lost_frame_surfaces_as_sequence_gap() {
+        // Sealing consumes sequence number 0, but the frame never ships;
+        // the next frame on the same (peer, tag) stream arrives as seq 1
+        // and the receiver reports the loss instead of delivering out of
+        // order.
+        let mut eps = MemFabric::endpoints(2);
+        let (a, b) = eps.split_at_mut(1);
+        let (t0, t1) = (&mut a[0], &mut b[0]);
+        let _lost = t0.seal_frame(1, 3, b"lost".to_vec());
+        t0.send(1, 3, b"after").unwrap();
+        let e = t1.recv(0, 3).unwrap_err();
+        assert!(format!("{e}").contains("lost frame from rank 0"), "got {e}");
+        assert_eq!(t1.wire_stats().gaps_detected, 1);
     }
 
     #[test]

@@ -42,17 +42,183 @@
 //! and decompression phases". Blocking waits use a bounded spin followed
 //! by [`std::thread::yield_now`] ([`Backoff`]) so a slow sender does not
 //! pin a full core.
+//!
+//! ## Failure semantics
+//!
+//! Large fabrics straggle, flip bits, and lose ranks mid-collective; the
+//! transport layer turns each of those into a *typed, prompt* error
+//! instead of silent corruption or an infinite hang:
+//!
+//! - **Wire integrity.** Every frame (both transports) carries a 12-byte
+//!   trailer: a per-`(peer, tag)` sequence number plus a CRC32C over
+//!   `(source, tag, seq, payload)`. The trailer is verified at delivery —
+//!   *before* bytes ever reach the codec. A checksum mismatch yields
+//!   [`crate::Error::Corrupt`] naming the sending rank and tag; a frame
+//!   replayed with an already-delivered sequence number is dropped
+//!   idempotently; a sequence gap (a lost frame) yields
+//!   [`crate::Error::Transport`]. Counters are exposed via
+//!   [`Transport::wire_stats`].
+//! - **Deadlines.** [`Transport::set_timeout`] arms every blocking wait
+//!   ([`Transport::recv_into`], [`Transport::wait_into`], and the
+//!   collectives' completion loops) with a deadline. Expiry yields
+//!   [`crate::Error::Timeout`] listing exactly which `(source, tag)`
+//!   receives were still pending. `None` (the default for `memchan`)
+//!   waits forever, preserving the classic MPI contract.
+//! - **Abort fence.** A rank that fails mid-collective broadcasts a small
+//!   poison message on the reserved [`ABORT_TAG`]; peers poll
+//!   [`Transport::check_abort`] from the yield phase of every wait loop
+//!   and convert their waits into prompt [`crate::Error::Transport`]
+//!   aborts naming the origin rank — no riding out the full timeout. The
+//!   abort latch is sticky: once seen, every later wait on the endpoint
+//!   fails fast. On TCP, a reader thread hitting EOF additionally poisons
+//!   that peer so pending and future waits on it error immediately.
+//! - **Determinism.** [`fault::FaultTransport`] wraps any transport with
+//!   a seeded [`fault::FaultPlan`] (drop / corrupt / duplicate / delay /
+//!   kill-after-N) so every one of the above paths is exercised
+//!   reproducibly in tests and benches.
 
+pub mod fault;
 pub mod memchan;
 pub mod tcp;
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::Result;
+use crate::{Error, Result};
 
 /// Reserved tag namespace for barriers (collectives must use tags below
 /// this bit).
 pub const BARRIER_TAG_BASE: u64 = 1 << 62;
+
+/// Reserved control tag for the abort fence: a rank failing mid-collective
+/// sends its error text on this tag to every peer, and
+/// [`Transport::check_abort`] converts waits into prompt errors. Bit 63 is
+/// disjoint from both the collective tag space (below
+/// [`BARRIER_TAG_BASE`]) and the barrier namespace (bit 62).
+pub const ABORT_TAG: u64 = 1 << 63;
+
+/// Length of the integrity trailer appended to every wire frame:
+/// `seq: u64 LE || crc32c: u32 LE`.
+pub const WIRE_TRAILER: usize = 12;
+
+/// CRC32C (Castagnoli) lookup table, built at compile time — the crate
+/// has a no-external-dependency policy, so the checksum is in-tree.
+const CRC32C_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0x82F6_3B78 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32C over the concatenation of `parts` (reflected, init/final xor
+/// `!0` — the standard Castagnoli parameterisation; check value for
+/// `b"123456789"` is `0xE3069283`).
+pub fn crc32c(parts: &[&[u8]]) -> u32 {
+    let mut crc = !0u32;
+    for part in parts {
+        for &byte in *part {
+            crc = (crc >> 8) ^ CRC32C_TABLE[((crc ^ byte as u32) & 0xFF) as usize];
+        }
+    }
+    !crc
+}
+
+/// Compute the frame checksum: it covers the logical source rank, the
+/// tag, the sequence number, and the payload, so a frame misrouted or
+/// replayed under a different identity fails verification even when its
+/// payload bytes survive intact.
+pub(crate) fn frame_crc(src: usize, tag: u64, seq: u64, payload: &[u8]) -> u32 {
+    crc32c(&[&(src as u32).to_le_bytes(), &tag.to_le_bytes(), &seq.to_le_bytes(), payload])
+}
+
+/// Append the integrity trailer to an outbound frame.
+pub(crate) fn seal_into(frame: &mut Vec<u8>, src: usize, tag: u64, seq: u64) {
+    let crc = frame_crc(src, tag, seq, frame);
+    frame.extend_from_slice(&seq.to_le_bytes());
+    frame.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// Verify and strip the integrity trailer of an arrived frame, returning
+/// its sequence number. On any mismatch the frame is left untouched and
+/// the error names the sending rank and tag.
+pub(crate) fn unseal(src: usize, tag: u64, frame: &mut Vec<u8>) -> Result<u64> {
+    if frame.len() < WIRE_TRAILER {
+        return Err(Error::corrupt(format!(
+            "frame from rank {src} tag {tag}: {} bytes is shorter than the integrity trailer",
+            frame.len()
+        )));
+    }
+    let base = frame.len() - WIRE_TRAILER;
+    let seq = u64::from_le_bytes(frame[base..base + 8].try_into().unwrap());
+    let got = u32::from_le_bytes(frame[base + 8..].try_into().unwrap());
+    let want = frame_crc(src, tag, seq, &frame[..base]);
+    if got != want {
+        return Err(Error::corrupt(format!(
+            "crc mismatch on frame from rank {src} tag {tag} seq {seq}: \
+             got {got:#010x}, computed {want:#010x}"
+        )));
+    }
+    frame.truncate(base);
+    Ok(seq)
+}
+
+/// Verdict of the per-`(source, tag)` sequence check at delivery time.
+pub(crate) enum SeqCheck {
+    /// In-order frame: deliver it (the expected counter has advanced).
+    Deliver,
+    /// Already-delivered sequence number: drop the frame idempotently.
+    Duplicate,
+    /// The sender skipped ahead — an earlier frame was lost in transit.
+    Gap {
+        /// The sequence number that should have arrived instead.
+        expected: u64,
+    },
+}
+
+/// Advance the receive-side sequence ledger for a frame from `(src, tag)`
+/// carrying `seq`.
+pub(crate) fn check_seq(
+    next: &mut HashMap<(usize, u64), u64>,
+    src: usize,
+    tag: u64,
+    seq: u64,
+) -> SeqCheck {
+    let expected = next.entry((src, tag)).or_insert(0);
+    match seq.cmp(expected) {
+        std::cmp::Ordering::Less => SeqCheck::Duplicate,
+        std::cmp::Ordering::Equal => {
+            *expected += 1;
+            SeqCheck::Deliver
+        }
+        std::cmp::Ordering::Greater => SeqCheck::Gap { expected: *expected },
+    }
+}
+
+/// Cumulative wire-integrity and fault counters for one endpoint, exposed
+/// via [`Transport::wire_stats`] and folded into
+/// [`crate::coordinator::Metrics`] by the collectives layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Frames whose CRC32C failed verification at delivery.
+    pub corrupt_frames: u64,
+    /// Frames dropped idempotently for carrying an already-delivered
+    /// sequence number.
+    pub dup_frames_dropped: u64,
+    /// Sequence gaps observed (a preceding frame was lost in transit).
+    pub gaps_detected: u64,
+    /// Abort-fence poison messages observed from peers.
+    pub aborts_seen: u64,
+}
 
 /// Counters exposing a transport's packet-buffer pool, for regression
 /// tests and capacity planning. All values are cumulative.
@@ -180,19 +346,26 @@ impl PacketPool {
 /// [`std::hint::spin_loop`] burst catches messages that are nanoseconds
 /// away, then the waiter downgrades to [`std::thread::yield_now`] so a
 /// genuinely slow sender (a large TCP transfer, a straggling rank) does
-/// not burn a full core.
+/// not burn a full core. An optional deadline bounds the yield phase so a
+/// dead peer cannot turn the wait into an infinite hang.
 #[derive(Debug, Default)]
 pub struct Backoff {
     spins: u32,
+    deadline: Option<Instant>,
 }
 
 impl Backoff {
     /// Spin iterations before yielding to the scheduler.
     pub const SPIN_LIMIT: u32 = 64;
 
-    /// Fresh backoff (starts in the spin phase).
+    /// Fresh backoff (starts in the spin phase, no deadline).
     pub fn new() -> Self {
         Backoff::default()
+    }
+
+    /// Backoff that expires `timeout` from now (`None` waits forever).
+    pub fn until(timeout: Option<Duration>) -> Self {
+        Backoff { spins: 0, deadline: timeout.map(|t| Instant::now() + t) }
     }
 
     /// Wait one step: spin while under [`Backoff::SPIN_LIMIT`], yield
@@ -204,6 +377,19 @@ impl Backoff {
         } else {
             std::thread::yield_now();
         }
+    }
+
+    /// Whether the wait has downgraded to the yield phase. Deadline and
+    /// abort checks belong here: the spin burst stays clock-free.
+    pub fn is_yielding(&self) -> bool {
+        self.spins >= Self::SPIN_LIMIT
+    }
+
+    /// Whether the deadline has passed. Always `false` while still in the
+    /// spin phase (a sub-microsecond deadline still gets the spin burst)
+    /// and for deadline-free backoffs.
+    pub fn expired(&self) -> bool {
+        self.is_yielding() && self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 }
 
@@ -219,11 +405,18 @@ pub struct RecvHandle {
     /// [`Transport::try_complete_into`]; further polls stay `true`
     /// without touching the buffer again.
     pub(crate) delivered: bool,
+    /// Sticky failure: set when the matching frame was consumed but
+    /// failed verification (corrupt checksum, sequence gap). The first
+    /// observer gets the original typed error; because progress hooks
+    /// poll opportunistically and may swallow that first `Err`, every
+    /// later poll of the handle replays the failure from here instead of
+    /// hanging on a frame that will never re-arrive.
+    pub(crate) failed: Option<String>,
 }
 
 impl RecvHandle {
     fn new(from: usize, tag: u64) -> Self {
-        RecvHandle { from, tag, done: None, delivered: false }
+        RecvHandle { from, tag, done: None, delivered: false, failed: None }
     }
     /// Whether the message has already been matched.
     pub fn is_complete(&self) -> bool {
@@ -251,8 +444,64 @@ pub trait Transport: Send {
     /// Communicator size.
     fn size(&self) -> usize;
 
+    /// Arm every subsequent blocking wait on this endpoint with a
+    /// deadline (`None` disarms — wait forever). On expiry waits return
+    /// [`crate::Error::Timeout`] naming the still-pending `(source, tag)`
+    /// receives. Default: ignored (transports without deadline support
+    /// keep the classic block-forever contract).
+    fn set_timeout(&mut self, _timeout: Option<Duration>) {}
+
+    /// The currently armed wait deadline, if any.
+    fn timeout(&self) -> Option<Duration> {
+        None
+    }
+
     /// Eager-buffered send (completes locally).
     fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()>;
+
+    /// Seal an outbound payload into a wire frame bound for `(to, tag)`:
+    /// integrity-checked transports append their sequence + checksum
+    /// trailer here (consuming a sequence number), others pass the
+    /// payload through. Split out from the send so fault injectors can
+    /// mutate *sealed* frames — a corruption introduced after sealing is
+    /// exactly what the receive-side CRC must catch.
+    fn seal_frame(&mut self, _to: usize, _tag: u64, payload: Vec<u8>) -> Vec<u8> {
+        payload
+    }
+
+    /// Put an already-sealed frame on the wire for `(to, tag)` without
+    /// re-sealing it. `seal_frame` + `send_frame` compose to
+    /// [`Transport::send_pooled`]; the split exists for fault injection.
+    fn send_frame(&mut self, to: usize, tag: u64, frame: Vec<u8>) -> Result<()> {
+        self.send_pooled(to, tag, frame)
+    }
+
+    /// Poll the abort fence: returns `Err` if any peer has posted a
+    /// poison message on [`ABORT_TAG`] (or if one was seen earlier — the
+    /// latch is sticky). Wait loops call this from their yield phase so a
+    /// peer's failure converts outstanding waits into prompt typed errors
+    /// instead of timeouts. Default: no fence (always `Ok`).
+    fn check_abort(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Broadcast an abort-fence poison message carrying `msg` to every
+    /// peer, best-effort: send failures (a peer already gone) are
+    /// ignored — the fence accelerates failure detection, it does not
+    /// guarantee delivery.
+    fn send_abort(&mut self, msg: &str) {
+        let me = self.rank();
+        for peer in 0..self.size() {
+            if peer != me {
+                let _ = self.send(peer, ABORT_TAG, msg.as_bytes());
+            }
+        }
+    }
+
+    /// Wire-integrity counters (zeros for transports without framing).
+    fn wire_stats(&self) -> WireStats {
+        WireStats::default()
+    }
 
     /// Send an already-leased pooled buffer **by value** — the send-side
     /// mirror of [`Transport::recv_into`]. The caller compresses (or
@@ -358,14 +607,22 @@ pub trait Transport: Send {
     /// Block until the handle completes, delivering the payload into
     /// `buf` and returning its length. Uses a bounded spin then
     /// [`std::thread::yield_now`] backoff so a delayed sender cannot pin
-    /// a core (the old behaviour was an unbounded `spin_loop`).
+    /// a core; the yield phase polls the abort fence and the endpoint
+    /// deadline ([`Transport::set_timeout`]) so a dead peer yields a
+    /// prompt typed error instead of an infinite hang.
     fn wait_into(&mut self, mut h: RecvHandle, buf: &mut Vec<u8>) -> Result<usize> {
-        let mut backoff = Backoff::new();
+        let mut backoff = Backoff::until(self.timeout());
         loop {
             if self.try_complete_into(&mut h, buf)? {
                 return Ok(buf.len());
             }
             backoff.snooze();
+            if backoff.is_yielding() {
+                self.check_abort()?;
+                if backoff.expired() {
+                    return Err(Error::timeout(vec![(h.from, h.tag)]));
+                }
+            }
         }
     }
 
@@ -444,11 +701,29 @@ impl Transport for GroupTransport<'_> {
     fn packet_pool(&self) -> Option<&PacketPool> {
         self.inner.packet_pool()
     }
+    fn set_timeout(&mut self, timeout: Option<Duration>) {
+        self.inner.set_timeout(timeout);
+    }
+    fn timeout(&self) -> Option<Duration> {
+        self.inner.timeout()
+    }
     fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()> {
         self.inner.send(self.members[to], self.tag_base + tag, data)
     }
     fn send_pooled(&mut self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
         self.inner.send_pooled(self.members[to], self.tag_base + tag, data)
+    }
+    fn seal_frame(&mut self, to: usize, tag: u64, payload: Vec<u8>) -> Vec<u8> {
+        self.inner.seal_frame(self.members[to], self.tag_base + tag, payload)
+    }
+    fn send_frame(&mut self, to: usize, tag: u64, frame: Vec<u8>) -> Result<()> {
+        self.inner.send_frame(self.members[to], self.tag_base + tag, frame)
+    }
+    fn check_abort(&mut self) -> Result<()> {
+        self.inner.check_abort()
+    }
+    fn wire_stats(&self) -> WireStats {
+        self.inner.wire_stats()
     }
     fn recv_into(&mut self, from: usize, tag: u64, buf: &mut Vec<u8>) -> Result<usize> {
         self.inner.recv_into(self.members[from], self.tag_base + tag, buf)
@@ -581,6 +856,106 @@ mod tests {
             b.snooze(); // must not hang or panic past the spin budget
         }
         assert_eq!(b.spins, Backoff::SPIN_LIMIT);
+    }
+
+    #[test]
+    fn crc32c_known_vectors() {
+        // Standard Castagnoli check value.
+        assert_eq!(crc32c(&[b"123456789"]), 0xE306_9283);
+        assert_eq!(crc32c(&[b"1234", b"56789"]), 0xE306_9283, "streaming over parts");
+        assert_eq!(crc32c(&[b""]), 0);
+        assert_ne!(crc32c(&[b"123456788"]), 0xE306_9283);
+    }
+
+    #[test]
+    fn seal_unseal_roundtrip_and_tamper_detection() {
+        let mut f = b"payload".to_vec();
+        seal_into(&mut f, 3, 42, 7);
+        assert_eq!(f.len(), 7 + WIRE_TRAILER);
+        // A frame replayed under a different identity fails even with
+        // intact bytes (the checksum covers source, tag and seq).
+        assert!(unseal(2, 42, &mut f.clone()).is_err());
+        assert!(unseal(3, 41, &mut f.clone()).is_err());
+        // Any bit flip anywhere in the frame — payload or trailer — is
+        // caught, and the error names the sending rank.
+        for pos in 0..f.len() {
+            let mut t = f.clone();
+            t[pos] ^= 0x10;
+            let e = unseal(3, 42, &mut t).unwrap_err();
+            assert!(format!("{e}").contains("rank 3"), "error must name the sender");
+        }
+        let seq = unseal(3, 42, &mut f).unwrap();
+        assert_eq!(seq, 7);
+        assert_eq!(f, b"payload");
+    }
+
+    #[test]
+    fn sequence_ledger_orders_dups_and_gaps() {
+        let mut next = HashMap::new();
+        assert!(matches!(check_seq(&mut next, 1, 5, 0), SeqCheck::Deliver));
+        assert!(matches!(check_seq(&mut next, 1, 5, 1), SeqCheck::Deliver));
+        // Replay of a delivered frame.
+        assert!(matches!(check_seq(&mut next, 1, 5, 0), SeqCheck::Duplicate));
+        // Skipping ahead means a frame was lost.
+        assert!(matches!(check_seq(&mut next, 1, 5, 4), SeqCheck::Gap { expected: 2 }));
+        // Independent (source, tag) streams.
+        assert!(matches!(check_seq(&mut next, 2, 5, 0), SeqCheck::Deliver));
+        assert!(matches!(check_seq(&mut next, 1, 6, 0), SeqCheck::Deliver));
+    }
+
+    #[test]
+    fn backoff_deadline_expires_only_in_yield_phase() {
+        let mut b = Backoff::until(Some(Duration::from_millis(0)));
+        assert!(!b.expired(), "deadline is not checked during the spin burst");
+        for _ in 0..Backoff::SPIN_LIMIT {
+            b.snooze();
+        }
+        assert!(b.expired());
+        let mut free = Backoff::new();
+        for _ in 0..Backoff::SPIN_LIMIT {
+            free.snooze();
+        }
+        assert!(!free.expired(), "deadline-free backoff never expires");
+    }
+
+    #[test]
+    fn wait_times_out_with_pending_pair() {
+        MemFabric::run(2, |t| {
+            if t.rank() == 1 {
+                t.set_timeout(Some(Duration::from_millis(30)));
+                let h = t.irecv(0, 77);
+                let mut buf = Vec::new();
+                match t.wait_into(h, &mut buf) {
+                    Err(Error::Timeout { pending }) => assert_eq!(pending, vec![(0, 77)]),
+                    other => panic!("expected timeout, got {other:?}"),
+                }
+            } else {
+                // Stay alive past the peer's deadline so the timeout (not
+                // a disconnect) is what ends the wait.
+                std::thread::sleep(Duration::from_millis(120));
+            }
+        });
+    }
+
+    #[test]
+    fn abort_fence_converts_waits_into_prompt_errors() {
+        MemFabric::run(3, |t| {
+            if t.rank() == 0 {
+                t.send_abort("synthetic failure");
+            } else {
+                // No deadline armed: only the abort fence can end these
+                // waits (each peer waits on the OTHER non-aborting rank,
+                // which never sends).
+                let other = 3 - t.rank();
+                let h = t.irecv(other, 55);
+                let mut buf = Vec::new();
+                let e = t.wait_into(h, &mut buf).unwrap_err();
+                let msg = format!("{e}");
+                assert!(msg.contains("abort from rank 0"), "got: {msg}");
+                // The latch is sticky: later waits fail fast too.
+                assert!(t.check_abort().is_err());
+            }
+        });
     }
 
     #[test]

@@ -1,10 +1,19 @@
 //! TCP mesh transport for genuine multi-process runs (`zccl launch` /
 //! `zccl worker`).
 //!
-//! Wire format per message: `src: u32 | tag: u64 | len: u64 | payload`.
+//! Wire format per message: `src: u32 | tag: u64 | len: u64 | frame`,
+//! where `frame` is the payload plus the 12-byte integrity trailer
+//! (`seq: u64 | crc32c: u32` — see the parent module's failure-semantics
+//! docs). The trailer is verified when a frame is *delivered* to the
+//! consumer, before its bytes can reach a codec.
+//!
 //! Each endpoint accepts connections from lower ranks and dials higher
-//! ranks, yielding a full mesh; one reader thread per peer pushes packets
-//! into a shared matched/unmatched store guarded by a mutex + condvar.
+//! ranks (bounded retry with jittered exponential backoff, so a mesh
+//! whose listeners come up late or restart together still forms), yielding
+//! a full mesh; one reader thread per peer pushes frames into a shared
+//! matched/unmatched store guarded by a mutex + condvar. A reader hitting
+//! EOF or a truncated frame **poisons its peer**: every pending and future
+//! wait on that peer fails immediately instead of riding out a timeout.
 //!
 //! Reader threads deposit payloads into reusable packet buffers leased
 //! from the endpoint's [`PacketPool`]; the consumer's `recv_into` swap
@@ -16,12 +25,26 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::{PacketPool, RecvHandle, Transport};
+use super::{PacketPool, RecvHandle, SeqCheck, Transport, WireStats};
+use super::{ABORT_TAG, WIRE_TRAILER};
+use crate::data::rng::Rng;
 use crate::{Error, Result};
 
 type Store = Mutex<HashMap<(usize, u64), VecDeque<Vec<u8>>>>;
+
+/// Hard cap on dial attempts per peer during fabric bring-up.
+const CONNECT_ATTEMPTS: u32 = 64;
+/// Ceiling for the exponential backoff between dial attempts.
+const CONNECT_BACKOFF_CAP_MS: u64 = 100;
+/// Default wait deadline: TCP peers live in other processes that can die
+/// without a disconnect reaching us in time, so unlike `memchan` the mesh
+/// never waits forever unless explicitly disarmed.
+const DEFAULT_TIMEOUT: Duration = Duration::from_secs(60);
+/// Condvar poll tick, bounding how stale the poison/abort/deadline checks
+/// can get when reader threads have nothing to deliver.
+const PARK_TICK: Duration = Duration::from_millis(5);
 
 /// One rank's endpoint of a TCP mesh.
 pub struct TcpTransport {
@@ -31,11 +54,26 @@ pub struct TcpTransport {
     store: Arc<(Store, Condvar)>,
     readers: Vec<thread::JoinHandle<()>>,
     pool: PacketPool,
+    /// Per-peer poison reason, set by the peer's reader thread on EOF.
+    poison: Arc<Mutex<Vec<Option<String>>>>,
+    /// Deadline armed on every blocking wait (default 60 s; `None` waits
+    /// forever).
+    timeout: Option<Duration>,
+    /// Next outbound sequence number per (destination, tag).
+    tx_seq: HashMap<(usize, u64), u64>,
+    /// Next expected inbound sequence number per (source, tag).
+    rx_seq: HashMap<(usize, u64), u64>,
+    /// Wire-integrity counters (consumer-side, so no lock needed).
+    wire: WireStats,
+    /// Sticky abort latch: set on the first poison message observed.
+    aborted: Option<String>,
 }
 
 impl TcpTransport {
     /// Establish the mesh. `addrs[i]` is the listen address of rank `i`;
-    /// every process calls this with its own `rank`.
+    /// every process calls this with its own `rank`. Dialing a peer whose
+    /// listener is not up yet retries with jittered exponential backoff,
+    /// bounded by both a fixed attempt cap and `timeout`.
     pub fn connect(rank: usize, addrs: &[SocketAddr], timeout: Duration) -> Result<Self> {
         let size = addrs.len();
         if rank >= size {
@@ -47,23 +85,33 @@ impl TcpTransport {
         let store: Arc<(Store, Condvar)> =
             Arc::new((Mutex::new(HashMap::new()), Condvar::new()));
         let pool = PacketPool::default();
+        let poison: Arc<Mutex<Vec<Option<String>>>> = Arc::new(Mutex::new(vec![None; size]));
         let mut writers: Vec<Option<Mutex<TcpStream>>> = (0..size).map(|_| None).collect();
         let mut readers = Vec::new();
 
-        // Dial higher ranks (with retry while peers come up).
+        // Dial higher ranks (bounded retry while peers come up).
         for peer in rank + 1..size {
-            let deadline = std::time::Instant::now() + timeout;
+            let deadline = Instant::now() + timeout;
+            // Seeded per (rank, peer) so the sleep schedule is
+            // deterministic yet decorrelated across the dialing mesh.
+            let mut rng = Rng::new(0x5EED_C0DE ^ ((rank as u64) << 32) ^ peer as u64);
+            let mut attempt = 0u32;
             let stream = loop {
                 match TcpStream::connect(addrs[peer]) {
                     Ok(s) => break s,
                     Err(e) => {
-                        if std::time::Instant::now() > deadline {
+                        attempt += 1;
+                        if attempt >= CONNECT_ATTEMPTS || Instant::now() >= deadline {
                             return Err(Error::transport(format!(
-                                "connect rank {peer} at {}: {e}",
+                                "connect rank {peer} at {} failed after {attempt} attempts: {e}",
                                 addrs[peer]
                             )));
                         }
-                        thread::sleep(Duration::from_millis(20));
+                        // Exponential backoff, half fixed + half jitter,
+                        // so restarting meshes don't re-dial in lockstep.
+                        let cap = CONNECT_BACKOFF_CAP_MS.min(1u64 << attempt.min(20));
+                        let jitter = rng.below(cap as usize + 1) as u64;
+                        thread::sleep(Duration::from_millis(cap / 2 + jitter / 2 + 1));
                     }
                 }
             };
@@ -72,9 +120,11 @@ impl TcpTransport {
             // Identify ourselves.
             s.write_all(&(rank as u32).to_le_bytes())?;
             readers.push(spawn_reader(
+                peer,
                 stream.try_clone().map_err(Error::Io)?,
                 store.clone(),
                 pool.clone(),
+                poison.clone(),
             ));
             writers[peer] = Some(Mutex::new(stream));
         }
@@ -95,18 +145,41 @@ impl TcpTransport {
                 return Err(Error::transport(format!("bad peer hello {peer}")));
             }
             readers.push(spawn_reader(
+                peer,
                 stream.try_clone().map_err(Error::Io)?,
                 store.clone(),
                 pool.clone(),
+                poison.clone(),
             ));
             writers[peer] = Some(Mutex::new(stream));
             pending -= 1;
         }
 
-        Ok(TcpTransport { rank, size, writers, store, readers, pool })
+        Ok(TcpTransport {
+            rank,
+            size,
+            writers,
+            store,
+            readers,
+            pool,
+            poison,
+            timeout: Some(DEFAULT_TIMEOUT),
+            tx_seq: HashMap::new(),
+            rx_seq: HashMap::new(),
+            wire: WireStats::default(),
+            aborted: None,
+        })
     }
 
-    fn take(&self, from: usize, tag: u64) -> Option<Vec<u8>> {
+    fn next_seq(&mut self, to: usize, tag: u64) -> u64 {
+        let seq = self.tx_seq.entry((to, tag)).or_insert(0);
+        let this = *seq;
+        *seq += 1;
+        this
+    }
+
+    /// Pop the next raw (unverified) frame buffered for `(from, tag)`.
+    fn pop_packet(&self, from: usize, tag: u64) -> Option<Vec<u8>> {
         let mut map = self.store.0.lock().unwrap();
         let q = map.get_mut(&(from, tag))?;
         let m = q.pop_front();
@@ -115,20 +188,65 @@ impl TcpTransport {
         }
         m
     }
+
+    /// Verify and strip the integrity trailer of a frame pulled from the
+    /// store (see `MemTransport::deliver` — same contract).
+    fn deliver(&mut self, src: usize, tag: u64, mut frame: Vec<u8>) -> Result<Option<Vec<u8>>> {
+        let seq = match super::unseal(src, tag, &mut frame) {
+            Ok(seq) => seq,
+            Err(e) => {
+                self.wire.corrupt_frames += 1;
+                self.pool.release(frame);
+                return Err(e);
+            }
+        };
+        match super::check_seq(&mut self.rx_seq, src, tag, seq) {
+            SeqCheck::Deliver => Ok(Some(frame)),
+            SeqCheck::Duplicate => {
+                self.wire.dup_frames_dropped += 1;
+                self.pool.release(frame);
+                Ok(None)
+            }
+            SeqCheck::Gap { expected } => {
+                self.wire.gaps_detected += 1;
+                self.pool.release(frame);
+                Err(Error::transport(format!(
+                    "lost frame from rank {src} tag {tag}: expected seq {expected}, got {seq}"
+                )))
+            }
+        }
+    }
+
+    /// Pop buffered frames for `(from, tag)` until one verifies (dropping
+    /// duplicates) or the queue runs dry.
+    fn take_verified(&mut self, from: usize, tag: u64) -> Result<Option<Vec<u8>>> {
+        while let Some(m) = self.pop_packet(from, tag) {
+            if let Some(payload) = self.deliver(from, tag, m)? {
+                return Ok(Some(payload));
+            }
+        }
+        Ok(None)
+    }
+
+    fn poison_of(&self, peer: usize) -> Option<String> {
+        self.poison.lock().unwrap()[peer].clone()
+    }
 }
 
 fn spawn_reader(
+    peer: usize,
     mut stream: TcpStream,
     store: Arc<(Store, Condvar)>,
     pool: PacketPool,
+    poison: Arc<Mutex<Vec<Option<String>>>>,
 ) -> thread::JoinHandle<()> {
     thread::spawn(move || {
-        loop {
+        let reason = loop {
             // Every frame carries src, so no per-stream hello is needed
             // here (the acceptor consumed the dialer's hello already).
             let mut head = [0u8; 4 + 8 + 8];
-            if stream.read_exact(&mut head).is_err() {
-                break;
+            if let Err(e) = stream.read_exact(&mut head) {
+                break format!("reader EOF: {e}");
             }
             let src = u32::from_le_bytes(head[0..4].try_into().unwrap()) as usize;
             let tag = u64::from_le_bytes(head[4..12].try_into().unwrap());
@@ -141,12 +259,17 @@ fn spawn_reader(
                 if len == 0 { Vec::new() } else { pool.lease_with_capacity(len) };
             match stream.by_ref().take(len as u64).read_to_end(&mut payload) {
                 Ok(got) if got == len => {}
-                _ => break,
+                _ => break String::from("truncated frame at socket close"),
             }
             let (lock, cv) = &*store;
             lock.lock().unwrap().entry((src, tag)).or_default().push_back(payload);
             cv.notify_all();
-        }
+        };
+        // Poison the peer: already-buffered frames stay deliverable (the
+        // consumer checks the store before the poison flag), but pending
+        // and future waits that would otherwise hang now fail fast.
+        poison.lock().unwrap()[peer] = Some(reason);
+        store.1.notify_all();
     })
 }
 
@@ -162,16 +285,60 @@ impl Transport for TcpTransport {
         Some(&self.pool)
     }
 
-    fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()> {
+    fn set_timeout(&mut self, timeout: Option<Duration>) {
+        self.timeout = timeout;
+    }
+
+    fn timeout(&self) -> Option<Duration> {
+        self.timeout
+    }
+
+    fn wire_stats(&self) -> WireStats {
+        self.wire
+    }
+
+    fn seal_frame(&mut self, to: usize, tag: u64, mut payload: Vec<u8>) -> Vec<u8> {
+        let seq = self.next_seq(to, tag);
+        super::seal_into(&mut payload, self.rank, tag, seq);
+        payload
+    }
+
+    fn send_frame(&mut self, to: usize, tag: u64, frame: Vec<u8>) -> Result<()> {
         if to == self.rank {
-            // Self-send loops back through the store (pooled like any
-            // arriving packet).
-            let packet = self.pool.packet_from(data);
+            // Self-send loops back through the store like any arriving
+            // frame (verified at delivery, pooled at the swap).
             let (lock, cv) = &*self.store;
-            lock.lock().unwrap().entry((to, tag)).or_default().push_back(packet);
+            lock.lock().unwrap().entry((to, tag)).or_default().push_back(frame);
             cv.notify_all();
             return Ok(());
         }
+        let w = self.writers[to]
+            .as_ref()
+            .ok_or_else(|| Error::transport(format!("no link to rank {to}")))?;
+        {
+            let mut s = w.lock().unwrap();
+            let mut head = [0u8; 4 + 8 + 8];
+            head[0..4].copy_from_slice(&(self.rank as u32).to_le_bytes());
+            head[4..12].copy_from_slice(&tag.to_le_bytes());
+            head[12..20].copy_from_slice(&(frame.len() as u64).to_le_bytes());
+            s.write_all(&head)?;
+            s.write_all(&frame)?;
+        }
+        self.pool.release(frame);
+        Ok(())
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()> {
+        if to == self.rank {
+            let mut packet = self.pool.lease_with_capacity(data.len() + WIRE_TRAILER);
+            packet.extend_from_slice(data);
+            let frame = self.seal_frame(to, tag, packet);
+            return self.send_frame(to, tag, frame);
+        }
+        // Stream head + payload + trailer without materialising a sealed
+        // frame: the checksum is computed over the same logical parts.
+        let seq = self.next_seq(to, tag);
+        let crc = super::frame_crc(self.rank, tag, seq, data);
         let w = self.writers[to]
             .as_ref()
             .ok_or_else(|| Error::transport(format!("no link to rank {to}")))?;
@@ -179,52 +346,43 @@ impl Transport for TcpTransport {
         let mut head = [0u8; 4 + 8 + 8];
         head[0..4].copy_from_slice(&(self.rank as u32).to_le_bytes());
         head[4..12].copy_from_slice(&tag.to_le_bytes());
-        head[12..20].copy_from_slice(&(data.len() as u64).to_le_bytes());
+        head[12..20].copy_from_slice(&((data.len() + WIRE_TRAILER) as u64).to_le_bytes());
         s.write_all(&head)?;
         s.write_all(data)?;
+        s.write_all(&seq.to_le_bytes())?;
+        s.write_all(&crc.to_le_bytes())?;
         Ok(())
     }
 
     fn send_pooled(&mut self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
         self.pool.note_pooled_send();
-        if to == self.rank {
-            // Self-send: the caller's buffer becomes the stored packet
-            // directly — no packet_from copy.
-            let (lock, cv) = &*self.store;
-            lock.lock().unwrap().entry((to, tag)).or_default().push_back(data);
-            cv.notify_all();
-            return Ok(());
-        }
-        // The socket write streams straight from the caller's buffer (no
-        // intermediate packet); the buffer's capacity goes back to the
-        // pool for the reader threads to reuse.
-        let r = self.send(to, tag, &data);
-        self.pool.release(data);
-        r
+        // The caller's buffer becomes the wire frame directly: sealed in
+        // place, streamed (or stored, for self-sends) without a copy.
+        let frame = self.seal_frame(to, tag, data);
+        self.send_frame(to, tag, frame)
     }
 
     fn recv_into(&mut self, from: usize, tag: u64, buf: &mut Vec<u8>) -> Result<usize> {
-        let (lock, cv) = &*self.store;
-        let mut map = lock.lock().unwrap();
+        let deadline = self.timeout.map(|t| Instant::now() + t);
         loop {
-            if let Some(q) = map.get_mut(&(from, tag)) {
-                if let Some(m) = q.pop_front() {
-                    if q.is_empty() {
-                        map.remove(&(from, tag));
-                    }
-                    drop(map);
-                    return Ok(self.pool.deposit(m, buf));
-                }
+            if let Some(payload) = self.take_verified(from, tag)? {
+                return Ok(self.pool.deposit(payload, buf));
             }
-            let (m, timeout) = cv
-                .wait_timeout(map, Duration::from_secs(60))
+            self.check_abort()?;
+            if let Some(why) = self.poison_of(from) {
+                return Err(Error::transport(format!("connection to rank {from} lost: {why}")));
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return Err(Error::timeout(vec![(from, tag)]));
+            }
+            // Park until a reader deposits something; the tick bounds how
+            // long a poison/abort/deadline can go unnoticed if the notify
+            // raced our store check.
+            let (lock, cv) = &*self.store;
+            let map = lock.lock().unwrap();
+            let _ = cv
+                .wait_timeout(map, PARK_TICK)
                 .map_err(|_| Error::transport("poisoned store"))?;
-            map = m;
-            if timeout.timed_out() {
-                return Err(Error::transport(format!(
-                    "recv timeout from {from} tag {tag}"
-                )));
-            }
         }
     }
 
@@ -232,11 +390,60 @@ impl Transport for TcpTransport {
         if h.done.is_some() || h.delivered {
             return Ok(true);
         }
-        if let Some(m) = self.take(h.from, h.tag) {
-            h.done = Some(m);
-            return Ok(true);
+        if let Some(m) = &h.failed {
+            return Err(Error::transport(m.clone()));
         }
-        Ok(false)
+        match self.take_verified(h.from, h.tag) {
+            Ok(Some(payload)) => {
+                h.done = Some(payload);
+                Ok(true)
+            }
+            Ok(None) => {
+                if let Some(why) = self.poison_of(h.from) {
+                    return Err(Error::transport(format!(
+                        "connection to rank {} lost: {why}",
+                        h.from
+                    )));
+                }
+                Ok(false)
+            }
+            Err(e) => {
+                // The matching frame was consumed by verification; latch
+                // so later polls replay the failure instead of hanging.
+                h.failed =
+                    Some(format!("receive from rank {} tag {} failed: {e}", h.from, h.tag));
+                Err(e)
+            }
+        }
+    }
+
+    fn check_abort(&mut self) -> Result<()> {
+        if let Some(m) = &self.aborted {
+            return Err(Error::transport(m.clone()));
+        }
+        loop {
+            let key = {
+                let map = self.store.0.lock().unwrap();
+                map.keys().find(|(_, t)| t & ABORT_TAG != 0).copied()
+            };
+            let Some((src, tag)) = key else {
+                return Ok(());
+            };
+            let frame = self.pop_packet(src, tag).expect("only the consumer pops the store");
+            let text = match self.deliver(src, tag, frame) {
+                Ok(Some(payload)) => {
+                    let text = String::from_utf8_lossy(&payload).into_owned();
+                    self.pool.release(payload);
+                    text
+                }
+                Ok(None) => continue, // duplicate poison: drop, rescan
+                Err(_) => String::from("(unreadable abort payload)"),
+            };
+            let msg = format!("abort from rank {src}: {text}");
+            self.wire.aborts_seen += 1;
+            self.aborted = Some(msg.clone());
+            return Err(Error::transport(msg));
+        }
     }
 }
 
@@ -376,6 +583,81 @@ mod tests {
             );
             t.recycle(buf);
             t.barrier(0).unwrap();
+        });
+        j0.join().unwrap();
+        j1.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_connect_retries_until_late_listener() {
+        // Satellite: rank 0 starts dialing immediately; rank 1's listener
+        // does not even bind for another 150 ms. The bounded backoff must
+        // ride out the refused connections and still form the mesh.
+        let addrs = local_addrs(2);
+        let a = addrs.clone();
+        let j0 = thread::spawn(move || {
+            let mut t = TcpTransport::connect(0, &a, Duration::from_secs(10)).unwrap();
+            t.send(1, 9, b"early-bird").unwrap();
+            t.barrier(0).unwrap();
+        });
+        let a = addrs.clone();
+        let j1 = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(150));
+            let mut t = TcpTransport::connect(1, &a, Duration::from_secs(10)).unwrap();
+            assert_eq!(t.recv(0, 9).unwrap(), b"early-bird");
+            t.barrier(0).unwrap();
+        });
+        j0.join().unwrap();
+        j1.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_recv_times_out_with_pending_pair() {
+        let addrs = local_addrs(2);
+        let a = addrs.clone();
+        let j0 = thread::spawn(move || {
+            let mut t = TcpTransport::connect(0, &a, Duration::from_secs(10)).unwrap();
+            // Never send on tag 13; stay alive past the peer's deadline so
+            // the timeout (not a disconnect/poison) ends the wait.
+            t.barrier(0).unwrap();
+        });
+        let a = addrs.clone();
+        let j1 = thread::spawn(move || {
+            let mut t = TcpTransport::connect(1, &a, Duration::from_secs(10)).unwrap();
+            t.set_timeout(Some(Duration::from_millis(50)));
+            let mut buf = Vec::new();
+            match t.recv_into(0, 13, &mut buf) {
+                Err(Error::Timeout { pending }) => assert_eq!(pending, vec![(0, 13)]),
+                other => panic!("expected timeout, got {other:?}"),
+            }
+            t.set_timeout(Some(DEFAULT_TIMEOUT));
+            t.barrier(0).unwrap();
+        });
+        j0.join().unwrap();
+        j1.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_peer_death_poisons_pending_waits() {
+        // Rank 0 exits without sending; its socket close reaches rank 1's
+        // reader as EOF, which must convert the pending wait into a prompt
+        // transport error — long before the 60 s default deadline.
+        let addrs = local_addrs(2);
+        let a = addrs.clone();
+        let j0 = thread::spawn(move || {
+            let t = TcpTransport::connect(0, &a, Duration::from_secs(10)).unwrap();
+            thread::sleep(Duration::from_millis(30));
+            drop(t);
+        });
+        let a = addrs.clone();
+        let j1 = thread::spawn(move || {
+            let mut t = TcpTransport::connect(1, &a, Duration::from_secs(10)).unwrap();
+            let start = Instant::now();
+            let mut buf = Vec::new();
+            let e = t.recv_into(0, 99, &mut buf).unwrap_err();
+            let msg = format!("{e}");
+            assert!(msg.contains("connection to rank 0 lost"), "got: {msg}");
+            assert!(start.elapsed() < Duration::from_secs(10), "poison must be prompt");
         });
         j0.join().unwrap();
         j1.join().unwrap();

@@ -233,3 +233,251 @@ fn extreme_values_through_allreduce() {
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// Chaos suite: deterministic fault injection against live collectives.
+//
+// Every test below wraps each rank's in-process endpoint in a
+// [`FaultTransport`] driven by a seeded [`FaultPlan`] and runs a real
+// collective across 4 ranks. The contract under chaos is binary: a rank
+// either returns the bit-exact result of the equivalent clean run, or a
+// clean typed error (`Timeout` / `Transport` / `Corrupt`) within its
+// deadline. Panics and hangs are failures. Seeds come from
+// `ZCCL_CHAOS_SEED` (CI sweeps a fixed 3-seed matrix) with a fixed
+// default, so every run is reproducible.
+// ---------------------------------------------------------------------
+
+use std::time::{Duration, Instant};
+
+use zccl::collectives::{CollCtx, Communicator, Mode, ReduceOp};
+use zccl::coordinator::Metrics;
+use zccl::transport::fault::{FaultPlan, FaultTransport};
+use zccl::transport::memchan::MemFabric;
+use zccl::Error;
+
+const CHAOS_RANKS: usize = 4;
+/// The rank whose transport misbehaves in every chaos scenario.
+const FAULTY: usize = 1;
+
+/// Seed for the fault plans: `ZCCL_CHAOS_SEED` if set (the CI matrix
+/// sweeps 1..=3), else a fixed default.
+fn chaos_seed() -> u64 {
+    std::env::var("ZCCL_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+fn chaos_mode(kind: CompressorKind) -> Mode {
+    Mode::zccl(kind, ErrorBound::Abs(1e-3))
+}
+
+fn chaos_input(rank: usize) -> Vec<f32> {
+    (0..3000).map(|i| ((i + rank * 977) as f32 * 0.002).sin()).collect()
+}
+
+/// Per-rank fault plans: `faulty` gets `plan`, everyone else runs clean.
+fn plans_for(n: usize, faulty: usize, plan: FaultPlan) -> Vec<FaultPlan> {
+    (0..n)
+        .map(|r| if r == faulty { plan.clone() } else { FaultPlan::new(chaos_seed() ^ r as u64) })
+        .collect()
+}
+
+/// Spawn one thread per rank over a fresh in-process fabric, each rank's
+/// endpoint wrapped in a [`FaultTransport`] running its plan. Panics in
+/// any rank fail the test; typed errors are returned for inspection.
+fn run_chaos<R, F>(plans: Vec<FaultPlan>, f: F) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(&mut Communicator) -> R + Send + Sync + 'static,
+{
+    let f = std::sync::Arc::new(f);
+    let handles: Vec<_> = MemFabric::endpoints(plans.len())
+        .into_iter()
+        .zip(plans)
+        .map(|(t, plan)| {
+            let f = std::sync::Arc::clone(&f);
+            std::thread::spawn(move || {
+                let mut ft = FaultTransport::new(t, plan);
+                let mut comm = Communicator::new(&mut ft);
+                f(&mut comm)
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("chaos rank must not panic")).collect()
+}
+
+/// The collective under test, selected by index so the matrix can loop.
+fn chaos_op(ctx: &mut CollCtx, op: usize) -> Result<Vec<f32>, Error> {
+    let rank = ctx.rank();
+    let x = chaos_input(rank);
+    match op {
+        0 => ctx.allreduce(&x, ReduceOp::Sum),
+        1 => ctx.reduce_scatter(&x, ReduceOp::Sum).map(|(_, v)| v),
+        2 => ctx.allgather(&x[..200 + 13 * rank]),
+        _ => ctx.bcast((rank == 0).then_some(x.as_slice()), 0),
+    }
+}
+
+/// Drive the {collective} × {codec} matrix under one fault plan. Benign
+/// plans (duplicate, delay) must be fully transparent: every rank Ok and
+/// bit-exact against the clean run. Harmful plans (drop, corrupt, dead
+/// peer) must fail *cleanly*: at least one rank errors, every error is a
+/// typed `Timeout`/`Transport`/`Corrupt`, and any rank that does finish
+/// must still produce the bit-exact clean result — faults may stall or
+/// kill a collective but never silently corrupt its output.
+fn chaos_matrix(make_plan: impl Fn(u64) -> FaultPlan, harmful: bool) {
+    for kind in [CompressorKind::FzLight, CompressorKind::Szx] {
+        for op in 0..4usize {
+            let mode = chaos_mode(kind);
+            let clean = run_chaos(
+                plans_for(CHAOS_RANKS, FAULTY, FaultPlan::new(chaos_seed())),
+                move |c| {
+                    let mut ctx = CollCtx::over(c, mode);
+                    chaos_op(&mut ctx, op).expect("clean run must succeed")
+                },
+            );
+            let deadline = if harmful { 300 } else { 5000 };
+            let t0 = Instant::now();
+            let chaotic = run_chaos(
+                plans_for(CHAOS_RANKS, FAULTY, make_plan(chaos_seed())),
+                move |c| {
+                    let mut ctx = CollCtx::over(c, mode);
+                    ctx.set_timeout(Some(Duration::from_millis(deadline)));
+                    chaos_op(&mut ctx, op)
+                },
+            );
+            assert!(
+                t0.elapsed() < Duration::from_secs(20),
+                "op {op} under {kind:?}: chaos run must resolve promptly"
+            );
+            let mut errs = 0;
+            for (rank, r) in chaotic.iter().enumerate() {
+                match r {
+                    Ok(v) => assert_eq!(
+                        v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        clean[rank].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "op {op} under {kind:?}: rank {rank} finished with wrong bits"
+                    ),
+                    Err(e) => {
+                        errs += 1;
+                        assert!(
+                            matches!(
+                                e,
+                                Error::Timeout { .. } | Error::Transport(_) | Error::Corrupt(_)
+                            ),
+                            "op {op} under {kind:?}: rank {rank} got untyped error {e:?}"
+                        );
+                    }
+                }
+            }
+            if harmful {
+                assert!(errs > 0, "op {op} under {kind:?}: harmful plan must surface");
+            } else {
+                assert_eq!(errs, 0, "op {op} under {kind:?}: benign plan must be transparent");
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_duplicated_frames_are_transparent() {
+    chaos_matrix(|s| FaultPlan::new(s).duplicate_frames(1.0), false);
+}
+
+#[test]
+fn chaos_delayed_frames_are_transparent() {
+    chaos_matrix(|s| FaultPlan::new(s).delay_frames(1.0, Duration::from_millis(1)), false);
+}
+
+#[test]
+fn chaos_dropped_frames_fail_cleanly() {
+    chaos_matrix(|s| FaultPlan::new(s).drop_frames(1.0), true);
+}
+
+#[test]
+fn chaos_corrupt_frames_fail_cleanly() {
+    chaos_matrix(|s| FaultPlan::new(s).corrupt_frames(1.0), true);
+}
+
+#[test]
+fn chaos_dead_peer_fails_cleanly() {
+    chaos_matrix(|s| FaultPlan::new(s).kill_after(0), true);
+}
+
+/// Acceptance: a 4-rank ZCCL allreduce with one rank killed
+/// mid-collective (after its first two ring sends) returns a typed
+/// `Timeout` or `Transport` error on **every** surviving rank within the
+/// armed deadline, the killed rank reports its own death, at least one
+/// survivor's timeout names the dead peer in its pending-receive list,
+/// and the timeout lands in that survivor's `Metrics`.
+#[test]
+fn chaos_dead_rank_mid_allreduce_fails_survivors_within_deadline() {
+    let plan = FaultPlan::new(chaos_seed()).kill_after(2);
+    let t0 = Instant::now();
+    let results: Vec<(Result<Vec<f32>, Error>, Metrics)> =
+        run_chaos(plans_for(CHAOS_RANKS, FAULTY, plan), move |c| {
+            let mut ctx = CollCtx::over(c, chaos_mode(CompressorKind::FzLight));
+            ctx.set_timeout(Some(Duration::from_millis(400)));
+            let r = chaos_op(&mut ctx, 0);
+            (r, *ctx.metrics())
+        });
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "survivors must detect the dead rank promptly"
+    );
+    for (rank, (r, _)) in results.iter().enumerate() {
+        let e = r.as_ref().expect_err("no rank can finish the ring with rank 1 dead");
+        if rank == FAULTY {
+            assert!(
+                format!("{e}").contains("killed by fault plan"),
+                "dead rank reports its own death: {e}"
+            );
+        } else {
+            assert!(
+                matches!(e, Error::Timeout { .. } | Error::Transport(_)),
+                "rank {rank}: want Timeout or Transport, got {e:?}"
+            );
+        }
+    }
+    // The first survivor to starve is the dead rank's ring successor: its
+    // deadline expires on a receive posted against rank 1, the timeout
+    // names that pending (peer, tag), and Metrics counts it.
+    let starved = results.iter().enumerate().any(|(rank, (r, m))| {
+        rank != FAULTY
+            && m.timeouts > 0
+            && matches!(r, Err(Error::Timeout { pending })
+                if pending.iter().any(|&(peer, _)| peer == FAULTY))
+    });
+    assert!(starved, "some survivor must time out naming the dead peer as pending");
+}
+
+/// Acceptance: a single bit flipped in a compressed frame is caught by
+/// the CRC at delivery — before the codec ever parses the payload — and
+/// the error names the sending rank. The receiver's `Metrics` counts the
+/// corrupt frame.
+#[test]
+fn chaos_corruption_is_detected_before_decode_naming_sender() {
+    let plan = FaultPlan::new(chaos_seed()).corrupt_frames(1.0);
+    let results: Vec<(Result<Vec<f32>, Error>, Metrics)> =
+        run_chaos(plans_for(CHAOS_RANKS, FAULTY, plan), move |c| {
+            let mut ctx = CollCtx::over(c, chaos_mode(CompressorKind::FzLight));
+            ctx.set_timeout(Some(Duration::from_millis(400)));
+            let r = chaos_op(&mut ctx, 0);
+            (r, *ctx.metrics())
+        });
+    // Rank 2 sits directly after the faulty rank on the ring, so its
+    // first receive of rank 1's compressed frame fails verification. Had
+    // the bytes reached the codec, the error would be a decode failure
+    // with no rank attribution — the CRC message proves the frame was
+    // rejected at the wire.
+    let (r2, m2) = &results[2];
+    let e = r2.as_ref().expect_err("rank 2 must reject rank 1's corrupted frame");
+    let msg = format!("{e}");
+    assert!(msg.contains("crc mismatch"), "CRC must reject the frame: {msg}");
+    assert!(msg.contains("rank 1"), "error must name the sender: {msg}");
+    assert!(m2.corrupt_frames > 0, "receiver metrics must count the corrupt frame");
+    // Nobody downstream of the corruption can finish the ring.
+    for (rank, (r, _)) in results.iter().enumerate() {
+        if rank != FAULTY {
+            assert!(r.is_err(), "rank {rank} cannot complete with rank 1 corrupting");
+        }
+    }
+}
