@@ -1,0 +1,748 @@
+//! Symbolic message graphs — every collective's full communication
+//! schedule as per-rank send/receive scripts, derived from the same
+//! [`plan`](crate::analysis::plan) structs and [`crate::topology`]
+//! schedule generators the executors run, so the graph cannot drift from
+//! the wire.
+//!
+//! [`build`] produces an [`OpGraph`] for any `(collective, Algo, n,
+//! root, Topology)` shape without touching a transport: a [`Tags`]
+//! counter mirrors [`crate::collectives::Communicator::fresh_tags`], the
+//! ring/tree peers come from the shared schedule generators, and the
+//! hierarchical builders replay [`crate::collectives::hier`] exactly —
+//! including the inner leader-tier communicator (its own tag counter
+//! from zero) translated through [`crate::transport::group_wire_tag`],
+//! so every edge carries the *wire* tag a traced fabric would record.
+//!
+//! Each [`Ev`] is one logical message: `(peer, tag, fan, phase,
+//! payload)` in the order the rank posts (and blocks on) it. `fan` is
+//! the width of the tag window a segmented send may occupy
+//! (`tag .. tag + fan`); all sweeps and property tests size payloads so
+//! one segment suffices, making [`message_counts`] exactly the
+//! [`crate::transport::memchan::MessageLedger`] a traced run produces.
+
+use crate::analysis::plan::{
+    AllgatherPlan, AlltoallPlan, HierAllgatherPlan, HierAllreducePlan, HierBcastPlan,
+    HierScatterPlan, RingPlan, TreePlan, HIER_GROUP_SPAN,
+};
+use crate::collectives::{Algo, SEG_TAG_SPAN};
+use crate::topology::{binomial_bcast, binomial_bcast_in_group, ring_in_group, Topology};
+use crate::transport::memchan::MessageLedger;
+use crate::transport::{barrier_tag, group_wire_tag, BARRIER_GEN_SPAN, BARRIER_TAG_BASE};
+
+/// Direction of one scripted event, from the owning rank's view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// The rank posts a message to `peer` (never blocks: both transports
+    /// buffer sends).
+    Send,
+    /// The rank blocks until a matching message from `peer` arrives.
+    Recv,
+}
+
+/// What travels on the edge — diagnostic only; matching is by
+/// `(src, dst, tag)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload {
+    /// Zero-byte synchronisation frame (dissemination barrier).
+    Empty,
+    /// An 8-byte `u64` from a count/size exchange ring.
+    SizeU64,
+    /// Raw little-endian `f32` values.
+    Raw,
+    /// One compressed frame.
+    Frame,
+    /// A length-prefixed bundle of frames or records.
+    Bundle,
+}
+
+/// One scripted message event on one rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ev {
+    /// Send or receive.
+    pub dir: Dir,
+    /// The other endpoint (global rank).
+    pub peer: usize,
+    /// Wire tag of the message (post-`GroupTransport` translation).
+    pub tag: u64,
+    /// Width of the tag window a segmented transfer may fan into
+    /// (`tag .. tag + fan`); 1 for single-frame messages.
+    pub fan: u64,
+    /// Which stage of the schedule produced the edge (diagnostics).
+    pub phase: &'static str,
+    /// Payload class (diagnostics).
+    pub payload: Payload,
+}
+
+impl Ev {
+    fn snd(peer: usize, tag: u64, fan: u64, phase: &'static str, payload: Payload) -> Ev {
+        Ev { dir: Dir::Send, peer, tag, fan, phase, payload }
+    }
+    fn rcv(peer: usize, tag: u64, fan: u64, phase: &'static str, payload: Payload) -> Ev {
+        Ev { dir: Dir::Recv, peer, tag, fan, phase, payload }
+    }
+}
+
+/// The full symbolic schedule of one collective call on one
+/// communicator: per-rank ordered scripts plus the tag-counter windows
+/// the call reserved.
+#[derive(Debug, Clone)]
+pub struct OpGraph {
+    /// Short label ("allgather", "barrier", …).
+    pub name: &'static str,
+    /// Communicator size.
+    pub n: usize,
+    /// `scripts[r]` = rank `r`'s events in program order.
+    pub scripts: Vec<Vec<Ev>>,
+    /// `[base, end)` slices consumed from the communicator's monotonic
+    /// tag counter (the barrier's slice holds its *generation*; its wire
+    /// tags additionally carry [`BARRIER_TAG_BASE`]).
+    pub windows: Vec<(u64, u64)>,
+}
+
+impl OpGraph {
+    fn empty(name: &'static str, n: usize) -> OpGraph {
+        OpGraph { name, n, scripts: vec![Vec::new(); n], windows: Vec::new() }
+    }
+
+    /// Total messages the schedule puts on the wire (send events).
+    pub fn send_count(&self) -> u64 {
+        self.scripts
+            .iter()
+            .map(|sc| sc.iter().filter(|e| e.dir == Dir::Send).count() as u64)
+            .sum()
+    }
+}
+
+/// Mirror of the communicator's monotonic tag counter
+/// ([`crate::collectives::Communicator::fresh_tags`]): reservations are
+/// contiguous, start at zero, and must stay below [`BARRIER_TAG_BASE`].
+#[derive(Debug, Default, Clone)]
+pub struct Tags {
+    next: u64,
+}
+
+impl Tags {
+    /// A fresh counter (a new communicator).
+    pub fn new() -> Tags {
+        Tags::default()
+    }
+
+    /// Reserve `span` consecutive tags, returning the slice base.
+    pub fn reserve(&mut self, span: u64) -> u64 {
+        let base = self.next;
+        let end = base.checked_add(span).expect("tag counter overflow");
+        assert!(end <= BARRIER_TAG_BASE, "reservation would cross BARRIER_TAG_BASE");
+        self.next = end;
+        base
+    }
+}
+
+/// The nine collectives the verifier models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coll {
+    /// Dissemination barrier.
+    Barrier,
+    /// Binomial-tree broadcast.
+    Bcast,
+    /// Binomial-tree scatter.
+    Scatter,
+    /// Binomial-tree gather.
+    Gather,
+    /// Binomial-tree reduce.
+    Reduce,
+    /// Ring reduce-scatter.
+    ReduceScatter,
+    /// Ring allgather.
+    Allgather,
+    /// Reduce-scatter + shifted allgather.
+    Allreduce,
+    /// Pairwise-exchange alltoall.
+    Alltoall,
+}
+
+impl Coll {
+    /// Every modeled collective.
+    pub const ALL: [Coll; 9] = [
+        Coll::Barrier,
+        Coll::Bcast,
+        Coll::Scatter,
+        Coll::Gather,
+        Coll::Reduce,
+        Coll::ReduceScatter,
+        Coll::Allgather,
+        Coll::Allreduce,
+        Coll::Alltoall,
+    ];
+
+    /// Short label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Coll::Barrier => "barrier",
+            Coll::Bcast => "bcast",
+            Coll::Scatter => "scatter",
+            Coll::Gather => "gather",
+            Coll::Reduce => "reduce",
+            Coll::ReduceScatter => "reduce_scatter",
+            Coll::Allgather => "allgather",
+            Coll::Allreduce => "allreduce",
+            Coll::Alltoall => "alltoall",
+        }
+    }
+
+    /// Whether the collective takes a root rank.
+    pub fn rooted(self) -> bool {
+        matches!(self, Coll::Bcast | Coll::Scatter | Coll::Gather | Coll::Reduce)
+    }
+}
+
+/// Build the symbolic schedule of one collective call.
+///
+/// `root` is ignored for unrooted collectives; `topo` is consumed only
+/// by the `Hier` arms (absent = [`Topology::flat`], mirroring
+/// `resolve_topo`). The dispatch order — degenerate single-rank returns
+/// before or after tag reservation, hierarchical dispatch before
+/// reservation — replays the executors line for line, so the tag
+/// counter advances exactly as the runtime's does.
+pub fn build(
+    coll: Coll,
+    algo: Algo,
+    n: usize,
+    root: usize,
+    topo: Option<&Topology>,
+    tags: &mut Tags,
+) -> OpGraph {
+    assert!(n >= 1, "empty communicator");
+    if coll.rooted() {
+        assert!(root < n, "root {root} out of {n}");
+    }
+    match coll {
+        Coll::Barrier => barrier(n, tags),
+        Coll::ReduceScatter => {
+            if n == 1 {
+                OpGraph::empty("reduce_scatter", n)
+            } else {
+                reduce_scatter(algo, n, tags)
+            }
+        }
+        Coll::Allgather => {
+            if n == 1 {
+                OpGraph::empty("allgather", n)
+            } else if algo == Algo::Hier {
+                allgather_hier(n, topo, tags)
+            } else {
+                allgather_flat(algo, n, tags)
+            }
+        }
+        Coll::Allreduce => {
+            if n == 1 {
+                OpGraph::empty("allreduce", n)
+            } else if algo == Algo::Hier {
+                allreduce_hier(n, topo, tags)
+            } else {
+                let mut g = reduce_scatter(algo, n, tags);
+                let ag = allgather_flat(algo, n, tags);
+                append(&mut g, ag);
+                g.name = "allreduce";
+                g
+            }
+        }
+        Coll::Alltoall => {
+            if n == 1 {
+                OpGraph::empty("alltoall", n)
+            } else {
+                alltoall(algo, n, tags)
+            }
+        }
+        Coll::Bcast => {
+            if n == 1 {
+                OpGraph::empty("bcast", n)
+            } else if algo == Algo::Hier {
+                bcast_hier(n, root, topo, tags)
+            } else {
+                tree_down("bcast", n, root, wire_payload(algo), tags)
+            }
+        }
+        Coll::Scatter => {
+            if n == 1 {
+                OpGraph::empty("scatter", n)
+            } else if algo == Algo::Hier {
+                scatter_hier(n, root, topo, tags)
+            } else {
+                tree_down("scatter", n, root, Payload::Bundle, tags)
+            }
+        }
+        // Gather and reduce have no hierarchical arm: under `Hier` they
+        // run their flat schedules with leader-free compression.
+        Coll::Gather => {
+            if n == 1 {
+                OpGraph::empty("gather", n)
+            } else {
+                tree_up("gather", n, root, Payload::Bundle, tags)
+            }
+        }
+        Coll::Reduce => {
+            if n == 1 {
+                OpGraph::empty("reduce", n)
+            } else {
+                tree_up("reduce", n, root, wire_payload(algo), tags)
+            }
+        }
+    }
+}
+
+/// Exact per-`(src, dst, tag)` message counts the schedule produces —
+/// comparable with a traced fabric's ledger when every transfer fits one
+/// segment (payloads below `Mode::pipeline_bytes`).
+pub fn message_counts(ops: &[OpGraph]) -> MessageLedger {
+    let mut out = MessageLedger::new();
+    for op in ops {
+        for (me, sc) in op.scripts.iter().enumerate() {
+            for ev in sc {
+                if ev.dir == Dir::Send {
+                    *out.entry((me, ev.peer, ev.tag)).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn wire_payload(algo: Algo) -> Payload {
+    if algo == Algo::Plain {
+        Payload::Raw
+    } else {
+        Payload::Frame
+    }
+}
+
+fn append(g: &mut OpGraph, other: OpGraph) {
+    for (sc, extra) in g.scripts.iter_mut().zip(other.scripts) {
+        sc.extend(extra);
+    }
+    g.windows.extend(other.windows);
+}
+
+/// `exchange_sizes`: `n - 1` ring rounds of one 8-byte message each.
+fn push_size_ring(scripts: &mut [Vec<Ev>], ring: RingPlan, phase: &'static str) {
+    let n = ring.n;
+    for (me, sc) in scripts.iter_mut().enumerate() {
+        for t in 0..n - 1 {
+            sc.push(Ev::snd((me + 1) % n, ring.round_tag(t), 1, phase, Payload::SizeU64));
+            sc.push(Ev::rcv((me + n - 1) % n, ring.round_tag(t), 1, phase, Payload::SizeU64));
+        }
+    }
+}
+
+/// Default [`crate::transport::Transport::barrier`]: dissemination over
+/// `ceil(log2 n)` rounds of empty frames in the barrier tag namespace.
+/// The generation is reserved even for a single rank (the communicator
+/// reserves before the transport's early return).
+fn barrier(n: usize, tags: &mut Tags) -> OpGraph {
+    let generation = tags.reserve(BARRIER_GEN_SPAN);
+    let mut g = OpGraph::empty("barrier", n);
+    g.windows.push((generation, generation + BARRIER_GEN_SPAN));
+    if n <= 1 {
+        return g;
+    }
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let mut dist = 1usize;
+        let mut round = 0u64;
+        while dist < n {
+            let tag = barrier_tag(generation, round);
+            sc.push(Ev::snd((me + dist) % n, tag, 1, "barrier", Payload::Empty));
+            sc.push(Ev::rcv((me + n - dist) % n, tag, 1, "barrier", Payload::Empty));
+            dist *= 2;
+            round += 1;
+        }
+    }
+    g
+}
+
+/// Ring reduce-scatter: `n - 1` rounds, one message per rank per round,
+/// identical edges under every algorithm arm (`Zccl` only reorders the
+/// irecv posting, not the messages).
+fn reduce_scatter(algo: Algo, n: usize, tags: &mut Tags) -> OpGraph {
+    let base = tags.reserve(RingPlan::span(n));
+    let plan = RingPlan::at(base, n);
+    let mut g = OpGraph::empty("reduce_scatter", n);
+    g.windows.push((base, base + RingPlan::span(n)));
+    let p = wire_payload(algo);
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        for t in 0..n - 1 {
+            sc.push(Ev::snd((me + 1) % n, plan.round_tag(t), 1, "rs-ring", p));
+            sc.push(Ev::rcv((me + n - 1) % n, plan.round_tag(t), 1, "rs-ring", p));
+        }
+    }
+    g
+}
+
+/// Flat ring allgather: a count-exchange ring (all arms), a compressed
+/// size-exchange ring (`CColl`/`Zccl`), then `n - 1` data rounds. Only
+/// `Zccl` pipelines, so only its rounds fan past one tag; the rank/tag
+/// edges are otherwise arm-independent (the `shift` used by allreduce
+/// moves chunk *ownership*, not messages).
+fn allgather_flat(algo: Algo, n: usize, tags: &mut Tags) -> OpGraph {
+    let base = tags.reserve(AllgatherPlan::span(n));
+    let plan = AllgatherPlan::at(base, n);
+    let mut g = OpGraph::empty("allgather", n);
+    g.windows.push((base, base + AllgatherPlan::span(n)));
+    push_size_ring(&mut g.scripts, plan.counts_ring(), "ag-counts");
+    if matches!(algo, Algo::CColl | Algo::Zccl) {
+        push_size_ring(&mut g.scripts, plan.sizes_ring(), "ag-sizes");
+    }
+    let fan = if algo == Algo::Zccl { plan.seg_fan() } else { 1 };
+    let p = wire_payload(algo);
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        for t in 0..n - 1 {
+            sc.push(Ev::snd((me + 1) % n, plan.round_tag(t), fan, "ag-round", p));
+            sc.push(Ev::rcv((me + n - 1) % n, plan.round_tag(t), fan, "ag-round", p));
+        }
+    }
+    g
+}
+
+/// Pairwise-exchange alltoall: `Zccl`/`Hier` pre-exchange sizes over a
+/// ring, then rounds `1..n` pair `me` with `(me ± t) mod n` on one tag.
+fn alltoall(algo: Algo, n: usize, tags: &mut Tags) -> OpGraph {
+    let base = tags.reserve(AlltoallPlan::span(n));
+    let plan = AlltoallPlan::at(base, n);
+    let mut g = OpGraph::empty("alltoall", n);
+    g.windows.push((base, base + AlltoallPlan::span(n)));
+    if matches!(algo, Algo::Zccl | Algo::Hier) {
+        push_size_ring(&mut g.scripts, plan.sizes_ring(), "a2a-sizes");
+    }
+    let p = wire_payload(algo);
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        for t in 1..n {
+            sc.push(Ev::snd((me + t) % n, plan.pair_tag(t), 1, "a2a-pair", p));
+            sc.push(Ev::rcv((me + n - t) % n, plan.pair_tag(t), 1, "a2a-pair", p));
+        }
+    }
+    g
+}
+
+/// Binomial tree, root outward (bcast, scatter): non-roots receive from
+/// their parent first, then forward to each child, largest subtree
+/// first.
+fn tree_down(
+    name: &'static str,
+    n: usize,
+    root: usize,
+    payload: Payload,
+    tags: &mut Tags,
+) -> OpGraph {
+    let base = tags.reserve(TreePlan::span(n));
+    let plan = TreePlan::at(base, n);
+    let mut g = OpGraph::empty(name, n);
+    g.windows.push((base, base + TreePlan::span(n)));
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let (recv_step, send_steps) = binomial_bcast(me, root, n);
+        if me != root {
+            let s = recv_step.expect("non-root receives from its parent");
+            sc.push(Ev::rcv(s.peer, plan.step_tag(s.round), 1, "tree", payload));
+        }
+        for s in send_steps {
+            sc.push(Ev::snd(s.peer, plan.step_tag(s.round), 1, "tree", payload));
+        }
+    }
+    g
+}
+
+/// Binomial tree, leaves inward (gather, reduce): children are drained
+/// in reverse round order (deepest subtree first), then the partial goes
+/// up to the parent.
+fn tree_up(
+    name: &'static str,
+    n: usize,
+    root: usize,
+    payload: Payload,
+    tags: &mut Tags,
+) -> OpGraph {
+    let base = tags.reserve(TreePlan::span(n));
+    let plan = TreePlan::at(base, n);
+    let mut g = OpGraph::empty(name, n);
+    g.windows.push((base, base + TreePlan::span(n)));
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let (parent_step, child_steps) = binomial_bcast(me, root, n);
+        for s in child_steps.iter().rev() {
+            sc.push(Ev::rcv(s.peer, plan.step_tag(s.round), 1, "tree", payload));
+        }
+        if me != root {
+            let s = parent_step.expect("non-root has a parent");
+            sc.push(Ev::snd(s.peer, plan.step_tag(s.round), 1, "tree", payload));
+        }
+    }
+    g
+}
+
+/// Intra-node binomial broadcast of the leader's result (`Raw`, fast
+/// tier). No-op for single-member nodes.
+fn push_intra_down(sc: &mut Vec<Ev>, members: &[usize], local_idx: usize, tag_base: u64) {
+    if members.len() == 1 {
+        return;
+    }
+    let (recv_step, send_steps) = binomial_bcast_in_group(members, local_idx, 0);
+    if local_idx != 0 {
+        let s = recv_step.expect("non-leader member receives");
+        sc.push(Ev::rcv(s.peer, tag_base + s.round as u64, 1, "intra-down", Payload::Raw));
+    }
+    for s in send_steps {
+        sc.push(Ev::snd(s.peer, tag_base + s.round as u64, 1, "intra-down", Payload::Raw));
+    }
+}
+
+/// Mirror of `hier::resolve_topo`'s leader-tier tag-budget guard.
+fn assert_leader_budget(topo: &Topology) {
+    assert!(
+        (topo.nodes() as u64 + 3) * SEG_TAG_SPAN <= HIER_GROUP_SPAN,
+        "leader tier exceeds HIER_GROUP_SPAN"
+    );
+}
+
+/// Hierarchical allreduce: raw member partials up to the leader, the
+/// flat ZCCL reduce-scatter + allgather over the leader group (an inner
+/// communicator whose tags start at zero, translated onto
+/// `group_base + tag` by the [`crate::transport::GroupTransport`] view),
+/// then the raw result down each node's member binomial.
+fn allreduce_hier(n: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
+    let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
+    assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
+    assert_leader_budget(&topo);
+    let base = tags.reserve(HierAllreducePlan::span(n));
+    let plan = HierAllreducePlan::at(base, n);
+    let mut g = OpGraph::empty("allreduce", n);
+    g.windows.push((base, base + HierAllreducePlan::span(n)));
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let members = topo.members(topo.node_of(me));
+        if topo.local_index(me) == 0 {
+            for &mr in &members[1..] {
+                sc.push(Ev::rcv(mr, plan.up_tag(), 1, "hier-up", Payload::Raw));
+            }
+        } else {
+            sc.push(Ev::snd(topo.leader_of(me), plan.up_tag(), 1, "hier-up", Payload::Raw));
+        }
+    }
+
+    if topo.nodes() > 1 {
+        let leaders = topo.leaders();
+        let mut inner_tags = Tags::new();
+        let mut inner = reduce_scatter(Algo::Zccl, leaders.len(), &mut inner_tags);
+        append(&mut inner, allgather_flat(Algo::Zccl, leaders.len(), &mut inner_tags));
+        for (i, inner_sc) in inner.scripts.into_iter().enumerate() {
+            let sc = &mut g.scripts[leaders[i]];
+            for ev in inner_sc {
+                sc.push(Ev {
+                    peer: leaders[ev.peer],
+                    tag: group_wire_tag(plan.group_base(), ev.tag),
+                    phase: "hier-inter",
+                    ..ev
+                });
+            }
+        }
+    }
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let members = topo.members(topo.node_of(me));
+        push_intra_down(sc, members, topo.local_index(me), plan.down().base);
+    }
+    g
+}
+
+/// Hierarchical allgather: raw member chunks up, per-node frame bundles
+/// around the leader ring, raw gathered vector down.
+fn allgather_hier(n: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
+    let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
+    assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
+    assert_leader_budget(&topo);
+    let base = tags.reserve(HierAllgatherPlan::span(n));
+    let plan = HierAllgatherPlan::at(base, n);
+    let mut g = OpGraph::empty("allgather", n);
+    g.windows.push((base, base + HierAllgatherPlan::span(n)));
+    let nnodes = topo.nodes();
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let node = topo.node_of(me);
+        let members = topo.members(node);
+        let local_idx = topo.local_index(me);
+        if local_idx != 0 {
+            sc.push(Ev::snd(topo.leader_of(me), plan.up_tag(), 1, "hier-up", Payload::Raw));
+            push_intra_down(sc, members, local_idx, plan.down().base);
+            continue;
+        }
+        for &mr in &members[1..] {
+            sc.push(Ev::rcv(mr, plan.up_tag(), 1, "hier-up", Payload::Raw));
+        }
+        let lring = ring_in_group(topo.leaders(), node);
+        let lplan = plan.leader_ring();
+        for t in 0..nnodes - 1 {
+            sc.push(Ev::snd(lring.next, lplan.round_tag(t), 1, "hier-ring", Payload::Bundle));
+            sc.push(Ev::rcv(lring.prev, lplan.round_tag(t), 1, "hier-ring", Payload::Bundle));
+        }
+        push_intra_down(sc, members, 0, plan.down().base);
+    }
+    g
+}
+
+/// Hierarchical bcast: optional root → root-leader frame hop, the frame
+/// verbatim down the leader binomial, raw fan-out inside each node.
+fn bcast_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
+    let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
+    assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
+    assert_leader_budget(&topo);
+    let base = tags.reserve(HierBcastPlan::span(n));
+    let plan = HierBcastPlan::at(base, n);
+    let mut g = OpGraph::empty("bcast", n);
+    g.windows.push((base, base + HierBcastPlan::span(n)));
+    let root_node = topo.node_of(root);
+    let root_leader = topo.leader_of(root);
+    let ltree = plan.leader_tree();
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let node = topo.node_of(me);
+        let members = topo.members(node);
+        let local_idx = topo.local_index(me);
+        if me == root && me != root_leader {
+            sc.push(Ev::snd(root_leader, plan.hop_tag(), 1, "hier-hop", Payload::Frame));
+        }
+        if local_idx == 0 {
+            let (recv_step, send_steps) = binomial_bcast_in_group(topo.leaders(), node, root_node);
+            if me == root && me == root_leader {
+                // Compresses its own frame — nothing to receive.
+            } else if node == root_node {
+                sc.push(Ev::rcv(root, plan.hop_tag(), 1, "hier-hop", Payload::Frame));
+            } else {
+                let s = recv_step.expect("non-root-node leader receives");
+                sc.push(Ev::rcv(s.peer, ltree.step_tag(s.round), 1, "hier-tree", Payload::Frame));
+            }
+            for s in send_steps {
+                sc.push(Ev::snd(s.peer, ltree.step_tag(s.round), 1, "hier-tree", Payload::Frame));
+            }
+            push_intra_down(sc, members, 0, plan.down().base);
+        } else {
+            push_intra_down(sc, members, local_idx, plan.down().base);
+        }
+    }
+    g
+}
+
+/// Hierarchical scatter: optional root → root-leader bundle hop, subtree
+/// bundles down the leader binomial, then one raw chunk per member on
+/// the single down tag (distinct destinations, so one tag suffices).
+fn scatter_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
+    let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
+    assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
+    assert_leader_budget(&topo);
+    let base = tags.reserve(HierScatterPlan::span(n));
+    let plan = HierScatterPlan::at(base, n);
+    let mut g = OpGraph::empty("scatter", n);
+    g.windows.push((base, base + HierScatterPlan::span(n)));
+    let root_node = topo.node_of(root);
+    let root_leader = topo.leader_of(root);
+    let ltree = plan.leader_tree();
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let node = topo.node_of(me);
+        let members = topo.members(node);
+        let local_idx = topo.local_index(me);
+        if me == root && me != root_leader {
+            sc.push(Ev::snd(root_leader, plan.hop_tag(), 1, "hier-hop", Payload::Bundle));
+        }
+        if local_idx == 0 {
+            let (recv_step, send_steps) = binomial_bcast_in_group(topo.leaders(), node, root_node);
+            if me == root && me == root_leader {
+                // Holds the root bundle already.
+            } else if node == root_node {
+                sc.push(Ev::rcv(root, plan.hop_tag(), 1, "hier-hop", Payload::Bundle));
+            } else {
+                let s = recv_step.expect("non-root-node leader receives");
+                sc.push(Ev::rcv(s.peer, ltree.step_tag(s.round), 1, "hier-tree", Payload::Bundle));
+            }
+            for s in send_steps {
+                sc.push(Ev::snd(s.peer, ltree.step_tag(s.round), 1, "hier-tree", Payload::Bundle));
+            }
+            for &mr in members {
+                if mr != me {
+                    sc.push(Ev::snd(mr, plan.down_tag(), 1, "hier-down", Payload::Raw));
+                }
+            }
+        } else {
+            sc.push(Ev::rcv(topo.leader_of(me), plan.down_tag(), 1, "hier-down", Payload::Raw));
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_bcast_has_n_minus_1_messages() {
+        for n in 2..=9usize {
+            for root in [0, n - 1] {
+                let mut t = Tags::new();
+                let g = build(Coll::Bcast, Algo::Zccl, n, root, None, &mut t);
+                assert_eq!(g.send_count(), n as u64 - 1, "n={n} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_rounds_are_log2() {
+        for (n, rounds) in [(2usize, 1u64), (3, 2), (4, 2), (5, 3), (8, 3), (9, 4)] {
+            let mut t = Tags::new();
+            let g = build(Coll::Barrier, Algo::Plain, n, 0, None, &mut t);
+            assert_eq!(g.send_count(), n as u64 * rounds, "n={n}");
+            for sc in &g.scripts {
+                for ev in sc {
+                    assert!(ev.tag & BARRIER_TAG_BASE != 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_zccl_rounds_fan_wide() {
+        let mut t = Tags::new();
+        let g = build(Coll::Allgather, Algo::Zccl, 4, 0, None, &mut t);
+        let fans: Vec<u64> = g.scripts[0]
+            .iter()
+            .filter(|e| e.phase == "ag-round" && e.dir == Dir::Send)
+            .map(|e| e.fan)
+            .collect();
+        assert_eq!(fans, vec![SEG_TAG_SPAN; 3]);
+        // Plain rounds stay single-tag.
+        let mut t = Tags::new();
+        let g = build(Coll::Allgather, Algo::Plain, 4, 0, None, &mut t);
+        assert!(g.scripts[0].iter().all(|e| e.fan == 1));
+    }
+
+    #[test]
+    fn hier_flat_topology_degenerates_to_flat_zccl_over_all_ranks() {
+        // On a rank-per-node topology the up/down tiers vanish and the
+        // leader tier is the whole communicator.
+        let n = 5;
+        let mut t = Tags::new();
+        let g = build(Coll::Allreduce, Algo::Hier, n, 0, None, &mut t);
+        let mut inner_tags = Tags::new();
+        let mut flat = reduce_scatter(Algo::Zccl, n, &mut inner_tags);
+        append(&mut flat, allgather_flat(Algo::Zccl, n, &mut inner_tags));
+        assert_eq!(g.send_count(), flat.send_count());
+        assert!(g.scripts.iter().flatten().all(|e| e.phase == "hier-inter"));
+    }
+
+    #[test]
+    fn single_rank_is_silent_but_barrier_still_reserves() {
+        for coll in Coll::ALL {
+            let mut t = Tags::new();
+            let g = build(coll, Algo::Zccl, 1, 0, None, &mut t);
+            assert_eq!(g.send_count(), 0, "{}", coll.name());
+            if coll == Coll::Barrier {
+                assert_eq!(g.windows, vec![(0, BARRIER_GEN_SPAN)]);
+            } else {
+                assert!(g.windows.is_empty(), "{}", coll.name());
+            }
+        }
+    }
+}

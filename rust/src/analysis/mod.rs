@@ -1,0 +1,29 @@
+//! Static analysis of collective communication schedules.
+//!
+//! Every collective in this crate derives its wire choreography — peers,
+//! tags, message order — from the pure plan descriptions in [`plan`]
+//! plus the schedule generators in [`crate::topology`]. Because those
+//! inputs are deterministic functions of `(collective, Algo, nranks,
+//! Topology, root)`, the full message graph of any call can be computed
+//! *without running it*. This module does exactly that and proves
+//! schedule-safety properties over the result:
+//!
+//! - [`plan`] — tag-window layouts shared by the executors and the
+//!   analyzer (the single source of truth; executors import these).
+//! - [`graph`] — builds the symbolic per-rank send/recv scripts for any
+//!   collective shape, including the hierarchical arm's inner leader
+//!   communicator after `GroupTransport` tag translation.
+//! - [`verify`] — checks deadlock-freedom, send/recv match
+//!   completeness, tag-space safety (disjoint reservations, namespace
+//!   separation, per-link fan-window disjointness), and buffer-window
+//!   disjointness; sweeps all arms via [`verify::verify_all`].
+//!
+//! The sweep runs as `zccl verify` (an enforcing CI gate) and the graphs
+//! are cross-validated against real traffic by the ledger property test
+//! in `tests/schedule_verifier.rs`: a traced in-memory fabric must
+//! record *exactly* the per-`(src, dst, tag)` message counts the graph
+//! predicts.
+
+pub mod graph;
+pub mod plan;
+pub mod verify;

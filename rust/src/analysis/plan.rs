@@ -1,0 +1,359 @@
+//! Pure tag-layout plans — the single source of truth for every
+//! collective's tag arithmetic.
+//!
+//! Each collective reserves ONE contiguous slice of the communicator's
+//! tag counter ([`crate::collectives::Communicator::fresh_tags`]) sized
+//! by the plan's `span`, then derives every wire tag through the plan's
+//! accessors. The executors ([`crate::collectives`]) and the static
+//! schedule verifier ([`crate::analysis`]) both consume these plans, so
+//! the verifier's predicted tags are — by construction — the tags the
+//! runtime puts on the wire. Nothing in this module touches a transport:
+//! plans are plain arithmetic over `(base, n)`.
+//!
+//! The hierarchical plans fold what used to be two or three consecutive
+//! `fresh_tags` calls into one span. Because consecutive reservations on
+//! a monotonic counter are contiguous, the resulting tag values are
+//! identical to the historical layout — the fold only makes the layout
+//! *inspectable*.
+
+use crate::collectives::SEG_TAG_SPAN;
+use crate::topology::tree_rounds;
+
+/// Tag span reserved for one hierarchical collective's inter-leader
+/// tier: the leader group wraps the fabric in a
+/// [`crate::transport::GroupTransport`] based here, and the flat
+/// collective run over it lands on `base + inner_tag`
+/// ([`crate::transport::group_wire_tag`]). Sized so the leader tier's
+/// largest flat reservation — an allgather's
+/// `(nodes + 2) * SEG_TAG_SPAN` — fits for any plausible node count;
+/// [`crate::collectives::hier`] rejects topologies that would not.
+pub const HIER_GROUP_SPAN: u64 = 1 << 33;
+
+/// Ring schedule over `n` ranks: one tag per round, `n - 1` rounds, with
+/// one spare so the span is exactly `n`. Used by the flat reduce-scatter,
+/// the `u64` size exchange, and the hierarchical allgather's
+/// leader-bundle ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Ring size.
+    pub n: usize,
+}
+
+impl RingPlan {
+    /// Tags to reserve for a ring over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        n as u64
+    }
+    /// Bind a reserved `base` to a ring of `n` ranks.
+    pub fn at(base: u64, n: usize) -> RingPlan {
+        RingPlan { base, n }
+    }
+    /// Wire tag of ring round `t` (`t < n - 1`).
+    pub fn round_tag(&self, t: usize) -> u64 {
+        self.base + t as u64
+    }
+}
+
+/// Binomial-tree schedule (bcast, scatter, gather, reduce, and the
+/// hierarchical down/leader trees): one tag per tree round, spanning
+/// `tree_rounds(n) + 1` so even the deepest step plus the root's spare
+/// fit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreePlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Communicator size the rounds were sized for.
+    pub n: usize,
+}
+
+impl TreePlan {
+    /// Tags to reserve for a binomial tree over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        tree_rounds(n) as u64 + 1
+    }
+    /// Bind a reserved `base` to a tree over `n` ranks.
+    pub fn at(base: u64, n: usize) -> TreePlan {
+        TreePlan { base, n }
+    }
+    /// Wire tag of tree round `round`.
+    pub fn step_tag(&self, round: usize) -> u64 {
+        self.base + round as u64
+    }
+}
+
+/// Ring allgather with segmented rounds (§3.5.1): a count exchange, a
+/// compressed-size exchange, then `n - 1` ring rounds each owning a
+/// [`SEG_TAG_SPAN`]-wide fan for its pipeline segments.
+///
+/// Layout within the span (relative to `base`):
+///
+/// ```text
+/// [0, n)                               count-exchange ring
+/// [n, 2n)                              size-exchange ring (compressed modes)
+/// [(t+1)*SEG_TAG_SPAN, +SEG_TAG_SPAN)  round-t segment fan, t in 0..n-1
+/// ```
+///
+/// The two exchange rings fit below the first round's fan because
+/// `2n <= SEG_TAG_SPAN` for every rank count the transports support —
+/// the schedule verifier checks the bound for every swept shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllgatherPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Communicator size.
+    pub n: usize,
+}
+
+impl AllgatherPlan {
+    /// Tags to reserve for a segmented ring allgather over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        (n as u64 + 2) * SEG_TAG_SPAN
+    }
+    /// Bind a reserved `base` to an allgather over `n` ranks.
+    pub fn at(base: u64, n: usize) -> AllgatherPlan {
+        AllgatherPlan { base, n }
+    }
+    /// Ring plan of the element-count exchange.
+    pub fn counts_ring(&self) -> RingPlan {
+        RingPlan::at(self.base, self.n)
+    }
+    /// Ring plan of the compressed-size exchange.
+    pub fn sizes_ring(&self) -> RingPlan {
+        RingPlan::at(self.base + self.n as u64, self.n)
+    }
+    /// First tag of ring round `t`'s segment fan (`t < n - 1`); segments
+    /// `i` of the round travel on `round_tag(t) + i`, `i <` [`Self::seg_fan`].
+    pub fn round_tag(&self, t: usize) -> u64 {
+        self.base + (t as u64 + 1) * SEG_TAG_SPAN
+    }
+    /// Width of each round's segment fan.
+    pub fn seg_fan(&self) -> u64 {
+        SEG_TAG_SPAN
+    }
+}
+
+/// Pairwise-exchange alltoall: round `t` pairs each rank with
+/// `(rank + t) % n` on one tag, plus a size-exchange ring for the
+/// compressed modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AlltoallPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Communicator size.
+    pub n: usize,
+}
+
+impl AlltoallPlan {
+    /// Tags to reserve for an alltoall over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        2 * n as u64
+    }
+    /// Bind a reserved `base` to an alltoall over `n` ranks.
+    pub fn at(base: u64, n: usize) -> AlltoallPlan {
+        AlltoallPlan { base, n }
+    }
+    /// Wire tag of pairwise round `t` (`1 <= t < n`).
+    pub fn pair_tag(&self, t: usize) -> u64 {
+        self.base + t as u64
+    }
+    /// Ring plan of the compressed-size exchange.
+    pub fn sizes_ring(&self) -> RingPlan {
+        RingPlan::at(self.base + self.n as u64, self.n)
+    }
+}
+
+/// Two-level allreduce (`Algo::Hier`): intra-node raw up-links on one
+/// tag, a [`HIER_GROUP_SPAN`]-wide leader tier (flat reduce-scatter +
+/// allgather over a group view), then an intra-node result broadcast
+/// down a binomial tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierAllreducePlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Total communicator size (not the leader count).
+    pub n: usize,
+}
+
+impl HierAllreducePlan {
+    /// Tags to reserve for a hierarchical allreduce over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        1 + HIER_GROUP_SPAN + TreePlan::span(n)
+    }
+    /// Bind a reserved `base` to a hierarchical allreduce over `n` ranks.
+    pub fn at(base: u64, n: usize) -> HierAllreducePlan {
+        HierAllreducePlan { base, n }
+    }
+    /// Tag of the member → leader raw partial up-link.
+    pub fn up_tag(&self) -> u64 {
+        self.base
+    }
+    /// Group-view tag base of the inter-leader tier.
+    pub fn group_base(&self) -> u64 {
+        self.base + 1
+    }
+    /// Tree plan of the intra-node result broadcast.
+    pub fn down(&self) -> TreePlan {
+        TreePlan::at(self.base + 1 + HIER_GROUP_SPAN, self.n)
+    }
+}
+
+/// Two-level allgather: member chunks up on one tag, compressed bundles
+/// around the leader ring, result broadcast down the intra-node tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierAllgatherPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Total communicator size.
+    pub n: usize,
+}
+
+impl HierAllgatherPlan {
+    /// Tags to reserve for a hierarchical allgather over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        1 + RingPlan::span(n) + TreePlan::span(n)
+    }
+    /// Bind a reserved `base` to a hierarchical allgather over `n` ranks.
+    pub fn at(base: u64, n: usize) -> HierAllgatherPlan {
+        HierAllgatherPlan { base, n }
+    }
+    /// Tag of the member → leader raw chunk up-link.
+    pub fn up_tag(&self) -> u64 {
+        self.base
+    }
+    /// Ring plan of the inter-leader bundle ring (rounds indexed by
+    /// node count; the span is sized for `n` ranks, an upper bound).
+    pub fn leader_ring(&self) -> RingPlan {
+        RingPlan::at(self.base + 1, self.n)
+    }
+    /// Tree plan of the intra-node result broadcast.
+    pub fn down(&self) -> TreePlan {
+        TreePlan::at(self.base + 1 + RingPlan::span(self.n), self.n)
+    }
+}
+
+/// Two-level bcast: an optional root → root-leader hop, a binomial tree
+/// over the leaders, then the intra-node tree down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierBcastPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Total communicator size.
+    pub n: usize,
+}
+
+impl HierBcastPlan {
+    /// Tags to reserve for a hierarchical bcast over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        1 + 2 * TreePlan::span(n)
+    }
+    /// Bind a reserved `base` to a hierarchical bcast over `n` ranks.
+    pub fn at(base: u64, n: usize) -> HierBcastPlan {
+        HierBcastPlan { base, n }
+    }
+    /// Tag of the non-leader-root → root-leader frame hop.
+    pub fn hop_tag(&self) -> u64 {
+        self.base
+    }
+    /// Tree plan of the inter-leader frame broadcast.
+    pub fn leader_tree(&self) -> TreePlan {
+        TreePlan::at(self.base + 1, self.n)
+    }
+    /// Tree plan of the intra-node broadcast.
+    pub fn down(&self) -> TreePlan {
+        TreePlan::at(self.base + 1 + TreePlan::span(self.n), self.n)
+    }
+}
+
+/// Two-level scatter: an optional root → root-leader bundle hop, subtree
+/// bundles down the leader tree, then one raw chunk per member on a
+/// single tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierScatterPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Total communicator size.
+    pub n: usize,
+}
+
+impl HierScatterPlan {
+    /// Tags to reserve for a hierarchical scatter over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        1 + TreePlan::span(n) + 1
+    }
+    /// Bind a reserved `base` to a hierarchical scatter over `n` ranks.
+    pub fn at(base: u64, n: usize) -> HierScatterPlan {
+        HierScatterPlan { base, n }
+    }
+    /// Tag of the non-leader-root → root-leader bundle hop.
+    pub fn hop_tag(&self) -> u64 {
+        self.base
+    }
+    /// Tree plan of the inter-leader subtree-bundle forwarding.
+    pub fn leader_tree(&self) -> TreePlan {
+        TreePlan::at(self.base + 1, self.n)
+    }
+    /// Tag of the leader → member raw chunk down-link (one tag; each
+    /// member's chunk is a distinct `(src, dst)` edge).
+    pub fn down_tag(&self) -> u64 {
+        self.base + 1 + TreePlan::span(self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_cover_their_accessors() {
+        for n in 1..=16usize {
+            let rs = RingPlan::at(0, n);
+            assert!(rs.round_tag(n.saturating_sub(1)) < RingPlan::span(n).max(1) + 1);
+            let tree = TreePlan::at(0, n);
+            assert!(tree.step_tag(tree_rounds(n)) < TreePlan::span(n));
+            let ag = AllgatherPlan::at(0, n);
+            assert!(ag.counts_ring().round_tag(n.saturating_sub(1)) < AllgatherPlan::span(n));
+            assert!(ag.sizes_ring().round_tag(n.saturating_sub(1)) < ag.round_tag(0));
+            if n >= 2 {
+                // Every round's full segment fan fits strictly before the
+                // next round's fan — and the last fan ends at the span end.
+                for t in 0..n - 2 {
+                    assert_eq!(ag.round_tag(t) + ag.seg_fan(), ag.round_tag(t + 1));
+                }
+                assert_eq!(ag.round_tag(n - 2) + ag.seg_fan(), ag.base + AllgatherPlan::span(n));
+            }
+            let a2a = AlltoallPlan::at(0, n);
+            assert!(a2a.pair_tag(n.saturating_sub(1)) < a2a.sizes_ring().base + n as u64);
+            assert_eq!(a2a.sizes_ring().round_tag(0), n as u64);
+        }
+    }
+
+    #[test]
+    fn hier_spans_match_the_historical_three_reservation_layout() {
+        // The folded spans must reproduce the tag values the executors
+        // produced when they issued consecutive fresh_tags calls.
+        let n = 12;
+        let h = HierAllreducePlan::at(100, n);
+        assert_eq!(h.up_tag(), 100);
+        assert_eq!(h.group_base(), 101);
+        assert_eq!(h.down().base, 101 + HIER_GROUP_SPAN);
+        assert_eq!(HierAllreducePlan::span(n), 1 + HIER_GROUP_SPAN + TreePlan::span(n));
+
+        let g = HierAllgatherPlan::at(7, n);
+        assert_eq!(g.up_tag(), 7);
+        assert_eq!(g.leader_ring().base, 8);
+        assert_eq!(g.down().base, 8 + n as u64);
+
+        let b = HierBcastPlan::at(3, n);
+        assert_eq!(b.hop_tag(), 3);
+        assert_eq!(b.leader_tree().base, 4);
+        assert_eq!(b.down().base, 4 + TreePlan::span(n));
+
+        let s = HierScatterPlan::at(5, n);
+        assert_eq!(s.hop_tag(), 5);
+        assert_eq!(s.leader_tree().base, 6);
+        assert_eq!(s.down_tag(), 6 + TreePlan::span(n));
+        assert_eq!(HierScatterPlan::span(n), s.down_tag() - 5 + 1);
+    }
+}

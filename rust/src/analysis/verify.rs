@@ -1,0 +1,626 @@
+//! Static checks over symbolic schedules ([`crate::analysis::graph`]):
+//! prove, for every swept `(collective, algorithm, ranks, topology,
+//! root)` shape, that the wire choreography is deadlock-free, fully
+//! matched, tag-safe, and buffer-disjoint — before any test spawns a
+//! thread.
+//!
+//! Four families of checks run per case:
+//!
+//! 1. **Deadlock-freedom** — a dataflow simulation over the per-rank
+//!    scripts: sends are buffered (both transports accept without
+//!    rendezvous), receives block on a `(src, dst, tag)` count. If the
+//!    simulation wedges with events outstanding, the real schedule can
+//!    wedge too.
+//! 2. **Match completeness** — every send is consumed by exactly one
+//!    receive and vice versa (no orphan sends leaking buffers or stale
+//!    messages into later ops, no receive waiting on a message nobody
+//!    sends).
+//! 3. **Tag-space safety** — reservations from the shared counter are
+//!    disjoint and below [`BARRIER_TAG_BASE`]; every edge (after
+//!    `GroupTransport` translation, including its segment fan) lands
+//!    inside a window its op reserved; barrier traffic stays inside the
+//!    generation namespace and nothing touches the abort bit; no two
+//!    sends on one `(src, dst)` link have overlapping `tag .. tag+fan`
+//!    windows — the check that catches tag aliasing of the kind fixed in
+//!    `group_wire_tag`.
+//! 4. **Buffer-window disjointness** — `chunk_ranges` tiles `0..total`
+//!    exactly with balanced sizes, and the hierarchical scatter's
+//!    binomial subtree enumeration covers every rank exactly once from
+//!    any root.
+//!
+//! [`verify_all`] sweeps all of this (several hundred cases at the
+//! default bound) and is enforced by `zccl verify` in CI and by
+//! `tests/schedule_verifier.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::graph::{self, Coll, Dir, OpGraph, Tags};
+use crate::collectives::{chunk_ranges, Algo, SEG_TAG_SPAN};
+use crate::topology::{binomial_subtree_into, Topology};
+use crate::transport::{ABORT_TAG, BARRIER_TAG_BASE};
+
+/// One verification failure: which case, which check, what went wrong.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Case label, e.g. `allgather/zccl/n5/root0`.
+    pub case: String,
+    /// Check family, e.g. `deadlock`, `tag-collision`.
+    pub check: &'static str,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+/// Aggregate result of a sweep.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Schedules checked.
+    pub cases: usize,
+    /// Total messages across all checked schedules.
+    pub messages: u64,
+    /// Every failure found (empty = verified).
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// True when no check failed.
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Single-line JSON verdict for CI logs.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = format!(
+            "{{\"ok\":{},\"cases\":{},\"messages\":{},\"findings\":[",
+            self.ok(),
+            self.cases,
+            self.messages
+        );
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"case\":\"{}\",\"check\":\"{}\",\"detail\":\"{}\"}}",
+                esc(&f.case),
+                esc(f.check),
+                esc(&f.detail)
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Most findings kept per case: one broken schedule fails loudly without
+/// drowning the report.
+const MAX_FINDINGS_PER_CASE: usize = 5;
+
+/// Send/recv tallies per `(src, dst, tag)` edge.
+type Balance = BTreeMap<(usize, usize, u64), (u64, u64)>;
+/// Send fan-windows `(lo, hi, op)` per `(src, dst)` link.
+type LinkWindows = BTreeMap<(usize, usize), Vec<(u64, u64, &'static str)>>;
+/// Buffered-but-unreceived message counts per `(src, dst, tag)`.
+type Pending = BTreeMap<(usize, usize, u64), u64>;
+
+/// Whether `[logical, logical + fan)` lies inside some reserved window.
+fn contained(ops: &[OpGraph], logical: u64, fan: u64) -> bool {
+    for op in ops {
+        for &(b, e) in &op.windows {
+            if logical >= b && logical.checked_add(fan).is_some_and(|hi| hi <= e) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Run every check over one case — a sequence of ops issued on one
+/// communicator (windows drawn from one shared [`Tags`] counter, scripts
+/// executed per rank in order). Returns (message count, findings).
+pub fn check_case(case: &str, ops: &[OpGraph]) -> (u64, Vec<Finding>) {
+    let mut findings = Vec::new();
+    let fail = |check: &'static str, detail: String, findings: &mut Vec<Finding>| {
+        if findings.len() < MAX_FINDINGS_PER_CASE {
+            findings.push(Finding { case: case.to_string(), check, detail });
+        }
+    };
+
+    let messages: u64 = ops.iter().map(|op| op.send_count()).sum();
+    let n = ops.first().map(|op| op.n).unwrap_or(0);
+    for op in ops {
+        if op.n != n {
+            fail(
+                "shape",
+                format!("op {} has n={} but case has n={}", op.name, op.n, n),
+                &mut findings,
+            );
+            return (messages, findings);
+        }
+    }
+
+    // (1) Reservation windows: ascending, disjoint, under the barrier
+    // namespace. Ops reserve in issue order from a monotonic counter, so
+    // order violations are themselves findings.
+    let mut prev_end = 0u64;
+    for op in ops {
+        for &(b, e) in &op.windows {
+            if b < prev_end {
+                fail(
+                    "reservation",
+                    format!("{}: window [{b},{e}) overlaps previous end {prev_end}", op.name),
+                    &mut findings,
+                );
+            }
+            if e > BARRIER_TAG_BASE {
+                fail(
+                    "reservation",
+                    format!("{}: window [{b},{e}) crosses BARRIER_TAG_BASE", op.name),
+                    &mut findings,
+                );
+            }
+            prev_end = prev_end.max(e);
+        }
+    }
+
+    // (2) Per-edge checks: endpoints, fan, namespaces, containment.
+    for op in ops {
+        for (me, sc) in op.scripts.iter().enumerate() {
+            for ev in sc {
+                if ev.peer >= n || ev.peer == me {
+                    fail(
+                        "endpoint",
+                        format!("{}: rank {me} targets peer {} of {n}", op.name, ev.peer),
+                        &mut findings,
+                    );
+                    continue;
+                }
+                if ev.fan == 0 || ev.fan > SEG_TAG_SPAN {
+                    fail(
+                        "fan",
+                        format!("{}: rank {me} tag {:#x} fan {}", op.name, ev.tag, ev.fan),
+                        &mut findings,
+                    );
+                }
+                if ev.tag & ABORT_TAG != 0 {
+                    fail(
+                        "namespace",
+                        format!("{}: rank {me} tag {:#x} sets the abort bit", op.name, ev.tag),
+                        &mut findings,
+                    );
+                    continue;
+                }
+                let is_barrier_tag = ev.tag & BARRIER_TAG_BASE != 0;
+                if is_barrier_tag != (ev.phase == "barrier") {
+                    fail(
+                        "namespace",
+                        format!(
+                            "{}: rank {me} phase {} tag {:#x} (barrier bit mismatch)",
+                            op.name, ev.phase, ev.tag
+                        ),
+                        &mut findings,
+                    );
+                    continue;
+                }
+                let logical = ev.tag & !BARRIER_TAG_BASE;
+                if !contained(ops, logical, ev.fan) {
+                    fail(
+                        "tag-containment",
+                        format!(
+                            "{}: rank {me} tag {:#x} fan {} outside every reserved window",
+                            op.name, ev.tag, ev.fan
+                        ),
+                        &mut findings,
+                    );
+                }
+            }
+        }
+    }
+
+    // (3) Match completeness: per (src, dst, tag), sends == recvs.
+    let mut balance = Balance::new();
+    for op in ops {
+        for (me, sc) in op.scripts.iter().enumerate() {
+            for ev in sc {
+                if ev.peer >= n || ev.peer == me {
+                    continue; // already reported by (2)
+                }
+                match ev.dir {
+                    Dir::Send => balance.entry((me, ev.peer, ev.tag)).or_default().0 += 1,
+                    Dir::Recv => balance.entry((ev.peer, me, ev.tag)).or_default().1 += 1,
+                }
+            }
+        }
+    }
+    for (&(src, dst, tag), &(s, r)) in &balance {
+        if s > r {
+            fail(
+                "orphan-send",
+                format!("{src}->{dst} tag {tag:#x}: {s} sends, {r} recvs"),
+                &mut findings,
+            );
+        } else if r > s {
+            fail(
+                "unmatched-recv",
+                format!("{src}->{dst} tag {tag:#x}: {s} sends, {r} recvs"),
+                &mut findings,
+            );
+        }
+    }
+
+    // (4) Tag-collision: on each (src, dst) link, send fan-windows
+    // [tag, tag+fan) must be pairwise disjoint — two transfers sharing a
+    // link tag would interleave segments or steal each other's frames.
+    let mut links = LinkWindows::new();
+    for op in ops {
+        for (me, sc) in op.scripts.iter().enumerate() {
+            for ev in sc {
+                if ev.dir == Dir::Send && ev.peer < n && ev.peer != me {
+                    let hi = ev.tag.saturating_add(ev.fan);
+                    links.entry((me, ev.peer)).or_default().push((ev.tag, hi, op.name));
+                }
+            }
+        }
+    }
+    for (&(src, dst), windows) in links.iter_mut() {
+        windows.sort_unstable();
+        for w in windows.windows(2) {
+            let (alo, ahi, aop) = w[0];
+            let (blo, _bhi, bop) = w[1];
+            if blo < ahi {
+                fail(
+                    "tag-collision",
+                    format!(
+                        "{src}->{dst}: {aop} window [{alo:#x},{ahi:#x}) overlaps {bop} at {blo:#x}"
+                    ),
+                    &mut findings,
+                );
+            }
+        }
+    }
+
+    // (5) Deadlock-freedom: simulate. Sends never block; a receive
+    // consumes one buffered message or blocks its rank. Fixed-point
+    // iterate until quiescent; unfinished scripts are deadlocks.
+    let mut merged: Vec<Vec<&graph::Ev>> = vec![Vec::new(); n];
+    for op in ops {
+        for (me, sc) in op.scripts.iter().enumerate() {
+            merged[me].extend(sc.iter());
+        }
+    }
+    let mut cursors = vec![0usize; n];
+    let mut pending = Pending::new();
+    loop {
+        let mut progress = false;
+        for (me, cur) in cursors.iter_mut().enumerate() {
+            while *cur < merged[me].len() {
+                let ev = merged[me][*cur];
+                match ev.dir {
+                    Dir::Send => {
+                        *pending.entry((me, ev.peer, ev.tag)).or_insert(0) += 1;
+                    }
+                    Dir::Recv => {
+                        let slot = pending.entry((ev.peer, me, ev.tag)).or_insert(0);
+                        if *slot == 0 {
+                            break;
+                        }
+                        *slot -= 1;
+                    }
+                }
+                *cur += 1;
+                progress = true;
+            }
+        }
+        if !progress {
+            break;
+        }
+    }
+    for (me, &cur) in cursors.iter().enumerate() {
+        if cur < merged[me].len() {
+            let ev = merged[me][cur];
+            fail(
+                "deadlock",
+                format!(
+                    "rank {me} wedged at event {cur}/{} waiting on {} tag {:#x} ({})",
+                    merged[me].len(),
+                    ev.peer,
+                    ev.tag,
+                    ev.phase
+                ),
+                &mut findings,
+            );
+        }
+    }
+
+    (messages, findings)
+}
+
+/// `chunk_ranges` must tile `0..total` exactly: `n` consecutive windows
+/// starting at 0, sizes within 1 of each other, the first `total % n`
+/// taking the extra element. Executors index send/recv buffers straight
+/// off these ranges, so a gap or overlap is silent data corruption.
+fn check_partitions(max_n: usize, findings: &mut Vec<Finding>) -> usize {
+    let mut cases = 0;
+    for total in [0usize, 1, 5, 67, 1000] {
+        for n in 1..=max_n {
+            cases += 1;
+            let case = format!("chunk_ranges/total{total}/n{n}");
+            let ranges = chunk_ranges(total, n);
+            let mut bad = |detail: String| {
+                findings.push(Finding { case: case.clone(), check: "partition", detail });
+            };
+            if ranges.len() != n {
+                bad(format!("{} windows for n={n}", ranges.len()));
+                continue;
+            }
+            let mut cursor = 0usize;
+            for (i, r) in ranges.iter().enumerate() {
+                if r.start != cursor {
+                    bad(format!("window {i} starts at {} not {cursor}", r.start));
+                }
+                cursor = r.end;
+                let want = total / n + usize::from(i < total % n);
+                if r.len() != want {
+                    bad(format!("window {i} has {} elements, want {want}", r.len()));
+                }
+            }
+            if cursor != total {
+                bad(format!("windows cover 0..{cursor}, want 0..{total}"));
+            }
+        }
+    }
+    cases
+}
+
+/// The binomial subtree enumeration that the hierarchical scatter uses
+/// to pack per-subtree bundles must cover every node exactly once from
+/// any root (so the flattened member list covers every rank exactly once
+/// — each element of the root bundle lands in exactly one final window).
+fn check_subtree_cover(name: &str, topo: &Topology, findings: &mut Vec<Finding>) -> usize {
+    let nnodes = topo.nodes();
+    let mut cases = 0;
+    let mut nodes_out = Vec::new();
+    for root_node in 0..nnodes {
+        cases += 1;
+        let case = format!("subtree/{name}/root{root_node}");
+        nodes_out.clear();
+        binomial_subtree_into(root_node, root_node, nnodes, &mut nodes_out);
+        let mut seen = nodes_out.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        if seen.len() != nnodes || nodes_out.len() != nnodes {
+            findings.push(Finding {
+                case,
+                check: "subtree-cover",
+                detail: format!("root subtree lists {nodes_out:?}, want 0..{nnodes} each once"),
+            });
+            continue;
+        }
+        let mut ranks: Vec<usize> =
+            nodes_out.iter().flat_map(|&nd| topo.members(nd).iter().copied()).collect();
+        ranks.sort_unstable();
+        if ranks != (0..topo.ranks()).collect::<Vec<_>>() {
+            findings.push(Finding {
+                case,
+                check: "subtree-cover",
+                detail: format!("flattened members {:?} do not cover 0..{}", ranks, topo.ranks()),
+            });
+        }
+    }
+    cases
+}
+
+const FLAT_ALGOS: [Algo; 4] = [Algo::Plain, Algo::Cprp2p, Algo::CColl, Algo::Zccl];
+const UNROOTED: [Coll; 4] = [Coll::ReduceScatter, Coll::Allgather, Coll::Allreduce, Coll::Alltoall];
+const ROOTED: [Coll; 4] = [Coll::Bcast, Coll::Scatter, Coll::Gather, Coll::Reduce];
+
+fn algo_name(algo: Algo) -> &'static str {
+    match algo {
+        Algo::Plain => "plain",
+        Algo::Cprp2p => "cprp2p",
+        Algo::CColl => "ccoll",
+        Algo::Zccl => "zccl",
+        Algo::Hier => "hier",
+    }
+}
+
+/// Node shapes swept for the hierarchical arm at a given rank count:
+/// rank-per-node (degenerates to the flat leader tier), everyone on one
+/// node (no inter tier), an even two-node split, and a lopsided tail
+/// with single-rank nodes.
+fn hier_topos(n: usize) -> Vec<(&'static str, Topology)> {
+    let mut out = vec![("flat", Topology::flat(n))];
+    if n >= 2 {
+        out.push(("one", Topology::grouped(&[n]).expect("single node")));
+        out.push(("two", Topology::grouped(&[n - n / 2, n / 2]).expect("two-node split")));
+    }
+    if n >= 3 {
+        out.push(("tail", Topology::grouped(&[n - 2, 1, 1]).expect("tail split")));
+    }
+    out
+}
+
+fn single_op_case(
+    report: &mut Report,
+    coll: Coll,
+    algo: Algo,
+    n: usize,
+    root: usize,
+    topo: Option<(&str, &Topology)>,
+) {
+    let mut tags = Tags::new();
+    let g = graph::build(coll, algo, n, root, topo.map(|(_, t)| t), &mut tags);
+    let mut case = format!("{}/{}/n{n}", coll.name(), algo_name(algo));
+    if let Some((tn, _)) = topo {
+        case.push_str(&format!("/{tn}"));
+    }
+    if coll.rooted() {
+        case.push_str(&format!("/root{root}"));
+    }
+    let (msgs, findings) = check_case(&case, &[g]);
+    report.cases += 1;
+    report.messages += msgs;
+    report.findings.extend(findings);
+}
+
+/// Sweep every collective × algorithm arm × rank count up to `max_n`
+/// (× topology for `Hier`, × root ∈ {0, n-1} for rooted collectives),
+/// plus multi-op cases mirroring the concurrent nonblocking reservation
+/// order and barrier/data namespace separation, plus the partition and
+/// subtree-cover invariants.
+pub fn verify_sweep(max_n: usize) -> Report {
+    let mut report = Report::default();
+    for n in 1..=max_n {
+        // Barrier is algorithm-independent.
+        let mut tags = Tags::new();
+        let g = graph::build(Coll::Barrier, Algo::Plain, n, 0, None, &mut tags);
+        let (msgs, findings) = check_case(&format!("barrier/n{n}"), &[g]);
+        report.cases += 1;
+        report.messages += msgs;
+        report.findings.extend(findings);
+
+        let roots: &[usize] = if n == 1 { &[0] } else { &[0, n - 1] };
+        for algo in FLAT_ALGOS {
+            for coll in UNROOTED {
+                single_op_case(&mut report, coll, algo, n, 0, None);
+            }
+            for coll in ROOTED {
+                for &root in roots {
+                    single_op_case(&mut report, coll, algo, n, root, None);
+                }
+            }
+        }
+        for (tname, topo) in hier_topos(n) {
+            for coll in UNROOTED {
+                single_op_case(&mut report, coll, Algo::Hier, n, 0, Some((tname, &topo)));
+            }
+            for coll in ROOTED {
+                for &root in roots {
+                    single_op_case(&mut report, coll, Algo::Hier, n, root, Some((tname, &topo)));
+                }
+            }
+            let sub = check_subtree_cover(&format!("n{n}/{tname}"), &topo, &mut report.findings);
+            report.cases += sub;
+        }
+
+        if n >= 2 {
+            // Concurrent nonblocking collectives: the runtime reserves
+            // each request's window up front from the shared counter, so
+            // four in-flight schedules must interleave safely.
+            let mut tags = Tags::new();
+            let ops = [
+                graph::build(Coll::Allreduce, Algo::Zccl, n, 0, None, &mut tags),
+                graph::build(Coll::ReduceScatter, Algo::Zccl, n, 0, None, &mut tags),
+                graph::build(Coll::Allgather, Algo::Zccl, n, 0, None, &mut tags),
+                graph::build(Coll::Bcast, Algo::Zccl, n, 0, None, &mut tags),
+            ];
+            let (msgs, findings) = check_case(&format!("concurrent-izccl/n{n}"), &ops);
+            report.cases += 1;
+            report.messages += msgs;
+            report.findings.extend(findings);
+
+            // Data + barrier namespaces on one counter.
+            let mut tags = Tags::new();
+            let ops = [
+                graph::build(Coll::Allreduce, Algo::Zccl, n, 0, None, &mut tags),
+                graph::build(Coll::Barrier, Algo::Zccl, n, 0, None, &mut tags),
+            ];
+            let (msgs, findings) = check_case(&format!("allreduce+barrier/n{n}"), &ops);
+            report.cases += 1;
+            report.messages += msgs;
+            report.findings.extend(findings);
+        }
+    }
+    report.cases += check_partitions(max_n, &mut report.findings);
+    report
+}
+
+/// [`verify_sweep`] at the default bound (covers non-power-of-two,
+/// power-of-two, and odd rank counts through 9).
+pub fn verify_all() -> Report {
+    verify_sweep(9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::graph::{Ev, Payload};
+
+    fn ev(dir: Dir, peer: usize, tag: u64) -> Ev {
+        Ev { dir, peer, tag, fan: 1, phase: "test", payload: Payload::Raw }
+    }
+
+    /// Hand-built broken schedules must trip the intended checks.
+    #[test]
+    fn detects_injected_faults() {
+        // Orphan send + unmatched recv (which also wedges rank 1).
+        let g = OpGraph {
+            name: "bad",
+            n: 2,
+            scripts: vec![vec![ev(Dir::Send, 1, 3)], vec![ev(Dir::Recv, 0, 4)]],
+            windows: vec![(0, 8)],
+        };
+        let (_, f) = check_case("t", &[g]);
+        let checks: Vec<_> = f.iter().map(|f| f.check).collect();
+        assert!(checks.contains(&"orphan-send"), "{checks:?}");
+        assert!(checks.contains(&"unmatched-recv"), "{checks:?}");
+        assert!(checks.contains(&"deadlock"), "{checks:?}");
+
+        // Cyclic wait: both ranks receive before sending.
+        let g = OpGraph {
+            name: "cycle",
+            n: 2,
+            scripts: vec![
+                vec![ev(Dir::Recv, 1, 0), ev(Dir::Send, 1, 1)],
+                vec![ev(Dir::Recv, 0, 1), ev(Dir::Send, 0, 0)],
+            ],
+            windows: vec![(0, 2)],
+        };
+        let (_, f) = check_case("t", &[g]);
+        assert!(f.iter().any(|f| f.check == "deadlock"), "{f:?}");
+
+        // Overlapping fan-windows on one link.
+        let mut a = ev(Dir::Send, 1, 10);
+        a.fan = 4;
+        let mut b = ev(Dir::Recv, 0, 10);
+        b.fan = 4;
+        let g = OpGraph {
+            name: "clash",
+            n: 2,
+            scripts: vec![vec![a, ev(Dir::Send, 1, 12)], vec![b, ev(Dir::Recv, 0, 12)]],
+            windows: vec![(0, 32)],
+        };
+        let (_, f) = check_case("t", &[g]);
+        assert!(f.iter().any(|f| f.check == "tag-collision"), "{f:?}");
+
+        // Tag outside every reserved window.
+        let g = OpGraph {
+            name: "stray",
+            n: 2,
+            scripts: vec![vec![ev(Dir::Send, 1, 99)], vec![ev(Dir::Recv, 0, 99)]],
+            windows: vec![(0, 8)],
+        };
+        let (_, f) = check_case("t", &[g]);
+        assert!(f.iter().any(|f| f.check == "tag-containment"), "{f:?}");
+    }
+
+    #[test]
+    fn full_sweep_is_clean() {
+        let r = verify_all();
+        assert!(r.ok(), "{}", r.to_json());
+        assert!(r.cases > 500, "swept only {} cases", r.cases);
+        assert!(r.messages > 10_000, "counted only {} messages", r.messages);
+    }
+
+    #[test]
+    fn json_is_single_line_and_escaped() {
+        let f = Finding { case: "a\"b\\c".into(), check: "deadlock", detail: "x".into() };
+        let r = Report { cases: 1, messages: 0, findings: vec![f] };
+        let j = r.to_json();
+        assert!(!j.contains('\n'));
+        assert!(j.contains("a\\\"b\\\\c"));
+        assert!(j.starts_with("{\"ok\":false"));
+    }
+}

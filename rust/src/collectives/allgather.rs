@@ -35,8 +35,9 @@
 use super::ctx::CollState;
 use super::{
     bytes_to_f32s_into_slice, exchange_sizes, f32s_to_bytes_into, recv_segmented_into,
-    send_segmented, Algo, Communicator, Mode, SEG_TAG_SPAN,
+    send_segmented, Algo, Communicator, Mode,
 };
+use crate::analysis::plan::AllgatherPlan;
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{ring, ring_recv_chunk, ring_send_chunk};
 use crate::{Error, Result};
@@ -94,10 +95,10 @@ pub(crate) fn allgather_chunks_with(
         debug_assert_eq!(shift, 0, "hier allgather is only entered unshifted");
         return super::hier::allgather_hier(comm, st, my_chunk, m, out);
     }
-    let base = comm.fresh_tags((n as u64 + 2) * SEG_TAG_SPAN);
-    let counts_tag = base;
-    let sizes_tag = base + n as u64;
-    let round_tag = |t: usize| base + (t as u64 + 1) * SEG_TAG_SPAN;
+    let plan = AllgatherPlan::at(comm.fresh_tags(AllgatherPlan::span(n)), n);
+    let counts_tag = plan.counts_ring().base;
+    let sizes_tag = plan.sizes_ring().base;
+    let round_tag = |t: usize| plan.round_tag(t);
     let me = comm.rank();
 
     // Everyone learns every chunk's value count (cheap 8-byte ring).

@@ -16,6 +16,7 @@ use super::{
     bytes_to_f32s_into_slice, chunk_ranges, exchange_sizes, f32s_to_bytes_into, Algo,
     Communicator, Mode,
 };
+use crate::analysis::plan::AlltoallPlan;
 use crate::coordinator::{Metrics, Phase};
 use crate::{Error, Result};
 
@@ -52,8 +53,8 @@ pub(crate) fn alltoall_with(
         out.extend_from_slice(input);
         return Ok(());
     }
-    let base = comm.fresh_tags(2 * n as u64);
-    let sizes_tag = base + n as u64;
+    let plan = AlltoallPlan::at(comm.fresh_tags(AlltoallPlan::span(n)), n);
+    let sizes_tag = plan.sizes_ring().base;
     let ranges = chunk_ranges(input.len(), n);
     m.raw_bytes += (input.len() * 4) as u64;
 
@@ -92,9 +93,9 @@ pub(crate) fn alltoall_with(
         let t0 = std::time::Instant::now();
         let buf = std::mem::take(&mut outgoing[to]);
         m.bytes_sent += buf.len() as u64;
-        comm.t.send_pooled(to, base + t as u64, buf)?;
+        comm.t.send_pooled(to, plan.pair_tag(t), buf)?;
         let mut got = comm.t.lease();
-        comm.t.recv_into(from, base + t as u64, &mut got)?;
+        comm.t.recv_into(from, plan.pair_tag(t), &mut got)?;
         m.bytes_recv += got.len() as u64;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         incoming[from] = Some(got);

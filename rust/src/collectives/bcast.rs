@@ -10,6 +10,7 @@
 
 use super::ctx::CollState;
 use super::{bytes_to_f32s_into_slice, f32s_to_bytes_into, Algo, Communicator, Mode};
+use crate::analysis::plan::TreePlan;
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::binomial_bcast;
 use crate::{Error, Result};
@@ -54,7 +55,7 @@ pub(crate) fn bcast_with(
         // and fan out raw over the fast tier.
         return super::hier::bcast_hier(comm, st, data, root, m);
     }
-    let base = comm.fresh_tags(crate::topology::tree_rounds(n) as u64 + 1);
+    let plan = TreePlan::at(comm.fresh_tags(TreePlan::span(n)), n);
     let (recv_step, send_steps) = binomial_bcast(me, root, n);
 
     match st.mode.algo {
@@ -69,14 +70,14 @@ pub(crate) fn bcast_with(
                 let step = recv_step.expect("non-root receives");
                 let mut got = comm.t.lease();
                 let t0 = std::time::Instant::now();
-                comm.t.recv_into(step.peer, base + step.round as u64, &mut got)?;
+                comm.t.recv_into(step.peer, plan.step_tag(step.round), &mut got)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
                 (got, false)
             };
             for s in send_steps {
                 let t0 = std::time::Instant::now();
-                comm.t.send(s.peer, base + s.round as u64, &buf)?;
+                comm.t.send(s.peer, plan.step_tag(s.round), &buf)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_sent += buf.len() as u64;
             }
@@ -99,7 +100,7 @@ pub(crate) fn bcast_with(
                 let step = recv_step.expect("non-root receives");
                 let mut got = comm.t.lease();
                 let t0 = std::time::Instant::now();
-                comm.t.recv_into(step.peer, base + step.round as u64, &mut got)?;
+                comm.t.recv_into(step.peer, plan.step_tag(step.round), &mut got)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
                 // Placement decode straight into the (once-sized) result;
@@ -122,7 +123,7 @@ pub(crate) fn bcast_with(
                 m.add(Phase::Compress, t0.elapsed().as_secs_f64());
                 let t0 = std::time::Instant::now();
                 m.bytes_sent += frame.len() as u64;
-                comm.t.send_pooled(s.peer, base + s.round as u64, frame)?;
+                comm.t.send_pooled(s.peer, plan.step_tag(s.round), frame)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
             }
             Ok(plain)
@@ -142,14 +143,14 @@ pub(crate) fn bcast_with(
                 let step = recv_step.expect("non-root receives");
                 let mut got = comm.t.lease();
                 let t0 = std::time::Instant::now();
-                comm.t.recv_into(step.peer, base + step.round as u64, &mut got)?;
+                comm.t.recv_into(step.peer, plan.step_tag(step.round), &mut got)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
                 (got, false)
             };
             for s in send_steps {
                 let t0 = std::time::Instant::now();
-                comm.t.send(s.peer, base + s.round as u64, &frame)?;
+                comm.t.send(s.peer, plan.step_tag(s.round), &frame)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_sent += frame.len() as u64;
             }

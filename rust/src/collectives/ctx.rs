@@ -28,6 +28,7 @@ use super::nonblocking::{
 use super::progress::ProgressEngine;
 use super::{allgather, allreduce, alltoall, bcast, gather, reduce, reduce_scatter, scatter};
 use super::{Algo, Communicator, Mode, ReduceOp};
+use crate::analysis::plan::{AllgatherPlan, RingPlan, TreePlan};
 use crate::compress::{Compressor, CompressorKind, PipeFzLight};
 use crate::coordinator::Metrics;
 use crate::transport::{Backoff, Transport, WireStats};
@@ -667,17 +668,17 @@ impl<'c, 'a> CollCtx<'c, 'a> {
         // Reserve BOTH stages' tag slices up front so the reduce-scatter →
         // allgather hand-off needs no mid-flight reservation (which would
         // race other requests' starts for ordering).
-        let rs_base = self.comm.try_fresh_tags(n as u64)?;
-        let ag_base = self.comm.try_fresh_tags((n as u64 + 2) * super::SEG_TAG_SPAN)?;
+        let rs_plan = RingPlan::at(self.comm.try_fresh_tags(RingPlan::span(n))?, n);
+        let ag_plan = AllgatherPlan::at(self.comm.try_fresh_tags(AllgatherPlan::span(n))?, n);
         let rs = ReduceScatterSm::new(
             self.comm,
             &mut self.state,
             &mut self.metrics,
             input,
             op,
-            rs_base,
+            rs_plan,
         );
-        Ok(self.park(Machine::Allreduce(Box::new(AllreduceSm::new(op, ag_base, rs)))))
+        Ok(self.park(Machine::Allreduce(Box::new(AllreduceSm::new(op, ag_plan, rs)))))
     }
 
     /// Start a nonblocking [`CollCtx::reduce_scatter`]. The result's
@@ -690,14 +691,14 @@ impl<'c, 'a> CollCtx<'c, 'a> {
             let len = input.len();
             return Ok(self.park_done(Ok(CollOutput { values: owned, range: Some(0..len) })));
         }
-        let base = self.comm.try_fresh_tags(n as u64)?;
+        let plan = RingPlan::at(self.comm.try_fresh_tags(RingPlan::span(n))?, n);
         let rs = ReduceScatterSm::new(
             self.comm,
             &mut self.state,
             &mut self.metrics,
             input,
             op,
-            base,
+            plan,
         );
         Ok(self.park(Machine::ReduceScatter(Box::new(rs))))
     }
@@ -723,10 +724,10 @@ impl<'c, 'a> CollCtx<'c, 'a> {
             .map(|()| CollOutput { values: out, range: None });
             return Ok(self.park_done(r));
         }
-        let base = self.comm.try_fresh_tags((n as u64 + 2) * super::SEG_TAG_SPAN)?;
+        let plan = AllgatherPlan::at(self.comm.try_fresh_tags(AllgatherPlan::span(n))?, n);
         let mut mine = self.state.pool.take_f32();
         mine.extend_from_slice(my_chunk);
-        let ag = AllgatherSm::new(self.comm, &mut self.state, mine, 0, base);
+        let ag = AllgatherSm::new(self.comm, &mut self.state, mine, 0, plan);
         Ok(self.park(Machine::Allgather(Box::new(ag))))
     }
 
@@ -751,13 +752,13 @@ impl<'c, 'a> CollCtx<'c, 'a> {
                 .map(|values| CollOutput { values, range: None });
             return Ok(self.park_done(r));
         }
-        let base = self.comm.try_fresh_tags(crate::topology::tree_rounds(n) as u64 + 1)?;
+        let plan = TreePlan::at(self.comm.try_fresh_tags(TreePlan::span(n))?, n);
         let payload = (me == root).then(|| {
             let mut d = self.state.pool.take_f32();
             d.extend_from_slice(data.expect("validated: the root supplied data"));
             d
         });
-        let sm = BcastSm::new(self.comm, base, root, payload);
+        let sm = BcastSm::new(self.comm, plan, root, payload);
         Ok(self.park(Machine::Bcast(Box::new(sm))))
     }
 

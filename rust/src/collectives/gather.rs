@@ -21,10 +21,11 @@ use super::ctx::CollState;
 use super::{
     bytes_to_f32s_into, bytes_to_f32s_into_slice, f32s_to_bytes_into, Algo, Communicator, Mode,
 };
+use crate::analysis::plan::TreePlan;
 use crate::compress::bits::le;
 use crate::compress::fzlight::frame_u32;
 use crate::coordinator::{Metrics, Phase};
-use crate::topology::{binomial_bcast, tree_rounds};
+use crate::topology::binomial_bcast;
 use crate::{Error, Result};
 
 /// Gather each rank's `my_chunk` to `root`, which returns the chunks
@@ -60,7 +61,7 @@ pub(crate) fn gather_with(
     if n == 1 {
         return Ok(Some(my_chunk.to_vec()));
     }
-    let base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let plan = TreePlan::at(comm.fresh_tags(TreePlan::span(n)), n);
     // Gather runs the bcast tree in reverse: receive from "children"
     // (largest round first = deepest subtree last... order does not matter
     // for correctness; we use reverse round order so the longest chain
@@ -89,7 +90,7 @@ pub(crate) fn gather_with(
     for s in child_steps.iter().rev() {
         let mut msg = comm.t.lease();
         let t0 = std::time::Instant::now();
-        comm.t.recv_into(s.peer, base + s.round as u64, &mut msg)?;
+        comm.t.recv_into(s.peer, plan.step_tag(s.round), &mut msg)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
         if st.mode.algo == Algo::Cprp2p {
@@ -185,7 +186,7 @@ pub(crate) fn gather_with(
     }
     let t0 = std::time::Instant::now();
     m.bytes_sent += wire.len() as u64;
-    comm.t.send_pooled(step.peer, base + step.round as u64, wire)?;
+    comm.t.send_pooled(step.peer, plan.step_tag(step.round), wire)?;
     m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     release_stores(comm, st, stores);
     Ok(None)

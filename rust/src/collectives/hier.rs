@@ -48,18 +48,16 @@ use super::{
     bytes_to_f32s_into, bytes_to_f32s_into_slice, chunk_ranges, f32s_to_bytes_into,
     fold_f32_bytes, Algo, Communicator, ReduceOp,
 };
+use crate::analysis::plan::{
+    HierAllgatherPlan, HierAllreducePlan, HierBcastPlan, HierScatterPlan, HIER_GROUP_SPAN,
+};
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{
     binomial_bcast_in_group, binomial_subtree_into, ring_in_group, ring_recv_chunk,
-    ring_send_chunk, tree_rounds, Topology,
+    ring_send_chunk, Topology,
 };
 use crate::transport::GroupTransport;
 use crate::{Error, Result};
-
-/// Parent-communicator tag budget reserved for one leader-tier stage (the
-/// inner flat collectives reserve `(L + 2) * SEG_TAG_SPAN`-ish spans from
-/// the group communicator, all offset into this window).
-const HIER_GROUP_SPAN: u64 = 1 << 33;
 
 /// The topology the hierarchical schedules run over: the installed one
 /// (an `Arc` clone — the node tables are shared, not copied, so warm
@@ -203,10 +201,11 @@ pub(crate) fn allreduce_hier(
         op.finish(out, 1);
         return Ok(());
     }
-    // Tag plan — identical reservations on every rank.
-    let up_tag = comm.fresh_tags(1);
-    let group_base = comm.fresh_tags(HIER_GROUP_SPAN);
-    let down_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    // Tag plan — one contiguous reservation, identical on every rank.
+    let plan = HierAllreducePlan::at(comm.fresh_tags(HierAllreducePlan::span(n)), n);
+    let up_tag = plan.up_tag();
+    let group_base = plan.group_base();
+    let down_base = plan.down().base;
 
     let node = topo.node_of(me);
     let members = topo.members(node);
@@ -281,9 +280,10 @@ pub(crate) fn allgather_hier(
         out.extend_from_slice(my_chunk);
         return Ok(());
     }
-    let up_tag = comm.fresh_tags(1);
-    let ring_base = comm.fresh_tags(n as u64); // >= nodes - 1 rounds
-    let down_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let plan = HierAllgatherPlan::at(comm.fresh_tags(HierAllgatherPlan::span(n)), n);
+    let up_tag = plan.up_tag();
+    let lring_plan = plan.leader_ring(); // sized for n ranks >= nodes - 1 rounds
+    let down_base = plan.down().base;
 
     let node = topo.node_of(me);
     let members = topo.members(node);
@@ -346,7 +346,7 @@ pub(crate) fn allgather_hier(
     for t in 0..nnodes - 1 {
         let s = ring_send_chunk(node, t, nnodes);
         let r = ring_recv_chunk(node, t, nnodes);
-        let tag = ring_base + t as u64;
+        let tag = lring_plan.round_tag(t);
         let send_buf = bundles[s].as_ref().expect("ring schedule owns sent bundle");
         let t0 = std::time::Instant::now();
         comm.t.send(lring.next, tag, send_buf)?;
@@ -412,9 +412,10 @@ pub(crate) fn bcast_hier(
     let n = comm.size();
     let me = comm.rank();
     let topo = resolve_topo(st, n)?;
-    let hop_tag = comm.fresh_tags(1);
-    let tree_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
-    let down_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let plan = HierBcastPlan::at(comm.fresh_tags(HierBcastPlan::span(n)), n);
+    let hop_tag = plan.hop_tag();
+    let ltree = plan.leader_tree();
+    let down_base = plan.down().base;
 
     let node = topo.node_of(me);
     let members = topo.members(node);
@@ -459,7 +460,7 @@ pub(crate) fn bcast_hier(
                     comm.t.recv_into(root, hop_tag, &mut got)?;
                 } else {
                     let step = recv_step.expect("non-root-node leader receives");
-                    comm.t.recv_into(step.peer, tree_base + step.round as u64, &mut got)?;
+                    comm.t.recv_into(step.peer, ltree.step_tag(step.round), &mut got)?;
                 }
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
@@ -468,7 +469,7 @@ pub(crate) fn bcast_hier(
         };
         for s in send_steps {
             let t0 = std::time::Instant::now();
-            comm.t.send(s.peer, tree_base + s.round as u64, &frame)?;
+            comm.t.send(s.peer, ltree.step_tag(s.round), &frame)?;
             m.add(Phase::Comm, t0.elapsed().as_secs_f64());
             m.bytes_sent += frame.len() as u64;
         }
@@ -521,9 +522,10 @@ pub(crate) fn scatter_hier(
     let n = comm.size();
     let me = comm.rank();
     let topo = resolve_topo(st, n)?;
-    let hop_tag = comm.fresh_tags(1);
-    let tree_base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
-    let down_tag = comm.fresh_tags(1);
+    let plan = HierScatterPlan::at(comm.fresh_tags(HierScatterPlan::span(n)), n);
+    let hop_tag = plan.hop_tag();
+    let ltree = plan.leader_tree();
+    let down_tag = plan.down_tag();
 
     let node = topo.node_of(me);
     let members = topo.members(node);
@@ -578,7 +580,7 @@ pub(crate) fn scatter_hier(
                     comm.t.recv_into(root, hop_tag, &mut got)?;
                 } else {
                     let step = recv_step.expect("non-root-node leader receives");
-                    comm.t.recv_into(step.peer, tree_base + step.round as u64, &mut got)?;
+                    comm.t.recv_into(step.peer, ltree.step_tag(step.round), &mut got)?;
                 }
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
@@ -604,7 +606,7 @@ pub(crate) fn scatter_hier(
             encode_bundle_into(total, &parts, &mut wire)?;
             let t0 = std::time::Instant::now();
             m.bytes_sent += wire.len() as u64;
-            comm.t.send_pooled(s.peer, tree_base + s.round as u64, wire)?;
+            comm.t.send_pooled(s.peer, ltree.step_tag(s.round), wire)?;
             m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         }
 

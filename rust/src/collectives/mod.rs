@@ -362,9 +362,14 @@ impl<'a> Communicator<'a> {
     pub fn packet_stats(&self) -> crate::transport::PacketPoolStats {
         self.t.packet_stats()
     }
-    /// Synchronise all ranks.
+    /// Synchronise all ranks. The barrier's generation is a
+    /// [`crate::transport::BARRIER_GEN_SPAN`]-wide slice of this
+    /// communicator's tag counter, so distinct barrier calls — and
+    /// barriers of sub-communicators, whose group translation offsets the
+    /// low bits by a counter-allocated base — use disjoint wire tags
+    /// ([`crate::transport::barrier_tag`]).
     pub fn barrier(&mut self) -> Result<()> {
-        let gen = self.fresh_tags(1);
+        let gen = self.fresh_tags(crate::transport::BARRIER_GEN_SPAN);
         self.t.barrier(gen)
     }
 }
@@ -395,6 +400,41 @@ where
     F: Fn(&mut Communicator) -> R + Send + Sync + 'static,
 {
     MemFabric::run_on_nodes(topo, move |t| {
+        let mut comm = Communicator::new(t);
+        f(&mut comm)
+    })
+}
+
+/// [`run_ranks`] with every wire message recorded: returns the per-rank
+/// results plus the exact per-`(src, dst, tag)` message counts
+/// ([`crate::transport::memchan::MessageLedger`]). The schedule
+/// verifier's property tests run real collectives under this and assert
+/// the ledger equals the analyzer's predicted message graph.
+pub fn run_ranks_traced<R, F>(
+    n: usize,
+    f: F,
+) -> (Vec<R>, crate::transport::memchan::MessageLedger)
+where
+    R: Send + 'static,
+    F: Fn(&mut Communicator) -> R + Send + Sync + 'static,
+{
+    MemFabric::run_traced(n, move |t| {
+        let mut comm = Communicator::new(t);
+        f(&mut comm)
+    })
+}
+
+/// [`run_ranks_traced`] over a node-partitioned fabric — the traced twin
+/// of [`run_ranks_on`], used to ledger-check the hierarchical schedules.
+pub fn run_ranks_traced_on<R, F>(
+    topo: &crate::topology::Topology,
+    f: F,
+) -> (Vec<R>, crate::transport::memchan::MessageLedger)
+where
+    R: Send + 'static,
+    F: Fn(&mut Communicator) -> R + Send + Sync + 'static,
+{
+    MemFabric::run_traced_on_nodes(topo, move |t| {
         let mut comm = Communicator::new(t);
         f(&mut comm)
     })
@@ -504,12 +544,13 @@ pub(crate) fn exchange_sizes(
     let mut sizes = vec![0u64; n];
     sizes[me] = mine;
     let ring = crate::topology::ring(me, n);
+    let plan = crate::analysis::plan::RingPlan::at(tag_base, n);
     let mut buf = comm.t.lease();
     for round in 0..n.saturating_sub(1) {
         let send_idx = crate::topology::ring_send_chunk(me, round, n);
         let recv_idx = crate::topology::ring_recv_chunk(me, round, n);
-        comm.t.send(ring.next, tag_base + round as u64, &sizes[send_idx].to_le_bytes())?;
-        comm.t.recv_into(ring.prev, tag_base + round as u64, &mut buf)?;
+        comm.t.send(ring.next, plan.round_tag(round), &sizes[send_idx].to_le_bytes())?;
+        comm.t.recv_into(ring.prev, plan.round_tag(round), &mut buf)?;
         sizes[recv_idx] =
             u64::from_le_bytes(buf.as_slice().try_into().map_err(|_| {
                 crate::Error::corrupt("size exchange message must be 8 bytes")
@@ -523,8 +564,10 @@ pub(crate) fn exchange_sizes(
 /// budget per round). Transfers needing more segments are rejected by
 /// [`send_segmented`] / [`recv_segmented_into`] — silently exceeding the
 /// span would collide with the next round's (or the next collective's)
-/// tag space and cross-match messages.
-pub(crate) const SEG_TAG_SPAN: u64 = 1 << 20;
+/// tag space and cross-match messages. Public because the tag-layout
+/// plans in [`crate::analysis::plan`] ration rounds by this span and the
+/// schedule verifier checks every fan against it.
+pub const SEG_TAG_SPAN: u64 = 1 << 20;
 
 /// Number of segments a `total`-byte transfer splits into, validated
 /// against the [`SEG_TAG_SPAN`] tag budget.

@@ -53,8 +53,9 @@ use super::ctx::CollState;
 use super::progress::RecvSlot;
 use super::{
     bytes_to_f32s_into_slice, chunk_ranges, f32s_to_bytes_into, fold_f32_bytes, segment_count,
-    send_segmented, Algo, Communicator, ReduceOp, SEG_TAG_SPAN,
+    send_segmented, Algo, Communicator, ReduceOp,
 };
+use crate::analysis::plan::{AllgatherPlan, RingPlan, TreePlan};
 use crate::coordinator::Metrics;
 use crate::topology::{binomial_bcast, ring, ring_recv_chunk, ring_send_chunk, TreeStep};
 use crate::{Error, Result};
@@ -138,7 +139,7 @@ impl Machine {
 /// pulls transport-wide progress (§3.5.2) — the same overlap as the
 /// blocking path, now also serving concurrent requests.
 pub(crate) struct ReduceScatterSm {
-    base: u64,
+    plan: RingPlan,
     op: ReduceOp,
     ranges: Vec<Range<usize>>,
     /// Pooled accumulator, seeded with this rank's input.
@@ -152,21 +153,22 @@ pub(crate) struct ReduceScatterSm {
 
 impl ReduceScatterSm {
     /// Seed the accumulator and account the schedule's raw traffic. The
-    /// caller has already reserved `n` tags at `base`.
+    /// caller has already reserved [`RingPlan::span`] tags at the plan's
+    /// base.
     pub(crate) fn new(
         comm: &Communicator,
         st: &mut CollState,
         m: &mut Metrics,
         input: &[f32],
         op: ReduceOp,
-        base: u64,
+        plan: RingPlan,
     ) -> ReduceScatterSm {
         let n = comm.size();
         let mut acc = st.pool.take_f32();
         acc.extend_from_slice(input);
         m.raw_bytes += (input.len() * 4) as u64 * (n as u64 - 1) / n as u64 * 2;
         ReduceScatterSm {
-            base,
+            plan,
             op,
             ranges: chunk_ranges(input.len(), n),
             acc,
@@ -188,7 +190,7 @@ impl ReduceScatterSm {
             let t = self.round;
             let s = self.ranges[ring_send_chunk(me, t, n)].clone();
             let r = self.ranges[ring_recv_chunk(me, t, n)].clone();
-            let tag = self.base + t as u64;
+            let tag = self.plan.round_tag(t);
             if self.slot.is_none() {
                 // Begin the round: post the receive BEFORE compressing,
                 // poll it from inside the compression loop, then send.
@@ -278,12 +280,11 @@ enum AgPhase {
 
 /// Resumable ring allgather — the nonblocking twin of
 /// [`super::allgather::allgather_chunks_with`], including the allreduce
-/// stage's chunk-ownership `shift`. Same tag layout (`base` = counts
-/// ring, `base + n` = size ring, `base + (t+1)·SEG_TAG_SPAN` = round
-/// `t`), same segmented receive behaviour, same decode-once-at-the-end
-/// placement discipline.
+/// stage's chunk-ownership `shift`. Same [`AllgatherPlan`] tag layout
+/// (counts ring, size ring, per-round segment fans), same segmented
+/// receive behaviour, same decode-once-at-the-end placement discipline.
 pub(crate) struct AllgatherSm {
-    base: u64,
+    plan: AllgatherPlan,
     shift: usize,
     /// Pooled copy of this rank's contribution (returned to the pool at
     /// completion).
@@ -312,19 +313,19 @@ pub(crate) struct AllgatherSm {
 
 impl AllgatherSm {
     /// `my_chunk` is an owned (pooled) vector; the caller has already
-    /// reserved `(n + 2) · SEG_TAG_SPAN` tags at `base`.
+    /// reserved [`AllgatherPlan::span`] tags at the plan's base.
     pub(crate) fn new(
         comm: &Communicator,
         st: &mut CollState,
         my_chunk: Vec<f32>,
         shift: usize,
-        base: u64,
+        plan: AllgatherPlan,
     ) -> AllgatherSm {
         let n = comm.size();
         let mut counts = vec![0u64; n];
         counts[comm.rank()] = my_chunk.len() as u64;
         AllgatherSm {
-            base,
+            plan,
             shift,
             my_chunk,
             counts,
@@ -447,12 +448,12 @@ impl AllgatherSm {
         let vrank = me + self.shift;
         loop {
             match self.phase {
-                AgPhase::Counts => match self.ring_u64_step(comm, self.base, false)? {
+                AgPhase::Counts => match self.ring_u64_step(comm, self.plan.counts_ring().base, false)? {
                     None => return Ok(None),
                     Some(false) => {}
                     Some(true) => self.setup(comm, st, m)?,
                 },
-                AgPhase::Sizes => match self.ring_u64_step(comm, self.base + n as u64, true)? {
+                AgPhase::Sizes => match self.ring_u64_step(comm, self.plan.sizes_ring().base, true)? {
                     None => return Ok(None),
                     Some(false) => {}
                     Some(true) => {
@@ -479,7 +480,7 @@ impl AllgatherSm {
                     let t = self.round;
                     let s = ring_send_chunk(vrank, t, n);
                     let r = ring_recv_chunk(vrank, t, n);
-                    let tag = self.base + (t as u64 + 1) * SEG_TAG_SPAN;
+                    let tag = self.plan.round_tag(t);
                     if st.mode.algo == Algo::Cprp2p {
                         if !self.round_sent {
                             let mut frame = comm.t.lease();
@@ -613,13 +614,13 @@ enum ArStage {
 /// needs no communicator access beyond what the machines already hold.
 pub(crate) struct AllreduceSm {
     op: ReduceOp,
-    ag_base: u64,
+    ag_plan: AllgatherPlan,
     stage: ArStage,
 }
 
 impl AllreduceSm {
-    pub(crate) fn new(op: ReduceOp, ag_base: u64, rs: ReduceScatterSm) -> AllreduceSm {
-        AllreduceSm { op, ag_base, stage: ArStage::Rs(rs) }
+    pub(crate) fn new(op: ReduceOp, ag_plan: AllgatherPlan, rs: ReduceScatterSm) -> AllreduceSm {
+        AllreduceSm { op, ag_plan, stage: ArStage::Rs(rs) }
     }
 
     fn step(
@@ -633,7 +634,7 @@ impl AllreduceSm {
                 None => return Ok(None),
                 Some(mut rs_out) => {
                     self.op.finish(&mut rs_out.values, comm.size());
-                    let ag = AllgatherSm::new(comm, st, rs_out.values, 1, self.ag_base);
+                    let ag = AllgatherSm::new(comm, st, rs_out.values, 1, self.ag_plan);
                     self.stage = ArStage::Ag(ag);
                 }
             }
@@ -654,7 +655,7 @@ impl AllreduceSm {
 /// sends, decode) is entirely send-side and completes on its first step;
 /// a non-root rank has exactly one yield point: its parent's frame.
 pub(crate) struct BcastSm {
-    base: u64,
+    plan: TreePlan,
     /// Pooled copy of the payload (root only).
     data: Option<Vec<f32>>,
     recv_step: Option<TreeStep>,
@@ -665,11 +666,12 @@ pub(crate) struct BcastSm {
 
 impl BcastSm {
     /// The caller has validated root/data and reserved
-    /// `tree_rounds(n) + 1` tags at `base`; `data` is a pooled copy,
-    /// `Some` exactly at the root. Posts the parent receive immediately.
+    /// [`TreePlan::span`] tags at the plan's base; `data` is a pooled
+    /// copy, `Some` exactly at the root. Posts the parent receive
+    /// immediately.
     pub(crate) fn new(
         comm: &mut Communicator,
-        base: u64,
+        plan: TreePlan,
         root: usize,
         data: Option<Vec<f32>>,
     ) -> BcastSm {
@@ -677,8 +679,8 @@ impl BcastSm {
         let slot = recv_step
             .as_ref()
             .filter(|_| data.is_none())
-            .map(|s| RecvSlot::post(comm.t, s.peer, base + s.round as u64));
-        BcastSm { base, data, recv_step, send_steps, slot }
+            .map(|s| RecvSlot::post(comm.t, s.peer, plan.step_tag(s.round)));
+        BcastSm { plan, data, recv_step, send_steps, slot }
     }
 
     fn step(
@@ -696,7 +698,7 @@ impl BcastSm {
                     let mut b = st.pool.take_bytes();
                     f32s_to_bytes_into(&d, &mut b);
                     for s in &self.send_steps {
-                        comm.t.send(s.peer, self.base + s.round as u64, &b)?;
+                        comm.t.send(s.peer, self.plan.step_tag(s.round), &b)?;
                         m.bytes_sent += b.len() as u64;
                     }
                     st.pool.put_bytes(b);
@@ -709,7 +711,7 @@ impl BcastSm {
                         let mut frame = comm.t.lease();
                         st.compress_into(&d, &mut frame)?;
                         m.bytes_sent += frame.len() as u64;
-                        comm.t.send_pooled(s.peer, self.base + s.round as u64, frame)?;
+                        comm.t.send_pooled(s.peer, self.plan.step_tag(s.round), frame)?;
                     }
                     d
                 }
@@ -717,7 +719,7 @@ impl BcastSm {
                     let mut frame = st.pool.take_bytes();
                     st.compress_into(&d, &mut frame)?;
                     for s in &self.send_steps {
-                        comm.t.send(s.peer, self.base + s.round as u64, &frame)?;
+                        comm.t.send(s.peer, self.plan.step_tag(s.round), &frame)?;
                         m.bytes_sent += frame.len() as u64;
                     }
                     // Every rank returns the decompressed frame, the root
@@ -745,7 +747,7 @@ impl BcastSm {
         let values = match st.mode.algo {
             Algo::Plain => {
                 for s in &self.send_steps {
-                    comm.t.send(s.peer, self.base + s.round as u64, &got)?;
+                    comm.t.send(s.peer, self.plan.step_tag(s.round), &got)?;
                     m.bytes_sent += got.len() as u64;
                 }
                 let mut out = st.pool.take_f32();
@@ -765,7 +767,7 @@ impl BcastSm {
                     let mut frame = comm.t.lease();
                     st.compress_into(&out, &mut frame)?;
                     m.bytes_sent += frame.len() as u64;
-                    comm.t.send_pooled(s.peer, self.base + s.round as u64, frame)?;
+                    comm.t.send_pooled(s.peer, self.plan.step_tag(s.round), frame)?;
                 }
                 out
             }
@@ -773,7 +775,7 @@ impl BcastSm {
                 // Forward the frame verbatim BEFORE decoding, so children
                 // are not delayed behind our decompression.
                 for s in &self.send_steps {
-                    comm.t.send(s.peer, self.base + s.round as u64, &got)?;
+                    comm.t.send(s.peer, self.plan.step_tag(s.round), &got)?;
                     m.bytes_sent += got.len() as u64;
                 }
                 let cnt = crate::compress::checked_count(&got)?;

@@ -16,8 +16,9 @@
 
 use super::ctx::CollState;
 use super::{f32s_to_bytes_into, fold_f32_bytes, Algo, Communicator, Mode, ReduceOp};
+use crate::analysis::plan::TreePlan;
 use crate::coordinator::{Metrics, Phase};
-use crate::topology::{binomial_bcast, tree_rounds};
+use crate::topology::binomial_bcast;
 use crate::{Error, Result};
 
 /// Reduce `input` elementwise onto `root`; root returns `Some(result)`.
@@ -55,7 +56,7 @@ pub(crate) fn reduce_with(
         op.finish(&mut acc, 1);
         return Ok(Some(acc));
     }
-    let base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let plan = TreePlan::at(comm.fresh_tags(TreePlan::span(n)), n);
     let (parent_step, child_steps) = binomial_bcast(me, root, n);
     m.raw_bytes += (input.len() * 4) as u64;
 
@@ -67,7 +68,7 @@ pub(crate) fn reduce_with(
     // folding in arrival order would make the result nondeterministic.
     let pipe = st.pipe.clone();
     let mut handles: Vec<crate::transport::RecvHandle> =
-        child_steps.iter().rev().map(|s| comm.t.irecv(s.peer, base + s.round as u64)).collect();
+        child_steps.iter().rev().map(|s| comm.t.irecv(s.peer, plan.step_tag(s.round))).collect();
     let mut msg = comm.t.lease();
     for i in 0..handles.len() {
         let (h, rest) = handles[i..].split_first_mut().expect("index in range");
@@ -128,7 +129,7 @@ pub(crate) fn reduce_with(
     // up-link frame is built once and sent once, with no packet_from
     // copy.
     let step = parent_step.expect("non-root has a parent");
-    let tag = base + step.round as u64;
+    let tag = plan.step_tag(step.round);
     let mut wire = comm.t.lease();
     match st.mode.algo {
         Algo::Plain => f32s_to_bytes_into(&acc, &mut wire),

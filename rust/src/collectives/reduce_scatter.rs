@@ -28,6 +28,7 @@ use super::ctx::CollState;
 use super::{
     chunk_ranges, f32s_to_bytes_into, fold_f32_bytes, Algo, Communicator, Mode, ReduceOp,
 };
+use crate::analysis::plan::RingPlan;
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{ring, ring_recv_chunk, ring_send_chunk};
 use crate::{Error, Result};
@@ -68,7 +69,7 @@ pub(crate) fn reduce_scatter_with(
         owned.extend_from_slice(input);
         return Ok(0..input.len());
     }
-    let base = comm.fresh_tags(n as u64);
+    let plan = RingPlan::at(comm.fresh_tags(RingPlan::span(n)), n);
     let ranges = chunk_ranges(input.len(), n);
     let nb = ring(me, n);
     let mut acc = st.pool.take_f32();
@@ -88,8 +89,8 @@ pub(crate) fn reduce_scatter_with(
                 f32s_to_bytes_into(&acc[s.clone()], &mut send_buf);
                 let t0 = std::time::Instant::now();
                 m.bytes_sent += send_buf.len() as u64;
-                comm.t.send_pooled(nb.next, base + t as u64, send_buf)?;
-                comm.t.recv_into(nb.prev, base + t as u64, &mut got)?;
+                comm.t.send_pooled(nb.next, plan.round_tag(t), send_buf)?;
+                comm.t.recv_into(nb.prev, plan.round_tag(t), &mut got)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 // Fold straight from the wire bytes — no partial vector.
@@ -113,8 +114,8 @@ pub(crate) fn reduce_scatter_with(
                 m.add(Phase::Compress, t0.elapsed().as_secs_f64());
                 let t0 = std::time::Instant::now();
                 m.bytes_sent += frame.len() as u64;
-                comm.t.send_pooled(nb.next, base + t as u64, frame)?;
-                comm.t.recv_into(nb.prev, base + t as u64, &mut got)?;
+                comm.t.send_pooled(nb.next, plan.round_tag(t), frame)?;
+                comm.t.recv_into(nb.prev, plan.round_tag(t), &mut got)?;
                 m.bytes_recv += got.len() as u64;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 // Fused decompress–reduce: the frame folds straight into
@@ -129,7 +130,7 @@ pub(crate) fn reduce_scatter_with(
         // the flat ZCCL pipeline (the hierarchical allreduce composes its
         // leader tier out of exactly this arm via a GroupTransport).
         Algo::Zccl | Algo::Hier => {
-            reduce_scatter_zccl(comm, st, &mut acc, &ranges, op, base, m)?;
+            reduce_scatter_zccl(comm, st, &mut acc, &ranges, op, plan, m)?;
         }
     }
 
@@ -147,7 +148,7 @@ fn reduce_scatter_zccl(
     acc: &mut [f32],
     ranges: &[std::ops::Range<usize>],
     op: ReduceOp,
-    base: u64,
+    plan: RingPlan,
     m: &mut Metrics,
 ) -> Result<()> {
     let n = comm.size();
@@ -164,11 +165,11 @@ fn reduce_scatter_zccl(
     // round's receive is posted before the *previous* round's fold — so
     // both the compression hook and the fold hook always have a live
     // handle to poll (§3.5.2).
-    let mut h = comm.t.irecv(nb.prev, base);
+    let mut h = comm.t.irecv(nb.prev, plan.round_tag(0));
     for t in 0..n - 1 {
         let s = &ranges[ring_send_chunk(me, t, n)];
         let r = &ranges[ring_recv_chunk(me, t, n)];
-        let tag = base + t as u64;
+        let tag = plan.round_tag(t);
         // The per-round frame compresses straight into a transport-leased
         // wire buffer: it is sent once, by value (no packet_from copy),
         // and its capacity circulates back through the pool.
@@ -218,7 +219,7 @@ fn reduce_scatter_zccl(
 
         // Post the NEXT round's receive before folding this one, so the
         // fold has real communication to pull forward.
-        let mut next_h = (t + 1 < n - 1).then(|| comm.t.irecv(nb.prev, base + t as u64 + 1));
+        let mut next_h = (t + 1 < n - 1).then(|| comm.t.irecv(nb.prev, plan.round_tag(t + 1)));
 
         // Fused decompress–reduce straight into the accumulator. With
         // PIPE the per-chunk hook keeps the §3.5.2 overlap slot: it polls

@@ -20,10 +20,11 @@
 
 use super::ctx::CollState;
 use super::{bytes_to_f32s_into_slice, chunk_ranges, f32s_to_bytes_into, Algo, Communicator, Mode};
+use crate::analysis::plan::TreePlan;
 use crate::compress::bits::le;
 use crate::compress::fzlight::frame_u32;
 use crate::coordinator::{Metrics, Phase};
-use crate::topology::{binomial_bcast, binomial_subtree, tree_rounds};
+use crate::topology::{binomial_bcast, binomial_subtree};
 use crate::{Error, Result};
 
 /// Scatter `data` (significant at `root`) so rank `r` receives chunk `r`
@@ -79,7 +80,7 @@ fn scatter_values(
 ) -> Result<Vec<f32>> {
     let n = comm.size();
     let me = comm.rank();
-    let base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let plan = TreePlan::at(comm.fresh_tags(TreePlan::span(n)), n);
     let (recv_step, send_steps) = binomial_bcast(me, root, n);
     let my_subtree = binomial_subtree(me, root, n);
 
@@ -96,7 +97,7 @@ fn scatter_values(
         let step = recv_step.expect("non-root receives");
         let mut msg = comm.t.lease();
         let t0 = std::time::Instant::now();
-        comm.t.recv_into(step.peer, base + step.round as u64, &mut msg)?;
+        comm.t.recv_into(step.peer, plan.step_tag(step.round), &mut msg)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += msg.len() as u64;
         let mut pos = 0usize;
@@ -163,7 +164,7 @@ fn scatter_values(
         }
         let t0 = std::time::Instant::now();
         m.bytes_sent += wire.len() as u64;
-        comm.t.send_pooled(s.peer, base + s.round as u64, wire)?;
+        comm.t.send_pooled(s.peer, plan.step_tag(s.round), wire)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     }
     st.pool.put_f32(block);
@@ -184,7 +185,7 @@ fn scatter_frames(
 ) -> Result<Vec<f32>> {
     let n = comm.size();
     let me = comm.rank();
-    let base = comm.fresh_tags(tree_rounds(n) as u64 + 1);
+    let plan = TreePlan::at(comm.fresh_tags(TreePlan::span(n)), n);
     let (recv_step, send_steps) = binomial_bcast(me, root, n);
     let my_subtree = binomial_subtree(me, root, n);
 
@@ -211,7 +212,7 @@ fn scatter_frames(
             let step = recv_step.expect("non-root receives");
             let mut msg = comm.t.lease();
             let t0 = std::time::Instant::now();
-            comm.t.recv_into(step.peer, base + step.round as u64, &mut msg)?;
+            comm.t.recv_into(step.peer, plan.step_tag(step.round), &mut msg)?;
             m.add(Phase::Comm, t0.elapsed().as_secs_f64());
             m.bytes_recv += msg.len() as u64;
             let (total, frames) = parse_bundle(&msg, my_subtree.len())?;
@@ -233,7 +234,7 @@ fn scatter_frames(
         encode_bundle_into(total, &parts, &mut wire)?;
         let t0 = std::time::Instant::now();
         m.bytes_sent += wire.len() as u64;
-        comm.t.send_pooled(s.peer, base + s.round as u64, wire)?;
+        comm.t.send_pooled(s.peer, plan.step_tag(s.round), wire)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
     }
 

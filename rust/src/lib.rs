@@ -106,7 +106,44 @@
 //! failures (not). Deterministic fault injection for tests lives in
 //! [`transport::fault`], and `zccl bench chaos` prices the failure
 //! paths (dead-peer detection latency, checksum overhead per element).
+//!
+//! ## Verified invariants
+//!
+//! Every collective's wire choreography is a deterministic function of
+//! `(collective, Algo, nranks, Topology, root)`: executors derive peers
+//! and tags from the pure plan descriptions in [`analysis::plan`] and
+//! the schedule generators in [`topology`]. The [`analysis`] module
+//! exploits this to *statically* rebuild the full per-rank message
+//! graph of any collective shape and prove, without spawning a thread:
+//!
+//! - **deadlock-freedom** — a dataflow simulation of the blocking
+//!   wait-for order terminates with every script drained;
+//! - **match completeness** — every send has exactly one receive and
+//!   vice versa (no orphan messages leaking across operations);
+//! - **tag-space safety** — reservations from the shared counter are
+//!   disjoint, every edge (after `GroupTransport` translation,
+//!   including segment fan-out) stays inside its operation's reserved
+//!   window, barrier/abort namespaces are never crossed, and no two
+//!   transfers on one link overlap tag windows;
+//! - **buffer-window disjointness** — chunk partitions tile exactly and
+//!   hierarchical subtree bundles cover every rank exactly once.
+//!
+//! `zccl verify` sweeps all of this across every algorithm arm,
+//! topology shape, and rank count (enforced in CI), and
+//! `tests/schedule_verifier.rs` closes the loop against reality: a
+//! traced in-memory fabric must record exactly the per-`(src, dst,
+//! tag)` message counts the symbolic graph predicts.
 
+#![forbid(unsafe_code)]
+#![deny(
+    clippy::dbg_macro,
+    clippy::todo,
+    clippy::unimplemented,
+    clippy::mem_forget,
+    clippy::exit
+)]
+
+pub mod analysis;
 pub mod apps;
 pub mod collectives;
 pub mod compress;

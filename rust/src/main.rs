@@ -11,6 +11,8 @@
 //! zccl worker --rank R --peers a:p,... [--values V] [mode flags]
 //! zccl train [--workers W] [--steps S] [--artifacts DIR] [mode flags]
 //!                                          DDP transformer training (e2e)
+//! zccl verify [--max-ranks N]              statically verify all collective
+//!                                          schedules (deadlock/tag safety)
 //! ```
 //!
 //! Mode flags: `--algo plain|cprp2p|ccoll|zccl|hier`, `--compressor
@@ -179,6 +181,14 @@ fn real_main() -> zccl::Result<()> {
             }
             println!("# final param norm {:.4}", report.final_param_norm);
         }
+        "verify" => {
+            let max = usize_flag(&args, "max-ranks", 9);
+            let report = zccl::analysis::verify::verify_sweep(max);
+            println!("{}", report.to_json());
+            if !report.ok() {
+                std::process::exit(1);
+            }
+        }
         "" | "help" | "--help" | "-h" => {
             println!("{}", HELP);
         }
@@ -204,6 +214,8 @@ USAGE:
   zccl worker --rank R --peers a:p,b:p,... [--values V] [mode flags]
   zccl train [--workers W] [--steps S] [--artifacts DIR] [--lr X]
              [--grad-artifact grad_step|grad_step_zccl] [mode flags]
+  zccl verify [--max-ranks N]           statically verify all collective
+                                        schedules (deadlock/tag/match safety)
 
 MODE FLAGS:
   --algo plain|cprp2p|ccoll|zccl|hier (default zccl)

@@ -30,7 +30,7 @@
 //! inter-node traffic flows **only between leaders**, and report
 //! bytes-crossing-the-slow-tier per iteration.
 
-use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -64,6 +64,14 @@ pub struct TrafficReport {
     /// Every directed (src, dst) rank pair that crossed the slow tier.
     pub inter_pairs: Vec<(usize, usize)>,
 }
+
+/// Exact per-`(src, dst, tag)` wire-message counts of a traced fabric —
+/// the ground truth the static schedule verifier's predicted message
+/// graph is checked against ([`crate::analysis`]): a run traced with
+/// [`MemFabric::run_traced`] must produce *precisely* the edges the
+/// analyzer derives from the collective's plan, or the analyzer has
+/// drifted from the executors.
+pub type MessageLedger = BTreeMap<(usize, usize, u64), u64>;
 
 /// Shared node map + traffic ledger of a node-partitioned fabric.
 #[derive(Debug)]
@@ -114,6 +122,10 @@ pub struct MemTransport {
     tx_seq: HashMap<(usize, u64), u64>,
     /// Next expected inbound sequence number per (source, tag).
     rx_seq: HashMap<(usize, u64), u64>,
+    /// Per-(src, dst, tag) message tape of a traced fabric. Recorded at
+    /// [`Transport::send_frame`] — the choke point every wire message
+    /// funnels through (plain, pooled and re-sent frames alike).
+    tape: Option<Arc<Mutex<MessageLedger>>>,
     /// Wire-integrity counters.
     wire: WireStats,
     /// Deadline armed on every blocking wait (`None` = wait forever).
@@ -128,20 +140,27 @@ pub struct MemFabric;
 impl MemFabric {
     /// Create `n` connected endpoints (sharing one packet pool).
     pub fn endpoints(n: usize) -> Vec<MemTransport> {
-        Self::build(n, None)
+        Self::build(n, None, None)
     }
 
     /// Create one endpoint per rank of `topo`, all pinned to their nodes:
     /// every message is tier-classified and counted (see the module docs).
     pub fn endpoints_on_nodes(topo: &Topology) -> Vec<MemTransport> {
-        let nodes = Arc::new(NodeMap {
-            topo: topo.clone(),
-            traffic: Mutex::new((TierTraffic::default(), BTreeSet::new())),
-        });
-        Self::build(topo.ranks(), Some(nodes))
+        Self::build(topo.ranks(), Some(Self::node_map(topo)), None)
     }
 
-    fn build(n: usize, nodes: Option<Arc<NodeMap>>) -> Vec<MemTransport> {
+    fn node_map(topo: &Topology) -> Arc<NodeMap> {
+        Arc::new(NodeMap {
+            topo: topo.clone(),
+            traffic: Mutex::new((TierTraffic::default(), BTreeSet::new())),
+        })
+    }
+
+    fn build(
+        n: usize,
+        nodes: Option<Arc<NodeMap>>,
+        tape: Option<Arc<Mutex<MessageLedger>>>,
+    ) -> Vec<MemTransport> {
         // matrix[s][d] = channel from s to d.
         let mut txs: Vec<Vec<Option<Sender<Packet>>>> =
             (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
@@ -166,6 +185,7 @@ impl MemFabric {
                 unmatched: HashMap::new(),
                 pool: pool.clone(),
                 nodes: nodes.clone(),
+                tape: tape.clone(),
                 tx_seq: HashMap::new(),
                 rx_seq: HashMap::new(),
                 wire: WireStats::default(),
@@ -197,6 +217,37 @@ impl MemFabric {
         let nodes = endpoints[0].nodes.clone().expect("node-partitioned fabric");
         let results = Self::launch(endpoints, f);
         (results, nodes.report())
+    }
+
+    /// [`MemFabric::run`] with every wire message recorded: returns the
+    /// per-rank results plus the exact per-`(src, dst, tag)` message
+    /// counts. The static schedule verifier's property tests compare
+    /// this ledger against the analyzer's predicted graph.
+    pub fn run_traced<R, F>(n: usize, f: F) -> (Vec<R>, MessageLedger)
+    where
+        R: Send + 'static,
+        F: Fn(&mut MemTransport) -> R + Send + Sync + 'static,
+    {
+        let tape = Arc::new(Mutex::new(MessageLedger::new()));
+        let results = Self::launch(Self::build(n, None, Some(tape.clone())), f);
+        let ledger = tape.lock().unwrap().clone();
+        (results, ledger)
+    }
+
+    /// [`MemFabric::run_traced`] over a node-partitioned fabric (one rank
+    /// per entry of `topo`) — the traced twin of
+    /// [`MemFabric::run_on_nodes`], used to ledger-check hierarchical
+    /// schedules.
+    pub fn run_traced_on_nodes<R, F>(topo: &Topology, f: F) -> (Vec<R>, MessageLedger)
+    where
+        R: Send + 'static,
+        F: Fn(&mut MemTransport) -> R + Send + Sync + 'static,
+    {
+        let tape = Arc::new(Mutex::new(MessageLedger::new()));
+        let endpoints = Self::build(topo.ranks(), Some(Self::node_map(topo)), Some(tape.clone()));
+        let results = Self::launch(endpoints, f);
+        let ledger = tape.lock().unwrap().clone();
+        (results, ledger)
     }
 
     fn launch<R, F>(endpoints: Vec<MemTransport>, f: F) -> Vec<R>
@@ -329,6 +380,9 @@ impl Transport for MemTransport {
         if to >= self.size {
             return Err(Error::invalid(format!("send to rank {to} of {}", self.size)));
         }
+        if let Some(tape) = &self.tape {
+            *tape.lock().unwrap().entry((self.rank, to, tag)).or_insert(0) += 1;
+        }
         self.tx[to]
             .send((tag, frame))
             .map_err(|_| Error::transport(format!("rank {to} receiver dropped")))
@@ -437,8 +491,9 @@ impl Transport for MemTransport {
             return Err(Error::transport(m.clone()));
         }
         // Pull in anything newly arrived, then scan for poison — any tag
-        // with the abort bit set (GroupTransport offsets tags by a base
-        // below bit 62, preserving the bit).
+        // with the abort bit set (GroupTransport passes reserved-space
+        // tags through untranslated, so group poison arrives on exactly
+        // ABORT_TAG too).
         self.progress()?;
         loop {
             let Some(&(src, tag)) = self.unmatched.keys().find(|(_, t)| t & ABORT_TAG != 0)
@@ -675,6 +730,30 @@ mod tests {
         assert_eq!(report.inter_pairs, vec![(0, 2), (3, 1)]);
         // Plain fabrics have no ledger.
         assert!(MemFabric::endpoints(2)[0].traffic().is_none());
+    }
+
+    #[test]
+    fn traced_fabric_records_every_wire_message() {
+        let (results, ledger) = MemFabric::run_traced(2, |t| {
+            if t.rank() == 0 {
+                t.send(1, 7, b"a").unwrap();
+                t.send(1, 7, b"b").unwrap();
+                let mut p = t.lease();
+                p.extend_from_slice(b"c");
+                t.send_pooled(1, 9, p).unwrap();
+                0
+            } else {
+                t.recv(0, 7).unwrap();
+                t.recv(0, 7).unwrap();
+                t.recv(0, 9).unwrap();
+                1
+            }
+        });
+        assert_eq!(results, vec![0, 1]);
+        let mut want = MessageLedger::new();
+        want.insert((0, 1, 7), 2);
+        want.insert((0, 1, 9), 1);
+        assert_eq!(ledger, want, "plain and pooled sends must both hit the tape");
     }
 
     #[test]

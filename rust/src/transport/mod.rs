@@ -91,6 +91,53 @@ use crate::{Error, Result};
 /// this bit).
 pub const BARRIER_TAG_BASE: u64 = 1 << 62;
 
+/// Tags a single dissemination barrier consumes from the collective tag
+/// counter: [`Transport::barrier`] uses one tag per round and rounds
+/// double the distance, so 64 covers any conceivable fabric. Generations
+/// allocated as `fresh_tags(BARRIER_GEN_SPAN)` slices inherit the
+/// counter's disjointness, so barrier tags of different calls — and of
+/// sub-communicators, whose [`group_wire_tag`] translation offsets the
+/// low bits by the group's own counter-allocated base — can never
+/// cross-match.
+pub const BARRIER_GEN_SPAN: u64 = 64;
+
+/// The wire tag of dissemination-barrier round `round` under
+/// `generation`. Pure — the single definition consumed by the default
+/// [`Transport::barrier`] *and* by the static schedule verifier
+/// ([`crate::analysis`]), so the analyzer cannot drift from the wire.
+///
+/// The low bits are `generation + round` (not a shifted generation
+/// field): generations come from the same monotonic counter as every
+/// collective tag slice, so additive composition keeps distinct barrier
+/// calls on distinct low-bit ranges and can never carry into bit 63.
+pub fn barrier_tag(generation: u64, round: u64) -> u64 {
+    BARRIER_TAG_BASE | (generation + round)
+}
+
+/// Translate a sub-communicator tag onto the parent fabric's wire — the
+/// single tag-translation rule of [`GroupTransport`], exported pure so
+/// the static schedule verifier models group traffic exactly.
+///
+/// Collective tags (below bit 62) are offset by the group's reserved
+/// `tag_base`. Reserved namespaces survive translation: an abort poison
+/// keeps exactly [`ABORT_TAG`] (the fence is fabric-global — peers scan
+/// for bit 63, and smearing `tag_base` into the low bits would split the
+/// poison across per-tag sequence streams), and a barrier tag stays
+/// inside the barrier namespace with its low bits offset by `tag_base`
+/// (naively adding `tag_base` to the full tag would alias the parent's
+/// own barrier generations: parent generation `g` at low bits `g + r`
+/// collides with a group barrier whose `tag_base + r` lands on the same
+/// value — precisely the overlap this function pins down).
+pub fn group_wire_tag(tag_base: u64, tag: u64) -> u64 {
+    if tag & ABORT_TAG != 0 {
+        tag
+    } else if tag & BARRIER_TAG_BASE != 0 {
+        BARRIER_TAG_BASE | (tag_base + (tag & !BARRIER_TAG_BASE))
+    } else {
+        tag_base + tag
+    }
+}
+
 /// Reserved control tag for the abort fence: a rank failing mid-collective
 /// sends its error text on this tag to every peer, and
 /// [`Transport::check_abort`] converts waits into prompt errors. Bit 63 is
@@ -634,7 +681,11 @@ pub trait Transport: Send {
         Ok(buf)
     }
 
-    /// Dissemination barrier over the reserved tag space.
+    /// Dissemination barrier over the reserved tag space. Callers should
+    /// allocate `generation` as a [`BARRIER_GEN_SPAN`]-wide slice of the
+    /// communicator's tag counter (as
+    /// [`crate::collectives::Communicator::barrier`] does) so distinct
+    /// barrier calls use disjoint [`barrier_tag`] ranges.
     fn barrier(&mut self, generation: u64) -> Result<()> {
         let n = self.size();
         let me = self.rank();
@@ -646,7 +697,7 @@ pub trait Transport: Send {
         while dist < n {
             let to = (me + dist) % n;
             let from = (me + n - dist) % n;
-            let tag = BARRIER_TAG_BASE | (generation << 8) | round;
+            let tag = barrier_tag(generation, round);
             self.send(to, tag, &[])?;
             self.recv(from, tag)?;
             dist *= 2;
@@ -658,8 +709,10 @@ pub trait Transport: Send {
 
 /// A sub-communicator view over an existing transport: the member at
 /// position `i` of `members` appears as rank `i` of a `members.len()`-rank
-/// transport, and every tag is offset by `tag_base` so the group's traffic
-/// cannot cross-match the parent communicator's.
+/// transport, and every tag is translated through [`group_wire_tag`] —
+/// collective tags offset by `tag_base`, reserved barrier/abort
+/// namespaces preserved — so the group's traffic cannot cross-match the
+/// parent communicator's, on either side of the reserved-tag boundary.
 ///
 /// This is how the hierarchical collectives reuse the flat schedules
 /// *verbatim* on one tier: the leader tier wraps the fabric in a
@@ -708,16 +761,16 @@ impl Transport for GroupTransport<'_> {
         self.inner.timeout()
     }
     fn send(&mut self, to: usize, tag: u64, data: &[u8]) -> Result<()> {
-        self.inner.send(self.members[to], self.tag_base + tag, data)
+        self.inner.send(self.members[to], group_wire_tag(self.tag_base, tag), data)
     }
     fn send_pooled(&mut self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
-        self.inner.send_pooled(self.members[to], self.tag_base + tag, data)
+        self.inner.send_pooled(self.members[to], group_wire_tag(self.tag_base, tag), data)
     }
     fn seal_frame(&mut self, to: usize, tag: u64, payload: Vec<u8>) -> Vec<u8> {
-        self.inner.seal_frame(self.members[to], self.tag_base + tag, payload)
+        self.inner.seal_frame(self.members[to], group_wire_tag(self.tag_base, tag), payload)
     }
     fn send_frame(&mut self, to: usize, tag: u64, frame: Vec<u8>) -> Result<()> {
-        self.inner.send_frame(self.members[to], self.tag_base + tag, frame)
+        self.inner.send_frame(self.members[to], group_wire_tag(self.tag_base, tag), frame)
     }
     fn check_abort(&mut self) -> Result<()> {
         self.inner.check_abort()
@@ -726,12 +779,12 @@ impl Transport for GroupTransport<'_> {
         self.inner.wire_stats()
     }
     fn recv_into(&mut self, from: usize, tag: u64, buf: &mut Vec<u8>) -> Result<usize> {
-        self.inner.recv_into(self.members[from], self.tag_base + tag, buf)
+        self.inner.recv_into(self.members[from], group_wire_tag(self.tag_base, tag), buf)
     }
     fn irecv(&mut self, from: usize, tag: u64) -> RecvHandle {
         // Handles are issued in the PARENT's rank/tag space so the inner
         // transport's progress engine can poll them directly.
-        RecvHandle::new(self.members[from], self.tag_base + tag)
+        RecvHandle::new(self.members[from], group_wire_tag(self.tag_base, tag))
     }
     fn try_complete(&mut self, h: &mut RecvHandle) -> Result<bool> {
         self.inner.try_complete(h)
@@ -1032,5 +1085,68 @@ mod tests {
         let members = [0usize, 2];
         assert!(GroupTransport::new(&mut eps[1], &members, 0).is_err());
         assert!(GroupTransport::new(&mut eps[2], &members, 0).is_ok());
+    }
+
+    #[test]
+    fn group_wire_tag_preserves_reserved_namespaces() {
+        // Collective tags are offset plainly.
+        assert_eq!(group_wire_tag(1000, 5), 1005);
+        assert_eq!(group_wire_tag(0, 5), 5);
+        // The abort fence is fabric-global: bit 63 passes through
+        // untranslated, so a group-scoped failure poisons peers on
+        // exactly ABORT_TAG.
+        assert_eq!(group_wire_tag(1000, ABORT_TAG), ABORT_TAG);
+        // Barrier tags stay inside the barrier namespace with their low
+        // bits offset — never spilling into bit 63 even at the extreme
+        // corner of both spaces.
+        assert_eq!(group_wire_tag(1000, barrier_tag(0, 2)), BARRIER_TAG_BASE | 1002);
+        let corner = group_wire_tag(BARRIER_TAG_BASE - 1, barrier_tag(BARRIER_TAG_BASE - 65, 63));
+        assert_eq!(corner & ABORT_TAG, 0, "barrier translation must never reach bit 63");
+        assert_ne!(corner & BARRIER_TAG_BASE, 0, "…and must stay in the barrier namespace");
+        // The pinned aliasing regression: generations and group bases
+        // come from ONE per-communicator counter, so disjoint counter
+        // slices must yield disjoint wire tags. Parent barrier slice
+        // [0, 64) vs a group based at the next slice (64): under the old
+        // `generation << 8` formula a parent generation equal to
+        // `tag_base >> 8` collided with the group's round tags; under
+        // additive low bits the slices translate to disjoint low ranges.
+        let parent_last = barrier_tag(0, BARRIER_GEN_SPAN - 1);
+        let group_first = group_wire_tag(BARRIER_GEN_SPAN, barrier_tag(0, 0));
+        assert_eq!(parent_last + 1, group_first, "adjacent slices stay adjacent, not aliased");
+    }
+
+    #[test]
+    fn group_abort_lands_on_exact_abort_tag() {
+        // A rank failing inside a sub-communicator must poison its group
+        // peers on the reserved ABORT_TAG itself — not on
+        // `tag_base + ABORT_TAG` — so the fence scan and the sequence
+        // ledger see ONE fabric-wide poison stream per source.
+        MemFabric::run(3, |t| {
+            let me = t.rank();
+            if me == 0 {
+                let members = [0usize, 2];
+                let mut g = GroupTransport::new(t, &members, 500).unwrap();
+                g.send_abort("group failure");
+            } else if me == 2 {
+                let m = t.recv(0, ABORT_TAG).unwrap();
+                assert_eq!(m, b"group failure");
+            }
+        });
+    }
+
+    #[test]
+    fn group_barrier_and_parent_barrier_interleave() {
+        // A barrier run through a group view must complete and must not
+        // cross-match a parent-fabric barrier issued right after by the
+        // same ranks (disjoint generation slices → disjoint wire tags).
+        MemFabric::run(4, |t| {
+            let me = t.rank();
+            if me == 1 || me == 3 {
+                let members = [1usize, 3];
+                let mut g = GroupTransport::new(t, &members, 1024).unwrap();
+                g.barrier(0).unwrap();
+            }
+            t.barrier(1024).unwrap();
+        });
     }
 }
