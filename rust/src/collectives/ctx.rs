@@ -183,7 +183,7 @@ impl CollState {
         let pipe = ((mode.algo == Algo::Zccl || mode.algo == Algo::Hier)
             && mode.kind == CompressorKind::FzLight
             && !mode.multithread)
-            .then(|| PipeFzLight::with_chunk(mode.pipe_chunk));
+            .then(|| PipeFzLight::with_chunk(mode.pipe_chunk).with_staged(mode.staged));
         CollState {
             mode,
             codec,

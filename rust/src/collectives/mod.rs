@@ -216,6 +216,11 @@ pub struct Mode {
     /// Fixed pipeline segment size in bytes for the balanced allgather
     /// (§3.5.1 "fixed pipeline size").
     pub pipeline_bytes: usize,
+    /// Emit staged (version-2) fZ-light frames: per-chunk plain /
+    /// fixed-width / entropy-coded selection
+    /// (see [`crate::compress::fzlight`]). Ignored for other codecs;
+    /// every decode path accepts both frame versions regardless.
+    pub staged: bool,
 }
 
 impl Mode {
@@ -228,6 +233,7 @@ impl Mode {
             multithread: false,
             pipe_chunk: crate::compress::fzlight::DEFAULT_CHUNK,
             pipeline_bytes: 1 << 16,
+            staged: false,
         }
     }
     /// CPRP2P with the given codec.
@@ -266,6 +272,12 @@ impl Mode {
         self.pipeline_bytes = bytes;
         self
     }
+    /// Toggle staged (version-2) fZ-light frames with adaptive per-chunk
+    /// plain / fixed-width / entropy-coded selection.
+    pub fn with_staged(mut self, staged: bool) -> Mode {
+        self.staged = staged;
+        self
+    }
 
     /// Whether this mode compresses at all.
     pub fn compresses(&self) -> bool {
@@ -275,15 +287,16 @@ impl Mode {
     /// Build the (possibly multithreaded) codec for this mode.
     pub fn codec(&self) -> Box<dyn crate::compress::Compressor> {
         if self.multithread {
-            Box::new(crate::compress::multithread::MtCompressor::with_chunk(
-                self.kind,
-                self.pipe_chunk,
-            ))
+            Box::new(
+                crate::compress::multithread::MtCompressor::with_chunk(self.kind, self.pipe_chunk)
+                    .with_staged(self.staged),
+            )
         } else {
             match self.kind {
-                CompressorKind::FzLight => {
-                    Box::new(crate::compress::FzLight::with_chunk(self.pipe_chunk))
-                }
+                CompressorKind::FzLight => Box::new(
+                    crate::compress::FzLight::with_chunk(self.pipe_chunk)
+                        .with_staged(self.staged),
+                ),
                 CompressorKind::Szx => {
                     Box::new(crate::compress::Szx::with_chunk(self.pipe_chunk))
                 }

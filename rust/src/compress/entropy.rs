@@ -1,0 +1,557 @@
+//! Order-0 byte rANS — the optional second compression stage over the
+//! fixed-width-packed fZ-light chunk payloads (frame version 2).
+//!
+//! The staged encoder (`fzlight.rs`) treats a chunk's version-1 payload
+//! bytes as an opaque byte string and asks this module to shrink it.
+//! Low-entropy scientific fields quantize to deltas whose packed bytes
+//! are heavily skewed (zeros from constant runs, short codes reusing a
+//! few byte values), which an order-0 model captures well; high-entropy
+//! chunks fail [`encode_if_smaller`]'s budget and ship fixed-width
+//! unchanged, so the stage is never worse than the budget the caller
+//! grants.
+//!
+//! ## Blob layout
+//!
+//! ```text
+//! mode u8 | table | state u32 LE | stream bytes (decoder reads forward)
+//! ```
+//!
+//! - [`MODE_SINGLE`]: the whole blob is `[2, sym]` — the source was one
+//!   repeated byte (or empty); no table, no stream.
+//! - [`MODE_LIST`] (2..=32 distinct bytes): `k u8`, then `k` symbol
+//!   bytes strictly ascending, then `k` 12-bit frequencies packed
+//!   LSB-first ([`bits::pack_fixed`], width 12).
+//! - [`MODE_BITMAP`] (33..=256 distinct bytes): a 32-byte presence
+//!   bitmap (bit `s & 7` of byte `s >> 3`), then the packed 12-bit
+//!   frequencies for the set bits in ascending symbol order.
+//!
+//! Frequencies are the normalized counts: each in `1..=4095`, summing
+//! to exactly [`PROB_SCALE`]. The decoder rejects anything else.
+//!
+//! ## Coder
+//!
+//! Standard byte-wise rANS with a 12-bit probability resolution and
+//! renormalization interval `[RANS_L, 256 * RANS_L)`. The encoder walks
+//! the source **backward** (pre-symbol renorm emits low bytes to a
+//! scratch stack), flushes its final state as the `u32`, and appends
+//! the scratch reversed so the decoder consumes bytes strictly forward.
+//! The decoder's post-symbol refill mirrors the renorm exactly, so
+//! after `raw_len` symbols a well-formed blob ends with `state ==
+//! RANS_L` and every byte consumed — both are checked, and a failed
+//! check is a typed [`Error::Corrupt`], never a panic.
+//!
+//! Two decoders share one stream walker ([`decode_stream`]):
+//! [`decode`] resolves slots through a 4096-entry lookup table (the hot
+//! path), [`decode_reference`] linearly scans the cumulative table —
+//! the executable spec in the PR 5 style, pinned equal to the fast
+//! path by the property tests below and the `tests/codec_kernels.rs`
+//! suite.
+//!
+//! ## Caller contract
+//!
+//! `raw_len` (the decoded byte count) travels outside the blob — the
+//! staged chunk header stores it — and [`decode`] sizes its output from
+//! it, so callers must bound it from trusted frame geometry *before*
+//! calling (fzlight caps it at the largest possible version-1 chunk
+//! payload for the chunk's value count).
+
+use super::bits;
+use crate::{Error, Result};
+
+/// Probability resolution in bits: frequencies live on a `1 << 12` grid.
+pub const PROB_BITS: u32 = 12;
+/// Frequency sum every table must hit exactly (`1 << PROB_BITS`).
+pub const PROB_SCALE: u32 = 1 << PROB_BITS;
+/// Lower bound of the rANS renormalization interval `[L, 256 * L)`.
+const RANS_L: u32 = 1 << 23;
+
+/// Table mode: explicit ascending symbol list (2..=32 distinct bytes).
+pub const MODE_LIST: u8 = 0;
+/// Table mode: 32-byte presence bitmap (33..=256 distinct bytes).
+pub const MODE_BITMAP: u8 = 1;
+/// Table mode: single repeated symbol; blob is exactly `[2, sym]`.
+pub const MODE_SINGLE: u8 = 2;
+
+/// Largest symbol count encoded as an explicit list; beyond this the
+/// 32-byte bitmap is smaller.
+const LIST_MAX: usize = 32;
+
+/// Parsed frequency table: ascending symbols with their normalized
+/// frequencies and exclusive cumulative offsets.
+struct Table {
+    syms: Vec<u8>,
+    freqs: Vec<u32>,
+    cums: Vec<u32>,
+}
+
+/// Normalize per-symbol counts onto the [`PROB_SCALE`] grid: every
+/// present symbol keeps a frequency `>= 1`, the sum lands exactly on
+/// `PROB_SCALE`. Surplus goes to the most frequent symbol (which the
+/// floor always leaves headroom for when `k >= 2`); a deficit is walked
+/// off the largest frequencies one unit at a time (bounded: at most
+/// `k - 1` clamp-ups created it).
+fn normalize(hist: &[u32; 256], syms: &[u8], total: usize) -> Vec<u16> {
+    debug_assert!(syms.len() >= 2);
+    let mut freqs: Vec<u16> = syms
+        .iter()
+        .map(|&s| {
+            let exact = hist[s as usize] as u64 * PROB_SCALE as u64 / total as u64;
+            exact.clamp(1, PROB_SCALE as u64 - 1) as u16
+        })
+        .collect();
+    let sum: i64 = freqs.iter().map(|&f| f as i64).sum();
+    let mut diff = PROB_SCALE as i64 - sum;
+    if diff > 0 {
+        let top = (0..freqs.len()).max_by_key(|&i| freqs[i]).unwrap_or(0);
+        freqs[top] += diff as u16;
+    }
+    while diff < 0 {
+        let top = (0..freqs.len()).filter(|&i| freqs[i] > 1).max_by_key(|&i| freqs[i]);
+        let top = top.expect("deficit exceeds reducible mass");
+        freqs[top] -= 1;
+        diff += 1;
+    }
+    debug_assert_eq!(freqs.iter().map(|&f| f as u32).sum::<u32>(), PROB_SCALE);
+    freqs
+}
+
+/// Byte length of the serialized table (mode byte included) for `k`
+/// distinct symbols, `k >= 2`.
+fn table_bytes(k: usize) -> usize {
+    let head = if k <= LIST_MAX { 2 + k } else { 1 + 32 };
+    head + (k * PROB_BITS as usize).div_ceil(8)
+}
+
+/// Serialize the mode byte + table for `syms`/`freqs` (`k >= 2`).
+fn write_table(out: &mut Vec<u8>, syms: &[u8], freqs: &[u16]) {
+    if syms.len() <= LIST_MAX {
+        out.push(MODE_LIST);
+        out.push(syms.len() as u8);
+        out.extend_from_slice(syms);
+    } else {
+        out.push(MODE_BITMAP);
+        let mut bm = [0u8; 32];
+        for &s in syms {
+            bm[(s >> 3) as usize] |= 1 << (s & 7);
+        }
+        out.extend_from_slice(&bm);
+    }
+    let packed: Vec<u64> = freqs.iter().map(|&f| f as u64).collect();
+    bits::pack_fixed(out, &packed, PROB_BITS);
+}
+
+/// Parse and validate the table at the head of `blob` (modes LIST and
+/// BITMAP — the caller handles [`MODE_SINGLE`] first). Returns the
+/// table and the offset of the `u32` state word. Every malformation —
+/// unknown mode, out-of-range symbol count, non-ascending list, zero
+/// frequency, wrong frequency sum, truncation — is a typed error.
+fn parse_table(blob: &[u8]) -> Result<(Table, usize)> {
+    let mode = *blob.first().ok_or_else(|| Error::corrupt("empty entropy blob"))?;
+    let (syms, mut pos) = match mode {
+        MODE_LIST => {
+            let k = *blob.get(1).ok_or_else(|| Error::corrupt("entropy list count past end"))?
+                as usize;
+            if !(2..=LIST_MAX).contains(&k) {
+                return Err(Error::corrupt(format!("entropy list count {k} out of range")));
+            }
+            let syms = blob
+                .get(2..2 + k)
+                .ok_or_else(|| Error::corrupt("entropy symbol list past end"))?
+                .to_vec();
+            if !syms.windows(2).all(|w| w[0] < w[1]) {
+                return Err(Error::corrupt("entropy symbol list not ascending"));
+            }
+            (syms, 2 + k)
+        }
+        MODE_BITMAP => {
+            let bm = blob
+                .get(1..33)
+                .ok_or_else(|| Error::corrupt("entropy bitmap past end"))?;
+            let syms: Vec<u8> = (0u16..256)
+                .filter(|&s| bm[(s >> 3) as usize] & (1 << (s & 7)) != 0)
+                .map(|s| s as u8)
+                .collect();
+            if syms.len() < 2 {
+                return Err(Error::corrupt("entropy bitmap needs >= 2 symbols"));
+            }
+            (syms, 33)
+        }
+        m => return Err(Error::corrupt(format!("unknown entropy table mode {m}"))),
+    };
+    let nbytes = (syms.len() * PROB_BITS as usize).div_ceil(8);
+    let packed = blob
+        .get(pos..pos + nbytes)
+        .ok_or_else(|| Error::corrupt("entropy freq table past end"))?;
+    pos += nbytes;
+    let mut raw = vec![0u64; syms.len()];
+    bits::unpack_fixed(packed, PROB_BITS, &mut raw);
+    let mut freqs = Vec::with_capacity(syms.len());
+    let mut cums = Vec::with_capacity(syms.len());
+    let mut cum = 0u32;
+    for f in raw {
+        if f == 0 {
+            return Err(Error::corrupt("entropy frequency of zero"));
+        }
+        cums.push(cum);
+        cum += f as u32;
+        freqs.push(f as u32);
+    }
+    if cum != PROB_SCALE {
+        return Err(Error::corrupt(format!("entropy freq sum {cum} != {PROB_SCALE}")));
+    }
+    Ok((Table { syms, freqs, cums }, pos))
+}
+
+/// Append the rANS stream (state word + bytes) for `src` under the
+/// per-byte `(freq, cum)` model in `f_of`/`c_of`.
+fn encode_stream(src: &[u8], f_of: &[u32; 256], c_of: &[u32; 256], out: &mut Vec<u8>) {
+    let mut state: u32 = RANS_L;
+    let mut tail: Vec<u8> = Vec::with_capacity(src.len() / 2 + 8);
+    for &b in src.iter().rev() {
+        let f = f_of[b as usize];
+        debug_assert!(f >= 1);
+        // Pre-symbol renorm keeps the post-encode state inside
+        // [RANS_L, 256 * RANS_L), so it always fits the u32 flush.
+        let x_max = ((RANS_L >> PROB_BITS) << 8) * f;
+        while state >= x_max {
+            tail.push(state as u8);
+            state >>= 8;
+        }
+        state = ((state / f) << PROB_BITS) + (state % f) + c_of[b as usize];
+    }
+    bits::le::put_u32(out, state);
+    out.extend(tail.iter().rev());
+}
+
+/// Shared stream walker for both decoders: read the state word at
+/// `pos`, emit `raw_len` symbols resolving each 12-bit slot through
+/// `lookup` (returns the symbol byte, its frequency, and its cumulative
+/// offset), refilling byte-by-byte after each symbol. Enforces the
+/// final-state and all-bytes-consumed integrity checks.
+fn decode_stream(
+    blob: &[u8],
+    mut pos: usize,
+    raw_len: usize,
+    out: &mut Vec<u8>,
+    mut lookup: impl FnMut(u32) -> (u8, u32, u32),
+) -> Result<()> {
+    let mut state = bits::le::get_u32(blob, &mut pos)?;
+    if state < RANS_L {
+        return Err(Error::corrupt("entropy state below renorm interval"));
+    }
+    out.reserve(raw_len);
+    for _ in 0..raw_len {
+        let slot = state & (PROB_SCALE - 1);
+        let (sym, f, c) = lookup(slot);
+        // slot >= c by table construction, and f * (state >> 12) tops
+        // out below 2^32 even for a forged state — no overflow.
+        state = f * (state >> PROB_BITS) + slot - c;
+        out.push(sym);
+        while state < RANS_L {
+            let b = *blob
+                .get(pos)
+                .ok_or_else(|| Error::corrupt("entropy stream exhausted"))?;
+            pos += 1;
+            state = (state << 8) | b as u32;
+        }
+    }
+    if state != RANS_L {
+        return Err(Error::corrupt("entropy final state mismatch"));
+    }
+    if pos != blob.len() {
+        return Err(Error::corrupt("entropy trailing bytes"));
+    }
+    Ok(())
+}
+
+/// Entropy-code `src`, appending the blob to `out`. Always succeeds
+/// (single-symbol and empty sources collapse to the 2-byte
+/// [`MODE_SINGLE`] blob). Prefer [`encode_if_smaller`] when the caller
+/// has a size budget to beat.
+pub fn encode(src: &[u8], out: &mut Vec<u8>) {
+    let n = encode_if_smaller(src, usize::MAX, out);
+    debug_assert!(n.is_some());
+}
+
+/// Entropy-code `src` only if the blob fits in `budget` bytes: returns
+/// the appended blob length, or `None` with `out` untouched. A cheap
+/// conservative size estimate (information content under the
+/// normalized model) skips hopeless high-entropy chunks before any
+/// encoding work; the final length check on the real blob is
+/// authoritative either way.
+pub fn encode_if_smaller(src: &[u8], budget: usize, out: &mut Vec<u8>) -> Option<usize> {
+    let base = out.len();
+    let mut hist = [0u32; 256];
+    for &b in src {
+        hist[b as usize] += 1;
+    }
+    let syms: Vec<u8> = (0u16..256).filter(|&s| hist[s as usize] > 0).map(|s| s as u8).collect();
+    if syms.len() <= 1 {
+        if budget < 2 {
+            return None;
+        }
+        out.push(MODE_SINGLE);
+        out.push(syms.first().copied().unwrap_or(0));
+        return Some(2);
+    }
+    let freqs = normalize(&hist, &syms, src.len());
+    // Estimate: header + state word + the stream's information content
+    // under the code. The real stream recovers up to ~4 bytes from the
+    // flushed state, so the +8 slack keeps the skip strictly
+    // conservative — a chunk skipped here could never have fit.
+    let mut ideal_bits = 0.0f64;
+    for (i, &s) in syms.iter().enumerate() {
+        let c = hist[s as usize] as f64;
+        ideal_bits += c * (PROB_SCALE as f64 / freqs[i] as f64).log2();
+    }
+    let est = table_bytes(syms.len()) + 4 + (ideal_bits / 8.0) as usize;
+    if est > budget.saturating_add(8) {
+        return None;
+    }
+    let mut f_of = [0u32; 256];
+    let mut c_of = [0u32; 256];
+    let mut cum = 0u32;
+    for (i, &s) in syms.iter().enumerate() {
+        f_of[s as usize] = freqs[i] as u32;
+        c_of[s as usize] = cum;
+        cum += freqs[i] as u32;
+    }
+    write_table(out, &syms, &freqs);
+    encode_stream(src, &f_of, &c_of, out);
+    let len = out.len() - base;
+    if len > budget {
+        out.truncate(base);
+        return None;
+    }
+    Some(len)
+}
+
+/// Decode a blob produced by [`encode`] back into exactly `raw_len`
+/// bytes appended to `out` — the fast path (4096-entry slot lookup
+/// table). `raw_len` is trusted sizing input; see the module docs for
+/// the caller's bounding contract. Any malformation is a typed
+/// [`Error::Corrupt`]; on error `out` may hold a partial suffix (frame
+/// callers decode into scratch and discard on error).
+pub fn decode(blob: &[u8], raw_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    let mode = *blob.first().ok_or_else(|| Error::corrupt("empty entropy blob"))?;
+    if mode == MODE_SINGLE {
+        if blob.len() != 2 {
+            return Err(Error::corrupt("entropy single-symbol blob must be 2 bytes"));
+        }
+        out.resize(out.len() + raw_len, blob[1]);
+        return Ok(());
+    }
+    let (t, pos) = parse_table(blob)?;
+    let mut lut = [0u8; PROB_SCALE as usize];
+    for (i, (&f, &c)) in t.freqs.iter().zip(&t.cums).enumerate() {
+        for slot in c..c + f {
+            lut[slot as usize] = i as u8;
+        }
+    }
+    decode_stream(blob, pos, raw_len, out, |slot| {
+        let i = lut[slot as usize] as usize;
+        (t.syms[i], t.freqs[i], t.cums[i])
+    })
+}
+
+/// Scalar reference decoder: identical stream walk, but each slot is
+/// resolved by a linear scan of the cumulative table. The executable
+/// spec for the blob layout (PR 5 style) — pinned bit-equal to
+/// [`decode`] by the property suite; not a hot path.
+pub fn decode_reference(blob: &[u8], raw_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    let mode = *blob.first().ok_or_else(|| Error::corrupt("empty entropy blob"))?;
+    if mode == MODE_SINGLE {
+        if blob.len() != 2 {
+            return Err(Error::corrupt("entropy single-symbol blob must be 2 bytes"));
+        }
+        out.resize(out.len() + raw_len, blob[1]);
+        return Ok(());
+    }
+    let (t, pos) = parse_table(blob)?;
+    decode_stream(blob, pos, raw_len, out, |slot| {
+        let mut i = 0usize;
+        while i + 1 < t.cums.len() && t.cums[i + 1] <= slot {
+            i += 1;
+        }
+        (t.syms[i], t.freqs[i], t.cums[i])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn roundtrip(src: &[u8]) {
+        let mut blob = Vec::new();
+        encode(src, &mut blob);
+        let mut fast = Vec::new();
+        decode(&blob, src.len(), &mut fast).expect("fast decode");
+        assert_eq!(fast, src, "fast roundtrip ({} bytes)", src.len());
+        let mut reference = Vec::new();
+        decode_reference(&blob, src.len(), &mut reference).expect("reference decode");
+        assert_eq!(reference, src, "reference roundtrip ({} bytes)", src.len());
+    }
+
+    #[test]
+    fn roundtrips_across_source_shapes() {
+        let mut rng = Rng::new(0xE27);
+        roundtrip(&[]);
+        roundtrip(&[42]);
+        roundtrip(&[7; 1000]); // single symbol
+        // Two skewed symbols.
+        let two: Vec<u8> = (0..4096).map(|_| if rng.below(16) == 0 { 1 } else { 0 }).collect();
+        roundtrip(&two);
+        // <= 32 symbols (list table).
+        let list: Vec<u8> = (0..3000).map(|_| (rng.below(20) * 3) as u8).collect();
+        roundtrip(&list);
+        // > 32 symbols (bitmap table), geometric-ish skew.
+        let bm: Vec<u8> = (0..5000)
+            .map(|_| {
+                let r = rng.below(256) as u8;
+                r & (rng.below(256) as u8) // biased toward small values
+            })
+            .collect();
+        roundtrip(&bm);
+        // Full-range uniform (worst case: ratio ~1, still exact).
+        let uni: Vec<u8> = (0..2048).map(|_| rng.below(256) as u8).collect();
+        roundtrip(&uni);
+        // All 256 symbols present at least once.
+        let mut all: Vec<u8> = (0u16..256).map(|s| s as u8).collect();
+        all.extend((0..1000).map(|_| (rng.below(256)) as u8));
+        roundtrip(&all);
+    }
+
+    #[test]
+    fn single_symbol_blob_is_two_bytes() {
+        let mut blob = Vec::new();
+        encode(&[9u8; 500], &mut blob);
+        assert_eq!(blob, vec![MODE_SINGLE, 9]);
+        let mut out = Vec::new();
+        decode(&blob, 500, &mut out).unwrap();
+        assert_eq!(out, vec![9u8; 500]);
+        // Empty source: same shape, symbol 0, decodes to nothing.
+        let mut blob = Vec::new();
+        encode(&[], &mut blob);
+        assert_eq!(blob, vec![MODE_SINGLE, 0]);
+        let mut out = Vec::new();
+        decode(&blob, 0, &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn encode_if_smaller_budget_semantics() {
+        let mut rng = Rng::new(3);
+        let skewed: Vec<u8> = (0..4096).map(|_| if rng.below(8) == 0 { 3 } else { 0 }).collect();
+        let mut full = Vec::new();
+        encode(&skewed, &mut full);
+        assert!(full.len() < skewed.len() / 2, "skewed source must shrink well");
+        // Exactly-fitting budget succeeds and appends after a prefix.
+        let mut out = vec![0xAA, 0xBB];
+        let got = encode_if_smaller(&skewed, full.len(), &mut out);
+        assert_eq!(got, Some(full.len()));
+        assert_eq!(&out[..2], &[0xAA, 0xBB]);
+        assert_eq!(&out[2..], &full[..]);
+        // One byte under the real size: refused, out untouched.
+        let mut out = vec![0xCC];
+        assert_eq!(encode_if_smaller(&skewed, full.len() - 1, &mut out), None);
+        assert_eq!(out, vec![0xCC]);
+        // Uniform bytes can never beat their own length.
+        let uni: Vec<u8> = (0..2048).map(|_| rng.below(256) as u8).collect();
+        let mut out = Vec::new();
+        assert_eq!(encode_if_smaller(&uni, uni.len() - 1, &mut out), None);
+        assert!(out.is_empty());
+        // Single-symbol source under a 1-byte budget: refused.
+        let mut out = Vec::new();
+        assert_eq!(encode_if_smaller(&[5; 100], 1, &mut out), None);
+        assert_eq!(encode_if_smaller(&[5; 100], 2, &mut out), Some(2));
+    }
+
+    #[test]
+    fn corrupt_blobs_error_cleanly() {
+        let mut rng = Rng::new(0xBAD);
+        let src: Vec<u8> = (0..2000).map(|_| (rng.below(40) * 2) as u8).collect();
+        let mut blob = Vec::new();
+        encode(&src, &mut blob);
+        // Every single-bit flip: Err, or Ok with the right length.
+        for pos in 0..blob.len() {
+            for bit in 0..8 {
+                let mut bad = blob.clone();
+                bad[pos] ^= 1 << bit;
+                let mut out = Vec::new();
+                if decode(&bad, src.len(), &mut out).is_ok() {
+                    assert_eq!(out.len(), src.len(), "flip at {pos}.{bit}");
+                }
+                let mut out = Vec::new();
+                if decode_reference(&bad, src.len(), &mut out).is_ok() {
+                    assert_eq!(out.len(), src.len(), "flip at {pos}.{bit} (reference)");
+                }
+            }
+        }
+        // Every truncation point: must error (stream exhausts or table
+        // parse fails — never a panic).
+        for cut in 0..blob.len() {
+            let mut out = Vec::new();
+            assert!(decode(&blob[..cut], src.len(), &mut out).is_err(), "cut {cut}");
+        }
+        // Trailing garbage is rejected by the all-consumed check.
+        let mut padded = blob.clone();
+        padded.push(0);
+        let mut out = Vec::new();
+        assert!(decode(&padded, src.len(), &mut out).is_err());
+        // A wrong raw_len must never pass the final state checks.
+        for wrong in [src.len() - 1, src.len() + 1, 0] {
+            let mut out = Vec::new();
+            assert!(decode(&blob, wrong, &mut out).is_err(), "raw_len {wrong}");
+        }
+    }
+
+    #[test]
+    fn forged_tables_are_rejected() {
+        // Unknown mode byte.
+        let mut out = Vec::new();
+        assert!(decode(&[9, 0, 0, 0, 0], 4, &mut out).is_err());
+        // List count out of range (0, 1, 33).
+        for k in [0u8, 1, 33] {
+            assert!(decode(&[MODE_LIST, k, 0, 0, 0, 0, 0], 4, &mut out).is_err());
+        }
+        // Non-ascending symbol list.
+        let mut bad = vec![MODE_LIST, 2, 5, 5];
+        bits::pack_fixed(&mut bad, &[2048, 2048], PROB_BITS);
+        bits::le::put_u32(&mut bad, RANS_L);
+        assert!(decode(&bad, 1, &mut out).is_err());
+        // Frequency sum off the grid.
+        let mut bad = vec![MODE_LIST, 2, 0, 1];
+        bits::pack_fixed(&mut bad, &[2048, 2047], PROB_BITS);
+        bits::le::put_u32(&mut bad, RANS_L);
+        assert!(decode(&bad, 1, &mut out).is_err());
+        // Zero frequency (rejected before the sum check).
+        let mut bad = vec![MODE_LIST, 2, 0, 1];
+        bits::pack_fixed(&mut bad, &[0, 4095], PROB_BITS);
+        bits::le::put_u32(&mut bad, RANS_L);
+        assert!(decode(&bad, 1, &mut out).is_err());
+        // State below the renorm interval.
+        let mut bad = vec![MODE_LIST, 2, 0, 1];
+        bits::pack_fixed(&mut bad, &[2048, 2048], PROB_BITS);
+        bits::le::put_u32(&mut bad, RANS_L - 1);
+        assert!(decode(&bad, 1, &mut out).is_err());
+        // Single-symbol blob with trailing bytes.
+        assert!(decode(&[MODE_SINGLE, 7, 0], 3, &mut out).is_err());
+    }
+
+    #[test]
+    fn ratio_beats_fixed_on_skewed_bytes() {
+        // The staged selector's whole premise: heavily-skewed payload
+        // bytes (what low-entropy fields quantize to) shrink well.
+        let mut rng = Rng::new(11);
+        let src: Vec<u8> = (0..8192).map(|_| if rng.below(10) == 0 { 1 } else { 0 }).collect();
+        let mut blob = Vec::new();
+        encode(&src, &mut blob);
+        assert!(
+            blob.len() * 2 < src.len(),
+            "skewed bytes must shrink >= 2x, got {} -> {}",
+            src.len(),
+            blob.len()
+        );
+    }
+}

@@ -33,6 +33,44 @@
 //! communication progress between chunks, and lets
 //! [`super::multithread`] compress/decompress chunks in parallel.
 //!
+//! ## Staged chunks (frame version 2)
+//!
+//! With [`FzLight::with_staged`] the encoder emits
+//! [`super::traits::VERSION_STAGED`] frames: the chunk table is
+//! unchanged, but each chunk payload starts with a one-byte **stage
+//! tag** selecting how the rest of the chunk is coded:
+//!
+//! ```text
+//! STAGE_FIXED   (0): body = the version-1 chunk payload, unchanged
+//! STAGE_ENTROPY (1): body = u32 raw_len LE, then an order-0 rANS blob
+//!                    (super::entropy) that decodes to exactly raw_len
+//!                    bytes — the version-1 chunk payload
+//! STAGE_PLAIN   (2): body = the chunk's 4·cn original f32 values LE
+//!                    (reconstruction error is exactly zero; the values
+//!                    are NOT round-tripped through the quantizer)
+//! ```
+//!
+//! Selection is per chunk, at encode time, by measured size — and it is
+//! **never worse**: the encoder always builds the fixed-width payload
+//! first, grants the entropy stage a budget of
+//! `min(fixed, plain) - margin - 5` bytes (margin =
+//! `max(8, fixed/32)`, 5 = tag + raw_len overhead), and ships the
+//! fixed-width bytes unchanged when the entropy blob misses that budget
+//! — so a staged frame never exceeds its version-1 twin by more than
+//! one tag byte per chunk, on any input. A chunk whose fixed-width
+//! payload would *expand* past the raw values (adversarial noise under
+//! a tiny bound) ships plain. The encoder also refuses entropy blobs so
+//! small they would beat [`super::traits::STAGED_MAX_VALUES_PER_BYTE`]
+//! — the receive-side sizing guard's density bound is a wire invariant,
+//! not a hope.
+//!
+//! Decode dispatches per chunk on the tag ([`walk_chunk_staged`]), so
+//! every decode surface — Vec decode, placement decode, the fused
+//! decompress–reduce kernel, pipelined and multithreaded wrappers —
+//! inherits all three stages from the one walker. Version-1 frames
+//! decode through the exact same paths with the staged dispatch off:
+//! existing frames are bit-compatible.
+//!
 //! ## The fused decompress–reduce kernel
 //!
 //! The reduction collectives never materialize a decoded partial:
@@ -46,9 +84,10 @@
 //! [`Compressor::decompress_fold_into`].
 
 use super::bits::le;
+use super::entropy;
 use super::traits::{
-    read_header, write_header, CompressionStats, Compressor, CompressorKind, ErrorBound,
-    HEADER_LEN,
+    read_header, write_header_with_version, CompressionStats, Compressor, CompressorKind,
+    ErrorBound, HEADER_LEN, STAGED_MAX_VALUES_PER_BYTE, VERSION, VERSION_STAGED,
 };
 use crate::ops::ReduceOp;
 use crate::{Error, Result};
@@ -58,17 +97,29 @@ pub const BLOCK: usize = 32;
 /// Default values per chunk (the paper's PIPE-fZ-light uses 5120).
 pub const DEFAULT_CHUNK: usize = 5120;
 
+/// Staged chunk stage tag: the body is a version-1 fixed-width payload.
+pub const STAGE_FIXED: u8 = 0;
+/// Staged chunk stage tag: the body is `u32 raw_len` + an order-0 rANS
+/// blob decoding to the version-1 payload bytes.
+pub const STAGE_ENTROPY: u8 = 1;
+/// Staged chunk stage tag: the body is the chunk's raw `f32` values.
+pub const STAGE_PLAIN: u8 = 2;
+
 /// The fZ-light compressor. `chunk_values` controls the pipelining /
 /// parallelism granularity; numerics are identical for any value.
 #[derive(Debug, Clone)]
 pub struct FzLight {
     /// Values per chunk.
     pub chunk_values: usize,
+    /// Emit staged (version-2) frames: per-chunk plain / fixed-width /
+    /// entropy selection. Off by default — version-1 frames byte-for-
+    /// byte identical to previous releases. Decode always accepts both.
+    pub staged: bool,
 }
 
 impl Default for FzLight {
     fn default() -> Self {
-        FzLight { chunk_values: DEFAULT_CHUNK }
+        FzLight { chunk_values: DEFAULT_CHUNK, staged: false }
     }
 }
 
@@ -76,7 +127,13 @@ impl FzLight {
     /// Construct with an explicit chunk size (values).
     pub fn with_chunk(chunk_values: usize) -> Self {
         assert!(chunk_values > 0, "chunk_values must be positive");
-        FzLight { chunk_values }
+        FzLight { chunk_values, staged: false }
+    }
+
+    /// Toggle staged (version-2) encoding — see the module docs.
+    pub fn with_staged(mut self, staged: bool) -> Self {
+        self.staged = staged;
+        self
     }
 }
 
@@ -162,18 +219,102 @@ pub(crate) fn compress_chunk_into(
     (blocks, constant)
 }
 
+/// Compress one chunk in **staged** form (stage tag + selected body),
+/// appending to `out`. `fixed` and `qbuf` are caller-owned scratch
+/// (cleared here). Returns `(blocks, constant_blocks, stage_tag)`.
+///
+/// The selection contract (see the module docs): the fixed-width
+/// payload is always built; the entropy stage must undercut
+/// `min(fixed, plain)` by `max(8, fixed/32) + 5` bytes to be chosen,
+/// and its blob must stay large enough that the chunk respects the
+/// [`STAGED_MAX_VALUES_PER_BYTE`] receive-side density bound; otherwise
+/// the smaller of fixed-width and plain ships. A staged chunk is thus
+/// never more than one tag byte larger than its version-1 twin.
+pub(crate) fn compress_chunk_staged_into(
+    data: &[f32],
+    twoeb: f64,
+    out: &mut Vec<u8>,
+    fixed: &mut Vec<u8>,
+    qbuf: &mut Vec<i64>,
+) -> (usize, usize, u8) {
+    fixed.clear();
+    let (blocks, constant) = compress_chunk_into(data, twoeb, fixed, qbuf);
+    let fixed_len = fixed.len();
+    let plain_len = data.len() * 4;
+    let margin = (fixed_len / 32).max(8);
+    let budget = fixed_len.min(plain_len).saturating_sub(margin + 5);
+    // Wire invariant behind the sizing guard: the chunk's total bytes
+    // (tag + raw_len + blob) must keep values-per-byte under the staged
+    // density bound, so the blob may not shrink below this floor.
+    let min_blob = data.len().div_ceil(STAGED_MAX_VALUES_PER_BYTE).saturating_sub(5);
+    let base = out.len();
+    if budget > 0 && fixed_len <= u32::MAX as usize {
+        out.push(STAGE_ENTROPY);
+        le::put_u32(out, fixed_len as u32);
+        match entropy::encode_if_smaller(fixed, budget, out) {
+            Some(blob_len) if blob_len >= min_blob => return (blocks, constant, STAGE_ENTROPY),
+            _ => out.truncate(base),
+        }
+    }
+    if fixed_len <= plain_len {
+        out.push(STAGE_FIXED);
+        out.extend_from_slice(fixed);
+        (blocks, constant, STAGE_FIXED)
+    } else {
+        out.push(STAGE_PLAIN);
+        out.reserve(plain_len);
+        for &x in data {
+            le::put_f32(out, x);
+        }
+        (blocks, constant, STAGE_PLAIN)
+    }
+}
+
+/// Staged twin of [`compress_chunk`] for the multithread path: compress
+/// one chunk into a fresh owned payload, with the quantize and
+/// fixed-width scratch thread-local so a worker pays one allocation for
+/// all its chunks. Returns `(payload, blocks, constant_blocks, tag)`.
+pub(crate) fn compress_chunk_staged(data: &[f32], twoeb: f64) -> (Vec<u8>, usize, usize, u8) {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<(Vec<i64>, Vec<u8>)> =
+            const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+    }
+    let mut payload = Vec::with_capacity(16 + data.len() * 2);
+    let (blocks, constant, tag) = SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        let (qbuf, fixed) = &mut *s;
+        compress_chunk_staged_into(data, twoeb, &mut payload, fixed, qbuf)
+    });
+    (payload, blocks, constant, tag)
+}
+
+/// Largest possible version-1 chunk payload for a chunk of `cn` values:
+/// the 8-byte outlier plus, per 32-delta block, a header byte, 4 sign
+/// bytes and 64-bit magnitudes. An entropy chunk claiming a `raw_len`
+/// beyond this is forged — checked before any scratch is sized from it.
+pub(crate) fn max_fixed_payload_bytes(cn: usize) -> usize {
+    let deltas = cn.saturating_sub(1);
+    deltas
+        .div_ceil(BLOCK)
+        .saturating_mul(5)
+        .saturating_add(deltas.saturating_mul(8))
+        .saturating_add(8)
+}
+
 /// Decompress one chunk of `cn` values, appending to `out`. Thin wrapper
 /// over [`decompress_chunk_into_slice`] kept for Vec-building callers
-/// (the PIPE decode loop grows one Vec across chunks).
+/// (the PIPE decode loop grows one Vec across chunks). `staged` selects
+/// the version-2 (stage-tagged) chunk layout.
 pub(crate) fn decompress_chunk(
     payload: &[u8],
     cn: usize,
     twoeb: f64,
+    staged: bool,
     out: &mut Vec<f32>,
 ) -> Result<()> {
     let start = out.len();
     out.resize(start + cn, 0.0);
-    let res = decompress_chunk_into_slice(payload, cn, twoeb, &mut out[start..]);
+    let res = decompress_chunk_into_slice(payload, cn, twoeb, staged, &mut out[start..]);
     if res.is_err() {
         out.truncate(start);
     }
@@ -308,17 +449,89 @@ fn walk_chunk(payload: &[u8], cn: usize, twoeb: f64, sink: &mut impl ChunkSink) 
     Ok(())
 }
 
+/// Reconstruct one **staged** (version-2) chunk: read the stage tag and
+/// dispatch — fixed-width bodies go straight to [`walk_chunk`], entropy
+/// bodies decode to the version-1 payload in a thread-local scratch
+/// first (its claimed `raw_len` is bounded by
+/// [`max_fixed_payload_bytes`] before the scratch is sized), and plain
+/// bodies feed the sink `f32` values in block-sized batches.
+fn walk_chunk_staged(
+    payload: &[u8],
+    cn: usize,
+    twoeb: f64,
+    sink: &mut impl ChunkSink,
+) -> Result<()> {
+    let (&tag, body) = payload
+        .split_first()
+        .ok_or_else(|| Error::corrupt("staged chunk missing stage tag"))?;
+    match tag {
+        STAGE_FIXED => walk_chunk(body, cn, twoeb, sink),
+        STAGE_PLAIN => {
+            if body.len() != cn.saturating_mul(4) {
+                return Err(Error::corrupt(format!(
+                    "plain chunk holds {} bytes but {cn} values need {}",
+                    body.len(),
+                    cn.saturating_mul(4)
+                )));
+            }
+            let mut vals = [0f32; BLOCK];
+            let mut idx = 0usize;
+            for batch in body.chunks(4 * BLOCK) {
+                let cnt = batch.len() / 4;
+                for (j, b) in batch.chunks_exact(4).enumerate() {
+                    vals[j] = f32::from_le_bytes(b.try_into().unwrap());
+                }
+                sink.values(idx, &vals[..cnt]);
+                idx += cnt;
+            }
+            Ok(())
+        }
+        STAGE_ENTROPY => {
+            let mut pos = 0usize;
+            let raw_len = le::get_u32(body, &mut pos)? as usize;
+            // Sizing guard: the blob's claimed decoded length may not
+            // exceed the largest version-1 payload this chunk's value
+            // count could need — a forged raw_len fails here instead of
+            // sizing an oversized scratch buffer.
+            if raw_len > max_fixed_payload_bytes(cn) {
+                return Err(Error::corrupt(format!(
+                    "entropy chunk claims {raw_len} payload bytes but {cn} values \
+                     need at most {}",
+                    max_fixed_payload_bytes(cn)
+                )));
+            }
+            thread_local! {
+                static SCRATCH: std::cell::RefCell<Vec<u8>> =
+                    const { std::cell::RefCell::new(Vec::new()) };
+            }
+            SCRATCH.with(|s| {
+                let mut s = s.borrow_mut();
+                s.clear();
+                entropy::decode(&body[pos..], raw_len, &mut s)?;
+                walk_chunk(&s, cn, twoeb, sink)
+            })
+        }
+        t => Err(Error::corrupt(format!("unknown stage tag {t}"))),
+    }
+}
+
 /// Decompress one chunk of `cn` values into a pre-sized slice — the
 /// non-fused hot path: writes land directly at their final offsets, no
 /// per-value `push` bookkeeping. `out.len()` must equal `cn` (>= 1).
+/// `staged` selects the version-2 (stage-tagged) chunk layout.
 pub(crate) fn decompress_chunk_into_slice(
     payload: &[u8],
     cn: usize,
     twoeb: f64,
+    staged: bool,
     out: &mut [f32],
 ) -> Result<()> {
     debug_assert_eq!(out.len(), cn);
-    walk_chunk(payload, cn, twoeb, &mut WriteSink(out))
+    if staged {
+        walk_chunk_staged(payload, cn, twoeb, &mut WriteSink(out))
+    } else {
+        walk_chunk(payload, cn, twoeb, &mut WriteSink(out))
+    }
 }
 
 /// The fused decompress–reduce kernel over one chunk: reconstruct each of
@@ -334,11 +547,16 @@ pub(crate) fn decompress_fold_chunk(
     payload: &[u8],
     cn: usize,
     twoeb: f64,
+    staged: bool,
     op: ReduceOp,
     acc: &mut [f32],
 ) -> Result<()> {
     debug_assert_eq!(acc.len(), cn);
-    walk_chunk(payload, cn, twoeb, &mut FoldSink { op, acc })
+    if staged {
+        walk_chunk_staged(payload, cn, twoeb, &mut FoldSink { op, acc })
+    } else {
+        walk_chunk(payload, cn, twoeb, &mut FoldSink { op, acc })
+    }
 }
 
 #[inline]
@@ -362,13 +580,16 @@ pub(crate) fn frame_u32(value: usize, what: &str) -> Result<u32> {
 
 /// Append a chunked frame (header, chunk table, payloads) to `out`. The
 /// chunked layout is shared by fZ-light and SZx, so the codec id is a
-/// parameter.
+/// parameter; `version` selects between the fixed-width and staged
+/// chunk payload layouts (staged is fZ-light-only, which the header
+/// writer asserts).
 pub(crate) fn assemble_frame_into(
     codec: CompressorKind,
     n: usize,
     eb_abs: f64,
     chunk_values: usize,
     payloads: &[Vec<u8>],
+    version: u8,
     out: &mut Vec<u8>,
 ) -> Result<()> {
     // Validate every u32-bound quantity before touching `out`, so an
@@ -381,7 +602,7 @@ pub(crate) fn assemble_frame_into(
     }
     let total: usize = payloads.iter().map(Vec::len).sum();
     out.reserve(HEADER_LEN + 8 + 4 * payloads.len() + total);
-    write_header(out, codec, n, eb_abs);
+    write_header_with_version(out, codec, n, eb_abs, version);
     le::put_u32(out, chunk_values);
     le::put_u32(out, nchunks);
     for s in sizes {
@@ -402,6 +623,7 @@ pub(crate) fn compress_frame_into(
     chunk_values: usize,
     data: &[f32],
     eb: ErrorBound,
+    staged: bool,
     out: &mut Vec<u8>,
     progress: &mut dyn FnMut(usize),
 ) -> Result<CompressionStats> {
@@ -410,7 +632,7 @@ pub(crate) fn compress_frame_into(
         return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
     }
     let base = out.len();
-    let res = write_frame(chunk_values, data, eb_abs, out, progress);
+    let res = write_frame(chunk_values, data, eb_abs, staged, out, progress);
     if res.is_err() {
         // An oversize-chunk error must not leave a half-written frame.
         out.truncate(base);
@@ -424,6 +646,7 @@ fn write_frame(
     chunk_values: usize,
     data: &[f32],
     eb_abs: f64,
+    staged: bool,
     out: &mut Vec<u8>,
     progress: &mut dyn FnMut(usize),
 ) -> Result<CompressionStats> {
@@ -433,17 +656,29 @@ fn write_frame(
     let base = out.len();
     let mut stats = CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
     out.reserve(HEADER_LEN + 8 + 4 * nchunks + data.len() * 2);
-    write_header(out, CompressorKind::FzLight, data.len(), eb_abs);
+    let version = if staged { VERSION_STAGED } else { VERSION };
+    write_header_with_version(out, CompressorKind::FzLight, data.len(), eb_abs, version);
     le::put_u32(out, frame_u32(chunk, "chunk_values")?);
     le::put_u32(out, frame_u32(nchunks, "chunk count")?);
     let table = out.len();
     out.resize(table + 4 * nchunks, 0);
     let mut done = 0usize;
-    // Quantization scratch, reused across every chunk of the frame.
+    // Quantization + staged fixed-width scratch, reused across every
+    // chunk of the frame.
     let mut qbuf: Vec<i64> = Vec::with_capacity(chunk.min(data.len()));
+    let mut fixed: Vec<u8> = Vec::new();
     for (i, c) in data.chunks(chunk).enumerate() {
         let start = out.len();
-        let (blocks, constant) = compress_chunk_into(c, twoeb, out, &mut qbuf);
+        let (blocks, constant) = if staged {
+            let (blocks, constant, tag) =
+                compress_chunk_staged_into(c, twoeb, out, &mut fixed, &mut qbuf);
+            stats.chunks += 1;
+            stats.entropy_chunks += usize::from(tag == STAGE_ENTROPY);
+            stats.plain_chunks += usize::from(tag == STAGE_PLAIN);
+            (blocks, constant)
+        } else {
+            compress_chunk_into(c, twoeb, out, &mut qbuf)
+        };
         stats.blocks += blocks;
         stats.constant_blocks += constant;
         let sz = frame_u32(out.len() - start, "chunk payload size")?;
@@ -455,10 +690,22 @@ fn write_frame(
     Ok(stats)
 }
 
-/// Parsed view over a frame's chunk table: `(chunk_values, payload ranges)`.
-pub(crate) fn frame_chunks(
-    bytes: &[u8],
-) -> Result<(usize, f64, usize, Vec<std::ops::Range<usize>>)> {
+/// Geometry of a parsed fZ-light frame: everything the chunk walkers
+/// need besides the payload ranges themselves.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct FrameGeom {
+    /// Nominal values per chunk (last chunk may be short).
+    pub chunk_values: usize,
+    /// Absolute error bound from the header.
+    pub eb_abs: f64,
+    /// Total element count from the header.
+    pub n: usize,
+    /// Whether chunk payloads use the staged (version-2) layout.
+    pub staged: bool,
+}
+
+/// Parsed view over a frame's chunk table: geometry + payload ranges.
+pub(crate) fn frame_chunks(bytes: &[u8]) -> Result<(FrameGeom, Vec<std::ops::Range<usize>>)> {
     let h = read_header(bytes)?;
     if h.codec != CompressorKind::FzLight {
         return Err(Error::corrupt("not an fzlight frame"));
@@ -482,7 +729,13 @@ pub(crate) fn frame_chunks(
         ranges.push(pos..end);
         pos = end;
     }
-    Ok((chunk_values, h.eb_abs, h.n, ranges))
+    let geom = FrameGeom {
+        chunk_values,
+        eb_abs: h.eb_abs,
+        n: h.n,
+        staged: h.version == VERSION_STAGED,
+    };
+    Ok((geom, ranges))
 }
 
 /// Values in chunk `i` of a frame holding `n` values in `nchunks` chunks
@@ -511,20 +764,29 @@ pub(crate) fn chunk_value_count(
 /// `n` (e.g. a flipped header bit, or a crafted tiny frame claiming
 /// billions of values) must fail cleanly rather than commit pages for a
 /// bogus length. Cross-checks `n` against the full-chunk arithmetic AND
-/// against the payload bytes actually present — a chunk payload of `L`
-/// bytes can encode at most `1 + (L − 8)·BLOCK` values (outlier plus one
-/// header byte per all-constant 32-value block).
+/// against the payload bytes actually present — a version-1 chunk
+/// payload of `L` bytes can encode at most `1 + (L − 8)·BLOCK` values
+/// (outlier plus one header byte per all-constant 32-value block). For
+/// staged frames the cap dispatches on each chunk's stage tag: fixed
+/// bodies get the version-1 cap, plain bodies exactly `(L − 1) / 4`,
+/// entropy bodies the [`STAGED_MAX_VALUES_PER_BYTE`] density the
+/// encoder enforces as a wire invariant; an unknown tag fails here.
 pub(crate) fn validate_frame_count(
+    bytes: &[u8],
     ranges: &[std::ops::Range<usize>],
-    chunk_values: usize,
-    n: usize,
+    geom: &FrameGeom,
 ) -> Result<()> {
+    let n = geom.n;
     match ranges.len().checked_sub(1) {
         Some(last) => {
-            chunk_value_count(last, ranges.len(), n, chunk_values)?;
+            chunk_value_count(last, ranges.len(), n, geom.chunk_values)?;
             let mut cap = 0usize;
             for r in ranges {
-                let per_chunk = r.len().saturating_sub(8).saturating_mul(BLOCK).saturating_add(1);
+                let per_chunk = if geom.staged {
+                    staged_chunk_value_cap(bytes, r)?
+                } else {
+                    r.len().saturating_sub(8).saturating_mul(BLOCK).saturating_add(1)
+                };
                 cap = cap.saturating_add(per_chunk);
             }
             if n > cap {
@@ -541,6 +803,22 @@ pub(crate) fn validate_frame_count(
     Ok(())
 }
 
+/// Per-stage value cap for one staged chunk payload, from its stage tag
+/// (the first payload byte — `r` is already bounds-checked against the
+/// frame by [`frame_chunks`]).
+fn staged_chunk_value_cap(bytes: &[u8], r: &std::ops::Range<usize>) -> Result<usize> {
+    if r.is_empty() {
+        return Err(Error::corrupt("staged chunk missing stage tag"));
+    }
+    let body_len = r.len() - 1;
+    match bytes[r.start] {
+        STAGE_FIXED => Ok(body_len.saturating_sub(8).saturating_mul(BLOCK).saturating_add(1)),
+        STAGE_PLAIN => Ok(body_len / 4),
+        STAGE_ENTROPY => Ok(r.len().saturating_mul(STAGED_MAX_VALUES_PER_BYTE)),
+        t => Err(Error::corrupt(format!("unknown stage tag {t}"))),
+    }
+}
+
 /// Walk a parsed frame's chunks over their disjoint windows of `dst`
 /// (`dst.len() == n`), validating the chunk table as it goes: `kernel`
 /// decodes one chunk payload into its window, and `progress` runs after
@@ -549,16 +827,16 @@ pub(crate) fn validate_frame_count(
 fn walk_frame_chunks(
     bytes: &[u8],
     ranges: &[std::ops::Range<usize>],
-    chunk_values: usize,
-    n: usize,
+    geom: &FrameGeom,
     dst: &mut [f32],
     progress: &mut dyn FnMut(usize),
     kernel: &mut dyn FnMut(&[u8], usize, &mut [f32]) -> Result<()>,
 ) -> Result<()> {
+    let n = geom.n;
     debug_assert_eq!(dst.len(), n);
     let mut done = 0usize;
     for (i, r) in ranges.iter().enumerate() {
-        let cn = chunk_value_count(i, ranges.len(), n, chunk_values)?;
+        let cn = chunk_value_count(i, ranges.len(), n, geom.chunk_values)?;
         let d = dst
             .get_mut(done..done + cn)
             .ok_or_else(|| Error::corrupt("chunk table exceeds element count"))?;
@@ -575,20 +853,20 @@ fn walk_frame_chunks(
 /// Parse an fZ-light frame for a placement decode into a destination of
 /// `out_len` values: [`frame_chunks`] + destination-length check +
 /// [`validate_frame_count`], the shared prelude of the serial and
-/// multithreaded in-place kernels. Returns
-/// `(chunk_values, eb_abs, n, payload ranges)`.
+/// multithreaded in-place kernels.
 pub(crate) fn frame_chunks_for_slice(
     bytes: &[u8],
     out_len: usize,
-) -> Result<(usize, f64, usize, Vec<std::ops::Range<usize>>)> {
-    let (chunk_values, eb_abs, n, ranges) = frame_chunks(bytes)?;
-    if out_len != n {
+) -> Result<(FrameGeom, Vec<std::ops::Range<usize>>)> {
+    let (geom, ranges) = frame_chunks(bytes)?;
+    if out_len != geom.n {
         return Err(Error::invalid(format!(
-            "placement decode: frame holds {n} values but destination holds {out_len}"
+            "placement decode: frame holds {} values but destination holds {out_len}",
+            geom.n
         )));
     }
-    validate_frame_count(&ranges, chunk_values, n)?;
-    Ok((chunk_values, eb_abs, n, ranges))
+    validate_frame_count(bytes, &ranges, &geom)?;
+    Ok((geom, ranges))
 }
 
 /// Placement decode of a whole fZ-light frame: every chunk reconstructs
@@ -604,12 +882,13 @@ pub(crate) fn decompress_frame_into_slice(
     out: &mut [f32],
     progress: &mut dyn FnMut(usize),
 ) -> Result<usize> {
-    let (chunk_values, eb_abs, n, ranges) = frame_chunks_for_slice(bytes, out.len())?;
-    let twoeb = 2.0 * eb_abs;
-    walk_frame_chunks(bytes, &ranges, chunk_values, n, out, progress, &mut |p, cn, d| {
-        decompress_chunk_into_slice(p, cn, twoeb, d)
+    let (geom, ranges) = frame_chunks_for_slice(bytes, out.len())?;
+    let twoeb = 2.0 * geom.eb_abs;
+    let staged = geom.staged;
+    walk_frame_chunks(bytes, &ranges, &geom, out, progress, &mut |p, cn, d| {
+        decompress_chunk_into_slice(p, cn, twoeb, staged, d)
     })?;
-    Ok(n)
+    Ok(geom.n)
 }
 
 /// Walk an fZ-light frame applying the fused decompress–reduce kernel
@@ -623,18 +902,20 @@ pub(crate) fn decompress_fold_frame(
     acc: &mut [f32],
     progress: &mut dyn FnMut(usize),
 ) -> Result<usize> {
-    let (chunk_values, eb_abs, n, ranges) = frame_chunks(bytes)?;
-    if acc.len() != n {
+    let (geom, ranges) = frame_chunks(bytes)?;
+    if acc.len() != geom.n {
         return Err(Error::invalid(format!(
-            "fused fold: frame holds {n} values but accumulator holds {}",
+            "fused fold: frame holds {} values but accumulator holds {}",
+            geom.n,
             acc.len()
         )));
     }
-    let twoeb = 2.0 * eb_abs;
-    walk_frame_chunks(bytes, &ranges, chunk_values, n, acc, progress, &mut |p, cn, d| {
-        decompress_fold_chunk(p, cn, twoeb, op, d)
+    let twoeb = 2.0 * geom.eb_abs;
+    let staged = geom.staged;
+    walk_frame_chunks(bytes, &ranges, &geom, acc, progress, &mut |p, cn, d| {
+        decompress_fold_chunk(p, cn, twoeb, staged, op, d)
     })?;
-    Ok(n)
+    Ok(geom.n)
 }
 
 impl Compressor for FzLight {
@@ -648,29 +929,29 @@ impl Compressor for FzLight {
         eb: ErrorBound,
         out: &mut Vec<u8>,
     ) -> Result<CompressionStats> {
-        compress_frame_into(self.chunk_values, data, eb, out, &mut |_| {})
+        compress_frame_into(self.chunk_values, data, eb, self.staged, out, &mut |_| {})
     }
 
     fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
-        let (chunk_values, eb_abs, n, ranges) = frame_chunks(bytes)?;
-        let twoeb = 2.0 * eb_abs;
-        validate_frame_count(&ranges, chunk_values, n)?;
+        let (geom, ranges) = frame_chunks(bytes)?;
+        let twoeb = 2.0 * geom.eb_abs;
+        let staged = geom.staged;
+        validate_frame_count(bytes, &ranges, &geom)?;
         // Pre-size once from the header; each chunk then decodes straight
         // into its final slice (no per-value push). On error the buffer
         // is restored to its incoming length.
         let start = out.len();
-        out.resize(start + n, 0.0);
+        out.resize(start + geom.n, 0.0);
         let res = walk_frame_chunks(
             bytes,
             &ranges,
-            chunk_values,
-            n,
+            &geom,
             &mut out[start..],
             &mut |_| {},
-            &mut |p, cn, d| decompress_chunk_into_slice(p, cn, twoeb, d),
+            &mut |p, cn, d| decompress_chunk_into_slice(p, cn, twoeb, staged, d),
         );
         match res {
-            Ok(()) => Ok(n),
+            Ok(()) => Ok(geom.n),
             Err(e) => {
                 out.truncate(start);
                 Err(e)
@@ -698,6 +979,7 @@ impl Compressor for FzLight {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::traits::write_header;
     use crate::data::fields::{Field, FieldKind};
 
     fn check_bound(orig: &[f32], dec: &[f32], eb: f64) {
@@ -878,6 +1160,7 @@ mod tests {
             1e-3,
             u32::MAX as usize + 1,
             &payloads,
+            VERSION,
             &mut out,
         )
         .is_err());
@@ -895,5 +1178,153 @@ mod tests {
             lo.stats.ratio()
         );
         assert!(hi.stats.constant_fraction() >= lo.stats.constant_fraction());
+    }
+
+    #[test]
+    fn staged_roundtrip_all_field_kinds_rel_bounds() {
+        let codec = FzLight::default().with_staged(true);
+        for kind in FieldKind::ALL {
+            for rel in [1e-1, 1e-3] {
+                let f = Field::generate(kind, 8192, 13);
+                let eb_abs = ErrorBound::Rel(rel).resolve(&f.values);
+                let c = codec.compress(&f.values, ErrorBound::Rel(rel)).unwrap();
+                // The decoder dispatches on the frame version byte, so a
+                // plainly-constructed codec decodes staged frames too.
+                let d = FzLight::default().decompress(&c.bytes).unwrap();
+                check_bound(&f.values, &d, eb_abs);
+            }
+        }
+    }
+
+    #[test]
+    fn staged_tiny_and_empty_inputs() {
+        let codec = FzLight::default().with_staged(true);
+        let c = codec.compress(&[], ErrorBound::Abs(1e-4)).unwrap();
+        assert!(FzLight::default().decompress(&c.bytes).unwrap().is_empty());
+        for n in [1usize, 2, 31, 32, 33, 5119, 5120, 5121] {
+            let data: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+            let c = codec.compress(&data, ErrorBound::Abs(1e-4)).unwrap();
+            let d = FzLight::default().decompress(&c.bytes).unwrap();
+            check_bound(&data, &d, 1e-4);
+        }
+    }
+
+    #[test]
+    fn staged_never_worse_than_fixed_plus_tag_bytes() {
+        // Adaptive selection may only cost the per-chunk stage tag: a
+        // staged frame is never larger than the version-1 frame plus one
+        // byte per chunk, on any dataset.
+        for kind in FieldKind::ALL {
+            for eb in [1e-2, 1e-6] {
+                let f = Field::generate(kind, 20_000, 7);
+                let v1 = FzLight::default().compress(&f.values, ErrorBound::Abs(eb)).unwrap();
+                let st = FzLight::default()
+                    .with_staged(true)
+                    .compress(&f.values, ErrorBound::Abs(eb))
+                    .unwrap();
+                let nchunks = f.values.len().div_ceil(DEFAULT_CHUNK);
+                assert!(
+                    st.bytes.len() <= v1.bytes.len() + nchunks,
+                    "{kind:?} eb {eb}: staged {} vs fixed {} (+{nchunks} tags)",
+                    st.bytes.len(),
+                    v1.bytes.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn staged_constant_field_picks_entropy_and_shrinks() {
+        let data = vec![5.0f32; 10_000];
+        let v1 = FzLight::default().compress(&data, ErrorBound::Abs(1e-4)).unwrap();
+        let st =
+            FzLight::default().with_staged(true).compress(&data, ErrorBound::Abs(1e-4)).unwrap();
+        assert_eq!(st.stats.chunks, 2);
+        assert_eq!(
+            st.stats.entropy_chunks, st.stats.chunks,
+            "constant chunks are the easiest entropy win"
+        );
+        assert!(
+            st.bytes.len() < v1.bytes.len(),
+            "staged {} should beat fixed {}",
+            st.bytes.len(),
+            v1.bytes.len()
+        );
+        let d = FzLight::default().decompress(&st.bytes).unwrap();
+        check_bound(&data, &d, 1e-4);
+    }
+
+    #[test]
+    fn staged_noise_with_tiny_bound_ships_plain_bit_exact() {
+        // White noise at eb 1e-12 makes fixed-width wider than the raw
+        // f32s, so every chunk falls back to the plain stage — which
+        // stores the original values exactly.
+        let mut rng = crate::data::rng::Rng::new(4242);
+        let data: Vec<f32> = (0..6000).map(|_| (rng.normal() * 1e3) as f32).collect();
+        let st =
+            FzLight::default().with_staged(true).compress(&data, ErrorBound::Abs(1e-12)).unwrap();
+        assert_eq!(st.stats.plain_chunks, st.stats.chunks);
+        assert!(st.bytes.len() < data.len() * 4 + 64, "plain stage stays near raw size");
+        let d = FzLight::default().decompress(&st.bytes).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&d), bits(&data), "plain chunks reproduce the input bit-exactly");
+    }
+
+    #[test]
+    fn staged_fused_and_placement_match_plain_decode() {
+        use crate::ops::ReduceOp;
+        let f = Field::generate(FieldKind::Rtm, 12_345, 9);
+        let codec = FzLight::with_chunk(512).with_staged(true);
+        let c = codec.compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        assert!(c.stats.entropy_chunks > 0, "smooth field should take the entropy stage");
+        let dec = codec.decompress(&c.bytes).unwrap();
+        let mut placed = vec![0.0f32; 12_345];
+        assert_eq!(codec.decompress_into_slice(&c.bytes, &mut placed).unwrap(), 12_345);
+        assert_eq!(placed, dec);
+        let mut acc = vec![0.0f32; 12_345];
+        assert_eq!(codec.decompress_fold_into(&c.bytes, ReduceOp::Sum, &mut acc).unwrap(), 12_345);
+        let mut want = vec![0.0f32; 12_345];
+        ReduceOp::Sum.fold(&mut want, &dec);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&acc), bits(&want));
+    }
+
+    #[test]
+    fn forged_entropy_raw_len_rejected_before_allocation() {
+        // A staged chunk whose entropy header claims a multi-GB decoded
+        // payload must fail against the worst-case fixed-payload bound
+        // before any scratch is sized from the forged length.
+        let mut payload = vec![STAGE_ENTROPY];
+        le::put_u32(&mut payload, u32::MAX);
+        payload.extend_from_slice(&[0u8; 16]);
+        let mut bytes = Vec::new();
+        assemble_frame_into(
+            CompressorKind::FzLight,
+            100,
+            1e-3,
+            100,
+            &[payload],
+            VERSION_STAGED,
+            &mut bytes,
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        let err = FzLight::default().decompress_into(&bytes, &mut out).unwrap_err();
+        assert!(matches!(err, Error::Corrupt(_)), "{err:?}");
+        assert!(out.capacity() < 1 << 20, "corrupt raw_len must not size buffers");
+    }
+
+    #[test]
+    fn staged_unknown_stage_tag_is_corrupt() {
+        let data: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let st =
+            FzLight::default().with_staged(true).compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+        let (geom, ranges) = frame_chunks(&st.bytes).unwrap();
+        assert!(geom.staged);
+        let mut forged = st.bytes.clone();
+        forged[ranges[0].start] = 7; // no such stage
+        let mut out = Vec::new();
+        let err = FzLight::default().decompress_into(&forged, &mut out).unwrap_err();
+        assert!(matches!(err, Error::Corrupt(_)), "{err:?}");
     }
 }

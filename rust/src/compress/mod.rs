@@ -38,6 +38,26 @@
 //! ZFP fall back to decompress-then-copy and say so via
 //! [`Compressor::supports_placement_decode`].
 //!
+//! ## The staged pipeline: quantize → pack → entropy
+//!
+//! fZ-light compression is organised as separable stages. Stage one
+//! **quantizes** (`q[i] = round(x[i]/2eb)`, then 1-D Lorenzo deltas);
+//! stage two **packs** each 32-delta block at its measured fixed bit
+//! width (the paper's bit-shifting encoding); stage three — new with
+//! frame version 2 — optionally **entropy-codes** the packed chunk
+//! payload with the order-0 rANS coder in [`entropy`], squeezing the
+//! redundancy fixed-width packing leaves on low-entropy scientific
+//! fields (the NCCLZ decoupled-stage design). Stage three is governed by
+//! an adaptive **per-chunk selection contract**: at encode time each
+//! chunk measures plain / fixed-width / entropy-coded sizes and records
+//! the winner in a one-byte stage tag, and selection is *never worse* —
+//! entropy must undercut the alternatives by a margin or the fixed-width
+//! bytes ship unchanged, so a staged frame costs at most one tag byte
+//! per chunk over its version-1 twin on any input (see [`fzlight`]'s
+//! module docs for the exact byte layout and margins). Decoders
+//! dispatch per chunk on the tag; version-1 frames decode through the
+//! same paths unchanged.
+//!
 //! ## Word-parallel codec kernels
 //!
 //! The paper's §3.4 vectorized bit-shifting encoding is realised in
@@ -50,17 +70,23 @@
 //! interleaved per-value work. Every collective receive path (plain,
 //! placement, fused decompress–reduce, pipelined, multithreaded)
 //! inherits these kernels. The scalar `BitWriter`/`BitReader` pair is
-//! retained in [`bits`] as the executable layout spec; `zccl bench
-//! codec` (and `cargo bench --bench compressors`) emits
-//! `BENCH_codec.json` with comp/decomp GB/s per codec × dataset × bound
-//! and a `speedup_vs_reference` field tracking the word-parallel
-//! kernels against that reference from PR to PR.
+//! retained in [`bits`] as the executable layout spec — as is
+//! [`entropy`]'s linear-scan reference decoder beside its table-driven
+//! twin; `zccl bench codec` (and `cargo bench --bench compressors`)
+//! emits `BENCH_codec.json` with comp/decomp GB/s per codec × dataset ×
+//! bound, per-stage GB/s (quantize+pack / entropy), staged-vs-fixed
+//! ratio rows, and a `speedup_vs_reference` field tracking the
+//! word-parallel kernels against that reference from PR to PR.
 //!
 //! ## Codecs
 //!
 //! - [`fzlight`] — `fZ-light` (a.k.a. SZp): fused 1-D Lorenzo prediction +
 //!   error-bounded quantization + ultra-fast fixed-length bit-shifting
-//!   encoding. The paper's chosen compressor.
+//!   encoding, with the optional staged (version-2) per-chunk
+//!   plain/fixed/entropy selection. The paper's chosen compressor.
+//! - [`entropy`] — byte-oriented order-0 rANS coder: the staged frames'
+//!   second-stage entropy coder (fast table-driven decode, linear-scan
+//!   reference decoder retained as the spec).
 //! - [`pipe`] — `PIPE-fZ-light`: the §3.5.2 redesign that splits the stream
 //!   into fixed 5120-value chunks with a size index at the head of the
 //!   buffer so communication progress can be polled between chunks.
@@ -76,6 +102,7 @@
 //!   by Tables 3–4 and Figures 5–8.
 
 pub mod bits;
+pub mod entropy;
 pub mod fzlight;
 pub mod multithread;
 pub mod pipe;

@@ -17,7 +17,9 @@ use crate::util::par::{default_threads, par_map_chunks, par_map_own};
 
 use super::fzlight::{self};
 use super::szx::{self};
-use super::traits::{CompressionStats, Compressor, CompressorKind, ErrorBound};
+use super::traits::{
+    CompressionStats, Compressor, CompressorKind, ErrorBound, VERSION, VERSION_STAGED,
+};
 use crate::ops::ReduceOp;
 use crate::{Error, Result};
 
@@ -30,17 +32,32 @@ pub struct MtCompressor {
     pub chunk_values: usize,
     /// Worker threads (defaults to the host's parallelism).
     pub threads: usize,
+    /// Emit staged (version-2) fZ-light frames — see
+    /// [`super::fzlight`]'s module docs. Ignored for other codecs; decode
+    /// always accepts both versions.
+    pub staged: bool,
 }
 
 impl MtCompressor {
     /// Construct for `kind` with the codec's default chunk size.
     pub fn new(kind: CompressorKind) -> Self {
-        MtCompressor { kind, chunk_values: fzlight::DEFAULT_CHUNK, threads: default_threads() }
+        MtCompressor {
+            kind,
+            chunk_values: fzlight::DEFAULT_CHUNK,
+            threads: default_threads(),
+            staged: false,
+        }
     }
 
     /// Construct with an explicit chunk size and default threads.
     pub fn with_chunk(kind: CompressorKind, chunk_values: usize) -> Self {
-        MtCompressor { kind, chunk_values, threads: default_threads() }
+        MtCompressor { kind, chunk_values, threads: default_threads(), staged: false }
+    }
+
+    /// Toggle staged (version-2) fZ-light encoding.
+    pub fn with_staged(mut self, staged: bool) -> Self {
+        self.staged = staged;
+        self
     }
 }
 
@@ -65,22 +82,35 @@ impl Compressor for MtCompressor {
                 // payloads (inherent to the fan-out), then one pass
                 // assembles the shared chunked frame layout into `out`.
                 let kind = self.kind;
-                let parts: Vec<(Vec<u8>, usize, usize)> =
+                let staged = self.staged && kind == CompressorKind::FzLight;
+                let parts: Vec<(Vec<u8>, usize, usize, u8)> =
                     par_map_chunks(data, self.chunk_values, self.threads, |chunk| {
                         match kind {
-                            CompressorKind::FzLight => {
-                                fzlight::compress_chunk(chunk, 2.0 * eb_abs)
+                            CompressorKind::FzLight if staged => {
+                                fzlight::compress_chunk_staged(chunk, 2.0 * eb_abs)
                             }
-                            _ => szx::compress_chunk(chunk, eb_abs),
+                            CompressorKind::FzLight => {
+                                let (p, b, c) = fzlight::compress_chunk(chunk, 2.0 * eb_abs);
+                                (p, b, c, fzlight::STAGE_FIXED)
+                            }
+                            _ => {
+                                let (p, b, c) = szx::compress_chunk(chunk, eb_abs);
+                                (p, b, c, fzlight::STAGE_FIXED)
+                            }
                         }
                     });
                 let mut stats =
                     CompressionStats { raw_bytes: data.len() * 4, ..Default::default() };
                 let payloads: Vec<Vec<u8>> = parts
                     .into_iter()
-                    .map(|(p, b, c)| {
+                    .map(|(p, b, c, tag)| {
                         stats.blocks += b;
                         stats.constant_blocks += c;
+                        if staged {
+                            stats.chunks += 1;
+                            stats.entropy_chunks += usize::from(tag == fzlight::STAGE_ENTROPY);
+                            stats.plain_chunks += usize::from(tag == fzlight::STAGE_PLAIN);
+                        }
                         p
                     })
                     .collect();
@@ -91,6 +121,7 @@ impl Compressor for MtCompressor {
                     eb_abs,
                     self.chunk_values,
                     &payloads,
+                    if staged { VERSION_STAGED } else { VERSION },
                     out,
                 )?;
                 stats.compressed_bytes = out.len() - base;
@@ -103,25 +134,16 @@ impl Compressor for MtCompressor {
     fn decompress_into(&self, bytes: &[u8], out: &mut Vec<f32>) -> Result<usize> {
         match self.kind {
             CompressorKind::FzLight => {
-                let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
-                let twoeb = 2.0 * eb_abs;
-                fzlight::validate_frame_count(&ranges, chunk_values, n)?;
+                let (geom, ranges) = fzlight::frame_chunks(bytes)?;
+                fzlight::validate_frame_count(bytes, &ranges, &geom)?;
                 // Pre-size once; chunks then decode in parallel straight
                 // into their disjoint windows of the destination (no
                 // per-chunk temporaries, no gather copy).
                 let start = out.len();
-                out.resize(start + n, 0.0);
-                let res = mt_decode_chunks(
-                    bytes,
-                    &ranges,
-                    chunk_values,
-                    n,
-                    twoeb,
-                    self.threads,
-                    &mut out[start..],
-                );
+                out.resize(start + geom.n, 0.0);
+                let res = mt_decode_chunks(bytes, &ranges, &geom, self.threads, &mut out[start..]);
                 match res {
-                    Ok(()) => Ok(n),
+                    Ok(()) => Ok(geom.n),
                     Err(e) => {
                         out.truncate(start);
                         Err(e)
@@ -135,14 +157,13 @@ impl Compressor for MtCompressor {
     fn decompress_into_slice(&self, bytes: &[u8], out: &mut [f32]) -> Result<usize> {
         match self.kind {
             CompressorKind::FzLight => {
-                let (chunk_values, eb_abs, n, ranges) =
-                    fzlight::frame_chunks_for_slice(bytes, out.len())?;
+                let (geom, ranges) = fzlight::frame_chunks_for_slice(bytes, out.len())?;
                 // Chunks decode in parallel straight into their disjoint
                 // windows of the destination — same walk as the plain MT
                 // decode, minus the Vec bookkeeping. On Err an arbitrary
                 // subset of windows is written (poisoned; see the trait).
-                mt_decode_chunks(bytes, &ranges, chunk_values, n, 2.0 * eb_abs, self.threads, out)?;
-                Ok(n)
+                mt_decode_chunks(bytes, &ranges, &geom, self.threads, out)?;
+                Ok(geom.n)
             }
             other => super::build(other).decompress_into_slice(bytes, out),
         }
@@ -155,21 +176,23 @@ impl Compressor for MtCompressor {
     fn decompress_fold_into(&self, bytes: &[u8], op: ReduceOp, acc: &mut [f32]) -> Result<usize> {
         match self.kind {
             CompressorKind::FzLight => {
-                let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
+                let (geom, ranges) = fzlight::frame_chunks(bytes)?;
+                let n = geom.n;
                 if acc.len() != n {
                     return Err(Error::invalid(format!(
                         "fused fold: frame holds {n} values but accumulator holds {}",
                         acc.len()
                     )));
                 }
-                let twoeb = 2.0 * eb_abs;
+                let twoeb = 2.0 * geom.eb_abs;
+                let staged = geom.staged;
                 // Chunks map to disjoint accumulator windows, so the fused
                 // kernel parallelises with no synchronisation on `acc`;
                 // per-element fold order inside a window is serial, so the
                 // result is bit-identical to the single-thread kernel.
-                let items = chunk_windows(&ranges, chunk_values, n, acc)?;
+                let items = chunk_windows(&ranges, geom.chunk_values, n, acc)?;
                 let parts = par_map_own(items, self.threads, |_, (r, cn, dst)| {
-                    fzlight::decompress_fold_chunk(&bytes[r], cn, twoeb, op, dst)
+                    fzlight::decompress_fold_chunk(&bytes[r], cn, twoeb, staged, op, dst)
                 });
                 for p in parts {
                     p?;
@@ -190,15 +213,15 @@ impl Compressor for MtCompressor {
 fn mt_decode_chunks(
     bytes: &[u8],
     ranges: &[std::ops::Range<usize>],
-    chunk_values: usize,
-    n: usize,
-    twoeb: f64,
+    geom: &fzlight::FrameGeom,
     threads: usize,
     dst: &mut [f32],
 ) -> Result<()> {
-    let items = chunk_windows(ranges, chunk_values, n, dst)?;
+    let twoeb = 2.0 * geom.eb_abs;
+    let staged = geom.staged;
+    let items = chunk_windows(ranges, geom.chunk_values, geom.n, dst)?;
     let parts = par_map_own(items, threads, |_, (r, cn, d)| {
-        fzlight::decompress_chunk_into_slice(&bytes[r], cn, twoeb, d)
+        fzlight::decompress_chunk_into_slice(&bytes[r], cn, twoeb, staged, d)
     });
     for p in parts {
         p?;
@@ -286,5 +309,43 @@ mod tests {
             let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&st), bits(&mt), "{op:?}");
         }
+    }
+
+    #[test]
+    fn mt_staged_bit_identical_to_st_staged() {
+        let f = Field::generate(FieldKind::Nyx, 40_000, 82);
+        let st = FzLight::default()
+            .with_staged(true)
+            .compress(&f.values, ErrorBound::Rel(1e-3))
+            .unwrap();
+        let mt = MtCompressor::new(CompressorKind::FzLight)
+            .with_staged(true)
+            .compress(&f.values, ErrorBound::Rel(1e-3))
+            .unwrap();
+        assert_eq!(st.bytes, mt.bytes, "staged MT frame must be bit-identical to ST");
+        assert_eq!(st.stats.chunks, mt.stats.chunks);
+        assert_eq!(st.stats.entropy_chunks, mt.stats.entropy_chunks);
+        assert_eq!(st.stats.plain_chunks, mt.stats.plain_chunks);
+        let d_st = FzLight::default().decompress(&st.bytes).unwrap();
+        let d_mt = MtCompressor::new(CompressorKind::FzLight).decompress(&mt.bytes).unwrap();
+        assert_eq!(d_st, d_mt);
+        let mut placed = vec![0.0f32; f.values.len()];
+        MtCompressor::new(CompressorKind::FzLight)
+            .decompress_into_slice(&mt.bytes, &mut placed)
+            .unwrap();
+        assert_eq!(placed, d_st);
+    }
+
+    #[test]
+    fn mt_staged_szx_ignores_flag() {
+        let f = Field::generate(FieldKind::Cesm, 20_000, 83);
+        let plain = MtCompressor::new(CompressorKind::Szx)
+            .compress(&f.values, ErrorBound::Rel(1e-2))
+            .unwrap();
+        let flagged = MtCompressor::new(CompressorKind::Szx)
+            .with_staged(true)
+            .compress(&f.values, ErrorBound::Rel(1e-2))
+            .unwrap();
+        assert_eq!(plain.bytes, flagged.bytes, "staged is fZ-light-only");
     }
 }

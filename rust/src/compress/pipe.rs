@@ -25,11 +25,14 @@ use crate::{Error, Result};
 pub struct PipeFzLight {
     /// Values per pipeline chunk (paper: 5120).
     pub chunk_values: usize,
+    /// Emit staged (version-2) frames — see [`super::fzlight`]'s module
+    /// docs. Off by default; decode always accepts both versions.
+    pub staged: bool,
 }
 
 impl Default for PipeFzLight {
     fn default() -> Self {
-        PipeFzLight { chunk_values: DEFAULT_CHUNK }
+        PipeFzLight { chunk_values: DEFAULT_CHUNK, staged: false }
     }
 }
 
@@ -37,7 +40,13 @@ impl PipeFzLight {
     /// Construct with an explicit chunk size.
     pub fn with_chunk(chunk_values: usize) -> Self {
         assert!(chunk_values > 0);
-        PipeFzLight { chunk_values }
+        PipeFzLight { chunk_values, staged: false }
+    }
+
+    /// Toggle staged (version-2) encoding.
+    pub fn with_staged(mut self, staged: bool) -> Self {
+        self.staged = staged;
+        self
     }
 
     /// Compress `data`, invoking `progress` after every chunk.
@@ -65,7 +74,7 @@ impl PipeFzLight {
         out: &mut Vec<u8>,
         progress: &mut dyn FnMut(usize),
     ) -> Result<CompressionStats> {
-        fzlight::compress_frame_into(self.chunk_values, data, eb, out, progress)
+        fzlight::compress_frame_into(self.chunk_values, data, eb, self.staged, out, progress)
     }
 
     /// Decompress, invoking `progress` after every chunk. The
@@ -89,14 +98,15 @@ impl PipeFzLight {
         out: &mut Vec<f32>,
         progress: &mut dyn FnMut(usize),
     ) -> Result<usize> {
-        let (chunk_values, eb_abs, n, ranges) = fzlight::frame_chunks(bytes)?;
-        let twoeb = 2.0 * eb_abs;
-        fzlight::validate_frame_count(&ranges, chunk_values, n)?;
+        let (geom, ranges) = fzlight::frame_chunks(bytes)?;
+        let n = geom.n;
+        let twoeb = 2.0 * geom.eb_abs;
+        fzlight::validate_frame_count(bytes, &ranges, &geom)?;
         let start = out.len();
         out.reserve(n);
         for (i, r) in ranges.iter().enumerate() {
-            let cn = fzlight::chunk_value_count(i, ranges.len(), n, chunk_values)?;
-            fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, out)?;
+            let cn = fzlight::chunk_value_count(i, ranges.len(), n, geom.chunk_values)?;
+            fzlight::decompress_chunk(&bytes[r.clone()], cn, twoeb, geom.staged, out)?;
             progress(out.len() - start);
         }
         if out.len() - start != n {
@@ -257,5 +267,40 @@ mod tests {
         let n = pipe.decompress_into_with_progress(&buf, &mut vals, &mut |_| {}).unwrap();
         assert_eq!(n, f.values.len());
         assert_eq!(vals.len(), n);
+    }
+
+    #[test]
+    fn staged_frames_identical_to_staged_fzlight() {
+        let f = Field::generate(FieldKind::Hurricane, 23_456, 8);
+        let a = FzLight::default()
+            .with_staged(true)
+            .compress(&f.values, ErrorBound::Abs(1e-3))
+            .unwrap();
+        let b = PipeFzLight::default()
+            .with_staged(true)
+            .compress(&f.values, ErrorBound::Abs(1e-3))
+            .unwrap();
+        assert_eq!(a.bytes, b.bytes, "staged pipe frame must be bit-identical");
+        let d1 = FzLight::default().decompress(&a.bytes).unwrap();
+        let d2 = PipeFzLight::default().decompress(&b.bytes).unwrap();
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn staged_decode_still_polls_per_chunk() {
+        let f = Field::generate(FieldKind::Rtm, 5120 * 3 + 100, 8);
+        let pipe = PipeFzLight::default().with_staged(true);
+        let c = pipe.compress(&f.values, ErrorBound::Abs(1e-3)).unwrap();
+        assert_eq!(c.stats.chunks, 4);
+        let mut calls = Vec::new();
+        let d = pipe.decompress_with_progress(&c.bytes, &mut |done| calls.push(done)).unwrap();
+        assert_eq!(calls, vec![5120, 10240, 15360, 15460], "§3.5.2 hook runs per staged chunk");
+        assert_eq!(d.len(), f.values.len());
+        let mut placed = vec![0.0f32; f.values.len()];
+        let mut pcalls = 0usize;
+        pipe.decompress_into_slice_with_progress(&c.bytes, &mut placed, &mut |_| pcalls += 1)
+            .unwrap();
+        assert_eq!(pcalls, 4);
+        assert_eq!(placed, d);
     }
 }

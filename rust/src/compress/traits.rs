@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  = b"ZCCL"
-//! 4       1     version = 1
+//! 4       1     version = 1 (fixed-width body) or 2 (staged fZ-light body)
 //! 5       1     codec   (CompressorKind discriminant)
 //! 6       2     reserved
 //! 8       8     element count (u64)
@@ -16,6 +16,13 @@
 //! The header makes [`crate::compress::decompress`] codec-agnostic, which
 //! the collectives rely on: a rank can decode chunks produced by any peer
 //! without out-of-band metadata.
+//!
+//! Version [`VERSION_STAGED`] marks the adaptive two-stage fZ-light
+//! body (per-chunk plain / fixed-width / entropy selection — see
+//! `compress::fzlight`); it is defined **only** for
+//! [`CompressorKind::FzLight`], and [`read_header`] rejects the
+//! combination of version 2 with any other codec centrally so no
+//! downstream decoder needs its own check.
 
 use super::bits::le;
 use crate::ops::ReduceOp;
@@ -23,10 +30,26 @@ use crate::{Error, Result};
 
 /// Frame magic bytes.
 pub const MAGIC: [u8; 4] = *b"ZCCL";
-/// Frame format version.
+/// Frame format version: fixed-width chunk payloads (every codec).
 pub const VERSION: u8 = 1;
+/// Frame format version: staged fZ-light chunk payloads — each chunk
+/// carries a stage tag (plain / fixed-width / entropy-coded) ahead of
+/// its body. fZ-light only; see `compress::fzlight` for the layout.
+pub const VERSION_STAGED: u8 = 2;
 /// Byte length of the common frame header.
 pub const HEADER_LEN: usize = 24;
+
+/// Receive-side density bound for [`VERSION_STAGED`] frames, replacing
+/// the per-codec [`CompressorKind::max_values_per_byte`] in
+/// [`checked_count`]: an entropy-coded chunk can beat fixed-width's
+/// best case (an all-zero-delta chunk collapses to a 2-byte blob behind
+/// a 5-byte stage header, ~730 values/byte at the default chunk size),
+/// so a forged version-2 header gets this looser — but still frame-
+/// proportional — cap before any buffer is sized from it. The staged
+/// *encoder* enforces the same bound as a wire invariant (a chunk that
+/// would exceed it ships fixed-width instead), so the guard never
+/// rejects a legitimate frame.
+pub const STAGED_MAX_VALUES_PER_BYTE: usize = 1024;
 
 /// Error-bound specification, matching the paper's "fixed-accuracy" mode.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -160,6 +183,14 @@ pub struct CompressionStats {
     pub raw_bytes: usize,
     /// Output bytes (whole frame, header included).
     pub compressed_bytes: usize,
+    /// Chunks examined by the staged (version-2) fZ-light encoder; zero
+    /// for version-1 frames and non-fZ-light codecs.
+    pub chunks: usize,
+    /// Staged chunks that shipped an entropy-coded body.
+    pub entropy_chunks: usize,
+    /// Staged chunks that shipped raw `f32` values (fixed-width would
+    /// have expanded them).
+    pub plain_chunks: usize,
 }
 
 impl CompressionStats {
@@ -193,6 +224,9 @@ impl CompressionStats {
         self.constant_blocks += other.constant_blocks;
         self.raw_bytes += other.raw_bytes;
         self.compressed_bytes += other.compressed_bytes;
+        self.chunks += other.chunks;
+        self.entropy_chunks += other.entropy_chunks;
+        self.plain_chunks += other.plain_chunks;
     }
 }
 
@@ -336,10 +370,24 @@ pub trait Compressor: Send + Sync {
     }
 }
 
-/// Write the common frame header.
+/// Write the common frame header at [`VERSION`] (fixed-width body).
 pub fn write_header(out: &mut Vec<u8>, codec: CompressorKind, n: usize, eb_abs: f64) {
+    write_header_with_version(out, codec, n, eb_abs, VERSION);
+}
+
+/// Write the common frame header with an explicit format version
+/// ([`VERSION`] or [`VERSION_STAGED`]).
+pub fn write_header_with_version(
+    out: &mut Vec<u8>,
+    codec: CompressorKind,
+    n: usize,
+    eb_abs: f64,
+    version: u8,
+) {
+    debug_assert!(version == VERSION || version == VERSION_STAGED);
+    debug_assert!(version != VERSION_STAGED || codec == CompressorKind::FzLight);
     out.extend_from_slice(&MAGIC);
-    out.push(VERSION);
+    out.push(version);
     out.push(codec.id());
     out.extend_from_slice(&[0, 0]);
     le::put_u64(out, n as u64);
@@ -349,6 +397,8 @@ pub fn write_header(out: &mut Vec<u8>, codec: CompressorKind, n: usize, eb_abs: 
 /// Parsed frame header.
 #[derive(Debug, Clone, Copy)]
 pub struct Header {
+    /// Frame format version ([`VERSION`] or [`VERSION_STAGED`]).
+    pub version: u8,
     /// Codec that produced the frame.
     pub codec: CompressorKind,
     /// Element count.
@@ -357,7 +407,10 @@ pub struct Header {
     pub eb_abs: f64,
 }
 
-/// Parse and validate the common frame header.
+/// Parse and validate the common frame header. Accepts [`VERSION`] for
+/// every codec and [`VERSION_STAGED`] for fZ-light only — the staged
+/// body is an fZ-light layout, so any other codec id under version 2 is
+/// a forgery and is rejected here, once, for all decoders.
 pub fn read_header(bytes: &[u8]) -> Result<Header> {
     if bytes.len() < HEADER_LEN {
         return Err(Error::corrupt("frame shorter than header"));
@@ -365,14 +418,20 @@ pub fn read_header(bytes: &[u8]) -> Result<Header> {
     if bytes[0..4] != MAGIC {
         return Err(Error::corrupt("bad magic"));
     }
-    if bytes[4] != VERSION {
-        return Err(Error::corrupt(format!("unsupported version {}", bytes[4])));
+    let version = bytes[4];
+    if version != VERSION && version != VERSION_STAGED {
+        return Err(Error::corrupt(format!("unsupported version {version}")));
     }
     let codec = CompressorKind::from_id(bytes[5])?;
+    if version == VERSION_STAGED && codec != CompressorKind::FzLight {
+        return Err(Error::corrupt(format!(
+            "staged frame version {VERSION_STAGED} is defined only for fZ-light, got {codec:?}"
+        )));
+    }
     let mut pos = 8;
     let n = le::get_u64(bytes, &mut pos)? as usize;
     let eb_abs = le::get_f64(bytes, &mut pos)?;
-    Ok(Header { codec, n, eb_abs })
+    Ok(Header { version, codec, n, eb_abs })
 }
 
 /// Peek the codec of a frame without decoding it.
@@ -385,15 +444,19 @@ pub fn peek_codec(bytes: &[u8]) -> Result<CompressorKind> {
 /// **before** decoding: a corrupt or forged header claiming billions of
 /// values in a tiny frame is rejected here (cheaply, like PR 2's
 /// `validate_frame_count`) instead of committing pages for a bogus
-/// length. The density bound is the header codec's own
-/// [`CompressorKind::max_values_per_byte`]; codec-specific decoders
-/// still run their exact validation.
+/// length. The density bound dispatches on the header's version: the
+/// codec's own [`CompressorKind::max_values_per_byte`] for version-1
+/// frames, [`STAGED_MAX_VALUES_PER_BYTE`] for staged frames (whose
+/// entropy chunks pack denser than any fixed-width body can);
+/// codec-specific decoders still run their exact validation.
 pub fn checked_count(bytes: &[u8]) -> Result<usize> {
     let h = read_header(bytes)?;
-    let cap = bytes
-        .len()
-        .saturating_sub(HEADER_LEN)
-        .saturating_mul(h.codec.max_values_per_byte());
+    let density = if h.version == VERSION_STAGED {
+        STAGED_MAX_VALUES_PER_BYTE
+    } else {
+        h.codec.max_values_per_byte()
+    };
+    let cap = bytes.len().saturating_sub(HEADER_LEN).saturating_mul(density);
     if h.n > cap {
         return Err(Error::corrupt(format!(
             "frame claims {} values but its {} bytes can hold at most {cap}",
@@ -413,9 +476,32 @@ mod tests {
         let mut out = Vec::new();
         write_header(&mut out, CompressorKind::Szx, 12345, 1e-4);
         let h = read_header(&out).unwrap();
+        assert_eq!(h.version, VERSION);
         assert_eq!(h.codec, CompressorKind::Szx);
         assert_eq!(h.n, 12345);
         assert_eq!(h.eb_abs, 1e-4);
+    }
+
+    #[test]
+    fn staged_header_roundtrip_and_codec_restriction() {
+        let mut out = Vec::new();
+        write_header_with_version(&mut out, CompressorKind::FzLight, 77, 1e-3, VERSION_STAGED);
+        let h = read_header(&out).unwrap();
+        assert_eq!(h.version, VERSION_STAGED);
+        assert_eq!(h.codec, CompressorKind::FzLight);
+        assert_eq!(h.n, 77);
+        // Version 2 is defined only for fZ-light: forging any other
+        // codec id under it must fail at the header, before a decoder
+        // ever sees the body.
+        for kind in [CompressorKind::Szx, CompressorKind::ZfpAbs, CompressorKind::ZfpFixedRate] {
+            let mut forged = out.clone();
+            forged[5] = kind.id();
+            assert!(read_header(&forged).is_err(), "{kind:?} under version 2 must be rejected");
+        }
+        // Versions other than 1 and 2 stay rejected.
+        let mut bad = out.clone();
+        bad[4] = 3;
+        assert!(read_header(&bad).is_err());
     }
 
     #[test]
@@ -471,6 +557,36 @@ mod tests {
         write_header(&mut zfp, CompressorKind::ZfpAbs, 1000, 1e-3);
         zfp.extend_from_slice(&[0u8; 16]);
         assert!(checked_count(&zfp).is_err());
+    }
+
+    #[test]
+    fn staged_checked_count_uses_entropy_density_bound() {
+        // A staged frame legitimately packs denser than fixed-width: 700
+        // values over 16 body bytes exceeds fZ-light's version-1 bound
+        // (64 v/B) but is within the staged bound (1024 v/B).
+        let mut ok = Vec::new();
+        write_header_with_version(&mut ok, CompressorKind::FzLight, 700, 1e-3, VERSION_STAGED);
+        ok.extend_from_slice(&[0u8; 16]);
+        assert_eq!(checked_count(&ok).unwrap(), 700);
+        // The same claim under version 1 is rejected — the looser bound
+        // applies only to frames that announce the staged layout.
+        let mut v1 = Vec::new();
+        write_header(&mut v1, CompressorKind::FzLight, 700, 1e-3);
+        v1.extend_from_slice(&[0u8; 16]);
+        assert!(checked_count(&v1).is_err());
+        // And a staged header is still frame-proportional: a forged
+        // count past even the entropy density fails before any caller
+        // sizes a destination (the PR 3 guard, version-2 edition).
+        let mut forged = Vec::new();
+        write_header_with_version(
+            &mut forged,
+            CompressorKind::FzLight,
+            1_000_000_000,
+            1e-3,
+            VERSION_STAGED,
+        );
+        forged.extend_from_slice(&[0u8; 16]);
+        assert!(checked_count(&forged).is_err());
     }
 
     #[test]

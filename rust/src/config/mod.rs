@@ -128,6 +128,7 @@ impl Config {
             multithread: self.get_bool("collective.multithread", false)?,
             pipe_chunk: self.get_usize("collective.pipe_chunk", 5120)?,
             pipeline_bytes: self.get_usize("collective.pipeline_bytes", 1 << 16)?,
+            staged: self.get_bool("collective.staged", false)?,
         };
         if algo == Algo::CColl {
             mode.kind = CompressorKind::Szx;
@@ -137,7 +138,7 @@ impl Config {
 }
 
 /// Build a [`Mode`] directly from CLI-style args
-/// (`--algo zccl --compressor fzlight --rel-eb 1e-4 --multithread`).
+/// (`--algo zccl --compressor fzlight --rel-eb 1e-4 --multithread --staged`).
 pub fn mode_from_args(args: &[String]) -> Result<Mode> {
     let mut cfg = Config::default();
     let mut it = args.iter().peekable();
@@ -151,6 +152,10 @@ pub fn mode_from_args(args: &[String]) -> Result<Mode> {
             "--pipeline-bytes" => "collective.pipeline_bytes",
             "--multithread" => {
                 cfg.values.insert("collective.multithread".into(), "true".into());
+                continue;
+            }
+            "--staged" => {
+                cfg.values.insert("collective.staged".into(), "true".into());
                 continue;
             }
             other => return Err(Error::invalid(format!("unknown mode flag '{other}'"))),
@@ -179,6 +184,7 @@ mod tests {
             rel_eb = 1e-3
             multithread = true
             pipe_chunk = 1024
+            staged = true
             "#,
         )
         .unwrap();
@@ -189,6 +195,7 @@ mod tests {
         assert!(m.multithread);
         assert_eq!(m.pipe_chunk, 1024);
         assert_eq!(m.eb, ErrorBound::Rel(1e-3));
+        assert!(m.staged);
     }
 
     #[test]
@@ -213,14 +220,23 @@ mod tests {
 
     #[test]
     fn mode_from_cli_args() {
-        let args: Vec<String> =
-            ["--algo", "zccl", "--compressor", "fzlight", "--rel-eb", "1e-2", "--multithread"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect();
+        let args: Vec<String> = [
+            "--algo",
+            "zccl",
+            "--compressor",
+            "fzlight",
+            "--rel-eb",
+            "1e-2",
+            "--multithread",
+            "--staged",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
         let m = mode_from_args(&args).unwrap();
         assert_eq!(m.algo, Algo::Zccl);
         assert!(m.multithread);
+        assert!(m.staged);
         assert_eq!(m.eb, ErrorBound::Rel(1e-2));
     }
 

@@ -697,12 +697,16 @@ fn hier_bench() -> Vec<(String, Table)> {
     vec![("hier-real-4x4".into(), t), ("hier-sim-scaling".into(), sim_t)]
 }
 
-/// `zccl bench codec` — word-parallel codec kernel throughput. Two
+/// `zccl bench codec` — word-parallel codec kernel throughput. Four
 /// tables: end-to-end comp/decomp GB/s per codec × dataset × REL bound
-/// (the bit-shifting codecs, single-thread), and the raw
+/// (the bit-shifting codecs, single-thread); the raw
 /// [`bits::pack_fixed`] / [`bits::unpack_fixed`] kernels against the
 /// retained scalar [`bits::BitWriter`] / [`bits::BitReader`] reference
-/// path across code widths. Returns the tables plus the single-line
+/// path across code widths; per-stage GB/s for the staged pipeline
+/// (quantize / pack / entropy, encode + decode); and adaptive staged
+/// frames vs fixed-width on synthetic low- and high-entropy datasets
+/// (`staged` JSON rows — ratio regressions in either direction fail the
+/// tier-1 contract test). Returns the tables plus the single-line
 /// `BENCH_codec.json` summary whose `speedup_vs_reference` field tracks
 /// the word-parallel kernels' edge from PR to PR. Exposed as a library
 /// function so a tier-1 test can run it on a tiny budget and assert the
@@ -790,16 +794,146 @@ pub fn codec_bench(values: usize, budget_s: f64) -> (Vec<(String, Table)>, Json)
     }
     let speedup = reference_s / kernel_s.max(1e-12);
 
+    // Per-stage throughput for the staged pipeline on the smooth Rtm
+    // field: quantize (round-to-i64 + dequantize multiply), pack (the
+    // full fixed-width frame encode/decode around it), entropy (the
+    // order-0 rANS coder over the packed frame bytes).
+    let stage_f = Field::generate(FieldKind::Rtm, values, 42);
+    let raw_bytes = values * 4;
+    let eb_abs = ErrorBound::Rel(1e-3).resolve(&stage_f.values);
+    let inv = 1.0 / (2.0 * eb_abs);
+    let twoeb = 2.0 * eb_abs;
+    let mut qbuf: Vec<i64> = Vec::with_capacity(values);
+    let q_enc = measure_for(budget_s, || {
+        qbuf.clear();
+        qbuf.extend(stage_f.values.iter().map(|&x| (x as f64 * inv).round() as i64));
+    });
+    let mut fbuf = vec![0.0f32; values];
+    let q_dec = measure_for(budget_s, || {
+        for (o, &q) in fbuf.iter_mut().zip(&qbuf) {
+            *o = (q as f64 * twoeb) as f32;
+        }
+    });
+    let fz = compress::FzLight::default();
+    let v1 = fz.compress(&stage_f.values, ErrorBound::Abs(eb_abs)).expect("compress");
+    let mut frame = Vec::with_capacity(v1.bytes.len());
+    let p_enc = measure_for(budget_s, || {
+        frame.clear();
+        fz.compress_into(&stage_f.values, ErrorBound::Abs(eb_abs), &mut frame).unwrap()
+    });
+    let mut dst: Vec<f32> = Vec::with_capacity(values);
+    let p_dec = measure_for(budget_s, || {
+        dst.clear();
+        fz.decompress_into(&v1.bytes, &mut dst).unwrap()
+    });
+    let mut blob = Vec::new();
+    let e_enc = measure_for(budget_s, || {
+        blob.clear();
+        compress::entropy::encode(&v1.bytes, &mut blob);
+    });
+    let mut raw = Vec::with_capacity(v1.bytes.len());
+    let e_dec = measure_for(budget_s, || {
+        raw.clear();
+        compress::entropy::decode(&blob, v1.bytes.len(), &mut raw).unwrap();
+    });
+    let mut st = Table::new(&["stage", "enc GB/s", "dec GB/s"]);
+    let mut stage_rows = Vec::new();
+    for (name, enc, dec, bytes) in [
+        ("quantize", &q_enc, &q_dec, raw_bytes),
+        ("pack", &p_enc, &p_dec, raw_bytes),
+        ("entropy", &e_enc, &e_dec, v1.bytes.len()),
+    ] {
+        st.row(vec![
+            name.into(),
+            format!("{:.3}", enc.gbps(bytes)),
+            format!("{:.3}", dec.gbps(bytes)),
+        ]);
+        stage_rows.push(Json::obj(vec![
+            ("stage", Json::Str(name.into())),
+            ("enc_gbps", Json::Num(enc.gbps(bytes))),
+            ("dec_gbps", Json::Num(dec.gbps(bytes))),
+        ]));
+    }
+
+    // Adaptive staged frames vs fixed-width on synthetic extremes: a
+    // plateau staircase (wide constant runs — the entropy stage's best
+    // case) and a uniform-16-bit-delta random walk (worst case — the
+    // selector must fall back to fixed-width, costing at most the
+    // per-chunk stage tag). The ratios are deterministic; the tier-1
+    // contract test pins the gain floor and the never-worse bound.
+    let mut sdt = Table::new(&[
+        "dataset", "fixed ratio", "staged ratio", "gain", "enc GB/s", "dec GB/s", "e/p chunks",
+    ]);
+    let mut staged_rows = Vec::new();
+    let low: Vec<f32> = (0..values).map(|i| (i / 512) as f32).collect();
+    let mut walk_rng = Rng::new(11);
+    let mut walk = 0.0f32;
+    let high: Vec<f32> = (0..values)
+        .map(|_| {
+            walk += (walk_rng.below(1 << 16) as f32 - 32_768.0) * 1e-3;
+            walk
+        })
+        .collect();
+    for (name, data) in [("low-entropy", &low), ("high-entropy", &high)] {
+        let eb = ErrorBound::Abs(1e-3);
+        let fixed = compress::FzLight::default().compress(data, eb).expect("compress");
+        let codec = compress::FzLight::default().with_staged(true);
+        let staged = codec.compress(data, eb).expect("compress");
+        let mut buf = Vec::with_capacity(staged.bytes.len());
+        let s_enc = measure_for(budget_s, || {
+            buf.clear();
+            codec.compress_into(data, eb, &mut buf).unwrap()
+        });
+        let mut out: Vec<f32> = Vec::with_capacity(data.len());
+        let s_dec = measure_for(budget_s, || {
+            out.clear();
+            codec.decompress_into(&staged.bytes, &mut out).unwrap()
+        });
+        let gain = fixed.bytes.len() as f64 / staged.bytes.len() as f64;
+        sdt.row(vec![
+            name.into(),
+            format!("{:.2}", fixed.stats.ratio()),
+            format!("{:.2}", staged.stats.ratio()),
+            format!("{gain:.3}"),
+            format!("{:.3}", s_enc.gbps(raw_bytes)),
+            format!("{:.3}", s_dec.gbps(raw_bytes)),
+            format!("{}/{}", staged.stats.entropy_chunks, staged.stats.plain_chunks),
+        ]);
+        staged_rows.push(Json::obj(vec![
+            ("dataset", Json::Str(name.into())),
+            ("fixed_ratio", Json::Num(fixed.stats.ratio())),
+            ("staged_ratio", Json::Num(staged.stats.ratio())),
+            ("gain", Json::Num(gain)),
+            ("comp_gbps", Json::Num(s_enc.gbps(raw_bytes))),
+            ("decomp_gbps", Json::Num(s_dec.gbps(raw_bytes))),
+            ("fixed_bytes", Json::Num(fixed.bytes.len() as f64)),
+            ("staged_bytes", Json::Num(staged.bytes.len() as f64)),
+            ("chunks", Json::Num(staged.stats.chunks as f64)),
+            ("entropy_chunks", Json::Num(staged.stats.entropy_chunks as f64)),
+            ("plain_chunks", Json::Num(staged.stats.plain_chunks as f64)),
+        ]));
+    }
+
     let summary = Json::obj(vec![
         ("bench", Json::Str("codec_kernels".into())),
         ("values", Json::Num(values as f64)),
         ("budget_s", Json::Num(budget_s)),
         ("codecs", Json::Arr(codec_rows)),
+        ("stages", Json::Arr(stage_rows)),
+        ("staged", Json::Arr(staged_rows)),
         ("kernel_pack_unpack_s", Json::Num(kernel_s)),
         ("reference_pack_unpack_s", Json::Num(reference_s)),
         ("speedup_vs_reference", Json::Num(speedup)),
     ]);
-    (vec![("codec-throughput".into(), t), ("codec-bit-kernels".into(), kt)], summary)
+    (
+        vec![
+            ("codec-throughput".into(), t),
+            ("codec-bit-kernels".into(), kt),
+            ("codec-stages".into(), st),
+            ("codec-staged".into(), sdt),
+        ],
+        summary,
+    )
 }
 
 /// Synthetic compute: a serially-dependent float chain the optimiser

@@ -9,9 +9,13 @@
 //!   [`collectives`] and the fused decompress–reduce kernels in
 //!   [`compress`].
 //! - [`compress`] — error-bounded lossy compressors: a Rust `fZ-light`
-//!   (Lorenzo + quantization + fixed-length bit-shifting encoding), its
-//!   pipelined variant `PIPE-fZ-light`, an `SZx`-style constant-block
-//!   compressor, and a ZFP-like fixed-rate baseline.
+//!   staged as quantize (Lorenzo-predicted error-bounded quantization) →
+//!   pack (fixed-length bit-shifting encoding) → optional order-0 rANS
+//!   entropy coding, with adaptive per-chunk stage selection
+//!   (plain / fixed-width / entropy-coded, never worse than fixed-width)
+//!   behind an opt-in frame version; its pipelined variant
+//!   `PIPE-fZ-light`, an `SZx`-style constant-block compressor, and a
+//!   ZFP-like fixed-rate baseline.
 //! - [`data`] — seeded synthetic scientific-field generators standing in for
 //!   the paper's RTM / NYX / CESM-ATM / Hurricane datasets.
 //! - [`transport`] — a mini-MPI substrate: blocking and nonblocking

@@ -17,7 +17,7 @@
 //!
 //! Mode flags: `--algo plain|cprp2p|ccoll|zccl|hier`, `--compressor
 //! fzlight|szx|zfp-abs|zfp-fxr`, `--rel-eb X`, `--abs-eb X`,
-//! `--multithread`, `--pipe-chunk N`, `--pipeline-bytes N`.
+//! `--multithread`, `--staged`, `--pipe-chunk N`, `--pipeline-bytes N`.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -51,7 +51,7 @@ fn parse_args(raw: &[String]) -> Result<Args, String> {
     };
     let mut it = raw.iter().peekable();
     while let Some(arg) = it.next() {
-        if arg == "--multithread" {
+        if arg == "--multithread" || arg == "--staged" {
             a.mode_flags.push(arg.clone());
         } else if MODE_FLAGS.contains(&arg.as_str()) {
             let v = it.next().ok_or_else(|| format!("{arg} needs a value"))?;
@@ -222,6 +222,8 @@ MODE FLAGS:
   --compressor fzlight|szx|zfp-abs|zfp-fxr
   --rel-eb X | --abs-eb X             (default rel 1e-4)
   --multithread
+  --staged                            staged fZ-light frames (per-chunk
+                                      plain/fixed/entropy selection)
   --pipe-chunk N                      (default 5120 values)
   --pipeline-bytes N                  (default 65536)
 ";

@@ -4,18 +4,25 @@
 //! `BitWriter` / `BitReader` reference layout — the frame layout is the
 //! spec, and every pre-existing frame must decode unchanged.
 //!
-//! Three layers of evidence:
+//! Four layers of evidence:
 //! 1. kernel-level property tests over ALL widths 1..=64 (including the
 //!    rarely-exercised 58..=64 two-limb path) and many block counts;
 //! 2. whole-frame equality against an in-test reference encoder built
 //!    on `BitWriter` straight from the documented chunk layout;
 //! 3. hand-computed golden frames (bytes written out literally) that
-//!    both encode sides must emit and both decode sides must accept.
+//!    both encode sides must emit and both decode sides must accept —
+//!    including a version-2 staged frame exercising every stage tag
+//!    (entropy, fixed-width fallback, plain) in one frame;
+//! 4. version interchange: version-1 frames through staged-configured
+//!    wrappers and staged frames through default-configured wrappers,
+//!    bit-exact both ways.
 
 use zccl::compress::bits::{
     le, pack_fixed, pack_fixed_reference, unpack_fixed, unpack_fixed_reference, BitWriter,
 };
-use zccl::compress::traits::write_header;
+use zccl::compress::entropy;
+use zccl::compress::fzlight::{STAGE_ENTROPY, STAGE_FIXED, STAGE_PLAIN};
+use zccl::compress::traits::{write_header, write_header_with_version, VERSION_STAGED};
 use zccl::compress::{
     Compressor, CompressorKind, ErrorBound, FzLight, MtCompressor, PipeFzLight, Szx,
 };
@@ -61,6 +68,37 @@ fn pack_unpack_match_reference_all_widths() {
 
 // ----------------------------------------------- whole-frame vs reference
 
+/// Reference fZ-light chunk payload (version-1 / fixed-width body):
+/// the documented layout realised directly with the scalar `BitWriter`
+/// spec path.
+fn reference_fzlight_chunk(c: &[f32], eb_abs: f64) -> Vec<u8> {
+    let inv = 1.0 / (2.0 * eb_abs);
+    let q: Vec<i64> = c.iter().map(|&x| (x as f64 * inv).round() as i64).collect();
+    let deltas: Vec<i64> = q.windows(2).map(|w| w[1] - w[0]).collect();
+    let mut p = Vec::new();
+    p.extend_from_slice(&q[0].to_le_bytes());
+    for db in deltas.chunks(32) {
+        let maxmag = db.iter().fold(0u64, |a, d| a | d.unsigned_abs());
+        if maxmag == 0 {
+            p.push(0);
+            continue;
+        }
+        let bits = 64 - maxmag.leading_zeros();
+        p.push(bits as u8);
+        let mut sign = 0u32;
+        for (j, &d) in db.iter().enumerate() {
+            sign |= u32::from(d < 0) << j;
+        }
+        p.extend_from_slice(&sign.to_le_bytes()[..db.len().div_ceil(8)]);
+        let mut w = BitWriter::with_capacity(db.len() * 8);
+        for &d in db {
+            w.put_wide(d.unsigned_abs(), bits);
+        }
+        p.extend_from_slice(&w.finish());
+    }
+    p
+}
+
 /// Reference fZ-light frame encoder: the documented chunk layout
 /// realised directly with the scalar `BitWriter` spec path. Any byte
 /// divergence from `FzLight::compress` is a layout break.
@@ -70,35 +108,8 @@ fn reference_fzlight_frame(data: &[f32], chunk: usize, eb_abs: f64) -> Vec<u8> {
     let nchunks = data.len().div_ceil(chunk);
     le::put_u32(&mut out, chunk as u32);
     le::put_u32(&mut out, nchunks as u32);
-    let twoeb = 2.0 * eb_abs;
-    let inv = 1.0 / twoeb;
-    let mut payloads: Vec<Vec<u8>> = Vec::new();
-    for c in data.chunks(chunk) {
-        let q: Vec<i64> = c.iter().map(|&x| (x as f64 * inv).round() as i64).collect();
-        let deltas: Vec<i64> = q.windows(2).map(|w| w[1] - w[0]).collect();
-        let mut p = Vec::new();
-        p.extend_from_slice(&q[0].to_le_bytes());
-        for db in deltas.chunks(32) {
-            let maxmag = db.iter().fold(0u64, |a, d| a | d.unsigned_abs());
-            if maxmag == 0 {
-                p.push(0);
-                continue;
-            }
-            let bits = 64 - maxmag.leading_zeros();
-            p.push(bits as u8);
-            let mut sign = 0u32;
-            for (j, &d) in db.iter().enumerate() {
-                sign |= u32::from(d < 0) << j;
-            }
-            p.extend_from_slice(&sign.to_le_bytes()[..db.len().div_ceil(8)]);
-            let mut w = BitWriter::with_capacity(db.len() * 8);
-            for &d in db {
-                w.put_wide(d.unsigned_abs(), bits);
-            }
-            p.extend_from_slice(&w.finish());
-        }
-        payloads.push(p);
-    }
+    let payloads: Vec<Vec<u8>> =
+        data.chunks(chunk).map(|c| reference_fzlight_chunk(c, eb_abs)).collect();
     for p in &payloads {
         le::put_u32(&mut out, p.len() as u32);
     }
@@ -275,6 +286,180 @@ fn golden_frames_decode_bit_exact() {
     }
 }
 
+// ----------------------------------------------------- staged golden frame
+
+/// Deterministic three-chunk input exercising every stage tag at chunk
+/// 512, eb 0.5 (`2eb = 1`, so `q = x`): a constant plateau (the entropy
+/// stage wins), a 16-bit random walk (fixed-width wins — the entropy
+/// estimate overshoots the budget), and uniform ±2^35 noise whose
+/// ~36-bit delta codes push fixed-width past the 2048 raw bytes (plain
+/// wins). Every value is an exactly representable integer, so all three
+/// reconstructions are bit-exact.
+fn staged_exemplar_data() -> Vec<f32> {
+    let mut data = vec![5.0f32; 512];
+    let mut rng = Rng::new(0x57A6ED);
+    let mut q = 0i64;
+    data.extend((0..512).map(|_| {
+        q += rng.below(1 << 16) as i64 - 32_768;
+        q as f32
+    }));
+    data.extend((0..512).map(|_| ((rng.next_u64() >> 28) as i64 - (1i64 << 35)) as f32));
+    data
+}
+
+/// Golden staged (version-2) fZ-light frame: the frame skeleton —
+/// header, chunk table, stage tags, `raw_len` word — is written out by
+/// hand from the layout spec. Fixed-width chunk bodies come from the
+/// scalar reference encoder; the entropy blob comes from the public
+/// `entropy::encode`, with its length and serialized table pinned
+/// literally (hand-derived from the rANS normalization).
+fn golden_fzlight_staged() -> (Vec<f32>, Vec<u8>, Vec<f32>) {
+    let data = staged_exemplar_data();
+    // Chunk 0 (constant): the fixed body is the 8-byte outlier `5` plus
+    // 16 zero code-length bytes. Histogram {0: 23, 5: 1} normalizes to
+    // frequencies {3926, 170}; the 24-symbol stream never leaves the
+    // u32 state word, so the blob is exactly table (7) + state (4) = 11
+    // bytes — under fixed's 24 by more than the selection margin.
+    let fixed0 = reference_fzlight_chunk(&data[..512], 0.5);
+    assert_eq!(fixed0.len(), 24, "outlier + 16 constant-block tags");
+    let mut p0 = vec![STAGE_ENTROPY];
+    le::put_u32(&mut p0, fixed0.len() as u32);
+    entropy::encode(&fixed0, &mut p0);
+    assert_eq!(p0.len(), 16, "stage tag + raw_len + 11-byte blob");
+    assert_eq!(
+        &p0[5..12],
+        &[0, 2, 0, 5, 0x56, 0xAF, 0x0A],
+        "LIST table: k=2, syms [0,5], freqs [3926,170] packed 12-bit"
+    );
+    // Chunk 1 (random walk): near-uniform delta bytes, so the entropy
+    // estimate overshoots the budget and fixed-width ships unchanged.
+    let mut p1 = vec![STAGE_FIXED];
+    p1.extend_from_slice(&reference_fzlight_chunk(&data[512..1024], 0.5));
+    // Chunk 2 (wide noise): fixed-width overshoots the raw values, and
+    // the chunk ships as plain little-endian `f32` words.
+    assert!(reference_fzlight_chunk(&data[1024..], 0.5).len() > 2048, "fixed must overshoot");
+    let mut p2 = vec![STAGE_PLAIN];
+    for &x in &data[1024..] {
+        le::put_f32(&mut p2, x);
+    }
+    let mut frame = Vec::new();
+    write_header_with_version(&mut frame, CompressorKind::FzLight, 1536, 0.5, VERSION_STAGED);
+    le::put_u32(&mut frame, 512); // chunk_values
+    le::put_u32(&mut frame, 3); // nchunks
+    for p in [&p0, &p1, &p2] {
+        le::put_u32(&mut frame, p.len() as u32);
+    }
+    for p in [&p0, &p1, &p2] {
+        frame.extend_from_slice(p);
+    }
+    let expect = data.clone();
+    (data, frame, expect)
+}
+
+#[test]
+fn golden_staged_frame_encodes_byte_identical_across_wrappers() {
+    let (data, frame, _) = golden_fzlight_staged();
+    let eb = ErrorBound::Abs(0.5);
+    for (label, got) in [
+        ("fzlight", FzLight::with_chunk(512).with_staged(true).compress(&data, eb)),
+        ("pipe", PipeFzLight::with_chunk(512).with_staged(true).compress(&data, eb)),
+        (
+            "mt",
+            MtCompressor::with_chunk(CompressorKind::FzLight, 512)
+                .with_staged(true)
+                .compress(&data, eb),
+        ),
+    ] {
+        let got = got.unwrap();
+        assert_eq!(got.bytes, frame, "{label} staged golden frame");
+        assert_eq!(
+            (got.stats.chunks, got.stats.entropy_chunks, got.stats.plain_chunks),
+            (3, 1, 1),
+            "{label} must pick one chunk per stage"
+        );
+    }
+}
+
+/// The staged golden bytes stand in for version-2 frames produced by
+/// earlier builds: every wrapper — including default-configured ones
+/// that never *encode* staged frames — must reconstruct them bit-exactly
+/// through both the plain and the placement decode paths.
+#[test]
+fn golden_staged_frame_decodes_bit_exact_across_wrappers() {
+    let (_, frame, expect) = golden_fzlight_staged();
+    for decoder in [
+        Box::new(FzLight::default()) as Box<dyn Compressor>,
+        Box::new(PipeFzLight::default()),
+        Box::new(MtCompressor::new(CompressorKind::FzLight)),
+    ] {
+        assert_eq!(decoder.decompress(&frame).unwrap(), expect, "staged golden plain decode");
+        let mut out = vec![0.0f32; expect.len()];
+        decoder.decompress_into_slice(&frame, &mut out).unwrap();
+        assert_eq!(out, expect, "staged golden placement decode");
+    }
+}
+
+// -------------------------------------------------- version interchange
+
+/// Frame-version back-compat, both directions: version-1 frames decode
+/// unchanged through staged-configured wrappers (decode dispatches on
+/// the frame header, never the encoder flag), staged frames decode
+/// through default-configured wrappers, and all three wrappers emit
+/// byte-identical frames at either version.
+#[test]
+fn staged_and_v1_frames_interchange_across_wrappers() {
+    for (kind, n, chunk) in [
+        (FieldKind::Rtm, 20_000usize, 5120usize),
+        (FieldKind::Cesm, 4_097, 512),
+    ] {
+        let f = Field::generate(kind, n, 77);
+        let eb = ErrorBound::Rel(1e-3);
+        let v1 = FzLight::with_chunk(chunk).compress(&f.values, eb).unwrap();
+        let staged =
+            FzLight::with_chunk(chunk).with_staged(true).compress(&f.values, eb).unwrap();
+        assert_eq!(v1.bytes[4], 1, "version-1 header byte");
+        assert_eq!(staged.bytes[4], 2, "staged header byte");
+        let from_v1 = FzLight::default().decompress(&v1.bytes).unwrap();
+        let from_staged = FzLight::default().decompress(&staged.bytes).unwrap();
+        for (label, codec) in [
+            (
+                "fzlight",
+                Box::new(FzLight::with_chunk(chunk).with_staged(true)) as Box<dyn Compressor>,
+            ),
+            ("pipe", Box::new(PipeFzLight::with_chunk(chunk).with_staged(true))),
+            (
+                "mt",
+                Box::new(
+                    MtCompressor::with_chunk(CompressorKind::FzLight, chunk).with_staged(true),
+                ),
+            ),
+        ] {
+            let enc = codec.compress(&f.values, eb).unwrap();
+            assert_eq!(enc.bytes, staged.bytes, "{label} staged frame equality ({kind:?})");
+            assert_eq!(
+                codec.decompress(&v1.bytes).unwrap(),
+                from_v1,
+                "{label} staged-configured wrapper must decode v1 frames unchanged"
+            );
+            assert_eq!(
+                codec.decompress(&staged.bytes).unwrap(),
+                from_staged,
+                "{label} staged decode equality"
+            );
+        }
+        for (label, codec) in [
+            ("pipe", Box::new(PipeFzLight::with_chunk(chunk)) as Box<dyn Compressor>),
+            ("mt", Box::new(MtCompressor::with_chunk(CompressorKind::FzLight, chunk))),
+        ] {
+            assert_eq!(
+                codec.decompress(&staged.bytes).unwrap(),
+                from_staged,
+                "default-configured {label} must decode staged frames"
+            );
+        }
+    }
+}
+
 // ------------------------------------------------------- wide code paths
 
 /// Drive the 58..=64-bit code widths through the whole codec stack.
@@ -341,11 +526,13 @@ fn wide_codes_roundtrip_across_wrappers() {
 
 /// Tier-1 guard for the CI `zccl bench codec` step: the library driver
 /// must emit JSON that parses and carries the `speedup_vs_reference`
-/// trajectory field plus per-codec comp/decomp throughput rows.
+/// trajectory field, per-codec comp/decomp throughput rows, per-stage
+/// (quantize / pack / entropy) throughput rows, and the staged-vs-fixed
+/// ratio contract on the synthetic low/high-entropy datasets.
 #[test]
 fn bench_codec_json_parses_with_speedup_field() {
     let (tables, summary) = codec_bench(1 << 14, 0.002);
-    assert_eq!(tables.len(), 2, "throughput + bit-kernel tables");
+    assert_eq!(tables.len(), 4, "throughput + bit-kernel + stages + staged tables");
     let parsed = Json::parse(&summary.to_string()).expect("BENCH_codec.json must parse");
     let speedup = parsed
         .get("speedup_vs_reference")
@@ -358,5 +545,46 @@ fn bench_codec_json_parses_with_speedup_field() {
         assert!(row.get("comp_gbps").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(row.get("decomp_gbps").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(row.get("ratio").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    // Per-stage throughput: quantize, pack, and entropy each report
+    // positive encode and decode GB/s.
+    let stages = parsed.get("stages").and_then(Json::as_arr).expect("stages array");
+    let names: Vec<&str> =
+        stages.iter().map(|r| r.get("stage").and_then(Json::as_str).unwrap()).collect();
+    assert_eq!(names, ["quantize", "pack", "entropy"], "one row per codec stage");
+    for row in stages {
+        assert!(row.get("enc_gbps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(row.get("dec_gbps").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    // Staged-vs-fixed contract on the deterministic synthetic datasets:
+    // the entropy stage must buy >= 15% on the low-entropy plateau
+    // field, and adaptive selection must never lose more than the
+    // per-chunk stage tag on either dataset.
+    let staged = parsed.get("staged").and_then(Json::as_arr).expect("staged array");
+    assert_eq!(staged.len(), 2, "low- and high-entropy datasets");
+    for row in staged {
+        let dataset = row.get("dataset").and_then(Json::as_str).unwrap();
+        let fixed_bytes = row.get("fixed_bytes").and_then(Json::as_f64).unwrap();
+        let staged_bytes = row.get("staged_bytes").and_then(Json::as_f64).unwrap();
+        let chunks = row.get("chunks").and_then(Json::as_f64).unwrap();
+        assert!(
+            staged_bytes <= fixed_bytes + chunks,
+            "never-worse on {dataset}: staged {staged_bytes} vs fixed {fixed_bytes} + \
+             {chunks} tag bytes"
+        );
+        assert!(row.get("comp_gbps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(row.get("decomp_gbps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(row.get("fixed_ratio").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(row.get("staged_ratio").and_then(Json::as_f64).unwrap() > 0.0);
+        let gain = row.get("gain").and_then(Json::as_f64).unwrap();
+        if dataset == "low-entropy" {
+            assert!(gain >= 1.15, "entropy stage must beat fixed-width by >= 15%, got {gain}");
+            assert!(
+                row.get("entropy_chunks").and_then(Json::as_f64).unwrap() > 0.0,
+                "low-entropy chunks must take the entropy stage"
+            );
+        }
     }
 }

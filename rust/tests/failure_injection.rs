@@ -4,7 +4,8 @@
 //! senders, straggler ranks) must leave the nonblocking collectives
 //! bit-identical to their blocking twins.
 
-use zccl::compress::{self, Compressor, CompressorKind, ErrorBound};
+use zccl::compress::fzlight::STAGE_ENTROPY;
+use zccl::compress::{self, Compressor, CompressorKind, ErrorBound, FzLight};
 use zccl::data::rng::Rng;
 
 /// Deterministic fuzz: random values at extreme magnitudes, with NaN-free
@@ -108,6 +109,62 @@ fn codec_dispatch_and_forgery() {
     // Unknown codec id errors.
     forged[5] = 0x7F;
     assert!(compress::decompress(&forged).is_err());
+}
+
+/// Staged (version-2) frames under the same adversarial treatment:
+/// single-bit flips — exhaustive across the first entropy-coded chunk
+/// payload (stage tag, `raw_len` word, rANS blob), sampled everywhere
+/// else — must yield a typed `Corrupt` error or a right-length decode,
+/// never a panic; truncation at every cut must fail; and a forged
+/// entropy `raw_len` must be rejected by the sizing guard before any
+/// scratch is allocated from it.
+#[test]
+fn staged_bitflip_and_truncation_never_panic() {
+    let data: Vec<f32> = (0..3000).map(|i| (i / 500) as f32).collect();
+    let codec = FzLight::with_chunk(512).with_staged(true);
+    let frame = codec.compress(&data, ErrorBound::Abs(1e-3)).unwrap();
+    assert_eq!(frame.bytes[4], 2, "staged frames carry version 2");
+    assert!(frame.stats.entropy_chunks > 0, "plateau chunks must entropy-code");
+    // Frame geometry: 24-byte header + chunk_values + nchunks + sizes.
+    let nchunks = u32::from_le_bytes(frame.bytes[28..32].try_into().unwrap()) as usize;
+    assert_eq!(nchunks, 6);
+    let size0 = u32::from_le_bytes(frame.bytes[32..36].try_into().unwrap()) as usize;
+    let first = 32 + 4 * nchunks;
+    assert_eq!(frame.bytes[first], STAGE_ENTROPY, "first chunk must be entropy-coded");
+    for pos in first..first + size0 {
+        for bit in 0..8 {
+            let mut corrupted = frame.bytes.clone();
+            corrupted[pos] ^= 1 << bit;
+            match codec.decompress(&corrupted) {
+                Ok(out) => assert_eq!(out.len(), data.len(), "flip {pos}:{bit}"),
+                Err(e) => assert!(
+                    matches!(e, Error::Corrupt(_)),
+                    "flip {pos}:{bit}: want typed Corrupt, got {e:?}"
+                ),
+            }
+        }
+    }
+    // Sampled flips over the rest of the frame (header, chunk table,
+    // fixed-width neighbours).
+    let mut rng = Rng::new(0x57A6ED2);
+    for _ in 0..300 {
+        let mut corrupted = frame.bytes.clone();
+        let pos = rng.below(corrupted.len());
+        corrupted[pos] ^= 1 << rng.below(8);
+        if let Ok(out) = codec.decompress(&corrupted) {
+            assert_eq!(out.len(), data.len());
+        }
+    }
+    // Every truncation point fails cleanly.
+    for cut in 0..frame.bytes.len() {
+        assert!(codec.decompress(&frame.bytes[..cut]).is_err(), "staged cut {cut}");
+    }
+    // Forged raw_len: an entropy chunk claiming a u32::MAX payload must
+    // die on the per-chunk bound, not size a buffer from the claim.
+    let mut forged = frame.bytes.clone();
+    forged[first + 1..first + 5].copy_from_slice(&u32::MAX.to_le_bytes());
+    let e = codec.decompress(&forged).expect_err("forged raw_len must fail");
+    assert!(matches!(e, Error::Corrupt(_)), "typed error: {e:?}");
 }
 
 /// Deterministic per-rank input for the nonblocking timing tests.
@@ -480,4 +537,50 @@ fn chaos_corruption_is_detected_before_decode_naming_sender() {
             assert!(r.is_err(), "rank {rank} cannot complete with rank 1 corrupting");
         }
     }
+}
+
+/// Staged-mode chaos: with version-2 frames on the wire the collective
+/// behaves exactly like the fixed-width mode. A clean staged run is
+/// bit-identical to the unstaged ZCCL run on the same inputs (the
+/// entropy and fixed-width stages reconstruct the same quantized
+/// values, and no chunk degrades to plain at this bound), and a
+/// corrupted staged frame is still rejected by the CRC at delivery —
+/// naming the sender — before the staged decoder ever parses it.
+#[test]
+fn chaos_staged_frames_clean_and_corrupt() {
+    let staged_mode = chaos_mode(CompressorKind::FzLight).with_staged(true);
+    let clean_unstaged = run_chaos(
+        plans_for(CHAOS_RANKS, FAULTY, FaultPlan::new(chaos_seed())),
+        move |c| {
+            let mut ctx = CollCtx::over(c, chaos_mode(CompressorKind::FzLight));
+            chaos_op(&mut ctx, 0).expect("clean run must succeed")
+        },
+    );
+    let clean_staged = run_chaos(
+        plans_for(CHAOS_RANKS, FAULTY, FaultPlan::new(chaos_seed())),
+        move |c| {
+            let mut ctx = CollCtx::over(c, staged_mode);
+            chaos_op(&mut ctx, 0).expect("clean staged run must succeed")
+        },
+    );
+    for (rank, (a, b)) in clean_unstaged.iter().zip(&clean_staged).enumerate() {
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "rank {rank}: staged frames must not change the reduction"
+        );
+    }
+    let plan = FaultPlan::new(chaos_seed()).corrupt_frames(1.0);
+    let results: Vec<(Result<Vec<f32>, Error>, Metrics)> =
+        run_chaos(plans_for(CHAOS_RANKS, FAULTY, plan), move |c| {
+            let mut ctx = CollCtx::over(c, staged_mode);
+            ctx.set_timeout(Some(Duration::from_millis(400)));
+            (chaos_op(&mut ctx, 0), *ctx.metrics())
+        });
+    let (r2, m2) = &results[2];
+    let e = r2.as_ref().expect_err("rank 2 must reject rank 1's corrupted staged frame");
+    let msg = format!("{e}");
+    assert!(msg.contains("crc mismatch"), "CRC must reject the staged frame: {msg}");
+    assert!(msg.contains("rank 1"), "error must name the sender: {msg}");
+    assert!(m2.corrupt_frames > 0, "receiver metrics must count the corrupt frame");
 }
