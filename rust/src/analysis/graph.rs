@@ -21,8 +21,9 @@
 //! [`crate::transport::memchan::MessageLedger`] a traced run produces.
 
 use crate::analysis::plan::{
-    AllgatherPlan, AlltoallPlan, HierAllgatherPlan, HierAllreducePlan, HierBcastPlan,
-    HierScatterPlan, RingPlan, TreePlan, HIER_GROUP_SPAN,
+    AllgatherPlan, AlltoallPlan, HierAllgatherPlan, HierAllreducePlan, HierAlltoallPlan,
+    HierBcastPlan, HierGatherPlan, HierReducePlan, HierReduceScatterPlan, HierScatterPlan,
+    RingPlan, TreePlan, HIER_GROUP_SPAN,
 };
 use crate::collectives::{Algo, SEG_TAG_SPAN};
 use crate::topology::{binomial_bcast, binomial_bcast_in_group, ring_in_group, Topology};
@@ -220,6 +221,8 @@ pub fn build(
         Coll::ReduceScatter => {
             if n == 1 {
                 OpGraph::empty("reduce_scatter", n)
+            } else if algo == Algo::Hier {
+                reduce_scatter_hier(n, topo, tags)
             } else {
                 reduce_scatter(algo, n, tags)
             }
@@ -249,6 +252,8 @@ pub fn build(
         Coll::Alltoall => {
             if n == 1 {
                 OpGraph::empty("alltoall", n)
+            } else if algo == Algo::Hier {
+                alltoall_hier(n, topo, tags)
             } else {
                 alltoall(algo, n, tags)
             }
@@ -271,11 +276,11 @@ pub fn build(
                 tree_down("scatter", n, root, Payload::Bundle, tags)
             }
         }
-        // Gather and reduce have no hierarchical arm: under `Hier` they
-        // run their flat schedules with leader-free compression.
         Coll::Gather => {
             if n == 1 {
                 OpGraph::empty("gather", n)
+            } else if algo == Algo::Hier {
+                gather_hier(n, root, topo, tags)
             } else {
                 tree_up("gather", n, root, Payload::Bundle, tags)
             }
@@ -283,6 +288,8 @@ pub fn build(
         Coll::Reduce => {
             if n == 1 {
                 OpGraph::empty("reduce", n)
+            } else if algo == Algo::Hier {
+                reduce_hier(n, root, topo, tags)
             } else {
                 tree_up("reduce", n, root, wire_payload(algo), tags)
             }
@@ -550,7 +557,9 @@ fn allreduce_hier(n: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph
 }
 
 /// Hierarchical allgather: raw member chunks up, per-node frame bundles
-/// around the leader ring, raw gathered vector down.
+/// around the **segmented** leader ring (each round ships an 8-byte
+/// bundle-size pre-message, then the bundle over a `seg_fan`-wide tag
+/// window), raw gathered vector down.
 fn allgather_hier(n: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
     let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
     assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
@@ -575,9 +584,13 @@ fn allgather_hier(n: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph
         }
         let lring = ring_in_group(topo.leaders(), node);
         let lplan = plan.leader_ring();
+        let sizes = plan.sizes_ring();
+        let fan = lplan.seg_fan();
         for t in 0..nnodes - 1 {
-            sc.push(Ev::snd(lring.next, lplan.round_tag(t), 1, "hier-ring", Payload::Bundle));
-            sc.push(Ev::rcv(lring.prev, lplan.round_tag(t), 1, "hier-ring", Payload::Bundle));
+            sc.push(Ev::snd(lring.next, sizes.round_tag(t), 1, "hier-sizes", Payload::SizeU64));
+            sc.push(Ev::snd(lring.next, lplan.round_tag(t), fan, "hier-ring", Payload::Bundle));
+            sc.push(Ev::rcv(lring.prev, sizes.round_tag(t), 1, "hier-sizes", Payload::SizeU64));
+            sc.push(Ev::rcv(lring.prev, lplan.round_tag(t), fan, "hier-ring", Payload::Bundle));
         }
         push_intra_down(sc, members, 0, plan.down().base);
     }
@@ -585,7 +598,9 @@ fn allgather_hier(n: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph
 }
 
 /// Hierarchical bcast: optional root → root-leader frame hop, the frame
-/// verbatim down the leader binomial, raw fan-out inside each node.
+/// verbatim down the **segmented** leader binomial (each edge ships an
+/// 8-byte size pre-message, then the frame over a `seg_fan`-wide tag
+/// window), raw fan-out inside each node.
 fn bcast_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
     let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
     assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
@@ -613,10 +628,24 @@ fn bcast_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags) -
                 sc.push(Ev::rcv(root, plan.hop_tag(), 1, "hier-hop", Payload::Frame));
             } else {
                 let s = recv_step.expect("non-root-node leader receives");
-                sc.push(Ev::rcv(s.peer, ltree.step_tag(s.round), 1, "hier-tree", Payload::Frame));
+                sc.push(Ev::rcv(s.peer, ltree.size_tag(s.round), 1, "hier-sizes", Payload::SizeU64));
+                sc.push(Ev::rcv(
+                    s.peer,
+                    ltree.step_tag(s.round),
+                    ltree.seg_fan(),
+                    "hier-tree",
+                    Payload::Frame,
+                ));
             }
             for s in send_steps {
-                sc.push(Ev::snd(s.peer, ltree.step_tag(s.round), 1, "hier-tree", Payload::Frame));
+                sc.push(Ev::snd(s.peer, ltree.size_tag(s.round), 1, "hier-sizes", Payload::SizeU64));
+                sc.push(Ev::snd(
+                    s.peer,
+                    ltree.step_tag(s.round),
+                    ltree.seg_fan(),
+                    "hier-tree",
+                    Payload::Frame,
+                ));
             }
             push_intra_down(sc, members, 0, plan.down().base);
         } else {
@@ -627,7 +656,8 @@ fn bcast_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags) -
 }
 
 /// Hierarchical scatter: optional root → root-leader bundle hop, subtree
-/// bundles down the leader binomial, then one raw chunk per member on
+/// bundles down the **segmented** leader binomial (size pre-message +
+/// `seg_fan`-wide window per edge), then one raw chunk per member on
 /// the single down tag (distinct destinations, so one tag suffices).
 fn scatter_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
     let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
@@ -656,10 +686,24 @@ fn scatter_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags)
                 sc.push(Ev::rcv(root, plan.hop_tag(), 1, "hier-hop", Payload::Bundle));
             } else {
                 let s = recv_step.expect("non-root-node leader receives");
-                sc.push(Ev::rcv(s.peer, ltree.step_tag(s.round), 1, "hier-tree", Payload::Bundle));
+                sc.push(Ev::rcv(s.peer, ltree.size_tag(s.round), 1, "hier-sizes", Payload::SizeU64));
+                sc.push(Ev::rcv(
+                    s.peer,
+                    ltree.step_tag(s.round),
+                    ltree.seg_fan(),
+                    "hier-tree",
+                    Payload::Bundle,
+                ));
             }
             for s in send_steps {
-                sc.push(Ev::snd(s.peer, ltree.step_tag(s.round), 1, "hier-tree", Payload::Bundle));
+                sc.push(Ev::snd(s.peer, ltree.size_tag(s.round), 1, "hier-sizes", Payload::SizeU64));
+                sc.push(Ev::snd(
+                    s.peer,
+                    ltree.step_tag(s.round),
+                    ltree.seg_fan(),
+                    "hier-tree",
+                    Payload::Bundle,
+                ));
             }
             for &mr in members {
                 if mr != me {
@@ -669,6 +713,227 @@ fn scatter_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags)
         } else {
             sc.push(Ev::rcv(topo.leader_of(me), plan.down_tag(), 1, "hier-down", Payload::Raw));
         }
+    }
+    g
+}
+
+/// Hierarchical gather: raw member chunks up, merged per-member frame
+/// record bundles up the **segmented** leader binomial toward the root's
+/// leader (size pre-message + `seg_fan`-wide window per edge), and an
+/// optional monolithic root-leader → follower-root bundle hop.
+fn gather_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
+    let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
+    assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
+    assert_leader_budget(&topo);
+    let base = tags.reserve(HierGatherPlan::span(n));
+    let plan = HierGatherPlan::at(base, n);
+    let mut g = OpGraph::empty("gather", n);
+    g.windows.push((base, base + HierGatherPlan::span(n)));
+    let root_node = topo.node_of(root);
+    let root_leader = topo.leader_of(root);
+    let ltree = plan.leader_tree();
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let node = topo.node_of(me);
+        let members = topo.members(node);
+        if topo.local_index(me) != 0 {
+            sc.push(Ev::snd(topo.leader_of(me), plan.up_tag(), 1, "hier-up", Payload::Raw));
+            if me == root {
+                sc.push(Ev::rcv(root_leader, plan.hop_tag(), 1, "hier-hop", Payload::Bundle));
+            }
+            continue;
+        }
+        for &mr in &members[1..] {
+            sc.push(Ev::rcv(mr, plan.up_tag(), 1, "hier-up", Payload::Raw));
+        }
+        let (parent_step, child_steps) = binomial_bcast_in_group(topo.leaders(), node, root_node);
+        for s in child_steps.iter().rev() {
+            sc.push(Ev::rcv(s.peer, ltree.size_tag(s.round), 1, "hier-sizes", Payload::SizeU64));
+            sc.push(Ev::rcv(
+                s.peer,
+                ltree.step_tag(s.round),
+                ltree.seg_fan(),
+                "hier-tree",
+                Payload::Bundle,
+            ));
+        }
+        if node == root_node {
+            if me != root {
+                sc.push(Ev::snd(root, plan.hop_tag(), 1, "hier-hop", Payload::Bundle));
+            }
+        } else {
+            let s = parent_step.expect("non-root-node leader has a parent");
+            sc.push(Ev::snd(s.peer, ltree.size_tag(s.round), 1, "hier-sizes", Payload::SizeU64));
+            sc.push(Ev::snd(
+                s.peer,
+                ltree.step_tag(s.round),
+                ltree.seg_fan(),
+                "hier-tree",
+                Payload::Bundle,
+            ));
+        }
+    }
+    g
+}
+
+/// Hierarchical reduce-scatter: raw member partials up, the flat ZCCL
+/// reduce-scatter over the leader group (inner communicator translated
+/// through [`group_wire_tag`]), one raw redistribution message per
+/// ordered leader pair (all sends posted before any receive — memchan
+/// buffers sends, so the all-pairs exchange cannot deadlock), then each
+/// member's owned chunk down.
+fn reduce_scatter_hier(n: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
+    let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
+    assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
+    assert_leader_budget(&topo);
+    let base = tags.reserve(HierReduceScatterPlan::span(n));
+    let plan = HierReduceScatterPlan::at(base, n);
+    let mut g = OpGraph::empty("reduce_scatter", n);
+    g.windows.push((base, base + HierReduceScatterPlan::span(n)));
+    let nnodes = topo.nodes();
+    let leaders: Vec<usize> = topo.leaders().to_vec();
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let node = topo.node_of(me);
+        let members = topo.members(node);
+        if topo.local_index(me) != 0 {
+            sc.push(Ev::snd(topo.leader_of(me), plan.up_tag(), 1, "hier-up", Payload::Raw));
+            sc.push(Ev::rcv(topo.leader_of(me), plan.down_tag(), 1, "hier-down", Payload::Raw));
+            continue;
+        }
+        for &mr in &members[1..] {
+            sc.push(Ev::rcv(mr, plan.up_tag(), 1, "hier-up", Payload::Raw));
+        }
+    }
+
+    if nnodes > 1 {
+        let mut inner_tags = Tags::new();
+        let inner = reduce_scatter(Algo::Zccl, nnodes, &mut inner_tags);
+        for (i, inner_sc) in inner.scripts.into_iter().enumerate() {
+            let sc = &mut g.scripts[leaders[i]];
+            for ev in inner_sc {
+                sc.push(Ev {
+                    peer: leaders[ev.peer],
+                    tag: group_wire_tag(plan.group_base(), ev.tag),
+                    phase: "hier-inter",
+                    ..ev
+                });
+            }
+        }
+        for (node, &leader) in leaders.iter().enumerate() {
+            let sc = &mut g.scripts[leader];
+            for k in 0..nnodes {
+                if k != node {
+                    sc.push(Ev::snd(leaders[k], plan.redist_tag(), 1, "hier-redist", Payload::Raw));
+                }
+            }
+            for k in 0..nnodes {
+                if k != node {
+                    sc.push(Ev::rcv(leaders[k], plan.redist_tag(), 1, "hier-redist", Payload::Raw));
+                }
+            }
+        }
+    }
+
+    for (node, &leader) in leaders.iter().enumerate() {
+        let members = topo.members(node);
+        let sc = &mut g.scripts[leader];
+        for &mr in &members[1..] {
+            sc.push(Ev::snd(mr, plan.down_tag(), 1, "hier-down", Payload::Raw));
+        }
+    }
+    g
+}
+
+/// Hierarchical alltoall: raw member inputs up, pairwise frame-bundle
+/// lanes between the leaders (round `t` pairs leader `j` with leader
+/// `(j + t) mod L`), raw assembled outputs down.
+fn alltoall_hier(n: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
+    let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
+    assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
+    assert_leader_budget(&topo);
+    let base = tags.reserve(HierAlltoallPlan::span(n));
+    let plan = HierAlltoallPlan::at(base, n);
+    let mut g = OpGraph::empty("alltoall", n);
+    g.windows.push((base, base + HierAlltoallPlan::span(n)));
+    let nnodes = topo.nodes();
+    let leaders = topo.leaders();
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let node = topo.node_of(me);
+        let members = topo.members(node);
+        if topo.local_index(me) != 0 {
+            sc.push(Ev::snd(topo.leader_of(me), plan.up_tag(), 1, "hier-up", Payload::Raw));
+            sc.push(Ev::rcv(topo.leader_of(me), plan.down_tag(), 1, "hier-down", Payload::Raw));
+            continue;
+        }
+        for &mr in &members[1..] {
+            sc.push(Ev::rcv(mr, plan.up_tag(), 1, "hier-up", Payload::Raw));
+        }
+        for t in 1..nnodes {
+            let to = leaders[(node + t) % nnodes];
+            let from = leaders[(node + nnodes - t) % nnodes];
+            sc.push(Ev::snd(to, plan.lane_tag(t), 1, "hier-lane", Payload::Bundle));
+            sc.push(Ev::rcv(from, plan.lane_tag(t), 1, "hier-lane", Payload::Bundle));
+        }
+        for &mr in members {
+            if mr != me {
+                sc.push(Ev::snd(mr, plan.down_tag(), 1, "hier-down", Payload::Raw));
+            }
+        }
+    }
+    g
+}
+
+/// Hierarchical reduce: raw member partials up, the flat ZCCL binomial
+/// reduce over the leader group toward the root's leader (inner
+/// communicator translated through [`group_wire_tag`]), and an optional
+/// raw root-leader → follower-root result hop over the fast tier.
+fn reduce_hier(n: usize, root: usize, topo: Option<&Topology>, tags: &mut Tags) -> OpGraph {
+    let topo = topo.cloned().unwrap_or_else(|| Topology::flat(n));
+    assert_eq!(topo.ranks(), n, "topology does not cover the communicator");
+    assert_leader_budget(&topo);
+    let base = tags.reserve(HierReducePlan::span(n));
+    let plan = HierReducePlan::at(base, n);
+    let mut g = OpGraph::empty("reduce", n);
+    g.windows.push((base, base + HierReducePlan::span(n)));
+    let nnodes = topo.nodes();
+    let leaders: Vec<usize> = topo.leaders().to_vec();
+    let root_node = topo.node_of(root);
+    let root_leader = topo.leader_of(root);
+
+    for (me, sc) in g.scripts.iter_mut().enumerate() {
+        let members = topo.members(topo.node_of(me));
+        if topo.local_index(me) != 0 {
+            sc.push(Ev::snd(topo.leader_of(me), plan.up_tag(), 1, "hier-up", Payload::Raw));
+            if me == root {
+                sc.push(Ev::rcv(root_leader, plan.hop_tag(), 1, "hier-hop", Payload::Raw));
+            }
+            continue;
+        }
+        for &mr in &members[1..] {
+            sc.push(Ev::rcv(mr, plan.up_tag(), 1, "hier-up", Payload::Raw));
+        }
+    }
+
+    if nnodes > 1 {
+        let mut inner_tags = Tags::new();
+        let inner = tree_up("reduce", nnodes, root_node, Payload::Frame, &mut inner_tags);
+        for (i, inner_sc) in inner.scripts.into_iter().enumerate() {
+            let sc = &mut g.scripts[leaders[i]];
+            for ev in inner_sc {
+                sc.push(Ev {
+                    peer: leaders[ev.peer],
+                    tag: group_wire_tag(plan.group_base(), ev.tag),
+                    phase: "hier-inter",
+                    ..ev
+                });
+            }
+        }
+    }
+
+    if root != root_leader {
+        g.scripts[root_leader].push(Ev::snd(root, plan.hop_tag(), 1, "hier-hop", Payload::Raw));
     }
     g
 }

@@ -83,6 +83,86 @@ impl TreePlan {
     }
 }
 
+/// Segmented ring (§3.5.1 fixed pipeline over a ring): each of the up to
+/// `n - 1` rounds owns a [`SEG_TAG_SPAN`]-wide fan so the round's
+/// pipeline segments travel on consecutive tags and overlap send/recv.
+/// Used by the hierarchical allgather's inter-leader bundle ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegRingPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Ring size the rounds were sized for.
+    pub n: usize,
+}
+
+impl SegRingPlan {
+    /// Tags to reserve for a segmented ring over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        n as u64 * SEG_TAG_SPAN
+    }
+    /// Bind a reserved `base` to a segmented ring of `n` ranks.
+    pub fn at(base: u64, n: usize) -> SegRingPlan {
+        SegRingPlan { base, n }
+    }
+    /// First tag of round `t`'s segment fan (`t < n - 1`); segment `i`
+    /// travels on `round_tag(t) + i`, `i <` [`Self::seg_fan`].
+    pub fn round_tag(&self, t: usize) -> u64 {
+        self.base + t as u64 * SEG_TAG_SPAN
+    }
+    /// Width of each round's segment fan.
+    pub fn seg_fan(&self) -> u64 {
+        SEG_TAG_SPAN
+    }
+}
+
+/// Segmented binomial tree (§3.5.1 fixed pipeline over tree edges): each
+/// tree round owns a `u64` size pre-message tag plus a
+/// [`SEG_TAG_SPAN`]-wide fan for the payload segments. Used by the
+/// hierarchical bcast / scatter / gather inter-leader trees, whose bundle
+/// sizes (unlike the flat frames) are not derivable by the receiver.
+///
+/// Layout within the span (relative to `base`, with
+/// `R = tree_rounds(n) + 1`):
+///
+/// ```text
+/// [0, R)                          per-round u64 size pre-messages
+/// [R + t*SEG_TAG_SPAN, +SEG_TAG_SPAN)  round-t segment fan
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegTreePlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Communicator size the rounds were sized for.
+    pub n: usize,
+}
+
+impl SegTreePlan {
+    fn rounds(n: usize) -> u64 {
+        tree_rounds(n) as u64 + 1
+    }
+    /// Tags to reserve for a segmented binomial tree over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        Self::rounds(n) * (1 + SEG_TAG_SPAN)
+    }
+    /// Bind a reserved `base` to a segmented tree over `n` ranks.
+    pub fn at(base: u64, n: usize) -> SegTreePlan {
+        SegTreePlan { base, n }
+    }
+    /// Tag of round `round`'s `u64` total-size pre-message.
+    pub fn size_tag(&self, round: usize) -> u64 {
+        self.base + round as u64
+    }
+    /// First tag of round `round`'s segment fan; segment `i` travels on
+    /// `step_tag(round) + i`, `i <` [`Self::seg_fan`].
+    pub fn step_tag(&self, round: usize) -> u64 {
+        self.base + Self::rounds(self.n) + round as u64 * SEG_TAG_SPAN
+    }
+    /// Width of each round's segment fan.
+    pub fn seg_fan(&self) -> u64 {
+        SEG_TAG_SPAN
+    }
+}
+
 /// Ring allgather with segmented rounds (§3.5.1): a count exchange, a
 /// compressed-size exchange, then `n - 1` ring rounds each owning a
 /// [`SEG_TAG_SPAN`]-wide fan for its pipeline segments.
@@ -199,8 +279,10 @@ impl HierAllreducePlan {
     }
 }
 
-/// Two-level allgather: member chunks up on one tag, compressed bundles
-/// around the leader ring, result broadcast down the intra-node tree.
+/// Two-level allgather: member chunks up on one tag, a bundle-size ring,
+/// segmented compressed bundles around the leader ring (§3.5.1 fixed
+/// pipeline, so leader frames overlap send/recv like the flat ring),
+/// result broadcast down the intra-node tree.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HierAllgatherPlan {
     /// First tag of the reserved slice.
@@ -212,7 +294,7 @@ pub struct HierAllgatherPlan {
 impl HierAllgatherPlan {
     /// Tags to reserve for a hierarchical allgather over `n` ranks.
     pub fn span(n: usize) -> u64 {
-        1 + RingPlan::span(n) + TreePlan::span(n)
+        1 + RingPlan::span(n) + SegRingPlan::span(n) + TreePlan::span(n)
     }
     /// Bind a reserved `base` to a hierarchical allgather over `n` ranks.
     pub fn at(base: u64, n: usize) -> HierAllgatherPlan {
@@ -222,19 +304,26 @@ impl HierAllgatherPlan {
     pub fn up_tag(&self) -> u64 {
         self.base
     }
-    /// Ring plan of the inter-leader bundle ring (rounds indexed by
-    /// node count; the span is sized for `n` ranks, an upper bound).
-    pub fn leader_ring(&self) -> RingPlan {
+    /// Ring plan of the inter-leader bundle-size exchange (the segmented
+    /// receiver needs each bundle's total bytes up front).
+    pub fn sizes_ring(&self) -> RingPlan {
         RingPlan::at(self.base + 1, self.n)
+    }
+    /// Segmented ring plan of the inter-leader bundle ring (rounds
+    /// indexed by node count; the span is sized for `n` ranks, an upper
+    /// bound).
+    pub fn leader_ring(&self) -> SegRingPlan {
+        SegRingPlan::at(self.base + 1 + RingPlan::span(self.n), self.n)
     }
     /// Tree plan of the intra-node result broadcast.
     pub fn down(&self) -> TreePlan {
-        TreePlan::at(self.base + 1 + RingPlan::span(self.n), self.n)
+        TreePlan::at(self.base + 1 + RingPlan::span(self.n) + SegRingPlan::span(self.n), self.n)
     }
 }
 
-/// Two-level bcast: an optional root → root-leader hop, a binomial tree
-/// over the leaders, then the intra-node tree down.
+/// Two-level bcast: an optional root → root-leader hop, a segmented
+/// binomial tree over the leaders (§3.5.1 pipeline per edge), then the
+/// intra-node tree down.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HierBcastPlan {
     /// First tag of the reserved slice.
@@ -246,7 +335,7 @@ pub struct HierBcastPlan {
 impl HierBcastPlan {
     /// Tags to reserve for a hierarchical bcast over `n` ranks.
     pub fn span(n: usize) -> u64 {
-        1 + 2 * TreePlan::span(n)
+        1 + SegTreePlan::span(n) + TreePlan::span(n)
     }
     /// Bind a reserved `base` to a hierarchical bcast over `n` ranks.
     pub fn at(base: u64, n: usize) -> HierBcastPlan {
@@ -256,19 +345,19 @@ impl HierBcastPlan {
     pub fn hop_tag(&self) -> u64 {
         self.base
     }
-    /// Tree plan of the inter-leader frame broadcast.
-    pub fn leader_tree(&self) -> TreePlan {
-        TreePlan::at(self.base + 1, self.n)
+    /// Segmented tree plan of the inter-leader frame broadcast.
+    pub fn leader_tree(&self) -> SegTreePlan {
+        SegTreePlan::at(self.base + 1, self.n)
     }
     /// Tree plan of the intra-node broadcast.
     pub fn down(&self) -> TreePlan {
-        TreePlan::at(self.base + 1 + TreePlan::span(self.n), self.n)
+        TreePlan::at(self.base + 1 + SegTreePlan::span(self.n), self.n)
     }
 }
 
 /// Two-level scatter: an optional root → root-leader bundle hop, subtree
-/// bundles down the leader tree, then one raw chunk per member on a
-/// single tag.
+/// bundles down the segmented leader tree, then one raw chunk per member
+/// on a single tag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HierScatterPlan {
     /// First tag of the reserved slice.
@@ -280,7 +369,7 @@ pub struct HierScatterPlan {
 impl HierScatterPlan {
     /// Tags to reserve for a hierarchical scatter over `n` ranks.
     pub fn span(n: usize) -> u64 {
-        1 + TreePlan::span(n) + 1
+        1 + SegTreePlan::span(n) + 1
     }
     /// Bind a reserved `base` to a hierarchical scatter over `n` ranks.
     pub fn at(base: u64, n: usize) -> HierScatterPlan {
@@ -290,14 +379,160 @@ impl HierScatterPlan {
     pub fn hop_tag(&self) -> u64 {
         self.base
     }
-    /// Tree plan of the inter-leader subtree-bundle forwarding.
-    pub fn leader_tree(&self) -> TreePlan {
-        TreePlan::at(self.base + 1, self.n)
+    /// Segmented tree plan of the inter-leader subtree-bundle forwarding.
+    pub fn leader_tree(&self) -> SegTreePlan {
+        SegTreePlan::at(self.base + 1, self.n)
     }
     /// Tag of the leader → member raw chunk down-link (one tag; each
     /// member's chunk is a distinct `(src, dst)` edge).
     pub fn down_tag(&self) -> u64 {
-        self.base + 1 + TreePlan::span(self.n)
+        self.base + 1 + SegTreePlan::span(self.n)
+    }
+}
+
+/// Two-level gather: one raw chunk per member up to its leader, merged
+/// per-member frame-record bundles up the segmented leader tree toward
+/// the root's leader, then an optional root-leader → root bundle hop
+/// over the fast tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierGatherPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Total communicator size.
+    pub n: usize,
+}
+
+impl HierGatherPlan {
+    /// Tags to reserve for a hierarchical gather over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        1 + SegTreePlan::span(n) + 1
+    }
+    /// Bind a reserved `base` to a hierarchical gather over `n` ranks.
+    pub fn at(base: u64, n: usize) -> HierGatherPlan {
+        HierGatherPlan { base, n }
+    }
+    /// Tag of the member → leader raw chunk up-link.
+    pub fn up_tag(&self) -> u64 {
+        self.base
+    }
+    /// Segmented tree plan of the inter-leader record-bundle gather.
+    pub fn leader_tree(&self) -> SegTreePlan {
+        SegTreePlan::at(self.base + 1, self.n)
+    }
+    /// Tag of the root-leader → non-leader-root bundle hop.
+    pub fn hop_tag(&self) -> u64 {
+        self.base + 1 + SegTreePlan::span(self.n)
+    }
+}
+
+/// Two-level reduce-scatter: intra-node raw up-links on one tag, a
+/// [`HIER_GROUP_SPAN`]-wide leader tier (flat ZCCL reduce-scatter over a
+/// group view), one raw redistribution message per ordered leader pair
+/// (the leader tier's L-chunks do not align with the n-way ownership
+/// chunks), then one raw owned chunk per member down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierReduceScatterPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Total communicator size (not the leader count).
+    pub n: usize,
+}
+
+impl HierReduceScatterPlan {
+    /// Tags to reserve for a hierarchical reduce-scatter over `n` ranks.
+    pub fn span(_n: usize) -> u64 {
+        3 + HIER_GROUP_SPAN
+    }
+    /// Bind a reserved `base` to a hierarchical reduce-scatter.
+    pub fn at(base: u64, n: usize) -> HierReduceScatterPlan {
+        HierReduceScatterPlan { base, n }
+    }
+    /// Tag of the member → leader raw partial up-link.
+    pub fn up_tag(&self) -> u64 {
+        self.base
+    }
+    /// Group-view tag base of the inter-leader tier.
+    pub fn group_base(&self) -> u64 {
+        self.base + 1
+    }
+    /// Tag of the leader ↔ leader raw chunk redistribution (one message
+    /// per ordered leader pair; distinct `(src, dst)` edges).
+    pub fn redist_tag(&self) -> u64 {
+        self.base + 1 + HIER_GROUP_SPAN
+    }
+    /// Tag of the leader → member raw owned-chunk down-link.
+    pub fn down_tag(&self) -> u64 {
+        self.base + 2 + HIER_GROUP_SPAN
+    }
+}
+
+/// Two-level alltoall: each member's full input raw up to its leader on
+/// one tag, pairwise compressed bundle lanes between the leaders (round
+/// `t` pairs leader `j` with leader `(j + t) % L`), then each member's
+/// assembled output raw down on one tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierAlltoallPlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Total communicator size.
+    pub n: usize,
+}
+
+impl HierAlltoallPlan {
+    /// Tags to reserve for a hierarchical alltoall over `n` ranks.
+    pub fn span(n: usize) -> u64 {
+        n as u64 + 2
+    }
+    /// Bind a reserved `base` to a hierarchical alltoall over `n` ranks.
+    pub fn at(base: u64, n: usize) -> HierAlltoallPlan {
+        HierAlltoallPlan { base, n }
+    }
+    /// Tag of the member → leader raw full-input up-link.
+    pub fn up_tag(&self) -> u64 {
+        self.base
+    }
+    /// Wire tag of pairwise leader round `t` (`1 <= t < L <= n`).
+    pub fn lane_tag(&self, t: usize) -> u64 {
+        self.base + 1 + t as u64
+    }
+    /// Tag of the leader → member raw assembled-output down-link.
+    pub fn down_tag(&self) -> u64 {
+        self.base + 1 + self.n as u64
+    }
+}
+
+/// Two-level reduce: intra-node raw up-links on one tag, a
+/// [`HIER_GROUP_SPAN`]-wide leader tier (flat ZCCL reduce over a group
+/// view toward the root's leader), then an optional root-leader → root
+/// raw hop over the fast tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierReducePlan {
+    /// First tag of the reserved slice.
+    pub base: u64,
+    /// Total communicator size (not the leader count).
+    pub n: usize,
+}
+
+impl HierReducePlan {
+    /// Tags to reserve for a hierarchical reduce over `n` ranks.
+    pub fn span(_n: usize) -> u64 {
+        2 + HIER_GROUP_SPAN
+    }
+    /// Bind a reserved `base` to a hierarchical reduce.
+    pub fn at(base: u64, n: usize) -> HierReducePlan {
+        HierReducePlan { base, n }
+    }
+    /// Tag of the member → leader raw partial up-link.
+    pub fn up_tag(&self) -> u64 {
+        self.base
+    }
+    /// Group-view tag base of the inter-leader tier.
+    pub fn group_base(&self) -> u64 {
+        self.base + 1
+    }
+    /// Tag of the root-leader → non-leader-root raw result hop.
+    pub fn hop_tag(&self) -> u64 {
+        self.base + 1 + HIER_GROUP_SPAN
     }
 }
 
@@ -326,13 +561,28 @@ mod tests {
             let a2a = AlltoallPlan::at(0, n);
             assert!(a2a.pair_tag(n.saturating_sub(1)) < a2a.sizes_ring().base + n as u64);
             assert_eq!(a2a.sizes_ring().round_tag(0), n as u64);
+
+            let sr = SegRingPlan::at(0, n);
+            if n >= 2 {
+                for t in 0..n - 2 {
+                    assert_eq!(sr.round_tag(t) + sr.seg_fan(), sr.round_tag(t + 1));
+                }
+                assert!(sr.round_tag(n - 2) + sr.seg_fan() <= SegRingPlan::span(n));
+            }
+            let stp = SegTreePlan::at(0, n);
+            let rounds = tree_rounds(n);
+            assert!(stp.size_tag(rounds) < stp.step_tag(0));
+            for t in 0..rounds {
+                assert_eq!(stp.step_tag(t) + stp.seg_fan(), stp.step_tag(t + 1));
+            }
+            assert_eq!(stp.step_tag(rounds) + stp.seg_fan(), SegTreePlan::span(n));
         }
     }
 
     #[test]
-    fn hier_spans_match_the_historical_three_reservation_layout() {
+    fn hier_spans_match_their_reservation_layout() {
         // The folded spans must reproduce the tag values the executors
-        // produced when they issued consecutive fresh_tags calls.
+        // derive — every accessor lands inside the span, in order.
         let n = 12;
         let h = HierAllreducePlan::at(100, n);
         assert_eq!(h.up_tag(), 100);
@@ -342,18 +592,49 @@ mod tests {
 
         let g = HierAllgatherPlan::at(7, n);
         assert_eq!(g.up_tag(), 7);
-        assert_eq!(g.leader_ring().base, 8);
-        assert_eq!(g.down().base, 8 + n as u64);
+        assert_eq!(g.sizes_ring().base, 8);
+        assert_eq!(g.leader_ring().base, 8 + n as u64);
+        assert_eq!(g.down().base, 8 + n as u64 + SegRingPlan::span(n));
+        assert_eq!(
+            HierAllgatherPlan::span(n),
+            1 + n as u64 + SegRingPlan::span(n) + TreePlan::span(n)
+        );
 
         let b = HierBcastPlan::at(3, n);
         assert_eq!(b.hop_tag(), 3);
         assert_eq!(b.leader_tree().base, 4);
-        assert_eq!(b.down().base, 4 + TreePlan::span(n));
+        assert_eq!(b.down().base, 4 + SegTreePlan::span(n));
 
         let s = HierScatterPlan::at(5, n);
         assert_eq!(s.hop_tag(), 5);
         assert_eq!(s.leader_tree().base, 6);
-        assert_eq!(s.down_tag(), 6 + TreePlan::span(n));
+        assert_eq!(s.down_tag(), 6 + SegTreePlan::span(n));
         assert_eq!(HierScatterPlan::span(n), s.down_tag() - 5 + 1);
+
+        let ga = HierGatherPlan::at(9, n);
+        assert_eq!(ga.up_tag(), 9);
+        assert_eq!(ga.leader_tree().base, 10);
+        assert_eq!(ga.hop_tag(), 10 + SegTreePlan::span(n));
+        assert_eq!(HierGatherPlan::span(n), ga.hop_tag() - 9 + 1);
+
+        let rs = HierReduceScatterPlan::at(11, n);
+        assert_eq!(rs.up_tag(), 11);
+        assert_eq!(rs.group_base(), 12);
+        assert_eq!(rs.redist_tag(), 12 + HIER_GROUP_SPAN);
+        assert_eq!(rs.down_tag(), 13 + HIER_GROUP_SPAN);
+        assert_eq!(HierReduceScatterPlan::span(n), rs.down_tag() - 11 + 1);
+
+        let a = HierAlltoallPlan::at(13, n);
+        assert_eq!(a.up_tag(), 13);
+        assert_eq!(a.lane_tag(1), 15);
+        assert_eq!(a.lane_tag(n - 1), 13 + n as u64);
+        assert_eq!(a.down_tag(), 14 + n as u64);
+        assert_eq!(HierAlltoallPlan::span(n), a.down_tag() - 13 + 1);
+
+        let r = HierReducePlan::at(17, n);
+        assert_eq!(r.up_tag(), 17);
+        assert_eq!(r.group_base(), 18);
+        assert_eq!(r.hop_tag(), 18 + HIER_GROUP_SPAN);
+        assert_eq!(HierReducePlan::span(n), r.hop_tag() - 17 + 1);
     }
 }

@@ -53,6 +53,9 @@ pub(crate) fn alltoall_with(
         out.extend_from_slice(input);
         return Ok(());
     }
+    if st.mode.algo == Algo::Hier {
+        return super::hier::alltoall_hier(comm, st, input, m, out);
+    }
     let plan = AlltoallPlan::at(comm.fresh_tags(AlltoallPlan::span(n)), n);
     let sizes_tag = plan.sizes_ring().base;
     let ranges = chunk_ranges(input.len(), n);

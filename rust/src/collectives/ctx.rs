@@ -27,6 +27,7 @@ use super::nonblocking::{
 };
 use super::progress::ProgressEngine;
 use super::{allgather, allreduce, alltoall, bcast, gather, reduce, reduce_scatter, scatter};
+use super::{bytes_to_f32s_into, f32s_to_bytes_into, fold_f32_bytes};
 use super::{Algo, Communicator, Mode, ReduceOp};
 use crate::analysis::plan::{AllgatherPlan, RingPlan, TreePlan};
 use crate::compress::{Compressor, CompressorKind, PipeFzLight};
@@ -170,10 +171,18 @@ pub struct CollState {
     /// [`crate::topology::Topology::flat`] — every rank its own node,
     /// degenerating to flat ZCCL.
     pub(crate) topo: Option<std::sync::Arc<crate::topology::Topology>>,
-    /// The intra-node tier's mode. Only [`Algo::Plain`] (raw `f32`
-    /// windows over the fast tier) is currently implemented — enforced by
-    /// [`CollCtx::set_intra_mode`].
+    /// The intra-node tier's mode. [`Algo::Plain`] (the default) ships
+    /// raw `f32` windows over the fast tier; a compressing mode makes
+    /// every fast-tier hop a single bounded-error compression (see
+    /// [`CollCtx::set_intra_mode`]).
     pub(crate) intra: Mode,
+    /// Codec for a compressing intra tier, built once when
+    /// [`CollCtx::set_intra_mode`] installs one; `None` means raw.
+    pub(crate) intra_codec: Option<Box<dyn Compressor>>,
+    /// Compression invocations on the intra tier — kept separate from
+    /// [`CollState::compress_calls`] so the "leaders-only" acceptance
+    /// counters stay meaningful when the fast tier compresses too.
+    pub(crate) intra_compress_calls: u64,
 }
 
 impl CollState {
@@ -193,6 +202,67 @@ impl CollState {
             compress_calls: 0,
             topo: None,
             intra: Mode::plain(),
+            intra_codec: None,
+            intra_compress_calls: 0,
+        }
+    }
+
+    /// Whether the intra tier compresses (a non-raw mode was installed
+    /// via [`CollCtx::set_intra_mode`]).
+    pub(crate) fn intra_compresses(&self) -> bool {
+        self.intra_codec.is_some()
+    }
+
+    /// Serialise `vals` for a fast-tier hop: one compressed frame under
+    /// a compressing intra mode (compress-once-per-hop — forwarded
+    /// verbatim, never recompressed), plain `f32` bytes otherwise.
+    pub(crate) fn intra_encode(&mut self, vals: &[f32], out: &mut Vec<u8>) -> Result<()> {
+        match self.intra_codec.as_deref_mut() {
+            Some(c) => {
+                self.intra_compress_calls += 1;
+                c.compress_into(vals, self.intra.eb, out)?;
+                Ok(())
+            }
+            None => {
+                f32s_to_bytes_into(vals, out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Decode a fast-tier hop's payload into `out` (cleared, then
+    /// filled): codec decompression under a compressing intra mode, a
+    /// plain `f32` deserialisation otherwise.
+    pub(crate) fn intra_decode_into(&mut self, bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        match self.intra_codec.as_deref_mut() {
+            Some(c) => {
+                c.decompress_into(bytes, out)?;
+                Ok(())
+            }
+            None => bytes_to_f32s_into(bytes, out).map(|_| ()),
+        }
+    }
+
+    /// Fold a fast-tier hop's payload into `acc` via `op`: pooled
+    /// decompress-then-fold under a compressing intra mode, an exact raw
+    /// fold otherwise.
+    pub(crate) fn intra_fold(&mut self, op: ReduceOp, bytes: &[u8], acc: &mut [f32]) -> Result<()> {
+        match self.intra_codec.as_deref_mut() {
+            Some(c) => {
+                let mut partial = self.pool.take_f32();
+                let cnt = c.decompress_into(bytes, &mut partial)?;
+                if cnt != acc.len() {
+                    return Err(crate::Error::invalid(format!(
+                        "intra fold: payload holds {cnt} values but accumulator holds {}",
+                        acc.len()
+                    )));
+                }
+                op.fold(acc, &partial);
+                self.pool.put_f32(partial);
+                Ok(())
+            }
+            None => fold_f32_bytes(op, bytes, acc).map(|_| ()),
         }
     }
 
@@ -375,19 +445,40 @@ impl<'c, 'a> CollCtx<'c, 'a> {
         self.state.topo.as_deref()
     }
 
-    /// Set the intra-node tier's mode. The two-level schedules currently
-    /// ship raw `f32` over the fast tier — only [`Algo::Plain`] is
-    /// accepted; a compressed intra tier (for slow shared-memory
-    /// transports) is future work.
+    /// Set the intra-node tier's mode. [`Mode::plain`] (the default)
+    /// ships raw `f32` over the fast tier, keeping it exact and the
+    /// hierarchical movement collectives bit-identical to flat ZCCL. A
+    /// compressing mode turns every fast-tier hop into a **single**
+    /// bounded-error compression — each payload is compressed once by
+    /// its producer and forwarded verbatim down the member binomial,
+    /// never recompressed by the leader — for transports whose
+    /// shared-memory tier is slow enough that the codec pays for itself
+    /// ([`crate::sim::calibrate::pick_intra_mode`] decides from the
+    /// two-tier cost model). A compressed intra tier makes the fast-tier
+    /// hops lossy (one extra error bound per hop); `Algo::Hier` cannot
+    /// nest as an intra mode.
     pub fn set_intra_mode(&mut self, intra: Mode) -> Result<()> {
-        if intra.compresses() {
+        if intra.algo == Algo::Hier {
             return Err(crate::Error::invalid(
-                "compressed intra-node tier not supported: only leaders compress \
-                 (use Mode::plain() for the fast tier)",
+                "the intra tier is a leaf of the hierarchy: Algo::Hier cannot nest",
             ));
         }
+        self.state.intra_codec = if intra.compresses() {
+            self.state.codec_builds += 1;
+            Some(intra.codec())
+        } else {
+            None
+        };
         self.state.intra = intra;
         Ok(())
+    }
+
+    /// Compression invocations on the intra tier (zero unless a
+    /// compressing mode was installed via [`CollCtx::set_intra_mode`]).
+    /// Tracked apart from [`CollCtx::compress_calls`] so the
+    /// leaders-only inter-tier counters stay meaningful.
+    pub fn intra_compress_calls(&self) -> u64 {
+        self.state.intra_compress_calls
     }
 
     /// The intra-node tier's mode (see [`CollCtx::set_intra_mode`]).
@@ -690,6 +781,22 @@ impl<'c, 'a> CollCtx<'c, 'a> {
             owned.extend_from_slice(input);
             let len = input.len();
             return Ok(self.park_done(Ok(CollOutput { values: owned, range: Some(0..len) })));
+        }
+        if self.state.mode.algo == Algo::Hier {
+            // Leader-synchronous two-level schedule: run it eagerly
+            // through the blocking path and park the finished result
+            // (same contract as the other Hier `i*` starts).
+            let mut owned = self.state.pool.take_f32();
+            let r = reduce_scatter::reduce_scatter_with(
+                self.comm,
+                &mut self.state,
+                input,
+                op,
+                &mut self.metrics,
+                &mut owned,
+            )
+            .map(|range| CollOutput { values: owned, range: Some(range) });
+            return Ok(self.park_done(r));
         }
         let plan = RingPlan::at(self.comm.try_fresh_tags(RingPlan::span(n))?, n);
         let rs = ReduceScatterSm::new(

@@ -61,6 +61,9 @@ pub(crate) fn gather_with(
     if n == 1 {
         return Ok(Some(my_chunk.to_vec()));
     }
+    if st.mode.algo == Algo::Hier {
+        return super::hier::gather_hier(comm, st, my_chunk, root, m);
+    }
     let plan = TreePlan::at(comm.fresh_tags(TreePlan::span(n)), n);
     // Gather runs the bcast tree in reverse: receive from "children"
     // (largest round first = deepest subtree last... order does not matter
@@ -77,7 +80,8 @@ pub(crate) fn gather_with(
     let mut records: Vec<(u32, usize, std::ops::Range<usize>)> = Vec::new();
     match st.mode.algo {
         Algo::Plain | Algo::Cprp2p => f32s_to_bytes_into(my_chunk, &mut stores[0]),
-        // Hier gathers like flat ZCCL (no hierarchical gather yet).
+        // Hier dispatched to its two-level schedule above — unreachable
+        // here, but kept in the compressed arm for match exhaustiveness.
         Algo::CColl | Algo::Zccl | Algo::Hier => {
             let t0 = std::time::Instant::now();
             st.compress_into(my_chunk, &mut stores[0])?;
@@ -208,7 +212,7 @@ fn release_stores(comm: &mut Communicator, st: &mut CollState, stores: Vec<Vec<u
 /// fields, so oversized records are an explicit error (same
 /// [`frame_u32`] guard the codec frame tables use), not a silent wrap —
 /// validated before `out` is touched.
-fn encode_records_into(records: &[(u32, &[u8])], out: &mut Vec<u8>) -> Result<()> {
+pub(crate) fn encode_records_into(records: &[(u32, &[u8])], out: &mut Vec<u8>) -> Result<()> {
     let count = frame_u32(records.len(), "gather record count")?;
     let mut sizes = Vec::with_capacity(records.len());
     for (_, p) in records {
@@ -229,7 +233,7 @@ fn encode_records_into(records: &[(u32, &[u8])], out: &mut Vec<u8>) -> Result<()
 
 /// Parse a record bundle **in place**: `(rank, payload range)` per
 /// record, ranges into `msg` (no copies).
-fn parse_records(msg: &[u8]) -> Result<Vec<(u32, std::ops::Range<usize>)>> {
+pub(crate) fn parse_records(msg: &[u8]) -> Result<Vec<(u32, std::ops::Range<usize>)>> {
     let mut pos = 0usize;
     let count = le::get_u32(msg, &mut pos)? as usize;
     let mut heads = Vec::with_capacity(count);

@@ -17,22 +17,42 @@
 //!   tiers. Each node's data is compressed exactly once, by its leader,
 //!   and every frame that crosses the slow tier travels leader↔leader.
 //!
-//! Per collective:
+//! Per collective — every non-barrier collective runs a two-level
+//! schedule (no flat fallbacks remain):
 //!
-//! | collective  | intra up            | inter (leaders)                   | intra down        |
-//! |-------------|---------------------|-----------------------------------|-------------------|
-//! | `allreduce` | raw partials → leader fold | flat ZCCL reduce-scatter + allgather | raw result, binomial |
-//! | `allgather` | raw chunks → leader | per-rank frame bundles over the ring | raw result, binomial |
-//! | `bcast`     | root's frame → its leader | frame over the binomial tree | raw payload, binomial |
-//! | `scatter`   | root's frame bundle → its leader | subtree bundles over the binomial tree ([`binomial_subtree_into`]) | raw chunk per member |
+//! | collective       | intra up                        | inter (leaders)                                                      | intra down              |
+//! |------------------|---------------------------------|----------------------------------------------------------------------|-------------------------|
+//! | `allreduce`      | raw partials → leader fold      | flat ZCCL reduce-scatter + allgather (group view)                    | raw result, binomial    |
+//! | `allgather`      | raw chunks → leader             | per-rank frame bundles over the **segmented** ring (§3.5.1)          | raw result, binomial    |
+//! | `bcast`          | root's frame → its leader       | frame over the **segmented** binomial tree                           | raw payload, binomial   |
+//! | `scatter`        | root's frame bundle → its leader| subtree bundles over the **segmented** tree ([`binomial_subtree_into`]) | raw chunk per member |
+//! | `gather`         | raw chunks → leader             | merged per-member frame-record bundles up the **segmented** tree     | bundle hop to a follower root |
+//! | `reduce_scatter` | raw partials → leader fold      | flat ZCCL reduce-scatter (group view) + raw chunk redistribution     | raw owned chunk per member |
+//! | `alltoall`       | raw full inputs → leader        | pairwise compressed per-chunk frame bundle lanes                     | raw assembled output per member |
+//! | `reduce`         | raw partials → leader fold      | flat ZCCL reduce toward the root's leader (group view)               | raw result hop to a follower root |
+//!
+//! The inter-leader bundle paths (allgather ring; bcast / scatter /
+//! gather trees) ship through [`super::send_segmented`] /
+//! [`super::recv_segmented_into`] with the §3.5.1 fixed pipeline segment
+//! ([`super::Mode::pipeline_bytes`];
+//! [`crate::sim::calibrate::pick_segment_bytes`] picks a per-tier value
+//! from the cost model), so consecutive leader segments overlap
+//! send/recv the way flat ZCCL rings already do.
 //!
 //! Because the leader tier reuses the flat code verbatim and per-rank
-//! frame boundaries are preserved, `allgather`, `bcast` and `scatter`
-//! return **bit-identical** results to flat [`Algo::Zccl`] on the same
-//! communicator, and `allreduce` is bit-identical to flat `Zccl` run over
-//! the leader group on the node-reduced inputs (and therefore to flat
-//! `Zccl` outright whenever every node holds one rank). The remaining
-//! collectives fall back to their flat `Zccl` form under `Hier`.
+//! frame boundaries are preserved, `allgather`, `bcast`, `scatter`,
+//! `gather` and `alltoall` return **bit-identical** results to flat
+//! [`Algo::Zccl`] on the same communicator, while `allreduce`,
+//! `reduce_scatter` and `reduce` are bit-identical to flat `Zccl` run
+//! over the leader group on the node-reduced inputs (and therefore to
+//! flat `Zccl` outright whenever every node holds one rank).
+//!
+//! The intra tier defaults to raw `f32` (exact). Installing a
+//! compressing intra mode ([`super::CollCtx::set_intra_mode`]) turns
+//! each fast-tier hop into a single bounded-error compression — once per
+//! hop, forwarded verbatim, never recompressed by the leader — for
+//! transports whose shared-memory tier is slow enough that the codec
+//! pays for itself ([`crate::sim::calibrate::pick_intra_mode`]).
 //!
 //! Without an installed topology ([`super::CollCtx::set_topology`]),
 //! [`Topology::flat`] is assumed and everything degenerates to flat ZCCL.
@@ -42,15 +62,20 @@ use std::sync::Arc;
 
 use super::allgather::allgather_chunks_with;
 use super::ctx::CollState;
+use super::gather::{encode_records_into, parse_records};
+use super::reduce::reduce_impl;
 use super::reduce_scatter::reduce_scatter_with;
 use super::scatter::{encode_bundle_into, parse_bundle};
 use super::{
-    bytes_to_f32s_into, bytes_to_f32s_into_slice, chunk_ranges, f32s_to_bytes_into,
-    fold_f32_bytes, Algo, Communicator, ReduceOp,
+    bytes_to_f32s_into_slice, chunk_ranges, f32s_to_bytes_into, recv_segmented_into,
+    send_segmented, Algo, Communicator, ReduceOp,
 };
 use crate::analysis::plan::{
-    HierAllgatherPlan, HierAllreducePlan, HierBcastPlan, HierScatterPlan, HIER_GROUP_SPAN,
+    HierAllgatherPlan, HierAllreducePlan, HierAlltoallPlan, HierBcastPlan, HierGatherPlan,
+    HierReducePlan, HierReduceScatterPlan, HierScatterPlan, HIER_GROUP_SPAN,
 };
+use crate::compress::bits::le;
+use crate::compress::fzlight::frame_u32;
 use crate::coordinator::{Metrics, Phase};
 use crate::topology::{
     binomial_bcast_in_group, binomial_subtree_into, ring_in_group, ring_recv_chunk,
@@ -62,17 +87,11 @@ use crate::{Error, Result};
 /// The topology the hierarchical schedules run over: the installed one
 /// (an `Arc` clone — the node tables are shared, not copied, so warm
 /// iterated calls stay allocation-light), validated against the
-/// communicator, or the flat (rank-per-node) degenerate default. Also
-/// holds the per-tier contract: the intra tier declared on the context
-/// must be raw — `set_intra_mode` enforces it at the API boundary and
-/// this re-check keeps crate-internal callers honest.
+/// communicator, or the flat (rank-per-node) degenerate default. The
+/// intra tier may be raw (default, exact) or a compressing mode
+/// installed via `set_intra_mode` — `set_intra_mode` already rejected
+/// the only invalid nesting ([`Algo::Hier`] inside the intra tier).
 fn resolve_topo(st: &mut CollState, n: usize) -> Result<Arc<Topology>> {
-    if st.intra.compresses() {
-        return Err(Error::invalid(
-            "hierarchical schedules ship raw f32 on the intra tier; \
-             a compressed intra mode is not supported",
-        ));
-    }
     if st.topo.is_none() {
         // Cache the degenerate rank-per-node default so iterated calls
         // without an installed topology stay allocation-light too.
@@ -104,11 +123,13 @@ fn resolve_topo(st: &mut CollState, n: usize) -> Result<Arc<Topology>> {
     Ok(topo)
 }
 
-/// Intra-node raw broadcast of the leader's `out` to every member over
-/// the fast tier (binomial over the member group, rooted at the leader).
-/// On entry the leader's `out` holds the values; on exit every member's
-/// `out` holds them (bit-identical — the wire is a plain `f32`
-/// serialisation).
+/// Intra-node broadcast of the leader's `out` to every member over the
+/// fast tier (binomial over the member group, rooted at the leader). On
+/// entry the leader's `out` holds the values; on exit every member's
+/// `out` holds them. With the default raw intra mode the wire is a plain
+/// `f32` serialisation (bit-identical); a compressing intra mode encodes
+/// **once** at the leader and the frame is forwarded verbatim down the
+/// member binomial — one bounded-error hop, never recompressed.
 fn intra_bcast_result(
     comm: &mut Communicator,
     st: &mut CollState,
@@ -124,7 +145,7 @@ fn intra_bcast_result(
     let (recv_step, send_steps) = binomial_bcast_in_group(members, local_idx, 0);
     let (buf, pooled) = if local_idx == 0 {
         let mut b = st.pool.take_bytes();
-        f32s_to_bytes_into(out, &mut b);
+        st.intra_encode(out, &mut b)?;
         (b, true)
     } else {
         let step = recv_step.expect("non-leader member receives");
@@ -142,8 +163,7 @@ fn intra_bcast_result(
         m.bytes_sent += buf.len() as u64;
     }
     if local_idx != 0 {
-        out.resize(buf.len() / 4, 0.0);
-        bytes_to_f32s_into_slice(&buf, out.as_mut_slice())?;
+        st.intra_decode_into(&buf, out)?;
     }
     if pooled {
         st.pool.put_bytes(buf);
@@ -151,6 +171,70 @@ fn intra_bcast_result(
         comm.t.recycle(buf);
     }
     Ok(())
+}
+
+/// Receive one intra-tier (fast-tier) payload and decode it into `out`
+/// per the installed intra mode (raw `f32` by default).
+fn intra_recv_into(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    from: usize,
+    tag: u64,
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let mut got = comm.t.lease();
+    let t0 = std::time::Instant::now();
+    comm.t.recv_into(from, tag, &mut got)?;
+    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+    m.bytes_recv += got.len() as u64;
+    st.intra_decode_into(&got, out)?;
+    comm.t.recycle(got);
+    Ok(())
+}
+
+/// Encode `vals` per the installed intra mode into a transport-leased
+/// buffer and ship it to `to` over the fast tier (pooled one-shot send).
+fn intra_send(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    to: usize,
+    tag: u64,
+    vals: &[f32],
+    m: &mut Metrics,
+) -> Result<()> {
+    let mut wire = comm.t.lease();
+    st.intra_encode(vals, &mut wire)?;
+    m.bytes_sent += wire.len() as u64;
+    let t0 = std::time::Instant::now();
+    comm.t.send_pooled(to, tag, wire)?;
+    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Send one `u64` size pre-message (little-endian) — the segmented
+/// receiver on a bundle path needs the total byte count up front.
+fn send_size(comm: &mut Communicator, to: usize, tag: u64, size: u64, m: &mut Metrics) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    comm.t.send(to, tag, &size.to_le_bytes())?;
+    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+    m.bytes_sent += 8;
+    Ok(())
+}
+
+/// Receive one `u64` size pre-message sent by [`send_size`].
+fn recv_size(comm: &mut Communicator, from: usize, tag: u64, m: &mut Metrics) -> Result<u64> {
+    let mut got = comm.t.lease();
+    let t0 = std::time::Instant::now();
+    comm.t.recv_into(from, tag, &mut got)?;
+    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+    m.bytes_recv += got.len() as u64;
+    let bytes: [u8; 8] = got
+        .as_slice()
+        .try_into()
+        .map_err(|_| Error::corrupt(format!("size pre-message holds {} bytes, want 8", got.len())))?;
+    comm.t.recycle(got);
+    Ok(u64::from_le_bytes(bytes))
 }
 
 /// The inter tier of the hierarchical allreduce: the unchanged flat ZCCL
@@ -224,7 +308,7 @@ pub(crate) fn allreduce_hier(
             m.add(Phase::Comm, t0.elapsed().as_secs_f64());
             m.bytes_recv += wire.len() as u64;
             let t0 = std::time::Instant::now();
-            fold_f32_bytes(op, &wire, &mut acc)?;
+            st.intra_fold(op, &wire, &mut acc)?;
             m.add(Phase::Compute, t0.elapsed().as_secs_f64());
         }
         comm.t.recycle(wire);
@@ -244,17 +328,12 @@ pub(crate) fn allreduce_hier(
         }
         st.pool.put_f32(acc);
     } else {
-        // Follower: raw partial up (pooled zero-copy send), raw result
-        // down; the codec never runs here.
-        let mut up = comm.t.lease();
-        f32s_to_bytes_into(input, &mut up);
-        m.bytes_sent += up.len() as u64;
-        let t0 = std::time::Instant::now();
-        comm.t.send_pooled(topo.leader_of(me), up_tag, up)?;
-        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        // Follower: partial up (pooled one-shot send), result down; the
+        // inter-tier codec never runs here (the intra codec may).
+        intra_send(comm, st, topo.leader_of(me), up_tag, input, m)?;
     }
 
-    // (3) Intra tier: the full result, raw, down the member binomial.
+    // (3) Intra tier: the full result down the member binomial.
     intra_bcast_result(comm, st, members, local_idx, down_base, m, out)
 }
 
@@ -291,13 +370,8 @@ pub(crate) fn allgather_hier(
     m.raw_bytes += (my_chunk.len() * 4) as u64;
 
     if local_idx != 0 {
-        // Follower: raw chunk up, raw gathered vector down.
-        let mut up = comm.t.lease();
-        f32s_to_bytes_into(my_chunk, &mut up);
-        m.bytes_sent += up.len() as u64;
-        let t0 = std::time::Instant::now();
-        comm.t.send_pooled(topo.leader_of(me), up_tag, up)?;
-        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        // Follower: chunk up, gathered vector down (fast tier).
+        intra_send(comm, st, topo.leader_of(me), up_tag, my_chunk, m)?;
         return intra_bcast_result(comm, st, members, local_idx, down_base, m, out);
     }
 
@@ -320,8 +394,7 @@ pub(crate) fn allgather_hier(
                 comm.t.recv_into(mr, up_tag, &mut wire)?;
                 m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += wire.len() as u64;
-                vals.clear();
-                bytes_to_f32s_into(&wire, &mut vals)?;
+                st.intra_decode_into(&wire, &mut vals)?;
                 let t0 = std::time::Instant::now();
                 st.compress_into(&vals, &mut store)?;
                 m.add(Phase::Compress, t0.elapsed().as_secs_f64());
@@ -333,8 +406,14 @@ pub(crate) fn allgather_hier(
     }
 
     // (2) Ring the node bundles around the leader tier (compressed frames
-    //     forwarded verbatim, leader↔leader only).
+    //     forwarded verbatim, leader↔leader only). Each round leads with
+    //     a u64 bundle-size pre-message (the segmented receiver needs the
+    //     total up front) and ships the bundle as §3.5.1 fixed pipeline
+    //     segments on the round's tag fan, so consecutive slow-tier
+    //     segments overlap send/recv exactly like the flat ZCCL rings.
     let lring = ring_in_group(topo.leaders(), node);
+    let sizes_ring = plan.sizes_ring();
+    let seg = st.mode.pipeline_bytes;
     let mut bundles: Vec<Option<Vec<u8>>> = vec![None; nnodes];
     {
         let mut mine = st.pool.take_bytes();
@@ -346,13 +425,16 @@ pub(crate) fn allgather_hier(
     for t in 0..nnodes - 1 {
         let s = ring_send_chunk(node, t, nnodes);
         let r = ring_recv_chunk(node, t, nnodes);
-        let tag = lring_plan.round_tag(t);
-        let send_buf = bundles[s].as_ref().expect("ring schedule owns sent bundle");
+        let send_buf = bundles[s].take().expect("ring schedule owns sent bundle");
+        send_size(comm, lring.next, sizes_ring.round_tag(t), send_buf.len() as u64, m)?;
         let t0 = std::time::Instant::now();
-        comm.t.send(lring.next, tag, send_buf)?;
-        m.bytes_sent += send_buf.len() as u64;
+        m.bytes_sent += send_segmented(comm.t, lring.next, lring_plan.round_tag(t), &send_buf, seg)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        bundles[s] = Some(send_buf);
+        let total = recv_size(comm, lring.prev, sizes_ring.round_tag(t), m)? as usize;
         let mut got = comm.t.lease();
-        comm.t.recv_into(lring.prev, tag, &mut got)?;
+        let t0 = std::time::Instant::now();
+        recv_segmented_into(comm.t, lring.prev, lring_plan.round_tag(t), total, seg, &mut got)?;
         m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         m.bytes_recv += got.len() as u64;
         bundles[r] = Some(got);
@@ -449,7 +531,9 @@ pub(crate) fn bcast_hier(
 
     if local_idx == 0 {
         // Leader: obtain the frame, forward it verbatim down the leader
-        // tree (slow tier), decode exactly once, fan out raw.
+        // tree (slow tier, segmented §3.5.1 per edge), decode exactly
+        // once, fan out over the fast tier.
+        let seg = st.mode.pipeline_bytes;
         let (recv_step, send_steps) = binomial_bcast_in_group(topo.leaders(), node, root_node);
         let (frame, pooled) = match own_frame {
             Some(f) => (f, true),
@@ -458,20 +542,31 @@ pub(crate) fn bcast_hier(
                 let t0 = std::time::Instant::now();
                 if node == root_node {
                     comm.t.recv_into(root, hop_tag, &mut got)?;
+                    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 } else {
                     let step = recv_step.expect("non-root-node leader receives");
-                    comm.t.recv_into(step.peer, ltree.step_tag(step.round), &mut got)?;
+                    let total =
+                        recv_size(comm, step.peer, ltree.size_tag(step.round), m)? as usize;
+                    let t0 = std::time::Instant::now();
+                    recv_segmented_into(
+                        comm.t,
+                        step.peer,
+                        ltree.step_tag(step.round),
+                        total,
+                        seg,
+                        &mut got,
+                    )?;
+                    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 }
-                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
                 (got, false)
             }
         };
         for s in send_steps {
+            send_size(comm, s.peer, ltree.size_tag(s.round), frame.len() as u64, m)?;
             let t0 = std::time::Instant::now();
-            comm.t.send(s.peer, ltree.step_tag(s.round), &frame)?;
+            m.bytes_sent += send_segmented(comm.t, s.peer, ltree.step_tag(s.round), &frame, seg)?;
             m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-            m.bytes_sent += frame.len() as u64;
         }
         let cnt = crate::compress::checked_count(&frame)?;
         let mut out = vec![0.0f32; cnt];
@@ -568,6 +663,7 @@ pub(crate) fn scatter_hier(
     if local_idx == 0 {
         // Leader: obtain the bundle covering my node subtree, forward
         // each child leader its sub-bundle, deliver member chunks raw.
+        let seg = st.mode.pipeline_bytes;
         let mut my_ranks = Vec::new();
         subtree_ranks(&topo, root_node, node, &mut my_ranks);
         let (recv_step, send_steps) = binomial_bcast_in_group(topo.leaders(), node, root_node);
@@ -575,20 +671,32 @@ pub(crate) fn scatter_hier(
             Some((s, f, t)) => (s, f, t, true),
             None => {
                 let mut got = comm.t.lease();
-                let t0 = std::time::Instant::now();
                 if node == root_node {
+                    let t0 = std::time::Instant::now();
                     comm.t.recv_into(root, hop_tag, &mut got)?;
+                    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 } else {
                     let step = recv_step.expect("non-root-node leader receives");
-                    comm.t.recv_into(step.peer, ltree.step_tag(step.round), &mut got)?;
+                    let total =
+                        recv_size(comm, step.peer, ltree.size_tag(step.round), m)? as usize;
+                    let t0 = std::time::Instant::now();
+                    recv_segmented_into(
+                        comm.t,
+                        step.peer,
+                        ltree.step_tag(step.round),
+                        total,
+                        seg,
+                        &mut got,
+                    )?;
+                    m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 }
-                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
                 m.bytes_recv += got.len() as u64;
                 let (total, ranges) = parse_bundle(&got, my_ranks.len())?;
                 (got, ranges, total, false)
             }
         };
         let mut child_ranks = Vec::new();
+        let mut wire = st.pool.take_bytes();
         for s in send_steps {
             let child_node = topo.node_of(s.peer);
             subtree_ranks(&topo, root_node, child_node, &mut child_ranks);
@@ -600,15 +708,14 @@ pub(crate) fn scatter_hier(
                     &store[frames[idx].clone()]
                 })
                 .collect();
-            // One-shot bundle: assemble straight in a transport-leased
-            // wire buffer and send it by value — no packet_from copy.
-            let mut wire = comm.t.lease();
+            wire.clear();
             encode_bundle_into(total, &parts, &mut wire)?;
+            send_size(comm, s.peer, ltree.size_tag(s.round), wire.len() as u64, m)?;
             let t0 = std::time::Instant::now();
-            m.bytes_sent += wire.len() as u64;
-            comm.t.send_pooled(s.peer, ltree.step_tag(s.round), wire)?;
+            m.bytes_sent += send_segmented(comm.t, s.peer, ltree.step_tag(s.round), &wire, seg)?;
             m.add(Phase::Comm, t0.elapsed().as_secs_f64());
         }
+        st.pool.put_bytes(wire);
 
         // Deliver: my node's ranks lead the enumeration (BFS starts at
         // the own node). Decode each member frame once — validated
@@ -638,12 +745,7 @@ pub(crate) fn scatter_hier(
                 st.decode_into_slice(frame, &mut vals)
                     .map_err(|e| Error::corrupt(format!("hier scatter rank {mr}: {e}")))?;
                 m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
-                let mut raw = comm.t.lease();
-                f32s_to_bytes_into(&vals, &mut raw);
-                m.bytes_sent += raw.len() as u64;
-                let t0 = std::time::Instant::now();
-                comm.t.send_pooled(mr, down_tag, raw)?;
-                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                intra_send(comm, st, mr, down_tag, &vals, m)?;
             }
         }
         st.pool.put_f32(vals);
@@ -654,16 +756,630 @@ pub(crate) fn scatter_hier(
         }
         Ok(own)
     } else {
-        // Member (a follower root rejoins here): raw chunk from the
+        // Member (a follower root rejoins here): its chunk from the
         // leader over the fast tier.
-        let mut got = comm.t.lease();
-        let t0 = std::time::Instant::now();
-        comm.t.recv_into(topo.leader_of(me), down_tag, &mut got)?;
-        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
-        m.bytes_recv += got.len() as u64;
-        let mut out = vec![0.0f32; got.len() / 4];
-        bytes_to_f32s_into_slice(&got, &mut out)?;
-        comm.t.recycle(got);
+        let mut out = Vec::new();
+        intra_recv_into(comm, st, topo.leader_of(me), down_tag, m, &mut out)?;
         Ok(out)
     }
+}
+
+/// Intersection of two index ranges (empty — `start..start` — when they
+/// are disjoint).
+fn intersect(a: &Range<usize>, b: &Range<usize>) -> Range<usize> {
+    let start = a.start.max(b.start);
+    let end = a.end.min(b.end);
+    start..end.max(start)
+}
+
+/// Hierarchical reduce-scatter: intra star-reduce onto the leader (fast
+/// tier), flat ZCCL reduce-scatter over the leader group on the node
+/// partials, raw redistribution of the leader tier's L-chunks onto the
+/// n-way ownership chunks, then each member's owned chunk down the fast
+/// tier. The L-chunks do not align with the n-way chunks, so every
+/// ordered leader pair exchanges exactly **one** (possibly empty)
+/// redistribution message whose piece list both sides derive from chunk
+/// arithmetic — the message graph stays payload-length independent.
+/// Results are bit-identical to flat ZCCL reduce-scatter run over the
+/// leader group on the node partials (sliced at the n-way ownership
+/// boundaries), and no [`ReduceOp::finish`] runs (mirroring flat).
+pub(crate) fn reduce_scatter_hier(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    op: ReduceOp,
+    m: &mut Metrics,
+    owned: &mut Vec<f32>,
+) -> Result<Range<usize>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let topo = resolve_topo(st, n)?;
+    let plan = HierReduceScatterPlan::at(comm.fresh_tags(HierReduceScatterPlan::span(n)), n);
+    let node = topo.node_of(me);
+    let members = topo.members(node);
+    let local_idx = topo.local_index(me);
+    let nnodes = topo.nodes();
+    let ranges = chunk_ranges(input.len(), n);
+    let own = (me + 1) % n;
+    m.raw_bytes += (input.len() * 4) as u64;
+
+    if local_idx != 0 {
+        // Follower: partial up, owned chunk down — fast tier only.
+        intra_send(comm, st, topo.leader_of(me), plan.up_tag(), input, m)?;
+        intra_recv_into(comm, st, topo.leader_of(me), plan.down_tag(), m, owned)?;
+        return Ok(ranges[own].clone());
+    }
+
+    // (1) Intra tier: fold member partials in ascending member order —
+    //     deterministic, same fold order as the hierarchical allreduce.
+    let mut acc = st.pool.take_f32();
+    acc.extend_from_slice(input);
+    {
+        let mut wire = comm.t.lease();
+        for &mr in &members[1..] {
+            let t0 = std::time::Instant::now();
+            comm.t.recv_into(mr, plan.up_tag(), &mut wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            m.bytes_recv += wire.len() as u64;
+            let t0 = std::time::Instant::now();
+            st.intra_fold(op, &wire, &mut acc)?;
+            m.add(Phase::Compute, t0.elapsed().as_secs_f64());
+        }
+        comm.t.recycle(wire);
+    }
+
+    // (2) Inter tier: flat ZCCL reduce-scatter over the leader group on
+    //     the node partials — group rank j ends up owning L-chunk
+    //     (j + 1) % L of the fully reduced vector.
+    let lranges = chunk_ranges(input.len(), nnodes);
+    let mut lchunk = st.pool.take_f32();
+    let my_lrange = if nnodes == 1 {
+        lchunk.extend_from_slice(&acc);
+        0..input.len()
+    } else {
+        let saved = st.mode.algo;
+        st.mode.algo = Algo::Zccl;
+        let r = (|| -> Result<Range<usize>> {
+            let mut gt = GroupTransport::new(&mut *comm.t, topo.leaders(), plan.group_base())?;
+            let mut gc = Communicator::new(&mut gt);
+            reduce_scatter_with(&mut gc, st, &acc, op, m, &mut lchunk)
+        })();
+        st.mode.algo = saved;
+        r?
+    };
+    st.pool.put_f32(acc);
+
+    // (3) Redistribution onto the n-way ownership chunks. `full` is only
+    //     read at my own members' chunks, all of which are filled either
+    //     locally or by an incoming piece.
+    let owner_node = |c: usize| topo.node_of((c + n - 1) % n);
+    let mut full = st.pool.take_f32();
+    full.resize(input.len(), 0.0);
+    for c in 0..n {
+        if owner_node(c) == node {
+            let inter = intersect(&my_lrange, &ranges[c]);
+            if !inter.is_empty() {
+                full[inter.clone()].copy_from_slice(
+                    &lchunk[inter.start - my_lrange.start..inter.end - my_lrange.start],
+                );
+            }
+        }
+    }
+    if nnodes > 1 {
+        let leaders = topo.leaders();
+        for k in 0..nnodes {
+            if k == node {
+                continue;
+            }
+            let mut wire = comm.t.lease();
+            let mut count = 0u32;
+            le::put_u32(&mut wire, 0); // piece count, patched below
+            for c in 0..n {
+                if owner_node(c) != k {
+                    continue;
+                }
+                let inter = intersect(&my_lrange, &ranges[c]);
+                if inter.is_empty() {
+                    continue;
+                }
+                le::put_u32(&mut wire, frame_u32(c, "redist chunk index")?);
+                le::put_u32(&mut wire, frame_u32(inter.len() * 4, "redist piece size")?);
+                f32s_to_bytes_into(
+                    &lchunk[inter.start - my_lrange.start..inter.end - my_lrange.start],
+                    &mut wire,
+                );
+                count += 1;
+            }
+            wire[0..4].copy_from_slice(&count.to_le_bytes());
+            m.bytes_sent += wire.len() as u64;
+            let t0 = std::time::Instant::now();
+            comm.t.send_pooled(leaders[k], plan.redist_tag(), wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        }
+        let mut wire = comm.t.lease();
+        for k in 0..nnodes {
+            if k == node {
+                continue;
+            }
+            let t0 = std::time::Instant::now();
+            comm.t.recv_into(leaders[k], plan.redist_tag(), &mut wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            m.bytes_recv += wire.len() as u64;
+            let sender_lrange = &lranges[(k + 1) % nnodes];
+            let mut pos = 0usize;
+            let count = le::get_u32(&wire, &mut pos)?;
+            for _ in 0..count {
+                let c = le::get_u32(&wire, &mut pos)? as usize;
+                let bytes = le::get_u32(&wire, &mut pos)? as usize;
+                if c >= n {
+                    return Err(Error::corrupt(format!("redist chunk {c} out of {n}")));
+                }
+                let inter = intersect(sender_lrange, &ranges[c]);
+                if owner_node(c) != node || inter.len() * 4 != bytes {
+                    return Err(Error::corrupt(format!(
+                        "redist piece for chunk {c} from leader {k}: {bytes} bytes, \
+                         expected {} for this pair",
+                        inter.len() * 4
+                    )));
+                }
+                let end = pos + bytes;
+                if end > wire.len() {
+                    return Err(Error::corrupt("redist piece past end"));
+                }
+                bytes_to_f32s_into_slice(&wire[pos..end], &mut full[inter])?;
+                pos = end;
+            }
+        }
+        comm.t.recycle(wire);
+    }
+    st.pool.put_f32(lchunk);
+
+    // (4) Intra tier: each member's owned chunk down the fast tier.
+    for &mr in &members[1..] {
+        let chunk = ranges[(mr + 1) % n].clone();
+        intra_send(comm, st, mr, plan.down_tag(), &full[chunk], m)?;
+    }
+    owned.extend_from_slice(&full[ranges[own].clone()]);
+    st.pool.put_f32(full);
+    Ok(ranges[own].clone())
+}
+
+/// Hierarchical gather: members ship raw chunks to their leader (fast
+/// tier); the leader compresses each member chunk **individually** (the
+/// same leaf frames flat ZCCL would produce) and the leaders merge
+/// per-member frame-record bundles up the segmented binomial tree toward
+/// the root's leader (slow tier, §3.5.1 pipeline per edge). A follower
+/// root receives the full bundle from its leader over the fast tier.
+/// Results are bit-identical to flat ZCCL.
+pub(crate) fn gather_hier(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    my_chunk: &[f32],
+    root: usize,
+    m: &mut Metrics,
+) -> Result<Option<Vec<f32>>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let topo = resolve_topo(st, n)?;
+    let plan = HierGatherPlan::at(comm.fresh_tags(HierGatherPlan::span(n)), n);
+    let ltree = plan.leader_tree();
+    let seg = st.mode.pipeline_bytes;
+
+    let node = topo.node_of(me);
+    let members = topo.members(node);
+    let local_idx = topo.local_index(me);
+    let root_node = topo.node_of(root);
+    let root_leader = topo.leader_of(root);
+    m.raw_bytes += (my_chunk.len() * 4) as u64;
+
+    if local_idx != 0 {
+        // Follower: chunk up the fast tier; a follower root additionally
+        // receives the assembled bundle back from its leader.
+        intra_send(comm, st, topo.leader_of(me), plan.up_tag(), my_chunk, m)?;
+        if me != root {
+            return Ok(None);
+        }
+        let mut bundle = comm.t.lease();
+        let t0 = std::time::Instant::now();
+        comm.t.recv_into(root_leader, plan.hop_tag(), &mut bundle)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += bundle.len() as u64;
+        let recs = parse_records(&bundle)?;
+        let out = assemble_gather_records(st, &bundle, recs, n, m)?;
+        comm.t.recycle(bundle);
+        return Ok(Some(out));
+    }
+
+    // Leader: collect member chunks raw and compress each one
+    // individually — one frame per rank, same boundaries as flat.
+    let mut store = st.pool.take_bytes();
+    let mut records: Vec<(u32, usize, Range<usize>)> = Vec::new();
+    let mut stores: Vec<Vec<u8>> = Vec::new();
+    {
+        let mut wire = comm.t.lease();
+        let mut vals = st.pool.take_f32();
+        for (k, &mr) in members.iter().enumerate() {
+            let start = store.len();
+            if k == 0 {
+                let t0 = std::time::Instant::now();
+                st.compress_into(my_chunk, &mut store)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            } else {
+                let t0 = std::time::Instant::now();
+                comm.t.recv_into(mr, plan.up_tag(), &mut wire)?;
+                m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+                m.bytes_recv += wire.len() as u64;
+                st.intra_decode_into(&wire, &mut vals)?;
+                let t0 = std::time::Instant::now();
+                st.compress_into(&vals, &mut store)?;
+                m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            }
+            records.push((mr as u32, 0, start..store.len()));
+        }
+        st.pool.put_f32(vals);
+        comm.t.recycle(wire);
+    }
+
+    // Merge child leaders' bundles (reverse round order, same drain
+    // order as the flat gather) — records reference the arrival buffers
+    // in place.
+    let (parent_step, child_steps) = binomial_bcast_in_group(topo.leaders(), node, root_node);
+    for s in child_steps.iter().rev() {
+        let total = recv_size(comm, s.peer, ltree.size_tag(s.round), m)? as usize;
+        let mut msg = comm.t.lease();
+        let t0 = std::time::Instant::now();
+        recv_segmented_into(comm.t, s.peer, ltree.step_tag(s.round), total, seg, &mut msg)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += msg.len() as u64;
+        let recs = parse_records(&msg)?;
+        let idx = stores.len() + 1;
+        records.extend(recs.into_iter().map(|(rank, r)| (rank, idx, r)));
+        stores.push(msg);
+    }
+
+    let result = if node == root_node {
+        // I am the root's leader and hold every record.
+        if me == root {
+            // Re-range the records against one merged buffer so the
+            // shared assembly path sees a single base.
+            let parts: Vec<(u32, &[u8])> = records
+                .iter()
+                .map(|(rank, si, r)| (*rank, record_bytes(&store, &stores, *si, r)))
+                .collect();
+            let mut merged = st.pool.take_bytes();
+            encode_records_into(&parts, &mut merged)?;
+            let recs = parse_records(&merged)?;
+            let out = assemble_gather_records(st, &merged, recs, n, m)?;
+            st.pool.put_bytes(merged);
+            Some(out)
+        } else {
+            // Forward the whole bundle to the follower root over the
+            // fast tier (monolithic — one cheap hop).
+            let parts: Vec<(u32, &[u8])> = records
+                .iter()
+                .map(|(rank, si, r)| {
+                    (*rank, record_bytes(&store, &stores, *si, r))
+                })
+                .collect();
+            let mut wire = comm.t.lease();
+            encode_records_into(&parts, &mut wire)?;
+            m.bytes_sent += wire.len() as u64;
+            let t0 = std::time::Instant::now();
+            comm.t.send_pooled(root, plan.hop_tag(), wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            None
+        }
+    } else {
+        // Interior / leaf leader: merged bundle up the segmented tree.
+        let step = parent_step.expect("non-root-node leader has a parent");
+        let parts: Vec<(u32, &[u8])> = records
+            .iter()
+            .map(|(rank, si, r)| (*rank, record_bytes(&store, &stores, *si, r)))
+            .collect();
+        let mut wire = st.pool.take_bytes();
+        encode_records_into(&parts, &mut wire)?;
+        send_size(comm, step.peer, ltree.size_tag(step.round), wire.len() as u64, m)?;
+        let t0 = std::time::Instant::now();
+        m.bytes_sent += send_segmented(comm.t, step.peer, ltree.step_tag(step.round), &wire, seg)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        st.pool.put_bytes(wire);
+        None
+    };
+    st.pool.put_bytes(store);
+    for msg in stores {
+        comm.t.recycle(msg);
+    }
+    Ok(result)
+}
+
+/// Resolve a gather record to its payload bytes: store index 0 is the
+/// leader's own frame store, `i + 1` is arrival buffer `i`.
+fn record_bytes<'a>(
+    store: &'a [u8],
+    stores: &'a [Vec<u8>],
+    si: usize,
+    r: &Range<usize>,
+) -> &'a [u8] {
+    if si == 0 {
+        &store[r.clone()]
+    } else {
+        &stores[si - 1][r.clone()]
+    }
+}
+
+/// Sort `(rank, payload range)` records by rank, size the output from
+/// the frame headers and placement-decode every record into its final
+/// window — the flat gather's root assembly, shared by the root-leader
+/// and follower-root paths.
+fn assemble_gather_records(
+    st: &mut CollState,
+    bundle: &[u8],
+    mut recs: Vec<(u32, Range<usize>)>,
+    n: usize,
+    m: &mut Metrics,
+) -> Result<Vec<f32>> {
+    if recs.len() != n {
+        return Err(Error::corrupt(format!(
+            "hier gather assembled {} records for {n} ranks",
+            recs.len()
+        )));
+    }
+    recs.sort_by_key(|(rank, _)| *rank);
+    let mut counts = Vec::with_capacity(recs.len());
+    for (_, r) in &recs {
+        counts.push(crate::compress::checked_count(&bundle[r.clone()])?);
+    }
+    let mut out = vec![0.0f32; counts.iter().sum()];
+    let mut off = 0usize;
+    for ((rank, r), &cnt) in recs.iter().zip(&counts) {
+        let t0 = std::time::Instant::now();
+        st.decode_into_slice(&bundle[r.clone()], &mut out[off..off + cnt])
+            .map_err(|e| Error::corrupt(format!("hier gather rank {rank}: {e}")))?;
+        m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+        off += cnt;
+    }
+    Ok(out)
+}
+
+/// Hierarchical alltoall: every member ships its full input raw to its
+/// leader (fast tier); the leader compresses each (source member →
+/// destination rank) chunk exactly once and the leaders exchange bundle
+/// lanes pairwise (round `t` pairs leader `j` with leader `(j + t) % L`,
+/// slow tier, leader↔leader only); the destination leader decodes every
+/// frame addressed to its node — including the node-local lanes, so
+/// `D∘C` is applied to every chunk exactly as flat ZCCL applies it — and
+/// hands each member its assembled output over the fast tier. Results
+/// are bit-identical to flat ZCCL.
+pub(crate) fn alltoall_hier(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    m: &mut Metrics,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n = comm.size();
+    let me = comm.rank();
+    let topo = resolve_topo(st, n)?;
+    let plan = HierAlltoallPlan::at(comm.fresh_tags(HierAlltoallPlan::span(n)), n);
+    let node = topo.node_of(me);
+    let members = topo.members(node);
+    let local_idx = topo.local_index(me);
+    let nnodes = topo.nodes();
+    m.raw_bytes += (input.len() * 4) as u64;
+
+    if local_idx != 0 {
+        // Follower: full input up, assembled output down — fast tier.
+        intra_send(comm, st, topo.leader_of(me), plan.up_tag(), input, m)?;
+        return intra_recv_into(comm, st, topo.leader_of(me), plan.down_tag(), m, out);
+    }
+
+    let mm = members.len();
+    // (1) Collect member inputs raw over the fast tier.
+    let mut member_vals: Vec<Vec<f32>> = Vec::with_capacity(mm);
+    {
+        let mut own = st.pool.take_f32();
+        own.extend_from_slice(input);
+        member_vals.push(own);
+        let mut wire = comm.t.lease();
+        for &mr in &members[1..] {
+            let t0 = std::time::Instant::now();
+            comm.t.recv_into(mr, plan.up_tag(), &mut wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            m.bytes_recv += wire.len() as u64;
+            let mut vals = st.pool.take_f32();
+            st.intra_decode_into(&wire, &mut vals)?;
+            member_vals.push(vals);
+        }
+        comm.t.recycle(wire);
+    }
+
+    // (2) Compress every (source member, destination rank) chunk exactly
+    //     once — member input lengths may differ, so each member gets its
+    //     own n-way chunking (matching what flat would send).
+    let mut store = st.pool.take_bytes();
+    let mut frames: Vec<Vec<Range<usize>>> = Vec::with_capacity(mm);
+    for vals in &member_vals {
+        let r = chunk_ranges(vals.len(), n);
+        let mut row = Vec::with_capacity(n);
+        for dst in 0..n {
+            let start = store.len();
+            let t0 = std::time::Instant::now();
+            st.compress_into(&vals[r[dst].clone()], &mut store)?;
+            m.add(Phase::Compress, t0.elapsed().as_secs_f64());
+            row.push(start..store.len());
+        }
+        frames.push(row);
+    }
+    for vals in member_vals {
+        st.pool.put_f32(vals);
+    }
+
+    // (3) Pairwise bundle lanes between the leaders (slow tier). Lane
+    //     order inside a bundle: source member ascending × destination
+    //     member ascending — both sides derive it from the topology.
+    let leaders = topo.leaders();
+    let mut foreign: Vec<Option<Vec<u8>>> = vec![None; nnodes];
+    for t in 1..nnodes {
+        let to_node = (node + t) % nnodes;
+        let from_node = (node + nnodes - t) % nnodes;
+        let parts: Vec<&[u8]> = frames
+            .iter()
+            .flat_map(|row| {
+                topo.members(to_node).iter().map(move |&dr| &store[row[dr].clone()])
+            })
+            .collect();
+        let mut wire = comm.t.lease();
+        encode_bundle_into(0, &parts, &mut wire)?;
+        m.bytes_sent += wire.len() as u64;
+        let t0 = std::time::Instant::now();
+        comm.t.send_pooled(leaders[to_node], plan.lane_tag(t), wire)?;
+        let mut got = comm.t.lease();
+        comm.t.recv_into(leaders[from_node], plan.lane_tag(t), &mut got)?;
+        m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+        m.bytes_recv += got.len() as u64;
+        foreign[from_node] = Some(got);
+    }
+
+    // (4) Parse foreign bundles and assemble each member's output in
+    //     global source-rank order, decoding every frame exactly once.
+    let mut parsed: Vec<Option<(Vec<u8>, Vec<Range<usize>>)>> =
+        (0..nnodes).map(|_| None).collect();
+    for (k, slot) in foreign.iter_mut().enumerate() {
+        if let Some(buf) = slot.take() {
+            let want = topo.members(k).len() * mm;
+            let (_, ranges) = parse_bundle(&buf, want)?;
+            parsed[k] = Some((buf, ranges));
+        }
+    }
+    let mut vals = st.pool.take_f32();
+    for (dst_idx, &mr) in members.iter().enumerate() {
+        let mut counts = Vec::with_capacity(n);
+        for src in 0..n {
+            let sn = topo.node_of(src);
+            let frame = if sn == node {
+                &store[frames[topo.local_index(src)][mr].clone()]
+            } else {
+                let (buf, ranges) = parsed[sn].as_ref().expect("lane received");
+                let pos = topo.local_index(src) * mm + dst_idx;
+                &buf[ranges[pos].clone()]
+            };
+            counts.push(crate::compress::checked_count(frame)?);
+        }
+        let total: usize = counts.iter().sum();
+        vals.clear();
+        vals.resize(total, 0.0);
+        let mut off = 0usize;
+        for src in 0..n {
+            let sn = topo.node_of(src);
+            let frame = if sn == node {
+                &store[frames[topo.local_index(src)][mr].clone()]
+            } else {
+                let (buf, ranges) = parsed[sn].as_ref().expect("lane received");
+                let pos = topo.local_index(src) * mm + dst_idx;
+                &buf[ranges[pos].clone()]
+            };
+            let cnt = counts[src];
+            let t0 = std::time::Instant::now();
+            st.decode_into_slice(frame, &mut vals[off..off + cnt])
+                .map_err(|e| Error::corrupt(format!("hier alltoall src {src}: {e}")))?;
+            m.add(Phase::Decompress, t0.elapsed().as_secs_f64());
+            off += cnt;
+        }
+        if mr == me {
+            out.clear();
+            out.extend_from_slice(&vals);
+        } else {
+            intra_send(comm, st, mr, plan.down_tag(), &vals, m)?;
+        }
+    }
+    st.pool.put_f32(vals);
+    st.pool.put_bytes(store);
+    for p in parsed.into_iter().flatten() {
+        comm.t.recycle(p.0);
+    }
+    Ok(())
+}
+
+/// Hierarchical reduce: intra star-reduce onto the leader (fast tier),
+/// flat ZCCL reduce over the leader group toward the root's leader with
+/// the **total** rank count as the finish divisor (the node partials
+/// already hold every member's contribution), then an optional
+/// root-leader → follower-root hop over the fast tier. Results are
+/// bit-identical to flat ZCCL reduce run over the leader group on the
+/// node partials.
+pub(crate) fn reduce_hier(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    op: ReduceOp,
+    root: usize,
+    m: &mut Metrics,
+) -> Result<Option<Vec<f32>>> {
+    let n = comm.size();
+    let me = comm.rank();
+    let topo = resolve_topo(st, n)?;
+    let plan = HierReducePlan::at(comm.fresh_tags(HierReducePlan::span(n)), n);
+    let node = topo.node_of(me);
+    let members = topo.members(node);
+    let local_idx = topo.local_index(me);
+    let nnodes = topo.nodes();
+    let root_node = topo.node_of(root);
+    m.raw_bytes += (input.len() * 4) as u64;
+
+    if local_idx != 0 {
+        // Follower: partial up; a follower root receives the finished
+        // result back from its leader over the fast tier.
+        intra_send(comm, st, topo.leader_of(me), plan.up_tag(), input, m)?;
+        if me != root {
+            return Ok(None);
+        }
+        let mut out = Vec::new();
+        intra_recv_into(comm, st, topo.leader_of(me), plan.hop_tag(), m, &mut out)?;
+        return Ok(Some(out));
+    }
+
+    // (1) Intra tier: fold member partials in ascending member order.
+    let mut acc = st.pool.take_f32();
+    acc.extend_from_slice(input);
+    {
+        let mut wire = comm.t.lease();
+        for &mr in &members[1..] {
+            let t0 = std::time::Instant::now();
+            comm.t.recv_into(mr, plan.up_tag(), &mut wire)?;
+            m.add(Phase::Comm, t0.elapsed().as_secs_f64());
+            m.bytes_recv += wire.len() as u64;
+            let t0 = std::time::Instant::now();
+            st.intra_fold(op, &wire, &mut acc)?;
+            m.add(Phase::Compute, t0.elapsed().as_secs_f64());
+        }
+        comm.t.recycle(wire);
+    }
+
+    // (2) Inter tier: flat ZCCL reduce over the leader group toward the
+    //     root's leader, finishing with the total rank count.
+    let result = if nnodes == 1 {
+        let mut r = acc.clone();
+        op.finish(&mut r, n);
+        Some(r)
+    } else {
+        let saved = st.mode.algo;
+        st.mode.algo = Algo::Zccl;
+        let r = (|| -> Result<Option<Vec<f32>>> {
+            let mut gt = GroupTransport::new(&mut *comm.t, topo.leaders(), plan.group_base())?;
+            let mut gc = Communicator::new(&mut gt);
+            reduce_impl(&mut gc, st, &acc, op, root_node, n, m)
+        })();
+        st.mode.algo = saved;
+        r?
+    };
+    st.pool.put_f32(acc);
+
+    if node == root_node {
+        let result = result.expect("the root node's leader holds the result");
+        if me == root {
+            return Ok(Some(result));
+        }
+        intra_send(comm, st, root, plan.hop_tag(), &result, m)?;
+    }
+    Ok(None)
 }

@@ -134,14 +134,19 @@
 //! | `Cprp2p`   | compress before EVERY send, decompress after EVERY recv (Zhou et al.) |
 //! | `CColl`    | compress-once framework, SZx      | compressed RS, no overlap (IPDPS'24 C-Coll) |
 //! | `Zccl`     | compress-once + balanced pipeline | PIPE-fZ-light overlap (§3.5.2)    |
-//! | `Hier`     | two-level: raw `f32` windows on the fast intra-node tier, ZCCL compressed frames between node **leaders** only (gZCCL-style; see [`hier`]) | intra-node raw reduce → inter-leader ZCCL reduce-scatter → intra-node raw bcast |
+//! | `Hier`     | two-level: raw `f32` windows on the fast intra-node tier (optionally compressed via [`CollCtx::set_intra_mode`]), ZCCL compressed frames between node **leaders** only (gZCCL-style; see [`hier`]) | intra-node reduce → inter-leader ZCCL reduce-scatter → intra-node bcast |
 //!
 //! `Hier` consumes a [`crate::topology::Topology`] from the context
 //! ([`CollCtx::over_nodes`] / [`CollCtx::set_topology`]); without one it
 //! defaults to [`crate::topology::Topology::flat`] and degenerates to
-//! flat `Zccl`. Hierarchical schedules exist for allreduce, allgather,
-//! bcast and scatter; the remaining collectives transparently fall back
-//! to their flat `Zccl` form under `Hier`.
+//! flat `Zccl`. Every non-barrier collective has a genuine two-level
+//! schedule under `Hier` — allreduce, reduce-scatter, allgather,
+//! alltoall, bcast, scatter, gather, and reduce all keep inter-node
+//! traffic strictly leader↔leader, with the inter-leader bundle paths
+//! segmented by the §3.5.1 fixed pipeline
+//! ([`Mode::pipeline_bytes`], sized per tier by
+//! [`crate::sim::calibrate::pick_segment_bytes`]); there are no flat
+//! fallbacks.
 //!
 //! The collectives are SPMD operations over a [`Communicator`]: all
 //! ranks of the communicator must issue the same operations (blocking

@@ -47,13 +47,35 @@ pub(crate) fn reduce_with(
     m: &mut Metrics,
 ) -> Result<Option<Vec<f32>>> {
     let n = comm.size();
-    let me = comm.rank();
     if root >= n {
         return Err(Error::invalid(format!("root {root} out of {n}")));
     }
+    if st.mode.algo == Algo::Hier {
+        return super::hier::reduce_hier(comm, st, input, op, root, m);
+    }
+    reduce_impl(comm, st, input, op, root, n, m)
+}
+
+/// The flat binomial reduce with an explicit `finish_n`: the divisor
+/// handed to [`ReduceOp::finish`] at the root. Flat callers pass the
+/// communicator size; the hierarchical leader tier runs this over the
+/// leader group on node partials that already hold every member's
+/// contribution, so it passes the **total** rank count (matters for
+/// `Avg`).
+pub(crate) fn reduce_impl(
+    comm: &mut Communicator,
+    st: &mut CollState,
+    input: &[f32],
+    op: ReduceOp,
+    root: usize,
+    finish_n: usize,
+    m: &mut Metrics,
+) -> Result<Option<Vec<f32>>> {
+    let n = comm.size();
+    let me = comm.rank();
     let mut acc = input.to_vec();
     if n == 1 {
-        op.finish(&mut acc, 1);
+        op.finish(&mut acc, finish_n);
         return Ok(Some(acc));
     }
     let plan = TreePlan::at(comm.fresh_tags(TreePlan::span(n)), n);
@@ -120,7 +142,7 @@ pub(crate) fn reduce_with(
     comm.t.recycle(msg);
 
     if me == root {
-        op.finish(&mut acc, n);
+        op.finish(&mut acc, finish_n);
         return Ok(Some(acc));
     }
 

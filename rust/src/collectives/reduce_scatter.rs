@@ -69,6 +69,9 @@ pub(crate) fn reduce_scatter_with(
         owned.extend_from_slice(input);
         return Ok(0..input.len());
     }
+    if st.mode.algo == Algo::Hier {
+        return super::hier::reduce_scatter_hier(comm, st, input, op, m, owned);
+    }
     let plan = RingPlan::at(comm.fresh_tags(RingPlan::span(n)), n);
     let ranges = chunk_ranges(input.len(), n);
     let nb = ring(me, n);
@@ -126,9 +129,10 @@ pub(crate) fn reduce_scatter_with(
             }
             comm.t.recycle(got);
         }
-        // Hier has no dedicated hierarchical reduce-scatter yet: it runs
-        // the flat ZCCL pipeline (the hierarchical allreduce composes its
-        // leader tier out of exactly this arm via a GroupTransport).
+        // Hier dispatched to its two-level schedule above; its leader
+        // tier re-enters here over a GroupTransport with the algo
+        // switched to Zccl, so this arm carries both (the Hier pattern is
+        // kept for match exhaustiveness).
         Algo::Zccl | Algo::Hier => {
             reduce_scatter_zccl(comm, st, &mut acc, &ranges, op, plan, m)?;
         }

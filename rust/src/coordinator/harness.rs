@@ -76,7 +76,11 @@ pub fn run(id: &str, out_dir: &Path, budget: Option<f64>) -> Result<()> {
         "fig15" => fig_tree("fig15-scatter", sim_scatter),
         "table7" => table7(out_dir)?,
         "crosscheck" => crosscheck(),
-        "hier" => hier_bench(),
+        "hier" => {
+            let (tables, summary) = hier_bench(budget.unwrap_or(BUDGET_S));
+            emit_bench_line("BENCH_hier.json", &summary);
+            tables
+        }
         "codec" => {
             let (tables, summary) = codec_bench(BENCH_VALUES, budget.unwrap_or(BUDGET_S));
             emit_bench_line("BENCH_codec.json", &summary);
@@ -615,19 +619,38 @@ fn crosscheck() -> Vec<(String, Table)> {
     vec![("crosscheck-sim-vs-real".into(), t)]
 }
 
-/// Hierarchical vs flat allreduce: REAL 4-node × 4-rank runs over the
-/// node-partitioned in-process fabric (wall time, bytes crossing the
-/// slow tier, leader/follower compress counts), plus the per-tier
-/// simulator sweeping ranks-per-node at cluster scale with the
-/// calibrated flat-vs-hier picker.
-fn hier_bench() -> Vec<(String, Table)> {
+/// `zccl bench hier` — the hierarchical tier, four tables plus the
+/// single-line `BENCH_hier.json` summary:
+///
+/// 1. REAL flat-vs-hier allreduce over a node-partitioned 4×4 in-process
+///    fabric (wall time, bytes crossing the slow tier, leader/follower
+///    compress counts).
+/// 2. Pipelined vs monolithic inter-leader transfers: the hier allgather
+///    ring with its §3.5.1 segment forced monolithic, at the
+///    [`crate::sim::calibrate::pick_segment_bytes`] choice, and at a
+///    deliberately tiny 4 KiB (maximum overlap, maximum per-segment
+///    overhead).
+/// 3. Intra-tier mode rows: the same hier allreduce with the fast tier
+///    raw vs compressed ([`CollCtx::set_intra_mode`]), with per-tier byte
+///    and intra-compress counters.
+/// 4. The per-tier simulator sweeping ranks-per-node at cluster scale
+///    with the calibrated flat-vs-hier picker.
+///
+/// Exposed as a library function so a tier-1 test can run it on a tiny
+/// budget and assert the JSON contract.
+pub fn hier_bench(budget_s: f64) -> (Vec<(String, Table)>, Json) {
     let mut t = Table::new(&[
         "schedule", "ranks", "wall s", "slow-tier MB", "leader compresses",
         "follower compresses",
     ]);
     let topo = Topology::blocked(4, 4);
-    let values = 1 << 18;
+    // Tiny budgets (the tier-1 contract test) shrink the payloads; the
+    // row set and JSON shape stay identical.
+    let values = if budget_s < 0.01 { 1 << 12 } else { 1 << 18 };
     let eb = ErrorBound::Rel(1e-4);
+    let mut flat_wall = 0.0f64;
+    let mut hier_wall = 0.0f64;
+    let mut hier_slow_mb = 0.0f64;
     for (label, mode) in [
         ("flat zccl", Mode::zccl(CompressorKind::FzLight, eb)),
         ("hier 4x4", Mode::hier(CompressorKind::FzLight, eb)),
@@ -641,6 +664,12 @@ fn hier_bench() -> Vec<(String, Table)> {
             (t0.elapsed().as_secs_f64(), ctx.compress_calls())
         });
         let wall = out.iter().map(|x| x.0).fold(0.0, f64::max);
+        if mode.algo == Algo::Hier {
+            hier_wall = wall;
+            hier_slow_mb = report.tier.inter_bytes as f64 / 1e6;
+        } else {
+            flat_wall = wall;
+        }
         let leader: u64 = out
             .iter()
             .enumerate()
@@ -662,9 +691,89 @@ fn hier_bench() -> Vec<(String, Table)> {
             format!("{follower}"),
         ]);
     }
+
+    // Pipelined vs monolithic inter-leader transfers: hier allgather over
+    // 2 nodes × 4 ranks, where each ring round ships one node's bundle.
+    let cm = CostModel::paper_broadwell();
+    let ptopo = Topology::blocked(2, 4);
+    let pvalues = if budget_s < 0.01 { 1 << 12 } else { 1 << 16 };
+    let iters = ((budget_s / 0.02).ceil() as usize).clamp(1, 8);
+    let bundle_raw = (4 * pvalues * 4) as f64; // one node's worth, pre-compression
+    let picked = crate::sim::calibrate::pick_segment_bytes(bundle_raw, &cm, false);
+    let mut pt = Table::new(&["segment", "bytes", "allgather wall s", "slow-tier MB"]);
+    let mut pipeline_rows = Vec::new();
+    for (label, seg) in [
+        ("monolithic", usize::MAX),
+        ("picked", picked),
+        ("fine-4k", 1usize << 12),
+    ] {
+        let mode = Mode::hier(CompressorKind::FzLight, eb).with_pipeline_bytes(seg);
+        let t2 = ptopo.clone();
+        let (out, report) = run_ranks_on(&ptopo, move |c| {
+            let mut ctx = CollCtx::over_nodes(c, mode, t2.clone()).unwrap();
+            let f = Field::generate(FieldKind::Rtm, pvalues, 29 + ctx.rank() as u64);
+            ctx.allgather(&f.values).unwrap(); // warm: pools + codec
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                ctx.allgather(&f.values).unwrap();
+            }
+            t0.elapsed().as_secs_f64() / iters as f64
+        });
+        let wall = out.iter().cloned().fold(0.0, f64::max);
+        pt.row(vec![
+            label.into(),
+            if seg == usize::MAX { "-".into() } else { format!("{seg}") },
+            format!("{wall:.5}"),
+            format!("{:.2}", report.tier.inter_bytes as f64 / 1e6),
+        ]);
+        pipeline_rows.push(Json::obj(vec![
+            ("segment", Json::Str(label.into())),
+            ("segment_bytes", Json::Num(if seg == usize::MAX { 0.0 } else { seg as f64 })),
+            ("wall_s", Json::Num(wall)),
+        ]));
+    }
+
+    // Intra-tier mode: the same hier allreduce with the fast tier raw vs
+    // carrying compressed frames (compress-once-per-hop).
+    let mut it = Table::new(&[
+        "intra tier", "wall s", "intra compresses", "slow-tier MB", "fast-tier MB",
+    ]);
+    let mut intra_rows = Vec::new();
+    for (label, compressed) in [("raw", false), ("compressed", true)] {
+        let mode = Mode::hier(CompressorKind::FzLight, eb);
+        let t2 = ptopo.clone();
+        let (out, report) = run_ranks_on(&ptopo, move |c| {
+            let mut ctx = CollCtx::over_nodes(c, mode, t2.clone()).unwrap();
+            if compressed {
+                ctx.set_intra_mode(Mode::zccl(CompressorKind::FzLight, eb)).unwrap();
+            }
+            let f = Field::generate(FieldKind::Rtm, pvalues, 43 + ctx.rank() as u64);
+            ctx.allreduce(&f.values, ReduceOp::Sum).unwrap(); // warm
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                ctx.allreduce(&f.values, ReduceOp::Sum).unwrap();
+            }
+            (t0.elapsed().as_secs_f64() / iters as f64, ctx.intra_compress_calls())
+        });
+        let wall = out.iter().map(|x| x.0).fold(0.0, f64::max);
+        let calls: u64 = out.iter().map(|x| x.1).sum();
+        it.row(vec![
+            label.into(),
+            format!("{wall:.5}"),
+            format!("{calls}"),
+            format!("{:.2}", report.tier.inter_bytes as f64 / 1e6),
+            format!("{:.2}", report.tier.intra_bytes as f64 / 1e6),
+        ]);
+        intra_rows.push(Json::obj(vec![
+            ("intra", Json::Str(label.into())),
+            ("wall_s", Json::Num(wall)),
+            ("intra_compress_calls", Json::Num(calls as f64)),
+            ("inter_mb", Json::Num(report.tier.inter_bytes as f64 / 1e6)),
+            ("intra_mb", Json::Num(report.tier.intra_bytes as f64 / 1e6)),
+        ]));
+    }
     // Per-tier simulator: where does the hierarchy start paying at
     // cluster scale?
-    let cm = CostModel::paper_broadwell();
     let mut sim_t =
         Table::new(&["total ranks", "ranks/node", "hier s", "flat s", "picker"]);
     let ratio = sample_ratio(
@@ -694,7 +803,25 @@ fn hier_bench() -> Vec<(String, Table)> {
             format!("{pick:?}"),
         ]);
     }
-    vec![("hier-real-4x4".into(), t), ("hier-sim-scaling".into(), sim_t)]
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("hier".into())),
+        ("budget_s", Json::Num(budget_s)),
+        ("flat_wall_s", Json::Num(flat_wall)),
+        ("hier_wall_s", Json::Num(hier_wall)),
+        ("hier_slow_tier_mb", Json::Num(hier_slow_mb)),
+        ("picked_segment_bytes", Json::Num(picked as f64)),
+        ("pipeline", Json::Arr(pipeline_rows)),
+        ("intra", Json::Arr(intra_rows)),
+    ]);
+    (
+        vec![
+            ("hier-real-4x4".into(), t),
+            ("hier-pipeline".into(), pt),
+            ("hier-intra-mode".into(), it),
+            ("hier-sim-scaling".into(), sim_t),
+        ],
+        summary,
+    )
 }
 
 /// `zccl bench codec` — word-parallel codec kernel throughput. Four

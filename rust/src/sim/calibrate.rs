@@ -85,6 +85,56 @@ pub fn pick_allreduce_algo(p: &SimParams, ranks_per_node: usize, cm: &CostModel)
     }
 }
 
+/// Smallest segment the picker will return (one page-cluster: below this
+/// the per-segment bookkeeping dominates any overlap win).
+pub const MIN_SEGMENT_BYTES: usize = 1 << 12;
+/// Largest segment the picker will return (past this a segment is
+/// effectively monolithic for the transfer sizes this repo benches).
+pub const MAX_SEGMENT_BYTES: usize = 1 << 22;
+
+/// Pick the §3.5.1 fixed segment size for one `total_bytes` transfer on
+/// the chosen tier under the postal model: segmenting a store-and-forward
+/// chain costs `(total/s) · (α + s/β)` for the stream plus `O(depth)`
+/// fill, which is minimised at `s* = sqrt(total · α · β)` — bigger
+/// transfers and lossier (higher `α·β`) links both want bigger segments.
+/// The result is clamped to `[MIN_SEGMENT_BYTES, MAX_SEGMENT_BYTES]` and,
+/// from below, so the transfer fits the per-round tag window
+/// (`total / s ≤ SEG_TAG_SPAN`). Feed the result to
+/// [`crate::collectives::Mode::pipeline_bytes`].
+pub fn pick_segment_bytes(total_bytes: f64, cm: &CostModel, intra: bool) -> usize {
+    let (alpha, bps) =
+        if intra { (cm.intra_alpha_s, cm.intra_bps) } else { (cm.alpha_s, cm.link_bps) };
+    let total = total_bytes.max(0.0);
+    let star = (total * alpha * bps).sqrt();
+    let floor_for_span = total / crate::collectives::SEG_TAG_SPAN as f64;
+    let s = star.max(floor_for_span).ceil() as usize;
+    s.clamp(MIN_SEGMENT_BYTES, MAX_SEGMENT_BYTES)
+}
+
+/// Whether the intra-node tier should carry compressed frames instead of
+/// raw `f32` hops for `bytes`-sized payloads at measured `ratio`:
+/// compress + ship `bytes/ratio` + decompress must beat shipping `bytes`
+/// raw on the fast tier. Per-message latency is identical on both sides
+/// (same hop count), so only the bandwidth terms compete — on the paper's
+/// testbed the single-thread codecs lose to the 8 GB/s fast tier and only
+/// the multi-thread rates at a healthy ratio flip the decision. Feed the
+/// result to [`crate::collectives::CollCtx::set_intra_mode`].
+pub fn pick_intra_mode(
+    bytes: f64,
+    kind: CompressorKind,
+    multithread: bool,
+    ratio: f64,
+    cm: &CostModel,
+) -> bool {
+    let rate = cm.rate(kind);
+    let ratio = ratio.max(1.0);
+    let raw_s = bytes / cm.intra_bps;
+    let compressed_s = bytes / rate.comp(multithread)
+        + bytes / ratio / cm.intra_bps
+        + bytes / rate.decomp(multithread);
+    compressed_s < raw_s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +170,38 @@ mod tests {
         assert_eq!(pick_allreduce_algo(&p, 8, &cm), Algo::Hier);
         // One rank per node: the hierarchy adds nothing — ties go flat.
         assert_eq!(pick_allreduce_algo(&p, 1, &cm), Algo::Zccl);
+    }
+
+    #[test]
+    fn segment_picker_grows_with_transfer_and_respects_clamps() {
+        let cm = CostModel::paper_broadwell();
+        let small = pick_segment_bytes(1e6, &cm, false);
+        let big = pick_segment_bytes(100e6, &cm, false);
+        assert!(big > small, "100 MB picks {big}, 1 MB picks {small}");
+        for &b in &[0.0, 1.0, 1e3, 1e6, 1e9, 1e12] {
+            for intra in [false, true] {
+                let s = pick_segment_bytes(b, &cm, intra);
+                assert!((MIN_SEGMENT_BYTES..=MAX_SEGMENT_BYTES).contains(&s), "{b} -> {s}");
+                // The per-round tag window always fits the segment count.
+                assert!(
+                    (b / s as f64).ceil() as u64 <= crate::collectives::SEG_TAG_SPAN,
+                    "{b} bytes / {s} overflows the tag window"
+                );
+            }
+        }
+        // The slow tier's higher α·β product wants bigger segments.
+        assert!(pick_segment_bytes(100e6, &cm, false) >= pick_segment_bytes(100e6, &cm, true));
+    }
+
+    #[test]
+    fn intra_mode_picker_needs_multithread_rates_and_real_ratio() {
+        let cm = CostModel::paper_broadwell();
+        let b = 100e6;
+        // Single-thread fZ-light (2.61 GB/s) cannot beat the 8 GB/s tier.
+        assert!(!pick_intra_mode(b, CompressorKind::FzLight, false, 10.0, &cm));
+        // Multi-thread at a healthy ratio wins...
+        assert!(pick_intra_mode(b, CompressorKind::FzLight, true, 10.0, &cm));
+        // ...but not at ratio ~1 (all codec cost, no byte savings).
+        assert!(!pick_intra_mode(b, CompressorKind::FzLight, true, 1.0, &cm));
     }
 }

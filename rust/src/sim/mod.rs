@@ -18,6 +18,13 @@
 //! Compressed sizes are NOT modeled: each simulation takes real ratios
 //! measured by running the actual codecs on sampled field data
 //! ([`calibrate::sample_ratio`]).
+//!
+//! Beyond whole-collective simulations, the per-tier postal constants
+//! also drive two point decisions for the hierarchical schedules:
+//! [`calibrate::pick_segment_bytes`] sizes the §3.5.1 fixed pipeline
+//! segment per tier (`s* = sqrt(total · α · β)`, clamped), and
+//! [`calibrate::pick_intra_mode`] decides whether the fast intra-node
+//! tier should carry compressed frames instead of raw `f32` hops.
 
 pub mod calibrate;
 pub mod collectives;

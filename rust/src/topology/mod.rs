@@ -25,11 +25,23 @@
 //!   forwarded verbatim — compress-once extended across tiers;
 //! - the **intra-node tier** runs a star or binomial schedule over
 //!   [`Topology::members`], carrying raw `f32` windows over the fast
-//!   links (only leaders compress/decompress).
+//!   links by default (only leaders compress/decompress).
 //!
-//! [`crate::collectives::hier`] consumes exactly this API; the
+//! ### Intra-tier mode contract
+//!
+//! The intra tier's codec is independently switchable
+//! ([`crate::collectives::CollCtx::set_intra_mode`]): any non-`Hier`
+//! mode is accepted, and a compressing intra mode changes only *how a
+//! hop is encoded* — each intra payload is compressed exactly once per
+//! hop by its producer and decoded exactly once by its consumer, never
+//! re-encoded at the leader, so the message graph (peers, tags, counts)
+//! is byte-for-byte the one the raw tier produces and the error bound
+//! composes as one extra `D∘C` per intra hop. The
 //! [`crate::sim`] cost model prices the two tiers separately so
-//! `calibrate` can pick flat vs hierarchical per message size.
+//! `calibrate` can pick flat vs hierarchical per message size,
+//! [`crate::sim::calibrate::pick_intra_mode`] decides raw vs compressed
+//! intra hops, and [`crate::sim::calibrate::pick_segment_bytes`] sizes
+//! the inter-leader pipeline segment.
 
 use crate::{Error, Result};
 

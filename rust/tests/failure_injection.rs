@@ -539,6 +539,100 @@ fn chaos_corruption_is_detected_before_decode_naming_sender() {
     }
 }
 
+/// Hierarchical chaos, leader death: over a 2×2 node-grouped topology
+/// the leader of node 1 (rank 2) dies before its first wire operation
+/// mid-`Algo::Hier` allreduce. Every rank — the dead leader, its starved
+/// follower, and the whole remote node — must resolve to a typed
+/// `Timeout`/`Transport` error within its armed deadline; no rank may
+/// hang or panic.
+#[test]
+fn chaos_hier_leader_death_fails_all_ranks_within_deadline() {
+    use zccl::topology::Topology;
+    // blocked(2, 2): nodes {0, 1} and {2, 3}; leaders 0 and 2.
+    let dead = 2usize;
+    let plan = FaultPlan::new(chaos_seed()).kill_after(0);
+    let t0 = Instant::now();
+    let results: Vec<Result<Vec<f32>, Error>> =
+        run_chaos(plans_for(CHAOS_RANKS, dead, plan), move |c| {
+            let topo = Topology::blocked(2, 2);
+            let mode = Mode::hier(CompressorKind::FzLight, ErrorBound::Abs(1e-3));
+            let mut ctx = CollCtx::over_nodes(c, mode, topo).unwrap();
+            ctx.set_timeout(Some(Duration::from_millis(400)));
+            let x = chaos_input(ctx.rank());
+            ctx.allreduce(&x, ReduceOp::Sum)
+        });
+    assert!(t0.elapsed() < Duration::from_secs(10), "hier ranks must fail promptly");
+    for (rank, r) in results.iter().enumerate() {
+        let e = r.as_ref().expect_err("no rank can finish with the node-1 leader dead");
+        if rank == dead {
+            assert!(
+                format!("{e}").contains("killed by fault plan"),
+                "dead leader reports its own death: {e}"
+            );
+        } else {
+            assert!(
+                matches!(e, Error::Timeout { .. } | Error::Transport(_)),
+                "rank {rank}: want Timeout or Transport, got {e:?}"
+            );
+        }
+    }
+}
+
+/// Hierarchical chaos, follower death + abort fence across the group
+/// translation: rank 3 — a *follower*, never on the leader tier — dies
+/// instantly. Only its own leader (rank 2) talks to it, so rank 2 is
+/// armed with a short deadline while every other rank gets one far
+/// longer than the test bound. The remote node can therefore only fail
+/// promptly if rank 2's abort poison crosses the `GroupTransport`-
+/// translated leader tier — which is exactly what must happen: all
+/// survivors fail typed well before their own deadlines, and at least
+/// one observes the fence (an abort naming a peer, counted in
+/// `Metrics::aborts_observed`).
+#[test]
+fn chaos_hier_follower_death_abort_fence_crosses_group_transport() {
+    use zccl::topology::Topology;
+    let dead = 3usize; // follower on node 1; its leader is rank 2
+    let plan = FaultPlan::new(chaos_seed()).kill_after(0);
+    let t0 = Instant::now();
+    let results: Vec<(Result<Vec<f32>, Error>, Metrics)> =
+        run_chaos(plans_for(CHAOS_RANKS, dead, plan), move |c| {
+            let topo = Topology::blocked(2, 2);
+            let mode = Mode::hier(CompressorKind::FzLight, ErrorBound::Abs(1e-3));
+            let mut ctx = CollCtx::over_nodes(c, mode, topo).unwrap();
+            // Only the dead follower's leader starves directly; everyone
+            // else would ride out 30 s if the fence did not propagate.
+            let ms = if ctx.rank() == 2 { 300 } else { 30_000 };
+            ctx.set_timeout(Some(Duration::from_millis(ms)));
+            let x = chaos_input(ctx.rank());
+            (ctx.allreduce(&x, ReduceOp::Sum), *ctx.metrics())
+        });
+    assert!(
+        t0.elapsed() < Duration::from_secs(15),
+        "the abort fence must beat the survivors' 30 s deadlines"
+    );
+    for (rank, (r, _)) in results.iter().enumerate() {
+        let e = r.as_ref().expect_err("no rank can finish with a follower dead");
+        if rank == dead {
+            assert!(
+                format!("{e}").contains("killed by fault plan"),
+                "dead follower reports its own death: {e}"
+            );
+        } else {
+            assert!(
+                matches!(e, Error::Timeout { .. } | Error::Transport(_)),
+                "rank {rank}: want Timeout or Transport, got {e:?}"
+            );
+        }
+    }
+    let fenced = results.iter().enumerate().any(|(rank, (r, m))| {
+        rank != dead
+            && rank != 2
+            && m.aborts_observed > 0
+            && matches!(r, Err(e) if format!("{e}").contains("abort from rank"))
+    });
+    assert!(fenced, "some remote-node rank must fail via the propagated abort fence");
+}
+
 /// Staged-mode chaos: with version-2 frames on the wire the collective
 /// behaves exactly like the fixed-width mode. A clean staged run is
 /// bit-identical to the unstaged ZCCL run on the same inputs (the

@@ -1,25 +1,32 @@
 //! Hierarchical-collective property suite.
 //!
-//! 1. `Algo::Hier` allgather / bcast / scatter are **bit-identical** to
-//!    flat `Algo::Zccl` on the same communicator for every node shape
-//!    (1×n, n×1, uneven nodes, non-power-of-two leader counts): the
-//!    leaders preserve the flat per-rank frame boundaries, so the decoded
-//!    values cannot differ.
-//! 2. Hier allreduce is bit-identical to flat `Zccl` run over the
-//!    **leader group** on the node-reduced inputs (the inter tier IS the
-//!    flat schedule, via `GroupTransport`) — and therefore to flat `Zccl`
-//!    outright when every node holds one rank.
+//! 1. `Algo::Hier` allgather / bcast / scatter / gather / alltoall are
+//!    **bit-identical** to flat `Algo::Zccl` on the same communicator for
+//!    every node shape (1×n, n×1, uneven nodes, non-power-of-two leader
+//!    counts): the leaders preserve the flat per-rank frame boundaries,
+//!    so the decoded values cannot differ.
+//! 2. Hier allreduce / reduce-scatter / reduce are bit-identical to flat
+//!    `Zccl` run over the **leader group** on the node-reduced inputs
+//!    (the inter tier IS the flat schedule, via `GroupTransport`) — and
+//!    therefore to flat `Zccl` outright when every node holds one rank.
 //! 3. The 4-node × 4-rank acceptance: each node's data is compressed
 //!    exactly once, by its leader (codec counters), every frame crossing
 //!    the slow tier travels leader↔leader (fabric tier ledger), and
 //!    followers never touch the codec.
 //! 4. Warm hierarchical calls stay allocation-free
 //!    (`PoolStats` / `PacketPoolStats`).
+//! 5. The staged (version-2) codec and the compressed intra tier compose
+//!    with the hierarchy: staged hier stays bit-identical to staged flat,
+//!    and a compressed fast tier keeps the error bounded while followers
+//!    take over their own up-hop compression.
 
-use zccl::collectives::{run_ranks, run_ranks_on, CollCtx, Mode, ReduceOp};
+use zccl::collectives::{chunk_ranges, run_ranks, run_ranks_on, CollCtx, Mode, ReduceOp};
 use zccl::compress::{CompressorKind, ErrorBound};
+use zccl::coordinator::harness::hier_bench;
 use zccl::data::fields::{Field, FieldKind};
+use zccl::sim::calibrate::{MAX_SEGMENT_BYTES, MIN_SEGMENT_BYTES};
 use zccl::topology::Topology;
+use zccl::util::json::Json;
 
 const EB: f64 = 1e-3;
 
@@ -396,41 +403,245 @@ fn warm_hier_allreduce_is_allocation_free() {
     assert!(ok.into_iter().all(|x| x));
 }
 
-/// Collectives without a dedicated hierarchical schedule fall back to
-/// their flat ZCCL form under `Algo::Hier` — same results, no surprises.
+/// Hier gather and alltoall are bit-identical to flat ZCCL on every node
+/// shape: the leader compresses each member chunk at the flat per-rank
+/// frame boundaries (the intra raw hop is exact), so the same frames
+/// cross the wire and the same bytes decode at the destination. Unequal
+/// chunk lengths — including an empty contribution — are swept.
 #[test]
-fn hier_fallback_collectives_match_flat_zccl() {
-    let topo = Topology::blocked(2, 2);
-    let (n, len) = (topo.ranks(), 1200);
-    let flat = run_ranks(n, move |c| {
-        let mut ctx = CollCtx::over(c, inter_mode());
+fn hier_gather_and_alltoall_bit_identical_to_flat_zccl() {
+    for topo in shapes() {
+        let n = topo.ranks();
+        let gather_len = |r: usize| if r == 1 { 0 } else { 150 + 13 * r };
+        let a2a_len = move |r: usize| 40 * n + 7 * r;
+        for root in [0, 1 % n, n - 1] {
+            let flat = run_ranks(n, move |c| {
+                let mut ctx = CollCtx::over(c, inter_mode());
+                let g = ctx.gather(&rank_chunk(ctx.rank(), gather_len(ctx.rank())), root).unwrap();
+                let a2a = ctx.alltoall(&rank_chunk(ctx.rank(), a2a_len(ctx.rank()))).unwrap();
+                (g, a2a)
+            });
+            let t2 = topo.clone();
+            let (hier, report) = run_ranks_on(&topo, move |c| {
+                let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+                let g = ctx.gather(&rank_chunk(ctx.rank(), gather_len(ctx.rank())), root).unwrap();
+                let a2a = ctx.alltoall(&rank_chunk(ctx.rank(), a2a_len(ctx.rank()))).unwrap();
+                (g, a2a)
+            });
+            for (rank, (h, f)) in hier.iter().zip(&flat).enumerate() {
+                assert_eq!(
+                    h.0.as_deref().map(bits),
+                    f.0.as_deref().map(bits),
+                    "gather, topo {topo:?} root {root} rank {rank}"
+                );
+                assert_eq!(bits(&h.1), bits(&f.1), "alltoall, topo {topo:?} rank {rank}");
+            }
+            for &(a, b) in &report.inter_pairs {
+                assert!(
+                    topo.is_leader(a) && topo.is_leader(b),
+                    "slow tier crossed by non-leaders {a}->{b} in {topo:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Hier reduce-scatter's inter tier IS flat ZCCL reduce-scatter over the
+/// leader group on the node partials: reconstructing the reduced vector
+/// from a leaders-only reference run and slicing it at the n-way
+/// ownership boundaries must reproduce every hier rank's owned chunk bit
+/// for bit.
+#[test]
+fn hier_reduce_scatter_matches_leader_tier_reference() {
+    let len = 2200;
+    for topo in shapes() {
+        let n = topo.ranks();
+        let t2 = topo.clone();
+        let (hier, report) = run_ranks_on(&topo, move |c| {
+            let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+            let input = rank_chunk(ctx.rank(), len);
+            ctx.reduce_scatter(&input, ReduceOp::Sum).unwrap()
+        });
+        let nodes = topo.nodes();
+        let node_partials: Vec<Vec<f32>> = (0..nodes)
+            .map(|j| {
+                let members = topo.members(j);
+                let mut acc = rank_chunk(members[0], len);
+                for &r in &members[1..] {
+                    ReduceOp::Sum.fold(&mut acc, &rank_chunk(r, len));
+                }
+                acc
+            })
+            .collect();
+        let reference = run_ranks(nodes, move |c| {
+            let mut ctx = CollCtx::over(c, inter_mode());
+            let me = ctx.rank();
+            ctx.reduce_scatter(&node_partials[me], ReduceOp::Sum).unwrap()
+        });
+        let mut full = vec![0.0f32; len];
+        for (range, vals) in &reference {
+            full[range.clone()].copy_from_slice(vals);
+        }
+        let ranges = chunk_ranges(len, n);
+        for (me, (range, vals)) in hier.iter().enumerate() {
+            let own = ranges[(me + 1) % n].clone();
+            assert_eq!(*range, own, "ownership range, topo {topo:?} rank {me}");
+            assert_eq!(bits(vals), bits(&full[own]), "topo {topo:?} rank {me}");
+        }
+        for &(a, b) in &report.inter_pairs {
+            assert!(topo.is_leader(a) && topo.is_leader(b), "{topo:?}: {a}->{b}");
+        }
+    }
+}
+
+/// Hier reduce's inter tier IS flat ZCCL reduce over the leader group
+/// toward the root's leader: a leaders-only reference run on the node
+/// partials reproduces the hier root's result bit for bit (Sum and Max
+/// finish as identity, so the divisor difference cannot surface here).
+#[test]
+fn hier_reduce_matches_leader_tier_reference() {
+    let len = 1800;
+    for topo in shapes() {
+        let n = topo.ranks();
+        for op in [ReduceOp::Sum, ReduceOp::Max] {
+            for root in [0, n - 1] {
+                let t2 = topo.clone();
+                let (hier, report) = run_ranks_on(&topo, move |c| {
+                    let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+                    let input = rank_chunk(ctx.rank(), len);
+                    ctx.reduce(&input, op, root).unwrap()
+                });
+                let nodes = topo.nodes();
+                let root_node = topo.node_of(root);
+                let node_partials: Vec<Vec<f32>> = (0..nodes)
+                    .map(|j| {
+                        let members = topo.members(j);
+                        let mut acc = rank_chunk(members[0], len);
+                        for &r in &members[1..] {
+                            op.fold(&mut acc, &rank_chunk(r, len));
+                        }
+                        acc
+                    })
+                    .collect();
+                let reference = run_ranks(nodes, move |c| {
+                    let mut ctx = CollCtx::over(c, inter_mode());
+                    let me = ctx.rank();
+                    ctx.reduce(&node_partials[me], op, root_node).unwrap()
+                });
+                let want = reference[root_node].as_ref().expect("reference root holds result");
+                for (rank, h) in hier.iter().enumerate() {
+                    if rank == root {
+                        let h = h.as_ref().expect("hier root holds result");
+                        assert_eq!(bits(h), bits(want), "topo {topo:?} {op:?} root {root}");
+                    } else {
+                        assert!(h.is_none(), "non-root {rank} returned a result");
+                    }
+                }
+                for &(a, b) in &report.inter_pairs {
+                    assert!(topo.is_leader(a) && topo.is_leader(b), "{topo:?}: {a}->{b}");
+                }
+            }
+        }
+    }
+}
+
+/// Hier Avg finishes with the TOTAL rank count, not the leader count —
+/// the node partials already hold every member's contribution.
+#[test]
+fn hier_reduce_avg_divides_by_total_ranks() {
+    let topo = Topology::blocked(2, 3);
+    let (n, len) = (topo.ranks(), 1024);
+    let t2 = topo.clone();
+    let (out, _) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
         let input = rank_chunk(ctx.rank(), len);
-        let rs = ctx.reduce_scatter(&input, ReduceOp::Sum).unwrap();
-        let g = ctx.gather(&input, 0).unwrap();
-        let a2a = ctx.alltoall(&input).unwrap();
-        let red = ctx.reduce(&input, ReduceOp::Sum, 1).unwrap();
-        (rs, g, a2a, red)
+        ctx.reduce(&input, ReduceOp::Avg, 0).unwrap()
+    });
+    let mut exact = rank_chunk(0, len);
+    for r in 1..n {
+        ReduceOp::Avg.fold(&mut exact, &rank_chunk(r, len));
+    }
+    ReduceOp::Avg.finish(&mut exact, n);
+    let got = out[0].as_ref().unwrap();
+    // One compressed up-link per leader-tree edge; generous envelope.
+    let tol = (topo.nodes() as f64) * EB + 1e-5;
+    for (a, b) in got.iter().zip(&exact) {
+        assert!(((a - b).abs() as f64) <= tol, "{a} vs {b} (tol {tol})");
+    }
+}
+
+/// The staged (version-2) adaptive codec composes with the hierarchy:
+/// staged hier gather / alltoall / bcast stay bit-identical to staged
+/// flat ZCCL — the leaders forward staged frames verbatim exactly as they
+/// forward version-1 frames.
+#[test]
+fn staged_codec_hier_collectives_bit_identical_to_flat_staged() {
+    let topo = Topology::grouped(&[3, 1, 2]).unwrap();
+    let n = topo.ranks();
+    let len = 2600;
+    let flat = run_ranks(n, move |c| {
+        let mut ctx = CollCtx::over(c, inter_mode().with_staged(true));
+        let data = (c.rank() == 1).then(|| rank_chunk(11, len));
+        let b = ctx.bcast(data.as_deref(), 1).unwrap();
+        let g = ctx.gather(&rank_chunk(ctx.rank(), 300), n - 1).unwrap();
+        let a2a = ctx.alltoall(&rank_chunk(ctx.rank(), 40 * n)).unwrap();
+        (b, g, a2a)
     });
     let t2 = topo.clone();
     let (hier, _) = run_ranks_on(&topo, move |c| {
-        let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
-        let input = rank_chunk(ctx.rank(), len);
-        let rs = ctx.reduce_scatter(&input, ReduceOp::Sum).unwrap();
-        let g = ctx.gather(&input, 0).unwrap();
-        let a2a = ctx.alltoall(&input).unwrap();
-        let red = ctx.reduce(&input, ReduceOp::Sum, 1).unwrap();
-        (rs, g, a2a, red)
+        let mut ctx = CollCtx::over_nodes(c, hier_mode().with_staged(true), t2.clone()).unwrap();
+        let data = (c.rank() == 1).then(|| rank_chunk(11, len));
+        let b = ctx.bcast(data.as_deref(), 1).unwrap();
+        let g = ctx.gather(&rank_chunk(ctx.rank(), 300), n - 1).unwrap();
+        let a2a = ctx.alltoall(&rank_chunk(ctx.rank(), 40 * n)).unwrap();
+        (b, g, a2a)
     });
     for (rank, (h, f)) in hier.iter().zip(&flat).enumerate() {
-        assert_eq!(h.0 .0, f.0 .0, "reduce_scatter range, rank {rank}");
-        assert_eq!(bits(&h.0 .1), bits(&f.0 .1), "reduce_scatter, rank {rank}");
-        assert_eq!(
-            h.1.as_deref().map(bits),
-            f.1.as_deref().map(bits),
-            "gather, rank {rank}"
-        );
-        assert_eq!(bits(&h.2), bits(&f.2), "alltoall, rank {rank}");
-        assert_eq!(h.3.as_deref().map(bits), f.3.as_deref().map(bits), "reduce, rank {rank}");
+        assert_eq!(bits(&h.0), bits(&f.0), "staged bcast, rank {rank}");
+        let (hg, fg) = (h.1.as_deref().map(bits), f.1.as_deref().map(bits));
+        assert_eq!(hg, fg, "staged gather, rank {rank}");
+        assert_eq!(bits(&h.2), bits(&f.2), "staged alltoall, rank {rank}");
+    }
+}
+
+/// A compressed intra tier keeps the allreduce inside a widened (one
+/// extra `D∘C` per intra hop) error envelope, moves the up-hop
+/// compression onto the followers, and leaves the message graph — tier
+/// split included — untouched.
+#[test]
+fn compressed_intra_tier_bounded_and_counted() {
+    let topo = Topology::blocked(2, 3);
+    let (n, len) = (topo.ranks(), 4096);
+    let t2 = topo.clone();
+    let (out, report) = run_ranks_on(&topo, move |c| {
+        let mut ctx = CollCtx::over_nodes(c, hier_mode(), t2.clone()).unwrap();
+        ctx.set_intra_mode(inter_mode()).unwrap();
+        let input = rank_chunk(ctx.rank(), len);
+        let r = ctx.allreduce(&input, ReduceOp::Sum).unwrap();
+        (r, ctx.intra_compress_calls())
+    });
+    let mut exact = rank_chunk(0, len);
+    for r in 1..n {
+        ReduceOp::Sum.fold(&mut exact, &rank_chunk(r, len));
+    }
+    // Inter-tier chain (leader ring + allgather hop) plus one D∘C per
+    // intra hop: follower partial up, result down the member binomial.
+    let tol = ((topo.nodes() + n + 2) as f64) * EB + 1e-4;
+    for (o, _) in &out {
+        assert_eq!(o.len(), len);
+        for (a, b) in o.iter().zip(&exact) {
+            assert!(((a - b).abs() as f64) <= tol, "{a} vs {b} (tol {tol})");
+        }
+    }
+    for (rank, (_, intra_calls)) in out.iter().enumerate() {
+        assert!(*intra_calls > 0, "rank {rank} never exercised the intra codec");
+    }
+    // The tier split is unchanged: compressed intra traffic is still
+    // intra, and the slow tier stays leader↔leader.
+    assert!(report.tier.inter_bytes > 0);
+    assert!(report.tier.intra_bytes > 0);
+    for &(a, b) in &report.inter_pairs {
+        assert!(topo.is_leader(a) && topo.is_leader(b));
     }
 }
 
@@ -443,13 +654,56 @@ fn topology_and_tier_mode_validation() {
         let bad = ctx.set_topology(Topology::flat(7));
         // Right rank count installs.
         let good = ctx.set_topology(Topology::grouped(&[2, 1]).unwrap());
-        // Compressed intra tier is rejected; raw is accepted.
-        let bad_intra = ctx.set_intra_mode(inter_mode());
-        let good_intra = ctx.set_intra_mode(Mode::plain());
+        // Compressed intra tier is accepted; nesting Algo::Hier is not.
+        let good_intra = ctx.set_intra_mode(inter_mode());
+        let bad_intra = ctx.set_intra_mode(hier_mode());
+        let raw_intra = ctx.set_intra_mode(Mode::plain());
         // Keep the ranks in lockstep (no collective ran here).
-        (bad.is_err(), good.is_ok(), bad_intra.is_err(), good_intra.is_ok())
+        (bad.is_err(), good.is_ok(), good_intra.is_ok(), bad_intra.is_err(), raw_intra.is_ok())
     });
     for r in results {
-        assert_eq!(r, (true, true, true, true));
+        assert_eq!(r, (true, true, true, true, true));
+    }
+}
+
+/// Tier-1 guard for the CI `zccl bench hier` step: the library driver
+/// must emit JSON that parses and carries the flat-vs-hier walls, the
+/// pipelined-vs-monolithic inter-leader rows (monolithic / picked /
+/// fine-4k), a segment pick inside the calibrator's clamps, and the
+/// intra-mode rows — with the raw fast tier at zero intra compressions
+/// and the compressed one strictly above.
+#[test]
+fn bench_hier_json_contract() {
+    let (tables, summary) = hier_bench(0.002);
+    assert_eq!(tables.len(), 4, "real + pipeline + intra + sim tables");
+    let parsed = Json::parse(&summary.to_string()).expect("BENCH_hier.json must parse");
+    assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("hier"));
+    for key in ["flat_wall_s", "hier_wall_s", "hier_slow_tier_mb"] {
+        assert!(parsed.get(key).and_then(Json::as_f64).unwrap() > 0.0, "{key} must be > 0");
+    }
+    let picked = parsed.get("picked_segment_bytes").and_then(Json::as_f64).unwrap();
+    assert!(
+        (MIN_SEGMENT_BYTES as f64..=MAX_SEGMENT_BYTES as f64).contains(&picked),
+        "picked segment {picked} outside the calibrator clamps"
+    );
+    let pipeline = parsed.get("pipeline").and_then(Json::as_arr).expect("pipeline array");
+    let labels: Vec<&str> =
+        pipeline.iter().map(|r| r.get("segment").and_then(Json::as_str).unwrap()).collect();
+    assert_eq!(labels, ["monolithic", "picked", "fine-4k"]);
+    for row in pipeline {
+        assert!(row.get("wall_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+    let intra = parsed.get("intra").and_then(Json::as_arr).expect("intra array");
+    assert_eq!(intra.len(), 2, "raw and compressed intra rows");
+    for row in intra {
+        let mode = row.get("intra").and_then(Json::as_str).unwrap();
+        let calls = row.get("intra_compress_calls").and_then(Json::as_f64).unwrap();
+        if mode == "raw" {
+            assert_eq!(calls, 0.0, "raw fast tier must not touch the intra codec");
+        } else {
+            assert!(calls > 0.0, "compressed fast tier must count intra compressions");
+        }
+        assert!(row.get("inter_mb").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(row.get("intra_mb").and_then(Json::as_f64).unwrap() > 0.0);
     }
 }

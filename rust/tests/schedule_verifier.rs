@@ -13,8 +13,13 @@
 //!    the barrier's generation namespace. Payloads are sized well below
 //!    `pipeline_bytes`, so every transfer is a single segment and the
 //!    equality is count-for-count.
+//! 3. The §3.5.1 pipeline is real on the wire: with `pipeline_bytes`
+//!    forced far below the inter-leader bundle size, a traced
+//!    hierarchical allgather puts fan > 1 overlapped segments inside a
+//!    single ring round's tag window — and not one message lands outside
+//!    the graph's declared fan windows.
 
-use zccl::analysis::graph::{self, Coll, Tags};
+use zccl::analysis::graph::{self, Coll, Dir, Tags};
 use zccl::analysis::verify;
 use zccl::collectives::{run_ranks_traced, run_ranks_traced_on, Algo, CollCtx, Mode, ReduceOp};
 use zccl::compress::{CompressorKind, ErrorBound};
@@ -147,6 +152,64 @@ fn ledger_matches_graph_hier() {
             }
         }
     }
+}
+
+#[test]
+fn pipelined_hier_ring_overlaps_segments() {
+    // Force the segment size far below the inter-leader bundle size: the
+    // slow-tier allgather ring must split each round's bundle into
+    // multiple in-flight segments (distinct tags within the round's fan
+    // window), while every wire message still lands inside some window
+    // the graph declared.
+    use std::collections::{BTreeMap, BTreeSet};
+    let topo = Topology::grouped(&[2, 2]).unwrap();
+    let n = topo.ranks();
+    let len = 4096usize;
+    let mode =
+        Mode::hier(CompressorKind::FzLight, ErrorBound::Abs(EB)).with_pipeline_bytes(1 << 9);
+    let t2 = topo.clone();
+    let (_, ledger) = run_ranks_traced_on(&topo, move |c| {
+        let rank = c.rank();
+        let x: Vec<f32> = (0..len).map(|i| ((rank * 131 + i) as f32 * 0.37).sin()).collect();
+        let mut ctx = CollCtx::over_nodes(c, mode, t2.clone()).unwrap();
+        ctx.allgather(&x).unwrap();
+    });
+    let mut tags = Tags::new();
+    let g = graph::build(Coll::Allgather, Algo::Hier, n, 0, Some(&topo), &mut tags);
+    // Map every traced message into the graph send window that covers it.
+    let mut per_window: BTreeMap<(usize, usize, u64), BTreeSet<u64>> = BTreeMap::new();
+    for &(src, dst, tag) in ledger.keys() {
+        let ev = g.scripts[src]
+            .iter()
+            .find(|ev| {
+                ev.dir == Dir::Send && ev.peer == dst && (ev.tag..ev.tag + ev.fan).contains(&tag)
+            })
+            .unwrap_or_else(|| panic!("message {src}->{dst} tag {tag} outside every fan window"));
+        per_window.entry((src, dst, ev.tag)).or_default().insert(tag);
+    }
+    // Every slow-tier ring round actually went on the wire, and at least
+    // one round carried overlapped segments (fan > 1 distinct tags).
+    let mut max_segments = 0usize;
+    for (src, sc) in g.scripts.iter().enumerate() {
+        for ev in sc.iter().filter(|ev| ev.dir == Dir::Send && ev.phase == "hier-ring") {
+            let tags_used = per_window
+                .get(&(src, ev.peer, ev.tag))
+                .unwrap_or_else(|| {
+                    panic!("ring round {src}->{} tag {} never sent", ev.peer, ev.tag)
+                });
+            assert!(
+                tags_used.len() as u64 <= ev.fan,
+                "{} segment tags overflow fan {}",
+                tags_used.len(),
+                ev.fan
+            );
+            max_segments = max_segments.max(tags_used.len());
+        }
+    }
+    assert!(
+        max_segments > 1,
+        "pipelined ring never split a bundle: at most {max_segments} segment tag(s) per round"
+    );
 }
 
 #[test]
